@@ -1,0 +1,105 @@
+//! End-to-end reproduction driver — the full paper pipeline on a real
+//! (simulated-testbed) workload, proving all three layers compose:
+//!
+//!   Rust simulator substrate (counters)
+//!     → §5.1 profiling orchestration (Rust coordinator)
+//!     → §5 signature fit (Pallas kernel → HLO → PJRT)
+//!     → §4/§6.2.2 predictions for every thread split (same path)
+//!     → error statistics vs the paper's published numbers.
+//!
+//!     make artifacts && cargo run --release --example e2e_reproduction
+//!
+//! Results are recorded in EXPERIMENTS.md.  Writes `e2e_results.json`.
+
+use std::time::Instant;
+
+use numabw::coordinator::{evaluate_suite, PredictionService};
+use numabw::eval;
+use numabw::prelude::*;
+use numabw::report;
+use numabw::runtime::Engine;
+use numabw::util::json::Json;
+use numabw::util::stats::Cdf;
+use numabw::workloads::suite;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== numabw end-to-end reproduction ===\n");
+
+    // Layer check: the HLO artifacts must load and compile — this run is
+    // about proving the full stack, so no silent reference fallback.
+    let engine = Engine::from_env()?;
+    engine.warmup()?;
+    println!("PJRT engine up: {} pipelines compiled (batch {})",
+             numabw::runtime::PIPELINES.len(), engine.batch());
+    let svc = PredictionService::hlo(engine);
+
+    let ws = suite::table1();
+    let t0 = Instant::now();
+    let mut evs = Vec::new();
+    for machine in MachineTopology::paper_machines() {
+        let sim = Simulator::new(machine.clone(), SimConfig::default());
+        let t = Instant::now();
+        let ev = evaluate_suite(&sim, &svc, &ws, None)?;
+        println!("{}: {} workloads, {} points in {:.2}s", ev.machine,
+                 ws.len(), ev.records.len(), t.elapsed().as_secs_f64());
+        evs.push(ev);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    // ---- headline numbers (Fig 17) -----------------------------------------
+    let (median, at25, at10) =
+        eval::headline(&evs.iter().collect::<Vec<_>>());
+    println!("\n== headline vs paper ==");
+    println!("median error:    {median:.2}%   (paper: 2.34%)");
+    println!("within 2.5%:     {:.0}%     (paper: >50%)", at25 * 100.0);
+    println!("within 10%:      {:.0}%     (paper: 75%)", at10 * 100.0);
+
+    // ---- stability (Figs 14/15) --------------------------------------------
+    let rows = eval::stability(&evs[0], &evs[1], 2);
+    let cdf = eval::stability_cdf(&rows);
+    let changes: Vec<f64> =
+        rows.iter().map(|r| r.combined_change_pct).collect();
+    let mean_change = changes.iter().sum::<f64>() / changes.len() as f64;
+    println!("\n== signature stability vs paper ==");
+    println!("combined change: mean {:.1}% median {:.1}% (paper: 6.8% / \
+              4.2%)", mean_change, cdf.median());
+
+    // ---- misfit detection (Fig 16) ----------------------------------------
+    let pr = evs[1].signature("pagerank").unwrap();
+    let pr_err = Cdf::of(&evs[1].errors_for("pagerank"));
+    println!("\n== pagerank misfit (Fig 16) ==");
+    println!("misfit residual {:.3} (conforming benchmarks: <0.03); \
+              median error {:.1}%", pr.read.misfit, pr_err.median());
+
+    // ---- Fig 18 correlation -------------------------------------------------
+    let acc = eval::accuracy_by_benchmark(&evs[1]);
+    let mut low_bw: Vec<&eval::AccuracyRow> = acc
+        .iter()
+        .filter(|r| r.avg_bandwidth < 2.0 * GB)
+        .collect();
+    low_bw.sort_by(|a, b| a.avg_bandwidth.partial_cmp(&b.avg_bandwidth)
+        .unwrap());
+    println!("\n== low-bandwidth benchmarks carry the errors (Fig 18) ==");
+    for r in low_bw {
+        println!("  {:10} {:>12}  avg err {:.2}%", r.workload,
+                 report::fmt_bw(r.avg_bandwidth), r.avg_err_pct);
+    }
+
+    // ---- persist --------------------------------------------------------------
+    let mut out = Json::obj();
+    out.set("median_err_pct", Json::Num(median));
+    out.set("frac_within_2_5", Json::Num(at25));
+    out.set("frac_within_10", Json::Num(at10));
+    out.set("stability_median_pct", Json::Num(cdf.median()));
+    out.set("stability_mean_pct", Json::Num(mean_change));
+    out.set("pagerank_misfit", Json::Num(pr.read.misfit));
+    out.set("total_points",
+            Json::Num(evs.iter().map(|e| e.records.len()).sum::<usize>()
+                as f64));
+    out.set("wall_seconds", Json::Num(wall));
+    std::fs::write("e2e_results.json", out.encode())?;
+    println!("\nwrote e2e_results.json; total {} points in {wall:.1}s \
+              (HLO/PJRT request path, Python not involved)",
+             evs.iter().map(|e| e.records.len()).sum::<usize>());
+    Ok(())
+}

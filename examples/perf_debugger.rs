@@ -1,0 +1,107 @@
+//! Performance debugger — the paper's development-time use case: model an
+//! application's bandwidth requirements against *hardware descriptions it
+//! has never run on* and flag problematic memory-access patterns before
+//! the application reaches that environment.
+//!
+//!     cargo run --release --example perf_debugger [--workload npo]
+//!
+//! Checks performed per target machine:
+//!   * static-bank saturation: a large Static fraction funnels every
+//!     thread into one memory channel;
+//!   * interconnect saturation: remote traffic vs QPI capacity at full
+//!     thread count;
+//!   * model misfit (§6.2.1): placement-dependent behaviour the signature
+//!     cannot express — predictions should be treated as approximate.
+
+use numabw::coordinator::{profile, FitRequest, PerfQuery,
+                          PredictionService};
+use numabw::model::misfit::{self, FitQuality};
+use numabw::prelude::*;
+use numabw::report;
+use numabw::util::args::Args;
+use numabw::workloads::suite;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let workload = suite::by_name(args.get_or("workload", "npo"))
+        .expect("workload name from Table 1");
+    let svc = PredictionService::auto();
+
+    // Profile on the dev box (the 18-core machine), then reason about any
+    // target hardware from the signature alone.
+    let dev = MachineTopology::xeon_e5_2699_v3();
+    let sim = Simulator::new(dev.clone(), SimConfig::default());
+    let pair = profile(&sim, &workload);
+    let sig = &svc.fit(&[FitRequest { sym: pair.sym, asym: pair.asym }])?[0];
+
+    println!("perf-debug report for `{}` (profiled on {})\n", workload.name,
+             dev.name);
+    let s = &sig.combined;
+    println!("signature: {} static={:.2}@{} local={:.2} perthread={:.2} \
+              interleave={:.2}\n",
+             report::signature_bar(s.static_frac, s.local_frac,
+                                   s.perthread_frac, s.interleave_frac(),
+                                   32),
+             s.static_frac, s.static_socket, s.local_frac, s.perthread_frac,
+             s.interleave_frac());
+
+    // A hypothetical future target: narrow interconnect, many cores.
+    let mut narrow = MachineTopology::xeon_e5_2630_v3();
+    narrow.name = "target-narrow-qpi".into();
+    narrow.cores_per_socket = 16;
+
+    let mut warnings = 0;
+    for machine in [dev.clone(), MachineTopology::xeon_e5_2630_v3(), narrow]
+    {
+        println!("--- target: {} ---", machine.name);
+        let full = machine.cores_per_socket;
+        let threads = [full, full];
+        let per_thread = workload.bw_per_thread.min(machine.core_peak_bw);
+        let demand_total = per_thread * (2 * full) as f64;
+
+        // Where does the traffic land under an even spread?
+        let m = s.apply(&[threads[0], threads[1]]);
+        let static_bank_load: f64 =
+            demand_total * 0.5 * (m[0][s.static_socket]
+                + m[1][s.static_socket]);
+        let chan_cap = machine.local_read_bw;
+        if static_bank_load > 0.8 * chan_cap {
+            println!("  WARN: bank {} would carry {} of {} channel \
+                      capacity — static allocation is a bottleneck \
+                      (consider interleaving the shared input)",
+                     s.static_socket, report::fmt_bw(static_bank_load),
+                     report::fmt_bw(chan_cap));
+            warnings += 1;
+        }
+        // Remote traffic vs interconnect.
+        let remote_frac = 0.5 * (m[0][1] + m[1][0]);
+        let remote_load = demand_total * remote_frac * 0.5; // per direction
+        if remote_load > 0.8 * machine.qpi_read_bw {
+            println!("  WARN: ~{} of remote traffic per QPI direction vs \
+                      {} capacity — expect interconnect saturation",
+                     report::fmt_bw(remote_load),
+                     report::fmt_bw(machine.qpi_read_bw));
+            warnings += 1;
+        }
+        // Predicted achieved bandwidth at full blast.
+        let q = PerfQuery {
+            sig: *s,
+            threads,
+            demand_pt: [per_thread * workload.read_fraction,
+                        per_thread * (1.0 - workload.read_fraction)],
+            caps: machine.capacities().try_into().unwrap(),
+        };
+        let achieved: f64 = svc.predict_performance(&[q])?[0].iter().sum();
+        println!("  predicted achieved: {} of {} demanded ({:.0}%)",
+                 report::fmt_bw(achieved), report::fmt_bw(demand_total),
+                 100.0 * achieved / demand_total);
+    }
+
+    if misfit::assess(sig) != FitQuality::Good {
+        println!("\n{}", misfit::describe(sig));
+        warnings += 1;
+    }
+    println!("\n{warnings} warning(s). Fix these before the testing stage \
+              — that is the point of modeling (paper §1).");
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Quickstart: profile a workload with two runs, fit its bandwidth
+//! signature, and predict the traffic of an unseen placement.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Uses the Rust reference model so it works before `make artifacts`; pass
+//! `--hlo` to route the fit and predictions through the AOT-compiled
+//! Pallas pipelines on PJRT.
+
+use numabw::coordinator::{profile, FitRequest, PredictionService};
+use numabw::model::misfit;
+use numabw::prelude::*;
+use numabw::report;
+use numabw::workloads::suite;
+
+fn main() -> anyhow::Result<()> {
+    let use_hlo = std::env::args().any(|a| a == "--hlo");
+    let svc = if use_hlo {
+        PredictionService::auto()
+    } else {
+        PredictionService::reference()
+    };
+
+    // The 18-core Haswell testbed from the paper, and the CG benchmark.
+    let machine = MachineTopology::xeon_e5_2699_v3();
+    let sim = Simulator::new(machine.clone(), SimConfig::default());
+    let workload = suite::by_name("cg").expect("cg is in Table 1");
+
+    println!("machine:  {} ({}x{} cores)", machine.name, machine.sockets,
+             machine.cores_per_socket);
+    println!("workload: {} — {}\n", workload.name, workload.description);
+
+    // 1. Two profiling runs (§5.1): symmetric + asymmetric.
+    let pair = profile(&sim, &workload);
+    println!("profiled: symmetric {:?} + asymmetric {:?}",
+             pair.sym.threads_per_socket, pair.asym.threads_per_socket);
+
+    // 2. Fit the bandwidth signature (§5).
+    let sig = &svc.fit(&[FitRequest { sym: pair.sym, asym: pair.asym }])?[0];
+    for (ch, s) in [("read", &sig.read), ("write", &sig.write)] {
+        println!(
+            "{ch:>6}: {} static={:.2}@{} local={:.2} perthread={:.2} \
+             interleave={:.2}",
+            report::signature_bar(s.static_frac, s.local_frac,
+                                  s.perthread_frac, s.interleave_frac(), 28),
+            s.static_frac, s.static_socket, s.local_frac, s.perthread_frac,
+            s.interleave_frac()
+        );
+    }
+    println!("{}\n", misfit::describe(sig));
+
+    // 3. Apply the signature to a placement we never measured (§4).
+    let placement = [14usize, 4usize];
+    let m = sig.read.apply(&placement);
+    println!("predicted read-traffic fractions for threads {placement:?}:");
+    for (src, row) in m.iter().enumerate() {
+        println!("  cpu{src} -> bank0 {:.3}, bank1 {:.3}", row[0], row[1]);
+    }
+
+    // 4. Sanity-check against a real (simulated) run of that placement.
+    let measured = sim.run(&workload,
+                           &ThreadPlacement::new(placement.to_vec()));
+    println!("\nmeasured bandwidth at {placement:?}: {}",
+             report::fmt_bw(measured.achieved_bw));
+    println!("\nnext: `cargo bench --bench fig17_18_accuracy` for the full \
+              paper evaluation");
+    Ok(())
+}

@@ -1,0 +1,3 @@
+"""Build-time compile path: JAX/Pallas model definitions and the AOT
+lowering driver.  Nothing in this package is imported at runtime — the Rust
+coordinator only consumes the HLO-text artifacts under ``artifacts/``."""

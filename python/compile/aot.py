@@ -1,0 +1,88 @@
+"""AOT lowering driver: JAX pipelines → HLO *text* artifacts.
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each pipeline is lowered with ``return_tuple=True`` so the Rust side can
+uniformly unwrap tuple outputs.  A ``manifest.json`` records, for every
+artifact, the argument/result shapes and the batch size so the Rust loader
+can validate itself against what was actually compiled.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import BATCH, INCIDENCE, N_FLOWS, N_RESOURCES, PIPELINES, SOCKETS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-reassigning path).
+
+    ``as_hlo_text(True)`` = print_large_constants: without it the printer
+    elides big literals as ``constant({...})`` and the Rust-side text parser
+    silently reads them as zeros (observed: the 8×8 incidence matrix of the
+    maxmin kernel vanished, turning water-filling into a no-op).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+def lower_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "batch": BATCH,
+        "sockets": SOCKETS,
+        "n_flows": N_FLOWS,
+        "n_resources": N_RESOURCES,
+        "incidence": INCIDENCE.tolist(),
+        "pipelines": {},
+    }
+    for name, (fn, example_args) in PIPELINES.items():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_tree = jax.eval_shape(fn, *example_args)
+        leaves = jax.tree_util.tree_leaves(out_tree)
+        manifest["pipelines"][name] = {
+            "file": f"{name}.hlo.txt",
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "args": [list(a.shape) for a in example_args],
+            "results": [list(l.shape) for l in leaves],
+            "hlo_bytes": len(text),
+        }
+        print(f"  {name}: {len(text)} chars -> {path}")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts",
+                        help="directory for *.hlo.txt + manifest.json")
+    args = parser.parse_args()
+    print(f"lowering {len(PIPELINES)} pipelines (B={BATCH}, S={SOCKETS})")
+    lower_all(args.out_dir)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

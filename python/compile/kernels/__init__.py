@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels and their pure-jnp reference oracles.
+
+Kernels (all ``interpret=True`` — the CPU PJRT plugin cannot execute Mosaic
+custom-calls; see /opt/xla-example/README.md):
+
+  * :mod:`.signature_apply` — §4 signature → placement traffic matrix, and
+    the fused counter-prediction variant.
+  * :mod:`.fit_signature`   — §5 two-run signature fit + §6.2.1 misfit.
+  * :mod:`.maxmin`          — bounded max-min fair contention resolution.
+  * :mod:`.ref`             — jnp oracles (the source of numerical truth).
+"""
+
+from . import fit_signature, maxmin, ref, signature_apply  # noqa: F401

@@ -1,0 +1,140 @@
+"""Pallas kernel for §5 — fitting a bandwidth signature from two runs.
+
+One batch row = one (workload × channel) fit: the caller packs the read
+channel and the write channel of a workload as separate rows (the paper
+fits separate read/write signatures from a single pair of runs, §3).
+
+The kernel performs, per row, the full §5 pipeline:
+  1. §5.2 normalization of both runs by per-thread instruction rate,
+  2. §5.3 static socket (argmax of bank totals) + static fraction,
+  3. §5.4 static removal and local fraction from the remote ratio,
+  4. §5.5 static+local removal on the asymmetric run and the per-thread
+     fraction via interpolation between the per-thread and interleaved
+     expectations,
+  5. §6.2.1 misfit residual (remote-ratio asymmetry after static removal).
+
+S = 2 sockets, as in the paper's formulation (remote counters cannot be
+attributed to a unique source socket for S > 2 with only local/remote
+counters; see DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import EPS
+
+DEFAULT_BLOCK = 8
+
+
+def _normalize(counts, rates):
+    """§5.2 — divide each component by the source socket's thread rate."""
+    ref_rate = rates.mean(axis=1, keepdims=True)
+    factor = ref_rate / jnp.maximum(rates, EPS)
+    other = factor[:, ::-1]
+    local = counts[:, :, 0] * factor
+    remote = counts[:, :, 1] * other
+    return local, remote
+
+
+def _kernel(sym_c_ref, sym_r_ref, asym_c_ref, asym_r_ref, thr_ref,
+            fracs_ref, onehot_ref, misfit_ref):
+    sym_local, sym_remote = _normalize(sym_c_ref[...], sym_r_ref[...])
+    a_local, a_remote = _normalize(asym_c_ref[...], asym_r_ref[...])
+    threads = thr_ref[...]
+    dtype = sym_local.dtype
+
+    # -- §5.3 static socket + fraction --------------------------------------
+    totals = sym_local + sym_remote                     # [TB, 2]
+    grand = jnp.maximum(totals.sum(axis=1), EPS)
+    onehot = (totals >= totals.max(axis=1, keepdims=True)).astype(dtype)
+    # Break ties towards socket 0 (argmax semantics).  Built with iota, not
+    # a literal, so the Pallas trace captures no constants.
+    sock0 = (jax.lax.broadcasted_iota(jnp.int32, onehot.shape, 1) == 0)
+    onehot = jnp.where(onehot.sum(axis=1, keepdims=True) > 1.5,
+                       sock0.astype(dtype), onehot)
+    t_static = (totals * onehot).sum(axis=1)
+    t_other = (totals * (1.0 - onehot)).sum(axis=1)
+    static_frac = jnp.clip((t_static - t_other) / grand, 0.0, 1.0)
+
+    # -- §5.4 local fraction --------------------------------------------------
+    static_bytes = static_frac * grand
+    s_remote = jnp.maximum(
+        sym_remote - onehot * 0.5 * static_bytes[:, None], 0.0)
+    # After static removal both banks carry exactly t_other bytes (removal
+    # equalises totals by construction), so the remote ratio needs no
+    # post-removal local counter.
+    r_per_bank = jnp.clip(s_remote / jnp.maximum(t_other, EPS)[:, None],
+                          0.0, 1.0)
+    r = r_per_bank.mean(axis=1)
+    one_m_static = jnp.maximum(1.0 - static_frac, EPS)
+    local_frac = jnp.clip((1.0 - 2.0 * r) * one_m_static, 0.0, 1.0)
+    local_frac = jnp.minimum(local_frac, one_m_static)
+
+    # Written as [TB, 1] — 1-D output BlockSpecs mis-index under interpret
+    # mode at degenerate block sizes; the wrapper squeezes the axis.
+    misfit_ref[...] = jnp.abs(r_per_bank[:, 0] - r_per_bank[:, 1])[:, None]
+
+    # -- §5.5 per-thread fraction --------------------------------------------
+    cpu_tot = a_local + a_remote[:, ::-1]
+    stat_cpu = static_frac[:, None] * cpu_tot
+    a_local2 = a_local - onehot * (onehot * stat_cpu).sum(1, keepdims=True)
+    a_remote2 = a_remote - onehot * ((1.0 - onehot) * stat_cpu).sum(1, keepdims=True)
+    a_local2 = jnp.maximum(a_local2 - local_frac[:, None] * cpu_tot, 0.0)
+    a_remote2 = jnp.maximum(a_remote2, 0.0)
+
+    denom = jnp.maximum(a_local2 + a_remote2[:, ::-1], EPS)
+    l_i = a_local2 / denom
+    n_tot = jnp.maximum(threads.sum(axis=1), EPS)
+    pt_i = threads / n_tot[:, None]
+
+    num = ((l_i - 0.5) * (pt_i - 0.5)).sum(axis=1)
+    den = jnp.maximum(((pt_i - 0.5) ** 2).sum(axis=1), EPS)
+    p = jnp.clip(num / den, 0.0, 1.0)
+    perthread = jnp.clip(p * (1.0 - local_frac - static_frac), 0.0, 1.0)
+
+    fracs_ref[...] = jnp.stack([static_frac, local_frac, perthread], axis=1)
+    onehot_ref[...] = onehot
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def fit_signature(sym_counts, sym_rates, asym_counts, asym_rates,
+                  asym_threads, *, block=DEFAULT_BLOCK):
+    """Batched §5 signature fit.  See :func:`ref.fit_signature_ref`.
+
+    Inputs: ``sym_counts [B,2,2]``, ``sym_rates [B,2]``,
+    ``asym_counts [B,2,2]``, ``asym_rates [B,2]``, ``asym_threads [B,2]``.
+    Returns ``(fracs [B,3], static_onehot [B,2], misfit [B])``.
+    """
+    b = sym_counts.shape[0]
+    assert sym_counts.shape[1:] == (2, 2), "fit kernel is 2-socket only"
+    assert b % block == 0, f"batch {b} not a multiple of block {block}"
+    dtype = sym_counts.dtype
+    grid = (b // block,)
+    fracs, onehot, misfit = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, 2, 2), lambda n: (n, 0, 0)),
+            pl.BlockSpec((block, 2), lambda n: (n, 0)),
+            pl.BlockSpec((block, 2, 2), lambda n: (n, 0, 0)),
+            pl.BlockSpec((block, 2), lambda n: (n, 0)),
+            pl.BlockSpec((block, 2), lambda n: (n, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, 3), lambda n: (n, 0)),
+            pl.BlockSpec((block, 2), lambda n: (n, 0)),
+            pl.BlockSpec((block, 1), lambda n: (n, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, 3), dtype),
+            jax.ShapeDtypeStruct((b, 2), dtype),
+            jax.ShapeDtypeStruct((b, 1), dtype),
+        ],
+        interpret=True,
+    )(sym_counts, sym_rates, asym_counts, asym_rates, asym_threads)
+    return fracs, onehot, misfit[:, 0]

@@ -1,0 +1,258 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written in
+straight ``jax.numpy`` with no Pallas, no tricks, and shapes kept as close to
+the mathematical statement in the paper as possible.  The pytest suite
+asserts ``assert_allclose(kernel(...), ref(...))`` across shape/dtype sweeps;
+the reference is therefore the single source of numerical truth for Layers 1
+and 2.
+
+Paper mapping:
+  * :func:`signature_apply_ref`  — §4  "Applying bandwidth signature to a
+    thread placement" (the four matrices, scaled and summed).
+  * :func:`fit_signature_ref`    — §5  "Measuring an applications bandwidth
+    signature" (normalization, static, local, per-thread fractions) plus the
+    §6.2.1 misfit residual.
+  * :func:`maxmin_ref`           — bounded max-min fairness (progressive
+    water-filling) used to predict achieved bandwidth under saturation.
+  * :func:`predict_counters_ref` — signature → expected per-bank
+    local/remote counter values for a placement (§6.2.2 evaluation path).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Numerical guard used everywhere a measured quantity can be ~0 (idle banks,
+# write-free benchmarks, empty sockets).  Chosen large enough to be safe in
+# f32 and small enough to be invisible against real byte counts.
+EPS = 1e-9
+
+
+# ---------------------------------------------------------------------------
+# §4 — applying a signature to a thread placement
+# ---------------------------------------------------------------------------
+
+def signature_apply_ref(fracs, static_onehot, threads):
+    """Build the per-placement traffic-fraction matrix of §4.
+
+    Args:
+      fracs:         ``[B, 3]`` — (static, local, per-thread) fractions.
+                     Interleaved is the remainder ``1 - sum``.
+      static_onehot: ``[B, S]`` — one-hot of the static socket.
+      threads:       ``[B, S]`` — thread count per socket (float).
+
+    Returns:
+      ``[B, S, S]`` matrix M where ``M[b, r, c]`` is the fraction of the
+      traffic of a thread on socket ``r`` that goes to memory bank ``c``.
+      Rows for *used* sockets sum to 1.
+    """
+    fracs = jnp.asarray(fracs)
+    static_onehot = jnp.asarray(static_onehot)
+    threads = jnp.asarray(threads)
+    b, s = static_onehot.shape
+
+    a = fracs[:, 0][:, None, None]  # static fraction
+    l = fracs[:, 1][:, None, None]  # local fraction
+    p = fracs[:, 2][:, None, None]  # per-thread fraction
+    i = jnp.clip(1.0 - (a + l + p), 0.0, 1.0)  # interleaved remainder
+
+    used = (threads > 0).astype(fracs.dtype)            # [B, S]
+    n_used = jnp.maximum(used.sum(axis=1), 1.0)          # [B]
+    n_total = jnp.maximum(threads.sum(axis=1), EPS)      # [B]
+
+    # Static: every row sends all static traffic to the static socket column.
+    m_static = jnp.broadcast_to(static_onehot[:, None, :], (b, s, s))
+    # Local: identity — each socket's local traffic hits its own bank.
+    m_local = jnp.broadcast_to(jnp.eye(s, dtype=fracs.dtype)[None], (b, s, s))
+    # Per-thread: columns weighted by the share of threads on each socket.
+    pt_w = threads / n_total[:, None]                    # [B, S]
+    m_pt = jnp.broadcast_to(pt_w[:, None, :], (b, s, s))
+    # Interleaved: uniform over the sockets in use.
+    m_il = (used[:, None, :] * used[:, :, None]) / n_used[:, None, None]
+
+    return a * m_static + l * m_local + p * m_pt + i * m_il
+
+
+def predict_counters_ref(fracs, static_onehot, threads, cpu_totals):
+    """Predict per-bank (local, remote) counter values for a placement.
+
+    ``cpu_totals[b, r]`` is the total traffic (bytes) issued by the threads
+    on socket ``r``.  Returns ``[B, S, 2]`` with ``[..., 0]`` = local bytes
+    at each bank and ``[..., 1]`` = remote bytes at each bank — i.e. exactly
+    what the memory-bank-perspective performance counters of §2.1 report.
+    """
+    m = signature_apply_ref(fracs, static_onehot, threads)   # [B, S, S]
+    cpu_totals = jnp.asarray(cpu_totals)
+    flows = m * cpu_totals[:, :, None]                        # [B, src, dst]
+    s = m.shape[1]
+    eye = jnp.eye(s, dtype=m.dtype)[None]
+    local = (flows * eye).sum(axis=1)                         # [B, S]
+    remote = (flows * (1.0 - eye)).sum(axis=1)                # [B, S]
+    return jnp.stack([local, remote], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# §5 — fitting a signature from two profiling runs (2-socket form)
+# ---------------------------------------------------------------------------
+
+def _normalize(counts, rates):
+    """§5.2 data normalization for a 2-socket machine.
+
+    ``counts``: ``[B, S, 2]`` per-bank (local, remote) byte counters.
+    ``rates``:  ``[B, S]``   average per-thread instruction rate per socket.
+
+    Each counter component is divided by the rate of the socket the traffic
+    came *from*: local traffic at bank ``i`` comes from socket ``i``; remote
+    traffic at bank ``i`` comes from the other socket (S=2).  Rates are
+    rescaled so the mean factor is 1, keeping magnitudes comparable to the
+    raw counters.
+    """
+    counts = jnp.asarray(counts)
+    rates = jnp.asarray(rates)
+    ref_rate = rates.mean(axis=1, keepdims=True)              # [B, 1]
+    factor = ref_rate / jnp.maximum(rates, EPS)               # [B, S]
+    other = factor[:, ::-1]                                   # S=2: swap
+    local = counts[:, :, 0] * factor
+    remote = counts[:, :, 1] * other
+    return jnp.stack([local, remote], axis=-1)
+
+
+def fit_signature_ref(sym_counts, sym_rates, asym_counts, asym_rates,
+                      asym_threads):
+    """Fit the §5 bandwidth signature for a batch of workload channels.
+
+    Shapes (S must be 2 — the paper's formulation):
+      sym_counts:   ``[B, 2, 2]`` symmetric-run per-bank (local, remote).
+      sym_rates:    ``[B, 2]``    per-thread instruction rates, symmetric.
+      asym_counts:  ``[B, 2, 2]`` asymmetric-run per-bank (local, remote).
+      asym_rates:   ``[B, 2]``    per-thread instruction rates, asymmetric.
+      asym_threads: ``[B, 2]``    thread count per socket in the asym run.
+
+    Returns ``(fracs [B,3], static_onehot [B,2], misfit [B])`` where fracs
+    are (static, local, per-thread) and misfit is the §6.2.1 residual (the
+    asymmetry of the remote ratio that should be symmetric once the static
+    component is removed — 0 for workloads the model fits exactly).
+    """
+    sym = _normalize(sym_counts, sym_rates)                   # [B, 2, 2]
+    asym = _normalize(asym_counts, asym_rates)                # [B, 2, 2]
+
+    # -- §5.3 static socket + static fraction -------------------------------
+    totals = sym.sum(axis=2)                                  # [B, 2]
+    grand = jnp.maximum(totals.sum(axis=1), EPS)              # [B]
+    static_sock = jnp.argmax(totals, axis=1)                  # [B]
+    onehot = jnp.stack([static_sock == 0, static_sock == 1],
+                       axis=1).astype(sym.dtype)
+    t_static = (totals * onehot).sum(axis=1)
+    t_other = (totals * (1.0 - onehot)).sum(axis=1)
+    static_frac = jnp.clip((t_static - t_other) / grand, 0.0, 1.0)
+
+    # -- §5.4 local fraction -------------------------------------------------
+    # Remove the static traffic from the static bank: in the symmetric run
+    # half of it arrives locally and half remotely (equal thread counts).
+    static_bytes = static_frac * grand                        # [B]
+    sym_remote = jnp.maximum(
+        sym[:, :, 1] - onehot * 0.5 * static_bytes[:, None], 0.0)
+    # After static removal both banks carry exactly t_other bytes (removal
+    # equalises totals by construction): r = remote' / t_other.
+    r_per_bank = jnp.clip(
+        sym_remote / jnp.maximum(t_other, EPS)[:, None], 0.0, 1.0)
+    r = r_per_bank.mean(axis=1)                               # [B]
+    # r = (s-1)/s * (1 - local/(1-static))  with s=2  →  local below.
+    one_m_static = jnp.maximum(1.0 - static_frac, EPS)
+    local_frac = jnp.clip((1.0 - 2.0 * r) * one_m_static, 0.0, 1.0)
+    local_frac = jnp.minimum(local_frac, one_m_static)
+
+    # §6.2.1 — after static removal the remote ratio should be identical on
+    # both banks; the residual asymmetry flags workloads the model misfits.
+    misfit = jnp.abs(r_per_bank[:, 0] - r_per_bank[:, 1])
+
+    # -- §5.5 per-thread fraction (asymmetric run) --------------------------
+    # Total traffic issued by the threads of each CPU socket (S=2: a CPU's
+    # traffic is its bank's local counter plus the *other* bank's remote).
+    cpu_tot = asym[:, :, 0] + asym[:, :, 1][:, ::-1]          # [B, 2]
+    # Remove the static component of each CPU's traffic from the static
+    # bank: the static socket's own share arrives locally, the rest remotely.
+    stat_cpu = static_frac[:, None] * cpu_tot                 # [B, 2]
+    a_local = asym[:, :, 0] - onehot * (onehot * stat_cpu).sum(1, keepdims=True)
+    a_remote = asym[:, :, 1] - onehot * ((1 - onehot) * stat_cpu).sum(1, keepdims=True)
+    # Remove each CPU's local-class traffic from its own bank.
+    a_local = a_local - local_frac[:, None] * cpu_tot
+    a_local = jnp.maximum(a_local, 0.0)
+    a_remote = jnp.maximum(a_remote, 0.0)
+
+    # Fraction of each CPU's remaining traffic that stays local.
+    denom = jnp.maximum(a_local + a_remote[:, ::-1], EPS)     # [B, 2]
+    l_i = a_local / denom                                     # [B, 2]
+
+    n_tot = jnp.maximum(asym_threads.sum(axis=1), EPS)
+    pt_i = asym_threads / n_tot[:, None]                      # [B, 2]
+    il_i = 0.5                                                # 1/s, s=2
+
+    # Interpolate l_i = pt_i * p + il_i * (1-p) → p.  Weight the two sockets
+    # by |pt_i - il_i| (the better-conditioned socket dominates).
+    num = (l_i - il_i) * (pt_i - il_i)
+    den = (pt_i - il_i) ** 2
+    p = jnp.clip(num.sum(axis=1) / jnp.maximum(den.sum(axis=1), EPS), 0.0, 1.0)
+    perthread_frac = jnp.clip(
+        p * (1.0 - local_frac - static_frac), 0.0, 1.0)
+
+    fracs = jnp.stack([static_frac, local_frac, perthread_frac], axis=1)
+    return fracs, onehot, misfit
+
+
+# ---------------------------------------------------------------------------
+# Bounded max-min fairness (progressive water-filling)
+# ---------------------------------------------------------------------------
+
+def maxmin_ref(demand, cap, incidence, iters=None):
+    """Bounded max-min fair allocation.
+
+    Args:
+      demand:    ``[B, F]`` desired rate per flow.
+      cap:       ``[B, R]`` capacity per resource.
+      incidence: ``[F, R]`` 0/1 — flow f consumes resource r.
+      iters:     number of water-filling rounds (default F+R+2: every round
+                 either saturates a resource or satisfies a flow, so F+R
+                 rounds reach the fixed point).
+
+    Returns:
+      ``[B, F]`` allocated rates: ``alloc <= demand`` elementwise, resource
+      loads ``<= cap``, and no flow can be increased without decreasing a
+      flow with an equal-or-smaller allocation (max-min optimality).
+
+    Per round the *uniform* level increment ``t = min_r residual_r / n_r``
+    is the largest amount every active flow can take simultaneously without
+    oversubscribing any resource.  (A per-flow increment would break
+    fairness: a flow must pace every flow it contends with.)
+    """
+    demand = jnp.asarray(demand)
+    cap = jnp.asarray(cap)
+    incidence = jnp.asarray(incidence, dtype=demand.dtype)    # [F, R]
+    f, r = incidence.shape
+    if iters is None:
+        iters = f + r + 2
+
+    alloc = jnp.zeros_like(demand)
+    rem = demand
+    active = (demand > EPS).astype(demand.dtype)
+
+    big = jnp.asarray(jnp.finfo(demand.dtype).max / 4, demand.dtype)
+    for _ in range(iters):
+        load = alloc @ incidence                              # [B, R]
+        residual = jnp.maximum(cap - load, 0.0)
+        n_active = active @ incidence                         # [B, R]
+        share = jnp.where(n_active > 0.5,
+                          residual / jnp.maximum(n_active, 1.0), big)
+        t = share.min(axis=1, keepdims=True)                  # [B, 1]
+        inc = jnp.minimum(t, rem) * active                    # [B, F]
+        alloc = alloc + inc
+        rem = rem - inc
+        # Deactivate satisfied flows and flows crossing a saturated resource.
+        load2 = alloc @ incidence
+        sat = (cap - load2) <= 1e-6 * jnp.maximum(cap, 1.0)   # [B, R]
+        hits_sat = (jnp.asarray(sat, demand.dtype) @ incidence.T) > 0.5
+        active = active * (1.0 - jnp.asarray(hits_sat, demand.dtype))
+        active = active * (rem > EPS).astype(demand.dtype)
+
+    return alloc

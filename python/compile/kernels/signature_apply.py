@@ -1,0 +1,130 @@
+"""Pallas kernel for §4 — applying a bandwidth signature to a placement.
+
+The kernel is batched: each grid step materialises a ``[TB, S, S]`` tile of
+traffic-fraction matrices from a ``[TB, 3]`` tile of fractions, a ``[TB, S]``
+static-socket one-hot tile and a ``[TB, S]`` thread-count tile.  All four of
+the paper's matrices (Static / Local / Per-thread / Interleaved) are built
+with broadcasts — there is no gather/scatter, so one HBM→VMEM pass per input
+is the whole memory traffic.
+
+TPU adaptation note (DESIGN.md §3): S is tiny (2 on the paper's testbed), so
+the *batch* dimension supplies the vector parallelism; the block size TB is
+the VMEM tiling knob.  ``interpret=True`` everywhere — the CPU PJRT plugin
+cannot execute Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import EPS
+
+DEFAULT_BLOCK = 8
+
+
+def _kernel(fracs_ref, onehot_ref, threads_ref, out_ref):
+    fracs = fracs_ref[...]            # [TB, 3]
+    onehot = onehot_ref[...]          # [TB, S]
+    threads = threads_ref[...]        # [TB, S]
+    tb, s = onehot.shape
+
+    a = fracs[:, 0][:, None, None]
+    l = fracs[:, 1][:, None, None]
+    p = fracs[:, 2][:, None, None]
+    i = jnp.clip(1.0 - (a + l + p), 0.0, 1.0)
+
+    used = (threads > 0).astype(fracs.dtype)
+    n_used = jnp.maximum(used.sum(axis=1), 1.0)
+    n_total = jnp.maximum(threads.sum(axis=1), EPS)
+
+    m_static = jnp.broadcast_to(onehot[:, None, :], (tb, s, s))
+    m_local = jnp.broadcast_to(jnp.eye(s, dtype=fracs.dtype)[None], (tb, s, s))
+    pt_w = threads / n_total[:, None]
+    m_pt = jnp.broadcast_to(pt_w[:, None, :], (tb, s, s))
+    m_il = (used[:, None, :] * used[:, :, None]) / n_used[:, None, None]
+
+    out_ref[...] = a * m_static + l * m_local + p * m_pt + i * m_il
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def signature_apply(fracs, static_onehot, threads, *, block=DEFAULT_BLOCK):
+    """Batched §4 signature application.  See :func:`ref.signature_apply_ref`.
+
+    ``fracs [B,3]``, ``static_onehot [B,S]``, ``threads [B,S]`` →
+    ``[B, S, S]``.  B must be a multiple of ``block``.
+    """
+    b, s = static_onehot.shape
+    assert b % block == 0, f"batch {b} not a multiple of block {block}"
+    grid = (b // block,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, 3), lambda n: (n, 0)),
+            pl.BlockSpec((block, s), lambda n: (n, 0)),
+            pl.BlockSpec((block, s), lambda n: (n, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, s, s), lambda n: (n, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, s), fracs.dtype),
+        interpret=True,
+    )(fracs, static_onehot, threads)
+
+
+def _predict_kernel(fracs_ref, onehot_ref, threads_ref, totals_ref, out_ref):
+    """Fused apply + per-bank counter projection (local, remote)."""
+    fracs = fracs_ref[...]
+    onehot = onehot_ref[...]
+    threads = threads_ref[...]
+    totals = totals_ref[...]          # [TB, S] per-CPU traffic totals
+    tb, s = onehot.shape
+
+    a = fracs[:, 0][:, None, None]
+    l = fracs[:, 1][:, None, None]
+    p = fracs[:, 2][:, None, None]
+    i = jnp.clip(1.0 - (a + l + p), 0.0, 1.0)
+
+    used = (threads > 0).astype(fracs.dtype)
+    n_used = jnp.maximum(used.sum(axis=1), 1.0)
+    n_total = jnp.maximum(threads.sum(axis=1), EPS)
+
+    eye = jnp.eye(s, dtype=fracs.dtype)[None]
+    m = (a * jnp.broadcast_to(onehot[:, None, :], (tb, s, s))
+         + l * eye
+         + p * jnp.broadcast_to((threads / n_total[:, None])[:, None, :],
+                                (tb, s, s))
+         + i * (used[:, None, :] * used[:, :, None]) / n_used[:, None, None])
+
+    flows = m * totals[:, :, None]    # [TB, src, dst]
+    local = (flows * eye).sum(axis=1)
+    remote = (flows * (1.0 - eye)).sum(axis=1)
+    out_ref[...] = jnp.stack([local, remote], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def predict_counters(fracs, static_onehot, threads, cpu_totals, *,
+                     block=DEFAULT_BLOCK):
+    """Fused §4-apply + bank-perspective counter prediction.
+
+    Returns ``[B, S, 2]`` — predicted (local, remote) bytes at each bank,
+    the quantity compared against measurements in the paper's §6.2.2.
+    """
+    b, s = static_onehot.shape
+    assert b % block == 0, f"batch {b} not a multiple of block {block}"
+    grid = (b // block,)
+    return pl.pallas_call(
+        _predict_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, 3), lambda n: (n, 0)),
+            pl.BlockSpec((block, s), lambda n: (n, 0)),
+            pl.BlockSpec((block, s), lambda n: (n, 0)),
+            pl.BlockSpec((block, s), lambda n: (n, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, s, 2), lambda n: (n, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, 2), fracs.dtype),
+        interpret=True,
+    )(fracs, static_onehot, threads, cpu_totals)

@@ -1,0 +1,153 @@
+"""Layer-2 JAX model: the pipelines lowered to HLO for the Rust coordinator.
+
+Each public function here is a complete, jit-able pipeline over the Layer-1
+Pallas kernels.  ``aot.py`` lowers them once (static shapes: S=2 sockets,
+batch B=64) and the Rust runtime executes the resulting HLO through PJRT —
+Python never runs on the request path.
+
+Pipelines / artifacts:
+
+  ===================  =====================================================
+  ``fit_signature``    two profiling runs' counters → signature + misfit
+  ``signature_apply``  signature + placement → traffic-fraction matrix (§4)
+  ``predict_counters`` signature + placement + totals → per-bank (local,
+                       remote) counter predictions (§6.2.2 evaluation path)
+  ``predict_performance`` signature + placement + demands + capacities →
+                       max-min-fair achieved bandwidth per link flow (the
+                       Fig 1 performance predictor)
+  ===================  =====================================================
+
+Flow/resource layout for ``predict_performance`` (2-socket machine):
+
+  flows  F=8: index = src*4 + dst*2 + rw   (rw: 0=read, 1=write)
+  resources R=8: [read_chan0, read_chan1, write_chan0, write_chan1,
+                  qpi_r_0to1, qpi_r_1to0, qpi_w_0to1, qpi_w_1to0]
+
+  A read by socket s from bank d≠s moves data d→s (uses qpi_r_{d→s}); a
+  write moves data s→d (uses qpi_w_{s→d}).  Local flows use only their
+  channel.  Read and write interconnect capacities are separate resources
+  because the paper's Fig 2 measures them separately (8-core: 0.16× local
+  for reads vs 0.23× for writes; 18-core: 0.59× vs 0.83×) — a single
+  shared-duplex capacity could not express that asymmetry.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import fit_signature as _fit
+from .kernels import maxmin as _maxmin
+from .kernels import signature_apply as _apply
+
+SOCKETS = 2
+BATCH = 64
+N_FLOWS = 8
+N_RESOURCES = 8
+
+# Resource indices.
+READ_CHAN = (0, 1)
+WRITE_CHAN = (2, 3)
+QPI_READ = {(0, 1): 4, (1, 0): 5}
+QPI_WRITE = {(0, 1): 6, (1, 0): 7}
+
+
+def flow_index(src: int, dst: int, rw: int) -> int:
+    """Flatten (src socket, dst bank, read/write) to the flow index."""
+    return src * 4 + dst * 2 + rw
+
+
+def build_incidence() -> np.ndarray:
+    """The fixed [F, R] flow→resource incidence matrix described above."""
+    inc = np.zeros((N_FLOWS, N_RESOURCES), dtype=np.float32)
+    for src in range(SOCKETS):
+        for dst in range(SOCKETS):
+            for rw in range(2):
+                f = flow_index(src, dst, rw)
+                inc[f, (READ_CHAN if rw == 0 else WRITE_CHAN)[dst]] = 1.0
+                if src != dst:
+                    # Reads pull data dst→src; writes push data src→dst.
+                    if rw == 0:
+                        inc[f, QPI_READ[(dst, src)]] = 1.0
+                    else:
+                        inc[f, QPI_WRITE[(src, dst)]] = 1.0
+    return inc
+
+
+INCIDENCE = build_incidence()
+
+
+# ---------------------------------------------------------------------------
+# Pipelines (thin wrappers so aot.py lowers stable public signatures)
+# ---------------------------------------------------------------------------
+
+def fit_signature(sym_counts, sym_rates, asym_counts, asym_rates,
+                  asym_threads):
+    """§5 fit: counters from the two profiling runs → (fracs, onehot, misfit)."""
+    return _fit.fit_signature(sym_counts, sym_rates, asym_counts,
+                              asym_rates, asym_threads)
+
+
+def signature_apply(fracs, static_onehot, threads):
+    """§4 apply: signature + thread placement → [B, S, S] traffic matrix."""
+    return _apply.signature_apply(fracs, static_onehot, threads)
+
+
+def predict_counters(fracs, static_onehot, threads, cpu_totals):
+    """Fused apply + bank-perspective counter projection → [B, S, 2]."""
+    return _apply.predict_counters(fracs, static_onehot, threads, cpu_totals)
+
+
+def predict_performance(fracs, static_onehot, threads, demand_pt, caps):
+    """Fig-1 style performance prediction under contention.
+
+    Args:
+      fracs, static_onehot, threads: as in :func:`signature_apply`.
+      demand_pt: ``[B, 2]`` per-thread full-speed (read, write) bytes/s.
+      caps:      ``[B, 6]`` resource capacities (layout in module docstring).
+
+    Returns:
+      ``[B, 8]`` max-min-fair achieved bytes/s per flow.  The coordinator
+      derives placement throughput as ``achieved_total / demanded_total``.
+    """
+    m = _apply.signature_apply(fracs, static_onehot, threads)   # [B, S, S]
+    # Demand of flow (src, dst, rw) = M[src, dst] * n_src * demand_pt[rw].
+    per_src = threads[:, :, None] * m                           # [B, src, dst]
+    d_read = per_src * demand_pt[:, 0][:, None, None]
+    d_write = per_src * demand_pt[:, 1][:, None, None]
+    demand = jnp.stack([d_read, d_write], axis=-1)              # [B,src,dst,2]
+    demand = demand.reshape(demand.shape[0], N_FLOWS)
+    return _maxmin.maxmin(demand, caps, jnp.asarray(INCIDENCE))
+
+
+# ---------------------------------------------------------------------------
+# Example-argument factories for AOT lowering (static shapes)
+# ---------------------------------------------------------------------------
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+PIPELINES = {
+    "fit_signature": (
+        fit_signature,
+        (_f32(BATCH, SOCKETS, 2), _f32(BATCH, SOCKETS),
+         _f32(BATCH, SOCKETS, 2), _f32(BATCH, SOCKETS),
+         _f32(BATCH, SOCKETS)),
+    ),
+    "signature_apply": (
+        signature_apply,
+        (_f32(BATCH, 3), _f32(BATCH, SOCKETS), _f32(BATCH, SOCKETS)),
+    ),
+    "predict_counters": (
+        predict_counters,
+        (_f32(BATCH, 3), _f32(BATCH, SOCKETS), _f32(BATCH, SOCKETS),
+         _f32(BATCH, SOCKETS)),
+    ),
+    "predict_performance": (
+        predict_performance,
+        (_f32(BATCH, 3), _f32(BATCH, SOCKETS), _f32(BATCH, SOCKETS),
+         _f32(BATCH, 2), _f32(BATCH, N_RESOURCES)),
+    ),
+}

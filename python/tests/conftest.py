@@ -1,0 +1,40 @@
+"""Shared fixtures + helpers for the Layer-1/Layer-2 test suite."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile.kernels.ref import signature_apply_ref
+
+
+def random_signature(rng, b):
+    """Random valid signatures: fracs >= 0 with sum <= 1, one-hot socket."""
+    raw = rng.dirichlet(np.ones(4), size=b).astype(np.float32)
+    fracs = raw[:, :3]                       # 4th component = interleaved
+    sock = rng.integers(0, 2, size=b)
+    onehot = np.eye(2, dtype=np.float32)[sock]
+    return jnp.asarray(fracs), jnp.asarray(onehot)
+
+
+def counters_for(fracs, onehot, threads):
+    """Synthesize exact bank-perspective counters for a placement.
+
+    Traffic from socket i is proportional to its thread count (equal-speed
+    threads), routed per the §4 matrix — i.e. data generated *by the model's
+    own generative assumptions*, which the fit must invert exactly.
+    """
+    m = signature_apply_ref(fracs, onehot, threads)          # [B, S, S]
+    flows = m * jnp.asarray(threads)[:, :, None]
+    s = m.shape[1]
+    eye = jnp.eye(s, dtype=m.dtype)[None]
+    local = (flows * eye).sum(axis=1)
+    remote = (flows * (1.0 - eye)).sum(axis=1)
+    return jnp.stack([local, remote], axis=-1)               # [B, S, 2]
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xBEEF)

@@ -1,0 +1,246 @@
+"""Kernel-vs-oracle and inversion tests for the §5 fitting Pallas kernel."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.fit_signature import fit_signature
+from compile.kernels.ref import fit_signature_ref
+from .conftest import counters_for, random_signature
+
+SYM = jnp.asarray([[2.0, 2.0]], dtype=jnp.float32)
+ASYM = jnp.asarray([[3.0, 1.0]], dtype=jnp.float32)
+ONES = jnp.ones((1, 2), dtype=jnp.float32)
+
+
+def _fit_single(fracs, onehot, sym_threads=SYM, asym_threads=ASYM,
+                rates=(ONES, ONES), use_kernel=False):
+    sym_c = counters_for(fracs, onehot, sym_threads)
+    asym_c = counters_for(fracs, onehot, asym_threads)
+    fn = fit_signature if use_kernel else fit_signature_ref
+    if use_kernel:
+        # Kernel batch must be a multiple of the block; tile to 8.
+        tile = lambda x: jnp.tile(x, (8,) + (1,) * (x.ndim - 1))
+        out = fn(tile(sym_c), tile(rates[0]), tile(asym_c), tile(rates[1]),
+                 tile(asym_threads))
+        return tuple(o[:1] for o in out)
+    return fn(sym_c, rates[0], asym_c, rates[1], asym_threads)
+
+
+# ---------------------------------------------------------------------------
+# The paper's worked example, §5.3–§5.5 (exact published intermediate values)
+# ---------------------------------------------------------------------------
+
+class TestWorkedExample:
+    FRACS = jnp.asarray([[0.2, 0.35, 0.3]], dtype=jnp.float32)
+    ONEHOT = jnp.asarray([[0.0, 1.0]], dtype=jnp.float32)
+
+    @pytest.mark.parametrize("use_kernel", [False, True])
+    def test_recovers_published_signature(self, use_kernel):
+        fr, oh, mis = _fit_single(self.FRACS, self.ONEHOT,
+                                  use_kernel=use_kernel)
+        np.testing.assert_allclose(np.asarray(fr[0]), [0.2, 0.35, 0.3],
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(oh[0]), [0.0, 1.0], atol=1e-6)
+        # Model-generated data fits the model exactly → zero misfit.
+        assert float(mis[0]) < 1e-5
+
+    def test_static_fraction_is_point_two(self):
+        # §5.3: static fraction = (reads_b2 - reads_b1) / total = 0.2.
+        sym_c = counters_for(self.FRACS, self.ONEHOT, SYM)
+        totals = np.asarray(sym_c.sum(axis=2))[0]
+        assert (totals[1] - totals[0]) / totals.sum() == pytest.approx(0.2,
+                                                                       abs=1e-6)
+
+    def test_remote_ratio_is_paper_value(self):
+        # §5.4: after static removal the measured r is 0.28125.
+        sym_c = np.asarray(counters_for(self.FRACS, self.ONEHOT, SYM))[0]
+        grand = sym_c.sum()
+        static_bytes = 0.2 * grand
+        local = sym_c[:, 0] - np.array([0.0, 0.5 * static_bytes])
+        remote = sym_c[:, 1] - np.array([0.0, 0.5 * static_bytes])
+        r = remote / (local + remote)
+        np.testing.assert_allclose(r, 0.28125, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Kernel == oracle over random inputs (raw counters, not model-generated)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,block", [(8, 8), (64, 8), (64, 16), (8, 1)])
+def test_kernel_matches_ref_random_counters(rng, b, block):
+    sym_c = jnp.asarray(rng.uniform(0, 1e9, (b, 2, 2)), dtype=jnp.float32)
+    asym_c = jnp.asarray(rng.uniform(0, 1e9, (b, 2, 2)), dtype=jnp.float32)
+    sym_r = jnp.asarray(rng.uniform(0.5, 2.0, (b, 2)), dtype=jnp.float32)
+    asym_r = jnp.asarray(rng.uniform(0.5, 2.0, (b, 2)), dtype=jnp.float32)
+    thr = jnp.asarray(rng.integers(1, 18, (b, 2)), dtype=jnp.float32)
+    got = fit_signature(sym_c, sym_r, asym_c, asym_r, thr, block=block)
+    want = fit_signature_ref(sym_c, sym_r, asym_c, asym_r, thr)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_kernel_matches_ref_hypothesis(seed):
+    r = np.random.default_rng(seed)
+    b = 8
+    sym_c = jnp.asarray(r.uniform(0, 1e6, (b, 2, 2)), dtype=jnp.float32)
+    asym_c = jnp.asarray(r.uniform(0, 1e6, (b, 2, 2)), dtype=jnp.float32)
+    sym_r = jnp.asarray(r.uniform(0.1, 10.0, (b, 2)), dtype=jnp.float32)
+    asym_r = jnp.asarray(r.uniform(0.1, 10.0, (b, 2)), dtype=jnp.float32)
+    thr = jnp.asarray(r.integers(1, 32, (b, 2)), dtype=jnp.float32)
+    got = fit_signature(sym_c, sym_r, asym_c, asym_r, thr)
+    want = fit_signature_ref(sym_c, sym_r, asym_c, asym_r, thr)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Inversion property: fit(apply(sig)) == sig for model-conforming data
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_roundtrip_recovers_signature(rng, use_kernel):
+    b = 8
+    fracs, onehot = random_signature(rng, b)
+    # Keep the static fraction attributable: a tiny static component can
+    # lose the argmax to noise-free ties; require a >= 2% gap.
+    fracs = np.array(fracs)  # mutable copy (np.asarray of a jax array is RO)
+    fracs[:, 0] = np.maximum(fracs[:, 0], 0.02)
+    scale = np.minimum(1.0, 0.98 / fracs.sum(axis=1))
+    fracs = jnp.asarray(fracs * scale[:, None])
+
+    sym_t = jnp.asarray([[4.0, 4.0]] * b, dtype=jnp.float32)
+    asym_t = jnp.asarray([[6.0, 2.0]] * b, dtype=jnp.float32)
+    sym_c = counters_for(fracs, onehot, sym_t)
+    asym_c = counters_for(fracs, onehot, asym_t)
+    rates = jnp.ones((b, 2), dtype=jnp.float32)
+    fn = fit_signature if use_kernel else fit_signature_ref
+    fr, oh, mis = fn(sym_c, rates, asym_c, rates, asym_t)
+    np.testing.assert_allclose(np.asarray(fr), np.asarray(fracs), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(oh), np.asarray(onehot), atol=1e-6)
+    assert np.all(np.asarray(mis) < 1e-3)
+
+
+def test_roundtrip_with_rate_skew(rng):
+    """§5.2: threads on socket 2 running at half speed must not corrupt the
+    signature once counters are normalized by the per-socket thread rate."""
+    fracs = jnp.asarray([[0.2, 0.35, 0.3]], dtype=jnp.float32)
+    onehot = jnp.asarray([[0.0, 1.0]], dtype=jnp.float32)
+    rates = jnp.asarray([[1.0, 0.5]], dtype=jnp.float32)
+
+    # Counters as a skewed machine would report them: socket-1-sourced
+    # traffic at half rate (paper's §5.2 example).
+    def skewed(threads):
+        eff = jnp.asarray(threads) * rates          # effective thread-rate
+        from compile.kernels.ref import signature_apply_ref
+        m = signature_apply_ref(fracs, onehot, jnp.asarray(threads))
+        flows = m * eff[:, :, None]
+        eye = jnp.eye(2, dtype=m.dtype)[None]
+        local = (flows * eye).sum(axis=1)
+        remote = (flows * (1.0 - eye)).sum(axis=1)
+        return jnp.stack([local, remote], axis=-1)
+
+    sym_c = skewed([[2.0, 2.0]])
+    asym_c = skewed([[3.0, 1.0]])
+    fr, oh, mis = fit_signature_ref(sym_c, rates, asym_c, rates, ASYM)
+    np.testing.assert_allclose(np.asarray(fr[0]), [0.2, 0.35, 0.3], atol=1e-4)
+    np.testing.assert_allclose(np.asarray(oh[0]), [0.0, 1.0], atol=1e-6)
+
+
+def test_unnormalized_skew_would_corrupt(rng):
+    """Negative control for §5.2: feeding rate-skewed counters with *unit*
+    rates (i.e. skipping normalization) must distort the fit — otherwise the
+    normalization step would be dead code."""
+    fracs = jnp.asarray([[0.2, 0.35, 0.3]], dtype=jnp.float32)
+    onehot = jnp.asarray([[0.0, 1.0]], dtype=jnp.float32)
+    rates = jnp.asarray([[1.0, 0.5]], dtype=jnp.float32)
+    from compile.kernels.ref import signature_apply_ref
+
+    def skewed(threads):
+        eff = jnp.asarray(threads) * rates
+        m = signature_apply_ref(fracs, onehot, jnp.asarray(threads))
+        flows = m * eff[:, :, None]
+        eye = jnp.eye(2, dtype=m.dtype)[None]
+        return jnp.stack([(flows * eye).sum(axis=1),
+                          (flows * (1 - eye)).sum(axis=1)], axis=-1)
+
+    ones = jnp.ones((1, 2), dtype=jnp.float32)
+    fr, _, _ = fit_signature_ref(skewed([[2.0, 2.0]]), ones,
+                                 skewed([[3.0, 1.0]]), ones, ASYM)
+    assert abs(float(fr[0, 0]) - 0.2) > 0.01  # static fraction distorted
+
+
+# ---------------------------------------------------------------------------
+# Edge cases and output invariants
+# ---------------------------------------------------------------------------
+
+def test_pure_patterns_recovered_exactly():
+    """Fig 12: each pure synthetic pattern maps to its own corner."""
+    cases = [
+        ([1.0, 0.0, 0.0], [0.0, 1.0]),   # static on socket 2
+        ([0.0, 1.0, 0.0], [1.0, 0.0]),   # local
+        ([0.0, 0.0, 1.0], [1.0, 0.0]),   # per-thread
+        ([0.0, 0.0, 0.0], [1.0, 0.0]),   # interleaved
+    ]
+    for fr_in, oh_in in cases:
+        fr = jnp.asarray([fr_in], dtype=jnp.float32)
+        oh = jnp.asarray([oh_in], dtype=jnp.float32)
+        got, _, mis = _fit_single(fr, oh)
+        np.testing.assert_allclose(np.asarray(got[0]), fr_in, atol=1e-4)
+        assert float(mis[0]) < 1e-4
+
+
+def test_fractions_in_unit_interval(rng):
+    b = 64
+    sym_c = jnp.asarray(rng.uniform(0, 1e9, (b, 2, 2)), dtype=jnp.float32)
+    asym_c = jnp.asarray(rng.uniform(0, 1e9, (b, 2, 2)), dtype=jnp.float32)
+    rates = jnp.asarray(rng.uniform(0.5, 2, (b, 2)), dtype=jnp.float32)
+    thr = jnp.asarray(rng.integers(1, 18, (b, 2)), dtype=jnp.float32)
+    fr, oh, mis = fit_signature(sym_c, rates, asym_c, rates, thr)
+    fr = np.asarray(fr)
+    assert np.all(fr >= -1e-6) and np.all(fr <= 1.0 + 1e-6)
+    assert np.all(np.asarray(mis) >= 0)
+    np.testing.assert_allclose(np.asarray(oh).sum(axis=1), 1.0, atol=1e-6)
+
+
+def test_zero_counters_do_not_nan():
+    z = jnp.zeros((8, 2, 2), dtype=jnp.float32)
+    r = jnp.ones((8, 2), dtype=jnp.float32)
+    t = jnp.asarray([[3.0, 1.0]] * 8, dtype=jnp.float32)
+    fr, oh, mis = fit_signature(z, r, z, r, t)
+    assert np.all(np.isfinite(np.asarray(fr)))
+    assert np.all(np.isfinite(np.asarray(mis)))
+
+
+def test_misfit_detects_asymmetric_access_pattern():
+    """§6.2.1: a Page-rank-like workload whose per-socket local/remote mix
+    differs (hot head of the dataset near socket 0) leaves an asymmetric
+    remote ratio after static removal — misfit > 0."""
+    # CPU0 threads: 0.5 local + 0.1 remote.  CPU1: 0.45 local + 0.45 remote
+    # (socket-1 threads reach across for the hot data far more).
+    # Bank-perspective counters: bank0 (local 0.5, remote 0.45),
+    #                            bank1 (local 0.45, remote 0.1).
+    sym_c = jnp.asarray([[[0.5, 0.45], [0.45, 0.1]]], dtype=jnp.float32)
+    asym_c = sym_c  # irrelevant for the misfit path
+    r = jnp.ones((1, 2), dtype=jnp.float32)
+    _, _, mis = fit_signature_ref(sym_c, r, asym_c, r, ASYM)
+    # After removing static (0.4/1.5): bank0 → (0.3, 0.25), bank1 (0.45, 0.1)
+    # → r0 ≈ 0.455, r1 ≈ 0.182: strongly asymmetric.
+    assert float(mis[0]) > 0.2
+
+
+def test_misfit_zero_for_conforming_mixture(rng):
+    """Counterpart: any single model-conforming mixture has ~zero misfit."""
+    fracs, onehot = random_signature(rng, 8)
+    sym_c = counters_for(fracs, onehot, jnp.asarray([[4.0, 4.0]] * 8))
+    r = jnp.ones((8, 2), dtype=jnp.float32)
+    _, _, mis = fit_signature_ref(sym_c, r, sym_c, r,
+                                  jnp.asarray([[6.0, 2.0]] * 8))
+    assert np.all(np.asarray(mis) < 1e-4)

@@ -1,0 +1,191 @@
+"""Tests for the bounded max-min fairness kernel (water-filling)."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.maxmin import maxmin
+from compile.kernels.ref import maxmin_ref
+from compile.model import INCIDENCE, build_incidence
+
+
+def exact_maxmin(demand, cap, inc):
+    """Exact bounded max-min allocation (classic freezing algorithm).
+
+    Independent of both the jnp oracle and the kernel — a third
+    implementation used as ground truth for small instances.
+    """
+    demand = np.asarray(demand, dtype=np.float64)
+    cap = np.asarray(cap, dtype=np.float64)
+    inc = np.asarray(inc, dtype=np.float64)
+    f = demand.shape[0]
+    alloc = np.zeros(f)
+    frozen = demand <= 1e-12
+    residual = cap.copy()
+    while not frozen.all():
+        counts = inc[~frozen].sum(axis=0)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            share = np.where(counts > 0, residual / counts, np.inf)
+        # Headroom per unfrozen flow.
+        head = np.array([
+            min(share[r] for r in range(len(cap)) if inc[i, r] > 0)
+            if inc[i].sum() > 0 else np.inf
+            for i in range(f)])
+        rem = demand - alloc
+        grow = np.where(~frozen, np.minimum(head, rem), 0.0)
+        level = grow[~frozen].min()
+        alloc += np.where(~frozen, level, 0.0)
+        residual = cap - inc.T @ alloc
+        newly = np.zeros(f, dtype=bool)
+        # Freeze satisfied flows and flows through saturated resources.
+        newly |= (demand - alloc) <= 1e-12
+        sat = residual <= 1e-9 * np.maximum(cap, 1.0)
+        newly |= (inc @ sat.astype(float)) > 0
+        if not newly[~frozen].any():
+            break
+        frozen |= newly
+    return alloc
+
+
+def _rand_instance(rng, b, f, r):
+    demand = rng.uniform(0, 100, (b, f)).astype(np.float32)
+    cap = rng.uniform(10, 200, (b, r)).astype(np.float32)
+    inc = (rng.uniform(size=(f, r)) < 0.4).astype(np.float32)
+    inc[inc.sum(axis=1) == 0, 0] = 1.0  # every flow uses >= 1 resource
+    return jnp.asarray(demand), jnp.asarray(cap), jnp.asarray(inc)
+
+
+# ---------------------------------------------------------------------------
+# Hand-checked instances
+# ---------------------------------------------------------------------------
+
+def test_single_bottleneck_fair_split():
+    # Two flows, one resource cap 10: (8, 3) → (7, 3) bounded-max-min.
+    d = jnp.asarray([[8.0, 3.0]] * 8)
+    c = jnp.asarray([[10.0]] * 8)
+    inc = jnp.asarray([[1.0], [1.0]])
+    np.testing.assert_allclose(np.asarray(maxmin(d, c, inc))[0], [7.0, 3.0],
+                               atol=1e-4)
+
+
+def test_unconstrained_flows_get_demand():
+    d = jnp.asarray([[5.0, 7.0]] * 8)
+    c = jnp.asarray([[100.0, 100.0]] * 8)
+    inc = jnp.eye(2)
+    np.testing.assert_allclose(np.asarray(maxmin(d, c, inc))[0], [5.0, 7.0],
+                               atol=1e-4)
+
+
+def test_equal_demands_equal_split():
+    d = jnp.asarray([[10.0, 10.0, 10.0, 10.0]] * 8)
+    c = jnp.asarray([[12.0]] * 8)
+    inc = jnp.ones((4, 1))
+    np.testing.assert_allclose(np.asarray(maxmin(d, c, inc))[0], [3.0] * 4,
+                               atol=1e-4)
+
+
+def test_two_resource_chain():
+    # Flow 0 uses r0+r1, flow 1 only r1.  caps (10, 4).
+    # Fair fill on r1: both reach 2 → r1 saturated → (2, 2).
+    d = jnp.asarray([[10.0, 10.0]] * 8)
+    c = jnp.asarray([[10.0, 4.0]] * 8)
+    inc = jnp.asarray([[1.0, 1.0], [0.0, 1.0]])
+    np.testing.assert_allclose(np.asarray(maxmin(d, c, inc))[0], [2.0, 2.0],
+                               atol=1e-4)
+
+
+def test_cascade_after_freeze():
+    # Flow 0: r0 only.  Flow 1: r0+r1.  caps r0=10, r1=2.
+    # Fill to 2 → r1 saturates, flow 1 frozen at 2; flow 0 continues to
+    # its demand 6 (r0 residual 8 ≥ 6) → (6, 2).
+    d = jnp.asarray([[6.0, 10.0]] * 8)
+    c = jnp.asarray([[10.0, 2.0]] * 8)
+    inc = jnp.asarray([[1.0, 0.0], [1.0, 1.0]])
+    np.testing.assert_allclose(np.asarray(maxmin(d, c, inc))[0], [6.0, 2.0],
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Kernel == oracle == exact algorithm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,f,r,block", [(8, 4, 3, 8), (16, 8, 6, 8),
+                                         (64, 8, 6, 16), (8, 2, 1, 1)])
+def test_kernel_matches_ref(rng, b, f, r, block):
+    d, c, inc = _rand_instance(rng, b, f, r)
+    got = maxmin(d, c, inc, block=block)
+    want = maxmin_ref(d, c, inc)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4,
+                               atol=1e-3)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_ref_matches_exact_hypothesis(seed):
+    rng = np.random.default_rng(seed)
+    d, c, inc = _rand_instance(rng, 8, 5, 4)
+    got = np.asarray(maxmin_ref(d, c, inc))
+    for i in range(8):
+        want = exact_maxmin(np.asarray(d)[i], np.asarray(c)[i],
+                            np.asarray(inc))
+        np.testing.assert_allclose(got[i], want, rtol=1e-3, atol=1e-2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_kernel_matches_exact_on_paper_topology(seed):
+    """The production F=8/R=8 topology from model.INCIDENCE."""
+    rng = np.random.default_rng(seed)
+    d = jnp.asarray(rng.uniform(0, 50, (8, 8)).astype(np.float32))
+    c = jnp.asarray(rng.uniform(5, 100, (8, 8)).astype(np.float32))
+    inc = jnp.asarray(INCIDENCE)
+    got = np.asarray(maxmin(d, c, inc))
+    for i in range(8):
+        want = exact_maxmin(np.asarray(d)[i], np.asarray(c)[i], INCIDENCE)
+        np.testing.assert_allclose(got[i], want, rtol=1e-3, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# Feasibility + optimality invariants
+# ---------------------------------------------------------------------------
+
+def test_alloc_never_exceeds_demand(rng):
+    d, c, inc = _rand_instance(rng, 64, 8, 6)
+    alloc = np.asarray(maxmin(d, c, inc))
+    assert np.all(alloc <= np.asarray(d) + 1e-3)
+    assert np.all(alloc >= -1e-6)
+
+
+def test_resource_caps_respected(rng):
+    d, c, inc = _rand_instance(rng, 64, 8, 6)
+    alloc = np.asarray(maxmin(d, c, inc))
+    load = alloc @ np.asarray(inc)
+    assert np.all(load <= np.asarray(c) * (1 + 1e-4) + 1e-3)
+
+
+def test_work_conserving(rng):
+    """If total demand fits within every resource, everyone is satisfied."""
+    b = 16
+    d = jnp.asarray(rng.uniform(0, 1, (b, 8)).astype(np.float32))
+    c = jnp.full((b, 8), 100.0, dtype=jnp.float32)
+    alloc = np.asarray(maxmin(d, c, jnp.asarray(INCIDENCE)))
+    np.testing.assert_allclose(alloc, np.asarray(d), rtol=1e-4, atol=1e-5)
+
+
+def test_incidence_layout():
+    """The fixed flow→resource matrix: reads cross the dst→src QPI link,
+    writes the src→dst link, locals touch only their channel."""
+    inc = build_incidence()
+    # local read socket 0: read_chan0 only.
+    np.testing.assert_array_equal(inc[0], [1, 0, 0, 0, 0, 0, 0, 0])
+    # remote read src=0 dst=1: read_chan1 + qpi_r 1→0.
+    np.testing.assert_array_equal(inc[2], [0, 1, 0, 0, 0, 1, 0, 0])
+    # remote write src=0 dst=1: write_chan1 + qpi_w 0→1.
+    np.testing.assert_array_equal(inc[3], [0, 0, 0, 1, 0, 0, 1, 0])
+    # local write socket 1: write_chan1 only.
+    np.testing.assert_array_equal(inc[7], [0, 0, 0, 1, 0, 0, 0, 0])

@@ -1,0 +1,187 @@
+"""Layer-2 pipeline tests: composition, AOT artifacts, Fig-1 behaviour."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.aot import to_hlo_text
+from compile.kernels.ref import maxmin_ref, signature_apply_ref
+
+B = model.BATCH
+
+
+def _pad(x, b=B):
+    pad = b - x.shape[0]
+    return jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+
+
+# ---------------------------------------------------------------------------
+# predict_performance — contention pipeline
+# ---------------------------------------------------------------------------
+
+class TestPredictPerformance:
+    # A "memory intensive" workload: everything interleaved, no static/local.
+    FRACS = jnp.zeros((1, 3), dtype=jnp.float32)
+    ONEHOT = jnp.asarray([[1.0, 0.0]], dtype=jnp.float32)
+
+    def run(self, fracs, onehot, threads, demand_pt, caps):
+        out = model.predict_performance(
+            _pad(fracs), _pad(onehot), _pad(jnp.asarray(threads)),
+            _pad(jnp.asarray(demand_pt)), _pad(jnp.asarray(caps)))
+        return np.asarray(out)[: fracs.shape[0]]
+
+    def test_matches_manual_composition(self):
+        rng = np.random.default_rng(7)
+        n = 8
+        raw = rng.dirichlet(np.ones(4), n).astype(np.float32)
+        fracs = jnp.asarray(raw[:, :3])
+        onehot = jnp.asarray(np.eye(2, dtype=np.float32)[
+            rng.integers(0, 2, n)])
+        threads = jnp.asarray(rng.integers(1, 9, (n, 2)), dtype=jnp.float32)
+        demand = jnp.asarray(rng.uniform(1, 5, (n, 2)), dtype=jnp.float32)
+        caps = jnp.asarray(rng.uniform(10, 60, (n, model.N_RESOURCES)), dtype=jnp.float32)
+
+        got = self.run(fracs, onehot, threads, demand, caps)
+
+        m = signature_apply_ref(fracs, onehot, threads)
+        per_src = np.asarray(threads)[:, :, None] * np.asarray(m)
+        d = np.stack([per_src * np.asarray(demand)[:, 0, None, None],
+                      per_src * np.asarray(demand)[:, 1, None, None]],
+                     axis=-1).reshape(n, 8)
+        want = np.asarray(maxmin_ref(jnp.asarray(d), caps,
+                                     jnp.asarray(model.INCIDENCE)))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+    def test_remote_starved_machine_slows_3x(self):
+        """Fig 1 shape, 8-core machine: memory on socket 1, threads on both
+        sockets → remote reads crawl through a QPI at 0.16× local bandwidth;
+        achieved throughput drops ≈3× vs the all-local placement."""
+        onehot = jnp.asarray([[1.0, 0.0]], dtype=jnp.float32)
+        static = jnp.asarray([[1.0, 0.0, 0.0]], dtype=jnp.float32)  # all static
+        local = jnp.asarray([[0.0, 1.0, 0.0]], dtype=jnp.float32)   # all local
+        threads = [[4.0, 4.0]]
+        demand = [[10.0, 0.0]]  # read-only, 10 B/s per thread demand
+        # caps: read channels 40 each, write 40, qpi links 40*0.16 = 6.4.
+        caps = [[40.0, 40.0, 40.0, 40.0, 6.4, 6.4, 9.2, 9.2]]
+        a_static = self.run(static, onehot, threads, demand, caps).sum()
+        a_local = self.run(local, onehot, threads, demand, caps).sum()
+        assert a_local == pytest.approx(80.0, rel=1e-3)  # fully satisfied
+        # static: both sockets' 40 B/s demands funnel into read_chan0
+        # (cap 40); socket 1's flow additionally crawls through the 6.4 QPI
+        # link.  Fair fill: QPI freezes the remote flow at 6.4, the local
+        # flow takes the channel residual → 33.6 + 6.4 = 40 total.
+        assert a_static == pytest.approx(40.0, rel=1e-2)
+        assert a_local / a_static > 1.7
+
+    def test_forgiving_machine_is_flat(self):
+        """Fig 1 shape: with the same per-thread demand, the 18-core-like
+        machine (wide QPI, CPU-bound workload) shows no placement penalty
+        while the 8-core-like machine (QPI at 0.16× local) pays ~1.5×."""
+        onehot = jnp.asarray([[1.0, 0.0]], dtype=jnp.float32)
+        static = jnp.asarray([[1.0, 0.0, 0.0]], dtype=jnp.float32)
+        local = jnp.asarray([[0.0, 1.0, 0.0]], dtype=jnp.float32)
+        threads = [[9.0, 9.0]]
+        demand = [[2.0, 0.0]]  # 36 B/s total < one channel's 40 B/s
+        wide = [[40.0, 40.0, 40.0, 40.0, 23.6, 23.6, 33.2, 33.2]]
+        narrow = [[40.0, 40.0, 40.0, 40.0, 6.4, 6.4, 9.2, 9.2]]
+        flat = (self.run(local, onehot, threads, demand, wide).sum()
+                / self.run(static, onehot, threads, demand, wide).sum())
+        penal = (self.run(local, onehot, threads, demand, narrow).sum()
+                 / self.run(static, onehot, threads, demand, narrow).sum())
+        assert flat == pytest.approx(1.0, abs=1e-3)   # 18-core: forgiving
+        assert penal > 1.3                            # 8-core: punished
+
+    def test_interleave_beats_static_with_two_sockets(self):
+        """Fig 1: interleaving spreads load over both channels; static
+        funnels everything into one channel."""
+        onehot = jnp.asarray([[1.0, 0.0]], dtype=jnp.float32)
+        static = jnp.asarray([[1.0, 0.0, 0.0]], dtype=jnp.float32)
+        inter = jnp.zeros((1, 3), dtype=jnp.float32)
+        threads = [[9.0, 9.0]]
+        demand = [[8.0, 0.0]]
+        caps = [[40.0, 40.0, 40.0, 40.0, 23.6, 23.6, 33.2, 33.2]]
+        a_inter = self.run(inter, onehot, threads, demand, caps).sum()
+        a_static = self.run(static, onehot, threads, demand, caps).sum()
+        assert a_inter > a_static * 1.2
+
+
+# ---------------------------------------------------------------------------
+# AOT artifacts
+# ---------------------------------------------------------------------------
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="run `make artifacts` first")
+class TestArtifacts:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_manifest_covers_all_pipelines(self, manifest):
+        assert set(manifest["pipelines"]) == set(model.PIPELINES)
+        assert manifest["batch"] == model.BATCH
+        assert manifest["sockets"] == model.SOCKETS
+
+    def test_hlo_files_parse_as_entry_modules(self, manifest):
+        for name, meta in manifest["pipelines"].items():
+            path = os.path.join(ART, meta["file"])
+            text = open(path).read()
+            assert "ENTRY" in text, f"{name} missing ENTRY computation"
+            assert "main" in text
+            assert len(text) == meta["hlo_bytes"]
+
+    def test_manifest_shapes_match_eval_shape(self, manifest):
+        for name, (fn, args) in model.PIPELINES.items():
+            leaves = jax.tree_util.tree_leaves(jax.eval_shape(fn, *args))
+            assert manifest["pipelines"][name]["results"] == [
+                list(l.shape) for l in leaves]
+            assert manifest["pipelines"][name]["args"] == [
+                list(a.shape) for a in args]
+
+    def test_incidence_in_manifest_matches_model(self, manifest):
+        np.testing.assert_array_equal(np.asarray(manifest["incidence"]),
+                                      model.INCIDENCE)
+
+
+def test_lowering_is_deterministic():
+    """Same pipeline lowered twice → byte-identical HLO text (the Makefile
+    can safely skip rebuilds on unchanged inputs)."""
+    fn, args = model.PIPELINES["signature_apply"]
+    t1 = to_hlo_text(jax.jit(fn).lower(*args))
+    t2 = to_hlo_text(jax.jit(fn).lower(*args))
+    assert t1 == t2
+
+
+def test_hlo_text_declares_expected_interface():
+    """The lowered HLO text must expose exactly the parameter and result
+    shapes the Rust runtime feeds/reads.  (Execution of the text artifacts
+    through PJRT is exercised by the Rust integration tests — the in-process
+    jaxlib compile API is not the deployment path.)"""
+    fn, args = model.PIPELINES["predict_counters"]
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    # 4 parameters: fracs [64,3], onehot [64,2], threads [64,2], totals [64,2]
+    assert "f32[64,3]" in text
+    assert text.count("f32[64,2]") >= 3
+    # tuple-wrapped result with the [64,2,2] prediction
+    assert "f32[64,2,2]" in text
+    # ENTRY computation named main
+    assert "ENTRY" in text and "main" in text
+
+
+def test_all_pipelines_lower_without_custom_calls():
+    """interpret=True must eliminate every Pallas/Mosaic custom-call — a
+    custom-call in the artifact would be unloadable by the CPU PJRT client."""
+    for name, (fn, args) in model.PIPELINES.items():
+        text = to_hlo_text(jax.jit(fn).lower(*args))
+        assert "custom-call" not in text.lower(), f"{name} has custom-call"

@@ -1,0 +1,188 @@
+"""Kernel-vs-oracle tests for the §4 signature-application Pallas kernel."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.ref import predict_counters_ref, signature_apply_ref
+from compile.kernels.signature_apply import predict_counters, signature_apply
+from .conftest import random_signature
+
+
+def _threads(rng, b, allow_empty=True):
+    t = rng.integers(0 if allow_empty else 1, 19, size=(b, 2))
+    # Never a fully-empty placement.
+    t[t.sum(axis=1) == 0, 0] = 1
+    return jnp.asarray(t, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Exact paper worked example (§4, Fig 5)
+# ---------------------------------------------------------------------------
+
+class TestWorkedExample:
+    FRACS = jnp.asarray([[0.2, 0.35, 0.3]], dtype=jnp.float32)
+    ONEHOT = jnp.asarray([[0.0, 1.0]], dtype=jnp.float32)
+    THREADS = jnp.asarray([[3.0, 1.0]], dtype=jnp.float32)
+
+    def test_matrix_matches_paper(self):
+        # Static=0.2 to socket 2, Local=0.35, Per-thread=0.3 over (3/4, 1/4),
+        # Interleaved=0.15 over (1/2, 1/2)  →  Fig 5's summed matrix.
+        m = signature_apply_ref(self.FRACS, self.ONEHOT, self.THREADS)[0]
+        np.testing.assert_allclose(
+            np.asarray(m), [[0.65, 0.35], [0.30, 0.70]], atol=1e-6)
+
+    def test_kernel_matches_ref(self):
+        b = 8
+        fr = jnp.tile(self.FRACS, (b, 1))
+        oh = jnp.tile(self.ONEHOT, (b, 1))
+        th = jnp.tile(self.THREADS, (b, 1))
+        np.testing.assert_allclose(
+            np.asarray(signature_apply(fr, oh, th)),
+            np.asarray(signature_apply_ref(fr, oh, th)), atol=1e-6)
+
+    def test_rows_sum_to_one(self):
+        m = signature_apply_ref(self.FRACS, self.ONEHOT, self.THREADS)[0]
+        np.testing.assert_allclose(np.asarray(m.sum(axis=1)), [1.0, 1.0],
+                                   atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Kernel == oracle across randomized batches and block sizes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,block", [(8, 8), (16, 8), (64, 8), (64, 16),
+                                     (8, 1), (64, 64)])
+def test_kernel_matches_ref_shapes(rng, b, block):
+    fracs, onehot = random_signature(rng, b)
+    threads = _threads(rng, b)
+    got = signature_apply(fracs, onehot, threads, block=block)
+    want = signature_apply_ref(fracs, onehot, threads)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_kernel_rejects_ragged_batch(rng):
+    fracs, onehot = random_signature(rng, 10)
+    threads = _threads(rng, 10)
+    with pytest.raises(AssertionError):
+        signature_apply(fracs, onehot, threads, block=8)
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data(),
+       b_blocks=st.integers(min_value=1, max_value=8),
+       block=st.sampled_from([1, 2, 4, 8]))
+def test_kernel_matches_ref_hypothesis(data, b_blocks, block):
+    """Hypothesis sweep: arbitrary valid signatures/placements, any tiling."""
+    b = b_blocks * block
+    fracs_l = data.draw(st.lists(
+        st.tuples(st.floats(0, 1), st.floats(0, 1), st.floats(0, 1))
+        .map(lambda t: [x / max(sum(t), 1.0) for x in t]),
+        min_size=b, max_size=b))
+    socks = data.draw(st.lists(st.integers(0, 1), min_size=b, max_size=b))
+    thr = data.draw(st.lists(
+        st.tuples(st.integers(0, 32), st.integers(0, 32))
+        .filter(lambda t: sum(t) > 0),
+        min_size=b, max_size=b))
+    fracs = jnp.asarray(fracs_l, dtype=jnp.float32)
+    onehot = jnp.asarray(np.eye(2, dtype=np.float32)[socks])
+    threads = jnp.asarray(thr, dtype=jnp.float32)
+    got = signature_apply(fracs, onehot, threads, block=block)
+    want = signature_apply_ref(fracs, onehot, threads)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Structural properties of the §4 matrix
+# ---------------------------------------------------------------------------
+
+def test_used_rows_sum_to_one(rng):
+    fracs, onehot = random_signature(rng, 64)
+    threads = _threads(rng, 64)
+    m = np.asarray(signature_apply(fracs, onehot, threads))
+    used = np.asarray(threads) > 0
+    sums = m.sum(axis=2)
+    np.testing.assert_allclose(sums[used], 1.0, atol=1e-5)
+
+
+def test_pure_static_routes_everything_to_static_socket(rng):
+    b = 8
+    fracs = jnp.asarray([[1.0, 0.0, 0.0]] * b, dtype=jnp.float32)
+    onehot = jnp.asarray([[0.0, 1.0]] * b, dtype=jnp.float32)
+    threads = _threads(rng, b)
+    m = np.asarray(signature_apply(fracs, onehot, threads))
+    np.testing.assert_allclose(m[:, :, 1], 1.0, atol=1e-6)
+    np.testing.assert_allclose(m[:, :, 0], 0.0, atol=1e-6)
+
+
+def test_pure_local_is_identity(rng):
+    b = 8
+    fracs = jnp.asarray([[0.0, 1.0, 0.0]] * b, dtype=jnp.float32)
+    _, onehot = random_signature(rng, b)
+    threads = _threads(rng, b)
+    m = np.asarray(signature_apply(fracs, onehot, threads))
+    np.testing.assert_allclose(m, np.broadcast_to(np.eye(2), (b, 2, 2)),
+                               atol=1e-6)
+
+
+def test_pure_perthread_weights_by_thread_share(rng):
+    b = 8
+    fracs = jnp.asarray([[0.0, 0.0, 1.0]] * b, dtype=jnp.float32)
+    _, onehot = random_signature(rng, b)
+    threads = _threads(rng, b, allow_empty=False)
+    m = np.asarray(signature_apply(fracs, onehot, threads))
+    t = np.asarray(threads)
+    w = t / t.sum(axis=1, keepdims=True)
+    for r in range(2):
+        np.testing.assert_allclose(m[:, r, :], w, atol=1e-6)
+
+
+def test_pure_interleave_uniform_over_used(rng):
+    b = 8
+    fracs = jnp.asarray([[0.0, 0.0, 0.0]] * b, dtype=jnp.float32)
+    _, onehot = random_signature(rng, b)
+    threads = jnp.asarray([[4.0, 4.0]] * b, dtype=jnp.float32)
+    m = np.asarray(signature_apply(fracs, onehot, threads))
+    np.testing.assert_allclose(m, 0.5, atol=1e-6)
+
+
+def test_single_socket_interleave_collapses_to_local():
+    # With threads on one socket only, "interleaved over used sockets"
+    # degenerates to that socket's bank (§4: s = sockets in use).
+    fracs = jnp.zeros((8, 3), dtype=jnp.float32)
+    onehot = jnp.asarray([[1.0, 0.0]] * 8, dtype=jnp.float32)
+    threads = jnp.asarray([[6.0, 0.0]] * 8, dtype=jnp.float32)
+    m = np.asarray(signature_apply(fracs, onehot, threads))
+    np.testing.assert_allclose(m[:, 0, :], [[1.0, 0.0]] * 8, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Fused predict_counters kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,block", [(8, 8), (64, 8), (64, 16)])
+def test_predict_counters_matches_ref(rng, b, block):
+    fracs, onehot = random_signature(rng, b)
+    threads = _threads(rng, b)
+    totals = jnp.asarray(rng.uniform(0.0, 1e9, size=(b, 2)),
+                         dtype=jnp.float32)
+    got = predict_counters(fracs, onehot, threads, totals, block=block)
+    want = predict_counters_ref(fracs, onehot, threads, totals)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_predict_counters_conserves_traffic(rng):
+    """Total predicted bank traffic == total CPU traffic (no loss)."""
+    b = 64
+    fracs, onehot = random_signature(rng, b)
+    threads = _threads(rng, b, allow_empty=False)
+    totals = jnp.asarray(rng.uniform(1.0, 1e6, size=(b, 2)),
+                         dtype=jnp.float32)
+    pred = np.asarray(predict_counters(fracs, onehot, threads, totals))
+    np.testing.assert_allclose(pred.sum(axis=(1, 2)),
+                               np.asarray(totals).sum(axis=1), rtol=1e-5)

@@ -1,0 +1,75 @@
+//! Fig 12 — bandwidth signatures measured for the four synthetic
+//! index-chasing benchmarks on both machines.
+//!
+//! Paper shape: each pure placement maps to its own corner of signature
+//! space, with the largest miscategorised bandwidth under 0.9 %
+//! (attributable to background noise).
+//!
+//! Run: `cargo bench --bench fig12_synthetic_signatures`
+
+use numabw::coordinator::{profile, FitRequest, PredictionService};
+use numabw::prelude::*;
+use numabw::report;
+use numabw::util::bench::Harness;
+use numabw::workloads::synthetic;
+
+fn main() {
+    println!("=== Fig 12: synthetic-benchmark signatures ===\n");
+    let mut h = Harness::new("fig12");
+    let svc = PredictionService::auto();
+    println!("backend: {}\n",
+             if svc.is_hlo() { "HLO/PJRT" } else { "rust-reference" });
+    let mut worst = 0.0f64;
+
+    for machine in MachineTopology::paper_machines() {
+        println!("--- {} ---", machine.name);
+        let sim = Simulator::new(machine.clone(), SimConfig::default());
+        // Static data on socket 1 (like the paper's numactl --membind=1).
+        for w in synthetic::all(1) {
+            let pair = profile(&sim, &w);
+            let sig = &svc
+                .fit(&[FitRequest { sym: pair.sym, asym: pair.asym }])
+                .unwrap()[0];
+            let s = sig.read;
+            println!(
+                "{:18} {} static={:.3} local={:.3} perthread={:.3} \
+                 interleave={:.3}",
+                w.name,
+                report::signature_bar(s.static_frac, s.local_frac,
+                                      s.perthread_frac, s.interleave_frac(),
+                                      32),
+                s.static_frac, s.local_frac, s.perthread_frac,
+                s.interleave_frac()
+            );
+            // Miscategorised bandwidth: everything outside the true class.
+            let (a, l, p, _) = w.truth(true);
+            let true_mass = if a == 1.0 {
+                s.static_frac
+            } else if l == 1.0 {
+                s.local_frac
+            } else if p == 1.0 {
+                s.perthread_frac
+            } else {
+                s.interleave_frac()
+            };
+            worst = worst.max(1.0 - true_mass);
+        }
+        println!();
+    }
+    println!("largest miscategorised bandwidth: {:.2}% (paper: < 0.9%)\n",
+             100.0 * worst);
+
+    let sim = Simulator::new(MachineTopology::xeon_e5_2699_v3(),
+                             SimConfig::default());
+    let svc_ref = PredictionService::reference();
+    let w = synthetic::all(1).remove(3);
+    h.bench("profile_and_fit_one_synthetic", || {
+        let pair = profile(&sim, &w);
+        numabw::util::bench::black_box(
+            svc_ref
+                .fit(&[FitRequest { sym: pair.sym, asym: pair.asym }])
+                .unwrap(),
+        )
+    });
+    h.report();
+}

@@ -1,0 +1,50 @@
+//! Fig 13 — read and write bandwidth signatures for the full Table-1
+//! benchmark suite on both machines.
+//!
+//! Run: `cargo bench --bench fig13_benchmark_signatures`
+
+use numabw::coordinator::{profile_suite, FitRequest, PredictionService};
+use numabw::prelude::*;
+use numabw::report;
+use numabw::util::bench::Harness;
+use numabw::workloads::suite;
+
+fn main() {
+    println!("=== Fig 13: benchmark signatures (S=static L=local \
+              P=perthread I=interleave) ===\n");
+    let mut h = Harness::new("fig13");
+    let svc = PredictionService::auto();
+    println!("backend: {}\n",
+             if svc.is_hlo() { "HLO/PJRT" } else { "rust-reference" });
+    let ws = suite::table1();
+
+    for machine in MachineTopology::paper_machines() {
+        println!("--- {} ---", machine.name);
+        let sim = Simulator::new(machine.clone(), SimConfig::default());
+        h.bench(&format!("profile_suite_{}", machine.name), || {
+            numabw::util::bench::black_box(profile_suite(&sim, &ws))
+        });
+        let pairs = profile_suite(&sim, &ws);
+        let reqs: Vec<FitRequest> = pairs
+            .iter()
+            .map(|p| FitRequest { sym: p.sym.clone(), asym: p.asym.clone() })
+            .collect();
+        let sigs = svc.fit(&reqs).unwrap();
+        for (w, sig) in ws.iter().zip(&sigs) {
+            for (ch, s) in [("rd", sig.read), ("wr", sig.write)] {
+                println!(
+                    "{:10} {ch} {} st={:.2} lo={:.2} pt={:.2} il={:.2} \
+                     misfit={:.3}",
+                    w.name,
+                    report::signature_bar(s.static_frac, s.local_frac,
+                                          s.perthread_frac,
+                                          s.interleave_frac(), 28),
+                    s.static_frac, s.local_frac, s.perthread_frac,
+                    s.interleave_frac(), s.misfit
+                );
+            }
+        }
+        println!();
+    }
+    h.report();
+}

@@ -1,0 +1,75 @@
+//! Figs 14 & 15 — signature stability between the two machines.
+//!
+//! Fig 14: per-benchmark % of bandwidth reallocated between the signatures
+//! fitted on the two machines (read, write, and combined).  Paper: equake's
+//! write signature swings > 80 % (negligible write volume → pure noise)
+//! while its combined signature moves only 5.4 %; mean change 6.8 %,
+//! median 4.2 %.
+//!
+//! Fig 15: cumulative frequency of the per-benchmark change — > 50 % of
+//! benchmarks below ~5 %, > 75 % below ~10 %.
+//!
+//! Run: `cargo bench --bench fig14_15_stability`
+
+use numabw::coordinator::{evaluate_suite, PredictionService};
+use numabw::eval;
+use numabw::prelude::*;
+use numabw::report;
+use numabw::util::bench::Harness;
+use numabw::util::stats::Summary;
+use numabw::workloads::suite;
+
+fn main() {
+    println!("=== Figs 14/15: signature stability across machines ===\n");
+    let mut h = Harness::new("fig14_15");
+    let svc = PredictionService::auto();
+    let ws = suite::table1();
+
+    let evs: Vec<_> = MachineTopology::paper_machines()
+        .into_iter()
+        .map(|m| {
+            let sim = Simulator::new(m, SimConfig::default());
+            // Small split sweep — only the signatures matter here.
+            evaluate_suite(&sim, &svc, &ws, Some(4)).unwrap()
+        })
+        .collect();
+
+    let rows = eval::stability(&evs[0], &evs[1], 2);
+    let table_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.workload.clone(),
+                format!("{:.1}%", r.read_change_pct),
+                format!("{:.1}%", r.write_change_pct),
+                format!("{:.1}%", r.combined_change_pct),
+            ]
+        })
+        .collect();
+    print!("{}", report::table(&["benchmark", "read Δ", "write Δ",
+                                 "combined Δ"], &table_rows));
+
+    let combined: Vec<f64> =
+        rows.iter().map(|r| r.combined_change_pct).collect();
+    let s = Summary::of(&combined);
+    println!("\ncombined-signature change: mean {:.1}% median {:.1}% \
+              (paper: mean 6.8%, median 4.2%)", s.mean, s.median);
+
+    let eq = rows.iter().find(|r| r.workload == "equake").unwrap();
+    println!("equake: write Δ {:.1}% vs combined Δ {:.1}% (paper: >80% vs \
+              5.4% — the write channel is noise, the combined fit is not)",
+             eq.write_change_pct, eq.combined_change_pct);
+
+    // Fig 15: CDF of the combined change.
+    let cdf = eval::stability_cdf(&rows);
+    println!("\n{}", report::cdf_plot(&cdf.curve(48), 10,
+        "Fig 15: CDF of signature change (x: % change, y: % of benchmarks)"));
+    println!("<=5%: {:.0}% of benchmarks  <=10%: {:.0}% (paper: >50% and \
+              >75%)", 100.0 * cdf.at(5.0), 100.0 * cdf.at(10.0));
+
+    // Timing: the stability computation itself (fit reuse, pure math).
+    h.bench("stability_23_benchmarks", || {
+        numabw::util::bench::black_box(eval::stability(&evs[0], &evs[1], 2))
+    });
+    h.report();
+}

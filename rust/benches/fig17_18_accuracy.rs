@@ -1,0 +1,87 @@
+//! Figs 17 & 18 — the headline accuracy evaluation.
+//!
+//! Fig 17: cumulative frequency of |measured − predicted| (as % of the
+//! run's channel bandwidth) over every (benchmark × thread split × channel
+//! × bank × local/remote) point on both machines.  Paper: median 2.34 %,
+//! > 50 % of points below 2.5 %, 75 % below 10 % (2322 points on the
+//! 18-core machine alone).
+//!
+//! Fig 18: per-benchmark average error vs average bandwidth — substantial
+//! errors only in the low-bandwidth benchmarks.
+//!
+//! Run: `cargo bench --bench fig17_18_accuracy`
+
+use numabw::coordinator::{evaluate_suite, PredictionService};
+use numabw::eval;
+use numabw::prelude::*;
+use numabw::report;
+use numabw::util::bench::Harness;
+use numabw::workloads::suite;
+
+fn main() {
+    println!("=== Figs 17/18: prediction accuracy ===\n");
+    let mut h = Harness::new("fig17_18");
+    let svc = PredictionService::auto();
+    println!("backend: {}\n",
+             if svc.is_hlo() { "HLO/PJRT" } else { "rust-reference" });
+    let ws = suite::table1();
+
+    let mut evs = Vec::new();
+    for machine in MachineTopology::paper_machines() {
+        let sim = Simulator::new(machine.clone(), SimConfig::default());
+        let ev = evaluate_suite(&sim, &svc, &ws, None).unwrap();
+        println!("{}: {} measurement points (paper: 2322 on the 18-core)",
+                 ev.machine, ev.records.len());
+        evs.push(ev);
+    }
+
+    let (median, at25, at10) =
+        eval::headline(&evs.iter().collect::<Vec<_>>());
+    println!("\npooled: median error {median:.2}% of bandwidth \
+              (paper: 2.34%)");
+    println!("        <=2.5%: {:.0}% of points (paper: >50%)", at25 * 100.0);
+    println!("        <=10%:  {:.0}% of points (paper: 75%)", at10 * 100.0);
+
+    let mut all = Vec::new();
+    for ev in &evs {
+        all.extend(ev.errors());
+    }
+    let cdf = numabw::util::stats::Cdf::of(&all);
+    // Clip the x-range at p99 so the plot resolves the interesting region.
+    let p99 = cdf.quantile(0.99);
+    let clipped: Vec<f64> = all.iter().map(|&e| e.min(p99)).collect();
+    let ccdf = numabw::util::stats::Cdf::of(&clipped);
+    println!("\n{}", report::cdf_plot(&ccdf.curve(56), 12,
+        "Fig 17: CDF of prediction error (x: % of bandwidth, y: % of \
+         measurements)"));
+
+    println!("Fig 18: per-benchmark average error vs average bandwidth \
+              (18-core machine):\n");
+    let mut rows18 = eval::accuracy_by_benchmark(&evs[1]);
+    rows18.sort_by(|a, b| a.avg_bandwidth.partial_cmp(&b.avg_bandwidth)
+        .unwrap());
+    let trows: Vec<Vec<String>> = rows18
+        .iter()
+        .map(|r| {
+            vec![
+                r.workload.clone(),
+                report::fmt_bw(r.avg_bandwidth),
+                format!("{:.2}%", r.avg_err_pct),
+            ]
+        })
+        .collect();
+    print!("{}", report::table(&["benchmark", "avg bandwidth", "avg err"],
+                               &trows));
+    println!("\n(the large errors sit at the low-bandwidth end — ep, art, \
+              md — plus the pagerank misfit, as in the paper)");
+
+    // Timing: the full evaluation sweep is the system's heaviest job.
+    let sim = Simulator::new(MachineTopology::xeon_e5_2699_v3(),
+                             SimConfig::default());
+    let small: Vec<_> = ws.iter().take(4).cloned().collect();
+    h.bench("evaluate_4_benchmarks_19_splits", || {
+        numabw::util::bench::black_box(
+            evaluate_suite(&sim, &svc, &small, None).unwrap())
+    });
+    h.report();
+}

@@ -1,0 +1,79 @@
+//! Fig 2 — the memory bandwidths available on the two test systems:
+//! local/remote × read/write, measured by saturating STREAM-like sweeps.
+//!
+//! Paper shapes: both machines have similar *local* bandwidths, but the
+//! 8-core machine's remote bandwidth collapses to 0.16× (reads) / 0.23×
+//! (writes) of local, while the 18-core machine holds 0.59× / 0.83×.
+//!
+//! Run: `cargo bench --bench fig2_machine_bandwidths`
+
+use numabw::prelude::*;
+use numabw::report;
+use numabw::util::bench::Harness;
+
+/// A saturating stream: a single full socket of threads, demand far above
+/// any channel, pinned to one bank.
+fn stream(read: bool, bank: usize) -> WorkloadSpec {
+    WorkloadSpec {
+        name: format!("stream-{}-bank{bank}", if read { "rd" } else { "wr" }),
+        description: "bandwidth probe".into(),
+        suite: Suite::Synthetic,
+        read_mixture: Mixture::pure_static(bank),
+        write_mixture: Mixture::pure_static(bank),
+        read_fraction: if read { 1.0 } else { 0.0 },
+        bw_per_thread: 1e12, // saturate whatever the machine offers
+        instr_per_byte: 0.1,
+        latency_sensitivity: 0.0,
+        heterogeneity: Heterogeneity::Uniform,
+        irregularity: 0.0,
+        placement_drift: 0.0,
+    }
+}
+
+fn main() {
+    println!("=== Fig 2: local/remote read/write bandwidths ===\n");
+    let mut h = Harness::new("fig2");
+    let mut rows = Vec::new();
+
+    for machine in MachineTopology::paper_machines() {
+        // Noise-free probe runs: Fig 2 reports peak capability.
+        let sim = Simulator::new(machine.clone(), SimConfig::noiseless());
+        let threads = ThreadPlacement::new(vec![machine.cores_per_socket, 0]);
+        let probe = |read: bool, bank: usize| -> f64 {
+            sim.run(&stream(read, bank), &threads).achieved_bw
+        };
+        let local_rd = probe(true, 0);
+        let remote_rd = probe(true, 1);
+        let local_wr = probe(false, 0);
+        let remote_wr = probe(false, 1);
+        rows.push(vec![
+            machine.name.clone(),
+            report::fmt_bw(local_rd),
+            report::fmt_bw(remote_rd),
+            format!("{:.2}", remote_rd / local_rd),
+            report::fmt_bw(local_wr),
+            report::fmt_bw(remote_wr),
+            format!("{:.2}", remote_wr / local_wr),
+        ]);
+
+        h.bench(&format!("probe_{}", machine.name), || {
+            numabw::util::bench::black_box(
+                sim.run(&stream(true, 1), &threads).achieved_bw,
+            )
+        });
+    }
+
+    print!(
+        "{}",
+        report::table(
+            &["machine", "local rd", "remote rd", "rd ratio", "local wr",
+              "remote wr", "wr ratio"],
+            &rows
+        )
+    );
+    println!("\npaper ratios: 8-core 0.16 rd / 0.23 wr; 18-core 0.59 rd / \
+              0.83 wr");
+    println!("(remote bandwidth bounded by the QPI link; the local figures \
+              are channel capacity, possibly CPU-issue-bound)");
+    h.report();
+}

@@ -1,0 +1,128 @@
+//! Performance microbenchmarks for the hot paths of all three layers —
+//! the numbers recorded in EXPERIMENTS.md §Perf.
+//!
+//! L3 paths: simulator epoch loop, max-min solver, §5 fit (Rust), §4
+//! apply (Rust), batched prediction service (Rust reference vs HLO/PJRT),
+//! end-to-end evaluation throughput.
+//!
+//! Run: `cargo bench --bench perf_hotpaths`
+
+use numabw::coordinator::{
+    evaluate_suite, CounterQuery, FitRequest, PredictionService,
+};
+use numabw::model::signature::ChannelSignature;
+use numabw::model::{apply, fit};
+use numabw::prelude::*;
+use numabw::simulator::contention::{maxmin, Flow};
+use numabw::util::bench::{black_box, Harness};
+use numabw::util::rng::Rng;
+use numabw::workloads::suite;
+
+fn main() {
+    println!("=== perf: hot paths per layer ===\n");
+    let mut h = Harness::new("perf");
+
+    // ---- L3: contention solver -------------------------------------------
+    let mut rng = Rng::new(42);
+    let caps: Vec<f64> = (0..8).map(|_| rng.uniform(10.0, 60.0)).collect();
+    let flows: Vec<Flow> = (0..144)
+        .map(|i| {
+            let d = rng.uniform(0.1, 3.0);
+            if i % 2 == 0 {
+                Flow::new(d, &[i % 4])
+            } else {
+                Flow::new(d, &[i % 4, 4 + i % 4])
+            }
+        })
+        .collect();
+    let r = h.bench("maxmin_144_flows_8_resources", || {
+        black_box(maxmin(&flows, &caps))
+    });
+    println!("  -> {:.1}k solves/s\n", 1e-3 / r.summary.median);
+
+    // ---- L3: simulator ------------------------------------------------------
+    let sim = Simulator::new(MachineTopology::xeon_e5_2699_v3(),
+                             SimConfig::default());
+    let w = suite::by_name("cg").unwrap();
+    let p = ThreadPlacement::new(vec![9, 9]);
+    let r = h.bench("simulator_run_cg_18threads", || {
+        black_box(sim.run(&w, &p))
+    });
+    let epochs_threads =
+        sim.config.epochs as f64 * 18.0 / r.summary.median;
+    println!("  -> {:.2}M epoch-thread steps/s\n", epochs_threads / 1e6);
+
+    // ---- model: fit + apply (Rust reference) -------------------------------
+    let truth = ChannelSignature::new(0.2, 0.35, 0.3, 1);
+    let mk_run = |tps: &[usize]| {
+        let m = apply::apply(&truth, tps);
+        let mut c = numabw::counters::CounterSnapshot::new(2);
+        for (src, &n) in tps.iter().enumerate() {
+            for dst in 0..2 {
+                c.record_traffic(src, dst, Channel::Read,
+                                 m[src][dst] * n as f64 * 1e9);
+            }
+            c.sockets[src].instructions = n as f64 * 1e9;
+        }
+        c.elapsed_s = 1.0;
+        ProfiledRun { counters: c, threads_per_socket: tps.to_vec() }
+    };
+    let sym = mk_run(&[2, 2]);
+    let asym = mk_run(&[3, 1]);
+    h.bench("fit_channel_rust", || {
+        black_box(fit::fit_channel(&sym, &asym, Some(Channel::Read)))
+    });
+    h.bench("apply_signature_rust", || {
+        black_box(apply::apply(&truth, &[14, 4]))
+    });
+
+    // ---- prediction service: Rust reference vs HLO -------------------------
+    let mut rng = Rng::new(7);
+    let queries: Vec<CounterQuery> = (0..256)
+        .map(|_| CounterQuery {
+            sig: truth,
+            threads: [1 + rng.below(17) as usize, 1 + rng.below(17) as usize],
+            cpu_totals: [rng.uniform(1e8, 1e10), rng.uniform(1e8, 1e10)],
+        })
+        .collect();
+    let reference = PredictionService::reference();
+    let r = h.bench("predict_counters_256_reference", || {
+        black_box(reference.predict_counters(&queries).unwrap())
+    });
+    println!("  -> {:.2}M predictions/s (reference)\n",
+             256.0 / r.summary.median / 1e6);
+
+    match numabw::runtime::Engine::from_env() {
+        Ok(engine) => {
+            engine.warmup().unwrap();
+            let hlo = PredictionService::hlo(engine);
+            let r = h.bench("predict_counters_256_hlo", || {
+                black_box(hlo.predict_counters(&queries).unwrap())
+            });
+            println!("  -> {:.1}k predictions/s (HLO, incl. PJRT dispatch \
+                      of 4 batches)\n", 256.0 / r.summary.median / 1e3);
+            let fit_reqs: Vec<FitRequest> = (0..21)
+                .map(|_| FitRequest { sym: sym.clone(), asym: asym.clone() })
+                .collect();
+            let r = h.bench("fit_21_workloads_hlo", || {
+                black_box(hlo.fit(&fit_reqs).unwrap())
+            });
+            println!("  -> {:.1}k fits/s (HLO; 63 rows, 1 batch)\n",
+                     21.0 / r.summary.median / 1e3);
+            h.bench("fit_21_workloads_reference", || {
+                black_box(reference.fit(&fit_reqs).unwrap())
+            });
+        }
+        Err(e) => println!("(HLO benches skipped: {e})"),
+    }
+
+    // ---- end-to-end: evaluation sweep throughput ---------------------------
+    let ws: Vec<_> = suite::table1().into_iter().take(4).collect();
+    let r = h.bench("evaluate_4x19_splits_reference", || {
+        black_box(evaluate_suite(&sim, &reference, &ws, None).unwrap())
+    });
+    let points = 4.0 * 19.0 * 12.0;
+    println!("  -> {:.1}k eval points/s\n", points / r.summary.median / 1e3);
+
+    h.report();
+}

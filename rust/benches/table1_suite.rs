@@ -1,0 +1,55 @@
+//! Table 1 — the benchmark suite: descriptions plus the workload-model
+//! parameters each entry runs with (our substitution for the paper's
+//! NPB / SPEC OMP / DBJ / GA binaries; see DESIGN.md §1).
+//!
+//! Run: `cargo bench --bench table1_suite`
+
+use numabw::report;
+use numabw::util::bench::Harness;
+use numabw::workloads::suite;
+
+fn main() {
+    println!("=== Table 1: benchmark suite ===\n");
+    let rows: Vec<Vec<String>> = suite::table1()
+        .iter()
+        .map(|w| {
+            let (a, l, p, _) = w.truth(true);
+            vec![
+                w.name.clone(),
+                w.suite.tag().to_string(),
+                w.description.clone(),
+                format!("{a:.2}/{l:.2}/{p:.2}/{:.2}",
+                        w.read_mixture.interleave_frac),
+                format!("{:.2}", w.read_fraction),
+                report::fmt_bw(w.bw_per_thread),
+                format!("{:.1}", w.instr_per_byte),
+                format!("{:?}", w.heterogeneity)
+                    .chars()
+                    .take(14)
+                    .collect::<String>(),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        report::table(
+            &["name", "suite", "description", "rd mix S/L/P/I", "rd frac",
+              "bw/thread", "instr/B", "heterogeneity"],
+            &rows
+        )
+    );
+    println!("\n{} benchmarks; mixtures are the generative ground truth \
+              the §5 fit must recover from counters alone",
+             suite::table1().len());
+
+    // Timing: full suite construction + validation (registry cost).
+    let mut h = Harness::new("table1");
+    h.bench("build_and_validate_suite", || {
+        let ws = suite::table1();
+        for w in &ws {
+            w.validate().unwrap();
+        }
+        numabw::util::bench::black_box(ws.len())
+    });
+    h.report();
+}

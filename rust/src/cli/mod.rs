@@ -1,0 +1,376 @@
+//! `numabw` command-line interface.
+//!
+//! Subcommands:
+//!   machines   — list the built-in machine topologies (paper §2, Fig 2)
+//!   workloads  — list the workload suite (paper Table 1)
+//!   profile    — run the two §5.1 profiling runs for one workload
+//!   fit        — profile + fit, print the bandwidth signature (§5)
+//!   predict    — apply a fitted signature to a placement (§4)
+//!   evaluate   — full measured-vs-predicted sweep (§6.2.2, Figs 16–18)
+//!   quickstart — tiny end-to-end demo
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{
+    evaluate_suite, profile, FitRequest, PredictionService, SignatureStore,
+};
+use crate::eval;
+use crate::model::misfit;
+use crate::report;
+use crate::simulator::{SimConfig, Simulator, ThreadPlacement};
+use crate::topology::MachineTopology;
+use crate::util::args::Args;
+use crate::workloads::{suite, synthetic, WorkloadSpec};
+
+pub fn main_with(args: Vec<String>) -> Result<()> {
+    let args = Args::parse(args);
+    match args.command.as_deref() {
+        Some("machines") => cmd_machines(),
+        Some("workloads") => cmd_workloads(),
+        Some("profile") => cmd_profile(&args),
+        Some("fit") => cmd_fit(&args),
+        Some("predict") => cmd_predict(&args),
+        Some("evaluate") => cmd_evaluate(&args),
+        Some("quickstart") => cmd_quickstart(),
+        Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "\
+numabw — NUMA bandwidth-pattern modeling (paper reproduction)
+
+USAGE: numabw <subcommand> [flags]
+
+  machines                          list machine topologies
+  workloads                         list the Table-1 workload suite
+  profile   --workload W [--machine M]       run the two §5.1 runs
+  fit       --workload W [--machine M] [--hlo] [--save F]
+                                    fit + print (optionally store) the
+                                    signature
+  predict   --workload W --t0 N --t1 N [--machine M] [--hlo] [--store F]
+                                    predict a placement's traffic matrix
+                                    (from a stored signature if --store)
+  evaluate  [--machine M] [--hlo] [--seed S]    full §6.2.2 sweep
+  quickstart                        tiny end-to-end demo
+
+Flags: --machine xeon8|xeon18 (default xeon18); --hlo uses the AOT PJRT
+pipelines (default: Rust reference model); --seed u64.";
+
+fn machine_flag(args: &Args) -> Result<MachineTopology> {
+    let name = args.get_or("machine", "xeon18");
+    MachineTopology::by_name(name)
+        .ok_or_else(|| anyhow!("unknown machine {name:?} (xeon8|xeon18)"))
+}
+
+fn workload_flag(args: &Args) -> Result<WorkloadSpec> {
+    let name = args
+        .get("workload")
+        .ok_or_else(|| anyhow!("--workload required"))?;
+    suite::by_name(name)
+        .or_else(|| {
+            synthetic::all(0).into_iter().find(|w| w.name == name)
+        })
+        .ok_or_else(|| anyhow!("unknown workload {name:?} (see `numabw workloads`)"))
+}
+
+fn service_flag(args: &Args) -> PredictionService {
+    if args.get_bool("hlo") {
+        PredictionService::auto()
+    } else {
+        PredictionService::reference()
+    }
+}
+
+fn sim_flag(args: &Args, machine: MachineTopology) -> Simulator {
+    let seed = args.get("seed").map(|s| s.parse().expect("--seed: u64"));
+    let mut cfg = SimConfig::default();
+    if let Some(s) = seed {
+        cfg = cfg.with_seed(s);
+    }
+    Simulator::new(machine, cfg)
+}
+
+fn cmd_machines() -> Result<()> {
+    let rows: Vec<Vec<String>> = MachineTopology::paper_machines()
+        .iter()
+        .map(|m| {
+            vec![
+                m.name.clone(),
+                format!("{}x{}", m.sockets, m.cores_per_socket),
+                report::fmt_bw(m.local_read_bw),
+                report::fmt_bw(m.local_write_bw),
+                format!("{:.2}x", m.qpi_read_bw / m.local_read_bw),
+                format!("{:.2}x", m.qpi_write_bw / m.local_write_bw),
+                format!("${:.0}", m.price_usd),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        report::table(
+            &["machine", "cores", "local rd", "local wr", "remote rd",
+              "remote wr", "price/cpu"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+fn cmd_workloads() -> Result<()> {
+    let rows: Vec<Vec<String>> = suite::table1()
+        .iter()
+        .map(|w| {
+            vec![
+                w.name.clone(),
+                w.suite.tag().to_string(),
+                w.description.clone(),
+                format!("{:.2}", w.read_fraction),
+                report::fmt_bw(w.bw_per_thread),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        report::table(&["name", "suite", "description", "rd frac",
+                        "bw/thread"], &rows)
+    );
+    println!("\nplus synthetics: chase-static chase-local \
+              chase-interleaved chase-perthread");
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let machine = machine_flag(args)?;
+    let w = workload_flag(args)?;
+    let sim = sim_flag(args, machine);
+    let pair = profile(&sim, &w);
+    for (label, run) in [("symmetric", &pair.sym), ("asymmetric", &pair.asym)]
+    {
+        println!(
+            "{label} run: threads {:?}, {:.2}s",
+            run.threads_per_socket, run.counters.elapsed_s
+        );
+        for (b, bank) in run.counters.banks.iter().enumerate() {
+            println!(
+                "  bank {b}: local rd {} | remote rd {} | local wr {} | \
+                 remote wr {}",
+                report::fmt_bw(bank.local_read / run.counters.elapsed_s),
+                report::fmt_bw(bank.remote_read / run.counters.elapsed_s),
+                report::fmt_bw(bank.local_write / run.counters.elapsed_s),
+                report::fmt_bw(bank.remote_write / run.counters.elapsed_s),
+            );
+        }
+        println!(
+            "  per-thread instr rates: {:?}",
+            run.thread_rates()
+                .iter()
+                .map(|r| format!("{:.2e}", r))
+                .collect::<Vec<_>>()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_fit(args: &Args) -> Result<()> {
+    let machine = machine_flag(args)?;
+    let w = workload_flag(args)?;
+    let sim = sim_flag(args, machine);
+    let svc = service_flag(args);
+    let pair = profile(&sim, &w);
+    let sig = &svc.fit(&[FitRequest {
+        sym: pair.sym,
+        asym: pair.asym,
+    }])?[0];
+    if let Some(path) = args.get("save") {
+        let path = std::path::Path::new(path);
+        let mut store = SignatureStore::load(path).unwrap_or_default();
+        store.insert(&sim.machine.name, &w.name, *sig);
+        store.save(path)?;
+        println!("saved to {} ({} signatures)", path.display(), store.len());
+    }
+    println!("bandwidth signature for {} on {}:", w.name, sim.machine.name);
+    for (ch, s) in [("read", &sig.read), ("write", &sig.write),
+                    ("combined", &sig.combined)] {
+        println!(
+            "  {ch:<8} {} static={:.3}@{} local={:.3} perthread={:.3} \
+             interleave={:.3} misfit={:.4}",
+            report::signature_bar(s.static_frac, s.local_frac,
+                                  s.perthread_frac, s.interleave_frac(), 32),
+            s.static_frac, s.static_socket, s.local_frac, s.perthread_frac,
+            s.interleave_frac(), s.misfit
+        );
+    }
+    println!("  {}", misfit::describe(sig));
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let machine = machine_flag(args)?;
+    let w = workload_flag(args)?;
+    let t0 = args.get_usize("t0", 1);
+    let t1 = args.get_usize("t1", 1);
+    let sim = sim_flag(args, machine);
+    // From a stored signature (no profiling) or a fresh two-run fit.
+    let sig = if let Some(path) = args.get("store") {
+        let store = SignatureStore::load(std::path::Path::new(path))?;
+        *store.get(&sim.machine.name, &w.name).ok_or_else(|| {
+            anyhow!("{path}: no signature for {}/{} — run `numabw fit \
+                     --workload {} --machine {} --save {path}` first",
+                    sim.machine.name, w.name, w.name,
+                    args.get_or("machine", "xeon18"))
+        })?
+    } else {
+        let svc = service_flag(args);
+        let pair = profile(&sim, &w);
+        svc.fit(&[FitRequest {
+            sym: pair.sym,
+            asym: pair.asym,
+        }])?[0]
+    };
+    let sig = &sig;
+    let placement = ThreadPlacement::new(vec![t0, t1]);
+    placement.validate(&sim.machine).map_err(|e| anyhow!(e))?;
+    println!(
+        "predicted traffic fractions for {} with threads ({t0}, {t1}):",
+        w.name
+    );
+    for (ch, s) in [("read", &sig.read), ("write", &sig.write)] {
+        let m = s.apply(&placement.threads_per_socket);
+        println!("  {ch}:");
+        for (src, row) in m.iter().enumerate() {
+            println!(
+                "    cpu{src} -> banks {:?}",
+                row.iter().map(|v| format!("{v:.3}")).collect::<Vec<_>>()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_evaluate(args: &Args) -> Result<()> {
+    let machine = machine_flag(args)?;
+    let sim = sim_flag(args, machine);
+    let svc = service_flag(args);
+    let ws = suite::table1();
+    println!(
+        "evaluating {} workloads on {} (backend: {}) ...",
+        ws.len(),
+        sim.machine.name,
+        if svc.is_hlo() { "HLO/PJRT" } else { "rust-reference" }
+    );
+    let ev = evaluate_suite(&sim, &svc, &ws, None)?;
+    let cdf = eval::error_cdf(&ev);
+    println!("\n{} measurement points", ev.records.len());
+    println!("median error: {:.2}% of total bandwidth", cdf.median());
+    println!("fraction <= 2.5%: {:.1}%", 100.0 * cdf.at(2.5));
+    println!("fraction <= 10%:  {:.1}%", 100.0 * cdf.at(10.0));
+    println!("\nper-benchmark (Fig 18):");
+    let rows: Vec<Vec<String>> = eval::accuracy_by_benchmark(&ev)
+        .iter()
+        .map(|r| {
+            vec![
+                r.workload.clone(),
+                format!("{:.2}%", r.avg_err_pct),
+                report::fmt_bw(r.avg_bandwidth),
+                r.n_points.to_string(),
+            ]
+        })
+        .collect();
+    print!("{}", report::table(&["benchmark", "avg err", "avg bw",
+                                 "points"], &rows));
+    Ok(())
+}
+
+fn cmd_quickstart() -> Result<()> {
+    let machine = MachineTopology::xeon_e5_2699_v3();
+    let sim = Simulator::new(machine, SimConfig::default());
+    let w = suite::by_name("cg").unwrap();
+    let svc = PredictionService::reference();
+    let pair = profile(&sim, &w);
+    let sig = &svc.fit(&[FitRequest {
+        sym: pair.sym,
+        asym: pair.asym,
+    }])?[0];
+    println!("fitted signature for `cg` (read): static={:.2} local={:.2} \
+              perthread={:.2} interleave={:.2}",
+             sig.read.static_frac, sig.read.local_frac,
+             sig.read.perthread_frac, sig.read.interleave_frac());
+    let m = sig.read.apply(&[14, 4]);
+    println!("traffic matrix for a (14, 4) placement: {m:?}");
+    println!("run `numabw evaluate` for the full paper sweep");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn usage_on_no_command() {
+        main_with(vec![]).unwrap();
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(main_with(toks("frobnicate")).is_err());
+    }
+
+    #[test]
+    fn machines_and_workloads_render() {
+        main_with(toks("machines")).unwrap();
+        main_with(toks("workloads")).unwrap();
+    }
+
+    #[test]
+    fn fit_runs_end_to_end() {
+        main_with(toks("fit --workload cg --machine xeon8")).unwrap();
+    }
+
+    #[test]
+    fn predict_validates_placement() {
+        assert!(main_with(
+            toks("predict --workload cg --t0 99 --t1 0 --machine xeon8")
+        )
+        .is_err());
+        main_with(toks("predict --workload cg --t0 6 --t1 2 --machine xeon8"))
+            .unwrap();
+    }
+
+    #[test]
+    fn unknown_workload_errors() {
+        assert!(main_with(toks("fit --workload nope")).is_err());
+    }
+
+    #[test]
+    fn store_roundtrip_via_cli() {
+        let dir = std::env::temp_dir().join("numabw-cli-store");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sigs.json");
+        let path_s = path.to_str().unwrap();
+        main_with(toks(&format!(
+            "fit --workload ft --machine xeon8 --save {path_s}"
+        )))
+        .unwrap();
+        // Prediction served from the store (no profiling).
+        main_with(toks(&format!(
+            "predict --workload ft --t0 6 --t1 2 --machine xeon8 \
+             --store {path_s}"
+        )))
+        .unwrap();
+        // Missing entry errors with guidance.
+        assert!(main_with(toks(&format!(
+            "predict --workload cg --t0 6 --t1 2 --machine xeon8 \
+             --store {path_s}"
+        )))
+        .is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

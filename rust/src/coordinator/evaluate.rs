@@ -1,0 +1,249 @@
+//! The §6.2.2 evaluation driver: profile → fit → sweep every thread
+//! distribution → compare predicted against measured counters.
+//!
+//! For each benchmark, threads are fixed at the largest count a single
+//! socket supports (one per core) and distributed across the two sockets
+//! in every feasible split; for every split the simulator's measured
+//! per-bank local/remote read/write counters are compared against the
+//! model's predictions (read, write, and combined signatures), each
+//! difference expressed as a percentage of the run's total traffic — the
+//! paper's Fig 16/17/18 data.
+
+use anyhow::Result;
+
+use crate::counters::Channel;
+use crate::model::signature::BandwidthSignature;
+use crate::simulator::{Simulator, ThreadPlacement};
+use crate::workloads::WorkloadSpec;
+
+use super::pool::parallel_map;
+use super::profiler::profile_suite;
+use super::service::{CounterQuery, FitRequest, PredictionService};
+
+/// One (workload × split × channel × bank × local/remote) comparison.
+#[derive(Clone, Debug)]
+pub struct ErrorRecord {
+    pub workload: String,
+    /// Threads per socket during the measured run.
+    pub split: [usize; 2],
+    /// "read", "write" or "combined".
+    pub channel: &'static str,
+    pub bank: usize,
+    /// "local" or "remote".
+    pub kind: &'static str,
+    pub measured: f64,
+    pub predicted: f64,
+    /// |measured - predicted| as % of the run's total traffic.
+    pub err_pct: f64,
+    /// The run's aggregate bandwidth (bytes/s) — Fig 18's x-axis.
+    pub run_bandwidth: f64,
+}
+
+/// Full evaluation output for one machine.
+#[derive(Clone, Debug)]
+pub struct Evaluation {
+    pub machine: String,
+    pub signatures: Vec<(String, BandwidthSignature)>,
+    pub records: Vec<ErrorRecord>,
+}
+
+impl Evaluation {
+    pub fn errors(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.err_pct).collect()
+    }
+
+    pub fn errors_for(&self, workload: &str) -> Vec<f64> {
+        self.records
+            .iter()
+            .filter(|r| r.workload == workload)
+            .map(|r| r.err_pct)
+            .collect()
+    }
+
+    pub fn signature(&self, workload: &str) -> Option<&BandwidthSignature> {
+        self.signatures
+            .iter()
+            .find(|(n, _)| n == workload)
+            .map(|(_, s)| s)
+    }
+}
+
+/// CPU-side totals per socket for a channel: a socket's traffic is its own
+/// bank's local counter plus the other bank's remote counter (S=2).
+fn cpu_totals(m: &[[f64; 2]]) -> [f64; 2] {
+    [m[0][0] + m[1][1], m[1][0] + m[0][1]]
+}
+
+fn combined_matrix(run: &crate::counters::CounterSnapshot)
+    -> Vec<[f64; 2]> {
+    let r = run.bank_matrix(Channel::Read);
+    let w = run.bank_matrix(Channel::Write);
+    r.iter()
+        .zip(&w)
+        .map(|(a, b)| [a[0] + b[0], a[1] + b[1]])
+        .collect()
+}
+
+/// Evaluate a workload suite on a simulated machine.
+///
+/// `thread_total` defaults to the machine's cores-per-socket (the paper's
+/// "largest thread count supported by a single socket").
+pub fn evaluate_suite(sim: &Simulator, svc: &PredictionService,
+                      workloads: &[WorkloadSpec],
+                      thread_total: Option<usize>) -> Result<Evaluation> {
+    // 1. Profile: the two §5.1 runs per workload (parallel).
+    let pairs = profile_suite(sim, workloads);
+
+    // 2. Fit all signatures in one batched call.
+    let reqs: Vec<FitRequest> = pairs
+        .iter()
+        .map(|p| FitRequest {
+            sym: p.sym.clone(),
+            asym: p.asym.clone(),
+        })
+        .collect();
+    let sigs = svc.fit(&reqs)?;
+
+    // 3. Sweep splits: measured runs in parallel.
+    let total = thread_total.unwrap_or(sim.machine.cores_per_socket);
+    let splits = ThreadPlacement::all_splits(&sim.machine, total);
+    let measured: Vec<Vec<crate::simulator::RunResult>> = parallel_map(
+        workloads.to_vec(),
+        0,
+        |w| {
+            splits
+                .iter()
+                .map(|p| sim.run(&w, p))
+                .collect::<Vec<_>>()
+        },
+    );
+
+    // 4. Batch every prediction query, then diff.
+    let mut queries = Vec::new();
+    let mut query_meta = Vec::new();
+    for (wi, _w) in workloads.iter().enumerate() {
+        let sig = &sigs[wi];
+        for (si, split) in splits.iter().enumerate() {
+            let run = &measured[wi][si].run;
+            for (channel, csig, matrix) in [
+                ("read", sig.read, run.counters.bank_matrix(Channel::Read)),
+                ("write", sig.write,
+                 run.counters.bank_matrix(Channel::Write)),
+                ("combined", sig.combined, combined_matrix(&run.counters)),
+            ] {
+                queries.push(CounterQuery {
+                    sig: csig,
+                    threads: [
+                        split.threads_per_socket[0],
+                        split.threads_per_socket[1],
+                    ],
+                    cpu_totals: cpu_totals(&matrix),
+                });
+                query_meta.push((wi, si, channel, matrix));
+            }
+        }
+    }
+    let predictions = svc.predict_counters(&queries)?;
+
+    let mut records = Vec::new();
+    for ((wi, si, channel, matrix), pred) in
+        query_meta.into_iter().zip(predictions)
+    {
+        let run = &measured[wi][si];
+        // Error denominator: the run's total traffic on the channel being
+        // predicted (the paper fits and scores read and write signatures
+        // separately; "total bandwidth" is that channel's total).
+        let grand = matrix
+            .iter()
+            .map(|b| b[0] + b[1])
+            .sum::<f64>()
+            .max(1e-9);
+        for bank in 0..2 {
+            for (kind, k) in [("local", 0), ("remote", 1)] {
+                let m = matrix[bank][k];
+                let p = pred[bank][k];
+                records.push(ErrorRecord {
+                    workload: workloads[wi].name.clone(),
+                    split: [
+                        splits[si].threads_per_socket[0],
+                        splits[si].threads_per_socket[1],
+                    ],
+                    channel,
+                    bank,
+                    kind,
+                    measured: m,
+                    predicted: p,
+                    err_pct: 100.0 * (m - p).abs() / grand,
+                    run_bandwidth: run.run.counters.bandwidth(),
+                });
+            }
+        }
+    }
+
+    Ok(Evaluation {
+        machine: sim.machine.name.clone(),
+        signatures: workloads
+            .iter()
+            .zip(sigs)
+            .map(|(w, s)| (w.name.clone(), s))
+            .collect(),
+        records,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::SimConfig;
+    use crate::topology::MachineTopology;
+    use crate::util::stats::Cdf;
+    use crate::workloads::suite;
+
+    /// `cg` with its real-world messiness stripped: tests the *model*, not
+    /// the testbed realism.
+    fn ideal_cg() -> crate::workloads::WorkloadSpec {
+        let mut w = suite::by_name("cg").unwrap();
+        w.irregularity = 0.0;
+        w.placement_drift = 0.0;
+        w
+    }
+
+    #[test]
+    fn conforming_workload_predicts_accurately() {
+        // Noise-free, model-conforming workload → near-zero error.
+        let sim = Simulator::new(MachineTopology::xeon_e5_2630_v3(),
+                                 SimConfig::noiseless());
+        let svc = PredictionService::reference();
+        let ev = evaluate_suite(&sim, &svc, &[ideal_cg()], None).unwrap();
+        assert!(!ev.records.is_empty());
+        let cdf = Cdf::of(&ev.errors());
+        assert!(cdf.median() < 1.0,
+                "median error {}% should be tiny", cdf.median());
+    }
+
+    #[test]
+    fn pagerank_misfits_worse_than_conforming() {
+        let sim = Simulator::new(MachineTopology::xeon_e5_2630_v3(),
+                                 SimConfig::noiseless());
+        let svc = PredictionService::reference();
+        let ws = vec![ideal_cg(), suite::by_name("pagerank").unwrap()];
+        let ev = evaluate_suite(&sim, &svc, &ws, None).unwrap();
+        let cg = Cdf::of(&ev.errors_for("cg")).quantile(0.9);
+        let pr = Cdf::of(&ev.errors_for("pagerank")).quantile(0.9);
+        assert!(pr > cg * 2.0, "pagerank p90={pr} cg p90={cg}");
+        // And the misfit detector flags it (§6.2.1).
+        let sig = ev.signature("pagerank").unwrap();
+        assert!(sig.read.misfit > ev.signature("cg").unwrap().read.misfit);
+    }
+
+    #[test]
+    fn point_count_scales_with_splits_and_channels() {
+        let sim = Simulator::new(MachineTopology::xeon_e5_2630_v3(),
+                                 SimConfig::noiseless());
+        let svc = PredictionService::reference();
+        let ws = vec![suite::by_name("ft").unwrap()];
+        let ev = evaluate_suite(&sim, &svc, &ws, Some(8)).unwrap();
+        // 9 splits × 3 channels × 2 banks × 2 kinds = 108.
+        assert_eq!(ev.records.len(), 108);
+    }
+}

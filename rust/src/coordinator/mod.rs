@@ -1,0 +1,20 @@
+//! Layer-3 coordination: profiling orchestration, batched prediction
+//! serving through the AOT HLO pipelines, signature persistence, and the
+//! paper's evaluation sweeps.
+//!
+//! * [`pool`]     — scoped-thread worker pool.
+//! * [`profiler`] — §5.1 profiling-run orchestration.
+//! * [`service`]  — the prediction service (HLO or Rust-reference backend).
+//! * [`store`]    — persisted signature store.
+//! * [`evaluate`] — the §6.2.2 measured-vs-predicted sweep.
+
+pub mod evaluate;
+pub mod pool;
+pub mod profiler;
+pub mod service;
+pub mod store;
+
+pub use evaluate::{evaluate_suite, ErrorRecord, Evaluation};
+pub use profiler::{profile, profile_suite, ProfilePair};
+pub use service::{CounterQuery, FitRequest, PerfQuery, PredictionService};
+pub use store::SignatureStore;

@@ -1,0 +1,96 @@
+//! Minimal worker pool over `std::thread::scope` (tokio is not in the
+//! offline vendor set, and the coordinator's parallelism is CPU-bound
+//! fan-out over independent simulator runs — scoped threads are the right
+//! tool anyway).
+
+/// Map `f` over `items` in parallel, preserving order.  Spawns at most
+/// `max_threads` workers (0 = available parallelism).
+pub fn parallel_map<T, R, F>(items: Vec<T>, max_threads: usize, f: F)
+    -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let hw = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4);
+    let workers = if max_threads == 0 { hw } else { max_threads }
+        .min(n)
+        .max(1);
+    if workers == 1 {
+        return items.into_iter().map(f).collect();
+    }
+
+    // Work-stealing by atomic index over a shared input vector.
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let next = AtomicUsize::new(0);
+    let inputs: Vec<std::sync::Mutex<Option<T>>> = items
+        .into_iter()
+        .map(|t| std::sync::Mutex::new(Some(t)))
+        .collect();
+    let outputs: Vec<std::sync::Mutex<Option<R>>> =
+        (0..n).map(|_| std::sync::Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = inputs[i].lock().unwrap().take().unwrap();
+                *outputs[i].lock().unwrap() = Some(f(item));
+            });
+        }
+    });
+
+    outputs
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().unwrap())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let out = parallel_map((0..100).collect(), 0, |x: i32| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn single_worker_path() {
+        let out = parallel_map(vec![1, 2, 3], 1, |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn actually_uses_multiple_threads() {
+        use std::sync::Mutex;
+        let ids: Mutex<Vec<String>> = Mutex::new(Vec::new());
+        let _ = parallel_map((0..64).collect::<Vec<i32>>(), 4, |x| {
+            ids.lock()
+                .unwrap()
+                .push(format!("{:?}", std::thread::current().id()));
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            x
+        });
+        let mut v = ids.into_inner().unwrap();
+        v.sort();
+        v.dedup();
+        assert!(v.len() > 1);
+    }
+}

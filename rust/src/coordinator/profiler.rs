@@ -1,0 +1,76 @@
+//! Profiling orchestration: runs the §5.1 symmetric + asymmetric pair for
+//! each workload on a simulated machine and hands the counter data to the
+//! fit.
+//!
+//! The paper's note applies here too: if a performance-prediction tool
+//! (Pandia) already does a symmetric measurement run, only the asymmetric
+//! run is additional — [`ProfilePair`] keeps the two runs separate so a
+//! caller can supply an existing symmetric run.
+
+use crate::counters::ProfiledRun;
+use crate::simulator::{Simulator, ThreadPlacement};
+use crate::workloads::WorkloadSpec;
+
+use super::pool::parallel_map;
+
+/// The §5.1 run pair for one workload.
+#[derive(Clone, Debug)]
+pub struct ProfilePair {
+    pub workload: String,
+    pub sym: ProfiledRun,
+    pub asym: ProfiledRun,
+}
+
+/// Run both profiling placements for one workload.
+pub fn profile(sim: &Simulator, workload: &WorkloadSpec) -> ProfilePair {
+    let total = ThreadPlacement::profiling_total(&sim.machine);
+    let sym_p = ThreadPlacement::symmetric(&sim.machine, total)
+        .expect("profiling_total guarantees a symmetric placement");
+    let asym_p = ThreadPlacement::asymmetric(&sim.machine, total)
+        .expect("profiling_total guarantees an asymmetric placement");
+    ProfilePair {
+        workload: workload.name.clone(),
+        sym: sim.run(workload, &sym_p).run,
+        asym: sim.run(workload, &asym_p).run,
+    }
+}
+
+/// Profile a whole suite in parallel.
+pub fn profile_suite(sim: &Simulator, workloads: &[WorkloadSpec])
+    -> Vec<ProfilePair> {
+    parallel_map(workloads.to_vec(), 0, |w| profile(sim, &w))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::SimConfig;
+    use crate::topology::MachineTopology;
+    use crate::workloads::suite;
+
+    #[test]
+    fn profile_pair_uses_distinct_placements() {
+        let sim = Simulator::new(MachineTopology::xeon_e5_2630_v3(),
+                                 SimConfig::noiseless());
+        let w = suite::by_name("cg").unwrap();
+        let pair = profile(&sim, &w);
+        assert_eq!(pair.sym.threads_per_socket[0],
+                   pair.sym.threads_per_socket[1]);
+        assert_ne!(pair.asym.threads_per_socket[0],
+                   pair.asym.threads_per_socket[1]);
+        assert_eq!(pair.sym.total_threads(), pair.asym.total_threads());
+        assert!(pair.sym.counters.grand_total() > 0.0);
+    }
+
+    #[test]
+    fn suite_profiling_covers_all_workloads() {
+        let sim = Simulator::new(MachineTopology::xeon_e5_2630_v3(),
+                                 SimConfig::noiseless());
+        let ws: Vec<_> = suite::table1().into_iter().take(4).collect();
+        let pairs = profile_suite(&sim, &ws);
+        assert_eq!(pairs.len(), 4);
+        for (p, w) in pairs.iter().zip(&ws) {
+            assert_eq!(p.workload, w.name);
+        }
+    }
+}

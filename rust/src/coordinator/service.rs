@@ -1,0 +1,447 @@
+//! The prediction service: batches model queries through the AOT-compiled
+//! HLO pipelines (the request-path hot loop — Python is never involved).
+//!
+//! Falls back to the Rust reference model when constructed without a PJRT
+//! engine (`PredictionService::reference()`), so every caller works in
+//! both modes and the two paths can be compared (see `tests/hlo_parity.rs`).
+
+use anyhow::Result;
+
+use crate::counters::{Channel, ProfiledRun};
+use crate::model::signature::{BandwidthSignature, ChannelSignature};
+use crate::model::{apply, fit};
+use crate::runtime::{batches, Batch, Engine, Tensor};
+
+/// One §5 fit request: the two profiling runs.
+#[derive(Clone, Debug)]
+pub struct FitRequest {
+    pub sym: ProfiledRun,
+    pub asym: ProfiledRun,
+}
+
+/// One §6.2.2 counter-prediction query.
+#[derive(Clone, Debug)]
+pub struct CounterQuery {
+    pub sig: ChannelSignature,
+    pub threads: [usize; 2],
+    /// Total traffic issued by each socket's threads (bytes).
+    pub cpu_totals: [f64; 2],
+}
+
+/// One Fig-1-style performance query.
+#[derive(Clone, Debug)]
+pub struct PerfQuery {
+    pub sig: ChannelSignature,
+    pub threads: [usize; 2],
+    /// Per-thread full-speed (read, write) demand, bytes/s.
+    pub demand_pt: [f64; 2],
+    /// Resource capacities (layout per `topology` / Python model).
+    pub caps: [f64; 8],
+}
+
+enum Backend {
+    Hlo(Engine),
+    Reference,
+}
+
+pub struct PredictionService {
+    backend: Backend,
+}
+
+impl PredictionService {
+    /// Serve through the compiled HLO artifacts.
+    pub fn hlo(engine: Engine) -> PredictionService {
+        PredictionService {
+            backend: Backend::Hlo(engine),
+        }
+    }
+
+    /// Serve through the Rust reference model (no PJRT).
+    pub fn reference() -> PredictionService {
+        PredictionService {
+            backend: Backend::Reference,
+        }
+    }
+
+    /// Try HLO, fall back to reference with a warning.
+    pub fn auto() -> PredictionService {
+        match Engine::from_env() {
+            Ok(engine) => PredictionService::hlo(engine),
+            Err(e) => {
+                eprintln!(
+                    "numabw: PJRT engine unavailable ({e}); using the Rust \
+                     reference model"
+                );
+                PredictionService::reference()
+            }
+        }
+    }
+
+    pub fn is_hlo(&self) -> bool {
+        matches!(self.backend, Backend::Hlo(_))
+    }
+
+    // ---- fitting -----------------------------------------------------------
+
+    /// Fit full signatures for a batch of run pairs.
+    pub fn fit(&self, reqs: &[FitRequest]) -> Result<Vec<BandwidthSignature>> {
+        match &self.backend {
+            Backend::Reference => Ok(reqs
+                .iter()
+                .map(|r| fit::fit_run_pair(&r.sym, &r.asym))
+                .collect()),
+            Backend::Hlo(engine) => self.fit_hlo(engine, reqs),
+        }
+    }
+
+    fn fit_hlo(&self, engine: &Engine, reqs: &[FitRequest])
+        -> Result<Vec<BandwidthSignature>> {
+        // 3 rows per request: read, write, combined.
+        #[derive(Clone, Copy)]
+        enum Row {
+            Ch(Channel),
+            Combined,
+        }
+        let rows: Vec<(usize, Row)> = reqs
+            .iter()
+            .enumerate()
+            .flat_map(|(i, _)| {
+                [
+                    (i, Row::Ch(Channel::Read)),
+                    (i, Row::Ch(Channel::Write)),
+                    (i, Row::Combined),
+                ]
+            })
+            .collect();
+
+        let counts_row = |run: &ProfiledRun, row: Row| -> Vec<f32> {
+            let m = match row {
+                Row::Ch(ch) => run.counters.bank_matrix(ch),
+                Row::Combined => {
+                    let r = run.counters.bank_matrix(Channel::Read);
+                    let w = run.counters.bank_matrix(Channel::Write);
+                    r.iter()
+                        .zip(&w)
+                        .map(|(a, b)| [a[0] + b[0], a[1] + b[1]])
+                        .collect()
+                }
+            };
+            m.iter().flat_map(|b| [b[0] as f32, b[1] as f32]).collect()
+        };
+        let rates_row = |run: &ProfiledRun| -> Vec<f32> {
+            run.thread_rates().iter().map(|&r| r as f32).collect()
+        };
+
+        let cap = engine.batch();
+        let mut out: Vec<Option<ChannelSignature>> = vec![None; rows.len()];
+        for (start, len) in batches(rows.len(), cap) {
+            let chunk = &rows[start..start + len];
+            let b = Batch::new(len, cap);
+            let sym_c = b.pack(
+                &chunk
+                    .iter()
+                    .map(|&(i, row)| counts_row(&reqs[i].sym, row))
+                    .collect::<Vec<_>>(),
+                &[2, 2],
+            );
+            let sym_r = b.pack(
+                &chunk
+                    .iter()
+                    .map(|&(i, _)| rates_row(&reqs[i].sym))
+                    .collect::<Vec<_>>(),
+                &[2],
+            );
+            let asym_c = b.pack(
+                &chunk
+                    .iter()
+                    .map(|&(i, row)| counts_row(&reqs[i].asym, row))
+                    .collect::<Vec<_>>(),
+                &[2, 2],
+            );
+            let asym_r = b.pack(
+                &chunk
+                    .iter()
+                    .map(|&(i, _)| rates_row(&reqs[i].asym))
+                    .collect::<Vec<_>>(),
+                &[2],
+            );
+            let thr = b.pack(
+                &chunk
+                    .iter()
+                    .map(|&(i, _)| {
+                        reqs[i]
+                            .asym
+                            .threads_per_socket
+                            .iter()
+                            .map(|&t| t as f32)
+                            .collect()
+                    })
+                    .collect::<Vec<_>>(),
+                &[2],
+            );
+            let result = engine
+                .execute("fit_signature", &[sym_c, sym_r, asym_c, asym_r,
+                                            thr])?;
+            let fracs = b.unpack(&result[0]);
+            let onehot = b.unpack(&result[1]);
+            let misfit = b.unpack(&result[2]);
+            for (j, _) in chunk.iter().enumerate() {
+                let f = &fracs[j];
+                let sock = if onehot[j][0] >= onehot[j][1] { 0 } else { 1 };
+                out[start + j] = Some(ChannelSignature {
+                    static_frac: f[0] as f64,
+                    local_frac: f[1] as f64,
+                    perthread_frac: f[2] as f64,
+                    static_socket: sock,
+                    misfit: misfit[j][0] as f64,
+                });
+            }
+        }
+
+        Ok(reqs
+            .iter()
+            .enumerate()
+            .map(|(i, r)| BandwidthSignature {
+                read: out[3 * i].unwrap(),
+                write: out[3 * i + 1].unwrap(),
+                combined: out[3 * i + 2].unwrap(),
+                read_bytes: r.sym.counters.channel_total(Channel::Read),
+                write_bytes: r.sym.counters.channel_total(Channel::Write),
+            })
+            .collect())
+    }
+
+    // ---- counter prediction -------------------------------------------------
+
+    /// Predict per-bank `(local, remote)` bytes for each query.
+    pub fn predict_counters(&self, queries: &[CounterQuery])
+        -> Result<Vec<Vec<[f64; 2]>>> {
+        match &self.backend {
+            Backend::Reference => Ok(queries
+                .iter()
+                .map(|q| {
+                    apply::predict_counters(&q.sig, &q.threads,
+                                            &q.cpu_totals)
+                })
+                .collect()),
+            Backend::Hlo(engine) => {
+                let cap = engine.batch();
+                let mut out = Vec::with_capacity(queries.len());
+                for (start, len) in batches(queries.len(), cap) {
+                    let chunk = &queries[start..start + len];
+                    let b = Batch::new(len, cap);
+                    let tensors =
+                        Self::pack_counter_queries(&b, chunk);
+                    let result =
+                        engine.execute("predict_counters", &tensors)?;
+                    for row in b.unpack(&result[0]) {
+                        out.push(vec![
+                            [row[0] as f64, row[1] as f64],
+                            [row[2] as f64, row[3] as f64],
+                        ]);
+                    }
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    fn pack_counter_queries(b: &Batch, chunk: &[CounterQuery])
+        -> Vec<Tensor> {
+        let fracs = b.pack(
+            &chunk
+                .iter()
+                .map(|q| {
+                    vec![
+                        q.sig.static_frac as f32,
+                        q.sig.local_frac as f32,
+                        q.sig.perthread_frac as f32,
+                    ]
+                })
+                .collect::<Vec<_>>(),
+            &[3],
+        );
+        let onehot = b.pack(
+            &chunk
+                .iter()
+                .map(|q| {
+                    let mut v = vec![0.0f32; 2];
+                    v[q.sig.static_socket] = 1.0;
+                    v
+                })
+                .collect::<Vec<_>>(),
+            &[2],
+        );
+        let threads = b.pack(
+            &chunk
+                .iter()
+                .map(|q| vec![q.threads[0] as f32, q.threads[1] as f32])
+                .collect::<Vec<_>>(),
+            &[2],
+        );
+        let totals = b.pack(
+            &chunk
+                .iter()
+                .map(|q| {
+                    vec![q.cpu_totals[0] as f32, q.cpu_totals[1] as f32]
+                })
+                .collect::<Vec<_>>(),
+            &[2],
+        );
+        vec![fracs, onehot, threads, totals]
+    }
+
+    // ---- performance prediction ----------------------------------------------
+
+    /// Max-min achieved bytes/s per flow (layout: `src*4 + dst*2 + rw`).
+    pub fn predict_performance(&self, queries: &[PerfQuery])
+        -> Result<Vec<Vec<f64>>> {
+        match &self.backend {
+            Backend::Reference => Ok(queries
+                .iter()
+                .map(Self::perf_reference)
+                .collect()),
+            Backend::Hlo(engine) => {
+                let cap = engine.batch();
+                let mut out = Vec::with_capacity(queries.len());
+                for (start, len) in batches(queries.len(), cap) {
+                    let chunk = &queries[start..start + len];
+                    let b = Batch::new(len, cap);
+                    let mut tensors = Self::pack_counter_queries(
+                        &b,
+                        &chunk
+                            .iter()
+                            .map(|q| CounterQuery {
+                                sig: q.sig,
+                                threads: q.threads,
+                                cpu_totals: [0.0, 0.0],
+                            })
+                            .collect::<Vec<_>>(),
+                    );
+                    tensors.pop(); // drop cpu_totals
+                    tensors.push(b.pack(
+                        &chunk
+                            .iter()
+                            .map(|q| {
+                                vec![q.demand_pt[0] as f32,
+                                     q.demand_pt[1] as f32]
+                            })
+                            .collect::<Vec<_>>(),
+                        &[2],
+                    ));
+                    tensors.push(b.pack(
+                        &chunk
+                            .iter()
+                            .map(|q| {
+                                q.caps.iter().map(|&c| c as f32).collect()
+                            })
+                            .collect::<Vec<_>>(),
+                        &[8],
+                    ));
+                    let result =
+                        engine.execute("predict_performance", &tensors)?;
+                    for row in b.unpack(&result[0]) {
+                        out.push(row.iter().map(|&v| v as f64).collect());
+                    }
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Reference twin of the `predict_performance` pipeline.
+    fn perf_reference(q: &PerfQuery) -> Vec<f64> {
+        use crate::simulator::contention::{maxmin, Flow};
+        let m = apply::apply(&q.sig, &q.threads);
+        let mut flows = Vec::with_capacity(8);
+        for src in 0..2 {
+            for dst in 0..2 {
+                for rw in 0..2 {
+                    let demand = q.threads[src] as f64
+                        * m[src][dst]
+                        * q.demand_pt[rw];
+                    // Resource layout mirrors model.py build_incidence.
+                    let mut rs = vec![if rw == 0 { dst } else { 2 + dst }];
+                    if src != dst {
+                        rs.push(if rw == 0 {
+                            4 + if dst == 0 { 0 } else { 1 }
+                        } else {
+                            6 + if src == 0 { 0 } else { 1 }
+                        });
+                    }
+                    flows.push(Flow::new(demand, &rs));
+                }
+            }
+        }
+        maxmin(&flows, &q.caps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::counters::CounterSnapshot;
+    use crate::model::signature::ChannelSignature;
+
+    fn run_with(sig: &ChannelSignature, tps: &[usize]) -> ProfiledRun {
+        let m = apply::apply(sig, tps);
+        let mut c = CounterSnapshot::new(2);
+        for (src, &n) in tps.iter().enumerate() {
+            for dst in 0..2 {
+                let bytes = m[src][dst] * n as f64 * 1e9;
+                c.record_traffic(src, dst, Channel::Read, bytes);
+                c.record_traffic(src, dst, Channel::Write, bytes * 0.5);
+            }
+            c.sockets[src].instructions = n as f64 * 1e9;
+        }
+        c.elapsed_s = 1.0;
+        ProfiledRun {
+            counters: c,
+            threads_per_socket: tps.to_vec(),
+        }
+    }
+
+    #[test]
+    fn reference_fit_roundtrip() {
+        let truth = ChannelSignature::new(0.2, 0.35, 0.3, 1);
+        let svc = PredictionService::reference();
+        let req = FitRequest {
+            sym: run_with(&truth, &[2, 2]),
+            asym: run_with(&truth, &[3, 1]),
+        };
+        let sigs = svc.fit(&[req]).unwrap();
+        assert!((sigs[0].read.static_frac - 0.2).abs() < 1e-9);
+        assert!((sigs[0].write.local_frac - 0.35).abs() < 1e-9);
+        assert!((sigs[0].combined.perthread_frac - 0.3).abs() < 1e-9);
+        assert!((sigs[0].read_share() - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reference_counter_prediction_matches_apply() {
+        let sig = ChannelSignature::new(0.2, 0.35, 0.3, 1);
+        let svc = PredictionService::reference();
+        let q = CounterQuery {
+            sig,
+            threads: [3, 1],
+            cpu_totals: [3.0, 1.0],
+        };
+        let pred = svc.predict_counters(&[q]).unwrap();
+        assert!((pred[0][0][0] - 1.95).abs() < 1e-9);
+        assert!((pred[0][1][1] - 1.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reference_perf_prediction_respects_caps() {
+        let svc = PredictionService::reference();
+        let q = PerfQuery {
+            sig: ChannelSignature::new(1.0, 0.0, 0.0, 0),
+            threads: [4, 4],
+            demand_pt: [10.0, 0.0],
+            caps: [40.0, 40.0, 40.0, 40.0, 6.4, 6.4, 9.2, 9.2],
+        };
+        let alloc = svc.predict_performance(&[q]).unwrap();
+        let total: f64 = alloc[0].iter().sum();
+        // Same scenario as the python test: channel 0 caps the total at 40.
+        assert!((total - 40.0).abs() < 1e-6, "{alloc:?}");
+    }
+}

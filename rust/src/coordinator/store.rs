@@ -1,0 +1,158 @@
+//! Signature store: persisted map from (machine, workload) to fitted
+//! bandwidth signatures, so profiling runs once and predictions are served
+//! from the store afterwards (the Pandia / Smart Arrays integration point).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::model::signature::BandwidthSignature;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, Default)]
+pub struct SignatureStore {
+    /// machine name → workload name → signature.
+    entries: BTreeMap<String, BTreeMap<String, BandwidthSignature>>,
+}
+
+impl SignatureStore {
+    pub fn new() -> SignatureStore {
+        SignatureStore::default()
+    }
+
+    pub fn insert(&mut self, machine: &str, workload: &str,
+                  sig: BandwidthSignature) {
+        self.entries
+            .entry(machine.to_string())
+            .or_default()
+            .insert(workload.to_string(), sig);
+    }
+
+    pub fn get(&self, machine: &str, workload: &str)
+        -> Option<&BandwidthSignature> {
+        self.entries.get(machine)?.get(workload)
+    }
+
+    pub fn machines(&self) -> Vec<&str> {
+        self.entries.keys().map(String::as_str).collect()
+    }
+
+    pub fn workloads(&self, machine: &str) -> Vec<&str> {
+        self.entries
+            .get(machine)
+            .map(|m| m.keys().map(String::as_str).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.values().map(BTreeMap::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.entries
+                .iter()
+                .map(|(m, ws)| {
+                    (
+                        m.clone(),
+                        Json::Obj(
+                            ws.iter()
+                                .map(|(w, s)| (w.clone(), s.to_json()))
+                                .collect(),
+                        ),
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Result<SignatureStore> {
+        let mut store = SignatureStore::new();
+        let top = match j {
+            Json::Obj(m) => m,
+            _ => return Err(anyhow!("store: expected object")),
+        };
+        for (machine, ws) in top {
+            let ws = match ws {
+                Json::Obj(m) => m,
+                _ => return Err(anyhow!("store: expected object for {machine}")),
+            };
+            for (workload, sig) in ws {
+                store.insert(
+                    machine,
+                    workload,
+                    BandwidthSignature::from_json(sig)
+                        .map_err(|e| anyhow!("store {machine}/{workload}: {e}"))?,
+                );
+            }
+        }
+        Ok(store)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().encode())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<SignatureStore> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json(&Json::parse(&text).map_err(|e| anyhow!("{e}"))?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::signature::ChannelSignature;
+
+    fn sig() -> BandwidthSignature {
+        BandwidthSignature {
+            read: ChannelSignature::new(0.2, 0.35, 0.3, 1),
+            write: ChannelSignature::new(0.1, 0.5, 0.2, 0),
+            combined: ChannelSignature::new(0.15, 0.4, 0.25, 1),
+            read_bytes: 1e9,
+            write_bytes: 5e8,
+        }
+    }
+
+    #[test]
+    fn insert_get() {
+        let mut s = SignatureStore::new();
+        s.insert("xeon18", "cg", sig());
+        assert!(s.get("xeon18", "cg").is_some());
+        assert!(s.get("xeon18", "ft").is_none());
+        assert!(s.get("xeon8", "cg").is_none());
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut s = SignatureStore::new();
+        s.insert("xeon18", "cg", sig());
+        s.insert("xeon18", "ft", sig());
+        s.insert("xeon8", "cg", sig());
+        let back = SignatureStore::from_json(&s.to_json()).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back.get("xeon18", "cg"), s.get("xeon18", "cg"));
+        assert_eq!(back.machines(), vec!["xeon18", "xeon8"]);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut s = SignatureStore::new();
+        s.insert("m", "w", sig());
+        let dir = std::env::temp_dir().join("numabw-store-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sigs.json");
+        s.save(&path).unwrap();
+        let back = SignatureStore::load(&path).unwrap();
+        assert_eq!(back.get("m", "w"), s.get("m", "w"));
+        std::fs::remove_file(path).ok();
+    }
+}

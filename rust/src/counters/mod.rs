@@ -1,0 +1,416 @@
+//! Performance-counter model (paper §2.1).
+//!
+//! The counters mirror what Intel's uncore counters report through PCM:
+//! for every **memory bank**, the volume of data moved by the local socket
+//! and by remote sockets, split into reads and writes; for every **socket**,
+//! instructions executed; plus wall-clock time.
+//!
+//! Crucially (paper §2.1, Fig 3): *local* and *remote* are defined from the
+//! **memory bank's perspective**, not the CPU's.  Data a CPU on socket 0
+//! reads from bank 1 shows up as a *remote read at bank 1* — not anywhere
+//! on bank 0.
+//!
+//! Per §2.1.1 we deliberately do not model QPI traffic counters (too noisy
+//! to use — the simulator injects that noise into the link *capacity*
+//! instead) and we expose instructions + elapsed time rather than IPC
+//! (frequency scaling makes IPC misleading).
+
+use crate::util::json::Json;
+
+/// Read/write channel selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Channel {
+    Read,
+    Write,
+}
+
+impl Channel {
+    pub const BOTH: [Channel; 2] = [Channel::Read, Channel::Write];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Channel::Read => "read",
+            Channel::Write => "write",
+        }
+    }
+}
+
+/// Byte counters at one memory bank (the bank's perspective).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BankCounters {
+    pub local_read: f64,
+    pub remote_read: f64,
+    pub local_write: f64,
+    pub remote_write: f64,
+}
+
+impl BankCounters {
+    pub fn local(&self, ch: Channel) -> f64 {
+        match ch {
+            Channel::Read => self.local_read,
+            Channel::Write => self.local_write,
+        }
+    }
+
+    pub fn remote(&self, ch: Channel) -> f64 {
+        match ch {
+            Channel::Read => self.remote_read,
+            Channel::Write => self.remote_write,
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.local_read + self.remote_read + self.local_write
+            + self.remote_write
+    }
+
+    pub fn add_local(&mut self, ch: Channel, bytes: f64) {
+        match ch {
+            Channel::Read => self.local_read += bytes,
+            Channel::Write => self.local_write += bytes,
+        }
+    }
+
+    pub fn add_remote(&mut self, ch: Channel, bytes: f64) {
+        match ch {
+            Channel::Read => self.remote_read += bytes,
+            Channel::Write => self.remote_write += bytes,
+        }
+    }
+}
+
+/// Per-socket execution counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SocketCounters {
+    /// Instructions executed by threads pinned to this socket.
+    pub instructions: f64,
+}
+
+/// A full counter snapshot (or delta between two snapshots).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CounterSnapshot {
+    pub banks: Vec<BankCounters>,
+    pub sockets: Vec<SocketCounters>,
+    /// Wall-clock seconds covered by this snapshot/delta.
+    pub elapsed_s: f64,
+}
+
+impl CounterSnapshot {
+    pub fn new(sockets: usize) -> CounterSnapshot {
+        CounterSnapshot {
+            banks: vec![BankCounters::default(); sockets],
+            sockets: vec![SocketCounters::default(); sockets],
+            elapsed_s: 0.0,
+        }
+    }
+
+    pub fn n_sockets(&self) -> usize {
+        self.banks.len()
+    }
+
+    /// Record `bytes` moved between a CPU on `src` and the bank at `dst`.
+    pub fn record_traffic(&mut self, src: usize, dst: usize, ch: Channel,
+                          bytes: f64) {
+        if src == dst {
+            self.banks[dst].add_local(ch, bytes);
+        } else {
+            self.banks[dst].add_remote(ch, bytes);
+        }
+    }
+
+    /// Delta `self - earlier` (both must cover the same machine).
+    pub fn delta(&self, earlier: &CounterSnapshot) -> CounterSnapshot {
+        assert_eq!(self.n_sockets(), earlier.n_sockets());
+        CounterSnapshot {
+            banks: self
+                .banks
+                .iter()
+                .zip(&earlier.banks)
+                .map(|(a, b)| BankCounters {
+                    local_read: a.local_read - b.local_read,
+                    remote_read: a.remote_read - b.remote_read,
+                    local_write: a.local_write - b.local_write,
+                    remote_write: a.remote_write - b.remote_write,
+                })
+                .collect(),
+            sockets: self
+                .sockets
+                .iter()
+                .zip(&earlier.sockets)
+                .map(|(a, b)| SocketCounters {
+                    instructions: a.instructions - b.instructions,
+                })
+                .collect(),
+            elapsed_s: self.elapsed_s - earlier.elapsed_s,
+        }
+    }
+
+    /// Total bytes moved on a channel, all banks.
+    pub fn channel_total(&self, ch: Channel) -> f64 {
+        self.banks
+            .iter()
+            .map(|b| b.local(ch) + b.remote(ch))
+            .sum()
+    }
+
+    /// Total bytes moved, both channels.
+    pub fn grand_total(&self) -> f64 {
+        self.banks.iter().map(BankCounters::total).sum()
+    }
+
+    /// Aggregate bandwidth (bytes/s) over the covered interval.
+    pub fn bandwidth(&self) -> f64 {
+        if self.elapsed_s > 0.0 {
+            self.grand_total() / self.elapsed_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Per-bank (local, remote) byte matrix for one channel — the exact
+    /// input shape of the §5 fitting pipeline.
+    pub fn bank_matrix(&self, ch: Channel) -> Vec<[f64; 2]> {
+        self.banks
+            .iter()
+            .map(|b| [b.local(ch), b.remote(ch)])
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs([
+            (
+                "banks",
+                Json::Arr(
+                    self.banks
+                        .iter()
+                        .map(|b| {
+                            Json::from_pairs([
+                                ("local_read", Json::Num(b.local_read)),
+                                ("remote_read", Json::Num(b.remote_read)),
+                                ("local_write", Json::Num(b.local_write)),
+                                ("remote_write", Json::Num(b.remote_write)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "instructions",
+                Json::from_f64_slice(
+                    &self
+                        .sockets
+                        .iter()
+                        .map(|s| s.instructions)
+                        .collect::<Vec<_>>(),
+                ),
+            ),
+            ("elapsed_s", Json::Num(self.elapsed_s)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<CounterSnapshot, String> {
+        let banks = j
+            .get("banks")
+            .and_then(Json::as_arr)
+            .ok_or("counters: missing banks")?
+            .iter()
+            .map(|b| {
+                let f = |k: &str| {
+                    b.get(k)
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| format!("counters: missing {k}"))
+                };
+                Ok(BankCounters {
+                    local_read: f("local_read")?,
+                    remote_read: f("remote_read")?,
+                    local_write: f("local_write")?,
+                    remote_write: f("remote_write")?,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        let instr = j
+            .get("instructions")
+            .and_then(Json::as_f64_vec)
+            .ok_or("counters: missing instructions")?;
+        if instr.len() != banks.len() {
+            return Err("counters: socket/bank count mismatch".into());
+        }
+        Ok(CounterSnapshot {
+            banks,
+            sockets: instr
+                .into_iter()
+                .map(|instructions| SocketCounters { instructions })
+                .collect(),
+            elapsed_s: j
+                .get("elapsed_s")
+                .and_then(Json::as_f64)
+                .ok_or("counters: missing elapsed_s")?,
+        })
+    }
+}
+
+/// Counter data from one profiling run, paired with the placement that
+/// produced it — everything the §5 fit consumes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProfiledRun {
+    pub counters: CounterSnapshot,
+    /// Threads pinned per socket during the run.
+    pub threads_per_socket: Vec<usize>,
+}
+
+impl ProfiledRun {
+    /// Average per-thread instruction rate on socket `s` (instr/s/thread):
+    /// the §5.2 normalization denominator.  Sockets with no threads report
+    /// zero.
+    pub fn thread_rate(&self, s: usize) -> f64 {
+        let n = self.threads_per_socket[s];
+        if n == 0 || self.counters.elapsed_s <= 0.0 {
+            return 0.0;
+        }
+        self.counters.sockets[s].instructions
+            / (self.counters.elapsed_s * n as f64)
+    }
+
+    pub fn thread_rates(&self) -> Vec<f64> {
+        (0..self.counters.n_sockets())
+            .map(|s| self.thread_rate(s))
+            .collect()
+    }
+
+    pub fn total_threads(&self) -> usize {
+        self.threads_per_socket.iter().sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs([
+            ("counters", self.counters.to_json()),
+            (
+                "threads_per_socket",
+                Json::from_f64_slice(
+                    &self
+                        .threads_per_socket
+                        .iter()
+                        .map(|&t| t as f64)
+                        .collect::<Vec<_>>(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ProfiledRun, String> {
+        Ok(ProfiledRun {
+            counters: CounterSnapshot::from_json(
+                j.get("counters").ok_or("run: missing counters")?,
+            )?,
+            threads_per_socket: j
+                .get("threads_per_socket")
+                .and_then(Json::as_f64_vec)
+                .ok_or("run: missing threads_per_socket")?
+                .into_iter()
+                .map(|t| t as usize)
+                .collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bank_perspective_attribution() {
+        // Paper §2.1's example: 2 threads on CPU1, 1 on CPU2, all sending
+        // half their accesses to each bank at equal speed.  From the banks'
+        // view, bank 0 sees 2/3 local and bank 1 sees 1/3 local.
+        let mut c = CounterSnapshot::new(2);
+        // CPU 0's two threads: 1 byte to each bank each.
+        c.record_traffic(0, 0, Channel::Read, 2.0);
+        c.record_traffic(0, 1, Channel::Read, 2.0);
+        // CPU 1's one thread.
+        c.record_traffic(1, 0, Channel::Read, 1.0);
+        c.record_traffic(1, 1, Channel::Read, 1.0);
+        let b0 = c.banks[0];
+        let b1 = c.banks[1];
+        assert_eq!(b0.local_read / (b0.local_read + b0.remote_read),
+                   2.0 / 3.0);
+        assert_eq!(b1.local_read / (b1.local_read + b1.remote_read),
+                   1.0 / 3.0);
+    }
+
+    #[test]
+    fn delta_subtracts_fieldwise() {
+        let mut a = CounterSnapshot::new(2);
+        a.record_traffic(0, 0, Channel::Write, 10.0);
+        a.sockets[0].instructions = 100.0;
+        a.elapsed_s = 2.0;
+        let mut b = a.clone();
+        b.record_traffic(0, 0, Channel::Write, 5.0);
+        b.record_traffic(0, 1, Channel::Read, 7.0);
+        b.sockets[0].instructions = 130.0;
+        b.elapsed_s = 3.0;
+        let d = b.delta(&a);
+        assert_eq!(d.banks[0].local_write, 5.0);
+        assert_eq!(d.banks[1].remote_read, 7.0);
+        assert_eq!(d.sockets[0].instructions, 30.0);
+        assert_eq!(d.elapsed_s, 1.0);
+    }
+
+    #[test]
+    fn totals_and_bandwidth() {
+        let mut c = CounterSnapshot::new(2);
+        c.record_traffic(0, 0, Channel::Read, 6.0);
+        c.record_traffic(1, 0, Channel::Write, 4.0);
+        c.elapsed_s = 2.0;
+        assert_eq!(c.channel_total(Channel::Read), 6.0);
+        assert_eq!(c.channel_total(Channel::Write), 4.0);
+        assert_eq!(c.grand_total(), 10.0);
+        assert_eq!(c.bandwidth(), 5.0);
+    }
+
+    #[test]
+    fn bank_matrix_shape() {
+        let mut c = CounterSnapshot::new(2);
+        c.record_traffic(0, 1, Channel::Read, 3.0);
+        let m = c.bank_matrix(Channel::Read);
+        assert_eq!(m, vec![[0.0, 0.0], [0.0, 3.0]]);
+    }
+
+    #[test]
+    fn thread_rate_normalizes_by_thread_count() {
+        let mut c = CounterSnapshot::new(2);
+        c.sockets[0].instructions = 300.0;
+        c.sockets[1].instructions = 100.0;
+        c.elapsed_s = 10.0;
+        let run = ProfiledRun {
+            counters: c,
+            threads_per_socket: vec![3, 1],
+        };
+        // Same per-thread rate despite 3× socket-level difference (§5.2).
+        assert_eq!(run.thread_rate(0), 10.0);
+        assert_eq!(run.thread_rate(1), 10.0);
+    }
+
+    #[test]
+    fn thread_rate_zero_for_empty_socket() {
+        let run = ProfiledRun {
+            counters: CounterSnapshot::new(2),
+            threads_per_socket: vec![4, 0],
+        };
+        assert_eq!(run.thread_rate(1), 0.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = CounterSnapshot::new(2);
+        c.record_traffic(0, 1, Channel::Read, 1.5);
+        c.record_traffic(1, 1, Channel::Write, 2.5);
+        c.sockets[1].instructions = 42.0;
+        c.elapsed_s = 0.25;
+        let run = ProfiledRun {
+            counters: c,
+            threads_per_socket: vec![2, 2],
+        };
+        let back = ProfiledRun::from_json(&run.to_json()).unwrap();
+        assert_eq!(run, back);
+    }
+}

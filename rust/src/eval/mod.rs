@@ -1,0 +1,170 @@
+//! Evaluation aggregations: the numbers behind each figure.
+//!
+//! * Fig 14/15 — signature stability between machines.
+//! * Fig 17    — error CDF over all measurements (headline: median 2.34 %).
+//! * Fig 18    — per-benchmark average error vs average bandwidth.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::Evaluation;
+use crate::model::signature::BandwidthSignature;
+use crate::util::stats::{Cdf, Summary};
+
+/// Fig 14 row: per-benchmark signature change between two machines.
+#[derive(Clone, Debug)]
+pub struct StabilityRow {
+    pub workload: String,
+    /// % of read bandwidth reallocated between the two fitted signatures.
+    pub read_change_pct: f64,
+    pub write_change_pct: f64,
+    /// Change of the combined-channel signature — the robust metric the
+    /// paper uses to defuse the equake-writes outlier.
+    pub combined_change_pct: f64,
+}
+
+/// Compare fitted signatures across two machines (Fig 14 / Fig 15).
+pub fn stability(a: &Evaluation, b: &Evaluation, sockets: usize)
+    -> Vec<StabilityRow> {
+    let index: BTreeMap<&str, &BandwidthSignature> = b
+        .signatures
+        .iter()
+        .map(|(n, s)| (n.as_str(), s))
+        .collect();
+    a.signatures
+        .iter()
+        .filter_map(|(name, sa)| {
+            let sb = index.get(name.as_str())?;
+            Some(StabilityRow {
+                workload: name.clone(),
+                read_change_pct: 100.0
+                    * sa.read.reallocation(&sb.read, sockets),
+                write_change_pct: 100.0
+                    * sa.write.reallocation(&sb.write, sockets),
+                combined_change_pct: 100.0
+                    * sa.combined.reallocation(&sb.combined, sockets),
+            })
+        })
+        .collect()
+}
+
+/// Fig 15: CDF over the per-benchmark combined-signature changes.
+pub fn stability_cdf(rows: &[StabilityRow]) -> Cdf {
+    Cdf::of(&rows.iter().map(|r| r.combined_change_pct).collect::<Vec<_>>())
+}
+
+/// Fig 17: the error CDF across all measurement points.
+pub fn error_cdf(ev: &Evaluation) -> Cdf {
+    Cdf::of(&ev.errors())
+}
+
+/// Fig 18 row: per-benchmark average error vs average bandwidth.
+#[derive(Clone, Debug)]
+pub struct AccuracyRow {
+    pub workload: String,
+    pub avg_err_pct: f64,
+    pub avg_bandwidth: f64,
+    pub n_points: usize,
+}
+
+pub fn accuracy_by_benchmark(ev: &Evaluation) -> Vec<AccuracyRow> {
+    let mut grouped: BTreeMap<&str, (Vec<f64>, Vec<f64>)> = BTreeMap::new();
+    for r in &ev.records {
+        let e = grouped.entry(&r.workload).or_default();
+        e.0.push(r.err_pct);
+        e.1.push(r.run_bandwidth);
+    }
+    grouped
+        .into_iter()
+        .map(|(name, (errs, bws))| AccuracyRow {
+            workload: name.to_string(),
+            avg_err_pct: Summary::of(&errs).mean,
+            avg_bandwidth: Summary::of(&bws).mean,
+            n_points: errs.len(),
+        })
+        .collect()
+}
+
+/// The paper's headline claim, checked in one place: over the pooled
+/// measurements, report (median %, frac ≤ 2.5 %, frac ≤ 10 %).
+pub fn headline(evs: &[&Evaluation]) -> (f64, f64, f64) {
+    let mut all = Vec::new();
+    for ev in evs {
+        all.extend(ev.errors());
+    }
+    let cdf = Cdf::of(&all);
+    (cdf.median(), cdf.at(2.5), cdf.at(10.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ErrorRecord;
+    use crate::model::signature::ChannelSignature;
+
+    fn mk_eval(machine: &str, sigs: Vec<(&str, f64)>, errs: Vec<f64>)
+        -> Evaluation {
+        Evaluation {
+            machine: machine.to_string(),
+            signatures: sigs
+                .into_iter()
+                .map(|(n, local)| {
+                    let c = ChannelSignature::new(0.1, local, 0.2, 0);
+                    (
+                        n.to_string(),
+                        BandwidthSignature {
+                            read: c,
+                            write: c,
+                            combined: c,
+                            read_bytes: 1.0,
+                            write_bytes: 1.0,
+                        },
+                    )
+                })
+                .collect(),
+            records: errs
+                .into_iter()
+                .map(|e| ErrorRecord {
+                    workload: "w".into(),
+                    split: [4, 4],
+                    channel: "read",
+                    bank: 0,
+                    kind: "local",
+                    measured: 1.0,
+                    predicted: 1.0,
+                    err_pct: e,
+                    run_bandwidth: 1e9,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn stability_pairs_by_name() {
+        let a = mk_eval("m1", vec![("x", 0.3), ("y", 0.5)], vec![]);
+        let b = mk_eval("m2", vec![("y", 0.5), ("x", 0.4)], vec![]);
+        let rows = stability(&a, &b, 2);
+        assert_eq!(rows.len(), 2);
+        let x = rows.iter().find(|r| r.workload == "x").unwrap();
+        // local 0.3 → 0.4: 0.1 mass moved → 10%.
+        assert!((x.combined_change_pct - 10.0).abs() < 1e-9);
+        let y = rows.iter().find(|r| r.workload == "y").unwrap();
+        assert!(y.combined_change_pct.abs() < 1e-9);
+    }
+
+    #[test]
+    fn headline_median_and_fractions() {
+        let ev = mk_eval("m", vec![], vec![1.0, 2.0, 3.0, 20.0]);
+        let (median, at25, at10) = headline(&[&ev]);
+        assert!((median - 2.5).abs() < 1e-9);
+        assert_eq!(at25, 0.5);
+        assert_eq!(at10, 0.75);
+    }
+
+    #[test]
+    fn accuracy_rows_group_by_benchmark() {
+        let mut ev = mk_eval("m", vec![], vec![1.0, 3.0]);
+        ev.records[1].workload = "other".into();
+        let rows = accuracy_by_benchmark(&ev);
+        assert_eq!(rows.len(), 2);
+    }
+}

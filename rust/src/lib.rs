@@ -1,0 +1,69 @@
+//! # numabw — modeling memory-bandwidth patterns on NUMA machines
+//!
+//! A full reproduction of *"Modeling memory bandwidth patterns on NUMA
+//! machines with performance counters"* (Goodman, Haecki, Harris; 2021) as
+//! a three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 1/2 (build time)** — the paper's model (signature fitting,
+//!   application, contention) as Pallas kernels composed by JAX pipelines,
+//!   AOT-lowered to HLO text under `artifacts/`.
+//! * **Layer 3 (this crate)** — the coordinator: a NUMA machine simulator
+//!   substrate producing performance-counter readings, the 23-benchmark
+//!   workload suite, a PJRT runtime executing the HLO artifacts, the
+//!   profiling/fitting/prediction pipeline, and the evaluation harness
+//!   regenerating every figure and table in the paper.
+//!
+//! Python never runs at request time: after `make artifacts`, the `numabw`
+//! binary is self-contained.
+//!
+//! Quick tour (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use numabw::prelude::*;
+//!
+//! let machine = MachineTopology::xeon_e5_2699_v3();
+//! let sim = Simulator::new(machine.clone(), SimConfig::default());
+//! let workload = numabw::workloads::suite::by_name("cg").unwrap();
+//!
+//! // Two profiling runs (§5.1) ...
+//! let total = ThreadPlacement::profiling_total(&machine);
+//! let sym = sim.run(&workload, &ThreadPlacement::symmetric(&machine, total).unwrap());
+//! let asym = sim.run(&workload, &ThreadPlacement::asymmetric(&machine, total).unwrap());
+//!
+//! // ... fit the bandwidth signature (§5) ...
+//! let sig = numabw::model::fit::fit_run_pair(&sym.run, &asym.run);
+//!
+//! // ... and predict the traffic of any other placement (§4).
+//! let m = sig.read.apply(&[14, 4]);
+//! println!("read traffic matrix: {m:?}");
+//! ```
+
+pub mod counters;
+pub mod topology;
+pub mod util;
+pub mod workloads;
+
+pub mod simulator;
+
+pub mod model;
+
+pub mod runtime;
+
+pub mod coordinator;
+
+pub mod eval;
+
+pub mod report;
+
+pub mod cli;
+
+/// Convenient glob-import surface for examples and benches.
+pub mod prelude {
+    pub use crate::counters::{Channel, CounterSnapshot, ProfiledRun};
+    pub use crate::model::signature::{BandwidthSignature, ChannelSignature};
+    pub use crate::simulator::{
+        MemoryPolicy, NoiseConfig, SimConfig, Simulator, ThreadPlacement,
+    };
+    pub use crate::topology::{MachineTopology, GB};
+    pub use crate::workloads::{Heterogeneity, Mixture, Suite, WorkloadSpec};
+}

@@ -1,0 +1,9 @@
+//! `numabw` binary entrypoint — see [`numabw::cli`] for the subcommands.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = numabw::cli::main_with(args) {
+        eprintln!("numabw: {e:#}");
+        std::process::exit(1);
+    }
+}

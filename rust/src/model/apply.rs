@@ -1,0 +1,174 @@
+//! §4 — applying a bandwidth signature to a thread placement.
+//!
+//! Rust reference implementation, numerically identical to the Pallas
+//! `signature_apply` kernel (pinned against each other by the integration
+//! test `tests/hlo_parity.rs`).  The coordinator uses the HLO executable
+//! for batched prediction; this implementation serves single queries, the
+//! simulator-side ground truth, and the places where a PJRT client is not
+//! warranted (unit tests, examples).
+
+use crate::model::signature::ChannelSignature;
+
+/// Build the §4 traffic-fraction matrix: `m[r][c]` is the fraction of the
+/// traffic of a thread on socket `r` that goes to bank `c`.  Rows of used
+/// sockets sum to 1.
+pub fn apply(sig: &ChannelSignature, threads_per_socket: &[usize])
+    -> Vec<Vec<f64>> {
+    let s = threads_per_socket.len();
+    assert!(sig.static_socket < s, "static socket out of range");
+    let n_total: usize = threads_per_socket.iter().sum();
+    let used: Vec<bool> = threads_per_socket.iter().map(|&n| n > 0).collect();
+    let n_used = used.iter().filter(|&&u| u).count().max(1);
+    let il = sig.interleave_frac();
+
+    (0..s)
+        .map(|r| {
+            (0..s)
+                .map(|c| {
+                    let mut v = 0.0;
+                    // Static: all to the static socket's bank.
+                    if c == sig.static_socket {
+                        v += sig.static_frac;
+                    }
+                    // Local: identity.
+                    if r == c {
+                        v += sig.local_frac;
+                    }
+                    // Per-thread: weighted by thread share.
+                    if n_total > 0 {
+                        v += sig.perthread_frac * threads_per_socket[c] as f64
+                            / n_total as f64;
+                    }
+                    // Interleaved: uniform over used sockets.
+                    if used[r] && used[c] {
+                        v += il / n_used as f64;
+                    }
+                    v
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Predicted per-bank `(local, remote)` byte counters for a placement,
+/// given each socket's total issued traffic (§6.2.2 evaluation quantity).
+pub fn predict_counters(sig: &ChannelSignature, threads_per_socket: &[usize],
+                        cpu_totals: &[f64]) -> Vec<[f64; 2]> {
+    let s = threads_per_socket.len();
+    assert_eq!(cpu_totals.len(), s);
+    let m = apply(sig, threads_per_socket);
+    (0..s)
+        .map(|bank| {
+            let mut local = 0.0;
+            let mut remote = 0.0;
+            for src in 0..s {
+                let flow = m[src][bank] * cpu_totals[src];
+                if src == bank {
+                    local += flow;
+                } else {
+                    remote += flow;
+                }
+            }
+            [local, remote]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::signature::ChannelSignature;
+
+    fn worked_example() -> ChannelSignature {
+        // §4: static 0.2 @ socket 2 (index 1), local 0.35, per-thread 0.3.
+        ChannelSignature::new(0.2, 0.35, 0.3, 1)
+    }
+
+    #[test]
+    fn paper_fig5_matrix() {
+        let m = apply(&worked_example(), &[3, 1]);
+        let want = [[0.65, 0.35], [0.30, 0.70]];
+        for r in 0..2 {
+            for c in 0..2 {
+                assert!((m[r][c] - want[r][c]).abs() < 1e-12,
+                        "m[{r}][{c}]={}", m[r][c]);
+            }
+        }
+    }
+
+    #[test]
+    fn rows_sum_to_one_for_used_sockets() {
+        let sig = ChannelSignature::new(0.1, 0.2, 0.5, 0);
+        for tps in [[4, 4], [7, 1], [8, 0], [2, 6]] {
+            let m = apply(&sig, &tps);
+            for (r, row) in m.iter().enumerate() {
+                if tps[r] > 0 {
+                    let sum: f64 = row.iter().sum();
+                    assert!((sum - 1.0).abs() < 1e-12, "{tps:?} row {r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pure_classes_produce_expected_matrices() {
+        let st = ChannelSignature::new(1.0, 0.0, 0.0, 1);
+        assert_eq!(apply(&st, &[2, 2]), vec![vec![0.0, 1.0], vec![0.0, 1.0]]);
+        let lo = ChannelSignature::new(0.0, 1.0, 0.0, 0);
+        assert_eq!(apply(&lo, &[2, 2]), vec![vec![1.0, 0.0], vec![0.0, 1.0]]);
+        let pt = ChannelSignature::new(0.0, 0.0, 1.0, 0);
+        let m = apply(&pt, &[6, 2]);
+        assert!((m[0][0] - 0.75).abs() < 1e-12);
+        assert!((m[1][0] - 0.75).abs() < 1e-12);
+        let il = ChannelSignature::new(0.0, 0.0, 0.0, 0);
+        assert_eq!(apply(&il, &[2, 2]),
+                   vec![vec![0.5, 0.5], vec![0.5, 0.5]]);
+    }
+
+    #[test]
+    fn interleave_over_used_sockets_only() {
+        let il = ChannelSignature::new(0.0, 0.0, 0.0, 0);
+        let m = apply(&il, &[4, 0]);
+        assert_eq!(m[0], vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn three_socket_generalisation() {
+        let sig = ChannelSignature::new(0.3, 0.3, 0.3, 2);
+        let m = apply(&sig, &[2, 1, 1]);
+        for (r, row) in m.iter().enumerate() {
+            let sum: f64 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-12, "row {r}");
+        }
+        // Per-thread column weights 0.5/0.25/0.25; interleave 0.1/3 each;
+        // static 0.3 on bank 2.
+        assert!((m[0][2] - (0.3 + 0.3 * 0.25 + 0.1 / 3.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn predict_counters_conserves_traffic() {
+        let sig = worked_example();
+        let totals = [3.0e9, 1.0e9];
+        let pred = predict_counters(&sig, &[3, 1], &totals);
+        let total_pred: f64 = pred.iter().map(|p| p[0] + p[1]).sum();
+        assert!((total_pred - 4.0e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn predict_counters_worked_example() {
+        // With CPU totals proportional to thread counts (3, 1):
+        // bank0 local = 0.65*3 = 1.95, bank0 remote = 0.30*1 = 0.30,
+        // bank1 local = 0.70*1 = 0.70, bank1 remote = 0.35*3 = 1.05.
+        let pred = predict_counters(&worked_example(), &[3, 1], &[3.0, 1.0]);
+        assert!((pred[0][0] - 1.95).abs() < 1e-12);
+        assert!((pred[0][1] - 0.30).abs() < 1e-12);
+        assert!((pred[1][0] - 0.70).abs() < 1e-12);
+        assert!((pred[1][1] - 1.05).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn static_socket_must_exist() {
+        apply(&ChannelSignature::new(0.5, 0.0, 0.0, 3), &[2, 2]);
+    }
+}

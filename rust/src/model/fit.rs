@@ -1,0 +1,362 @@
+//! §5 — measuring an application's bandwidth signature from two profiling
+//! runs.
+//!
+//! Rust reference implementation of the fitting pipeline, formula-for-
+//! formula identical to the Pallas `fit_signature` kernel (`ref.py` is the
+//! shared specification; `tests/hlo_parity.rs` pins the two against each
+//! other through the compiled artifact).
+//!
+//! Pipeline per channel:
+//!   §5.2 normalize both runs by the per-thread instruction rate of the
+//!        *source* socket of each counter component;
+//!   §5.3 static socket = argmax of bank totals; static fraction from the
+//!        excess over the other bank;
+//!   §5.4 remove static, then local fraction from the remote ratio
+//!        `r = (s-1)/s (1 - local/(1-static))`;
+//!   §5.5 on the asymmetric run remove static + local, then the per-thread
+//!        fraction by interpolating each CPU's local share between the
+//!        per-thread expectation (thread share) and the interleaved
+//!        expectation (1/s);
+//!   §6.2.1 misfit = asymmetry of the post-static remote ratios.
+//!
+//! The fit is 2-socket (like the paper's formulation): with only
+//! local/remote counters, remote traffic cannot be attributed to a unique
+//! source socket for S > 2.
+
+use crate::counters::{Channel, ProfiledRun};
+use crate::model::signature::{BandwidthSignature, ChannelSignature};
+
+const EPS: f64 = 1e-9;
+
+/// Normalized per-bank (local, remote) matrix for one channel (§5.2).
+///
+/// Local traffic at bank `i` comes from socket `i`; remote traffic at bank
+/// `i` comes from the other socket (S=2).  Each component is scaled by
+/// `mean_rate / source_rate`.
+fn normalize(run: &ProfiledRun, counts: &[[f64; 2]]) -> Vec<[f64; 2]> {
+    let rates = run.thread_rates();
+    let mean = rates.iter().sum::<f64>() / rates.len() as f64;
+    let factor: Vec<f64> =
+        rates.iter().map(|&r| mean / r.max(EPS)).collect();
+    counts
+        .iter()
+        .enumerate()
+        .map(|(bank, c)| {
+            let other = 1 - bank;
+            [c[0] * factor[bank], c[1] * factor[other]]
+        })
+        .collect()
+}
+
+/// Counter matrices for a channel, or the sum of both for combined fits.
+fn channel_counts(run: &ProfiledRun, ch: Option<Channel>) -> Vec<[f64; 2]> {
+    match ch {
+        Some(c) => run.counters.bank_matrix(c),
+        None => {
+            let r = run.counters.bank_matrix(Channel::Read);
+            let w = run.counters.bank_matrix(Channel::Write);
+            r.iter()
+                .zip(&w)
+                .map(|(a, b)| [a[0] + b[0], a[1] + b[1]])
+                .collect()
+        }
+    }
+}
+
+/// Fit one channel (`None` = combined reads+writes).
+pub fn fit_channel(sym: &ProfiledRun, asym: &ProfiledRun,
+                   ch: Option<Channel>) -> ChannelSignature {
+    assert_eq!(sym.counters.n_sockets(), 2, "fit is 2-socket (see paper §5)");
+    assert_eq!(asym.counters.n_sockets(), 2);
+    assert_ne!(asym.threads_per_socket[0], asym.threads_per_socket[1],
+               "second profiling run must be asymmetric (§5.1)");
+
+    let sym_n = normalize(sym, &channel_counts(sym, ch));
+    let asym_n = normalize(asym, &channel_counts(asym, ch));
+
+    // ---- §5.3 static socket + fraction ---------------------------------
+    let totals: Vec<f64> = sym_n.iter().map(|b| b[0] + b[1]).collect();
+    let grand = (totals[0] + totals[1]).max(EPS);
+    let k = if totals[0] >= totals[1] { 0 } else { 1 };
+    let static_frac =
+        ((totals[k] - totals[1 - k]) / grand).clamp(0.0, 1.0);
+
+    // ---- §5.4 local fraction --------------------------------------------
+    // Remove static from bank k (half arrived locally, half remotely in
+    // the symmetric run), then use the remote ratio.  After removal both
+    // banks carry exactly t_other bytes.
+    let static_bytes = static_frac * grand;
+    let t_other = totals[1 - k];
+    let s_remote = |bank: usize| -> f64 {
+        let raw = sym_n[bank][1]
+            - if bank == k { 0.5 * static_bytes } else { 0.0 };
+        raw.max(0.0)
+    };
+    let r_per_bank = [
+        (s_remote(0) / t_other.max(EPS)).clamp(0.0, 1.0),
+        (s_remote(1) / t_other.max(EPS)).clamp(0.0, 1.0),
+    ];
+    let r = 0.5 * (r_per_bank[0] + r_per_bank[1]);
+    let one_m_static = (1.0 - static_frac).max(EPS);
+    // r = (s-1)/s (1 - local/(1-static)), s = 2.
+    let local_frac = ((1.0 - 2.0 * r) * one_m_static)
+        .clamp(0.0, 1.0)
+        .min(one_m_static);
+
+    let misfit = (r_per_bank[0] - r_per_bank[1]).abs();
+
+    // ---- §5.5 per-thread fraction ----------------------------------------
+    // CPU totals: a CPU's traffic = its bank's local + the other bank's
+    // remote (S=2).
+    let cpu_tot = [
+        asym_n[0][0] + asym_n[1][1],
+        asym_n[1][0] + asym_n[0][1],
+    ];
+    // Remove the static component from the static bank: the static
+    // socket's own share arrives locally, the other's remotely.
+    let mut a_local = [asym_n[0][0], asym_n[1][0]];
+    let mut a_remote = [asym_n[0][1], asym_n[1][1]];
+    a_local[k] -= static_frac * cpu_tot[k];
+    a_remote[k] -= static_frac * cpu_tot[1 - k];
+    // Remove each CPU's local-class traffic from its own bank.
+    for i in 0..2 {
+        a_local[i] = (a_local[i] - local_frac * cpu_tot[i]).max(0.0);
+        a_remote[i] = a_remote[i].max(0.0);
+    }
+
+    // Each CPU's local share of the remaining traffic.
+    let n_tot: usize = asym.threads_per_socket.iter().sum();
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for i in 0..2 {
+        let l_i = a_local[i] / (a_local[i] + a_remote[1 - i]).max(EPS);
+        let pt_i = asym.threads_per_socket[i] as f64 / (n_tot as f64).max(EPS);
+        num += (l_i - 0.5) * (pt_i - 0.5);
+        den += (pt_i - 0.5) * (pt_i - 0.5);
+    }
+    let p = (num / den.max(EPS)).clamp(0.0, 1.0);
+    let perthread_frac =
+        (p * (1.0 - local_frac - static_frac)).clamp(0.0, 1.0);
+
+    ChannelSignature {
+        static_frac,
+        local_frac,
+        perthread_frac,
+        static_socket: k,
+        misfit,
+    }
+}
+
+/// Fit the full signature (read, write, combined) from the §5.1 run pair.
+pub fn fit_run_pair(sym: &ProfiledRun, asym: &ProfiledRun)
+    -> BandwidthSignature {
+    BandwidthSignature {
+        read: fit_channel(sym, asym, Some(Channel::Read)),
+        write: fit_channel(sym, asym, Some(Channel::Write)),
+        combined: fit_channel(sym, asym, None),
+        read_bytes: sym.counters.channel_total(Channel::Read),
+        write_bytes: sym.counters.channel_total(Channel::Write),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::counters::CounterSnapshot;
+    use crate::model::apply::apply;
+    use crate::model::signature::ChannelSignature;
+
+    /// Build exact model-conforming counters for a placement: each socket's
+    /// traffic is proportional to its thread count, routed per §4.
+    fn counters_for(sig: &ChannelSignature, tps: &[usize], ch: Channel,
+                    rate_skew: &[f64]) -> ProfiledRun {
+        let m = apply(sig, tps);
+        let mut c = CounterSnapshot::new(tps.len());
+        for (src, &n) in tps.iter().enumerate() {
+            // Threads on a skewed socket run slower: traffic scales with
+            // the effective rate, as the real counters would report.
+            let traffic = n as f64 * rate_skew[src];
+            for dst in 0..tps.len() {
+                c.record_traffic(src, dst, ch, m[src][dst] * traffic * 1e9);
+            }
+            c.sockets[src].instructions += traffic * 1e9;
+        }
+        c.elapsed_s = 1.0;
+        ProfiledRun {
+            counters: c,
+            threads_per_socket: tps.to_vec(),
+        }
+    }
+
+    fn fit_exact(sig: &ChannelSignature, skew: &[f64]) -> ChannelSignature {
+        let sym = counters_for(sig, &[2, 2], Channel::Read, skew);
+        let asym = counters_for(sig, &[3, 1], Channel::Read, skew);
+        fit_channel(&sym, &asym, Some(Channel::Read))
+    }
+
+    #[test]
+    fn worked_example_roundtrip() {
+        let truth = ChannelSignature::new(0.2, 0.35, 0.3, 1);
+        let got = fit_exact(&truth, &[1.0, 1.0]);
+        assert!((got.static_frac - 0.2).abs() < 1e-9, "{got:?}");
+        assert!((got.local_frac - 0.35).abs() < 1e-9);
+        assert!((got.perthread_frac - 0.3).abs() < 1e-9);
+        assert_eq!(got.static_socket, 1);
+        assert!(got.misfit < 1e-9);
+    }
+
+    #[test]
+    fn normalization_absorbs_rate_skew() {
+        // §5.2's example: socket-1 threads at half speed.
+        let truth = ChannelSignature::new(0.2, 0.35, 0.3, 1);
+        let got = fit_exact(&truth, &[1.0, 0.5]);
+        assert!((got.static_frac - 0.2).abs() < 1e-9, "{got:?}");
+        assert!((got.local_frac - 0.35).abs() < 1e-9);
+        assert!((got.perthread_frac - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pure_patterns_hit_their_corners() {
+        for (truth, check) in [
+            (ChannelSignature::new(1.0, 0.0, 0.0, 0),
+             "static" as &str),
+            (ChannelSignature::new(0.0, 1.0, 0.0, 0), "local"),
+            (ChannelSignature::new(0.0, 0.0, 1.0, 0), "perthread"),
+            (ChannelSignature::new(0.0, 0.0, 0.0, 0), "interleave"),
+        ] {
+            let got = fit_exact(&truth, &[1.0, 1.0]);
+            let fields = [
+                got.static_frac,
+                got.local_frac,
+                got.perthread_frac,
+                got.interleave_frac(),
+            ];
+            let want = [
+                truth.static_frac,
+                truth.local_frac,
+                truth.perthread_frac,
+                truth.interleave_frac(),
+            ];
+            for (g, w) in fields.iter().zip(&want) {
+                // 1e-6: the EPS guard in `1 - static` leaks ~1e-9 into the
+                // local fraction at the pure-static corner.
+                assert!((g - w).abs() < 1e-6, "{check}: {got:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn random_roundtrips() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xF17);
+        for _ in 0..100 {
+            // Random valid signature with an attributable static part.
+            let a = rng.uniform(0.02, 0.5);
+            let l = rng.uniform(0.0, 1.0 - a) * 0.8;
+            let p = rng.uniform(0.0, (1.0 - a - l).max(0.0));
+            let truth = ChannelSignature::new(
+                a, l, p, rng.below(2) as usize);
+            let got = fit_exact(&truth, &[1.0, 1.0]);
+            assert!((got.static_frac - a).abs() < 1e-6, "{truth:?} {got:?}");
+            assert!((got.local_frac - l).abs() < 1e-6);
+            assert!((got.perthread_frac - p).abs() < 1e-6);
+            assert_eq!(got.static_socket, truth.static_socket);
+            assert!(got.misfit < 1e-6);
+        }
+    }
+
+    #[test]
+    fn combined_fit_merges_channels() {
+        let truth = ChannelSignature::new(0.2, 0.35, 0.3, 1);
+        let mut sym = counters_for(&truth, &[2, 2], Channel::Read,
+                                   &[1.0, 1.0]);
+        let mut asym = counters_for(&truth, &[3, 1], Channel::Read,
+                                    &[1.0, 1.0]);
+        // Add write traffic with the same mixture.
+        let symw = counters_for(&truth, &[2, 2], Channel::Write,
+                                &[1.0, 1.0]);
+        let asymw = counters_for(&truth, &[3, 1], Channel::Write,
+                                 &[1.0, 1.0]);
+        for b in 0..2 {
+            sym.counters.banks[b].local_write =
+                symw.counters.banks[b].local_write;
+            sym.counters.banks[b].remote_write =
+                symw.counters.banks[b].remote_write;
+            asym.counters.banks[b].local_write =
+                asymw.counters.banks[b].local_write;
+            asym.counters.banks[b].remote_write =
+                asymw.counters.banks[b].remote_write;
+        }
+        let got = fit_channel(&sym, &asym, None);
+        assert!((got.static_frac - 0.2).abs() < 1e-9);
+        assert!((got.local_frac - 0.35).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fractions_always_in_unit_range() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(5);
+        for _ in 0..200 {
+            let mut c1 = CounterSnapshot::new(2);
+            let mut c2 = CounterSnapshot::new(2);
+            for c in [&mut c1, &mut c2] {
+                for src in 0..2 {
+                    for dst in 0..2 {
+                        c.record_traffic(src, dst, Channel::Read,
+                                         rng.uniform(0.0, 1e9));
+                    }
+                    c.sockets[src].instructions = rng.uniform(1e8, 1e9);
+                }
+                c.elapsed_s = 1.0;
+            }
+            let sym = ProfiledRun {
+                counters: c1,
+                threads_per_socket: vec![2, 2],
+            };
+            let asym = ProfiledRun {
+                counters: c2,
+                threads_per_socket: vec![3, 1],
+            };
+            let got = fit_channel(&sym, &asym, Some(Channel::Read));
+            for v in [got.static_frac, got.local_frac, got.perthread_frac,
+                      got.interleave_frac()] {
+                assert!((0.0..=1.0).contains(&v), "{got:?}");
+            }
+            let sum = got.static_frac + got.local_frac + got.perthread_frac
+                + got.interleave_frac();
+            assert!((sum - 1.0).abs() < 1e-9);
+            assert!(got.misfit >= 0.0);
+        }
+    }
+
+    #[test]
+    fn zero_counters_do_not_nan() {
+        let zero = ProfiledRun {
+            counters: {
+                let mut c = CounterSnapshot::new(2);
+                c.elapsed_s = 1.0;
+                c.sockets[0].instructions = 1.0;
+                c.sockets[1].instructions = 1.0;
+                c
+            },
+            threads_per_socket: vec![2, 2],
+        };
+        let asym = ProfiledRun {
+            threads_per_socket: vec![3, 1],
+            ..zero.clone()
+        };
+        let got = fit_channel(&zero, &asym, Some(Channel::Write));
+        assert!(got.static_frac.is_finite());
+        assert!(got.misfit.is_finite());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_symmetric_second_run() {
+        let run = ProfiledRun {
+            counters: CounterSnapshot::new(2),
+            threads_per_socket: vec![2, 2],
+        };
+        fit_channel(&run, &run, Some(Channel::Read));
+    }
+}

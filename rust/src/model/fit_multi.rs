@@ -1,0 +1,283 @@
+//! Generalised S-socket fitting (the paper's "can be applied to differing
+//! numbers of sockets", §5, and part of its future-work direction).
+//!
+//! With only bank-perspective local/remote counters, remote traffic at a
+//! bank cannot be attributed to a *specific* remote socket for S > 2, so
+//! two approximations are required relative to the exact 2-socket fit:
+//!
+//! * **normalization** (§5.2): remote components are scaled by the
+//!   thread-count-weighted average rate factor of the other sockets;
+//! * **per-thread fraction** (§5.5): each CPU's local share `l_i` is
+//!   computed against the *sum* of remote counters at other banks scaled
+//!   by that CPU's share of remote traffic, assuming symmetric remote
+//!   mixing (exact when the model holds).
+//!
+//! For S = 2 this reduces exactly to [`crate::model::fit`] (tested below).
+
+use crate::counters::{Channel, ProfiledRun};
+use crate::model::signature::ChannelSignature;
+
+const EPS: f64 = 1e-9;
+
+fn channel_counts(run: &ProfiledRun, ch: Option<Channel>) -> Vec<[f64; 2]> {
+    match ch {
+        Some(c) => run.counters.bank_matrix(c),
+        None => {
+            let r = run.counters.bank_matrix(Channel::Read);
+            let w = run.counters.bank_matrix(Channel::Write);
+            r.iter()
+                .zip(&w)
+                .map(|(a, b)| [a[0] + b[0], a[1] + b[1]])
+                .collect()
+        }
+    }
+}
+
+/// §5.2 for S sockets: local components scale by their own socket's
+/// factor; remote components by the average factor of the other sockets,
+/// weighted by those sockets' thread counts (the best available source
+/// attribution).
+fn normalize(run: &ProfiledRun, counts: &[[f64; 2]]) -> Vec<[f64; 2]> {
+    let s = counts.len();
+    let rates = run.thread_rates();
+    let mean = rates.iter().sum::<f64>() / s as f64;
+    let factor: Vec<f64> = rates.iter().map(|&r| mean / r.max(EPS)).collect();
+    (0..s)
+        .map(|bank| {
+            let mut wsum = 0.0;
+            let mut fsum = 0.0;
+            for other in 0..s {
+                if other != bank {
+                    let w = run.threads_per_socket[other] as f64;
+                    wsum += w;
+                    fsum += w * factor[other];
+                }
+            }
+            let remote_factor = if wsum > 0.0 { fsum / wsum } else { 1.0 };
+            [counts[bank][0] * factor[bank],
+             counts[bank][1] * remote_factor]
+        })
+        .collect()
+}
+
+/// Fit a channel signature on an S-socket machine (S >= 2).
+pub fn fit_channel_multi(sym: &ProfiledRun, asym: &ProfiledRun,
+                         ch: Option<Channel>) -> ChannelSignature {
+    let s = sym.counters.n_sockets();
+    assert!(s >= 2);
+    assert_eq!(asym.counters.n_sockets(), s);
+
+    let symn = normalize(sym, &channel_counts(sym, ch));
+    let asymn = normalize(asym, &channel_counts(asym, ch));
+
+    // ---- §5.3 static socket + fraction (excess over the others' mean) ---
+    let totals: Vec<f64> = symn.iter().map(|b| b[0] + b[1]).collect();
+    let grand = totals.iter().sum::<f64>().max(EPS);
+    let k = (0..s)
+        .max_by(|&a, &b| totals[a].partial_cmp(&totals[b]).unwrap())
+        .unwrap();
+    let mean_others = (grand - totals[k]) / (s - 1) as f64;
+    let static_frac = ((totals[k] - mean_others) / grand).clamp(0.0, 1.0);
+    let static_bytes = static_frac * grand;
+
+    // ---- §5.4 local fraction ---------------------------------------------
+    // In the symmetric run the static socket receives 1/s of the static
+    // traffic locally and (s-1)/s remotely; all banks then carry
+    // mean_others bytes.
+    let s_f = s as f64;
+    let post_total = mean_others.max(EPS);
+    let mut r_sum = 0.0;
+    let mut r_vals = Vec::with_capacity(s);
+    for bank in 0..s {
+        let remote = if bank == k {
+            symn[bank][1] - static_bytes * (s_f - 1.0) / s_f
+        } else {
+            symn[bank][1]
+        }
+        .max(0.0);
+        let r = (remote / post_total).clamp(0.0, 1.0);
+        r_vals.push(r);
+        r_sum += r;
+    }
+    let r = r_sum / s_f;
+    let one_m_static = (1.0 - static_frac).max(EPS);
+    // r = (s-1)/s (1 - local/(1-static)).
+    let local_frac = ((1.0 - r * s_f / (s_f - 1.0)) * one_m_static)
+        .clamp(0.0, 1.0)
+        .min(one_m_static);
+    let misfit = r_vals
+        .iter()
+        .map(|v| (v - r).abs())
+        .fold(0.0, f64::max);
+
+    // ---- §5.5 per-thread fraction ------------------------------------------
+    // CPU totals: local at own bank + share of every other bank's remote
+    // traffic.  With the model holding, CPU i's share of bank j's remote
+    // traffic is n_i / (N - n_j); we use that attribution.
+    let n: Vec<f64> = asym
+        .threads_per_socket
+        .iter()
+        .map(|&t| t as f64)
+        .collect();
+    let n_tot: f64 = n.iter().sum();
+    let share = |cpu: usize, bank: usize| -> f64 {
+        if cpu == bank {
+            return 0.0;
+        }
+        let others = n_tot - n[bank];
+        if others > 0.0 {
+            n[cpu] / others
+        } else {
+            0.0
+        }
+    };
+    let cpu_tot: Vec<f64> = (0..s)
+        .map(|i| {
+            asymn[i][0]
+                + (0..s)
+                    .map(|j| asymn[j][1] * share(i, j))
+                    .sum::<f64>()
+        })
+        .collect();
+
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for i in 0..s {
+        // Remove static + local from CPU i's local bank.
+        let mut local = asymn[i][0];
+        if i == k {
+            local -= static_frac * cpu_tot[i];
+        }
+        local = (local - local_frac * cpu_tot[i]).max(0.0);
+        let mut remote = 0.0;
+        for j in 0..s {
+            if j != i {
+                let mut rj = asymn[j][1] * share(i, j);
+                if j == k {
+                    rj -= static_frac * cpu_tot[i];
+                }
+                remote += rj.max(0.0);
+            }
+        }
+        let l_i = local / (local + remote).max(EPS);
+        let used = n.iter().filter(|&&t| t > 0.0).count().max(1) as f64;
+        let il_i = 1.0 / used;
+        let pt_i = n[i] / n_tot.max(EPS);
+        num += (l_i - il_i) * (pt_i - il_i);
+        den += (pt_i - il_i) * (pt_i - il_i);
+    }
+    let p = (num / den.max(EPS)).clamp(0.0, 1.0);
+    let perthread_frac =
+        (p * (1.0 - local_frac - static_frac)).clamp(0.0, 1.0);
+
+    ChannelSignature {
+        static_frac,
+        local_frac,
+        perthread_frac,
+        static_socket: k,
+        misfit,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::counters::CounterSnapshot;
+    use crate::model::{apply, fit};
+
+    fn run_for(sig: &ChannelSignature, tps: &[usize]) -> ProfiledRun {
+        let m = apply::apply(sig, tps);
+        let s = tps.len();
+        let mut c = CounterSnapshot::new(s);
+        for (src, &n) in tps.iter().enumerate() {
+            for dst in 0..s {
+                c.record_traffic(src, dst, Channel::Read,
+                                 m[src][dst] * n as f64 * 1e9);
+            }
+            c.sockets[src].instructions = n as f64 * 1e9;
+        }
+        c.elapsed_s = 1.0;
+        ProfiledRun {
+            counters: c,
+            threads_per_socket: tps.to_vec(),
+        }
+    }
+
+    #[test]
+    fn reduces_to_two_socket_fit() {
+        let truth = ChannelSignature::new(0.2, 0.35, 0.3, 1);
+        let sym = run_for(&truth, &[2, 2]);
+        let asym = run_for(&truth, &[3, 1]);
+        let a = fit::fit_channel(&sym, &asym, Some(Channel::Read));
+        let b = fit_channel_multi(&sym, &asym, Some(Channel::Read));
+        assert!((a.static_frac - b.static_frac).abs() < 1e-9, "{a:?} {b:?}");
+        assert!((a.local_frac - b.local_frac).abs() < 1e-9);
+        assert!((a.perthread_frac - b.perthread_frac).abs() < 1e-9);
+        assert_eq!(a.static_socket, b.static_socket);
+    }
+
+    #[test]
+    fn recovers_four_socket_signature() {
+        let truth = ChannelSignature::new(0.2, 0.3, 0.3, 2);
+        let sym = run_for(&truth, &[4, 4, 4, 4]);
+        let asym = run_for(&truth, &[7, 4, 3, 2]);
+        let got = fit_channel_multi(&sym, &asym, Some(Channel::Read));
+        assert!((got.static_frac - 0.2).abs() < 1e-6, "{got:?}");
+        assert!((got.local_frac - 0.3).abs() < 1e-6);
+        assert!((got.perthread_frac - 0.3).abs() < 0.02, "{got:?}");
+        assert_eq!(got.static_socket, 2);
+        assert!(got.misfit < 1e-6);
+    }
+
+    #[test]
+    fn four_socket_pure_patterns() {
+        for truth in [
+            ChannelSignature::new(1.0, 0.0, 0.0, 3),
+            ChannelSignature::new(0.0, 1.0, 0.0, 0),
+            ChannelSignature::new(0.0, 0.0, 1.0, 0),
+            ChannelSignature::new(0.0, 0.0, 0.0, 0),
+        ] {
+            let sym = run_for(&truth, &[3, 3, 3, 3]);
+            let asym = run_for(&truth, &[5, 4, 2, 1]);
+            let got = fit_channel_multi(&sym, &asym, Some(Channel::Read));
+            assert!((got.static_frac - truth.static_frac).abs() < 1e-6,
+                    "{truth:?} -> {got:?}");
+            assert!((got.local_frac - truth.local_frac).abs() < 1e-6);
+            assert!(
+                (got.perthread_frac - truth.perthread_frac).abs() < 0.03,
+                "{truth:?} -> {got:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn three_socket_with_rate_skew() {
+        let truth = ChannelSignature::new(0.15, 0.25, 0.4, 0);
+        let mk = |tps: &[usize], skew: &[f64]| -> ProfiledRun {
+            let m = apply::apply(&truth, tps);
+            let s = tps.len();
+            let mut c = CounterSnapshot::new(s);
+            for (src, &n) in tps.iter().enumerate() {
+                let traffic = n as f64 * skew[src] * 1e9;
+                for dst in 0..s {
+                    c.record_traffic(src, dst, Channel::Read,
+                                     m[src][dst] * traffic);
+                }
+                c.sockets[src].instructions = traffic;
+            }
+            c.elapsed_s = 1.0;
+            ProfiledRun {
+                counters: c,
+                threads_per_socket: tps.to_vec(),
+            }
+        };
+        // Mild skew: multi-socket normalization is approximate (average
+        // remote factor), so tolerances are looser than the exact S=2 fit.
+        let sym = mk(&[2, 2, 2], &[1.0, 0.9, 1.1]);
+        let asym = mk(&[4, 1, 1], &[1.0, 0.9, 1.1]);
+        let got = fit_channel_multi(&sym, &asym, Some(Channel::Read));
+        assert!((got.static_frac - 0.15).abs() < 0.05, "{got:?}");
+        assert!((got.local_frac - 0.25).abs() < 0.05);
+        assert!((got.perthread_frac - 0.4).abs() < 0.1);
+    }
+}

@@ -1,0 +1,115 @@
+//! §6.2.1 — detecting applications the model does not fit.
+//!
+//! The fit carries redundant information: once the static component is
+//! removed from the symmetric run, the remaining traffic should look the
+//! same from both banks.  A residual asymmetry in the remote ratios means
+//! the workload violates the model's equal-threads assumption (Page rank's
+//! hot head is the paper's worked example).  "The bigger the difference
+//! the worse the fit."
+
+use crate::model::signature::{BandwidthSignature, ChannelSignature};
+
+/// Qualitative fit assessment, thresholded on the §6.2.1 residual.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FitQuality {
+    /// Residual within counter noise — predictions trustworthy.
+    Good,
+    /// Noticeable asymmetry — predictions usable, flag to the user.
+    Marginal,
+    /// The workload violates the model (per-thread behaviour varies);
+    /// expect Fig-16-style errors.
+    Poor,
+}
+
+/// Thresholds calibrated on the synthetic suite (noise floor < 0.01) and
+/// the Page-rank misfit (> 0.1).
+pub const MARGINAL_THRESHOLD: f64 = 0.03;
+pub const POOR_THRESHOLD: f64 = 0.10;
+
+pub fn assess_channel(sig: &ChannelSignature) -> FitQuality {
+    assess_residual(sig.misfit)
+}
+
+pub fn assess_residual(misfit: f64) -> FitQuality {
+    if misfit < MARGINAL_THRESHOLD {
+        FitQuality::Good
+    } else if misfit < POOR_THRESHOLD {
+        FitQuality::Marginal
+    } else {
+        FitQuality::Poor
+    }
+}
+
+/// Assess a full signature, weighting each channel by its traffic volume —
+/// a noisy residual on a near-empty channel (equake's writes) should not
+/// condemn the application.
+pub fn assess(sig: &BandwidthSignature) -> FitQuality {
+    let rs = sig.read_share();
+    let weighted = rs * sig.read.misfit + (1.0 - rs) * sig.write.misfit;
+    assess_residual(weighted)
+}
+
+/// Human-readable advice string for the perf-debugging use case.
+pub fn describe(sig: &BandwidthSignature) -> String {
+    match assess(sig) {
+        FitQuality::Good => "model fit: good (residual within noise)".into(),
+        FitQuality::Marginal => format!(
+            "model fit: marginal (residual r={:.3}/w={:.3}); per-thread \
+             access rates may vary — treat placement predictions as \
+             approximate",
+            sig.read.misfit, sig.write.misfit
+        ),
+        FitQuality::Poor => format!(
+            "model fit: POOR (residual r={:.3}/w={:.3}); the application's \
+             per-thread bandwidth varies with thread position (cf. Page \
+             rank, paper §6.2.1) — predictions will misattribute traffic",
+            sig.read.misfit, sig.write.misfit
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig_with(misfit: f64) -> ChannelSignature {
+        ChannelSignature {
+            misfit,
+            ..ChannelSignature::new(0.2, 0.3, 0.3, 0)
+        }
+    }
+
+    #[test]
+    fn thresholds() {
+        assert_eq!(assess_channel(&sig_with(0.0)), FitQuality::Good);
+        assert_eq!(assess_channel(&sig_with(0.02)), FitQuality::Good);
+        assert_eq!(assess_channel(&sig_with(0.05)), FitQuality::Marginal);
+        assert_eq!(assess_channel(&sig_with(0.25)), FitQuality::Poor);
+    }
+
+    #[test]
+    fn volume_weighting_ignores_empty_channel_noise() {
+        // equake: reads fit perfectly, the (negligible) writes are noise.
+        let s = BandwidthSignature {
+            read: sig_with(0.001),
+            write: sig_with(0.5),
+            combined: sig_with(0.01),
+            read_bytes: 0.97e9,
+            write_bytes: 0.03e9,
+        };
+        assert_eq!(assess(&s), FitQuality::Good);
+    }
+
+    #[test]
+    fn balanced_misfit_is_poor() {
+        let s = BandwidthSignature {
+            read: sig_with(0.2),
+            write: sig_with(0.2),
+            combined: sig_with(0.2),
+            read_bytes: 1e9,
+            write_bytes: 1e9,
+        };
+        assert_eq!(assess(&s), FitQuality::Poor);
+        assert!(describe(&s).contains("POOR"));
+    }
+}

@@ -1,0 +1,21 @@
+//! The paper's bandwidth model — Rust reference implementation.
+//!
+//! * [`signature`] — the 8-property bandwidth signature (§3).
+//! * [`apply`]     — signature × placement → traffic matrix (§4).
+//! * [`fit`]       — two profiling runs → signature (§5).
+//! * [`misfit`]    — model-violation detection (§6.2.1).
+//!
+//! The batched hot path runs through the AOT-compiled Pallas kernels (see
+//! [`crate::runtime`] and [`crate::coordinator`]); this module is the
+//! numerical twin used for single queries and as the oracle in tests.
+
+pub mod ablation;
+pub mod apply;
+pub mod fit;
+pub mod fit_multi;
+pub mod misfit;
+pub mod signature;
+
+pub use fit::{fit_channel, fit_run_pair};
+pub use misfit::FitQuality;
+pub use signature::{BandwidthSignature, ChannelSignature};

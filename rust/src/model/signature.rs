@@ -1,0 +1,250 @@
+//! The bandwidth signature (paper §3): the 8-property description of an
+//! application's memory-access pattern.
+//!
+//! Per channel (read / write): the fractions of traffic that are *Static*,
+//! *Local* and *Per-thread* (anything left is *Interleaved*), plus the
+//! socket holding the static allocation.  The paper also uses a *combined*
+//! signature fitted on reads+writes together — more stable for workloads
+//! whose write volume is negligible (Fig 14's equake discussion).
+
+use crate::util::json::Json;
+
+/// Signature for one channel.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChannelSignature {
+    pub static_frac: f64,
+    pub local_frac: f64,
+    pub perthread_frac: f64,
+    pub static_socket: usize,
+    /// §6.2.1 misfit residual from the fit (0 = model fits exactly).
+    pub misfit: f64,
+}
+
+impl ChannelSignature {
+    pub fn new(static_frac: f64, local_frac: f64, perthread_frac: f64,
+               static_socket: usize) -> ChannelSignature {
+        ChannelSignature {
+            static_frac,
+            local_frac,
+            perthread_frac,
+            static_socket,
+            misfit: 0.0,
+        }
+    }
+
+    pub fn interleave_frac(&self) -> f64 {
+        (1.0 - self.static_frac - self.local_frac - self.perthread_frac)
+            .max(0.0)
+    }
+
+    /// §4: the traffic-fraction matrix for a placement (rows = CPU socket,
+    /// cols = memory bank).  Delegates to [`crate::model::apply`].
+    pub fn apply(&self, threads_per_socket: &[usize]) -> Vec<Vec<f64>> {
+        crate::model::apply::apply(self, threads_per_socket)
+    }
+
+    /// Class-mass vector with static mass attributed to its socket:
+    /// `[static@0 .. static@S-1, local, perthread, interleave]`.  Basis for
+    /// the Fig 14 signature-change metric.
+    pub fn class_vector(&self, sockets: usize) -> Vec<f64> {
+        let mut v = vec![0.0; sockets + 3];
+        v[self.static_socket.min(sockets - 1)] = self.static_frac;
+        v[sockets] = self.local_frac;
+        v[sockets + 1] = self.perthread_frac;
+        v[sockets + 2] = self.interleave_frac();
+        v
+    }
+
+    /// Fraction of bandwidth reallocated between two signatures (Fig 14):
+    /// half the L1 distance between class vectors — the minimal mass that
+    /// must move to turn one distribution into the other.
+    pub fn reallocation(&self, other: &ChannelSignature, sockets: usize)
+        -> f64 {
+        let a = self.class_vector(sockets);
+        let b = other.class_vector(sockets);
+        0.5 * a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| (x - y).abs())
+            .sum::<f64>()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs([
+            ("static", Json::Num(self.static_frac)),
+            ("local", Json::Num(self.local_frac)),
+            ("perthread", Json::Num(self.perthread_frac)),
+            ("interleave", Json::Num(self.interleave_frac())),
+            ("static_socket", Json::Num(self.static_socket as f64)),
+            ("misfit", Json::Num(self.misfit)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ChannelSignature, String> {
+        let f = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("signature: missing {k}"))
+        };
+        Ok(ChannelSignature {
+            static_frac: f("static")?,
+            local_frac: f("local")?,
+            perthread_frac: f("perthread")?,
+            static_socket: f("static_socket")? as usize,
+            misfit: f("misfit")?,
+        })
+    }
+}
+
+/// The full application signature: separate read and write channels plus
+/// the combined fit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BandwidthSignature {
+    pub read: ChannelSignature,
+    pub write: ChannelSignature,
+    /// Fitted on reads+writes summed — the robust fallback for channels
+    /// with negligible volume.
+    pub combined: ChannelSignature,
+    /// Byte volumes (read, write) observed during the symmetric profiling
+    /// run; used to weight channel reliability.
+    pub read_bytes: f64,
+    pub write_bytes: f64,
+}
+
+impl BandwidthSignature {
+    /// Fraction of observed traffic that is reads.
+    pub fn read_share(&self) -> f64 {
+        let total = self.read_bytes + self.write_bytes;
+        if total > 0.0 {
+            self.read_bytes / total
+        } else {
+            0.5
+        }
+    }
+
+    /// Volume-weighted reallocation between two full signatures —
+    /// Fig 14's per-benchmark "change in bandwidth placement".
+    pub fn reallocation(&self, other: &BandwidthSignature, sockets: usize)
+        -> f64 {
+        let rs = 0.5 * (self.read_share() + other.read_share());
+        rs * self.read.reallocation(&other.read, sockets)
+            + (1.0 - rs) * self.write.reallocation(&other.write, sockets)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs([
+            ("read", self.read.to_json()),
+            ("write", self.write.to_json()),
+            ("combined", self.combined.to_json()),
+            ("read_bytes", Json::Num(self.read_bytes)),
+            ("write_bytes", Json::Num(self.write_bytes)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<BandwidthSignature, String> {
+        Ok(BandwidthSignature {
+            read: ChannelSignature::from_json(
+                j.get("read").ok_or("signature: missing read")?,
+            )?,
+            write: ChannelSignature::from_json(
+                j.get("write").ok_or("signature: missing write")?,
+            )?,
+            combined: ChannelSignature::from_json(
+                j.get("combined").ok_or("signature: missing combined")?,
+            )?,
+            read_bytes: j
+                .get("read_bytes")
+                .and_then(Json::as_f64)
+                .ok_or("signature: missing read_bytes")?,
+            write_bytes: j
+                .get("write_bytes")
+                .and_then(Json::as_f64)
+                .ok_or("signature: missing write_bytes")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig(a: f64, l: f64, p: f64, sock: usize) -> ChannelSignature {
+        ChannelSignature::new(a, l, p, sock)
+    }
+
+    #[test]
+    fn interleave_is_remainder() {
+        let s = sig(0.2, 0.35, 0.3, 1);
+        assert!((s.interleave_frac() - 0.15).abs() < 1e-12);
+    }
+
+    #[test]
+    fn class_vector_attributes_static_to_socket() {
+        let s = sig(0.4, 0.3, 0.2, 1);
+        let got = s.class_vector(2);
+        for (g, w) in got.iter().zip(&[0.0, 0.4, 0.3, 0.2, 0.1]) {
+            assert!((g - w).abs() < 1e-12, "{got:?}");
+        }
+    }
+
+    #[test]
+    fn reallocation_zero_for_identical() {
+        let s = sig(0.2, 0.35, 0.3, 1);
+        assert_eq!(s.reallocation(&s, 2), 0.0);
+    }
+
+    #[test]
+    fn reallocation_one_for_disjoint() {
+        let a = sig(1.0, 0.0, 0.0, 0);
+        let b = sig(0.0, 1.0, 0.0, 0);
+        assert_eq!(a.reallocation(&b, 2), 1.0);
+    }
+
+    #[test]
+    fn reallocation_counts_static_socket_moves() {
+        // Same fractions, static socket flips: all static mass moves.
+        let a = sig(0.5, 0.5, 0.0, 0);
+        let b = sig(0.5, 0.5, 0.0, 1);
+        assert_eq!(a.reallocation(&b, 2), 0.5);
+    }
+
+    #[test]
+    fn reallocation_is_symmetric_and_triangleish() {
+        let a = sig(0.2, 0.3, 0.4, 0);
+        let b = sig(0.1, 0.5, 0.2, 1);
+        let c = sig(0.0, 0.0, 1.0, 0);
+        assert!((a.reallocation(&b, 2) - b.reallocation(&a, 2)).abs()
+                < 1e-12);
+        assert!(a.reallocation(&c, 2)
+                <= a.reallocation(&b, 2) + b.reallocation(&c, 2) + 1e-12);
+    }
+
+    #[test]
+    fn volume_weighting_discounts_empty_channel() {
+        // equake-style: huge read volume, negligible writes — a big write
+        // signature flip barely moves the weighted metric.
+        let mk = |w: ChannelSignature| BandwidthSignature {
+            read: sig(0.2, 0.3, 0.4, 0),
+            write: w,
+            combined: sig(0.2, 0.3, 0.4, 0),
+            read_bytes: 0.97,
+            write_bytes: 0.03,
+        };
+        let a = mk(sig(1.0, 0.0, 0.0, 0));
+        let b = mk(sig(0.0, 1.0, 0.0, 0));
+        assert!(a.reallocation(&b, 2) < 0.05);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = BandwidthSignature {
+            read: sig(0.2, 0.35, 0.3, 1),
+            write: sig(0.1, 0.5, 0.2, 0),
+            combined: sig(0.15, 0.4, 0.25, 1),
+            read_bytes: 1e9,
+            write_bytes: 2e8,
+        };
+        let back = BandwidthSignature::from_json(&s.to_json()).unwrap();
+        assert_eq!(s, back);
+    }
+}

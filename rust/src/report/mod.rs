@@ -1,0 +1,200 @@
+//! Terminal reporting: markdown tables, horizontal bar charts, and ASCII
+//! CDF plots — the presentation layer for the regenerated figures.
+
+/// Render a markdown table.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncols = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        assert_eq!(row.len(), ncols, "ragged table row");
+        for (w, cell) in widths.iter_mut().zip(row) {
+            *w = (*w).max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let body = cells
+            .iter()
+            .zip(widths)
+            .map(|(c, w)| format!("{c:<w$}"))
+            .collect::<Vec<_>>()
+            .join(" | ");
+        format!("| {body} |\n")
+    };
+    out.push_str(&fmt_row(
+        &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+        &widths,
+    ));
+    out.push_str(&format!(
+        "|{}|\n",
+        widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("|")
+    ));
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+    }
+    out
+}
+
+/// Horizontal bar chart: one labelled bar per entry, scaled to `width`.
+pub fn bar_chart(entries: &[(String, f64)], width: usize) -> String {
+    let max = entries
+        .iter()
+        .map(|(_, v)| *v)
+        .fold(0.0f64, f64::max)
+        .max(1e-12);
+    let label_w = entries
+        .iter()
+        .map(|(l, _)| l.len())
+        .max()
+        .unwrap_or(0);
+    let mut out = String::new();
+    for (label, v) in entries {
+        let n = ((v / max) * width as f64).round() as usize;
+        out.push_str(&format!(
+            "{label:<label_w$} | {}{} {v:.3}\n",
+            "#".repeat(n),
+            " ".repeat(width - n),
+        ));
+    }
+    out
+}
+
+/// Stacked signature bar: static/local/perthread/interleave shares in a
+/// fixed-width bar (the Fig 12/13 presentation).
+pub fn signature_bar(static_f: f64, local_f: f64, pt_f: f64, il_f: f64,
+                     width: usize) -> String {
+    let total = (static_f + local_f + pt_f + il_f).max(1e-12);
+    let mut spans = [
+        (static_f / total, 'S'),
+        (local_f / total, 'L'),
+        (pt_f / total, 'P'),
+        (il_f / total, 'I'),
+    ]
+    .iter()
+    .map(|&(f, c)| ((f * width as f64).round() as usize, c))
+    .collect::<Vec<_>>();
+    // Fix rounding drift on the widest span.
+    let drawn: usize = spans.iter().map(|s| s.0).sum();
+    if drawn != width {
+        let widest = spans
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, s)| s.0)
+            .map(|(i, _)| i)
+            .unwrap();
+        spans[widest].0 = (spans[widest].0 + width).saturating_sub(drawn);
+    }
+    let mut out = String::with_capacity(width + 2);
+    out.push('[');
+    for (n, c) in spans {
+        for _ in 0..n {
+            out.push(c);
+        }
+    }
+    out.push(']');
+    out
+}
+
+/// ASCII CDF plot over `(x, fraction)` points.
+pub fn cdf_plot(points: &[(f64, f64)], height: usize, title: &str)
+    -> String {
+    assert!(height >= 2 && !points.is_empty());
+    let width = points.len();
+    let mut grid = vec![vec![' '; width]; height];
+    for (col, &(_, frac)) in points.iter().enumerate() {
+        let row = ((1.0 - frac) * (height - 1) as f64).round() as usize;
+        grid[row.min(height - 1)][col] = '*';
+    }
+    let mut out = format!("{title}\n");
+    for (i, row) in grid.iter().enumerate() {
+        let frac = 1.0 - i as f64 / (height - 1) as f64;
+        out.push_str(&format!("{:>5.0}% |{}\n", frac * 100.0,
+                              row.iter().collect::<String>()));
+    }
+    let lo = points[0].0;
+    let hi = points[points.len() - 1].0;
+    out.push_str(&format!("       {}\n", "-".repeat(width)));
+    out.push_str(&format!("       {lo:<.2}{:>w$.2}\n", hi,
+                          w = width.saturating_sub(4)));
+    out
+}
+
+/// Format bytes/s with adaptive unit.
+pub fn fmt_bw(bytes_per_s: f64) -> String {
+    if bytes_per_s >= 1e9 {
+        format!("{:.2} GB/s", bytes_per_s / 1e9)
+    } else if bytes_per_s >= 1e6 {
+        format!("{:.2} MB/s", bytes_per_s / 1e6)
+    } else {
+        format!("{bytes_per_s:.0} B/s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_aligns_columns() {
+        let t = table(&["name", "v"],
+                      &[vec!["a".into(), "1".into()],
+                        vec!["long-name".into(), "22".into()]]);
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("name"));
+        assert!(lines[2].starts_with("| a"));
+        // All rows same width.
+        assert_eq!(lines[0].len(), lines[2].len());
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        table(&["a", "b"], &[vec!["x".into()]]);
+    }
+
+    #[test]
+    fn bar_chart_scales_to_max() {
+        let c = bar_chart(&[("a".into(), 1.0), ("b".into(), 2.0)], 10);
+        let lines: Vec<&str> = c.lines().collect();
+        assert!(lines[1].matches('#').count() == 10);
+        assert!(lines[0].matches('#').count() == 5);
+    }
+
+    #[test]
+    fn signature_bar_has_exact_width() {
+        for (a, l, p, i) in [(0.2, 0.35, 0.3, 0.15), (1.0, 0.0, 0.0, 0.0),
+                             (0.25, 0.25, 0.25, 0.25)] {
+            let bar = signature_bar(a, l, p, i, 40);
+            assert_eq!(bar.len(), 42, "{bar}");
+        }
+    }
+
+    #[test]
+    fn signature_bar_pure_static() {
+        let bar = signature_bar(1.0, 0.0, 0.0, 0.0, 8);
+        assert_eq!(bar, "[SSSSSSSS]");
+    }
+
+    #[test]
+    fn cdf_plot_renders() {
+        let pts: Vec<(f64, f64)> =
+            (0..20).map(|i| (i as f64, i as f64 / 19.0)).collect();
+        let plot = cdf_plot(&pts, 5, "test cdf");
+        assert!(plot.contains("test cdf"));
+        assert!(plot.contains('*'));
+        assert!(plot.contains("100%"));
+    }
+
+    #[test]
+    fn bandwidth_formatting() {
+        assert_eq!(fmt_bw(2.5e9), "2.50 GB/s");
+        assert_eq!(fmt_bw(3.0e6), "3.00 MB/s");
+        assert_eq!(fmt_bw(10.0), "10 B/s");
+    }
+}

@@ -1,0 +1,389 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the only place the `xla` crate is touched.  Python never runs
+//! here — the artifacts are self-contained HLO text (the interchange
+//! format: jax ≥ 0.5 serialized protos use 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//!
+//! Design:
+//! * [`Artifacts`] parses `artifacts/manifest.json` and validates shapes.
+//! * [`Engine`] owns one PJRT client plus a lazily-compiled executable per
+//!   pipeline; compiled executables are cached for the process lifetime.
+//! * All pipelines are compiled for a fixed batch `B` (64); [`Batch`]
+//!   handles padding partial batches and slicing results back.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Names of the compiled pipelines (must match `python/compile/model.py`).
+pub const PIPELINES: [&str; 4] = [
+    "fit_signature",
+    "signature_apply",
+    "predict_counters",
+    "predict_performance",
+];
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub sockets: usize,
+    pub n_flows: usize,
+    pub n_resources: usize,
+    /// Flow→resource incidence baked into `predict_performance`.
+    pub incidence: Vec<Vec<f64>>,
+    pub pipelines: HashMap<String, PipelineMeta>,
+}
+
+#[derive(Clone, Debug)]
+pub struct PipelineMeta {
+    pub file: String,
+    pub arg_shapes: Vec<Vec<usize>>,
+    pub result_shapes: Vec<Vec<usize>>,
+}
+
+impl Artifacts {
+    /// Locate the artifacts directory: explicit path, `$NUMABW_ARTIFACTS`,
+    /// or `./artifacts` relative to the workspace root.
+    pub fn locate(explicit: Option<&Path>) -> Result<Artifacts> {
+        let dir = match explicit {
+            Some(p) => p.to_path_buf(),
+            None => std::env::var_os("NUMABW_ARTIFACTS")
+                .map(PathBuf::from)
+                .unwrap_or_else(|| PathBuf::from("artifacts")),
+        };
+        Self::load(&dir)
+    }
+
+    pub fn load(dir: &Path) -> Result<Artifacts> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(
+            || format!(
+                "reading {} — run `make artifacts` first",
+                manifest_path.display()
+            ),
+        )?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let get_usize = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest: missing {k}"))
+        };
+        let incidence = j
+            .get("incidence")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest: missing incidence"))?
+            .iter()
+            .map(|row| {
+                row.as_f64_vec()
+                    .ok_or_else(|| anyhow!("manifest: bad incidence row"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut pipelines = HashMap::new();
+        let pmap = match j.get("pipelines") {
+            Some(Json::Obj(m)) => m,
+            _ => bail!("manifest: missing pipelines"),
+        };
+        for (name, meta) in pmap {
+            let shapes = |k: &str| -> Result<Vec<Vec<usize>>> {
+                meta.get(k)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("manifest: {name} missing {k}"))?
+                    .iter()
+                    .map(|s| {
+                        Ok(s.as_f64_vec()
+                            .ok_or_else(|| anyhow!("bad shape"))?
+                            .into_iter()
+                            .map(|d| d as usize)
+                            .collect())
+                    })
+                    .collect()
+            };
+            pipelines.insert(
+                name.clone(),
+                PipelineMeta {
+                    file: meta
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("manifest: {name} missing file"))?
+                        .to_string(),
+                    arg_shapes: shapes("args")?,
+                    result_shapes: shapes("results")?,
+                },
+            );
+        }
+        let a = Artifacts {
+            dir: dir.to_path_buf(),
+            batch: get_usize("batch")?,
+            sockets: get_usize("sockets")?,
+            n_flows: get_usize("n_flows")?,
+            n_resources: get_usize("n_resources")?,
+            incidence,
+            pipelines,
+        };
+        for p in PIPELINES {
+            if !a.pipelines.contains_key(p) {
+                bail!("manifest: pipeline {p} missing — regenerate artifacts");
+            }
+        }
+        Ok(a)
+    }
+}
+
+/// A host-side tensor: flat f32 data + shape.  The runtime's lingua franca.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, shape: Vec<usize>) -> Tensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>(),
+                   "tensor data/shape mismatch");
+        Tensor { data, shape }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            data: vec![0.0; shape.iter().product()],
+            shape: shape.to_vec(),
+        }
+    }
+
+    /// Rows (leading-dim slices) as chunks.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let stride: usize = self.shape[1..].iter().product();
+        &self.data[i * stride..(i + 1) * stride]
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> =
+            shape.dims().iter().map(|&d| d as usize).collect();
+        Ok(Tensor::new(lit.to_vec::<f32>()?, dims))
+    }
+}
+
+/// The runtime engine: PJRT client + compiled-executable cache.
+pub struct Engine {
+    pub artifacts: Artifacts,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifacts directory.
+    pub fn cpu(artifacts: Artifacts) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            artifacts,
+            client,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Convenience: locate artifacts and build the engine.
+    pub fn from_env() -> Result<Engine> {
+        Self::cpu(Artifacts::locate(None)?)
+    }
+
+    pub fn batch(&self) -> usize {
+        self.artifacts.batch
+    }
+
+    /// Compile (or fetch from cache) a pipeline executable.
+    fn executable(&self, name: &str)
+        -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let meta = self
+            .artifacts
+            .pipelines
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown pipeline {name}"))?;
+        let path = self.artifacts.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?,
+        );
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Force-compile every pipeline (startup warmup; keeps compile cost off
+    /// the first prediction).
+    pub fn warmup(&self) -> Result<()> {
+        for p in PIPELINES {
+            self.executable(p)?;
+        }
+        Ok(())
+    }
+
+    /// Execute a pipeline on full-batch tensors.  Inputs must match the
+    /// manifest's argument shapes exactly; outputs are the tuple members.
+    pub fn execute(&self, name: &str, inputs: &[Tensor])
+        -> Result<Vec<Tensor>> {
+        let meta = &self.artifacts.pipelines[name];
+        if inputs.len() != meta.arg_shapes.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                meta.arg_shapes.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, want)) in inputs.iter().zip(&meta.arg_shapes).enumerate()
+        {
+            if &t.shape != want {
+                bail!(
+                    "{name}: input {i} has shape {:?}, artifact wants {:?}",
+                    t.shape,
+                    want
+                );
+            }
+        }
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(Tensor::to_literal)
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        // Lowered with return_tuple=True: single tuple output.
+        let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
+        let out: Vec<Tensor> = tuple
+            .iter()
+            .map(Tensor::from_literal)
+            .collect::<Result<_>>()?;
+        for (i, (t, want)) in out.iter().zip(&meta.result_shapes).enumerate()
+        {
+            if &t.shape != want {
+                bail!(
+                    "{name}: result {i} has shape {:?}, manifest says {:?}",
+                    t.shape,
+                    want
+                );
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Batch padding: packs `n <= B` logical rows into full-batch tensors and
+/// slices results back to `n` rows.
+pub struct Batch {
+    pub n: usize,
+    pub capacity: usize,
+}
+
+impl Batch {
+    pub fn new(n: usize, capacity: usize) -> Batch {
+        assert!(n <= capacity, "batch overflow: {n} > {capacity}");
+        assert!(n > 0, "empty batch");
+        Batch { n, capacity }
+    }
+
+    /// Pack per-row data (each row `row_len` long) into a padded tensor of
+    /// shape `[capacity, ...dims]`.  Padding rows repeat the LAST row —
+    /// every pipeline is row-independent, and repeating a valid row keeps
+    /// padded lanes numerically benign (no 0/0 paths).
+    pub fn pack(&self, rows: &[Vec<f32>], dims: &[usize]) -> Tensor {
+        assert_eq!(rows.len(), self.n);
+        let row_len: usize = dims.iter().product();
+        let mut data = Vec::with_capacity(self.capacity * row_len);
+        for r in rows {
+            assert_eq!(r.len(), row_len);
+            data.extend_from_slice(r);
+        }
+        for _ in self.n..self.capacity {
+            let last = rows.last().unwrap();
+            data.extend_from_slice(last);
+        }
+        let mut shape = vec![self.capacity];
+        shape.extend_from_slice(dims);
+        Tensor::new(data, shape)
+    }
+
+    /// Slice the first `n` rows back out of a result tensor.
+    pub fn unpack(&self, t: &Tensor) -> Vec<Vec<f32>> {
+        assert_eq!(t.shape[0], self.capacity);
+        (0..self.n).map(|i| t.row(i).to_vec()).collect()
+    }
+}
+
+/// Split `n` logical rows into batches of at most `capacity`.
+pub fn batches(n: usize, capacity: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    while start < n {
+        let len = (n - start).min(capacity);
+        out.push((start, len));
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = Tensor::new(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        assert_eq!(t.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_rejects_mismatch() {
+        Tensor::new(vec![1.0; 3], vec![2, 2]);
+    }
+
+    #[test]
+    fn batch_pack_unpack_roundtrip() {
+        let b = Batch::new(3, 8);
+        let rows = vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        let t = b.pack(&rows, &[2]);
+        assert_eq!(t.shape, vec![8, 2]);
+        // Padding repeats the last row.
+        assert_eq!(t.row(7), &[5.0, 6.0]);
+        assert_eq!(b.unpack(&t), rows);
+    }
+
+    #[test]
+    #[should_panic]
+    fn batch_overflow_panics() {
+        Batch::new(65, 64);
+    }
+
+    #[test]
+    fn batches_cover_range() {
+        assert_eq!(batches(130, 64), vec![(0, 64), (64, 64), (128, 2)]);
+        assert_eq!(batches(64, 64), vec![(0, 64)]);
+        assert_eq!(batches(1, 64), vec![(0, 1)]);
+    }
+}

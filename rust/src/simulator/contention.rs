@@ -1,0 +1,308 @@
+//! Bounded max-min fair bandwidth allocation — the Rust reference
+//! implementation of the contention model (the Pallas `maxmin` kernel is
+//! the batched HLO twin; `python/tests/test_maxmin.py` pins both to a third
+//! exact implementation).
+//!
+//! The simulated machine arbitrates per-request at every memory channel and
+//! interconnect link, which in steady state approximates max-min fairness
+//! across the competing flows: every flow ramps until it is satisfied or
+//! some resource on its path saturates (progressive water-filling).
+
+/// A flow: a demand (bytes/s) across a set of resources.
+#[derive(Clone, Debug)]
+pub struct Flow {
+    pub demand: f64,
+    /// Resource indices this flow consumes (1 or 2 in our topologies:
+    /// a memory channel, plus an interconnect link if remote).
+    pub resources: Vec<usize>,
+}
+
+impl Flow {
+    pub fn new(demand: f64, resources: &[usize]) -> Flow {
+        Flow {
+            demand,
+            resources: resources.to_vec(),
+        }
+    }
+}
+
+/// Relative saturation tolerance: a resource whose residual is below
+/// `SAT_TOL * cap` is considered saturated.
+const SAT_TOL: f64 = 1e-9;
+
+/// Reusable workspace for [`maxmin_into`]: lets the simulator's epoch loop
+/// resolve contention thousands of times without allocating.
+#[derive(Default, Clone, Debug)]
+pub struct MaxminScratch {
+    frozen: Vec<bool>,
+    residual: Vec<f64>,
+    counts: Vec<u32>,
+    sat: Vec<bool>,
+}
+
+/// Exact progressive-filling max-min allocation.
+///
+/// Invariants on the result (tested below):
+///   * `alloc[f] <= flows[f].demand`
+///   * per-resource load `<= cap`
+///   * max-min optimality: no flow can gain without taking from a flow
+///     with an equal or smaller allocation.
+pub fn maxmin(flows: &[Flow], caps: &[f64]) -> Vec<f64> {
+    let demands: Vec<f64> = flows.iter().map(|f| f.demand).collect();
+    let resources: Vec<&[usize]> =
+        flows.iter().map(|f| f.resources.as_slice()).collect();
+    let mut alloc = vec![0.0; flows.len()];
+    let mut scratch = MaxminScratch::default();
+    maxmin_into(&demands, &resources, caps, &mut alloc, &mut scratch);
+    alloc
+}
+
+/// Allocation core over parallel arrays (`demands[i]` uses
+/// `resources[i]`), writing into `alloc` and reusing `scratch` buffers —
+/// the zero-allocation form the simulator's hot loop calls.
+pub fn maxmin_into(demands: &[f64], resources: &[&[usize]], caps: &[f64],
+                   alloc: &mut [f64], scratch: &mut MaxminScratch) {
+    let nf = demands.len();
+    let nr = caps.len();
+    debug_assert_eq!(resources.len(), nf);
+    debug_assert_eq!(alloc.len(), nf);
+
+    scratch.frozen.clear();
+    scratch.frozen.resize(nf, false);
+    scratch.residual.clear();
+    scratch.residual.extend_from_slice(caps);
+    scratch.counts.clear();
+    scratch.counts.resize(nr, 0);
+    scratch.sat.clear();
+    scratch.sat.resize(nr, false);
+    let frozen = &mut scratch.frozen;
+    let residual = &mut scratch.residual;
+    let counts = &mut scratch.counts;
+    let sat = &mut scratch.sat;
+
+    let mut n_active = 0usize;
+    for i in 0..nf {
+        debug_assert!(resources[i].iter().all(|&r| r < nr),
+                      "flow {i} references missing resource");
+        alloc[i] = 0.0;
+        if demands[i] <= 0.0 {
+            frozen[i] = true;
+        } else {
+            n_active += 1;
+        }
+    }
+
+    // Each round saturates >= 1 resource or satisfies >= 1 flow.
+    for _round in 0..(nf + nr + 2) {
+        if n_active == 0 {
+            break;
+        }
+        // Count active flows per resource.
+        for c in counts.iter_mut() {
+            *c = 0;
+        }
+        for i in 0..nf {
+            if !frozen[i] {
+                for &r in resources[i] {
+                    counts[r] += 1;
+                }
+            }
+        }
+        // Uniform level increment: the largest step every active flow can
+        // take together without oversubscribing any resource.  Flows with
+        // less remaining demand take only what they need (and freeze), so
+        // each round saturates a resource or satisfies every flow whose
+        // remaining demand is below the level — the same semantics as the
+        // Pallas kernel, converging in ~#resources rounds instead of one
+        // flow-retirement per round.
+        let mut level = f64::INFINITY;
+        for r in 0..nr {
+            if counts[r] > 0 {
+                level = level.min(residual[r] / counts[r] as f64);
+            }
+        }
+        if !level.is_finite() {
+            // No active flow touches any resource: satisfy them outright.
+            for i in 0..nf {
+                if !frozen[i] {
+                    alloc[i] = demands[i];
+                    frozen[i] = true;
+                }
+            }
+            break;
+        }
+        let level = level.max(0.0);
+
+        // Advance all active flows by min(level, remaining demand).
+        for i in 0..nf {
+            if frozen[i] {
+                continue;
+            }
+            let grow = level.min(demands[i] - alloc[i]);
+            alloc[i] += grow;
+            for &r in resources[i] {
+                residual[r] -= grow;
+            }
+        }
+        // Freeze satisfied flows and flows crossing saturated resources.
+        for r in 0..nr {
+            sat[r] = residual[r] <= SAT_TOL * caps[r].max(1.0);
+        }
+        for i in 0..nf {
+            if frozen[i] {
+                continue;
+            }
+            if demands[i] - alloc[i] <= SAT_TOL * demands[i].max(1.0)
+                || resources[i].iter().any(|&r| sat[r])
+            {
+                frozen[i] = true;
+                n_active -= 1;
+            }
+        }
+    }
+}
+
+/// Convenience: allocation plus per-resource loads.
+pub fn maxmin_with_loads(flows: &[Flow], caps: &[f64])
+    -> (Vec<f64>, Vec<f64>) {
+    let alloc = maxmin(flows, caps);
+    let mut loads = vec![0.0; caps.len()];
+    for (a, f) in alloc.iter().zip(flows) {
+        for &r in &f.resources {
+            loads[r] += a;
+        }
+    }
+    (alloc, loads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(demand: f64, rs: &[usize]) -> Flow {
+        Flow::new(demand, rs)
+    }
+
+    #[test]
+    fn single_bottleneck_fair_split() {
+        let alloc = maxmin(&[f(8.0, &[0]), f(3.0, &[0])], &[10.0]);
+        assert!((alloc[0] - 7.0).abs() < 1e-9);
+        assert!((alloc[1] - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unconstrained_get_demand() {
+        let alloc = maxmin(&[f(5.0, &[0]), f(7.0, &[1])], &[100.0, 100.0]);
+        assert_eq!(alloc, vec![5.0, 7.0]);
+    }
+
+    #[test]
+    fn equal_split_on_saturation() {
+        let flows: Vec<Flow> = (0..4).map(|_| f(10.0, &[0])).collect();
+        let alloc = maxmin(&flows, &[12.0]);
+        for a in alloc {
+            assert!((a - 3.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn cascade_after_freeze() {
+        // Flow 0: r0 only, demand 6.  Flow 1: r0+r1, r1 caps it at 2.
+        let alloc = maxmin(&[f(6.0, &[0]), f(10.0, &[0, 1])], &[10.0, 2.0]);
+        assert!((alloc[0] - 6.0).abs() < 1e-9, "{alloc:?}");
+        assert!((alloc[1] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_resource_chain() {
+        let alloc = maxmin(&[f(10.0, &[0, 1]), f(10.0, &[1])], &[10.0, 4.0]);
+        assert!((alloc[0] - 2.0).abs() < 1e-9);
+        assert!((alloc[1] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_demand_flows_stay_zero() {
+        let alloc = maxmin(&[f(0.0, &[0]), f(5.0, &[0])], &[10.0]);
+        assert_eq!(alloc, vec![0.0, 5.0]);
+    }
+
+    #[test]
+    fn feasibility_invariants_random() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(99);
+        for _ in 0..200 {
+            let nr = 2 + rng.below(6) as usize;
+            let nf = 1 + rng.below(12) as usize;
+            let caps: Vec<f64> =
+                (0..nr).map(|_| rng.uniform(5.0, 100.0)).collect();
+            let flows: Vec<Flow> = (0..nf)
+                .map(|_| {
+                    let k = 1 + rng.below(2) as usize;
+                    let rs: Vec<usize> = (0..k)
+                        .map(|_| rng.below(nr as u64) as usize)
+                        .collect();
+                    f(rng.uniform(0.0, 80.0), &rs)
+                })
+                .collect();
+            let (alloc, loads) = maxmin_with_loads(&flows, &caps);
+            for (a, fl) in alloc.iter().zip(&flows) {
+                assert!(*a <= fl.demand + 1e-6);
+                assert!(*a >= 0.0);
+            }
+            for (l, c) in loads.iter().zip(&caps) {
+                assert!(*l <= c * (1.0 + 1e-6) + 1e-9, "load {l} cap {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn maxmin_optimality_random() {
+        // No flow can be below another flow sharing a resource unless it is
+        // demand-limited (bounded max-min characterisation).
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(7);
+        for _ in 0..100 {
+            let nr = 2 + rng.below(4) as usize;
+            let caps: Vec<f64> =
+                (0..nr).map(|_| rng.uniform(5.0, 50.0)).collect();
+            let flows: Vec<Flow> = (0..6)
+                .map(|_| {
+                    f(rng.uniform(1.0, 60.0),
+                      &[rng.below(nr as u64) as usize])
+                })
+                .collect();
+            let (alloc, loads) = maxmin_with_loads(&flows, &caps);
+            for i in 0..flows.len() {
+                let demand_limited = alloc[i] >= flows[i].demand - 1e-6;
+                if demand_limited {
+                    continue;
+                }
+                // Rate-limited flow: every resource it uses must be
+                // saturated, and it must be among the top allocations there.
+                for &r in &flows[i].resources {
+                    assert!(loads[r] >= caps[r] - 1e-6,
+                            "rate-limited flow on unsaturated resource");
+                    for j in 0..flows.len() {
+                        if flows[j].resources.contains(&r) {
+                            assert!(alloc[j] <= alloc[i] + 1e-6
+                                    || alloc[j] <= flows[j].demand + 1e-6);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn work_conserving_when_capacity_ample() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(13);
+        let flows: Vec<Flow> = (0..8)
+            .map(|i| f(rng.uniform(0.1, 1.0), &[i % 4]))
+            .collect();
+        let alloc = maxmin(&flows, &[100.0; 4]);
+        for (a, fl) in alloc.iter().zip(&flows) {
+            assert!((a - fl.demand).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,104 @@
+//! Thread issue-rate model: how memory latency shapes a thread's bandwidth
+//! *demand* before any contention is applied.
+//!
+//! A fully prefetchable streaming kernel is insensitive to access latency —
+//! its demand is the core's peak issue bandwidth.  A dependent-load chase
+//! (the paper's synthetic, hash-join probes, sparse gathers) issues one
+//! access per round-trip, so its demand scales with `1 / latency`.  Real
+//! workloads sit between the two; `WorkloadSpec::latency_sensitivity`
+//! interpolates:
+//!
+//! ```text
+//! demand = peak * ((1 - s) + s * lat_local / lat_avg)
+//! ```
+//!
+//! where `lat_avg` is the thread's expected access latency under its bank
+//! split.  With `s = 1` and an all-remote split this reduces to the
+//! classic latency-bound slowdown `lat_local / lat_remote`; with `s = 0`
+//! placement does not affect demand at all (only contention does).
+
+use crate::topology::MachineTopology;
+
+/// Expected access latency (ns) for a thread on `socket` whose traffic
+/// lands on banks per `bank_split`.
+pub fn avg_latency_ns(machine: &MachineTopology, socket: usize,
+                      bank_split: &[f64]) -> f64 {
+    debug_assert_eq!(bank_split.len(), machine.sockets);
+    let wsum: f64 = bank_split.iter().sum();
+    if wsum <= 0.0 {
+        return machine.local_latency_ns;
+    }
+    bank_split
+        .iter()
+        .enumerate()
+        .map(|(d, w)| w * machine.latency_ns(socket, d))
+        .sum::<f64>()
+        / wsum
+}
+
+/// Uncontended bandwidth demand (bytes/s) of one thread.
+pub fn thread_demand(machine: &MachineTopology, socket: usize,
+                     bank_split: &[f64], peak_bw: f64,
+                     latency_sensitivity: f64) -> f64 {
+    let lat = avg_latency_ns(machine, socket, bank_split);
+    let scale = (1.0 - latency_sensitivity)
+        + latency_sensitivity * machine.local_latency_ns / lat;
+    peak_bw * scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> MachineTopology {
+        // local 90 ns, remote 200 ns.
+        MachineTopology::xeon_e5_2630_v3()
+    }
+
+    #[test]
+    fn all_local_latency() {
+        assert_eq!(avg_latency_ns(&m(), 0, &[1.0, 0.0]), 90.0);
+        assert_eq!(avg_latency_ns(&m(), 1, &[0.0, 1.0]), 90.0);
+    }
+
+    #[test]
+    fn all_remote_latency() {
+        assert_eq!(avg_latency_ns(&m(), 0, &[0.0, 1.0]), 200.0);
+    }
+
+    #[test]
+    fn mixed_latency_interpolates() {
+        let lat = avg_latency_ns(&m(), 0, &[0.5, 0.5]);
+        assert!((lat - 145.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn streaming_demand_ignores_placement() {
+        let local = thread_demand(&m(), 0, &[1.0, 0.0], 1e9, 0.0);
+        let remote = thread_demand(&m(), 0, &[0.0, 1.0], 1e9, 0.0);
+        assert_eq!(local, remote);
+        assert_eq!(local, 1e9);
+    }
+
+    #[test]
+    fn dependent_chase_demand_scales_with_latency() {
+        let local = thread_demand(&m(), 0, &[1.0, 0.0], 1e9, 1.0);
+        let remote = thread_demand(&m(), 0, &[0.0, 1.0], 1e9, 1.0);
+        assert_eq!(local, 1e9);
+        assert!((remote - 1e9 * 90.0 / 200.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn sensitivity_interpolates_between_extremes() {
+        let half = thread_demand(&m(), 0, &[0.0, 1.0], 1e9, 0.5);
+        let lo = thread_demand(&m(), 0, &[0.0, 1.0], 1e9, 1.0);
+        let hi = thread_demand(&m(), 0, &[0.0, 1.0], 1e9, 0.0);
+        assert!(lo < half && half < hi);
+        assert!((half - 0.5 * (lo + hi)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_split_defaults_to_local() {
+        assert_eq!(avg_latency_ns(&m(), 0, &[0.0, 0.0]), 90.0);
+    }
+}

@@ -1,0 +1,20 @@
+//! Epoch-based NUMA machine simulator — the testbed substrate (DESIGN.md
+//! §1): produces the performance-counter readings the paper samples from
+//! real Xeons.
+//!
+//! * [`contention`] — max-min-fair water-filling over channels + QPI.
+//! * [`placement`]  — thread pinning, §5.1 profiling placements, numactl
+//!   page policies.
+//! * [`latency`]    — latency-sensitive issue-rate (demand) model.
+//! * [`noise`]      — counter jitter, QPI background traffic, rate wobble.
+//! * [`engine`]     — the run loop tying it together.
+
+pub mod contention;
+pub mod engine;
+pub mod latency;
+pub mod noise;
+pub mod placement;
+
+pub use engine::{RunResult, SimConfig, Simulator};
+pub use noise::NoiseConfig;
+pub use placement::{MemoryPolicy, PageAllocator, ThreadPlacement};

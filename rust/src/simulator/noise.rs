@@ -1,0 +1,152 @@
+//! Measurement and machine noise (paper §2.1.1, §6.1).
+//!
+//! Three effects the real testbed exhibits and the model has to survive:
+//!
+//! 1. **Counter jitter** — uncore counters are sampled, not transactional;
+//!    consecutive identical runs differ by a fraction of a percent.  (The
+//!    paper's Fig 12 attributes its <0.9 % synthetic miscategorisation to
+//!    exactly this background noise.)
+//! 2. **QPI background traffic** — §2.1.1: the interconnect carries
+//!    substantial non-application traffic (snoops, prefetch, kernel).  The
+//!    paper found the QPI *counters* unusable for modeling; here that
+//!    traffic instead shaves a stochastic few percent off the usable link
+//!    capacity, as it does on silicon.
+//! 3. **Execution-rate wobble** — per-socket instruction rates drift with
+//!    frequency scaling; a small multiplicative jitter on retired
+//!    instructions models it (the §5.2 normalization must absorb it).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NoiseConfig {
+    /// σ of the multiplicative jitter applied to every counter reading.
+    pub counter_sigma: f64,
+    /// Mean fraction of QPI capacity consumed by background traffic.
+    pub qpi_background: f64,
+    /// σ of the QPI background fraction (per epoch).
+    pub qpi_sigma: f64,
+    /// σ of the per-socket instruction-rate jitter.
+    pub rate_sigma: f64,
+    /// Mean *absolute* background traffic per bank counter component
+    /// (bytes/s): kernel threads, prefetcher junk, daemons.  Scale-free
+    /// multiplicative jitter cannot reproduce Fig 18's shape — on real
+    /// machines the noise floor is absolute, so benchmarks that move
+    /// little data (ep, art) see proportionally larger distortion.
+    pub background_bw: f64,
+}
+
+impl NoiseConfig {
+    /// Calibrated default: sub-percent counter noise, a few percent of QPI
+    /// lost to background traffic.
+    pub fn realistic() -> NoiseConfig {
+        NoiseConfig {
+            counter_sigma: 0.004,
+            qpi_background: 0.03,
+            qpi_sigma: 0.01,
+            rate_sigma: 0.008,
+            background_bw: 12.0e6, // ~6 MB/s per bank counter component
+        }
+    }
+
+    /// Noise-free — for unit tests that need exact counter inversion.
+    pub fn none() -> NoiseConfig {
+        NoiseConfig {
+            counter_sigma: 0.0,
+            qpi_background: 0.0,
+            qpi_sigma: 0.0,
+            rate_sigma: 0.0,
+            background_bw: 0.0,
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        *self == Self::none()
+    }
+
+    /// Jitter one counter reading.
+    pub fn jitter_counter(&self, rng: &mut Rng, value: f64) -> f64 {
+        if self.counter_sigma == 0.0 {
+            value
+        } else {
+            value * rng.jitter(self.counter_sigma)
+        }
+    }
+
+    /// Effective QPI capacity after background traffic, this epoch.
+    pub fn degrade_qpi(&self, rng: &mut Rng, cap: f64) -> f64 {
+        if self.qpi_background == 0.0 && self.qpi_sigma == 0.0 {
+            return cap;
+        }
+        let frac = (self.qpi_background + self.qpi_sigma * rng.normal())
+            .clamp(0.0, 0.5);
+        cap * (1.0 - frac)
+    }
+
+    /// Per-socket instruction-rate multiplier, this epoch.
+    pub fn rate_multiplier(&self, rng: &mut Rng) -> f64 {
+        if self.rate_sigma == 0.0 {
+            1.0
+        } else {
+            rng.jitter(self.rate_sigma)
+        }
+    }
+
+    /// Background bytes accumulated by one counter component over `dt`
+    /// seconds (uniform in `[0, 2*mean]` — bursty, always non-negative).
+    pub fn background_bytes(&self, rng: &mut Rng, dt: f64) -> f64 {
+        if self.background_bw == 0.0 {
+            0.0
+        } else {
+            rng.uniform(0.0, 2.0 * self.background_bw) * dt
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_identity() {
+        let n = NoiseConfig::none();
+        let mut rng = Rng::new(1);
+        assert_eq!(n.jitter_counter(&mut rng, 5.0), 5.0);
+        assert_eq!(n.degrade_qpi(&mut rng, 10.0), 10.0);
+        assert_eq!(n.rate_multiplier(&mut rng), 1.0);
+        assert!(n.is_none());
+    }
+
+    #[test]
+    fn counter_jitter_is_small_and_unbiased() {
+        let n = NoiseConfig::realistic();
+        let mut rng = Rng::new(2);
+        let k = 20_000;
+        let mean: f64 = (0..k)
+            .map(|_| n.jitter_counter(&mut rng, 1.0))
+            .sum::<f64>()
+            / k as f64;
+        assert!((mean - 1.0).abs() < 0.001, "mean={mean}");
+    }
+
+    #[test]
+    fn qpi_degradation_bounded() {
+        let n = NoiseConfig::realistic();
+        let mut rng = Rng::new(3);
+        for _ in 0..10_000 {
+            let c = n.degrade_qpi(&mut rng, 100.0);
+            assert!(c <= 100.0 && c >= 50.0);
+        }
+    }
+
+    #[test]
+    fn qpi_mean_loss_matches_background() {
+        let n = NoiseConfig::realistic();
+        let mut rng = Rng::new(4);
+        let k = 20_000;
+        let mean: f64 = (0..k)
+            .map(|_| n.degrade_qpi(&mut rng, 1.0))
+            .sum::<f64>()
+            / k as f64;
+        assert!((mean - 0.97).abs() < 0.003, "mean={mean}");
+    }
+}

@@ -1,0 +1,330 @@
+//! Thread placements and memory-placement policies.
+//!
+//! * [`ThreadPlacement`] — how many threads are pinned to each socket
+//!   (always one thread per core, as in every experiment in the paper).
+//!   Includes the §5.1 profiling placements: the *symmetric* run (equal
+//!   threads per socket) and the *asymmetric* run (same total, skewed).
+//! * [`MemoryPolicy`] + [`PageAllocator`] — numactl-style page placement
+//!   (membind / interleave / first-touch / per-thread), simulated at page
+//!   granularity.  The synthetic §6.1 benchmarks derive their ground-truth
+//!   mixtures from these policies.
+
+use crate::topology::MachineTopology;
+use crate::workloads::Mixture;
+
+/// Threads pinned per socket, one per core.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ThreadPlacement {
+    pub threads_per_socket: Vec<usize>,
+}
+
+impl ThreadPlacement {
+    pub fn new(threads_per_socket: Vec<usize>) -> ThreadPlacement {
+        ThreadPlacement { threads_per_socket }
+    }
+
+    pub fn total(&self) -> usize {
+        self.threads_per_socket.iter().sum()
+    }
+
+    pub fn sockets(&self) -> usize {
+        self.threads_per_socket.len()
+    }
+
+    pub fn sockets_used(&self) -> usize {
+        self.threads_per_socket.iter().filter(|&&n| n > 0).count()
+    }
+
+    /// Check against a machine: per-socket counts must fit the cores.
+    pub fn validate(&self, machine: &MachineTopology) -> Result<(), String> {
+        if self.sockets() != machine.sockets {
+            return Err(format!(
+                "placement covers {} sockets, machine has {}",
+                self.sockets(),
+                machine.sockets
+            ));
+        }
+        for (s, &n) in self.threads_per_socket.iter().enumerate() {
+            if n > machine.cores_per_socket {
+                return Err(format!(
+                    "socket {s}: {n} threads > {} cores (1 thread/core)",
+                    machine.cores_per_socket
+                ));
+            }
+        }
+        if self.total() == 0 {
+            return Err("placement has no threads".into());
+        }
+        Ok(())
+    }
+
+    /// Iterate threads in global load order (socket-major) as
+    /// `(global_index, socket)`.
+    pub fn threads(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.threads_per_socket
+            .iter()
+            .enumerate()
+            .flat_map(|(s, &n)| std::iter::repeat(s).take(n))
+            .enumerate()
+    }
+
+    // ---- §5.1 profiling placements -----------------------------------------
+
+    /// The symmetric profiling run: `total` threads split evenly.  `total`
+    /// must be even and leave room for the asymmetric run on the same
+    /// thread count.
+    pub fn symmetric(machine: &MachineTopology, total: usize)
+        -> Result<ThreadPlacement, String> {
+        if total % machine.sockets != 0 {
+            return Err(format!(
+                "symmetric run needs a multiple of {} threads",
+                machine.sockets
+            ));
+        }
+        let p = ThreadPlacement::new(vec![
+            total / machine.sockets;
+            machine.sockets
+        ]);
+        p.validate(machine)?;
+        Ok(p)
+    }
+
+    /// The asymmetric profiling run: same total, skewed ~2:1 across the
+    /// sockets (paper Fig 7's example is (4, 2) on 6-core sockets).  A
+    /// *moderate*, machine-independent imbalance keeps the asymmetric-run
+    /// contamination of the fit comparable across machines — maxing the
+    /// skew out to the core budget would make fitted signatures
+    /// machine-dependent (Fig 14 would degrade).  2-socket form.
+    pub fn asymmetric(machine: &MachineTopology, total: usize)
+        -> Result<ThreadPlacement, String> {
+        if machine.sockets != 2 {
+            return Err("asymmetric profiling implemented for 2 sockets".into());
+        }
+        let hi = ((total * 2) / 3).min(machine.cores_per_socket);
+        let lo = total - hi;
+        if lo == 0 || hi == lo || lo > machine.cores_per_socket {
+            return Err(format!(
+                "cannot build an asymmetric placement of {total} threads"
+            ));
+        }
+        let p = ThreadPlacement::new(vec![hi, lo]);
+        p.validate(machine)?;
+        Ok(p)
+    }
+
+    /// The profiling thread count the coordinator uses on a machine: the
+    /// paper leaves cores spare so symmetric and asymmetric runs can use
+    /// the *same* count (§5.1).  We use 3/4 of one socket's cores per
+    /// socket, rounded to even ≥ 2 per socket.
+    pub fn profiling_total(machine: &MachineTopology) -> usize {
+        let per_socket = (machine.cores_per_socket * 3 / 4).max(2);
+        per_socket * machine.sockets
+    }
+
+    /// All thread distributions of `total` threads across 2 sockets
+    /// respecting 1 thread/core — the §6.2.2 evaluation sweep.
+    pub fn all_splits(machine: &MachineTopology, total: usize)
+        -> Vec<ThreadPlacement> {
+        assert_eq!(machine.sockets, 2);
+        let mut out = Vec::new();
+        for t0 in 0..=total {
+            let t1 = total - t0;
+            if t0 <= machine.cores_per_socket
+                && t1 <= machine.cores_per_socket
+            {
+                out.push(ThreadPlacement::new(vec![t0, t1]));
+            }
+        }
+        out
+    }
+}
+
+/// numactl-style memory policies (paper §3 / §6.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemoryPolicy {
+    /// All pages bound to one socket (`numactl --membind=<s>`).
+    Membind(usize),
+    /// Pages interleaved round-robin across all sockets
+    /// (`numactl --interleave=all`).
+    Interleave,
+    /// First-touch: each page lands on the socket of the thread that
+    /// touches it first (Linux default; the paper's Local placement).
+    FirstTouch,
+    /// Each thread allocates 1/n of the pages locally, all threads then
+    /// share them (the paper's Per-thread pattern).
+    PerThreadShared,
+}
+
+/// Page-granularity allocation bookkeeping: which bank holds each page.
+/// Used by the synthetic benchmarks to derive mixtures and by tests to
+/// validate policy semantics.
+#[derive(Clone, Debug)]
+pub struct PageAllocator {
+    pub sockets: usize,
+    /// `pages[i]` = socket owning page i.
+    pub pages: Vec<usize>,
+}
+
+impl PageAllocator {
+    /// Allocate `n_pages` under `policy` for the given placement.  For
+    /// FirstTouch/PerThreadShared, pages are touched by threads in
+    /// round-robin (FirstTouch) or contiguous-chunk (PerThreadShared)
+    /// order, mirroring the usual OpenMP loop split.
+    pub fn allocate(policy: MemoryPolicy, n_pages: usize,
+                    placement: &ThreadPlacement) -> PageAllocator {
+        let sockets = placement.sockets();
+        let thread_sockets: Vec<usize> =
+            placement.threads().map(|(_, s)| s).collect();
+        let n_threads = thread_sockets.len().max(1);
+        let pages = (0..n_pages)
+            .map(|i| match policy {
+                MemoryPolicy::Membind(s) => s,
+                MemoryPolicy::Interleave => i % sockets,
+                MemoryPolicy::FirstTouch => {
+                    // Static round-robin loop split: page i touched by
+                    // thread i % n.
+                    thread_sockets[i % n_threads]
+                }
+                MemoryPolicy::PerThreadShared => {
+                    // Contiguous chunks: thread j owns pages
+                    // [j*n_pages/n, (j+1)*n_pages/n).
+                    let j = (i * n_threads) / n_pages.max(1);
+                    thread_sockets[j.min(n_threads - 1)]
+                }
+            })
+            .collect();
+        PageAllocator { sockets, pages }
+    }
+
+    /// Fraction of pages on each socket.
+    pub fn socket_shares(&self) -> Vec<f64> {
+        let mut counts = vec![0usize; self.sockets];
+        for &p in &self.pages {
+            counts[p] += 1;
+        }
+        let total = self.pages.len().max(1) as f64;
+        counts.into_iter().map(|c| c as f64 / total).collect()
+    }
+}
+
+/// Map a memory policy to the §3 mixture it induces for uniform access —
+/// what numactl did for the paper's synthetic benchmarks.
+pub fn policy_mixture(policy: MemoryPolicy) -> Mixture {
+    match policy {
+        MemoryPolicy::Membind(s) => Mixture::pure_static(s),
+        MemoryPolicy::Interleave => {
+            // numactl --interleave=all spreads over all banks regardless
+            // of thread placement (physical interleave).
+            Mixture::pure_interleave().with_physical_interleave()
+        }
+        MemoryPolicy::FirstTouch => Mixture::pure_local(),
+        MemoryPolicy::PerThreadShared => Mixture::pure_perthread(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m8() -> MachineTopology {
+        MachineTopology::xeon_e5_2630_v3()
+    }
+
+    fn m18() -> MachineTopology {
+        MachineTopology::xeon_e5_2699_v3()
+    }
+
+    #[test]
+    fn symmetric_and_asymmetric_profiles() {
+        let sym = ThreadPlacement::symmetric(&m8(), 12).unwrap();
+        assert_eq!(sym.threads_per_socket, vec![6, 6]);
+        let asym = ThreadPlacement::asymmetric(&m8(), 12).unwrap();
+        assert_eq!(asym.total(), 12);
+        assert_ne!(asym.threads_per_socket[0], asym.threads_per_socket[1]);
+        asym.validate(&m8()).unwrap();
+    }
+
+    #[test]
+    fn profiling_total_leaves_headroom() {
+        // §5.1: spare cores let the asymmetric run keep 1 thread/core.
+        for m in [m8(), m18()] {
+            let total = ThreadPlacement::profiling_total(&m);
+            assert!(ThreadPlacement::symmetric(&m, total).is_ok());
+            assert!(ThreadPlacement::asymmetric(&m, total).is_ok(),
+                    "machine {} total {total}", m.name);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_oversubscription() {
+        let p = ThreadPlacement::new(vec![9, 0]);
+        assert!(p.validate(&m8()).is_err());
+        let p2 = ThreadPlacement::new(vec![0, 0]);
+        assert!(p2.validate(&m8()).is_err());
+    }
+
+    #[test]
+    fn threads_iterate_socket_major() {
+        let p = ThreadPlacement::new(vec![2, 1]);
+        let v: Vec<(usize, usize)> = p.threads().collect();
+        assert_eq!(v, vec![(0, 0), (1, 0), (2, 1)]);
+    }
+
+    #[test]
+    fn all_splits_respect_core_budget() {
+        let splits = ThreadPlacement::all_splits(&m8(), 8);
+        // t0 from 0..=8 → 9 splits, all within 8 cores/socket.
+        assert_eq!(splits.len(), 9);
+        let splits12 = ThreadPlacement::all_splits(&m8(), 12);
+        // t0 in 4..=8 → 5 splits.
+        assert_eq!(splits12.len(), 5);
+        for s in splits12 {
+            s.validate(&m8()).unwrap();
+        }
+    }
+
+    #[test]
+    fn membind_puts_everything_on_one_socket() {
+        let p = ThreadPlacement::new(vec![2, 2]);
+        let a = PageAllocator::allocate(MemoryPolicy::Membind(1), 1000, &p);
+        assert_eq!(a.socket_shares(), vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn interleave_splits_evenly() {
+        let p = ThreadPlacement::new(vec![2, 2]);
+        let a = PageAllocator::allocate(MemoryPolicy::Interleave, 1000, &p);
+        let sh = a.socket_shares();
+        assert!((sh[0] - 0.5).abs() < 1e-3, "{sh:?}");
+    }
+
+    #[test]
+    fn first_touch_follows_thread_sockets() {
+        // 3 threads on socket 0, 1 on socket 1 → 3/4 of pages on socket 0.
+        let p = ThreadPlacement::new(vec![3, 1]);
+        let a = PageAllocator::allocate(MemoryPolicy::FirstTouch, 4000, &p);
+        let sh = a.socket_shares();
+        assert!((sh[0] - 0.75).abs() < 1e-3, "{sh:?}");
+    }
+
+    #[test]
+    fn perthread_chunks_follow_thread_share() {
+        let p = ThreadPlacement::new(vec![1, 3]);
+        let a =
+            PageAllocator::allocate(MemoryPolicy::PerThreadShared, 4000, &p);
+        let sh = a.socket_shares();
+        assert!((sh[0] - 0.25).abs() < 1e-2, "{sh:?}");
+    }
+
+    #[test]
+    fn policy_mixtures_are_pure() {
+        assert_eq!(policy_mixture(MemoryPolicy::Membind(1)).static_frac, 1.0);
+        assert_eq!(policy_mixture(MemoryPolicy::FirstTouch).local_frac, 1.0);
+        assert_eq!(policy_mixture(MemoryPolicy::Interleave).interleave_frac,
+                   1.0);
+        assert_eq!(
+            policy_mixture(MemoryPolicy::PerThreadShared).perthread_frac,
+            1.0
+        );
+    }
+}

@@ -1,0 +1,336 @@
+//! Machine topology: the NUMA hardware description the simulator executes
+//! on and the model predicts for (paper §2, Figs 2–3).
+//!
+//! A machine has `sockets` sockets, each with `cores_per_socket` cores and
+//! a directly-attached memory bank reached over a memory channel; sockets
+//! are joined by a point-to-point interconnect (QPI on the paper's Xeons).
+//! Capacities are expressed in bytes/second; latencies in nanoseconds.
+//!
+//! Read and write interconnect capacities are modeled as separate
+//! resources because the paper's Fig 2 measures them separately and finds
+//! very different ratios (8-core: remote read 0.16× local vs remote write
+//! 0.23×; 18-core: 0.59× vs 0.83×).
+
+use crate::util::json::Json;
+
+/// Gigabyte per second in bytes/second.
+pub const GB: f64 = 1e9;
+
+/// Description of one NUMA machine.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MachineTopology {
+    pub name: String,
+    pub sockets: usize,
+    pub cores_per_socket: usize,
+    /// Local memory-channel read capacity per socket (bytes/s).
+    pub local_read_bw: f64,
+    /// Local memory-channel write capacity per socket (bytes/s).
+    pub local_write_bw: f64,
+    /// Interconnect read capacity per directed link (bytes/s): the rate at
+    /// which read *data* can cross from one socket's bank to another's CPU.
+    pub qpi_read_bw: f64,
+    /// Interconnect write capacity per directed link (bytes/s).
+    pub qpi_write_bw: f64,
+    /// Load-to-use latency of the local bank (ns).
+    pub local_latency_ns: f64,
+    /// Load-to-use latency of a remote bank (ns).
+    pub remote_latency_ns: f64,
+    /// Peak memory demand a single core can generate against an idle local
+    /// bank (bytes/s) — the CPU-side issue limit that makes the 18-core
+    /// machine "CPU-bound and forgiving" in Fig 1.
+    pub core_peak_bw: f64,
+    /// Suggested retail price per CPU, USD (the paper's cost argument).
+    pub price_usd: f64,
+}
+
+impl MachineTopology {
+    pub fn total_cores(&self) -> usize {
+        self.sockets * self.cores_per_socket
+    }
+
+    /// Number of contention resources: one read + one write channel per
+    /// socket, plus read and write capacities for each directed
+    /// interconnect link.
+    pub fn n_resources(&self) -> usize {
+        2 * self.sockets + 2 * self.sockets * (self.sockets - 1)
+    }
+
+    /// Resource index of socket `s`'s channel. Layout (matching the Python
+    /// model for S=2): `[read_chan..., write_chan..., qpi_r links...,
+    /// qpi_w links...]` with links ordered by `(src, dst), src != dst`,
+    /// row-major.
+    pub fn read_chan(&self, s: usize) -> usize {
+        debug_assert!(s < self.sockets);
+        s
+    }
+
+    pub fn write_chan(&self, s: usize) -> usize {
+        debug_assert!(s < self.sockets);
+        self.sockets + s
+    }
+
+    fn link_offset(&self, src: usize, dst: usize) -> usize {
+        debug_assert!(src != dst);
+        // Dense index over ordered pairs (src, dst), src != dst.
+        src * (self.sockets - 1) + if dst > src { dst - 1 } else { dst }
+    }
+
+    pub fn qpi_read_link(&self, src: usize, dst: usize) -> usize {
+        2 * self.sockets + self.link_offset(src, dst)
+    }
+
+    pub fn qpi_write_link(&self, src: usize, dst: usize) -> usize {
+        2 * self.sockets
+            + self.sockets * (self.sockets - 1)
+            + self.link_offset(src, dst)
+    }
+
+    /// Capacity vector over all resources (order per the index functions).
+    pub fn capacities(&self) -> Vec<f64> {
+        let s = self.sockets;
+        let mut caps = Vec::with_capacity(self.n_resources());
+        caps.extend(std::iter::repeat(self.local_read_bw).take(s));
+        caps.extend(std::iter::repeat(self.local_write_bw).take(s));
+        caps.extend(std::iter::repeat(self.qpi_read_bw).take(s * (s - 1)));
+        caps.extend(std::iter::repeat(self.qpi_write_bw).take(s * (s - 1)));
+        caps
+    }
+
+    /// Latency seen by a thread on `src` accessing bank `dst`.
+    pub fn latency_ns(&self, src: usize, dst: usize) -> f64 {
+        if src == dst {
+            self.local_latency_ns
+        } else {
+            self.remote_latency_ns
+        }
+    }
+
+    // ---- presets (calibrated to the paper's Fig 2 ratios) -----------------
+
+    /// Dual-socket Xeon E5-2630 v3 (8 cores/socket, 2.4 GHz Haswell).
+    /// Fig 2: remote read ≈ 0.16× local read, remote write ≈ 0.23× local
+    /// write; strong local channels, narrow interconnect; $667/CPU.
+    pub fn xeon_e5_2630_v3() -> MachineTopology {
+        let local_read = 44.0 * GB;
+        let local_write = 30.0 * GB;
+        MachineTopology {
+            name: "xeon-e5-2630v3-8c".to_string(),
+            sockets: 2,
+            cores_per_socket: 8,
+            local_read_bw: local_read,
+            local_write_bw: local_write,
+            qpi_read_bw: 0.16 * local_read,
+            qpi_write_bw: 0.23 * local_write,
+            local_latency_ns: 90.0,
+            remote_latency_ns: 200.0,
+            // 8 fast cores nearly saturate the local channel: the machine
+            // is bandwidth-bound, hence placement-sensitive (Fig 1).
+            core_peak_bw: 5.5 * GB,
+            price_usd: 667.0,
+        }
+    }
+
+    /// Dual-socket Xeon E5-2699 v3 (18 cores/socket, 2.3 GHz Haswell).
+    /// Fig 2: remote read ≈ 0.59× local read, remote write ≈ 0.83× local
+    /// write; comparable local channels, wide interconnect; $4115/CPU.
+    pub fn xeon_e5_2699_v3() -> MachineTopology {
+        let local_read = 50.0 * GB;
+        let local_write = 34.0 * GB;
+        MachineTopology {
+            name: "xeon-e5-2699v3-18c".to_string(),
+            sockets: 2,
+            cores_per_socket: 18,
+            local_read_bw: local_read,
+            local_write_bw: local_write,
+            qpi_read_bw: 0.59 * local_read,
+            qpi_write_bw: 0.83 * local_write,
+            local_latency_ns: 95.0,
+            remote_latency_ns: 160.0,
+            // Streaming issue limit per core; what makes this machine
+            // forgiving (Fig 1) is its wide QPI, not a core bottleneck.
+            core_peak_bw: 10.0 * GB,
+            price_usd: 4115.0,
+        }
+    }
+
+    /// Both paper machines, in presentation order.
+    pub fn paper_machines() -> Vec<MachineTopology> {
+        vec![Self::xeon_e5_2630_v3(), Self::xeon_e5_2699_v3()]
+    }
+
+    pub fn by_name(name: &str) -> Option<MachineTopology> {
+        match name {
+            "xeon8" | "xeon-e5-2630v3-8c" => Some(Self::xeon_e5_2630_v3()),
+            "xeon18" | "xeon-e5-2699v3-18c" => Some(Self::xeon_e5_2699_v3()),
+            _ => None,
+        }
+    }
+
+    // ---- (de)serialization -------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs([
+            ("name", Json::Str(self.name.clone())),
+            ("sockets", Json::Num(self.sockets as f64)),
+            ("cores_per_socket", Json::Num(self.cores_per_socket as f64)),
+            ("local_read_bw", Json::Num(self.local_read_bw)),
+            ("local_write_bw", Json::Num(self.local_write_bw)),
+            ("qpi_read_bw", Json::Num(self.qpi_read_bw)),
+            ("qpi_write_bw", Json::Num(self.qpi_write_bw)),
+            ("local_latency_ns", Json::Num(self.local_latency_ns)),
+            ("remote_latency_ns", Json::Num(self.remote_latency_ns)),
+            ("core_peak_bw", Json::Num(self.core_peak_bw)),
+            ("price_usd", Json::Num(self.price_usd)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<MachineTopology, String> {
+        let f = |k: &str| -> Result<f64, String> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("topology: missing numeric field {k}"))
+        };
+        let t = MachineTopology {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or("topology: missing name")?
+                .to_string(),
+            sockets: f("sockets")? as usize,
+            cores_per_socket: f("cores_per_socket")? as usize,
+            local_read_bw: f("local_read_bw")?,
+            local_write_bw: f("local_write_bw")?,
+            qpi_read_bw: f("qpi_read_bw")?,
+            qpi_write_bw: f("qpi_write_bw")?,
+            local_latency_ns: f("local_latency_ns")?,
+            remote_latency_ns: f("remote_latency_ns")?,
+            core_peak_bw: f("core_peak_bw")?,
+            price_usd: f("price_usd")?,
+        };
+        t.validate()?;
+        Ok(t)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.sockets < 2 {
+            return Err("topology: need >= 2 sockets".into());
+        }
+        if self.cores_per_socket == 0 {
+            return Err("topology: need >= 1 core per socket".into());
+        }
+        for (k, v) in [
+            ("local_read_bw", self.local_read_bw),
+            ("local_write_bw", self.local_write_bw),
+            ("qpi_read_bw", self.qpi_read_bw),
+            ("qpi_write_bw", self.qpi_write_bw),
+            ("local_latency_ns", self.local_latency_ns),
+            ("remote_latency_ns", self.remote_latency_ns),
+            ("core_peak_bw", self.core_peak_bw),
+        ] {
+            if !(v.is_finite() && v > 0.0) {
+                return Err(format!("topology: {k} must be positive"));
+            }
+        }
+        if self.remote_latency_ns < self.local_latency_ns {
+            return Err("topology: remote latency below local".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        for m in MachineTopology::paper_machines() {
+            m.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn paper_fig2_ratios() {
+        let m8 = MachineTopology::xeon_e5_2630_v3();
+        assert!((m8.qpi_read_bw / m8.local_read_bw - 0.16).abs() < 1e-9);
+        assert!((m8.qpi_write_bw / m8.local_write_bw - 0.23).abs() < 1e-9);
+        let m18 = MachineTopology::xeon_e5_2699_v3();
+        assert!((m18.qpi_read_bw / m18.local_read_bw - 0.59).abs() < 1e-9);
+        assert!((m18.qpi_write_bw / m18.local_write_bw - 0.83).abs() < 1e-9);
+        // The 18-core machine is the expensive one.
+        assert!(m18.price_usd > m8.price_usd * 5.0);
+    }
+
+    #[test]
+    fn resource_layout_matches_python_model_for_s2() {
+        // DESIGN.md §6: [rc0, rc1, wc0, wc1, qr01, qr10, qw01, qw10].
+        let m = MachineTopology::xeon_e5_2699_v3();
+        assert_eq!(m.n_resources(), 8);
+        assert_eq!(m.read_chan(0), 0);
+        assert_eq!(m.read_chan(1), 1);
+        assert_eq!(m.write_chan(0), 2);
+        assert_eq!(m.write_chan(1), 3);
+        assert_eq!(m.qpi_read_link(0, 1), 4);
+        assert_eq!(m.qpi_read_link(1, 0), 5);
+        assert_eq!(m.qpi_write_link(0, 1), 6);
+        assert_eq!(m.qpi_write_link(1, 0), 7);
+    }
+
+    #[test]
+    fn capacities_vector_matches_layout() {
+        let m = MachineTopology::xeon_e5_2630_v3();
+        let caps = m.capacities();
+        assert_eq!(caps.len(), 8);
+        assert_eq!(caps[m.read_chan(0)], m.local_read_bw);
+        assert_eq!(caps[m.write_chan(1)], m.local_write_bw);
+        assert_eq!(caps[m.qpi_read_link(1, 0)], m.qpi_read_bw);
+        assert_eq!(caps[m.qpi_write_link(0, 1)], m.qpi_write_bw);
+    }
+
+    #[test]
+    fn four_socket_layout_is_dense_and_disjoint() {
+        let mut m = MachineTopology::xeon_e5_2699_v3();
+        m.sockets = 4;
+        assert_eq!(m.n_resources(), 2 * 4 + 2 * 12);
+        let mut seen = std::collections::BTreeSet::new();
+        for s in 0..4 {
+            assert!(seen.insert(m.read_chan(s)));
+            assert!(seen.insert(m.write_chan(s)));
+        }
+        for src in 0..4 {
+            for dst in 0..4 {
+                if src != dst {
+                    assert!(seen.insert(m.qpi_read_link(src, dst)));
+                    assert!(seen.insert(m.qpi_write_link(src, dst)));
+                }
+            }
+        }
+        assert_eq!(seen.len(), m.n_resources());
+        assert_eq!(*seen.iter().max().unwrap(), m.n_resources() - 1);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = MachineTopology::xeon_e5_2630_v3();
+        let j = m.to_json();
+        let back = MachineTopology::from_json(&j).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn from_json_rejects_invalid() {
+        let mut j = MachineTopology::xeon_e5_2630_v3().to_json();
+        j.set("sockets", Json::Num(1.0));
+        assert!(MachineTopology::from_json(&j).is_err());
+        let mut j2 = MachineTopology::xeon_e5_2630_v3().to_json();
+        j2.set("core_peak_bw", Json::Num(-1.0));
+        assert!(MachineTopology::from_json(&j2).is_err());
+    }
+
+    #[test]
+    fn latency_lookup() {
+        let m = MachineTopology::xeon_e5_2630_v3();
+        assert_eq!(m.latency_ns(0, 0), 90.0);
+        assert_eq!(m.latency_ns(0, 1), 200.0);
+    }
+}

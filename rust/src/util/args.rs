@@ -1,0 +1,147 @@
+//! Tiny CLI argument parser (clap is not in the offline vendor set).
+//!
+//! Supports the subcommand + `--flag value` / `--flag=value` / boolean
+//! `--flag` style used by the `numabw` binary.  Unknown flags are errors —
+//! a typo silently ignored in an experiment driver costs an afternoon.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// First non-flag token (the subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+    /// `--key value` and `--key=value` pairs; bare `--key` maps to "true".
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse a raw token list (usually `std::env::args().skip(1)`).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let tokens: Vec<String> = tokens.into_iter().collect();
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(stripped) = t.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len()
+                    && !tokens[i + 1].starts_with("--")
+                {
+                    out.flags
+                        .insert(stripped.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(t.clone());
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Error out on flags not in the allow-list (typo protection).
+    pub fn ensure_known(&self, allowed: &[&str]) -> Result<(), String> {
+        for k in self.flags.keys() {
+            if !allowed.contains(&k.as_str()) {
+                return Err(format!(
+                    "unknown flag --{k}; expected one of: {}",
+                    allowed
+                        .iter()
+                        .map(|a| format!("--{a}"))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = Args::parse(toks("evaluate --machine xeon18 --seed=7 pos1"));
+        assert_eq!(a.command.as_deref(), Some("evaluate"));
+        assert_eq!(a.get("machine"), Some("xeon18"));
+        assert_eq!(a.get("seed"), Some("7"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn bare_flag_is_boolean() {
+        let a = Args::parse(toks("run --verbose --out x.json"));
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.get("out"), Some("x.json"));
+    }
+
+    #[test]
+    fn trailing_bare_flag() {
+        let a = Args::parse(toks("run --quiet"));
+        assert!(a.get_bool("quiet"));
+    }
+
+    #[test]
+    fn typed_getters_with_defaults() {
+        let a = Args::parse(toks("x --n 5 --rate 0.5"));
+        assert_eq!(a.get_usize("n", 1), 5);
+        assert_eq!(a.get_usize("missing", 9), 9);
+        assert_eq!(a.get_f64("rate", 0.0), 0.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn typed_getter_rejects_garbage() {
+        Args::parse(toks("x --n five")).get_usize("n", 0);
+    }
+
+    #[test]
+    fn unknown_flags_flagged() {
+        let a = Args::parse(toks("x --good 1 --bda 2"));
+        assert!(a.ensure_known(&["good", "bad"]).is_err());
+        assert!(a.ensure_known(&["good", "bda"]).is_ok());
+    }
+}

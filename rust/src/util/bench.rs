@@ -1,0 +1,253 @@
+//! Micro/meso benchmark harness (criterion substitute — criterion is not in
+//! the offline vendor set).
+//!
+//! Usage pattern inside a `harness = false` bench binary:
+//!
+//! ```ignore
+//! let mut h = bench::Harness::new("fig17_accuracy");
+//! h.bench("fit_batch_64", || coordinator.fit_batch(&runs));
+//! h.report();
+//! ```
+//!
+//! Each case is warmed up, then timed over adaptively-chosen iteration
+//! batches until the target measurement time is reached; mean / median /
+//! stddev / min are reported, and results can be dumped as JSON for the
+//! EXPERIMENTS.md records.
+
+use std::time::{Duration, Instant};
+
+use super::json::Json;
+use super::stats::Summary;
+
+/// One measured benchmark case.
+#[derive(Clone, Debug)]
+pub struct CaseResult {
+    pub name: String,
+    /// Per-iteration wall time, seconds, one entry per measured batch.
+    pub samples: Vec<f64>,
+    pub iters_per_sample: u64,
+    pub summary: Summary,
+}
+
+impl CaseResult {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs([
+            ("name", Json::Str(self.name.clone())),
+            ("iters_per_sample", Json::Num(self.iters_per_sample as f64)),
+            ("mean_s", Json::Num(self.summary.mean)),
+            ("median_s", Json::Num(self.summary.median)),
+            ("std_s", Json::Num(self.summary.std)),
+            ("min_s", Json::Num(self.summary.min)),
+            ("samples", Json::from_f64_slice(&self.samples)),
+        ])
+    }
+}
+
+/// Benchmark harness configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_samples: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_samples: 10,
+        }
+    }
+}
+
+pub struct Harness {
+    pub group: String,
+    pub config: Config,
+    pub results: Vec<CaseResult>,
+    quiet: bool,
+}
+
+impl Harness {
+    pub fn new(group: &str) -> Harness {
+        Harness {
+            group: group.to_string(),
+            config: Config::default(),
+            results: Vec::new(),
+            quiet: false,
+        }
+    }
+
+    pub fn with_config(group: &str, config: Config) -> Harness {
+        Harness {
+            group: group.to_string(),
+            config,
+            results: Vec::new(),
+            quiet: false,
+        }
+    }
+
+    pub fn quiet(mut self) -> Harness {
+        self.quiet = true;
+        self
+    }
+
+    /// Time `f`, returning (and recording) the per-iteration statistics.
+    /// The closure's return value is black-boxed to keep the optimizer
+    /// honest.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F)
+        -> &CaseResult {
+        // Warmup + estimate cost of one iteration.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.config.warmup || warm_iters == 0 {
+            black_box(f());
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+
+        // Choose a batch size so each sample is ~ measure/min_samples.
+        let target_sample = self.config.measure.as_secs_f64()
+            / self.config.min_samples as f64;
+        let iters = ((target_sample / per_iter.max(1e-12)) as u64).max(1);
+
+        let mut samples = Vec::new();
+        let measure_start = Instant::now();
+        while samples.len() < self.config.min_samples
+            || measure_start.elapsed() < self.config.measure
+        {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            samples.push(t0.elapsed().as_secs_f64() / iters as f64);
+            if samples.len() >= 1000 {
+                break;
+            }
+        }
+
+        let result = CaseResult {
+            name: name.to_string(),
+            summary: Summary::of(&samples),
+            samples,
+            iters_per_sample: iters,
+        };
+        if !self.quiet {
+            println!(
+                "{:40} {:>12}/iter (median; mean {}, n={}x{})",
+                format!("{}/{}", self.group, name),
+                fmt_duration(result.summary.median),
+                fmt_duration(result.summary.mean),
+                result.samples.len(),
+                iters
+            );
+        }
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Print a closing summary table.
+    pub fn report(&self) {
+        if self.quiet {
+            return;
+        }
+        println!("\n== {} ==", self.group);
+        println!("{:<40} {:>12} {:>12} {:>12}", "case", "median", "mean",
+                 "min");
+        for r in &self.results {
+            println!(
+                "{:<40} {:>12} {:>12} {:>12}",
+                r.name,
+                fmt_duration(r.summary.median),
+                fmt_duration(r.summary.mean),
+                fmt_duration(r.summary.min)
+            );
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs([
+            ("group", Json::Str(self.group.clone())),
+            (
+                "cases",
+                Json::Arr(self.results.iter().map(CaseResult::to_json)
+                    .collect()),
+            ),
+        ])
+    }
+}
+
+/// Pretty-print a duration in seconds with an adaptive unit.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Optimization barrier (std::hint::black_box is stable since 1.66).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_config() -> Config {
+        Config {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            min_samples: 3,
+        }
+    }
+
+    #[test]
+    fn measures_cheap_closure() {
+        let mut h = Harness::with_config("t", fast_config()).quiet();
+        let mut acc = 0u64;
+        let r = h.bench("add", || {
+            acc = acc.wrapping_add(1);
+            acc
+        });
+        assert!(r.summary.median > 0.0);
+        assert!(r.summary.median < 1e-3, "1 add should be < 1ms");
+        assert!(r.samples.len() >= 3);
+    }
+
+    #[test]
+    fn ordering_reflects_cost() {
+        let mut h = Harness::with_config("t", fast_config()).quiet();
+        let cheap = h.bench("cheap", || 1 + 1).summary.median;
+        let costly = h
+            .bench("costly", || (0..20_000).map(black_box).sum::<usize>())
+            .summary
+            .median;
+        assert!(costly > cheap * 5.0, "costly={costly} cheap={cheap}");
+    }
+
+    #[test]
+    fn json_dump_has_cases() {
+        let mut h = Harness::with_config("grp", fast_config()).quiet();
+        h.bench("a", || 0);
+        let j = h.to_json();
+        assert_eq!(j.get("group").unwrap().as_str().unwrap(), "grp");
+        assert_eq!(j.get("cases").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(2.0), "2.000 s");
+        assert_eq!(fmt_duration(2e-3), "2.000 ms");
+        assert_eq!(fmt_duration(2e-6), "2.000 µs");
+        assert_eq!(fmt_duration(2e-9), "2.0 ns");
+    }
+}

@@ -1,0 +1,8 @@
+//! Self-contained substrates the offline build cannot pull from crates.io:
+//! PRNG, JSON, CLI args, statistics, and a benchmark harness.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod stats;

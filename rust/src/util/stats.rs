@@ -1,0 +1,180 @@
+//! Statistics helpers for evaluation and benchmarking: summary statistics,
+//! percentiles, and cumulative-frequency curves (the paper reports its
+//! headline accuracy as a median + CDF, Figs 15 & 17).
+
+/// Summary of a sample: mean / median / stddev / min / max / count.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "summary of empty sample");
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            median: percentile_sorted(&sorted, 50.0),
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+        }
+    }
+}
+
+/// Percentile (linear interpolation) of an already-sorted sample.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=100.0).contains(&p));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// Percentile of an unsorted sample.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&sorted, p)
+}
+
+/// A cumulative-frequency curve: for each x, the fraction of samples <= x.
+/// Mirrors the presentation of the paper's Figs 15 and 17.
+#[derive(Clone, Debug)]
+pub struct Cdf {
+    /// Sorted sample values.
+    pub xs: Vec<f64>,
+}
+
+impl Cdf {
+    pub fn of(xs: &[f64]) -> Cdf {
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Cdf { xs: sorted }
+    }
+
+    /// Fraction of samples `<= x`.
+    pub fn at(&self, x: f64) -> f64 {
+        // partition_point: number of samples <= x.
+        let k = self.xs.partition_point(|&v| v <= x);
+        k as f64 / self.xs.len() as f64
+    }
+
+    /// Value at quantile `q` in `[0, 1]`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        percentile_sorted(&self.xs, q * 100.0)
+    }
+
+    pub fn median(&self) -> f64 {
+        self.quantile(0.5)
+    }
+
+    /// Evaluate the curve at `k` evenly spaced thresholds covering the
+    /// sample range; returns `(threshold, fraction)` pairs for plotting.
+    pub fn curve(&self, k: usize) -> Vec<(f64, f64)> {
+        assert!(k >= 2);
+        let lo = self.xs[0];
+        let hi = self.xs[self.xs.len() - 1];
+        (0..k)
+            .map(|i| {
+                let x = lo + (hi - lo) * i as f64 / (k - 1) as f64;
+                (x, self.at(x))
+            })
+            .collect()
+    }
+}
+
+/// Weighted mean.
+pub fn weighted_mean(values: &[f64], weights: &[f64]) -> f64 {
+    assert_eq!(values.len(), weights.len());
+    let wsum: f64 = weights.iter().sum();
+    assert!(wsum > 0.0);
+    values
+        .iter()
+        .zip(weights)
+        .map(|(v, w)| v * w)
+        .sum::<f64>()
+        / wsum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.std - 2.0f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_even_sample_interpolates() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 10.0]);
+        assert_eq!(s.median, 2.5);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [0.0, 1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+        assert_eq!(percentile(&xs, 25.0), 1.0);
+        assert_eq!(percentile(&xs, 12.5), 0.5);
+    }
+
+    #[test]
+    fn cdf_step_values() {
+        let c = Cdf::of(&[1.0, 2.0, 2.0, 4.0]);
+        assert_eq!(c.at(0.5), 0.0);
+        assert_eq!(c.at(1.0), 0.25);
+        assert_eq!(c.at(2.0), 0.75);
+        assert_eq!(c.at(3.9), 0.75);
+        assert_eq!(c.at(4.0), 1.0);
+        assert_eq!(c.median(), 2.0);
+    }
+
+    #[test]
+    fn cdf_curve_is_monotone() {
+        let c = Cdf::of(&[3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0]);
+        let curve = c.curve(16);
+        for w in curve.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+            assert!(w[1].0 > w[0].0);
+        }
+        assert_eq!(curve.last().unwrap().1, 1.0);
+    }
+
+    #[test]
+    fn weighted_mean_basics() {
+        assert_eq!(weighted_mean(&[1.0, 3.0], &[1.0, 1.0]), 2.0);
+        assert_eq!(weighted_mean(&[1.0, 3.0], &[3.0, 1.0]), 1.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn summary_rejects_empty() {
+        Summary::of(&[]);
+    }
+}

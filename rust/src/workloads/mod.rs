@@ -1,0 +1,15 @@
+//! Workload models: the ground-truth traffic generators the simulator runs
+//! and the model is evaluated against.
+//!
+//! * [`spec`] — the workload description (mixtures over the §3 access
+//!   classes, intensity, heterogeneity).
+//! * [`synthetic`] — the §6.1 index-chasing microbenchmarks (pure
+//!   single-class mixtures, Fig 12's ground truth).
+//! * [`suite`] — the 23 Table-1 application models (NPB / SPEC OMP / DBJ /
+//!   graph analytics equivalents).
+
+pub mod spec;
+pub mod suite;
+pub mod synthetic;
+
+pub use spec::{Heterogeneity, Mixture, Suite, WorkloadSpec};

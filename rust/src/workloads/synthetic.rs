@@ -1,0 +1,134 @@
+//! Synthetic index-chasing benchmarks (paper §6.1).
+//!
+//! The paper's synthetics walk gigabyte arrays where `i = A[i]` with a
+//! cache-line stride: sequential enough for the prefetcher, too large for
+//! the cache, opaque to the compiler.  Four variants pin the array with
+//! the four §3 placement policies (via numactl or first-touch), producing
+//! *pure* single-class mixtures — the strongest possible signal for
+//! validating that the fit recovers what was placed (Fig 12).
+
+use super::spec::{Heterogeneity, Mixture, Suite, WorkloadSpec};
+use crate::topology::GB;
+
+/// The four §6.1 variants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pattern {
+    /// All arrays placed on one socket's bank (numactl --membind).
+    Static,
+    /// Each thread's array first-touched locally.
+    Local,
+    /// Arrays interleaved page-wise across sockets (numactl --interleave).
+    Interleaved,
+    /// Each thread builds 1/n of the data, every thread walks all of it.
+    PerThread,
+}
+
+impl Pattern {
+    pub const ALL: [Pattern; 4] = [
+        Pattern::Static,
+        Pattern::Local,
+        Pattern::Interleaved,
+        Pattern::PerThread,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Pattern::Static => "static",
+            Pattern::Local => "local",
+            Pattern::Interleaved => "interleaved",
+            Pattern::PerThread => "perthread",
+        }
+    }
+
+    pub fn mixture(self, static_socket: usize) -> Mixture {
+        match self {
+            Pattern::Static => Mixture::pure_static(static_socket),
+            Pattern::Local => Mixture::pure_local(),
+            Pattern::Interleaved => Mixture::pure_interleave(),
+            Pattern::PerThread => Mixture::pure_perthread(),
+        }
+    }
+}
+
+/// Index-chase with a prefetcher-friendly cache-line stride: high
+/// bandwidth, almost pure reads (the walk only loads), low compute, and
+/// moderate latency sensitivity (the stride pattern lets hardware
+/// prefetchers hide part of the remote latency).
+pub fn index_chase(pattern: Pattern, static_socket: usize) -> WorkloadSpec {
+    let m = pattern.mixture(static_socket);
+    WorkloadSpec {
+        name: format!("chase-{}", pattern.name()),
+        description: format!(
+            "index chase through a GB-scale array, {} placement",
+            pattern.name()
+        ),
+        suite: Suite::Synthetic,
+        read_mixture: m,
+        // The tiny write stream (loop counters spilling, profiling resets)
+        // follows the same placement.
+        write_mixture: m,
+        read_fraction: 0.995,
+        bw_per_thread: 6.0 * GB,
+        instr_per_byte: 0.08, // ~5 instructions per 64-byte line
+        latency_sensitivity: 0.55,
+        heterogeneity: Heterogeneity::Uniform,
+        irregularity: 0.0,
+        placement_drift: 0.0,
+    }
+}
+
+/// The memory-intensive benchmark behind Fig 1: same chase kernel, with
+/// the mixture chosen per run by the memory-placement policy.
+pub fn fig1_workload(pattern: Pattern) -> WorkloadSpec {
+    let mut w = index_chase(pattern, 0);
+    // Fig 1's "interleaved" is numactl's physical interleave (all banks),
+    // not the model's used-sockets class.
+    if pattern == Pattern::Interleaved {
+        w.read_mixture = w.read_mixture.with_physical_interleave();
+        w.write_mixture = w.write_mixture.with_physical_interleave();
+    }
+    w.name = format!("fig1-{}", pattern.name());
+    w
+}
+
+/// All four synthetic benchmarks with static data on `static_socket`.
+pub fn all(static_socket: usize) -> Vec<WorkloadSpec> {
+    Pattern::ALL
+        .iter()
+        .map(|&p| index_chase(p, static_socket))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_pure_patterns() {
+        let ws = all(1);
+        assert_eq!(ws.len(), 4);
+        for w in &ws {
+            w.validate().unwrap();
+        }
+        assert_eq!(ws[0].read_mixture.static_frac, 1.0);
+        assert_eq!(ws[0].read_mixture.static_socket, 1);
+        assert_eq!(ws[1].read_mixture.local_frac, 1.0);
+        assert_eq!(ws[2].read_mixture.interleave_frac, 1.0);
+        assert_eq!(ws[3].read_mixture.perthread_frac, 1.0);
+    }
+
+    #[test]
+    fn chase_is_read_dominated_and_memory_bound() {
+        let w = index_chase(Pattern::Local, 0);
+        assert!(w.read_fraction > 0.99);
+        assert!(w.bw_per_thread > 1.0 * GB);
+        assert!(w.instr_per_byte < 1.0);
+    }
+
+    #[test]
+    fn names_are_distinct() {
+        let names: std::collections::BTreeSet<_> =
+            all(0).into_iter().map(|w| w.name).collect();
+        assert_eq!(names.len(), 4);
+    }
+}

@@ -1,0 +1,122 @@
+//! Smoke assertions for the figure reproductions: each paper artifact's
+//! *shape* claim, checked quantitatively (the benches print the artifacts;
+//! these tests fail the build if a shape regresses).
+
+use numabw::coordinator::{profile, FitRequest, PredictionService};
+use numabw::prelude::*;
+use numabw::workloads::{suite, synthetic};
+
+fn stream(read: bool, bank: usize) -> WorkloadSpec {
+    WorkloadSpec {
+        name: "probe".into(),
+        description: String::new(),
+        suite: Suite::Synthetic,
+        read_mixture: Mixture::pure_static(bank),
+        write_mixture: Mixture::pure_static(bank),
+        read_fraction: if read { 1.0 } else { 0.0 },
+        bw_per_thread: 1e12,
+        instr_per_byte: 0.1,
+        latency_sensitivity: 0.0,
+        heterogeneity: Heterogeneity::Uniform,
+        irregularity: 0.0,
+        placement_drift: 0.0,
+    }
+}
+
+/// Fig 2: measured remote/local ratios match the paper's calibration.
+#[test]
+fn fig2_ratios() {
+    for (machine, rd_ratio, wr_ratio) in [
+        (MachineTopology::xeon_e5_2630_v3(), 0.16, 0.23),
+        (MachineTopology::xeon_e5_2699_v3(), 0.59, 0.83),
+    ] {
+        let sim = Simulator::new(machine.clone(), SimConfig::noiseless());
+        let p = ThreadPlacement::new(vec![machine.cores_per_socket, 0]);
+        let probe = |read: bool, bank: usize| -> f64 {
+            sim.run(&stream(read, bank), &p).achieved_bw
+        };
+        let got_rd = probe(true, 1) / probe(true, 0);
+        let got_wr = probe(false, 1) / probe(false, 0);
+        assert!((got_rd - rd_ratio).abs() < 0.02,
+                "{}: read ratio {got_rd} vs {rd_ratio}", machine.name);
+        assert!((got_wr - wr_ratio).abs() < 0.02,
+                "{}: write ratio {got_wr} vs {wr_ratio}", machine.name);
+    }
+}
+
+/// Fig 1: the 8-core machine punishes bad placement hard (~3x); the
+/// 18-core machine is far more forgiving; on the 18-core machine with both
+/// sockets, interleaved beats memory-on-one-socket.
+#[test]
+fn fig1_shapes() {
+    use synthetic::{fig1_workload, Pattern};
+    let spread = |machine: MachineTopology| -> (f64, f64, f64) {
+        let sim = Simulator::new(machine.clone(), SimConfig::default());
+        let full = machine.cores_per_socket;
+        let mut bws = Vec::new();
+        for (pattern, both) in [
+            (Pattern::Static, false), (Pattern::Static, true),
+            (Pattern::Interleaved, false), (Pattern::Interleaved, true),
+            (Pattern::Local, false), (Pattern::Local, true),
+        ] {
+            let w = fig1_workload(pattern);
+            let p = if both {
+                ThreadPlacement::new(vec![full / 2, full - full / 2])
+            } else {
+                ThreadPlacement::new(vec![full, 0])
+            };
+            bws.push(sim.run(&w, &p).achieved_bw);
+        }
+        let min = bws.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = bws.iter().cloned().fold(0.0, f64::max);
+        (max / min, bws[3], bws[1]) // (spread, interleave-2s, static-2s)
+    };
+    let (spread8, _, _) = spread(MachineTopology::xeon_e5_2630_v3());
+    let (spread18, il2, st2) = spread(MachineTopology::xeon_e5_2699_v3());
+    assert!(spread8 > 2.0, "8-core spread {spread8} should be ~3x");
+    assert!(spread18 < spread8 * 0.75,
+            "18-core ({spread18}) must be more forgiving than 8-core \
+             ({spread8})");
+    assert!(il2 >= st2,
+            "18-core 2-socket: interleave ({il2}) >= one-socket memory \
+             ({st2})");
+}
+
+/// Fig 12: every pure synthetic pattern is recovered with < ~1 %
+/// miscategorised bandwidth on both machines.
+#[test]
+fn fig12_synthetics_recovered() {
+    let svc = PredictionService::reference();
+    for machine in MachineTopology::paper_machines() {
+        let sim = Simulator::new(machine, SimConfig::default());
+        for w in synthetic::all(1) {
+            let pair = profile(&sim, &w);
+            let sig = &svc
+                .fit(&[FitRequest { sym: pair.sym, asym: pair.asym }])
+                .unwrap()[0];
+            let s = sig.read;
+            let (a, l, p, _) = w.truth(true);
+            let true_mass = if a == 1.0 {
+                s.static_frac
+            } else if l == 1.0 {
+                s.local_frac
+            } else if p == 1.0 {
+                s.perthread_frac
+            } else {
+                s.interleave_frac()
+            };
+            assert!(1.0 - true_mass < 0.015,
+                    "{}: miscategorised {:.3}", w.name, 1.0 - true_mass);
+        }
+    }
+}
+
+/// Table 1: the registry exposes 23 benchmarks across all four suites.
+#[test]
+fn table1_registry() {
+    let ws = suite::table1();
+    assert_eq!(ws.len(), 23);
+    for tag in ["NPB", "OMP", "DBJ", "GA"] {
+        assert!(ws.iter().any(|w| w.suite.tag() == tag), "{tag} missing");
+    }
+}

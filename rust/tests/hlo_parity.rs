@@ -1,0 +1,221 @@
+//! Integration: the AOT-compiled HLO pipelines (Pallas kernels lowered by
+//! jax, executed through PJRT) must agree with the Rust reference model.
+//!
+//! This is the load-bearing test of the three-layer architecture: it proves
+//! the artifacts built by `make artifacts` are loadable by the `xla` crate,
+//! execute on the CPU PJRT client, and compute the same §4/§5 numbers as
+//! the pure-Rust twin (itself pinned to the paper's worked example).
+//!
+//! Requires `artifacts/` — tests self-skip (with a loud message) if absent
+//! so `cargo test` works before `make artifacts`, but `make test` always
+//! builds artifacts first.
+
+use numabw::coordinator::{
+    CounterQuery, FitRequest, PerfQuery, PredictionService,
+};
+use numabw::counters::{Channel, CounterSnapshot, ProfiledRun};
+use numabw::model::apply;
+use numabw::model::signature::ChannelSignature;
+use numabw::runtime::{Artifacts, Engine};
+use numabw::util::rng::Rng;
+
+fn engine() -> Option<Engine> {
+    let artifacts = match Artifacts::locate(None) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("SKIP hlo_parity: {e}");
+            return None;
+        }
+    };
+    Some(Engine::cpu(artifacts).expect("PJRT CPU client"))
+}
+
+fn random_signature(rng: &mut Rng) -> ChannelSignature {
+    let a = rng.uniform(0.0, 0.6);
+    let l = rng.uniform(0.0, (1.0 - a) * 0.8);
+    let p = rng.uniform(0.0, (1.0 - a - l).max(0.0));
+    ChannelSignature::new(a, l, p, rng.below(2) as usize)
+}
+
+fn run_for(sig: &ChannelSignature, tps: &[usize], scale: f64)
+    -> ProfiledRun {
+    let m = apply::apply(sig, tps);
+    let mut c = CounterSnapshot::new(2);
+    for (src, &n) in tps.iter().enumerate() {
+        for dst in 0..2 {
+            let bytes = m[src][dst] * n as f64 * scale;
+            c.record_traffic(src, dst, Channel::Read, bytes);
+            c.record_traffic(src, dst, Channel::Write, bytes * 0.4);
+        }
+        c.sockets[src].instructions = n as f64 * 1e9;
+    }
+    c.elapsed_s = 1.0;
+    ProfiledRun {
+        counters: c,
+        threads_per_socket: tps.to_vec(),
+    }
+}
+
+#[test]
+fn artifacts_manifest_sane() {
+    let Some(engine) = engine() else { return };
+    let a = &engine.artifacts;
+    assert_eq!(a.sockets, 2);
+    assert_eq!(a.batch, 64);
+    assert_eq!(a.n_flows, 8);
+    assert_eq!(a.n_resources, 8);
+    assert_eq!(a.incidence.len(), 8);
+    // Spot-check the incidence rows against the documented layout.
+    assert_eq!(a.incidence[0], vec![1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+    assert_eq!(a.incidence[2], vec![0.0, 1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0]);
+}
+
+#[test]
+fn all_pipelines_compile_and_warm_up() {
+    let Some(engine) = engine() else { return };
+    engine.warmup().expect("compiling all pipelines");
+}
+
+#[test]
+fn hlo_fit_matches_reference_on_worked_example() {
+    let Some(engine) = engine() else { return };
+    let truth = ChannelSignature::new(0.2, 0.35, 0.3, 1);
+    let req = FitRequest {
+        sym: run_for(&truth, &[2, 2], 1e9),
+        asym: run_for(&truth, &[3, 1], 1e9),
+    };
+    let hlo = PredictionService::hlo(engine);
+    let sig = &hlo.fit(std::slice::from_ref(&req)).unwrap()[0];
+    // The paper's published worked-example values.
+    assert!((sig.read.static_frac - 0.2).abs() < 1e-4, "{sig:?}");
+    assert!((sig.read.local_frac - 0.35).abs() < 1e-4);
+    assert!((sig.read.perthread_frac - 0.3).abs() < 1e-4);
+    assert_eq!(sig.read.static_socket, 1);
+    assert!(sig.read.misfit < 1e-4);
+}
+
+#[test]
+fn hlo_fit_matches_reference_on_random_batch() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(0xA0A0);
+    // 50 requests → 150 rows → crosses the B=64 batch boundary twice.
+    let reqs: Vec<FitRequest> = (0..50)
+        .map(|_| {
+            let truth = random_signature(&mut rng);
+            FitRequest {
+                sym: run_for(&truth, &[4, 4], 1e9),
+                asym: run_for(&truth, &[6, 2], 1e9),
+            }
+        })
+        .collect();
+    let hlo = PredictionService::hlo(engine);
+    let reference = PredictionService::reference();
+    let got = hlo.fit(&reqs).unwrap();
+    let want = reference.fit(&reqs).unwrap();
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        for (gc, wc) in [(g.read, w.read), (g.write, w.write),
+                         (g.combined, w.combined)] {
+            assert!((gc.static_frac - wc.static_frac).abs() < 1e-3,
+                    "req {i}: {gc:?} vs {wc:?}");
+            assert!((gc.local_frac - wc.local_frac).abs() < 1e-3);
+            assert!((gc.perthread_frac - wc.perthread_frac).abs() < 1e-3);
+            assert_eq!(gc.static_socket, wc.static_socket, "req {i}");
+            assert!((gc.misfit - wc.misfit).abs() < 1e-3);
+        }
+    }
+}
+
+#[test]
+fn hlo_counter_prediction_matches_reference() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(0xB1B1);
+    let queries: Vec<CounterQuery> = (0..100)
+        .map(|_| {
+            let t0 = 1 + rng.below(17) as usize;
+            let t1 = rng.below(18) as usize;
+            CounterQuery {
+                sig: random_signature(&mut rng),
+                threads: [t0, t1],
+                cpu_totals: [rng.uniform(0.0, 1e10),
+                             rng.uniform(0.0, 1e10)],
+            }
+        })
+        .collect();
+    let hlo = PredictionService::hlo(engine);
+    let reference = PredictionService::reference();
+    let got = hlo.predict_counters(&queries).unwrap();
+    let want = reference.predict_counters(&queries).unwrap();
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        for bank in 0..2 {
+            for k in 0..2 {
+                let (gv, wv) = (g[bank][k], w[bank][k]);
+                let tol = 1e-4 * wv.abs().max(1e4);
+                assert!((gv - wv).abs() < tol,
+                        "query {i} bank {bank} kind {k}: {gv} vs {wv}");
+            }
+        }
+    }
+}
+
+#[test]
+fn hlo_performance_prediction_matches_reference() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(0xC2C2);
+    let queries: Vec<PerfQuery> = (0..80)
+        .map(|_| {
+            let mut caps = [0.0; 8];
+            for c in caps.iter_mut() {
+                *c = rng.uniform(5.0, 60.0);
+            }
+            PerfQuery {
+                sig: random_signature(&mut rng),
+                threads: [1 + rng.below(9) as usize,
+                          1 + rng.below(9) as usize],
+                demand_pt: [rng.uniform(0.5, 8.0), rng.uniform(0.0, 4.0)],
+                caps,
+            }
+        })
+        .collect();
+    let hlo = PredictionService::hlo(engine);
+    let reference = PredictionService::reference();
+    let got = hlo.predict_performance(&queries).unwrap();
+    let want = reference.predict_performance(&queries).unwrap();
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        for f in 0..8 {
+            assert!((g[f] - w[f]).abs() < 1e-2 * w[f].abs().max(1.0),
+                    "query {i} flow {f}: {} vs {}", g[f], w[f]);
+        }
+    }
+}
+
+#[test]
+fn engine_rejects_wrong_shapes() {
+    let Some(engine) = engine() else { return };
+    use numabw::runtime::Tensor;
+    let bad = vec![Tensor::zeros(&[64, 4])]; // fit_signature wants 5 inputs
+    assert!(engine.execute("fit_signature", &bad).is_err());
+}
+
+#[test]
+#[ignore]
+fn dump_first_perf_query() {
+    let mut rng = Rng::new(0xC2C2);
+    let mut caps = [0.0; 8];
+    for c in caps.iter_mut() {
+        *c = rng.uniform(5.0, 60.0);
+    }
+    let q = PerfQuery {
+        sig: random_signature(&mut rng),
+        threads: [1 + rng.below(9) as usize, 1 + rng.below(9) as usize],
+        demand_pt: [rng.uniform(0.5, 8.0), rng.uniform(0.0, 4.0)],
+        caps,
+    };
+    let m = apply::apply(&q.sig, &q.threads);
+    eprintln!("caps={:?}", q.caps);
+    eprintln!("sig={:?} threads={:?} demand={:?}", q.sig, q.threads,
+              q.demand_pt);
+    eprintln!("matrix={m:?}");
+    let reference = PredictionService::reference();
+    eprintln!("ref alloc={:?}",
+              reference.predict_performance(&[q]).unwrap()[0]);
+}
