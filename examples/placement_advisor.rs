@@ -4,15 +4,15 @@
 //! for a given workload, *without* measuring every candidate.
 //!
 //!     cargo run --release --example placement_advisor [--workload cg]
-//!         [--machine xeon8|xeon18] [--threads N]
+//!         [--machine xeon8|xeon18] [--threads N] [--sweeps K]
 //!
-//! Flow: profile twice → fit → predict achieved bandwidth for every
-//! feasible thread split under contention (max-min pipeline) → recommend;
-//! then validate the recommendation against brute-force simulation of
-//! every candidate.
+//! Built on `coordinator::advisor`: profile twice → fit → rank every
+//! feasible placement through the **batched + placement-cached** serving
+//! path (`PredictionService::serve_perf`) → recommend; then validate the
+//! recommendation against brute-force simulation of every candidate, and
+//! replay the sweep to show repeated what-if queries served from memory.
 
-use numabw::coordinator::{profile, FitRequest, PerfQuery,
-                          PredictionService};
+use numabw::coordinator::{advisor, profile, FitRequest, PredictionService};
 use numabw::prelude::*;
 use numabw::report;
 use numabw::util::args::Args;
@@ -25,6 +25,7 @@ fn main() -> anyhow::Result<()> {
     let workload = suite::by_name(args.get_or("workload", "cg"))
         .expect("workload name from Table 1");
     let total = args.get_usize("threads", machine.cores_per_socket);
+    let sweeps = args.get_usize("sweeps", 3).max(1);
     let svc = PredictionService::auto();
 
     println!("advising placement for `{}` with {total} threads on {}\n",
@@ -33,80 +34,63 @@ fn main() -> anyhow::Result<()> {
     // Profile + fit once (the only measurement cost the library pays).
     let sim = Simulator::new(machine.clone(), SimConfig::default());
     let pair = profile(&sim, &workload);
-    let sig = &svc.fit(&[FitRequest { sym: pair.sym, asym: pair.asym }])?[0];
+    let sig = svc
+        .fit(&[FitRequest { sym: pair.sym, asym: pair.asym }])?
+        .pop()
+        .expect("one signature");
 
-    // Score every feasible split through the contention pipeline.  The
-    // per-thread demand is latency-adjusted per placement: the signature's
-    // own traffic matrix says how remote each socket's accesses will be,
-    // and dependent-load workloads slow down accordingly (the same issue-
-    // rate model the simulator uses).
-    let caps: [f64; 8] = machine.capacities().try_into().unwrap();
-    let peak = workload.bw_per_thread.min(machine.core_peak_bw);
-    let splits = ThreadPlacement::all_splits(&machine, total);
-    let queries: Vec<PerfQuery> = splits
-        .iter()
-        .map(|p| {
-            let m = sig.combined.apply(&p.threads_per_socket);
-            // Thread-weighted average latency under this placement.
-            let n = p.total().max(1) as f64;
-            let mut lat = 0.0;
-            for (src, &cnt) in p.threads_per_socket.iter().enumerate() {
-                for (dst, w) in m[src].iter().enumerate() {
-                    lat += cnt as f64 / n * w * machine.latency_ns(src, dst);
-                }
-            }
-            let scale = (1.0 - workload.latency_sensitivity)
-                + workload.latency_sensitivity * machine.local_latency_ns
-                    / lat.max(machine.local_latency_ns);
-            let per_thread = peak * scale;
-            PerfQuery {
-                sig: sig.combined,
-                threads: [p.threads_per_socket[0], p.threads_per_socket[1]],
-                demand_pt: [per_thread * workload.read_fraction,
-                            per_thread * (1.0 - workload.read_fraction)],
-                caps,
-            }
-        })
-        .collect();
-    let predictions = svc.predict_performance(&queries)?;
-
-    let mut scored: Vec<(usize, f64)> = predictions
-        .iter()
-        .enumerate()
-        .map(|(i, alloc)| (i, alloc.iter().sum::<f64>()))
-        .collect();
-    scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    // Rank every feasible placement through the serving layer.  Replaying
+    // the sweep models the production pattern (many tenants asking the
+    // same what-ifs); every pass after the first is pure cache hits.
+    let mut advice =
+        advisor::advise(&svc, &machine, &workload, &sig, total)?;
+    for _ in 1..sweeps {
+        advice = advisor::advise(&svc, &machine, &workload, &sig, total)?;
+    }
+    let stats = svc.cache_stats();
 
     println!("model ranking (predicted achieved bandwidth):");
-    let rows: Vec<Vec<String>> = scored
+    let rows: Vec<Vec<String>> = advice
+        .ranked
         .iter()
         .take(5)
-        .map(|&(i, bw)| {
-            vec![format!("{:?}", splits[i].threads_per_socket),
-                 report::fmt_bw(bw)]
+        .map(|s| {
+            vec![
+                format!("{:?}", s.placement.threads_per_socket),
+                report::fmt_bw(s.predicted_bw),
+                format!("{:.0}%", 100.0 * s.satisfaction()),
+                format!("{:.0}%", 100.0 * s.qpi_headroom),
+            ]
         })
         .collect();
-    print!("{}", report::table(&["threads", "predicted bw"], &rows));
+    print!("{}", report::table(
+        &["threads", "predicted bw", "satisfied", "qpi headroom"], &rows));
+    println!("\n{} sweeps × {} placements served; cache: {} hits / {} \
+              misses", sweeps, advice.ranked.len(), stats.hits,
+             stats.misses);
 
     // Validate: brute-force simulate every candidate (what the library
     // could never afford in production).
-    let mut best_measured = (0usize, 0.0f64);
-    for (i, p) in splits.iter().enumerate() {
-        let bw = sim.run(&workload, p).achieved_bw;
+    let mut best_measured: (Option<&ThreadPlacement>, f64) = (None, 0.0);
+    for s in &advice.ranked {
+        let bw = sim.run(&workload, &s.placement).achieved_bw;
         if bw > best_measured.1 {
-            best_measured = (i, bw);
+            best_measured = (Some(&s.placement), bw);
         }
     }
-    let recommended = scored[0].0;
-    let rec_measured = sim.run(&workload, &splits[recommended]).achieved_bw;
+    let recommended = advice.best();
+    let rec_measured =
+        sim.run(&workload, &recommended.placement).achieved_bw;
     println!("\nrecommended: {:?} -> measured {}",
-             splits[recommended].threads_per_socket,
+             recommended.placement.threads_per_socket,
              report::fmt_bw(rec_measured));
+    let (best_p, best_bw) = best_measured;
     println!("true best:   {:?} -> measured {}",
-             splits[best_measured.0].threads_per_socket,
-             report::fmt_bw(best_measured.1));
-    let gap = 100.0 * (1.0 - rec_measured / best_measured.1);
+             best_p.expect("non-empty ranking").threads_per_socket,
+             report::fmt_bw(best_bw));
+    let gap = 100.0 * (1.0 - rec_measured / best_bw);
     println!("regret: {gap:.1}% of the best achievable bandwidth \
-              (profiling cost: 2 runs instead of {})", splits.len());
+              (profiling cost: 2 runs instead of {})",
+             advice.ranked.len());
     Ok(())
 }

@@ -8,7 +8,7 @@
 //! Run: `cargo bench --bench perf_hotpaths`
 
 use numabw::coordinator::{
-    evaluate_suite, CounterQuery, FitRequest, PredictionService,
+    evaluate_suite, CounterQuery, FitRequest, PerfQuery, PredictionService,
 };
 use numabw::model::signature::ChannelSignature;
 use numabw::model::{apply, fit};
@@ -91,6 +91,87 @@ fn main() {
     });
     println!("  -> {:.2}M predictions/s (reference)\n",
              256.0 / r.summary.median / 1e6);
+
+    // ---- serving layer: per-query loop vs batched+cached --------------------
+    // The advisor's production pattern: a stream of what-if queries over a
+    // bounded set of placements (19 splits on the 18-core machine), with
+    // repeats — tenants keep asking the same questions.  The per-query
+    // loop is what `evaluate` did before the serving layer existed; the
+    // served path coalesces into engine-sized batches and memoizes by
+    // placement, so repeats hit memory instead of the model.
+    let splits = ThreadPlacement::all_splits(&sim.machine, 18);
+    let caps: [f64; 8] = sim.machine.capacities().try_into().unwrap();
+    let perf_queries: Vec<PerfQuery> = (0..1024)
+        .map(|i| {
+            let p = &splits[i % splits.len()];
+            PerfQuery {
+                sig: truth,
+                threads: [p.threads_per_socket[0], p.threads_per_socket[1]],
+                demand_pt: [2.0e9, 1.0e9],
+                caps,
+            }
+        })
+        .collect();
+    let per_query_s = h
+        .bench("perf_1024_per_query_loop", || {
+            let mut acc = 0.0f64;
+            for q in &perf_queries {
+                acc += reference
+                    .predict_performance(std::slice::from_ref(q))
+                    .unwrap()[0]
+                    .iter()
+                    .sum::<f64>();
+            }
+            black_box(acc)
+        })
+        .summary
+        .median;
+    let serving = PredictionService::reference();
+    let served_s = h
+        .bench("perf_1024_batched_cached", || {
+            black_box(serving.serve_perf(&perf_queries).unwrap())
+        })
+        .summary
+        .median;
+    println!(
+        "  -> batched+cached serving speedup: {:.1}x on 1024 queries \
+         (acceptance target: >= 5x)\n",
+        per_query_s / served_s
+    );
+
+    let counter_stream: Vec<CounterQuery> = (0..1024)
+        .map(|i| {
+            let p = &splits[i % splits.len()];
+            CounterQuery {
+                sig: truth,
+                threads: [p.threads_per_socket[0], p.threads_per_socket[1]],
+                cpu_totals: [1.0e9 + i as f64, 2.0e9 - i as f64],
+            }
+        })
+        .collect();
+    let ctr_loop_s = h
+        .bench("counters_1024_per_query_loop", || {
+            let mut acc = 0.0f64;
+            for q in &counter_stream {
+                acc += reference
+                    .predict_counters(std::slice::from_ref(q))
+                    .unwrap()[0][0][0];
+            }
+            black_box(acc)
+        })
+        .summary
+        .median;
+    let ctr_served_s = h
+        .bench("counters_1024_batched_cached", || {
+            black_box(serving.serve_counters(&counter_stream).unwrap())
+        })
+        .summary
+        .median;
+    println!(
+        "  -> counter-stream speedup via placement-keyed matrix cache: \
+         {:.1}x\n",
+        ctr_loop_s / ctr_served_s
+    );
 
     match numabw::runtime::Engine::from_env() {
         Ok(engine) => {

@@ -6,13 +6,15 @@
 //!   profile    — run the two §5.1 profiling runs for one workload
 //!   fit        — profile + fit, print the bandwidth signature (§5)
 //!   predict    — apply a fitted signature to a placement (§4)
+//!   advise     — rank every thread placement (batched+cached serving)
 //!   evaluate   — full measured-vs-predicted sweep (§6.2.2, Figs 16–18)
 //!   quickstart — tiny end-to-end demo
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::{
-    evaluate_suite, profile, FitRequest, PredictionService, SignatureStore,
+    advisor, evaluate_suite, profile, FitRequest, PredictionService,
+    SignatureStore,
 };
 use crate::eval;
 use crate::model::misfit;
@@ -30,6 +32,7 @@ pub fn main_with(args: Vec<String>) -> Result<()> {
         Some("profile") => cmd_profile(&args),
         Some("fit") => cmd_fit(&args),
         Some("predict") => cmd_predict(&args),
+        Some("advise") => cmd_advise(&args),
         Some("evaluate") => cmd_evaluate(&args),
         Some("quickstart") => cmd_quickstart(),
         Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
@@ -54,6 +57,10 @@ USAGE: numabw <subcommand> [flags]
   predict   --workload W --t0 N --t1 N [--machine M] [--hlo] [--store F]
                                     predict a placement's traffic matrix
                                     (from a stored signature if --store)
+  advise    --workload W [--machine M] [--threads N] [--top K] [--hlo]
+                                    rank every valid thread placement by
+                                    predicted bandwidth (Pandia-style;
+                                    batched+cached serving path)
   evaluate  [--machine M] [--hlo] [--seed S]    full §6.2.2 sweep
   quickstart                        tiny end-to-end demo
 
@@ -251,6 +258,55 @@ fn cmd_predict(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_advise(args: &Args) -> Result<()> {
+    let machine = machine_flag(args)?;
+    let w = workload_flag(args)?;
+    let sim = sim_flag(args, machine);
+    let svc = service_flag(args);
+    let total = args.get_usize("threads", sim.machine.cores_per_socket);
+    let top = args.get_usize("top", 5).max(1);
+    println!(
+        "advising placement for `{}` with {total} threads on {} \
+         (backend: {})\n",
+        w.name,
+        sim.machine.name,
+        if svc.is_hlo() { "HLO/PJRT" } else { "rust-reference" }
+    );
+    let advice = advisor::advise_workload(&svc, &sim, &w, Some(total))?;
+    let rows: Vec<Vec<String>> = advice
+        .ranked
+        .iter()
+        .take(top)
+        .map(|s| {
+            vec![
+                format!("{:?}", s.placement.threads_per_socket),
+                report::fmt_bw(s.predicted_bw),
+                format!("{:.0}%", 100.0 * s.satisfaction()),
+                format!("{:.0}%", 100.0 * s.qpi_headroom),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        report::table(
+            &["threads", "predicted bw", "satisfied", "qpi headroom"],
+            &rows
+        )
+    );
+    let best = advice.best();
+    println!(
+        "\nrecommended placement: {:?} — predicted {} ({} candidates \
+         scored through the batched+cached path)",
+        best.placement.threads_per_socket,
+        report::fmt_bw(best.predicted_bw),
+        advice.ranked.len()
+    );
+    let stats = svc.cache_stats();
+    println!("serving cache: {} hits / {} misses", stats.hits,
+             stats.misses);
+    Ok(())
+}
+
 fn cmd_evaluate(args: &Args) -> Result<()> {
     let machine = machine_flag(args)?;
     let sim = sim_flag(args, machine);
@@ -347,6 +403,25 @@ mod tests {
     #[test]
     fn unknown_workload_errors() {
         assert!(main_with(toks("fit --workload nope")).is_err());
+    }
+
+    #[test]
+    fn advise_runs_end_to_end() {
+        main_with(toks("advise --workload cg --machine xeon8 --top 3"))
+            .unwrap();
+        // Synthetic workloads are addressable too.
+        main_with(toks(
+            "advise --workload chase-static --machine xeon8 --threads 4"
+        ))
+        .unwrap();
+    }
+
+    #[test]
+    fn advise_rejects_oversized_thread_count() {
+        assert!(main_with(toks(
+            "advise --workload cg --machine xeon8 --threads 99"
+        ))
+        .is_err());
     }
 
     #[test]

@@ -1,0 +1,388 @@
+//! Placement advisor: the Pandia-style serving use case from the paper's
+//! introduction ("systems such as Pandia which take an application and
+//! predict the performance and system load of a proposed thread count and
+//! placement").
+//!
+//! Given a machine and a fitted bandwidth signature, the advisor
+//! enumerates **every** valid thread placement, scores each by predicted
+//! achieved bandwidth under the §4 + max-min contention pipeline (the same
+//! what-if query loop thread-migration strategies need), and returns a
+//! deterministic ranking.  All scoring goes through
+//! [`PredictionService::serve_perf`] — the batched, placement-memoized
+//! serving path — so a sweep costs one batched pass and repeated sweeps
+//! cost cache lookups.  [`advise_brute_force`] is the per-query oracle the
+//! integration tests pin the ranking against (bit-identical in reference
+//! mode).
+//!
+//! Scores carry a secondary signal, **interconnect headroom**: the
+//! smallest residual capacity fraction across the QPI links, i.e. how
+//! close the placement drives the interconnect to saturation.  Ties on
+//! predicted bandwidth break on headroom, then on lexicographic placement
+//! order, so rankings are reproducible byte-for-byte.
+
+use anyhow::{bail, Result};
+
+use crate::model::signature::BandwidthSignature;
+use crate::simulator::{Simulator, ThreadPlacement};
+use crate::topology::MachineTopology;
+use crate::workloads::WorkloadSpec;
+
+use super::profiler::profile;
+use super::service::{
+    flow_resources, FitRequest, PerfQuery, PredictionService,
+};
+
+/// One scored placement.
+#[derive(Clone, Debug)]
+pub struct PlacementScore {
+    pub placement: ThreadPlacement,
+    /// Predicted achieved bandwidth (bytes/s), summed over all flows.
+    pub predicted_bw: f64,
+    /// Bandwidth the threads would demand uncontended (bytes/s).
+    pub demanded_bw: f64,
+    /// Smallest residual capacity fraction across the interconnect links
+    /// (1.0 = QPI untouched, 0.0 = some link saturated).
+    pub qpi_headroom: f64,
+}
+
+impl PlacementScore {
+    /// Fraction of demand the placement is predicted to satisfy.
+    pub fn satisfaction(&self) -> f64 {
+        if self.demanded_bw > 0.0 {
+            self.predicted_bw / self.demanded_bw
+        } else {
+            1.0
+        }
+    }
+}
+
+/// A ranked recommendation.
+#[derive(Clone, Debug)]
+pub struct Advice {
+    pub workload: String,
+    pub machine: String,
+    /// Best first.
+    pub ranked: Vec<PlacementScore>,
+}
+
+impl Advice {
+    pub fn best(&self) -> &PlacementScore {
+        &self.ranked[0]
+    }
+}
+
+/// Enumerate every distribution of `total` threads over the machine's
+/// sockets, one thread per core, in lexicographic order.  Generalises
+/// [`ThreadPlacement::all_splits`] to any socket count.
+pub fn enumerate_placements(machine: &MachineTopology, total: usize)
+    -> Vec<ThreadPlacement> {
+    fn rec(sockets: usize, cores: usize, left: usize,
+           prefix: &mut Vec<usize>, out: &mut Vec<ThreadPlacement>) {
+        if prefix.len() + 1 == sockets {
+            if left <= cores {
+                prefix.push(left);
+                out.push(ThreadPlacement::new(prefix.clone()));
+                prefix.pop();
+            }
+            return;
+        }
+        let remaining = sockets - prefix.len() - 1;
+        for t in 0..=left.min(cores) {
+            if left - t <= remaining * cores {
+                prefix.push(t);
+                rec(sockets, cores, left - t, prefix, out);
+                prefix.pop();
+            }
+        }
+    }
+    let mut out = Vec::new();
+    if total > 0 && total <= machine.total_cores() {
+        let mut prefix = Vec::with_capacity(machine.sockets);
+        rec(machine.sockets, machine.cores_per_socket, total, &mut prefix,
+            &mut out);
+    }
+    out
+}
+
+/// Build the performance query scoring one placement: the per-thread
+/// demand is latency-adjusted from the signature's own traffic matrix
+/// (dependent-load workloads slow down when their accesses go remote —
+/// the same issue-rate model the simulator uses).
+pub fn placement_query(machine: &MachineTopology, workload: &WorkloadSpec,
+                       sig: &BandwidthSignature,
+                       placement: &ThreadPlacement) -> PerfQuery {
+    let caps: [f64; 8] = machine
+        .capacities()
+        .try_into()
+        .expect("advisor requires the 2-socket resource layout");
+    let peak = workload.bw_per_thread.min(machine.core_peak_bw);
+    let m = sig.combined.apply(&placement.threads_per_socket);
+    let n = placement.total().max(1) as f64;
+    let mut lat = 0.0;
+    for (src, &cnt) in placement.threads_per_socket.iter().enumerate() {
+        for (dst, w) in m[src].iter().enumerate() {
+            lat += cnt as f64 / n * w * machine.latency_ns(src, dst);
+        }
+    }
+    let scale = (1.0 - workload.latency_sensitivity)
+        + workload.latency_sensitivity * machine.local_latency_ns
+            / lat.max(machine.local_latency_ns);
+    let per_thread = peak * scale;
+    PerfQuery {
+        sig: sig.combined,
+        threads: [
+            placement.threads_per_socket[0],
+            placement.threads_per_socket[1],
+        ],
+        demand_pt: [
+            per_thread * workload.read_fraction,
+            per_thread * (1.0 - workload.read_fraction),
+        ],
+        caps,
+    }
+}
+
+/// Per-resource loads implied by an allocation (flow layout
+/// `src*4 + dst*2 + rw`; resource footprint via the shared
+/// [`flow_resources`]), reduced to the QPI headroom: the smallest residual
+/// capacity fraction across the four interconnect links.
+fn qpi_headroom(q: &PerfQuery, alloc: &[f64]) -> f64 {
+    let mut loads = [0.0f64; 8];
+    for src in 0..2 {
+        for dst in 0..2 {
+            for rw in 0..2 {
+                let a = alloc[src * 4 + dst * 2 + rw];
+                let (chan, link) = flow_resources(src, dst, rw);
+                loads[chan] += a;
+                if let Some(l) = link {
+                    loads[l] += a;
+                }
+            }
+        }
+    }
+    (4..8)
+        .map(|r| {
+            if q.caps[r] > 0.0 {
+                1.0 - loads[r] / q.caps[r]
+            } else {
+                0.0
+            }
+        })
+        .fold(1.0, f64::min)
+        .clamp(0.0, 1.0)
+}
+
+fn score_one(placement: &ThreadPlacement, q: &PerfQuery, alloc: &[f64])
+    -> PlacementScore {
+    PlacementScore {
+        placement: placement.clone(),
+        predicted_bw: alloc.iter().sum(),
+        demanded_bw: placement.total() as f64
+            * (q.demand_pt[0] + q.demand_pt[1]),
+        qpi_headroom: qpi_headroom(q, alloc),
+    }
+}
+
+/// Deterministic ranking: predicted bandwidth desc, then headroom desc,
+/// then lexicographic placement.
+fn rank(scores: &mut [PlacementScore]) {
+    scores.sort_by(|a, b| {
+        b.predicted_bw
+            .total_cmp(&a.predicted_bw)
+            .then(b.qpi_headroom.total_cmp(&a.qpi_headroom))
+            .then(
+                a.placement
+                    .threads_per_socket
+                    .cmp(&b.placement.threads_per_socket),
+            )
+    });
+}
+
+/// Rank every valid placement of `total` threads through the batched,
+/// cached serving path.
+pub fn advise(svc: &PredictionService, machine: &MachineTopology,
+              workload: &WorkloadSpec, sig: &BandwidthSignature,
+              total: usize) -> Result<Advice> {
+    if machine.sockets != 2 {
+        bail!(
+            "advisor supports 2-socket machines (the paper's fit and the \
+             compiled resource layout are 2-socket); {} has {}",
+            machine.name,
+            machine.sockets
+        );
+    }
+    let placements = enumerate_placements(machine, total);
+    if placements.is_empty() {
+        bail!(
+            "no valid placement of {total} threads on {} ({} cores)",
+            machine.name,
+            machine.total_cores()
+        );
+    }
+    let queries: Vec<PerfQuery> = placements
+        .iter()
+        .map(|p| placement_query(machine, workload, sig, p))
+        .collect();
+    let allocs = svc.serve_perf(&queries)?;
+    let mut ranked: Vec<PlacementScore> = placements
+        .iter()
+        .zip(&queries)
+        .zip(&allocs)
+        .map(|((p, q), alloc)| score_one(p, q, alloc))
+        .collect();
+    rank(&mut ranked);
+    Ok(Advice {
+        workload: workload.name.clone(),
+        machine: machine.name.clone(),
+        ranked,
+    })
+}
+
+/// The per-query oracle: identical scoring, one unbatched, uncached
+/// backend call per placement.  Exists so tests (and the throughput bench)
+/// can pin the served ranking against first principles.
+pub fn advise_brute_force(svc: &PredictionService,
+                          machine: &MachineTopology,
+                          workload: &WorkloadSpec,
+                          sig: &BandwidthSignature, total: usize)
+    -> Result<Advice> {
+    if machine.sockets != 2 {
+        bail!("advisor supports 2-socket machines");
+    }
+    let placements = enumerate_placements(machine, total);
+    if placements.is_empty() {
+        bail!("no valid placement of {total} threads on {}", machine.name);
+    }
+    let mut ranked = Vec::with_capacity(placements.len());
+    for p in &placements {
+        let q = placement_query(machine, workload, sig, p);
+        let alloc = svc
+            .predict_performance(std::slice::from_ref(&q))?
+            .pop()
+            .expect("one allocation per query");
+        ranked.push(score_one(p, &q, &alloc));
+    }
+    rank(&mut ranked);
+    Ok(Advice {
+        workload: workload.name.clone(),
+        machine: machine.name.clone(),
+        ranked,
+    })
+}
+
+/// Convenience end-to-end entry: profile the workload on the simulator
+/// (two §5.1 runs), fit its signature, and advise.  `total` defaults to
+/// one socket's worth of cores (the paper's evaluation convention).
+pub fn advise_workload(svc: &PredictionService, sim: &Simulator,
+                       workload: &WorkloadSpec, total: Option<usize>)
+    -> Result<Advice> {
+    let total = total.unwrap_or(sim.machine.cores_per_socket);
+    let pair = profile(sim, workload);
+    let sig = svc
+        .fit(&[FitRequest {
+            sym: pair.sym,
+            asym: pair.asym,
+        }])?
+        .pop()
+        .expect("one signature per fit request");
+    advise(svc, &sim.machine, workload, &sig, total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::SimConfig;
+    use crate::workloads::suite;
+
+    fn m8() -> MachineTopology {
+        MachineTopology::xeon_e5_2630_v3()
+    }
+
+    #[test]
+    fn enumeration_matches_all_splits_on_two_sockets() {
+        for total in [4, 8, 12] {
+            let ours = enumerate_placements(&m8(), total);
+            let splits = ThreadPlacement::all_splits(&m8(), total);
+            assert_eq!(ours, splits, "total={total}");
+        }
+    }
+
+    #[test]
+    fn enumeration_generalises_to_more_sockets() {
+        let mut m = m8();
+        m.sockets = 3;
+        m.cores_per_socket = 2;
+        let ps = enumerate_placements(&m, 4);
+        // Compositions of 4 into 3 parts, each <= 2:
+        // (0,2,2) (1,1,2) (1,2,1) (2,0,2) (2,1,1) (2,2,0).
+        assert_eq!(ps.len(), 6);
+        for p in &ps {
+            assert_eq!(p.total(), 4);
+            assert!(p.threads_per_socket.iter().all(|&t| t <= 2));
+        }
+        // Lexicographic order.
+        for w in ps.windows(2) {
+            assert!(w[0].threads_per_socket < w[1].threads_per_socket);
+        }
+    }
+
+    #[test]
+    fn enumeration_edge_cases() {
+        assert!(enumerate_placements(&m8(), 0).is_empty());
+        assert!(enumerate_placements(&m8(), 17).is_empty());
+        assert_eq!(enumerate_placements(&m8(), 16).len(), 1);
+    }
+
+    #[test]
+    fn headroom_is_one_without_remote_traffic() {
+        let svc = PredictionService::reference();
+        let w = suite::by_name("ep").unwrap(); // almost purely local
+        let sim = Simulator::new(m8(), SimConfig::noiseless());
+        let advice =
+            advise_workload(&svc, &sim, &w, Some(4)).unwrap();
+        // Some placement keeps everything local -> full QPI headroom.
+        assert!(advice
+            .ranked
+            .iter()
+            .any(|s| s.qpi_headroom > 0.99));
+        for s in &advice.ranked {
+            assert!((0.0..=1.0).contains(&s.qpi_headroom));
+            assert!(s.predicted_bw <= s.demanded_bw * (1.0 + 1e-9));
+        }
+    }
+
+    #[test]
+    fn ranking_is_deterministic_across_calls() {
+        let svc = PredictionService::reference();
+        let sim = Simulator::new(m8(), SimConfig::default());
+        let w = suite::by_name("cg").unwrap();
+        let a = advise_workload(&svc, &sim, &w, Some(8)).unwrap();
+        let b = advise_workload(&svc, &sim, &w, Some(8)).unwrap();
+        let order = |adv: &Advice| -> Vec<Vec<usize>> {
+            adv.ranked
+                .iter()
+                .map(|s| s.placement.threads_per_socket.clone())
+                .collect()
+        };
+        assert_eq!(order(&a), order(&b));
+    }
+
+    #[test]
+    fn rejects_non_two_socket_machines() {
+        let mut m = m8();
+        m.sockets = 4;
+        let svc = PredictionService::reference();
+        let w = suite::by_name("cg").unwrap();
+        let sig = crate::model::signature::BandwidthSignature {
+            read: crate::model::signature::ChannelSignature::new(
+                0.2, 0.3, 0.3, 0),
+            write: crate::model::signature::ChannelSignature::new(
+                0.2, 0.3, 0.3, 0),
+            combined: crate::model::signature::ChannelSignature::new(
+                0.2, 0.3, 0.3, 0),
+            read_bytes: 1.0,
+            write_bytes: 1.0,
+        };
+        assert!(advise(&svc, &m, &w, &sig, 8).is_err());
+    }
+}

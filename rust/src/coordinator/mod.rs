@@ -1,20 +1,29 @@
 //! Layer-3 coordination: profiling orchestration, batched prediction
-//! serving through the AOT HLO pipelines, signature persistence, and the
-//! paper's evaluation sweeps.
+//! serving, the placement advisor, signature persistence, and the paper's
+//! evaluation sweeps.
 //!
 //! * [`pool`]     — scoped-thread worker pool.
 //! * [`profiler`] — §5.1 profiling-run orchestration.
-//! * [`service`]  — the prediction service (HLO or Rust-reference backend).
-//! * [`store`]    — persisted signature store.
+//! * [`service`]  — the prediction service (HLO or Rust-reference
+//!   backend), plus the batched+cached serving front-end
+//!   (`serve_counters` / `serve_perf` / `CounterBatcher`).
+//! * [`advisor`]  — Pandia-style placement advisor: enumerate + score +
+//!   rank every valid placement through the serving path.
+//! * [`store`]    — persisted signature store (deterministic ordering).
 //! * [`evaluate`] — the §6.2.2 measured-vs-predicted sweep.
 
+pub mod advisor;
 pub mod evaluate;
 pub mod pool;
 pub mod profiler;
 pub mod service;
 pub mod store;
 
+pub use advisor::{advise, advise_workload, Advice, PlacementScore};
 pub use evaluate::{evaluate_suite, ErrorRecord, Evaluation};
 pub use profiler::{profile, profile_suite, ProfilePair};
-pub use service::{CounterQuery, FitRequest, PerfQuery, PredictionService};
+pub use service::{
+    CacheStats, CounterBatcher, CounterQuery, FitRequest, PerfQuery,
+    PredictionService,
+};
 pub use store::SignatureStore;

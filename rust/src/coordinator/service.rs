@@ -1,9 +1,36 @@
-//! The prediction service: batches model queries through the AOT-compiled
-//! HLO pipelines (the request-path hot loop — Python is never involved).
+//! The prediction service: the request-path hot loop of the placement
+//! advisor (Python is never involved).
 //!
-//! Falls back to the Rust reference model when constructed without a PJRT
-//! engine (`PredictionService::reference()`), so every caller works in
-//! both modes and the two paths can be compared (see `tests/hlo_parity.rs`).
+//! Two layers:
+//!
+//! * The **backend calls** ([`PredictionService::fit`],
+//!   [`PredictionService::predict_counters`],
+//!   [`PredictionService::predict_performance`]) execute through the AOT
+//!   HLO pipelines when an engine is available, or through the Rust
+//!   reference model otherwise (`PredictionService::reference()`), so
+//!   every caller works in both modes and the two paths can be compared
+//!   (see `tests/hlo_parity.rs`).
+//!
+//! * The **serving front-end** ([`PredictionService::serve_counters`],
+//!   [`PredictionService::serve_perf`], [`CounterBatcher`]) coalesces
+//!   query streams into engine-sized batches via [`crate::runtime::batches`]
+//!   and memoizes by placement: the §4 traffic matrix depends only on
+//!   `(signature, threads)`, so in reference mode a placement-keyed matrix
+//!   cache serves any `cpu_totals` without recomputing, and performance
+//!   queries are memoized on their full key.  Repeated placements hit
+//!   memory instead of the engine.  The service is `Send + Sync` (interior
+//!   mutability for all caches) so one instance can serve many threads —
+//!   the advisor fans out over it with `pool::parallel_map`.
+//!
+//! Bit-identity guarantee (pinned by `tests/advisor.rs`): in reference
+//! mode the batched+cached path performs exactly the same floating-point
+//! operations as the per-query path (`apply::counters_from_matrix` is the
+//! shared multiply; perf misses run through the same `predict_performance`
+//! the per-query loop uses), so results are bit-identical.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
@@ -11,6 +38,8 @@ use crate::counters::{Channel, ProfiledRun};
 use crate::model::signature::{BandwidthSignature, ChannelSignature};
 use crate::model::{apply, fit};
 use crate::runtime::{batches, Batch, Engine, Tensor};
+
+use super::pool::parallel_map;
 
 /// One §5 fit request: the two profiling runs.
 #[derive(Clone, Debug)]
@@ -44,23 +73,134 @@ enum Backend {
     Reference,
 }
 
+/// Default front-end batch size when no engine dictates one (matches the
+/// AOT artifacts' compiled batch).
+pub const DEFAULT_BATCH: usize = 64;
+
+/// Bound on each memo cache; on overflow the cache is cleared outright
+/// (simple, deterministic; an LRU is a noted follow-on in ROADMAP.md).
+const CACHE_CAP: usize = 1 << 16;
+
+/// Cache key of a §4 traffic matrix: the signature fields `apply` reads
+/// plus the placement.  `misfit` deliberately excluded — it does not
+/// affect the matrix, and excluding it raises the hit rate.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct MatrixKey {
+    sig: [u64; 3],
+    socket: usize,
+    threads: [usize; 2],
+}
+
+fn matrix_key(sig: &ChannelSignature, threads: [usize; 2]) -> MatrixKey {
+    MatrixKey {
+        sig: [
+            sig.static_frac.to_bits(),
+            sig.local_frac.to_bits(),
+            sig.perthread_frac.to_bits(),
+        ],
+        socket: sig.static_socket,
+        threads,
+    }
+}
+
+/// Full-bit key of a counter query (HLO mode caches whole results: f32
+/// engine output is not linearly decomposable client-side without breaking
+/// parity with the engine).
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct CounterKey {
+    mk: MatrixKey,
+    totals: [u64; 2],
+}
+
+/// Full-bit key of a performance query (max-min is nonlinear, so the memo
+/// must be exact).
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct PerfKey {
+    mk: MatrixKey,
+    demand: [u64; 2],
+    caps: [u64; 8],
+}
+
+/// Resource footprint of performance-query flow `(src, dst, rw)` in the
+/// 2-socket layout the compiled pipelines bake in (`model.py
+/// build_incidence`, flow order `src*4 + dst*2 + rw`): the memory channel
+/// at the destination bank, plus the interconnect link for remote flows.
+/// Single source of truth shared by `perf_reference` and the advisor's
+/// headroom accounting.
+pub(crate) fn flow_resources(src: usize, dst: usize, rw: usize)
+    -> (usize, Option<usize>) {
+    let chan = if rw == 0 { dst } else { 2 + dst };
+    let link = if src != dst {
+        Some(if rw == 0 {
+            4 + if dst == 0 { 0 } else { 1 }
+        } else {
+            6 + if src == 0 { 0 } else { 1 }
+        })
+    } else {
+        None
+    };
+    (chan, link)
+}
+
+fn perf_key(q: &PerfQuery) -> PerfKey {
+    let mut caps = [0u64; 8];
+    for (c, v) in caps.iter_mut().zip(&q.caps) {
+        *c = v.to_bits();
+    }
+    PerfKey {
+        mk: matrix_key(&q.sig, q.threads),
+        demand: [q.demand_pt[0].to_bits(), q.demand_pt[1].to_bits()],
+        caps,
+    }
+}
+
+type MatrixCache = Mutex<HashMap<MatrixKey, Arc<Vec<Vec<f64>>>>>;
+type CounterCache = Mutex<HashMap<CounterKey, Arc<Vec<[f64; 2]>>>>;
+type PerfCache = Mutex<HashMap<PerfKey, Arc<Vec<f64>>>>;
+
+/// Serving-cache counters (monotonic since service construction).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
 pub struct PredictionService {
     backend: Backend,
+    /// Engine-sized chunk the front-end coalesces into.
+    batch_hint: usize,
+    matrix_cache: MatrixCache,
+    counter_cache: CounterCache,
+    perf_cache: PerfCache,
+    hits: AtomicU64,
+    misses: AtomicU64,
 }
 
 impl PredictionService {
+    fn with_backend(backend: Backend) -> PredictionService {
+        let batch_hint = match &backend {
+            Backend::Hlo(engine) => engine.batch().max(1),
+            Backend::Reference => DEFAULT_BATCH,
+        };
+        PredictionService {
+            backend,
+            batch_hint,
+            matrix_cache: Mutex::new(HashMap::new()),
+            counter_cache: Mutex::new(HashMap::new()),
+            perf_cache: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
     /// Serve through the compiled HLO artifacts.
     pub fn hlo(engine: Engine) -> PredictionService {
-        PredictionService {
-            backend: Backend::Hlo(engine),
-        }
+        Self::with_backend(Backend::Hlo(engine))
     }
 
     /// Serve through the Rust reference model (no PJRT).
     pub fn reference() -> PredictionService {
-        PredictionService {
-            backend: Backend::Reference,
-        }
+        Self::with_backend(Backend::Reference)
     }
 
     /// Try HLO, fall back to reference with a warning.
@@ -79,6 +219,19 @@ impl PredictionService {
 
     pub fn is_hlo(&self) -> bool {
         matches!(self.backend, Backend::Hlo(_))
+    }
+
+    /// The batch size the serving front-end coalesces into.
+    pub fn batch_hint(&self) -> usize {
+        self.batch_hint
+    }
+
+    /// Serving-cache hit/miss counters.
+    pub fn cache_stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
     }
 
     // ---- fitting -----------------------------------------------------------
@@ -360,20 +513,192 @@ impl PredictionService {
                     let demand = q.threads[src] as f64
                         * m[src][dst]
                         * q.demand_pt[rw];
-                    // Resource layout mirrors model.py build_incidence.
-                    let mut rs = vec![if rw == 0 { dst } else { 2 + dst }];
-                    if src != dst {
-                        rs.push(if rw == 0 {
-                            4 + if dst == 0 { 0 } else { 1 }
-                        } else {
-                            6 + if src == 0 { 0 } else { 1 }
-                        });
+                    let (chan, link) = flow_resources(src, dst, rw);
+                    let mut rs = vec![chan];
+                    if let Some(l) = link {
+                        rs.push(l);
                     }
                     flows.push(Flow::new(demand, &rs));
                 }
             }
         }
         maxmin(&flows, &q.caps)
+    }
+
+    // ---- serving front-end (batched + cached) -------------------------------
+
+    /// Resolve `keys` through a memo cache, computing misses with
+    /// `compute`, which receives the indices of the **first occurrence** of
+    /// each missing key and must return one value per index, in order.
+    fn memo_serve<K, V, F>(
+        &self,
+        cache: &Mutex<HashMap<K, Arc<V>>>,
+        keys: &[K],
+        compute: F,
+    ) -> Result<Vec<Arc<V>>>
+    where
+        K: Copy + Eq + std::hash::Hash,
+        F: FnOnce(&[usize]) -> Result<Vec<V>>,
+    {
+        let mut resolved: Vec<Option<Arc<V>>> = Vec::with_capacity(keys.len());
+        let mut miss_first: Vec<usize> = Vec::new();
+        {
+            let cache = cache.lock().unwrap();
+            let mut fresh: HashSet<K> = HashSet::new();
+            for (i, k) in keys.iter().enumerate() {
+                if let Some(v) = cache.get(k) {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    resolved.push(Some(v.clone()));
+                } else {
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    if fresh.insert(*k) {
+                        miss_first.push(i);
+                    }
+                    resolved.push(None);
+                }
+            }
+        }
+        if !miss_first.is_empty() {
+            let values = compute(&miss_first)?;
+            debug_assert_eq!(values.len(), miss_first.len());
+            let mut cache = cache.lock().unwrap();
+            if cache.len() + values.len() > CACHE_CAP {
+                cache.clear();
+            }
+            for (&i, v) in miss_first.iter().zip(values) {
+                cache.insert(keys[i], Arc::new(v));
+            }
+            for (i, slot) in resolved.iter_mut().enumerate() {
+                if slot.is_none() {
+                    *slot = Some(cache.get(&keys[i]).unwrap().clone());
+                }
+            }
+        }
+        Ok(resolved.into_iter().map(Option::unwrap).collect())
+    }
+
+    /// Serve a stream of counter queries through the batched+cached path.
+    ///
+    /// Reference mode memoizes the §4 traffic matrix per
+    /// `(signature, placement)` — any `cpu_totals` under a cached placement
+    /// is a pure in-memory multiply — and computes misses in engine-sized
+    /// chunks in parallel.  HLO mode memoizes full query results and
+    /// executes misses through the engine's batched pipeline.
+    pub fn serve_counters(&self, queries: &[CounterQuery])
+        -> Result<Vec<Vec<[f64; 2]>>> {
+        match &self.backend {
+            Backend::Reference => {
+                let keys: Vec<MatrixKey> = queries
+                    .iter()
+                    .map(|q| matrix_key(&q.sig, q.threads))
+                    .collect();
+                let mats = self.memo_serve(&self.matrix_cache, &keys,
+                                           |miss| {
+                    let chunks = batches(miss.len(), self.batch_hint);
+                    let per_chunk: Vec<Vec<Vec<Vec<f64>>>> =
+                        parallel_map(chunks, 0, |(start, len)| {
+                            miss[start..start + len]
+                                .iter()
+                                .map(|&i| {
+                                    apply::apply(&queries[i].sig,
+                                                 &queries[i].threads)
+                                })
+                                .collect()
+                        });
+                    Ok(per_chunk.into_iter().flatten().collect())
+                })?;
+                Ok(queries
+                    .iter()
+                    .zip(&mats)
+                    .map(|(q, m)| {
+                        apply::counters_from_matrix(m, &q.cpu_totals)
+                    })
+                    .collect())
+            }
+            Backend::Hlo(_) => {
+                let keys: Vec<CounterKey> = queries
+                    .iter()
+                    .map(|q| CounterKey {
+                        mk: matrix_key(&q.sig, q.threads),
+                        totals: [
+                            q.cpu_totals[0].to_bits(),
+                            q.cpu_totals[1].to_bits(),
+                        ],
+                    })
+                    .collect();
+                let res = self.memo_serve(&self.counter_cache, &keys,
+                                          |miss| {
+                    let miss_q: Vec<CounterQuery> =
+                        miss.iter().map(|&i| queries[i].clone()).collect();
+                    self.predict_counters(&miss_q)
+                })?;
+                Ok(res.iter().map(|a| a.as_ref().clone()).collect())
+            }
+        }
+    }
+
+    /// Serve a stream of performance queries through the batched+cached
+    /// path: misses are computed in engine-sized chunks (in parallel in
+    /// reference mode, through the engine's batched pipeline in HLO mode)
+    /// and memoized on the query's full key.
+    pub fn serve_perf(&self, queries: &[PerfQuery])
+        -> Result<Vec<Vec<f64>>> {
+        let keys: Vec<PerfKey> = queries.iter().map(perf_key).collect();
+        let res = self.memo_serve(&self.perf_cache, &keys, |miss| {
+            let miss_q: Vec<PerfQuery> =
+                miss.iter().map(|&i| queries[i].clone()).collect();
+            let chunks = batches(miss_q.len(), self.batch_hint);
+            let per_chunk: Vec<Result<Vec<Vec<f64>>>> =
+                parallel_map(chunks, 0, |(start, len)| {
+                    self.predict_performance(&miss_q[start..start + len])
+                });
+            let mut flat = Vec::with_capacity(miss_q.len());
+            for r in per_chunk {
+                flat.extend(r?);
+            }
+            Ok(flat)
+        })?;
+        Ok(res.iter().map(|a| a.as_ref().clone()).collect())
+    }
+}
+
+/// Stream adapter over [`PredictionService::serve_counters`]: accumulates
+/// pushed queries and flushes an engine-sized batch whenever one fills.
+pub struct CounterBatcher<'a> {
+    svc: &'a PredictionService,
+    pending: Vec<CounterQuery>,
+}
+
+impl<'a> CounterBatcher<'a> {
+    pub fn new(svc: &'a PredictionService) -> CounterBatcher<'a> {
+        CounterBatcher {
+            svc,
+            pending: Vec::new(),
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Enqueue one query; returns the batch's results when this push
+    /// completes an engine-sized batch, `None` otherwise.
+    pub fn push(&mut self, q: CounterQuery)
+        -> Result<Option<Vec<Vec<[f64; 2]>>>> {
+        self.pending.push(q);
+        if self.pending.len() >= self.svc.batch_hint() {
+            return self.flush().map(Some);
+        }
+        Ok(None)
+    }
+
+    /// Serve whatever is pending (possibly a partial batch).
+    pub fn flush(&mut self) -> Result<Vec<Vec<[f64; 2]>>> {
+        if self.pending.is_empty() {
+            return Ok(Vec::new());
+        }
+        let batch = std::mem::take(&mut self.pending);
+        self.svc.serve_counters(&batch)
     }
 }
 
@@ -382,6 +707,7 @@ mod tests {
     use super::*;
     use crate::counters::CounterSnapshot;
     use crate::model::signature::ChannelSignature;
+    use crate::util::rng::Rng;
 
     fn run_with(sig: &ChannelSignature, tps: &[usize]) -> ProfiledRun {
         let m = apply::apply(sig, tps);
@@ -398,6 +724,17 @@ mod tests {
         ProfiledRun {
             counters: c,
             threads_per_socket: tps.to_vec(),
+        }
+    }
+
+    fn random_counter_query(rng: &mut Rng) -> CounterQuery {
+        let a = rng.uniform(0.0, 0.5);
+        let l = rng.uniform(0.0, (1.0 - a) * 0.8);
+        let p = rng.uniform(0.0, (1.0 - a - l).max(0.0));
+        CounterQuery {
+            sig: ChannelSignature::new(a, l, p, rng.below(2) as usize),
+            threads: [1 + rng.below(8) as usize, rng.below(9) as usize],
+            cpu_totals: [rng.uniform(0.0, 1e10), rng.uniform(0.0, 1e10)],
         }
     }
 
@@ -443,5 +780,108 @@ mod tests {
         let total: f64 = alloc[0].iter().sum();
         // Same scenario as the python test: channel 0 caps the total at 40.
         assert!((total - 40.0).abs() < 1e-6, "{alloc:?}");
+    }
+
+    #[test]
+    fn serve_counters_is_bit_identical_to_per_query_loop() {
+        let svc = PredictionService::reference();
+        let mut rng = Rng::new(0x5EB5);
+        let mut queries: Vec<CounterQuery> =
+            (0..200).map(|_| random_counter_query(&mut rng)).collect();
+        // Force repeated placements so the cache actually gets exercised.
+        for i in 100..200 {
+            let base = queries[i - 100].clone();
+            queries[i].sig = base.sig;
+            queries[i].threads = base.threads;
+        }
+        let batched = svc.serve_counters(&queries).unwrap();
+        for (q, b) in queries.iter().zip(&batched) {
+            let direct = apply::predict_counters(&q.sig, &q.threads,
+                                                 &q.cpu_totals);
+            for (x, y) in direct.iter().zip(b) {
+                assert_eq!(x[0].to_bits(), y[0].to_bits());
+                assert_eq!(x[1].to_bits(), y[1].to_bits());
+            }
+        }
+        let stats = svc.cache_stats();
+        assert!(stats.hits > 0, "repeats must hit the matrix cache");
+        assert!(stats.misses > 0);
+    }
+
+    #[test]
+    fn serve_perf_is_bit_identical_and_caches_repeats() {
+        let svc = PredictionService::reference();
+        let q = PerfQuery {
+            sig: ChannelSignature::new(0.3, 0.3, 0.2, 1),
+            threads: [6, 2],
+            demand_pt: [2.0e9, 1.0e9],
+            caps: [44e9, 44e9, 30e9, 30e9, 7e9, 7e9, 6.9e9, 6.9e9],
+        };
+        let queries = vec![q.clone(), q.clone(), q];
+        let served = svc.serve_perf(&queries).unwrap();
+        let direct = svc.predict_performance(&queries).unwrap();
+        for (a, b) in served.iter().zip(&direct) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        // Second call over the same stream: all hits.
+        let before = svc.cache_stats();
+        svc.serve_perf(&queries).unwrap();
+        let after = svc.cache_stats();
+        assert_eq!(after.misses, before.misses);
+        assert_eq!(after.hits, before.hits + queries.len() as u64);
+    }
+
+    #[test]
+    fn batcher_flushes_at_engine_size_and_on_demand() {
+        let svc = PredictionService::reference();
+        let mut rng = Rng::new(7);
+        let mut batcher = CounterBatcher::new(&svc);
+        let mut flushed = 0usize;
+        let n = svc.batch_hint() + 3;
+        for _ in 0..n {
+            if let Some(block) =
+                batcher.push(random_counter_query(&mut rng)).unwrap()
+            {
+                flushed += block.len();
+            }
+        }
+        assert_eq!(flushed, svc.batch_hint());
+        assert_eq!(batcher.pending(), 3);
+        flushed += batcher.flush().unwrap().len();
+        assert_eq!(flushed, n);
+        assert_eq!(batcher.pending(), 0);
+        assert!(batcher.flush().unwrap().is_empty());
+    }
+
+    #[test]
+    fn service_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<PredictionService>();
+        assert_send_sync::<CacheStats>();
+    }
+
+    #[test]
+    fn shared_service_serves_from_multiple_threads() {
+        use super::super::pool::parallel_map;
+        let svc = PredictionService::reference();
+        let mut rng = Rng::new(0xC0C0);
+        let queries: Vec<CounterQuery> =
+            (0..64).map(|_| random_counter_query(&mut rng)).collect();
+        let serial = svc.serve_counters(&queries).unwrap();
+        // Fan the same stream out over 8 worker threads sharing &svc.
+        let chunks: Vec<(usize, usize)> = batches(queries.len(), 8);
+        let svc_ref = &svc;
+        let queries_ref = &queries;
+        let parallel: Vec<Vec<Vec<[f64; 2]>>> =
+            parallel_map(chunks, 8, |(start, len)| {
+                svc_ref
+                    .serve_counters(&queries_ref[start..start + len])
+                    .unwrap()
+            });
+        let flat: Vec<Vec<[f64; 2]>> =
+            parallel.into_iter().flatten().collect();
+        assert_eq!(serial, flat);
     }
 }

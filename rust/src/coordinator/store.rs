@@ -1,6 +1,11 @@
 //! Signature store: persisted map from (machine, workload) to fitted
 //! bandwidth signatures, so profiling runs once and predictions are served
 //! from the store afterwards (the Pandia / Smart Arrays integration point).
+//!
+//! Determinism contract: both nesting levels are `BTreeMap`s, so
+//! `machines()` / `workloads()` iterate in sorted order and `to_json()` /
+//! `save()` emit byte-identical output for equal contents regardless of
+//! insertion order — persisted stores and reports diff cleanly.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -154,5 +159,49 @@ mod tests {
         let back = SignatureStore::load(&path).unwrap();
         assert_eq!(back.get("m", "w"), s.get("m", "w"));
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn save_load_roundtrip_is_byte_identical() {
+        // Regression guard for the determinism contract: persisting, then
+        // loading and persisting again, must reproduce the file
+        // byte-for-byte — and insertion order must not matter.
+        let mut a = SignatureStore::new();
+        a.insert("xeon8", "ft", sig());
+        a.insert("zeta-machine", "cg", sig());
+        a.insert("xeon8", "cg", sig());
+        a.insert("alpha-machine", "is", sig());
+
+        let mut b = SignatureStore::new();
+        b.insert("alpha-machine", "is", sig());
+        b.insert("xeon8", "cg", sig());
+        b.insert("xeon8", "ft", sig());
+        b.insert("zeta-machine", "cg", sig());
+        assert_eq!(a.to_json().encode(), b.to_json().encode(),
+                   "encoding must be insertion-order independent");
+
+        let dir = std::env::temp_dir().join("numabw-store-determinism");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p1 = dir.join("first.json");
+        let p2 = dir.join("second.json");
+        a.save(&p1).unwrap();
+        let loaded = SignatureStore::load(&p1).unwrap();
+        loaded.save(&p2).unwrap();
+        let bytes1 = std::fs::read(&p1).unwrap();
+        let bytes2 = std::fs::read(&p2).unwrap();
+        assert_eq!(bytes1, bytes2, "save→load→save must be byte-identical");
+        std::fs::remove_file(p1).ok();
+        std::fs::remove_file(p2).ok();
+    }
+
+    #[test]
+    fn listings_are_sorted() {
+        let mut s = SignatureStore::new();
+        s.insert("zeta", "w2", sig());
+        s.insert("alpha", "w9", sig());
+        s.insert("alpha", "w1", sig());
+        assert_eq!(s.machines(), vec!["alpha", "zeta"]);
+        assert_eq!(s.workloads("alpha"), vec!["w1", "w9"]);
+        assert!(s.workloads("missing").is_empty());
     }
 }

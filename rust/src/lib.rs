@@ -14,7 +14,31 @@
 //!   regenerating every figure and table in the paper.
 //!
 //! Python never runs at request time: after `make artifacts`, the `numabw`
-//! binary is self-contained.
+//! binary is self-contained.  (In the offline build the PJRT client is
+//! stubbed out — see [`runtime`] — and everything serves through the Rust
+//! reference model, the numerical twin of the Pallas kernels.)
+//!
+//! ## Serving architecture (placement advisor)
+//!
+//! On top of the model sits a concurrent serving layer, the growth path
+//! toward the paper's stated endgame of feeding systems like Pandia:
+//!
+//! * [`coordinator::service::PredictionService`] is `Send + Sync` (all
+//!   caches use interior mutability) so a single instance serves many
+//!   threads.  Its front-end (`serve_counters` / `serve_perf` /
+//!   `CounterBatcher`) coalesces query streams into engine-sized batches
+//!   via [`runtime::batches`] and memoizes by placement: the §4 traffic
+//!   matrix depends only on `(signature, threads)`, so repeated placements
+//!   hit memory instead of the HLO engine.  In reference mode the batched
+//!   path is bit-identical to the per-query path (pinned by
+//!   `tests/advisor.rs`).
+//! * [`coordinator::advisor`] enumerates every valid [`ThreadPlacement`]
+//!   for a machine, scores each by predicted achieved bandwidth and
+//!   interconnect headroom through the batched path, and returns a
+//!   deterministic ranked recommendation — exposed as the `advise` CLI
+//!   subcommand and `examples/placement_advisor.rs`.
+//!
+//! [`ThreadPlacement`]: simulator::ThreadPlacement
 //!
 //! Quick tour (see `examples/quickstart.rs`):
 //!
@@ -37,6 +61,11 @@
 //! let m = sig.read.apply(&[14, 4]);
 //! println!("read traffic matrix: {m:?}");
 //! ```
+
+// Index-based loops over parallel per-socket / per-resource arrays are the
+// house style here (they mirror the paper's subscript algebra); the lint's
+// iterator rewrites obscure which index couples which arrays.
+#![allow(clippy::needless_range_loop)]
 
 pub mod counters;
 pub mod topology;

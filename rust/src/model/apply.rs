@@ -50,13 +50,15 @@ pub fn apply(sig: &ChannelSignature, threads_per_socket: &[usize])
         .collect()
 }
 
-/// Predicted per-bank `(local, remote)` byte counters for a placement,
-/// given each socket's total issued traffic (§6.2.2 evaluation quantity).
-pub fn predict_counters(sig: &ChannelSignature, threads_per_socket: &[usize],
-                        cpu_totals: &[f64]) -> Vec<[f64; 2]> {
-    let s = threads_per_socket.len();
+/// Multiply an already-built §4 traffic matrix into per-bank
+/// `(local, remote)` byte counters.  Split out of [`predict_counters`] so
+/// the serving layer's placement-keyed matrix cache reuses the *same*
+/// floating-point operations — the batched+cached path is bit-identical to
+/// the per-query path by construction.
+pub fn counters_from_matrix(m: &[Vec<f64>], cpu_totals: &[f64])
+    -> Vec<[f64; 2]> {
+    let s = m.len();
     assert_eq!(cpu_totals.len(), s);
-    let m = apply(sig, threads_per_socket);
     (0..s)
         .map(|bank| {
             let mut local = 0.0;
@@ -72,6 +74,15 @@ pub fn predict_counters(sig: &ChannelSignature, threads_per_socket: &[usize],
             [local, remote]
         })
         .collect()
+}
+
+/// Predicted per-bank `(local, remote)` byte counters for a placement,
+/// given each socket's total issued traffic (§6.2.2 evaluation quantity).
+pub fn predict_counters(sig: &ChannelSignature, threads_per_socket: &[usize],
+                        cpu_totals: &[f64]) -> Vec<[f64; 2]> {
+    assert_eq!(cpu_totals.len(), threads_per_socket.len());
+    let m = apply(sig, threads_per_socket);
+    counters_from_matrix(&m, cpu_totals)
 }
 
 #[cfg(test)]
@@ -170,5 +181,18 @@ mod tests {
     #[should_panic]
     fn static_socket_must_exist() {
         apply(&ChannelSignature::new(0.5, 0.0, 0.0, 3), &[2, 2]);
+    }
+
+    #[test]
+    fn counters_from_matrix_is_bit_identical_to_predict_counters() {
+        let sig = worked_example();
+        let tps = [5usize, 3usize];
+        let totals = [2.75e9, 1.25e9];
+        let direct = predict_counters(&sig, &tps, &totals);
+        let via_matrix = counters_from_matrix(&apply(&sig, &tps), &totals);
+        for (a, b) in direct.iter().zip(&via_matrix) {
+            assert_eq!(a[0].to_bits(), b[0].to_bits());
+            assert_eq!(a[1].to_bits(), b[1].to_bits());
+        }
     }
 }

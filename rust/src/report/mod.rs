@@ -16,7 +16,7 @@ pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
         let body = cells
             .iter()
             .zip(widths)
-            .map(|(c, w)| format!("{c:<w$}"))
+            .map(|(c, &w)| format!("{c:<w$}"))
             .collect::<Vec<_>>()
             .join(" | ");
         format!("| {body} |\n")

@@ -1,21 +1,25 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them on the CPU PJRT client.
-//!
-//! This is the only place the `xla` crate is touched.  Python never runs
-//! here — the artifacts are self-contained HLO text (the interchange
-//! format: jax ≥ 0.5 serialized protos use 64-bit instruction ids that
-//! xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//! Runtime layer: AOT artifact manifest, host tensors, and batch plumbing
+//! for the compiled HLO pipelines produced by `python/compile/aot.py`.
 //!
 //! Design:
 //! * [`Artifacts`] parses `artifacts/manifest.json` and validates shapes.
-//! * [`Engine`] owns one PJRT client plus a lazily-compiled executable per
-//!   pipeline; compiled executables are cached for the process lifetime.
+//! * [`Engine`] is the execution backend handle.  The PJRT path (the `xla`
+//!   crate) is **not in the offline vendor set**, so this build ships a
+//!   stub engine: [`Engine::cpu`] returns an error and every caller falls
+//!   back to the Rust reference model ([`crate::coordinator::service`]'s
+//!   `PredictionService::reference`), which is the numerical twin of the
+//!   Pallas kernels (pinned by `python/tests/` against `ref.py`).  The
+//!   `tests/hlo_parity.rs` suite self-skips when no engine is available.
+//!   Re-enabling PJRT is a matter of vendoring `xla` and restoring the
+//!   compile/execute body here — the manifest, tensor, and batch layers
+//!   below are exactly what it needs.
 //! * All pipelines are compiled for a fixed batch `B` (64); [`Batch`]
-//!   handles padding partial batches and slicing results back.
+//!   handles padding partial batches and slicing results back, and
+//!   [`batches`] is the canonical way to split a query stream into
+//!   engine-sized chunks (the serving layer coalesces with it too).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -165,36 +169,29 @@ impl Tensor {
         let stride: usize = self.shape[1..].iter().product();
         &self.data[i * stride..(i + 1) * stride]
     }
-
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
-    }
-
-    fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
-        let shape = lit.array_shape()?;
-        let dims: Vec<usize> =
-            shape.dims().iter().map(|&d| d as usize).collect();
-        Ok(Tensor::new(lit.to_vec::<f32>()?, dims))
-    }
 }
 
-/// The runtime engine: PJRT client + compiled-executable cache.
+/// Execution backend handle.  In this offline build the PJRT client cannot
+/// be constructed ([`Engine::cpu`] errors), so the engine is a validated
+/// manifest holder whose `execute` is unreachable; `PredictionService`
+/// treats a failed engine construction as "serve from the Rust reference
+/// model".
 pub struct Engine {
     pub artifacts: Artifacts,
-    client: xla::PjRtClient,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
 }
 
 impl Engine {
-    /// Create a CPU engine over an artifacts directory.
+    /// Create a CPU engine over an artifacts directory.  Always fails in
+    /// this build: the `xla` crate (PJRT bindings) is not in the offline
+    /// vendor set.
     pub fn cpu(artifacts: Artifacts) -> Result<Engine> {
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Engine {
-            artifacts,
-            client,
-            cache: Mutex::new(HashMap::new()),
-        })
+        bail!(
+            "PJRT backend not compiled into this build (the `xla` crate is \
+             not in the offline vendor set); artifacts at {} are loadable \
+             but cannot be executed — use the Rust reference model \
+             (PredictionService::reference)",
+            artifacts.dir.display()
+        )
     }
 
     /// Convenience: locate artifacts and build the engine.
@@ -206,50 +203,22 @@ impl Engine {
         self.artifacts.batch
     }
 
-    /// Compile (or fetch from cache) a pipeline executable.
-    fn executable(&self, name: &str)
-        -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(name) {
-            return Ok(exe.clone());
-        }
+    /// Force-compile every pipeline (startup warmup).  Unreachable in the
+    /// stub build — kept so callers compile against the full API.
+    pub fn warmup(&self) -> Result<()> {
+        bail!("PJRT backend not compiled into this build")
+    }
+
+    /// Execute a pipeline on full-batch tensors.  Inputs are validated
+    /// against the manifest's argument shapes, then the stub reports that
+    /// no PJRT client exists.
+    pub fn execute(&self, name: &str, inputs: &[Tensor])
+        -> Result<Vec<Tensor>> {
         let meta = self
             .artifacts
             .pipelines
             .get(name)
             .ok_or_else(|| anyhow!("unknown pipeline {name}"))?;
-        let path = self.artifacts.dir.join(&meta.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
-        )
-        .with_context(|| format!("parsing {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = std::sync::Arc::new(
-            self.client
-                .compile(&comp)
-                .with_context(|| format!("compiling {name}"))?,
-        );
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), exe.clone());
-        Ok(exe)
-    }
-
-    /// Force-compile every pipeline (startup warmup; keeps compile cost off
-    /// the first prediction).
-    pub fn warmup(&self) -> Result<()> {
-        for p in PIPELINES {
-            self.executable(p)?;
-        }
-        Ok(())
-    }
-
-    /// Execute a pipeline on full-batch tensors.  Inputs must match the
-    /// manifest's argument shapes exactly; outputs are the tuple members.
-    pub fn execute(&self, name: &str, inputs: &[Tensor])
-        -> Result<Vec<Tensor>> {
-        let meta = &self.artifacts.pipelines[name];
         if inputs.len() != meta.arg_shapes.len() {
             bail!(
                 "{name}: expected {} inputs, got {}",
@@ -267,29 +236,8 @@ impl Engine {
                 );
             }
         }
-        let exe = self.executable(name)?;
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(Tensor::to_literal)
-            .collect::<Result<_>>()?;
-        let result = exe.execute::<xla::Literal>(&literals)?;
-        // Lowered with return_tuple=True: single tuple output.
-        let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
-        let out: Vec<Tensor> = tuple
-            .iter()
-            .map(Tensor::from_literal)
-            .collect::<Result<_>>()?;
-        for (i, (t, want)) in out.iter().zip(&meta.result_shapes).enumerate()
-        {
-            if &t.shape != want {
-                bail!(
-                    "{name}: result {i} has shape {:?}, manifest says {:?}",
-                    t.shape,
-                    want
-                );
-            }
-        }
-        Ok(out)
+        bail!("PJRT backend not compiled into this build: cannot execute \
+               pipeline {name}")
     }
 }
 
@@ -385,5 +333,12 @@ mod tests {
         assert_eq!(batches(130, 64), vec![(0, 64), (64, 64), (128, 2)]);
         assert_eq!(batches(64, 64), vec![(0, 64)]);
         assert_eq!(batches(1, 64), vec![(0, 1)]);
+    }
+
+    #[test]
+    fn stub_engine_reports_missing_backend() {
+        // Without an artifacts directory the engine cannot even locate a
+        // manifest; with one, cpu() still refuses (no PJRT in this build).
+        assert!(Engine::from_env().is_err());
     }
 }

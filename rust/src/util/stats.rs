@@ -13,6 +13,19 @@ pub struct Summary {
     pub max: f64,
 }
 
+/// Drop NaNs (either sign — the hardware's own 0.0/0.0 is a *negative*
+/// NaN) and sort what remains.  Order statistics are computed over the
+/// finite part of a sample: a stray NaN upstream must neither panic the
+/// sort (the old `partial_cmp().unwrap()` did) nor displace or poison
+/// the finite quantiles.  Moment statistics (mean/std) intentionally
+/// keep IEEE propagation so bad data stays visible.
+fn finite_sorted(xs: &[f64]) -> Vec<f64> {
+    let mut sorted: Vec<f64> =
+        xs.iter().copied().filter(|v| !v.is_nan()).collect();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted
+}
+
 impl Summary {
     pub fn of(xs: &[f64]) -> Summary {
         assert!(!xs.is_empty(), "summary of empty sample");
@@ -20,15 +33,23 @@ impl Summary {
         let mean = xs.iter().sum::<f64>() / n as f64;
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
             / n as f64;
-        let mut sorted = xs.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let sorted = finite_sorted(xs);
+        let (median, min, max) = if sorted.is_empty() {
+            (f64::NAN, f64::NAN, f64::NAN)
+        } else {
+            (
+                percentile_sorted(&sorted, 50.0),
+                sorted[0],
+                sorted[sorted.len() - 1],
+            )
+        };
         Summary {
             n,
             mean,
-            median: percentile_sorted(&sorted, 50.0),
+            median,
             std: var.sqrt(),
-            min: sorted[0],
-            max: sorted[n - 1],
+            min,
+            max,
         }
     }
 }
@@ -47,10 +68,12 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
     sorted[lo] + (sorted[hi] - sorted[lo]) * frac
 }
 
-/// Percentile of an unsorted sample.
+/// Percentile of an unsorted sample (over its finite part; NaN if none).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let sorted = finite_sorted(xs);
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
     percentile_sorted(&sorted, p)
 }
 
@@ -63,10 +86,11 @@ pub struct Cdf {
 }
 
 impl Cdf {
+    /// Build the curve over the finite part of the sample (NaNs dropped).
     pub fn of(xs: &[f64]) -> Cdf {
-        let mut sorted = xs.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        Cdf { xs: sorted }
+        Cdf {
+            xs: finite_sorted(xs),
+        }
     }
 
     /// Fraction of samples `<= x`.
@@ -176,5 +200,54 @@ mod tests {
     #[should_panic]
     fn summary_rejects_empty() {
         Summary::of(&[]);
+    }
+
+    #[test]
+    fn summary_survives_nan() {
+        // Regression: sort_by(partial_cmp().unwrap()) used to panic on any
+        // NaN in the sample.  Order statistics now cover the finite part
+        // (for NaNs of either sign — the hardware's own 0.0/0.0 is a
+        // *negative* NaN); mean keeps IEEE propagation as the bad-data
+        // signal.
+        for nan in [f64::NAN, -f64::NAN] {
+            let s = Summary::of(&[1.0, nan, 2.0]);
+            assert_eq!(s.n, 3);
+            assert_eq!(s.min, 1.0);
+            assert_eq!(s.median, 1.5);
+            assert_eq!(s.max, 2.0);
+            assert!(s.mean.is_nan());
+        }
+    }
+
+    #[test]
+    fn summary_of_all_nan_is_nan_not_panic() {
+        let s = Summary::of(&[f64::NAN, -f64::NAN]);
+        assert_eq!(s.n, 2);
+        assert!(s.median.is_nan());
+        assert!(s.min.is_nan());
+        assert!(s.max.is_nan());
+    }
+
+    #[test]
+    fn summary_survives_single_element_adjacent_to_empty() {
+        let s = Summary::of(&[4.5]);
+        assert_eq!(s.n, 1);
+        assert_eq!(s.median, 4.5);
+        assert_eq!(s.min, 4.5);
+        assert_eq!(s.max, 4.5);
+        assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn percentile_and_cdf_survive_nan() {
+        // Must not panic; quantiles cover the finite part only, so a NaN
+        // adjacent to the interpolation window cannot leak into a result.
+        assert_eq!(percentile(&[f64::NAN, 1.0, 3.0], 100.0), 3.0);
+        assert_eq!(percentile(&[1.0, f64::NAN], 50.0), 1.0);
+        assert_eq!(percentile(&[-f64::NAN, 1.0, 3.0], 50.0), 2.0);
+        assert!(percentile(&[f64::NAN], 50.0).is_nan());
+        let c = Cdf::of(&[-f64::NAN, 0.0, 2.0]);
+        assert_eq!(c.at(1.0), 0.5);
+        assert_eq!(c.median(), 1.0);
     }
 }

@@ -1,0 +1,197 @@
+//! Integration tests for the placement-advisor serving layer:
+//!
+//! * the ranked advisor output matches brute-force per-query scoring on
+//!   both paper machines (bit-identical in reference-backend mode);
+//! * the batched+cached serving paths are bit-identical to the unbatched
+//!   backend calls in reference mode;
+//! * the service is shareable (`Send + Sync`) and behaves identically when
+//!   fanned out over the worker pool;
+//! * the `advise` CLI subcommand runs end to end.
+
+use numabw::coordinator::advisor::{
+    advise, advise_brute_force, enumerate_placements,
+};
+use numabw::coordinator::{
+    profile, CounterQuery, FitRequest, PerfQuery, PredictionService,
+};
+use numabw::model::signature::BandwidthSignature;
+use numabw::prelude::*;
+use numabw::util::rng::Rng;
+use numabw::workloads::suite;
+
+fn fitted(svc: &PredictionService, machine: &MachineTopology,
+          workload_name: &str) -> (WorkloadSpec, BandwidthSignature) {
+    let w = suite::by_name(workload_name).unwrap();
+    let sim = Simulator::new(machine.clone(), SimConfig::default());
+    let pair = profile(&sim, &w);
+    let sig = svc
+        .fit(&[FitRequest {
+            sym: pair.sym,
+            asym: pair.asym,
+        }])
+        .unwrap()
+        .pop()
+        .unwrap();
+    (w, sig)
+}
+
+fn random_signature(rng: &mut Rng) -> ChannelSignature {
+    let a = rng.uniform(0.0, 0.5);
+    let l = rng.uniform(0.0, (1.0 - a) * 0.8);
+    let p = rng.uniform(0.0, (1.0 - a - l).max(0.0));
+    ChannelSignature::new(a, l, p, rng.below(2) as usize)
+}
+
+#[test]
+fn advisor_ranking_matches_brute_force_on_both_paper_machines() {
+    let svc = PredictionService::reference();
+    for machine in MachineTopology::paper_machines() {
+        for name in ["cg", "npo"] {
+            let (w, sig) = fitted(&svc, &machine, name);
+            let total = machine.cores_per_socket;
+            let served = advise(&svc, &machine, &w, &sig, total).unwrap();
+            let brute =
+                advise_brute_force(&svc, &machine, &w, &sig, total)
+                    .unwrap();
+            assert_eq!(served.ranked.len(), brute.ranked.len());
+            for (a, b) in served.ranked.iter().zip(&brute.ranked) {
+                assert_eq!(a.placement, b.placement,
+                           "{}/{name}: ranking order diverged",
+                           machine.name);
+                assert_eq!(a.predicted_bw.to_bits(),
+                           b.predicted_bw.to_bits());
+                assert_eq!(a.qpi_headroom.to_bits(),
+                           b.qpi_headroom.to_bits());
+            }
+            // The headline acceptance check: same top placement.
+            assert_eq!(served.best().placement, brute.best().placement,
+                       "{}/{name}", machine.name);
+        }
+    }
+}
+
+#[test]
+fn advisor_reuses_cache_across_sweeps() {
+    let svc = PredictionService::reference();
+    let machine = MachineTopology::xeon_e5_2699_v3();
+    let (w, sig) = fitted(&svc, &machine, "cg");
+    let first = advise(&svc, &machine, &w, &sig, 18).unwrap();
+    let after_first = svc.cache_stats();
+    let second = advise(&svc, &machine, &w, &sig, 18).unwrap();
+    let after_second = svc.cache_stats();
+    // Second sweep: zero new misses, one hit per candidate placement.
+    assert_eq!(after_second.misses, after_first.misses);
+    assert_eq!(after_second.hits,
+               after_first.hits + first.ranked.len() as u64);
+    // And identical output.
+    for (a, b) in first.ranked.iter().zip(&second.ranked) {
+        assert_eq!(a.placement, b.placement);
+        assert_eq!(a.predicted_bw.to_bits(), b.predicted_bw.to_bits());
+    }
+}
+
+#[test]
+fn batched_counter_path_bit_identical_to_unbatched() {
+    let svc = PredictionService::reference();
+    let mut rng = Rng::new(0xAD01);
+    let mut queries = Vec::new();
+    for _ in 0..300 {
+        queries.push(CounterQuery {
+            sig: random_signature(&mut rng),
+            threads: [1 + rng.below(17) as usize, rng.below(18) as usize],
+            cpu_totals: [rng.uniform(0.0, 1e10), rng.uniform(0.0, 1e10)],
+        });
+    }
+    // Inject exact placement repeats with fresh totals: these must be
+    // served from the matrix cache yet stay bit-identical.
+    for i in 0..100 {
+        let mut q = queries[i].clone();
+        q.cpu_totals = [rng.uniform(0.0, 1e10), rng.uniform(0.0, 1e10)];
+        queries.push(q);
+    }
+    let served = svc.serve_counters(&queries).unwrap();
+    let unbatched = svc.predict_counters(&queries).unwrap();
+    assert_eq!(served.len(), unbatched.len());
+    for (i, (a, b)) in served.iter().zip(&unbatched).enumerate() {
+        for bank in 0..2 {
+            for k in 0..2 {
+                assert_eq!(a[bank][k].to_bits(), b[bank][k].to_bits(),
+                           "query {i} bank {bank} kind {k}");
+            }
+        }
+    }
+    assert!(svc.cache_stats().hits >= 100);
+}
+
+#[test]
+fn batched_perf_path_bit_identical_to_unbatched() {
+    let svc = PredictionService::reference();
+    let mut rng = Rng::new(0xAD02);
+    let mut queries = Vec::new();
+    for _ in 0..200 {
+        let mut caps = [0.0f64; 8];
+        for c in caps.iter_mut() {
+            *c = rng.uniform(5.0, 60.0);
+        }
+        queries.push(PerfQuery {
+            sig: random_signature(&mut rng),
+            threads: [1 + rng.below(9) as usize, 1 + rng.below(9) as usize],
+            demand_pt: [rng.uniform(0.5, 8.0), rng.uniform(0.0, 4.0)],
+            caps,
+        });
+    }
+    // Duplicate a block verbatim: pure memo hits on the second half.
+    for i in 0..80 {
+        queries.push(queries[i].clone());
+    }
+    let served = svc.serve_perf(&queries).unwrap();
+    let unbatched = svc.predict_performance(&queries).unwrap();
+    for (i, (a, b)) in served.iter().zip(&unbatched).enumerate() {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "query {i}");
+        }
+    }
+    assert!(svc.cache_stats().hits >= 80);
+}
+
+#[test]
+fn shared_service_is_consistent_under_concurrency() {
+    use numabw::coordinator::pool::parallel_map;
+    let svc = PredictionService::reference();
+    let machine = MachineTopology::xeon_e5_2630_v3();
+    let (w, sig) = fitted(&svc, &machine, "is");
+    // 8 concurrent advisors sharing one service instance (the serving
+    // scenario); every one must produce the identical ranking.
+    let svc_ref = &svc;
+    let advices = parallel_map((0..8).collect::<Vec<usize>>(), 8, |_| {
+        advise(svc_ref, &machine, &w, &sig, 8).unwrap()
+    });
+    let baseline =
+        advise_brute_force(&svc, &machine, &w, &sig, 8).unwrap();
+    for advice in &advices {
+        for (a, b) in advice.ranked.iter().zip(&baseline.ranked) {
+            assert_eq!(a.placement, b.placement);
+            assert_eq!(a.predicted_bw.to_bits(), b.predicted_bw.to_bits());
+        }
+    }
+}
+
+#[test]
+fn enumerate_placements_covers_the_evaluation_sweep() {
+    let m = MachineTopology::xeon_e5_2699_v3();
+    let ps = enumerate_placements(&m, 18);
+    assert_eq!(ps, ThreadPlacement::all_splits(&m, 18));
+    assert_eq!(ps.len(), 19);
+}
+
+#[test]
+fn advise_cli_end_to_end() {
+    numabw::cli::main_with(
+        "advise --workload cg --machine xeon18 --top 4"
+            .split_whitespace()
+            .map(str::to_string)
+            .collect(),
+    )
+    .unwrap();
+}

@@ -1,0 +1,194 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build has no crates.io access (DESIGN: every substrate is vendored
+//! in-repo — see `numabw::util` for the PRNG/JSON/args/stats equivalents),
+//! so this crate implements exactly the surface `numabw` uses:
+//!
+//! * [`Error`] — a context chain of messages.  Like the real `anyhow`,
+//!   `Error` deliberately does **not** implement `std::error::Error`, so
+//!   the blanket `From<E: std::error::Error>` conversion below stays
+//!   coherent.
+//! * [`Result<T>`] with the `Error` default.
+//! * [`anyhow!`] / [`bail!`] macros.
+//! * The [`Context`] extension trait (`.context(..)` / `.with_context(..)`).
+//!
+//! Display follows anyhow's convention: `{}` prints the outermost message,
+//! `{:#}` prints the whole chain joined with `": "`.
+
+use std::fmt;
+
+/// An error: a chain of human-readable messages, outermost context first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a single printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages in the chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Any std error converts, capturing its source chain.  (`Error` itself is
+/// not a `std::error::Error`, so this does not overlap the reflexive
+/// `From<Error> for Error`.)
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or any printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Attach context to a `Result`'s error.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T, Error>;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error =
+            Result::<(), _>::Err(io_err()).context("reading x").unwrap_err();
+        assert_eq!(format!("{e}"), "reading x");
+        assert_eq!(format!("{e:#}"), "reading x: missing");
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let name = "cg";
+        let e = anyhow!("unknown workload {name}");
+        assert_eq!(format!("{e}"), "unknown workload cg");
+        let e2 = anyhow!("{} + {}", 1, 2);
+        assert_eq!(format!("{e2}"), "1 + 2");
+        let e3 = anyhow!(String::from("plain"));
+        assert_eq!(format!("{e3}"), "plain");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f() -> Result<()> {
+            bail!("nope: {}", 7);
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "nope: 7");
+    }
+
+    #[test]
+    fn with_context_lazily_formats() {
+        let r: Result<(), _> = std::result::Result::Err(io_err());
+        let e = r.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "step 3: missing");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/here/xyz")?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}
