@@ -66,8 +66,8 @@ fn main() -> anyhow::Result<()> {
     print!("{}", report::table(
         &["threads", "predicted bw", "satisfied", "qpi headroom"], &rows));
     println!("\n{} sweeps × {} placements served; cache: {} hits / {} \
-              misses", sweeps, advice.ranked.len(), stats.hits,
-             stats.misses);
+              misses", sweeps, advice.ranked.len(), stats.hits(),
+             stats.misses());
 
     // Validate: brute-force simulate every candidate (what the library
     // could never afford in production).

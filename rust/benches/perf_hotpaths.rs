@@ -173,6 +173,22 @@ fn main() {
         ctr_loop_s / ctr_served_s
     );
 
+    // Per-cache serving counters over the repeated 1024-query streams
+    // (19 unique placements per 1024 queries -> the shared LRU must hit
+    // >= 90% of lookups; the acceptance-criteria number).
+    let stats = serving.cache_stats();
+    print!("{}", stats.table());
+    println!(
+        "  -> shared-LRU hit rates on the repeated 1024-query streams: \
+         perf {:.1}%, matrix {:.1}% (acceptance target: >= 90%)\n",
+        100.0 * stats.perf.hit_rate(),
+        100.0 * stats.matrix.hit_rate()
+    );
+    assert!(
+        stats.perf.hit_rate() >= 0.90 && stats.matrix.hit_rate() >= 0.90,
+        "repeated-stream serving must run >= 90% out of the shared LRU"
+    );
+
     match numabw::runtime::Engine::from_env() {
         Ok(engine) => {
             engine.warmup().unwrap();

@@ -6,7 +6,10 @@
 //!   profile    — run the two §5.1 profiling runs for one workload
 //!   fit        — profile + fit, print the bandwidth signature (§5)
 //!   predict    — apply a fitted signature to a placement (§4)
-//!   advise     — rank every thread placement (batched+cached serving)
+//!   advise     — rank every thread placement (batched+cached serving;
+//!                store-backed fit-once serving via --store)
+//!   serve      — long-lived JSONL daemon over stdin/stdout: concurrent
+//!                coalescing front-end + store-backed model registry
 //!   evaluate   — full measured-vs-predicted sweep (§6.2.2, Figs 16–18)
 //!   quickstart — tiny end-to-end demo
 
@@ -18,11 +21,13 @@ use crate::coordinator::{
 };
 use crate::eval;
 use crate::model::misfit;
+use crate::model::signature::BandwidthSignature;
 use crate::report;
+use crate::server::{self, ModelRegistry, ServeOptions};
 use crate::simulator::{SimConfig, Simulator, ThreadPlacement};
 use crate::topology::MachineTopology;
 use crate::util::args::Args;
-use crate::workloads::{suite, synthetic, WorkloadSpec};
+use crate::workloads::{self, suite, WorkloadSpec};
 
 pub fn main_with(args: Vec<String>) -> Result<()> {
     let args = Args::parse(args);
@@ -33,6 +38,7 @@ pub fn main_with(args: Vec<String>) -> Result<()> {
         Some("fit") => cmd_fit(&args),
         Some("predict") => cmd_predict(&args),
         Some("advise") => cmd_advise(&args),
+        Some("serve") => cmd_serve(&args),
         Some("evaluate") => cmd_evaluate(&args),
         Some("quickstart") => cmd_quickstart(),
         Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
@@ -58,9 +64,17 @@ USAGE: numabw <subcommand> [flags]
                                     predict a placement's traffic matrix
                                     (from a stored signature if --store)
   advise    --workload W [--machine M] [--threads N] [--top K] [--hlo]
+            [--store F] [--seed S]
                                     rank every valid thread placement by
                                     predicted bandwidth (Pandia-style;
-                                    batched+cached serving path)
+                                    batched+cached serving path); with
+                                    --store, fit once into F and serve
+                                    forever (seed-guarded)
+  serve     [--store F] [--seed S] [--batch N] [--window-ms W] [--hlo]
+                                    line-delimited JSON daemon on
+                                    stdin/stdout: ops counters|perf|
+                                    advise|stats through the concurrent
+                                    coalescing front-end + model registry
   evaluate  [--machine M] [--hlo] [--seed S]    full §6.2.2 sweep
   quickstart                        tiny end-to-end demo
 
@@ -77,11 +91,14 @@ fn workload_flag(args: &Args) -> Result<WorkloadSpec> {
     let name = args
         .get("workload")
         .ok_or_else(|| anyhow!("--workload required"))?;
-    suite::by_name(name)
-        .or_else(|| {
-            synthetic::all(0).into_iter().find(|w| w.name == name)
-        })
+    workloads::find(name)
         .ok_or_else(|| anyhow!("unknown workload {name:?} (see `numabw workloads`)"))
+}
+
+fn seed_flag(args: &Args) -> u64 {
+    args.get("seed")
+        .map(|s| s.parse().expect("--seed: u64"))
+        .unwrap_or(SimConfig::default().seed)
 }
 
 fn service_flag(args: &Args) -> PredictionService {
@@ -93,12 +110,8 @@ fn service_flag(args: &Args) -> PredictionService {
 }
 
 fn sim_flag(args: &Args, machine: MachineTopology) -> Simulator {
-    let seed = args.get("seed").map(|s| s.parse().expect("--seed: u64"));
-    let mut cfg = SimConfig::default();
-    if let Some(s) = seed {
-        cfg = cfg.with_seed(s);
-    }
-    Simulator::new(machine, cfg)
+    Simulator::new(machine,
+                   SimConfig::default().with_seed(seed_flag(args)))
 }
 
 fn cmd_machines() -> Result<()> {
@@ -195,7 +208,29 @@ fn cmd_fit(args: &Args) -> Result<()> {
     if let Some(path) = args.get("save") {
         let path = std::path::Path::new(path);
         let mut store = SignatureStore::load(path).unwrap_or_default();
+        let seed = seed_flag(args);
+        // Stamp the fit seed so store-backed serving can refuse to answer
+        // for a differently-seeded world.  The seed metadata certifies
+        // ALL of the machine's stored signatures, so any signature not
+        // fitted under this seed — a different recorded seed, or a
+        // legacy seed-less store — must be dropped before stamping, or
+        // the guard would pass while serving stale models.
+        let recorded = store.seed(&sim.machine.name);
+        if recorded != Some(seed) {
+            let dropped = store.remove_machine(&sim.machine.name);
+            if dropped > 0 {
+                let old = recorded
+                    .map(|r| r.to_string())
+                    .unwrap_or_else(|| "an unrecorded seed".to_string());
+                println!(
+                    "seed for {} is now {seed}; dropped {dropped} \
+                     signature(s) fitted under {old}",
+                    sim.machine.name
+                );
+            }
+        }
         store.insert(&sim.machine.name, &w.name, *sig);
+        store.set_seed(&sim.machine.name, seed);
         store.save(path)?;
         println!("saved to {} ({} signatures)", path.display(), store.len());
     }
@@ -258,6 +293,46 @@ fn cmd_predict(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Resolve the advise signature: fit-once-serve-forever through the model
+/// registry when `--store` is given (seed-guarded), otherwise a fresh
+/// profile + fit.
+fn advise_signature(args: &Args, svc: &PredictionService, sim: &Simulator,
+                    w: &WorkloadSpec) -> Result<BandwidthSignature> {
+    let fit_fresh = || -> Result<BandwidthSignature> {
+        let pair = profile(sim, w);
+        Ok(svc
+            .fit(&[FitRequest {
+                sym: pair.sym,
+                asym: pair.asym,
+            }])?
+            .pop()
+            .expect("one signature per fit request"))
+    };
+    match args.get("store") {
+        None => fit_fresh(),
+        Some(path) => {
+            let registry = ModelRegistry::open(
+                std::path::Path::new(path),
+                server::DEFAULT_REGISTRY_CAP,
+            )?;
+            let known = registry.len();
+            let sig = registry.get_or_fit(&sim.machine.name, &w.name,
+                                          seed_flag(args), fit_fresh)?;
+            println!(
+                "signature for {}/{} served from store {path} ({})",
+                sim.machine.name,
+                w.name,
+                if registry.len() > known {
+                    "fitted now; future calls reuse it"
+                } else {
+                    "already fitted — no profiling run"
+                }
+            );
+            Ok(*sig)
+        }
+    }
+}
+
 fn cmd_advise(args: &Args) -> Result<()> {
     let machine = machine_flag(args)?;
     let w = workload_flag(args)?;
@@ -272,7 +347,8 @@ fn cmd_advise(args: &Args) -> Result<()> {
         sim.machine.name,
         if svc.is_hlo() { "HLO/PJRT" } else { "rust-reference" }
     );
-    let advice = advisor::advise_workload(&svc, &sim, &w, Some(total))?;
+    let sig = advise_signature(args, &svc, &sim, &w)?;
+    let advice = advisor::advise(&svc, &sim.machine, &w, &sig, total)?;
     let rows: Vec<Vec<String>> = advice
         .ranked
         .iter()
@@ -301,9 +377,28 @@ fn cmd_advise(args: &Args) -> Result<()> {
         report::fmt_bw(best.predicted_bw),
         advice.ranked.len()
     );
-    let stats = svc.cache_stats();
-    println!("serving cache: {} hits / {} misses", stats.hits,
-             stats.misses);
+    println!("\nserving caches:");
+    print!("{}", svc.cache_stats().table());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let svc = service_flag(args);
+    let opts = ServeOptions {
+        store: args.get("store").map(std::path::PathBuf::from),
+        seed: seed_flag(args),
+        batch_size: args.get("batch").map(|b| {
+            b.parse().expect("--batch: usize")
+        }),
+        window: std::time::Duration::from_micros(
+            (args.get_f64("window-ms", 2.0) * 1000.0) as u64,
+        ),
+    };
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let summary =
+        server::serve_lines(svc, opts, stdin.lock(), &mut stdout.lock())?;
+    eprintln!("{summary}");
     Ok(())
 }
 
@@ -422,6 +517,78 @@ mod tests {
             "advise --workload cg --machine xeon8 --threads 99"
         ))
         .is_err());
+    }
+
+    #[test]
+    fn advise_store_fits_once_and_guards_seed() {
+        let dir = std::env::temp_dir().join("numabw-cli-advise-store");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sigs.json");
+        std::fs::remove_file(&path).ok();
+        let path_s = path.to_str().unwrap();
+        // First call fits and persists; second serves from the store.
+        main_with(toks(&format!(
+            "advise --workload cg --machine xeon8 --top 2 --store {path_s}"
+        )))
+        .unwrap();
+        assert!(path.exists());
+        let before = std::fs::read(&path).unwrap();
+        main_with(toks(&format!(
+            "advise --workload cg --machine xeon8 --top 2 --store {path_s}"
+        )))
+        .unwrap();
+        assert_eq!(before, std::fs::read(&path).unwrap(),
+                   "serving from the store must not rewrite it");
+        // A different seed is a different world: clean error.
+        let err = main_with(toks(&format!(
+            "advise --workload cg --machine xeon8 --top 2 \
+             --store {path_s} --seed 99"
+        )))
+        .unwrap_err();
+        assert!(format!("{err}").contains("seed"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn fit_reseed_drops_stale_signatures() {
+        let dir = std::env::temp_dir().join("numabw-cli-fit-reseed");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sigs.json");
+        std::fs::remove_file(&path).ok();
+        let path_s = path.to_str().unwrap();
+        main_with(toks(&format!(
+            "fit --workload cg --machine xeon8 --save {path_s}"
+        )))
+        .unwrap();
+        // Re-fitting the machine under a new seed must drop the
+        // old-world signatures, or the seed guard would pass while
+        // serving stale models.
+        main_with(toks(&format!(
+            "fit --workload ft --machine xeon8 --save {path_s} --seed 99"
+        )))
+        .unwrap();
+        let store = SignatureStore::load(&path).unwrap();
+        assert!(store.get("xeon8", "cg").is_none(),
+                "old-seed signature must be dropped");
+        assert!(store.get("xeon8", "ft").is_some());
+        assert_eq!(store.seed("xeon8"), Some(99));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn serve_cli_runs_a_transcript() {
+        // The CLI wires stdin/stdout; drive the underlying loop directly.
+        let input = "{\"id\":1,\"op\":\"stats\"}\n";
+        let mut out = Vec::new();
+        crate::server::serve_lines(
+            PredictionService::reference(),
+            crate::server::ServeOptions::default(),
+            input.as_bytes(),
+            &mut out,
+        )
+        .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("\"ok\":true"), "{text}");
     }
 
     #[test]

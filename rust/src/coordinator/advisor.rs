@@ -29,7 +29,7 @@ use crate::workloads::WorkloadSpec;
 
 use super::profiler::profile;
 use super::service::{
-    flow_resources, FitRequest, PerfQuery, PredictionService,
+    flow_resources, FitRequest, PerfQuery, PerfServer, PredictionService,
 };
 
 /// One scored placement.
@@ -199,8 +199,11 @@ fn rank(scores: &mut [PlacementScore]) {
 }
 
 /// Rank every valid placement of `total` threads through the batched,
-/// cached serving path.
-pub fn advise(svc: &PredictionService, machine: &MachineTopology,
+/// cached serving path.  Generic over [`PerfServer`], so scoring runs
+/// identically against an in-process [`PredictionService`] or a
+/// [`crate::server::Client`] handle into the concurrent coalescing
+/// front-end.
+pub fn advise<S: PerfServer + ?Sized>(svc: &S, machine: &MachineTopology,
               workload: &WorkloadSpec, sig: &BandwidthSignature,
               total: usize) -> Result<Advice> {
     if machine.sockets != 2 {

@@ -24,6 +24,6 @@ pub use evaluate::{evaluate_suite, ErrorRecord, Evaluation};
 pub use profiler::{profile, profile_suite, ProfilePair};
 pub use service::{
     CacheStats, CounterBatcher, CounterQuery, FitRequest, PerfQuery,
-    PredictionService,
+    PerfServer, PredictionService,
 };
 pub use store::SignatureStore;

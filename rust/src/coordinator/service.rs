@@ -20,16 +20,24 @@
 //!   queries are memoized on their full key.  Repeated placements hit
 //!   memory instead of the engine.  The service is `Send + Sync` (interior
 //!   mutability for all caches) so one instance can serve many threads —
-//!   the advisor fans out over it with `pool::parallel_map`.
+//!   the advisor fans out over it with `pool::parallel_map`, and the
+//!   [`crate::server`] front-end coalesces queries across client threads
+//!   into this layer.
 //!
-//! Bit-identity guarantee (pinned by `tests/advisor.rs`): in reference
-//! mode the batched+cached path performs exactly the same floating-point
-//! operations as the per-query path (`apply::counters_from_matrix` is the
-//! shared multiply; perf misses run through the same `predict_performance`
-//! the per-query loop uses), so results are bit-identical.
+//! All memo caches are shared deterministic LRUs ([`crate::util::lru`]):
+//! bounded by [`CACHE_CAP`] with recency-defined (never hash-order)
+//! eviction, and each reports its own hit/miss/eviction counters through
+//! [`CacheStats`].
+//!
+//! Bit-identity guarantee (pinned by `tests/advisor.rs` and
+//! `tests/serve.rs`): in reference mode the batched+cached path performs
+//! exactly the same floating-point operations as the per-query path
+//! (`apply::counters_from_matrix` is the shared multiply; perf misses run
+//! through the same `predict_performance` the per-query loop uses), so
+//! results are bit-identical — and since cached values are pure functions
+//! of their keys, eviction and recomputation cannot change any result.
 
 use std::collections::{HashMap, HashSet};
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
@@ -37,7 +45,9 @@ use anyhow::Result;
 use crate::counters::{Channel, ProfiledRun};
 use crate::model::signature::{BandwidthSignature, ChannelSignature};
 use crate::model::{apply, fit};
+use crate::report;
 use crate::runtime::{batches, Batch, Engine, Tensor};
+use crate::util::lru::{CacheCounters, Lru};
 
 use super::pool::parallel_map;
 
@@ -77,9 +87,10 @@ enum Backend {
 /// AOT artifacts' compiled batch).
 pub const DEFAULT_BATCH: usize = 64;
 
-/// Bound on each memo cache; on overflow the cache is cleared outright
-/// (simple, deterministic; an LRU is a noted follow-on in ROADMAP.md).
-const CACHE_CAP: usize = 1 << 16;
+/// Default bound on each memo cache; on overflow the least-recently-used
+/// entry is evicted (deterministic recency order — see
+/// [`crate::util::lru`]).
+pub const CACHE_CAP: usize = 1 << 16;
 
 /// Cache key of a §4 traffic matrix: the signature fields `apply` reads
 /// plus the placement.  `misfit` deliberately excluded — it does not
@@ -154,15 +165,102 @@ fn perf_key(q: &PerfQuery) -> PerfKey {
     }
 }
 
-type MatrixCache = Mutex<HashMap<MatrixKey, Arc<Vec<Vec<f64>>>>>;
-type CounterCache = Mutex<HashMap<CounterKey, Arc<Vec<[f64; 2]>>>>;
-type PerfCache = Mutex<HashMap<PerfKey, Arc<Vec<f64>>>>;
+type MatrixCache = Mutex<Lru<MatrixKey, Arc<Vec<Vec<f64>>>>>;
+type CounterCache = Mutex<Lru<CounterKey, Arc<Vec<[f64; 2]>>>>;
+type PerfCache = Mutex<Lru<PerfKey, Arc<Vec<f64>>>>;
 
-/// Serving-cache counters (monotonic since service construction).
+/// Per-cache serving counters (monotonic since service construction).
+///
+/// One [`CacheCounters`] triple per memo cache: the §4 traffic-matrix
+/// cache (reference-mode counter serving), the full-result counter cache
+/// (HLO-mode counter serving), and the performance-query cache.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
-    pub hits: u64,
-    pub misses: u64,
+    pub matrix: CacheCounters,
+    pub counter: CacheCounters,
+    pub perf: CacheCounters,
+}
+
+impl CacheStats {
+    /// `(name, counters)` rows in fixed render order.
+    pub fn named(&self) -> [(&'static str, CacheCounters); 3] {
+        [
+            ("matrix", self.matrix),
+            ("counter", self.counter),
+            ("perf", self.perf),
+        ]
+    }
+
+    /// Component-wise sum over all caches.
+    pub fn total(&self) -> CacheCounters {
+        self.named()
+            .iter()
+            .fold(CacheCounters::default(), |acc, (_, c)| acc.merged(c))
+    }
+
+    /// Aggregate hits across all caches.
+    pub fn hits(&self) -> u64 {
+        self.total().hits
+    }
+
+    /// Aggregate misses across all caches.
+    pub fn misses(&self) -> u64 {
+        self.total().misses
+    }
+
+    /// Aggregate evictions across all caches.
+    pub fn evictions(&self) -> u64 {
+        self.total().evictions
+    }
+
+    /// Aggregate hit fraction in [0, 1].
+    pub fn hit_rate(&self) -> f64 {
+        self.total().hit_rate()
+    }
+
+    /// Render the per-cache counters as a [`report::table`].
+    pub fn table(&self) -> String {
+        counters_table(&self.named())
+    }
+}
+
+/// Render `(name, counters)` rows plus a computed total row as a
+/// [`report::table`].  Shared with the server's metrics rendering, which
+/// appends a registry row before delegating here.
+pub fn counters_table(named: &[(&str, CacheCounters)]) -> String {
+    let total = named
+        .iter()
+        .fold(CacheCounters::default(), |acc, (_, c)| acc.merged(c));
+    let row = |name: &str, c: &CacheCounters| -> Vec<String> {
+        vec![
+            name.to_string(),
+            c.hits.to_string(),
+            c.misses.to_string(),
+            c.evictions.to_string(),
+            format!("{:.1}%", 100.0 * c.hit_rate()),
+        ]
+    };
+    let mut rows: Vec<Vec<String>> =
+        named.iter().map(|(name, c)| row(name, c)).collect();
+    rows.push(row("total", &total));
+    report::table(
+        &["cache", "hits", "misses", "evictions", "hit rate"],
+        &rows,
+    )
+}
+
+/// Anything that can serve batched performance queries: the in-process
+/// [`PredictionService`] or a [`crate::server::Client`] handle routing
+/// through the concurrent coalescing front-end.  The advisor scores
+/// placements through this trait, so it works identically over both.
+pub trait PerfServer {
+    fn serve_perf(&self, queries: &[PerfQuery]) -> Result<Vec<Vec<f64>>>;
+}
+
+impl PerfServer for PredictionService {
+    fn serve_perf(&self, queries: &[PerfQuery]) -> Result<Vec<Vec<f64>>> {
+        PredictionService::serve_perf(self, queries)
+    }
 }
 
 pub struct PredictionService {
@@ -172,8 +270,6 @@ pub struct PredictionService {
     matrix_cache: MatrixCache,
     counter_cache: CounterCache,
     perf_cache: PerfCache,
-    hits: AtomicU64,
-    misses: AtomicU64,
 }
 
 impl PredictionService {
@@ -185,12 +281,20 @@ impl PredictionService {
         PredictionService {
             backend,
             batch_hint,
-            matrix_cache: Mutex::new(HashMap::new()),
-            counter_cache: Mutex::new(HashMap::new()),
-            perf_cache: Mutex::new(HashMap::new()),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
+            matrix_cache: Mutex::new(Lru::new(CACHE_CAP)),
+            counter_cache: Mutex::new(Lru::new(CACHE_CAP)),
+            perf_cache: Mutex::new(Lru::new(CACHE_CAP)),
         }
+    }
+
+    /// Rebuild the (empty) memo caches with a custom capacity — servers
+    /// tuning memory, and tests exercising eviction, use this right after
+    /// construction.
+    pub fn with_cache_cap(mut self, cap: usize) -> PredictionService {
+        self.matrix_cache = Mutex::new(Lru::new(cap));
+        self.counter_cache = Mutex::new(Lru::new(cap));
+        self.perf_cache = Mutex::new(Lru::new(cap));
+        self
     }
 
     /// Serve through the compiled HLO artifacts.
@@ -226,11 +330,12 @@ impl PredictionService {
         self.batch_hint
     }
 
-    /// Serving-cache hit/miss counters.
+    /// Per-cache hit/miss/eviction counters.
     pub fn cache_stats(&self) -> CacheStats {
         CacheStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
+            matrix: self.matrix_cache.lock().unwrap().counters(),
+            counter: self.counter_cache.lock().unwrap().counters(),
+            perf: self.perf_cache.lock().unwrap().counters(),
         }
     }
 
@@ -527,12 +632,16 @@ impl PredictionService {
 
     // ---- serving front-end (batched + cached) -------------------------------
 
-    /// Resolve `keys` through a memo cache, computing misses with
-    /// `compute`, which receives the indices of the **first occurrence** of
-    /// each missing key and must return one value per index, in order.
+    /// Resolve `keys` through a shared-LRU memo cache, computing misses
+    /// with `compute`, which receives the indices of the **first
+    /// occurrence** of each missing key and must return one value per
+    /// index, in order.  Inserting a miss evicts the least-recently-used
+    /// entry when the cache is full (recency-defined order — never
+    /// hash-order), which only ever forces a recomputation later; it can
+    /// never change a served value.
     fn memo_serve<K, V, F>(
         &self,
-        cache: &Mutex<HashMap<K, Arc<V>>>,
+        cache: &Mutex<Lru<K, Arc<V>>>,
         keys: &[K],
         compute: F,
     ) -> Result<Vec<Arc<V>>>
@@ -543,14 +652,12 @@ impl PredictionService {
         let mut resolved: Vec<Option<Arc<V>>> = Vec::with_capacity(keys.len());
         let mut miss_first: Vec<usize> = Vec::new();
         {
-            let cache = cache.lock().unwrap();
+            let mut cache = cache.lock().unwrap();
             let mut fresh: HashSet<K> = HashSet::new();
             for (i, k) in keys.iter().enumerate() {
                 if let Some(v) = cache.get(k) {
-                    self.hits.fetch_add(1, Ordering::Relaxed);
                     resolved.push(Some(v.clone()));
                 } else {
-                    self.misses.fetch_add(1, Ordering::Relaxed);
                     if fresh.insert(*k) {
                         miss_first.push(i);
                     }
@@ -561,16 +668,23 @@ impl PredictionService {
         if !miss_first.is_empty() {
             let values = compute(&miss_first)?;
             debug_assert_eq!(values.len(), miss_first.len());
-            let mut cache = cache.lock().unwrap();
-            if cache.len() + values.len() > CACHE_CAP {
-                cache.clear();
-            }
-            for (&i, v) in miss_first.iter().zip(values) {
-                cache.insert(keys[i], Arc::new(v));
+            // Freshly computed values are handed out through this local
+            // map, not re-read from the cache: duplicate keys within one
+            // batch must not recount as hits, and the values must survive
+            // even if a concurrent batch evicts them immediately.
+            let mut fresh_values: HashMap<K, Arc<V>> =
+                HashMap::with_capacity(miss_first.len());
+            {
+                let mut cache = cache.lock().unwrap();
+                for (&i, v) in miss_first.iter().zip(values) {
+                    let v = Arc::new(v);
+                    cache.insert(keys[i], v.clone());
+                    fresh_values.insert(keys[i], v);
+                }
             }
             for (i, slot) in resolved.iter_mut().enumerate() {
                 if slot.is_none() {
-                    *slot = Some(cache.get(&keys[i]).unwrap().clone());
+                    *slot = Some(fresh_values[&keys[i]].clone());
                 }
             }
         }
@@ -804,8 +918,10 @@ mod tests {
             }
         }
         let stats = svc.cache_stats();
-        assert!(stats.hits > 0, "repeats must hit the matrix cache");
-        assert!(stats.misses > 0);
+        assert!(stats.matrix.hits > 0, "repeats must hit the matrix cache");
+        assert!(stats.matrix.misses > 0);
+        assert_eq!(stats.hits(), stats.matrix.hits,
+                   "reference counter serving uses only the matrix cache");
     }
 
     #[test]
@@ -825,12 +941,40 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits());
             }
         }
-        // Second call over the same stream: all hits.
+        // Second call over the same stream: all hits, all on the perf
+        // cache.
         let before = svc.cache_stats();
         svc.serve_perf(&queries).unwrap();
         let after = svc.cache_stats();
-        assert_eq!(after.misses, before.misses);
-        assert_eq!(after.hits, before.hits + queries.len() as u64);
+        assert_eq!(after.misses(), before.misses());
+        assert_eq!(after.perf.hits,
+                   before.perf.hits + queries.len() as u64);
+    }
+
+    #[test]
+    fn lru_eviction_is_bounded_and_counted() {
+        // A 4-entry cache under a 16-placement stream: evictions happen,
+        // results stay bit-identical to the unbounded service.
+        let small = PredictionService::reference().with_cache_cap(4);
+        let big = PredictionService::reference();
+        let mut rng = Rng::new(0xE71C);
+        let queries: Vec<CounterQuery> =
+            (0..64).map(|_| random_counter_query(&mut rng)).collect();
+        // Two passes so the second pass re-misses evicted placements.
+        for _ in 0..2 {
+            let a = small.serve_counters(&queries).unwrap();
+            let b = big.serve_counters(&queries).unwrap();
+            assert_eq!(a, b);
+        }
+        let stats = small.cache_stats();
+        assert!(stats.matrix.evictions > 0,
+                "a 4-entry cache must evict under 64 queries");
+        assert_eq!(big.cache_stats().matrix.evictions, 0);
+        // The rendering carries one row per cache plus the total.
+        let table = stats.table();
+        for name in ["matrix", "counter", "perf", "total", "hit rate"] {
+            assert!(table.contains(name), "{table}");
+        }
     }
 
     #[test]

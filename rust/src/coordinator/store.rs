@@ -6,6 +6,15 @@
 //! `machines()` / `workloads()` iterate in sorted order and `to_json()` /
 //! `save()` emit byte-identical output for equal contents regardless of
 //! insertion order — persisted stores and reports diff cleanly.
+//!
+//! Invalidation metadata: a store optionally records, per machine, the
+//! simulator seed its signatures were fitted with (`set_seed` / `seed`).
+//! Store-backed serving ([`crate::server::ModelRegistry`]) refuses to serve
+//! a signature fitted under a different seed — a fleet cache must never
+//! silently answer for a world it was not fitted in.  Stores without
+//! metadata keep the legacy single-object JSON layout byte-for-byte; a
+//! store with metadata persists as `{"machines": ..., "meta": ...}` and
+//! both layouts load.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -19,6 +28,9 @@ use crate::util::json::Json;
 pub struct SignatureStore {
     /// machine name → workload name → signature.
     entries: BTreeMap<String, BTreeMap<String, BandwidthSignature>>,
+    /// machine name → simulator seed the machine's signatures were fitted
+    /// with (absent for legacy stores).
+    seeds: BTreeMap<String, u64>,
 }
 
 impl SignatureStore {
@@ -37,6 +49,27 @@ impl SignatureStore {
     pub fn get(&self, machine: &str, workload: &str)
         -> Option<&BandwidthSignature> {
         self.entries.get(machine)?.get(workload)
+    }
+
+    /// Record the simulator seed `machine`'s signatures were fitted with.
+    pub fn set_seed(&mut self, machine: &str, seed: u64) {
+        self.seeds.insert(machine.to_string(), seed);
+    }
+
+    /// Drop every signature stored for `machine` (returns how many).
+    /// Callers re-fitting under a new seed must drop the old-world
+    /// signatures before re-stamping, or the seed guard would pass while
+    /// silently serving stale models.
+    pub fn remove_machine(&mut self, machine: &str) -> usize {
+        self.entries
+            .remove(machine)
+            .map(|ws| ws.len())
+            .unwrap_or(0)
+    }
+
+    /// The recorded fit seed for `machine` (None for legacy stores).
+    pub fn seed(&self, machine: &str) -> Option<u64> {
+        self.seeds.get(machine).copied()
     }
 
     pub fn machines(&self) -> Vec<&str> {
@@ -58,7 +91,7 @@ impl SignatureStore {
         self.len() == 0
     }
 
-    pub fn to_json(&self) -> Json {
+    fn machines_json(&self) -> Json {
         Json::Obj(
             self.entries
                 .iter()
@@ -76,9 +109,58 @@ impl SignatureStore {
         )
     }
 
+    pub fn to_json(&self) -> Json {
+        if self.seeds.is_empty() {
+            // Legacy layout: metadata-free stores stay byte-identical to
+            // what earlier versions persisted.
+            return self.machines_json();
+        }
+        // Seeds encode as decimal strings: JSON numbers are f64 here and a
+        // u64 seed above 2^53 must survive exactly.
+        let meta = Json::Obj(
+            self.seeds
+                .iter()
+                .map(|(m, seed)| {
+                    (
+                        m.clone(),
+                        Json::from_pairs([(
+                            "seed",
+                            Json::Str(seed.to_string()),
+                        )]),
+                    )
+                })
+                .collect(),
+        );
+        let mut top = BTreeMap::new();
+        top.insert("machines".to_string(), self.machines_json());
+        top.insert("meta".to_string(), meta);
+        Json::Obj(top)
+    }
+
     pub fn from_json(j: &Json) -> Result<SignatureStore> {
         let mut store = SignatureStore::new();
-        let top = match j {
+        // New layout: {"machines": {...}, "meta": {...}}; legacy layout:
+        // the machines object directly at top level.
+        let (machines, meta) = match j.get("machines") {
+            Some(m) => (m, j.get("meta")),
+            None => (j, None),
+        };
+        if let Some(Json::Obj(meta)) = meta {
+            for (machine, entry) in meta {
+                let seed = entry
+                    .get("seed")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| {
+                        anyhow!("store meta for {machine}: missing seed")
+                    })?
+                    .parse::<u64>()
+                    .map_err(|e| {
+                        anyhow!("store meta for {machine}: bad seed ({e})")
+                    })?;
+                store.set_seed(machine, seed);
+            }
+        }
+        let top = match machines {
             Json::Obj(m) => m,
             _ => return Err(anyhow!("store: expected object")),
         };
@@ -192,6 +274,41 @@ mod tests {
         assert_eq!(bytes1, bytes2, "save→load→save must be byte-identical");
         std::fs::remove_file(p1).ok();
         std::fs::remove_file(p2).ok();
+    }
+
+    #[test]
+    fn seed_metadata_roundtrips_and_is_optional() {
+        let mut s = SignatureStore::new();
+        s.insert("xeon8", "cg", sig());
+        // No metadata: legacy layout (top-level machines object).
+        let legacy = s.to_json();
+        assert!(legacy.get("xeon8").is_some());
+        assert_eq!(SignatureStore::from_json(&legacy).unwrap().seed("xeon8"),
+                   None);
+        // With metadata: new layout, exact u64 seed round-trip (including
+        // values above 2^53, which f64 JSON numbers cannot carry).
+        s.set_seed("xeon8", (1u64 << 62) + 3);
+        let j = s.to_json();
+        assert!(j.get("machines").is_some() && j.get("meta").is_some());
+        let back = SignatureStore::from_json(&j).unwrap();
+        assert_eq!(back.seed("xeon8"), Some((1u64 << 62) + 3));
+        assert_eq!(back.seed("xeon18"), None);
+        assert!(back.get("xeon8", "cg").is_some());
+        // Deterministic: encoding is stable under a save→load→save cycle.
+        assert_eq!(j.encode(),
+                   SignatureStore::from_json(&j).unwrap().to_json().encode());
+    }
+
+    #[test]
+    fn remove_machine_drops_all_its_signatures() {
+        let mut s = SignatureStore::new();
+        s.insert("xeon8", "cg", sig());
+        s.insert("xeon8", "ft", sig());
+        s.insert("xeon18", "cg", sig());
+        assert_eq!(s.remove_machine("xeon8"), 2);
+        assert_eq!(s.remove_machine("xeon8"), 0);
+        assert!(s.get("xeon8", "cg").is_none());
+        assert_eq!(s.len(), 1);
     }
 
     #[test]

@@ -18,10 +18,25 @@
 //! stubbed out — see [`runtime`] — and everything serves through the Rust
 //! reference model, the numerical twin of the Pallas kernels.)
 //!
-//! ## Serving architecture (placement advisor)
+//! ## Serving architecture (placement advisor + serve daemon)
 //!
-//! On top of the model sits a concurrent serving layer, the growth path
+//! On top of the model sits a concurrent serving stack, the growth path
 //! toward the paper's stated endgame of feeding systems like Pandia:
+//!
+//! ```text
+//!  client threads ──┐
+//!  client threads ──┼─ server::Client ──mpsc──▶ FrontEnd dispatcher
+//!  client threads ──┘                           (coalesce across requests;
+//!   (or `numabw serve`                           flush on batch size or
+//!    JSONL stdin/stdout)                         deadline — BatchWindow)
+//!                                                        │
+//!              ModelRegistry ────────▶ PredictionService (one dispatch
+//!       (store-backed signature LRU,    per batch; shared LRU memo
+//!        machine+seed invalidation)     caches with per-cache CacheStats)
+//!                                                        │
+//!                                          results fanned back over
+//!                                          per-request reply channels
+//! ```
 //!
 //! * [`coordinator::service::PredictionService`] is `Send + Sync` (all
 //!   caches use interior mutability) so a single instance serves many
@@ -29,14 +44,38 @@
 //!   `CounterBatcher`) coalesces query streams into engine-sized batches
 //!   via [`runtime::batches`] and memoizes by placement: the §4 traffic
 //!   matrix depends only on `(signature, threads)`, so repeated placements
-//!   hit memory instead of the HLO engine.  In reference mode the batched
-//!   path is bit-identical to the per-query path (pinned by
+//!   hit memory instead of the HLO engine.  The memo caches are bounded,
+//!   deterministic LRUs ([`util::lru`]) with per-cache hit/miss/eviction
+//!   counters ([`coordinator::CacheStats`]).  In reference mode the
+//!   batched path is bit-identical to the per-query path (pinned by
 //!   `tests/advisor.rs`).
+//! * [`server`] generalises batching across callers: a std-only
+//!   [`server::FrontEnd`] (threads + channels + `Instant` deadlines)
+//!   coalesces queries from many client threads into one engine dispatch
+//!   per batch window, and [`server::ModelRegistry`] serves fitted
+//!   signatures out of the on-disk store, fit-once-serve-forever, with
+//!   machine+seed invalidation.  Exposed as the `numabw serve` JSONL
+//!   daemon and the in-process [`server::Client`] — still bit-identical
+//!   to per-query serving (pinned by `tests/serve.rs`).
 //! * [`coordinator::advisor`] enumerates every valid [`ThreadPlacement`]
 //!   for a machine, scores each by predicted achieved bandwidth and
-//!   interconnect headroom through the batched path, and returns a
+//!   interconnect headroom through any [`coordinator::PerfServer`] (the
+//!   in-process service or a `server::Client`), and returns a
 //!   deterministic ranked recommendation — exposed as the `advise` CLI
-//!   subcommand and `examples/placement_advisor.rs`.
+//!   subcommand (store-backed via `--store`) and
+//!   `examples/placement_advisor.rs`.
+//!
+//! A `serve` session, verbatim (`$` lines are stdin; this is the smoke
+//! transcript CI diffs against `rust/tests/data/serve_smoke.golden.jsonl`):
+//!
+//! ```text
+//! $ {"id":1,"op":"counters","sig":{"static":0.25,"local":0.5,
+//!    "perthread":0.125,"static_socket":1,"misfit":0},
+//!    "threads":[2,2],"cpu_totals":[4.0,2.0]}
+//! {"id":1,"ok":true,"result":[[[2.5,0.25],[1.75,1.5]]]}
+//! $ {"id":2,"op":"stats"}
+//! {"id":2,"ok":true,"result":{"caches":{...},"frontend":{...},...}}
+//! ```
 //!
 //! [`ThreadPlacement`]: simulator::ThreadPlacement
 //!
@@ -79,6 +118,8 @@ pub mod model;
 pub mod runtime;
 
 pub mod coordinator;
+
+pub mod server;
 
 pub mod eval;
 

@@ -283,6 +283,40 @@ impl Batch {
     }
 }
 
+/// Size-or-deadline flush policy over a pending batch: the canonical
+/// decision rule for accumulators that coalesce a request stream into
+/// engine-sized dispatches ([`crate::server::FrontEnd`] is the main user).
+///
+/// Two triggers:
+/// * **size** — `capacity` rows are pending: a full engine batch exists,
+///   dispatch immediately;
+/// * **deadline** — the oldest pending row has waited `window`: dispatch a
+///   partial batch so a lone request is never parked waiting for traffic.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchWindow {
+    pub capacity: usize,
+    pub window: std::time::Duration,
+}
+
+impl BatchWindow {
+    pub fn new(capacity: usize, window: std::time::Duration) -> BatchWindow {
+        assert!(capacity >= 1, "batch window needs capacity >= 1");
+        BatchWindow { capacity, window }
+    }
+
+    /// True when `pending` rows already fill an engine batch.
+    pub fn size_triggered(&self, pending: usize) -> bool {
+        pending >= self.capacity
+    }
+
+    /// The instant by which a batch whose oldest row arrived at
+    /// `first_arrival` must flush.
+    pub fn deadline(&self, first_arrival: std::time::Instant)
+        -> std::time::Instant {
+        first_arrival + self.window
+    }
+}
+
 /// Split `n` logical rows into batches of at most `capacity`.
 pub fn batches(n: usize, capacity: usize) -> Vec<(usize, usize)> {
     let mut out = Vec::new();
@@ -333,6 +367,24 @@ mod tests {
         assert_eq!(batches(130, 64), vec![(0, 64), (64, 64), (128, 2)]);
         assert_eq!(batches(64, 64), vec![(0, 64)]);
         assert_eq!(batches(1, 64), vec![(0, 1)]);
+    }
+
+    #[test]
+    fn batch_window_triggers() {
+        use std::time::{Duration, Instant};
+        let w = BatchWindow::new(64, Duration::from_millis(2));
+        assert!(!w.size_triggered(0));
+        assert!(!w.size_triggered(63));
+        assert!(w.size_triggered(64));
+        assert!(w.size_triggered(65));
+        let t0 = Instant::now();
+        assert_eq!(w.deadline(t0), t0 + Duration::from_millis(2));
+    }
+
+    #[test]
+    #[should_panic]
+    fn batch_window_rejects_zero_capacity() {
+        BatchWindow::new(0, std::time::Duration::from_millis(1));
     }
 
     #[test]

@@ -1,0 +1,455 @@
+//! The concurrent serving front-end: cross-request coalescing over the
+//! prediction service, std-only (threads + channels + `Instant`
+//! deadlines — no async runtime).
+//!
+//! ```text
+//!  client thread ──┐
+//!  client thread ──┼─ Client::perf/counters ──mpsc──▶ dispatcher thread
+//!  client thread ──┘      (one reply channel               │
+//!                          per request)          coalesce into one pending
+//!                                                batch; flush on size or
+//!                                                deadline (BatchWindow)
+//!                                                          │
+//!                                              PredictionService::serve_*
+//!                                               (shared LRU memo caches)
+//!                                                          │
+//!                                        split results by request span and
+//!                                        fan out over the reply channels
+//! ```
+//!
+//! Queries from *different* callers that arrive within one batch window
+//! are dispatched to the engine together — the cross-request
+//! generalisation of [`crate::coordinator::CounterBatcher`], which only
+//! batches within a single caller.  Because
+//! [`PredictionService::serve_counters`] /
+//! [`PredictionService::serve_perf`] are bit-identical to the per-query
+//! path regardless of how a stream is grouped, any interleaving of
+//! arrivals produces bit-identical answers (pinned by `tests/serve.rs`).
+//!
+//! Shutdown: dropping the [`FrontEnd`] (after all [`Client`] handles are
+//! gone) disconnects the request channel; the dispatcher drains pending
+//! work, answers it, and exits.  Requests sent after shutdown error
+//! cleanly.
+
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::service::{
+    CounterQuery, PerfQuery, PerfServer, PredictionService,
+};
+use crate::runtime::BatchWindow;
+
+use super::metrics::{FlushReason, ServeMetrics};
+
+/// Errors cross the channel as strings (`anyhow::Error` is not `Clone`,
+/// and one engine failure must be reported to every coalesced requester).
+type Reply<T> = Result<T, String>;
+
+/// Per-query results: one `(local, remote)` pair per bank.
+type CounterResults = Vec<Vec<[f64; 2]>>;
+/// Per-query results: one allocation per flow.
+type PerfResults = Vec<Vec<f64>>;
+
+enum Request {
+    Counters {
+        queries: Vec<CounterQuery>,
+        reply: Sender<Reply<CounterResults>>,
+    },
+    Perf {
+        queries: Vec<PerfQuery>,
+        reply: Sender<Reply<PerfResults>>,
+    },
+    /// Sent by [`FrontEnd`] shutdown: drain pending work and exit, even if
+    /// client handles still hold senders.
+    Shutdown,
+}
+
+impl Request {
+    fn len(&self) -> usize {
+        match self {
+            Request::Counters { queries, .. } => queries.len(),
+            Request::Perf { queries, .. } => queries.len(),
+            Request::Shutdown => 0,
+        }
+    }
+}
+
+/// Front-end tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct FrontEndConfig {
+    /// Flush when this many queries are pending (`None` → the service's
+    /// engine batch hint).
+    pub batch_size: Option<usize>,
+    /// Deadline: a request waits at most this long before a partial batch
+    /// is flushed on its behalf.
+    pub window: Duration,
+}
+
+impl Default for FrontEndConfig {
+    fn default() -> FrontEndConfig {
+        FrontEndConfig {
+            batch_size: None,
+            window: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Handle owning the dispatcher thread.  Dropping (or
+/// [`FrontEnd::shutdown`]-ing) it sends an explicit shutdown message,
+/// drains pending work, and joins the dispatcher — outstanding [`Client`]
+/// handles do not block shutdown; their later requests error cleanly.
+pub struct FrontEnd {
+    tx: Option<Sender<Request>>,
+    handle: Option<JoinHandle<()>>,
+    svc: Arc<PredictionService>,
+    metrics: Arc<ServeMetrics>,
+}
+
+impl FrontEnd {
+    /// Take ownership of a service and start the dispatcher thread.
+    pub fn start(svc: PredictionService, cfg: FrontEndConfig) -> FrontEnd {
+        let svc = Arc::new(svc);
+        let metrics = Arc::new(ServeMetrics::default());
+        let window = BatchWindow::new(
+            cfg.batch_size.unwrap_or_else(|| svc.batch_hint()).max(1),
+            cfg.window,
+        );
+        let (tx, rx) = mpsc::channel();
+        let dispatcher_svc = svc.clone();
+        let dispatcher_metrics = metrics.clone();
+        let handle = std::thread::Builder::new()
+            .name("numabw-frontend".to_string())
+            .spawn(move || {
+                dispatch_loop(rx, &dispatcher_svc, window,
+                              &dispatcher_metrics)
+            })
+            .expect("spawning the front-end dispatcher thread");
+        FrontEnd {
+            tx: Some(tx),
+            handle: Some(handle),
+            svc,
+            metrics,
+        }
+    }
+
+    /// A cheap, clonable submission handle (one per client thread).
+    pub fn client(&self) -> Client {
+        Client {
+            tx: self.tx.as_ref().expect("front-end is running").clone(),
+        }
+    }
+
+    /// The shared service behind the dispatcher (fit calls, cache stats).
+    pub fn service(&self) -> &PredictionService {
+        &self.svc
+    }
+
+    pub fn metrics(&self) -> &ServeMetrics {
+        &self.metrics
+    }
+
+    /// Stop accepting work, drain pending requests, and join the
+    /// dispatcher.  Also runs on drop.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        if let Some(tx) = self.tx.take() {
+            // Explicit shutdown message: the dispatcher must exit even if
+            // Client clones still hold senders (waiting on disconnect
+            // alone would deadlock the join below).
+            let _ = tx.send(Request::Shutdown);
+        }
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for FrontEnd {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Blocking request handle into the front-end.  Clone freely — every
+/// client thread should own one.
+#[derive(Clone)]
+pub struct Client {
+    tx: Sender<Request>,
+}
+
+impl Client {
+    fn roundtrip<T>(
+        &self,
+        make: impl FnOnce(Sender<Reply<T>>) -> Request,
+    ) -> Result<T> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(make(reply_tx))
+            .map_err(|_| anyhow!("serving front-end is shut down"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("serving front-end dropped the request"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    /// Submit a block of counter queries; blocks until the coalesced batch
+    /// containing them is served.
+    pub fn counters_many(&self, queries: Vec<CounterQuery>)
+        -> Result<Vec<Vec<[f64; 2]>>> {
+        if queries.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.roundtrip(|reply| Request::Counters { queries, reply })
+    }
+
+    /// Submit one counter query.
+    pub fn counters(&self, query: CounterQuery)
+        -> Result<Vec<[f64; 2]>> {
+        Ok(self
+            .counters_many(vec![query])?
+            .pop()
+            .expect("one result per query"))
+    }
+
+    /// Submit a block of performance queries.
+    pub fn perf_many(&self, queries: Vec<PerfQuery>)
+        -> Result<Vec<Vec<f64>>> {
+        if queries.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.roundtrip(|reply| Request::Perf { queries, reply })
+    }
+
+    /// Submit one performance query.
+    pub fn perf(&self, query: PerfQuery) -> Result<Vec<f64>> {
+        Ok(self
+            .perf_many(vec![query])?
+            .pop()
+            .expect("one result per query"))
+    }
+}
+
+/// The advisor (and anything else scoring placements) can fan out over the
+/// front-end exactly as it does over an in-process service.
+impl PerfServer for Client {
+    fn serve_perf(&self, queries: &[PerfQuery]) -> Result<Vec<Vec<f64>>> {
+        self.perf_many(queries.to_vec())
+    }
+}
+
+/// Everything pending between flushes: the coalesced query vectors plus,
+/// per original request, the reply channel and how many queries it
+/// contributed (its span in the coalesced vector).
+#[derive(Default)]
+struct PendingBatch {
+    counters: Vec<CounterQuery>,
+    counter_spans: Vec<(Sender<Reply<CounterResults>>, usize)>,
+    perf: Vec<PerfQuery>,
+    perf_spans: Vec<(Sender<Reply<PerfResults>>, usize)>,
+}
+
+impl PendingBatch {
+    fn len(&self) -> usize {
+        self.counters.len() + self.perf.len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn enqueue(&mut self, req: Request) {
+        match req {
+            Request::Counters { mut queries, reply } => {
+                self.counter_spans.push((reply, queries.len()));
+                self.counters.append(&mut queries);
+            }
+            Request::Perf { mut queries, reply } => {
+                self.perf_spans.push((reply, queries.len()));
+                self.perf.append(&mut queries);
+            }
+            Request::Shutdown => {
+                unreachable!("shutdown is handled by the dispatch loop")
+            }
+        }
+    }
+}
+
+fn dispatch_loop(rx: Receiver<Request>, svc: &PredictionService,
+                 window: BatchWindow, metrics: &ServeMetrics) {
+    let mut pending = PendingBatch::default();
+    let mut deadline: Option<Instant> = None;
+    loop {
+        let msg = match deadline {
+            // Nothing pending: park until work arrives or every sender is
+            // gone.
+            None => rx.recv().map_err(|_| RecvTimeoutError::Disconnected),
+            // Work pending: wait only until its flush deadline.
+            Some(d) => rx.recv_timeout(
+                d.saturating_duration_since(Instant::now()),
+            ),
+        };
+        match msg {
+            Ok(Request::Shutdown) => {
+                if !pending.is_empty() {
+                    flush(svc, &mut pending, metrics, FlushReason::Drain);
+                }
+                return;
+            }
+            Ok(req) => {
+                metrics.record_request(req.len());
+                if pending.is_empty() {
+                    deadline = Some(window.deadline(Instant::now()));
+                }
+                pending.enqueue(req);
+                if window.size_triggered(pending.len()) {
+                    flush(svc, &mut pending, metrics, FlushReason::Size);
+                    deadline = None;
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if !pending.is_empty() {
+                    flush(svc, &mut pending, metrics,
+                          FlushReason::Deadline);
+                }
+                deadline = None;
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                if !pending.is_empty() {
+                    flush(svc, &mut pending, metrics, FlushReason::Drain);
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// Serve everything pending in one dispatch per query kind, then fan the
+/// results back out to each requester by its span.
+fn flush(svc: &PredictionService, pending: &mut PendingBatch,
+         metrics: &ServeMetrics, reason: FlushReason) {
+    let batch = std::mem::take(pending);
+    metrics.record_flush(reason, batch.len());
+    if !batch.counters.is_empty() {
+        fan_out(
+            svc.serve_counters(&batch.counters),
+            batch.counter_spans,
+        );
+    }
+    if !batch.perf.is_empty() {
+        fan_out(
+            PredictionService::serve_perf(svc, &batch.perf),
+            batch.perf_spans,
+        );
+    }
+}
+
+fn fan_out<T>(result: Result<Vec<T>>,
+              spans: Vec<(Sender<Reply<Vec<T>>>, usize)>) {
+    match result {
+        Ok(all) => {
+            let mut rest = all.into_iter();
+            for (reply, n) in spans {
+                let chunk: Vec<T> = rest.by_ref().take(n).collect();
+                // A requester that gave up (dropped its receiver) is fine.
+                let _ = reply.send(Ok(chunk));
+            }
+            debug_assert!(rest.next().is_none(),
+                          "results must exactly cover the spans");
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for (reply, _) in spans {
+                let _ = reply.send(Err(msg.clone()));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::signature::ChannelSignature;
+    use crate::util::rng::Rng;
+
+    fn random_counter_query(rng: &mut Rng) -> CounterQuery {
+        let a = rng.uniform(0.0, 0.5);
+        let l = rng.uniform(0.0, (1.0 - a) * 0.8);
+        let p = rng.uniform(0.0, (1.0 - a - l).max(0.0));
+        CounterQuery {
+            sig: ChannelSignature::new(a, l, p, rng.below(2) as usize),
+            threads: [1 + rng.below(8) as usize, rng.below(9) as usize],
+            cpu_totals: [rng.uniform(0.0, 1e10), rng.uniform(0.0, 1e10)],
+        }
+    }
+
+    #[test]
+    fn roundtrip_single_and_many() {
+        let fe = FrontEnd::start(
+            PredictionService::reference(),
+            FrontEndConfig {
+                batch_size: Some(8),
+                window: Duration::from_millis(1),
+            },
+        );
+        let client = fe.client();
+        let mut rng = Rng::new(0xFE01);
+        let queries: Vec<CounterQuery> =
+            (0..20).map(|_| random_counter_query(&mut rng)).collect();
+        let served = client.counters_many(queries.clone()).unwrap();
+        for (q, got) in queries.iter().zip(&served) {
+            let want = crate::model::apply::predict_counters(
+                &q.sig, &q.threads, &q.cpu_totals,
+            );
+            assert_eq!(&want, got);
+        }
+        let one = client.counters(queries[3].clone()).unwrap();
+        assert_eq!(one, served[3]);
+        assert!(client.counters_many(Vec::new()).unwrap().is_empty());
+        drop(client);
+        fe.shutdown();
+    }
+
+    #[test]
+    fn oversized_request_flushes_by_size() {
+        let fe = FrontEnd::start(
+            PredictionService::reference(),
+            FrontEndConfig {
+                batch_size: Some(4),
+                // A long window: only the size trigger can answer quickly.
+                window: Duration::from_secs(30),
+            },
+        );
+        let client = fe.client();
+        let mut rng = Rng::new(0xFE02);
+        let queries: Vec<CounterQuery> =
+            (0..16).map(|_| random_counter_query(&mut rng)).collect();
+        let served = client.counters_many(queries.clone()).unwrap();
+        assert_eq!(served.len(), 16);
+        let snap = fe.metrics().snapshot();
+        assert_eq!(snap.flushes_size, 1);
+        assert_eq!(snap.max_batch, 16);
+        drop(client);
+        fe.shutdown();
+    }
+
+    #[test]
+    fn requests_after_shutdown_error_cleanly() {
+        let fe = FrontEnd::start(PredictionService::reference(),
+                                 FrontEndConfig::default());
+        let client = fe.client();
+        // Shutdown must not deadlock on the clone held by `client`.
+        drop(fe);
+        let mut rng = Rng::new(0xFE03);
+        let err = client
+            .counters(random_counter_query(&mut rng))
+            .unwrap_err();
+        assert!(format!("{err}").contains("shut down"), "{err}");
+    }
+}

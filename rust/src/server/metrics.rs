@@ -1,0 +1,174 @@
+//! Front-end serving metrics: how many requests arrived, how many queries
+//! they carried, and how each coalesced batch came to be flushed (size
+//! trigger, deadline trigger, or final drain at shutdown).
+//!
+//! The counters are lock-free atomics bumped by the dispatcher thread and
+//! read by anyone holding the [`crate::server::FrontEnd`]; a
+//! [`MetricsSnapshot`] is the consistent-enough point-in-time copy used by
+//! the `stats` protocol op and the shutdown summary.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::coordinator::service::{counters_table, CacheStats};
+use crate::util::json::Json;
+use crate::util::lru::CacheCounters;
+
+/// Why a pending batch was dispatched.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushReason {
+    /// Enough queries were pending to fill an engine batch.
+    Size,
+    /// The oldest pending query hit the batch-window deadline.
+    Deadline,
+    /// Shutdown drain: the request channel disconnected with work pending.
+    Drain,
+}
+
+/// Live counters owned by the front-end (monotonic since start).
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    pub requests: AtomicU64,
+    pub queries: AtomicU64,
+    pub flushes_size: AtomicU64,
+    pub flushes_deadline: AtomicU64,
+    pub flushes_drain: AtomicU64,
+    /// Largest number of queries coalesced into one flush.
+    pub max_batch: AtomicU64,
+}
+
+impl ServeMetrics {
+    pub fn record_request(&self, queries: usize) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.queries.fetch_add(queries as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_flush(&self, reason: FlushReason, batch: usize) {
+        match reason {
+            FlushReason::Size => &self.flushes_size,
+            FlushReason::Deadline => &self.flushes_deadline,
+            FlushReason::Drain => &self.flushes_drain,
+        }
+        .fetch_add(1, Ordering::Relaxed);
+        self.max_batch
+            .fetch_max(batch as u64, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            queries: self.queries.load(Ordering::Relaxed),
+            flushes_size: self.flushes_size.load(Ordering::Relaxed),
+            flushes_deadline: self.flushes_deadline.load(Ordering::Relaxed),
+            flushes_drain: self.flushes_drain.load(Ordering::Relaxed),
+            max_batch: self.max_batch.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of [`ServeMetrics`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub queries: u64,
+    pub flushes_size: u64,
+    pub flushes_deadline: u64,
+    pub flushes_drain: u64,
+    pub max_batch: u64,
+}
+
+impl MetricsSnapshot {
+    pub fn flushes(&self) -> u64 {
+        self.flushes_size + self.flushes_deadline + self.flushes_drain
+    }
+
+    /// Mean queries coalesced per engine dispatch.
+    pub fn mean_batch(&self) -> f64 {
+        if self.flushes() == 0 {
+            0.0
+        } else {
+            self.queries as f64 / self.flushes() as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs([
+            ("requests", Json::Num(self.requests as f64)),
+            ("queries", Json::Num(self.queries as f64)),
+            ("flushes_size", Json::Num(self.flushes_size as f64)),
+            ("flushes_deadline", Json::Num(self.flushes_deadline as f64)),
+            ("flushes_drain", Json::Num(self.flushes_drain as f64)),
+            ("max_batch", Json::Num(self.max_batch as f64)),
+        ])
+    }
+}
+
+/// JSON rendering of one cache's counters (used by the `stats` op).
+pub fn counters_json(c: &CacheCounters) -> Json {
+    Json::from_pairs([
+        ("hits", Json::Num(c.hits as f64)),
+        ("misses", Json::Num(c.misses as f64)),
+        ("evictions", Json::Num(c.evictions as f64)),
+    ])
+}
+
+/// The serve-side cache table: the service's per-cache rows plus the model
+/// registry's row (total row computed over all four).
+pub fn cache_table(stats: &CacheStats, registry: &CacheCounters) -> String {
+    let mut named: Vec<(&str, CacheCounters)> = stats.named().to_vec();
+    named.push(("registry", *registry));
+    counters_table(&named)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flush_reasons_are_tallied_separately() {
+        let m = ServeMetrics::default();
+        m.record_request(3);
+        m.record_request(1);
+        m.record_flush(FlushReason::Size, 64);
+        m.record_flush(FlushReason::Deadline, 3);
+        m.record_flush(FlushReason::Deadline, 1);
+        m.record_flush(FlushReason::Drain, 2);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.queries, 4);
+        assert_eq!(
+            (s.flushes_size, s.flushes_deadline, s.flushes_drain),
+            (1, 2, 1)
+        );
+        assert_eq!(s.flushes(), 4);
+        assert_eq!(s.max_batch, 64);
+        assert!((s.mean_batch() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snapshot_json_is_deterministic() {
+        let s = MetricsSnapshot {
+            requests: 2,
+            queries: 4,
+            flushes_size: 1,
+            flushes_deadline: 1,
+            flushes_drain: 0,
+            max_batch: 3,
+        };
+        assert_eq!(
+            s.to_json().encode(),
+            "{\"flushes_deadline\":1,\"flushes_drain\":0,\
+             \"flushes_size\":1,\"max_batch\":3,\"queries\":4,\
+             \"requests\":2}"
+        );
+    }
+
+    #[test]
+    fn cache_table_includes_registry_row() {
+        let t = cache_table(
+            &CacheStats::default(),
+            &CacheCounters { hits: 9, misses: 1, evictions: 0 },
+        );
+        assert!(t.contains("registry"));
+        assert!(t.contains("90.0%"));
+    }
+}

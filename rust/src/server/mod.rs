@@ -1,0 +1,41 @@
+//! Layer-4 serving: the concurrent, std-only front-end that turns the
+//! coordinator's batched prediction paths into a long-lived daemon —
+//! the MAO-style fleet-serving shape (fit once, serve forever) the
+//! ROADMAP's "heavy traffic" north star asks for.
+//!
+//! ```text
+//!              numabw serve (JSONL stdin/stdout)        in-process users
+//!                         │                                   │
+//!                   protocol::serve_lines              server::Client
+//!                         │                                   │
+//!        ┌────────────────┴───────────────┬──────────────────┘
+//!        │                                │
+//!  ModelRegistry                     FrontEnd dispatcher
+//!  (signature-keyed LRU          (cross-request coalescing:
+//!   over SignatureStore,          size- or deadline-triggered
+//!   machine+seed guarded)         flush via runtime::BatchWindow)
+//!        │                                │
+//!        └────────► PredictionService ◄───┘
+//!                   (shared LRU memo caches, CacheStats)
+//! ```
+//!
+//! * [`frontend`] — [`FrontEnd`] / [`Client`]: many client threads, one
+//!   dispatcher, one engine dispatch per batch window, results fanned
+//!   back over per-request channels.  Bit-identical to per-query serving
+//!   (pinned by `tests/serve.rs`).
+//! * [`registry`] — [`ModelRegistry`]: LRU-evicting, store-backed fitted
+//!   model registry with machine+seed invalidation.
+//! * [`protocol`] — the line-delimited JSON wire format and the
+//!   `numabw serve` loop ([`serve_lines`]).
+//! * [`metrics`] — request/flush counters ([`ServeMetrics`]) and the
+//!   serve-side cache-table rendering.
+
+pub mod frontend;
+pub mod metrics;
+pub mod protocol;
+pub mod registry;
+
+pub use frontend::{Client, FrontEnd, FrontEndConfig};
+pub use metrics::{FlushReason, MetricsSnapshot, ServeMetrics};
+pub use protocol::{parse_request, serve_lines, ProtoRequest, ServeOptions};
+pub use registry::{ModelRegistry, DEFAULT_REGISTRY_CAP};

@@ -1,0 +1,609 @@
+//! Line-delimited JSON serving protocol: the scriptable, testable wire
+//! format of `numabw serve`.
+//!
+//! One request per input line, one reply per output line, in order.
+//! Replies carry the request's `id` back verbatim (any JSON value), `ok`,
+//! and either `result` or `error`.  Object keys encode sorted (the JSON
+//! substrate is `BTreeMap`-backed), so a transcript's output is
+//! byte-deterministic — CI diffs it against a golden file.
+//!
+//! Ops:
+//!
+//! ```text
+//! {"id":1,"op":"counters","sig":{...},"threads":[3,1],"cpu_totals":[3e9,1e9]}
+//! {"id":2,"op":"perf","sig":{...},"threads":[6,2],"demand_pt":[2e9,1e9],"caps":[...8 numbers]}
+//! {"id":3,"op":"advise","machine":"xeon8","workload":"cg","threads":8,"top":3}
+//! {"id":4,"op":"stats"}
+//! ```
+//!
+//! `counters` / `perf` also accept `"queries": [{...}, ...]` for a block
+//! of queries in one request (one coalesced dispatch).  `sig` is a channel
+//! signature in the store's JSON schema (`static`, `local`, `perthread`,
+//! `static_socket`, `misfit`).  `advise` serves its signature through the
+//! [`ModelRegistry`] (fit-once-serve-forever; seed-guarded when the server
+//! was started with `--store`) and scores placements through the
+//! coalescing front-end's [`Client`].
+
+use std::io::{BufRead, Write};
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::advisor;
+use crate::coordinator::service::{CounterQuery, FitRequest, PerfQuery};
+use crate::coordinator::{profile, PredictionService};
+use crate::model::signature::ChannelSignature;
+use crate::simulator::{SimConfig, Simulator};
+use crate::topology::MachineTopology;
+use crate::util::json::Json;
+use crate::workloads;
+
+use super::frontend::{Client, FrontEnd, FrontEndConfig};
+use super::metrics::{cache_table, counters_json};
+use super::registry::{ModelRegistry, DEFAULT_REGISTRY_CAP};
+
+/// `numabw serve` configuration.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Backing signature store for the model registry (`--store`).
+    pub store: Option<PathBuf>,
+    /// Simulator seed for fits requested through the daemon (`--seed`).
+    pub seed: u64,
+    /// Coalescing batch size (`--batch`; None → engine batch hint).
+    pub batch_size: Option<usize>,
+    /// Batch-window deadline (`--window-ms`).
+    pub window: Duration,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            store: None,
+            seed: SimConfig::default().seed,
+            batch_size: None,
+            window: Duration::from_millis(2),
+        }
+    }
+}
+
+/// A parsed protocol request.
+pub enum ProtoRequest {
+    Counters { id: Json, queries: Vec<CounterQuery> },
+    Perf { id: Json, queries: Vec<PerfQuery> },
+    Advise {
+        id: Json,
+        machine: String,
+        workload: String,
+        threads: Option<usize>,
+        top: usize,
+    },
+    Stats { id: Json },
+}
+
+impl ProtoRequest {
+    pub fn id(&self) -> &Json {
+        match self {
+            ProtoRequest::Counters { id, .. }
+            | ProtoRequest::Perf { id, .. }
+            | ProtoRequest::Advise { id, .. }
+            | ProtoRequest::Stats { id } => id,
+        }
+    }
+}
+
+fn field<'a>(j: &'a Json, key: &str) -> Result<&'a Json, String> {
+    j.get(key).ok_or_else(|| format!("missing field {key:?}"))
+}
+
+fn checked_usize(x: f64, key: &str) -> Result<usize, String> {
+    // Wire numbers arrive as f64; reject anything that would silently
+    // floor or clamp (2.7 -> 2, -1 -> 0) instead of answering for a
+    // placement the caller never asked about.
+    if x.fract() == 0.0 && (0.0..9e15).contains(&x) {
+        Ok(x as usize)
+    } else {
+        Err(format!("field {key:?} must hold non-negative integers"))
+    }
+}
+
+fn usize_field(j: &Json, key: &str) -> Result<usize, String> {
+    let n = field(j, key)?
+        .as_f64()
+        .ok_or_else(|| format!("field {key:?} must be an integer"))?;
+    checked_usize(n, key)
+}
+
+fn f64_array<const N: usize>(j: &Json, key: &str)
+    -> Result<[f64; N], String> {
+    let v = field(j, key)?
+        .as_f64_vec()
+        .ok_or_else(|| format!("field {key:?} must be a number array"))?;
+    v.try_into()
+        .map_err(|_| format!("field {key:?} must have {N} elements"))
+}
+
+fn usize_pair(j: &Json, key: &str) -> Result<[usize; 2], String> {
+    let v: [f64; 2] = f64_array(j, key)?;
+    Ok([checked_usize(v[0], key)?, checked_usize(v[1], key)?])
+}
+
+fn parse_sig(j: &Json) -> Result<ChannelSignature, String> {
+    ChannelSignature::from_json(field(j, "sig")?)
+}
+
+fn parse_counter_query(j: &Json) -> Result<CounterQuery, String> {
+    Ok(CounterQuery {
+        sig: parse_sig(j)?,
+        threads: usize_pair(j, "threads")?,
+        cpu_totals: f64_array(j, "cpu_totals")?,
+    })
+}
+
+fn parse_perf_query(j: &Json) -> Result<PerfQuery, String> {
+    Ok(PerfQuery {
+        sig: parse_sig(j)?,
+        threads: usize_pair(j, "threads")?,
+        demand_pt: f64_array(j, "demand_pt")?,
+        caps: f64_array(j, "caps")?,
+    })
+}
+
+/// One query per request, or a `"queries"` block.
+fn parse_queries<T>(j: &Json, one: fn(&Json) -> Result<T, String>)
+    -> Result<Vec<T>, String> {
+    match j.get("queries") {
+        Some(qs) => {
+            let arr = qs
+                .as_arr()
+                .ok_or_else(|| "field \"queries\" must be an array"
+                    .to_string())?;
+            if arr.is_empty() {
+                return Err("field \"queries\" must be non-empty"
+                    .to_string());
+            }
+            arr.iter().map(one).collect()
+        }
+        None => Ok(vec![one(j)?]),
+    }
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<ProtoRequest, String> {
+    let j = Json::parse(line).map_err(|e| e.to_string())?;
+    let id = j.get("id").cloned().unwrap_or(Json::Null);
+    let op = j
+        .get("op")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "missing field \"op\"".to_string())?;
+    match op {
+        "counters" => Ok(ProtoRequest::Counters {
+            id,
+            queries: parse_queries(&j, parse_counter_query)?,
+        }),
+        "perf" => Ok(ProtoRequest::Perf {
+            id,
+            queries: parse_queries(&j, parse_perf_query)?,
+        }),
+        "advise" => Ok(ProtoRequest::Advise {
+            id,
+            machine: field(&j, "machine")?
+                .as_str()
+                .ok_or_else(|| "field \"machine\" must be a string"
+                    .to_string())?
+                .to_string(),
+            workload: field(&j, "workload")?
+                .as_str()
+                .ok_or_else(|| "field \"workload\" must be a string"
+                    .to_string())?
+                .to_string(),
+            threads: match j.get("threads") {
+                Some(_) => Some(usize_field(&j, "threads")?),
+                None => None,
+            },
+            top: match j.get("top") {
+                Some(_) => usize_field(&j, "top")?.max(1),
+                None => 5,
+            },
+        }),
+        "stats" => Ok(ProtoRequest::Stats { id }),
+        other => Err(format!(
+            "unknown op {other:?} (counters|perf|advise|stats)"
+        )),
+    }
+}
+
+pub fn reply_ok(id: Json, result: Json) -> Json {
+    Json::from_pairs([
+        ("id", id),
+        ("ok", Json::Bool(true)),
+        ("result", result),
+    ])
+}
+
+pub fn reply_err(id: Json, error: String) -> Json {
+    Json::from_pairs([
+        ("id", id),
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(error)),
+    ])
+}
+
+fn counters_result(served: &[Vec<[f64; 2]>]) -> Json {
+    Json::Arr(
+        served
+            .iter()
+            .map(|banks| {
+                Json::Arr(
+                    banks
+                        .iter()
+                        .map(|b| Json::from_f64_slice(&b[..]))
+                        .collect(),
+                )
+            })
+            .collect(),
+    )
+}
+
+fn perf_result(served: &[Vec<f64>]) -> Json {
+    Json::Arr(
+        served
+            .iter()
+            .map(|alloc| Json::from_f64_slice(alloc))
+            .collect(),
+    )
+}
+
+/// Shared serving context of one `serve` session.
+struct ServeContext {
+    frontend: FrontEnd,
+    client: Client,
+    registry: ModelRegistry,
+    opts: ServeOptions,
+}
+
+impl ServeContext {
+    fn execute(&self, req: ProtoRequest) -> Result<Json, String> {
+        match req {
+            ProtoRequest::Counters { queries, .. } => self
+                .client
+                .counters_many(queries)
+                .map(|served| counters_result(&served))
+                .map_err(|e| format!("{e:#}")),
+            ProtoRequest::Perf { queries, .. } => self
+                .client
+                .perf_many(queries)
+                .map(|served| perf_result(&served))
+                .map_err(|e| format!("{e:#}")),
+            ProtoRequest::Advise {
+                machine,
+                workload,
+                threads,
+                top,
+                ..
+            } => self
+                .advise(&machine, &workload, threads, top)
+                .map_err(|e| format!("{e:#}")),
+            ProtoRequest::Stats { .. } => Ok(self.stats()),
+        }
+    }
+
+    /// Serve a ranked-placement request: signature through the registry
+    /// (fit once under this server's seed, then serve forever), scoring
+    /// through the coalescing front-end.
+    fn advise(&self, machine_name: &str, workload_name: &str,
+              threads: Option<usize>, top: usize) -> Result<Json> {
+        let machine = MachineTopology::by_name(machine_name)
+            .ok_or_else(|| {
+                anyhow::anyhow!("unknown machine {machine_name:?}")
+            })?;
+        let w = workloads::find(workload_name).ok_or_else(|| {
+            anyhow::anyhow!("unknown workload {workload_name:?}")
+        })?;
+        let seed = self.opts.seed;
+        let sig = self.registry.get_or_fit(
+            &machine.name,
+            &w.name,
+            seed,
+            || {
+                let sim = Simulator::new(
+                    machine.clone(),
+                    SimConfig::default().with_seed(seed),
+                );
+                let pair = profile(&sim, &w);
+                Ok(self
+                    .frontend
+                    .service()
+                    .fit(&[FitRequest {
+                        sym: pair.sym,
+                        asym: pair.asym,
+                    }])?
+                    .pop()
+                    .expect("one signature per fit request"))
+            },
+        )?;
+        let total = threads.unwrap_or(machine.cores_per_socket);
+        let advice =
+            advisor::advise(&self.client, &machine, &w, &sig, total)?;
+        let ranked = advice
+            .ranked
+            .iter()
+            .take(top)
+            .map(|s| {
+                Json::from_pairs([
+                    (
+                        "threads",
+                        Json::Arr(
+                            s.placement
+                                .threads_per_socket
+                                .iter()
+                                .map(|&t| Json::Num(t as f64))
+                                .collect(),
+                        ),
+                    ),
+                    ("predicted_bw", Json::Num(s.predicted_bw)),
+                    ("satisfaction", Json::Num(s.satisfaction())),
+                    ("qpi_headroom", Json::Num(s.qpi_headroom)),
+                ])
+            })
+            .collect();
+        Ok(Json::from_pairs([
+            ("machine", Json::Str(advice.machine)),
+            ("workload", Json::Str(advice.workload)),
+            ("candidates", Json::Num(advice.ranked.len() as f64)),
+            ("ranked", Json::Arr(ranked)),
+        ]))
+    }
+
+    fn stats(&self) -> Json {
+        let cache = self.frontend.service().cache_stats();
+        let caches = Json::from_pairs([
+            ("matrix", counters_json(&cache.matrix)),
+            ("counter", counters_json(&cache.counter)),
+            ("perf", counters_json(&cache.perf)),
+            ("registry", counters_json(&self.registry.stats())),
+        ]);
+        Json::from_pairs([
+            ("frontend", self.frontend.metrics().snapshot().to_json()),
+            ("caches", caches),
+            (
+                "registry_entries",
+                Json::Num(self.registry.len() as f64),
+            ),
+        ])
+    }
+}
+
+/// Handle one input line, producing exactly one reply line.
+fn handle_line(ctx: &ServeContext, line: &str) -> Json {
+    match parse_request(line) {
+        Err(e) => reply_err(Json::Null, e),
+        Ok(req) => {
+            let id = req.id().clone();
+            match ctx.execute(req) {
+                Ok(result) => reply_ok(id, result),
+                Err(e) => reply_err(id, e),
+            }
+        }
+    }
+}
+
+/// The `numabw serve` loop: read JSONL requests from `input`, write one
+/// JSONL reply per request to `out` (in order), until EOF.  Returns the
+/// shutdown summary it also prints to stderr.
+pub fn serve_lines<R: BufRead, W: Write>(svc: PredictionService,
+                                         opts: ServeOptions, input: R,
+                                         out: &mut W) -> Result<String> {
+    let registry = match &opts.store {
+        Some(path) => ModelRegistry::open(path, DEFAULT_REGISTRY_CAP)?,
+        None => ModelRegistry::in_memory(DEFAULT_REGISTRY_CAP),
+    };
+    let frontend = FrontEnd::start(
+        svc,
+        FrontEndConfig {
+            batch_size: opts.batch_size,
+            window: opts.window,
+        },
+    );
+    let client = frontend.client();
+    let ctx = ServeContext {
+        frontend,
+        client,
+        registry,
+        opts,
+    };
+    for line in input.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = handle_line(&ctx, &line);
+        writeln!(out, "{}", reply.encode())?;
+        out.flush()?;
+    }
+    let snap = ctx.frontend.metrics().snapshot();
+    let stats = ctx.frontend.service().cache_stats();
+    let summary = format!(
+        "numabw serve: {} requests / {} queries; {} flushes (size {}, \
+         deadline {}, drain {}; mean coalesced batch {:.1}); {} registry \
+         entries\n{}",
+        snap.requests,
+        snap.queries,
+        snap.flushes(),
+        snap.flushes_size,
+        snap.flushes_deadline,
+        snap.flushes_drain,
+        snap.mean_batch(),
+        ctx.registry.len(),
+        cache_table(&stats, &ctx.registry.stats()),
+    );
+    let ServeContext { frontend, client, .. } = ctx;
+    drop(client);
+    frontend.shutdown();
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SIG: &str = "{\"static\":0.2,\"local\":0.35,\"perthread\":0.3,\
+                       \"static_socket\":1,\"misfit\":0}";
+
+    fn serve_str(input: &str, opts: ServeOptions) -> String {
+        let mut out = Vec::new();
+        serve_lines(PredictionService::reference(), opts,
+                    input.as_bytes(), &mut out)
+            .unwrap();
+        String::from_utf8(out).unwrap()
+    }
+
+    #[test]
+    fn parses_all_ops() {
+        let c = format!(
+            "{{\"id\":1,\"op\":\"counters\",\"sig\":{SIG},\
+             \"threads\":[3,1],\"cpu_totals\":[3.0,1.0]}}"
+        );
+        assert!(matches!(parse_request(&c).unwrap(),
+                         ProtoRequest::Counters { .. }));
+        let p = format!(
+            "{{\"op\":\"perf\",\"sig\":{SIG},\"threads\":[6,2],\
+             \"demand_pt\":[2e9,1e9],\
+             \"caps\":[44e9,44e9,30e9,30e9,7e9,7e9,6.9e9,6.9e9]}}"
+        );
+        assert!(matches!(parse_request(&p).unwrap(),
+                         ProtoRequest::Perf { .. }));
+        let a = "{\"id\":\"x\",\"op\":\"advise\",\"machine\":\"xeon8\",\
+                 \"workload\":\"cg\",\"top\":3}";
+        match parse_request(a).unwrap() {
+            ProtoRequest::Advise { id, top, threads, .. } => {
+                assert_eq!(id, Json::Str("x".to_string()));
+                assert_eq!(top, 3);
+                assert_eq!(threads, None);
+            }
+            _ => panic!("expected advise"),
+        }
+        assert!(matches!(parse_request("{\"op\":\"stats\"}").unwrap(),
+                         ProtoRequest::Stats { .. }));
+    }
+
+    #[test]
+    fn parse_errors_are_descriptive() {
+        assert!(parse_request("not json").unwrap_err().contains("json"));
+        assert!(parse_request("{}").unwrap_err().contains("op"));
+        assert!(parse_request("{\"op\":\"nope\"}")
+            .unwrap_err()
+            .contains("unknown op"));
+        let missing = format!(
+            "{{\"op\":\"counters\",\"sig\":{SIG},\"threads\":[1,1]}}"
+        );
+        assert!(parse_request(&missing)
+            .unwrap_err()
+            .contains("cpu_totals"));
+        assert!(parse_request(
+            "{\"op\":\"counters\",\"queries\":[]}"
+        )
+        .unwrap_err()
+        .contains("non-empty"));
+        // Fractional / negative thread counts must be rejected, not
+        // silently floored or clamped.
+        let frac = format!(
+            "{{\"op\":\"counters\",\"sig\":{SIG},\"threads\":[2.7,-1],\
+             \"cpu_totals\":[1.0,1.0]}}"
+        );
+        assert!(parse_request(&frac)
+            .unwrap_err()
+            .contains("non-negative integers"));
+        let neg_top = "{\"op\":\"advise\",\"machine\":\"xeon8\",\
+                       \"workload\":\"cg\",\"top\":-3}";
+        assert!(parse_request(neg_top)
+            .unwrap_err()
+            .contains("non-negative integers"));
+    }
+
+    #[test]
+    fn serve_loop_answers_in_order_and_isolates_errors() {
+        let transcript = format!(
+            "{{\"id\":1,\"op\":\"counters\",\"sig\":{SIG},\
+             \"threads\":[3,1],\"cpu_totals\":[3.0,1.0]}}\n\
+             this is not json\n\
+             \n\
+             {{\"id\":3,\"op\":\"stats\"}}\n"
+        );
+        let out = serve_str(&transcript, ServeOptions::default());
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 3, "{out}");
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(first.get("id"), Some(&Json::Num(1.0)));
+        // The §6.2.2 spot values pinned in the service tests.
+        let banks = first.get("result").unwrap().as_arr().unwrap()[0]
+            .as_arr()
+            .unwrap();
+        let b0 = banks[0].as_f64_vec().unwrap();
+        assert!((b0[0] - 1.95).abs() < 1e-9, "{out}");
+        let second = Json::parse(lines[1]).unwrap();
+        assert_eq!(second.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(second.get("id"), Some(&Json::Null));
+        let third = Json::parse(lines[2]).unwrap();
+        assert_eq!(third.get("ok"), Some(&Json::Bool(true)));
+        let frontend = third.get("result").unwrap().get("frontend")
+            .unwrap();
+        assert_eq!(frontend.get("queries"), Some(&Json::Num(1.0)));
+    }
+
+    #[test]
+    fn query_blocks_share_one_request() {
+        let transcript = format!(
+            "{{\"id\":7,\"op\":\"perf\",\"queries\":[\
+             {{\"sig\":{SIG},\"threads\":[6,2],\"demand_pt\":[2e9,1e9],\
+             \"caps\":[44e9,44e9,30e9,30e9,7e9,7e9,6.9e9,6.9e9]}},\
+             {{\"sig\":{SIG},\"threads\":[6,2],\"demand_pt\":[2e9,1e9],\
+             \"caps\":[44e9,44e9,30e9,30e9,7e9,7e9,6.9e9,6.9e9]}}]}}\n"
+        );
+        let out = serve_str(&transcript, ServeOptions::default());
+        let reply = Json::parse(out.lines().next().unwrap()).unwrap();
+        assert_eq!(reply.get("ok"), Some(&Json::Bool(true)));
+        let results = reply.get("result").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        // Identical queries in one batch: identical allocations.
+        assert_eq!(results[0], results[1]);
+        assert_eq!(results[0].as_f64_vec().unwrap().len(), 8);
+    }
+
+    #[test]
+    fn advise_op_serves_through_registry_and_frontend() {
+        let transcript =
+            "{\"id\":1,\"op\":\"advise\",\"machine\":\"xeon8\",\
+             \"workload\":\"cg\",\"threads\":8,\"top\":2}\n\
+             {\"id\":2,\"op\":\"advise\",\"machine\":\"xeon8\",\
+             \"workload\":\"cg\",\"threads\":8,\"top\":2}\n";
+        let out = serve_str(transcript, ServeOptions::default());
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 2);
+        // Fit-once: both replies identical (registry served the second).
+        let a = Json::parse(lines[0]).unwrap();
+        let b = Json::parse(lines[1]).unwrap();
+        assert_eq!(a.get("ok"), Some(&Json::Bool(true)), "{out}");
+        assert_eq!(a.get("result"), b.get("result"));
+        let ranked = a.get("result").unwrap().get("ranked").unwrap()
+            .as_arr().unwrap();
+        assert_eq!(ranked.len(), 2);
+        // And the ranking matches the in-process advisor end to end.
+        let svc = PredictionService::reference();
+        let machine = MachineTopology::by_name("xeon8").unwrap();
+        let w = workloads::find("cg").unwrap();
+        let sim = Simulator::new(machine.clone(), SimConfig::default());
+        let pair = profile(&sim, &w);
+        let sig = svc
+            .fit(&[FitRequest { sym: pair.sym, asym: pair.asym }])
+            .unwrap()
+            .pop()
+            .unwrap();
+        let advice = advisor::advise(&svc, &machine, &w, &sig, 8).unwrap();
+        let want: Vec<f64> = advice.best().placement.threads_per_socket
+            .iter().map(|&t| t as f64).collect();
+        assert_eq!(ranked[0].get("threads").unwrap().as_f64_vec().unwrap(),
+                   want);
+    }
+}

@@ -1,0 +1,336 @@
+//! Store-backed model registry: fitted signatures served out of a
+//! bounded, signature-keyed LRU in front of the on-disk
+//! [`SignatureStore`], with machine+seed invalidation — the
+//! fit-once-serve-forever layer behind `numabw advise --store` and the
+//! `serve` daemon's `advise` op.
+//!
+//! Resolution order for `(machine, workload)`:
+//!
+//! 1. the in-memory LRU (recency-defined eviction, counters exposed via
+//!    [`ModelRegistry::stats`]);
+//! 2. the backing store (loaded once at open; hydrates the LRU);
+//! 3. a caller-supplied `fit` closure ([`ModelRegistry::get_or_fit`]),
+//!    whose result is registered, persisted (when store-backed), and
+//!    stamped with the fit seed.
+//!
+//! Invalidation: a store records the simulator seed each machine's
+//! signatures were fitted with.  A request under a different seed is a
+//! different world — the registry refuses it with a clear error instead
+//! of serving a stale model ([`ModelRegistry::get`] / `get_or_fit`).
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::SignatureStore;
+use crate::model::signature::BandwidthSignature;
+use crate::util::lru::{CacheCounters, Lru};
+
+/// Default LRU bound: fleets serve a few machines × a few dozen
+/// workloads; 256 hot signatures is plenty and keeps eviction exercised.
+pub const DEFAULT_REGISTRY_CAP: usize = 256;
+
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct RegistryKey {
+    machine: String,
+    workload: String,
+}
+
+struct Inner {
+    store: SignatureStore,
+    cache: Lru<RegistryKey, Arc<BandwidthSignature>>,
+}
+
+pub struct ModelRegistry {
+    store_path: Option<PathBuf>,
+    inner: Mutex<Inner>,
+}
+
+impl ModelRegistry {
+    /// A registry with no backing file: signatures live only in the LRU
+    /// (and the in-memory store behind it).
+    pub fn in_memory(cap: usize) -> ModelRegistry {
+        ModelRegistry {
+            store_path: None,
+            inner: Mutex::new(Inner {
+                store: SignatureStore::new(),
+                cache: Lru::new(cap),
+            }),
+        }
+    }
+
+    /// Open a store-backed registry.  A missing file is an empty store
+    /// (it is created on the first persisted fit); a malformed file is an
+    /// error.
+    pub fn open(path: &Path, cap: usize) -> Result<ModelRegistry> {
+        let store = if path.exists() {
+            SignatureStore::load(path)?
+        } else {
+            SignatureStore::new()
+        };
+        Ok(ModelRegistry {
+            store_path: Some(path.to_path_buf()),
+            inner: Mutex::new(Inner {
+                store,
+                cache: Lru::new(cap),
+            }),
+        })
+    }
+
+    /// Number of signatures known (store-resident, not just LRU-hot).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().store.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// LRU hit/miss/eviction counters.
+    pub fn stats(&self) -> CacheCounters {
+        self.inner.lock().unwrap().cache.counters()
+    }
+
+    /// The recorded fit seed for `machine`, if any.
+    pub fn seed_of(&self, machine: &str) -> Option<u64> {
+        self.inner.lock().unwrap().store.seed(machine)
+    }
+
+    fn check_seed(store: &SignatureStore, path: Option<&Path>,
+                  machine: &str, seed: u64) -> Result<()> {
+        if let Some(recorded) = store.seed(machine) {
+            if recorded != seed {
+                let whence = path
+                    .map(|p| p.display().to_string())
+                    .unwrap_or_else(|| "registry".to_string());
+                bail!(
+                    "{whence}: signatures for {machine} were fitted with \
+                     seed {recorded}, but this request uses seed {seed}; \
+                     pass --seed {recorded} or refit the store \
+                     (`numabw fit --save`)"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Strict lookup: LRU, then store.  Errors on a seed mismatch or a
+    /// missing signature (with refit guidance).
+    pub fn get(&self, machine: &str, workload: &str, seed: u64)
+        -> Result<Arc<BandwidthSignature>> {
+        let mut inner = self.inner.lock().unwrap();
+        Self::check_seed(&inner.store, self.store_path.as_deref(), machine,
+                         seed)?;
+        let key = RegistryKey {
+            machine: machine.to_string(),
+            workload: workload.to_string(),
+        };
+        if let Some(sig) = inner.cache.get(&key) {
+            return Ok(sig.clone());
+        }
+        match inner.store.get(machine, workload) {
+            Some(sig) => {
+                let sig = Arc::new(*sig);
+                inner.cache.insert(key, sig.clone());
+                Ok(sig)
+            }
+            None => Err(anyhow!(
+                "no fitted signature for {machine}/{workload} — run \
+                 `numabw fit --workload {workload} --machine {machine} \
+                 --save <store>` first",
+            )),
+        }
+    }
+
+    /// Lookup with a fit fallback: on a registry miss, run `fit` once,
+    /// register the result, stamp the machine's fit seed, and persist when
+    /// store-backed.  Subsequent calls (and subsequent processes, for
+    /// store-backed registries) serve the stored signature without
+    /// refitting.
+    ///
+    /// Concurrent cold misses on the same key may each run `fit` (the fit
+    /// is deterministic, so results agree); the first insert wins and
+    /// later racers adopt it, so the store is persisted once per world.
+    pub fn get_or_fit<F>(&self, machine: &str, workload: &str, seed: u64,
+                         fit: F) -> Result<Arc<BandwidthSignature>>
+    where
+        F: FnOnce() -> Result<BandwidthSignature>,
+    {
+        match self.get(machine, workload, seed) {
+            Ok(sig) => return Ok(sig),
+            // A seed mismatch must not be papered over by refitting into
+            // the same store; only a genuine miss falls through.
+            Err(e) if self.seed_conflict(machine, seed) => return Err(e),
+            Err(_) => {}
+        }
+        // Fit outside the lock: profiling + fitting is the expensive part.
+        let sig = fit()?;
+        let mut inner = self.inner.lock().unwrap();
+        // Re-validate after reacquiring the lock: a racer under a
+        // different seed may have stamped the machine while we fitted.
+        Self::check_seed(&inner.store, self.store_path.as_deref(), machine,
+                         seed)?;
+        let key = RegistryKey {
+            machine: machine.to_string(),
+            workload: workload.to_string(),
+        };
+        // Double-check after reacquiring the lock: a racing caller may
+        // have registered the key while we were fitting.
+        if let Some(existing) = inner.store.get(machine, workload) {
+            let existing = Arc::new(*existing);
+            inner.cache.insert(key, existing.clone());
+            return Ok(existing);
+        }
+        // The machine's seed metadata certifies ALL its stored
+        // signatures.  Signatures from a legacy (seed-less) store were
+        // fitted in an unverifiable world — drop them rather than
+        // certify them under this seed, which would defeat the guard.
+        let legacy = inner.store.seed(machine).is_none()
+            && !inner.store.workloads(machine).is_empty();
+        if legacy {
+            inner.store.remove_machine(machine);
+            inner.cache.clear();
+        }
+        inner.store.insert(machine, workload, sig);
+        inner.store.set_seed(machine, seed);
+        let sig = Arc::new(sig);
+        inner.cache.insert(key, sig.clone());
+        if let Some(path) = &self.store_path {
+            inner.store.save(path)?;
+        }
+        Ok(sig)
+    }
+
+    fn seed_conflict(&self, machine: &str, seed: u64) -> bool {
+        self.seed_of(machine).is_some_and(|s| s != seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::signature::ChannelSignature;
+
+    fn sig(tag: f64) -> BandwidthSignature {
+        BandwidthSignature {
+            read: ChannelSignature::new(0.2, 0.3, tag, 1),
+            write: ChannelSignature::new(0.1, 0.5, 0.2, 0),
+            combined: ChannelSignature::new(0.15, 0.4, 0.25, 1),
+            read_bytes: 1e9,
+            write_bytes: 5e8,
+        }
+    }
+
+    #[test]
+    fn fit_once_then_serve_from_cache() {
+        let reg = ModelRegistry::in_memory(8);
+        let mut fits = 0;
+        for _ in 0..3 {
+            let got = reg
+                .get_or_fit("xeon8", "cg", 7, || {
+                    fits += 1;
+                    Ok(sig(0.25))
+                })
+                .unwrap();
+            assert_eq!(*got, sig(0.25));
+        }
+        assert_eq!(fits, 1, "fit must run exactly once");
+        let stats = reg.stats();
+        assert!(stats.hits >= 2);
+        assert_eq!(reg.seed_of("xeon8"), Some(7));
+    }
+
+    #[test]
+    fn seed_mismatch_errors_and_does_not_refit() {
+        let reg = ModelRegistry::in_memory(8);
+        reg.get_or_fit("xeon8", "cg", 7, || Ok(sig(0.25))).unwrap();
+        let err = reg
+            .get_or_fit("xeon8", "cg", 8, || {
+                panic!("must not refit across a seed mismatch")
+            })
+            .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("seed 7") && msg.contains("seed 8"), "{msg}");
+        // Strict get too.
+        assert!(reg.get("xeon8", "cg", 8).is_err());
+        // Another machine is unaffected.
+        reg.get_or_fit("xeon18", "cg", 8, || Ok(sig(0.5))).unwrap();
+    }
+
+    #[test]
+    fn missing_signature_error_carries_guidance() {
+        let reg = ModelRegistry::in_memory(8);
+        let err = reg.get("xeon18", "mg", 7).unwrap_err();
+        assert!(format!("{err}").contains("numabw fit"), "{err}");
+    }
+
+    #[test]
+    fn store_backed_registry_persists_across_opens() {
+        let dir = std::env::temp_dir().join("numabw-registry-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("reg.json");
+        std::fs::remove_file(&path).ok();
+        {
+            let reg = ModelRegistry::open(&path, 8).unwrap();
+            assert!(reg.is_empty());
+            reg.get_or_fit("xeon8", "ft", 42, || Ok(sig(0.3))).unwrap();
+        }
+        {
+            let reg = ModelRegistry::open(&path, 8).unwrap();
+            assert_eq!(reg.len(), 1);
+            let got = reg
+                .get_or_fit("xeon8", "ft", 42, || {
+                    panic!("second process must serve from the store")
+                })
+                .unwrap();
+            assert_eq!(*got, sig(0.3));
+            // And the persisted seed still guards.
+            assert!(reg.get("xeon8", "ft", 43).is_err());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn stamping_a_seed_drops_unverifiable_legacy_signatures() {
+        // A PR-1-era store: signatures, no seed metadata.
+        let dir = std::env::temp_dir().join("numabw-registry-legacy");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("legacy.json");
+        let mut legacy = crate::coordinator::SignatureStore::new();
+        legacy.insert("m", "cg", sig(0.1));
+        legacy.save(&path).unwrap();
+
+        let reg = ModelRegistry::open(&path, 8).unwrap();
+        // Legacy signatures stay serveable while no seed is recorded
+        // (documented legacy behavior) — this also hydrates the LRU.
+        assert!(reg.get("m", "cg", 7).is_ok());
+        // Fitting a new workload under seed 7 must NOT certify the
+        // legacy cg signature as seed-7: it is dropped instead.
+        reg.get_or_fit("m", "zz", 7, || Ok(sig(0.9))).unwrap();
+        assert_eq!(reg.seed_of("m"), Some(7));
+        assert!(reg.get("m", "cg", 7).is_err(),
+                "legacy signature must be dropped, not certified");
+        // And the drop survived persistence.
+        let reloaded = ModelRegistry::open(&path, 8).unwrap();
+        assert!(reloaded.get("m", "cg", 7).is_err());
+        assert!(reloaded.get("m", "zz", 7).is_ok());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn lru_evicts_but_store_retains() {
+        let reg = ModelRegistry::in_memory(2);
+        for (i, w) in ["a", "b", "c", "d"].iter().enumerate() {
+            reg.get_or_fit("m", w, 1, || Ok(sig(0.1 * i as f64)))
+                .unwrap();
+        }
+        assert!(reg.stats().evictions >= 2);
+        assert_eq!(reg.len(), 4, "eviction must not lose store entries");
+        // Evicted entries re-hydrate from the store without refitting.
+        let got = reg
+            .get_or_fit("m", "a", 1, || panic!("store must rehydrate"))
+            .unwrap();
+        assert_eq!(*got, sig(0.0));
+    }
+}

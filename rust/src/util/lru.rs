@@ -1,0 +1,346 @@
+//! Deterministic LRU cache: the shared serving-cache substrate (the
+//! crates.io `lru` crate is not in the offline vendor set).
+//!
+//! Determinism contract: eviction order is **recency-defined** — the entry
+//! touched longest ago is evicted first, and recency is tracked with an
+//! intrusive doubly-linked list over a slab, so eviction never depends on
+//! `HashMap` iteration (hash) order.  Replaying the same sequence of
+//! `get`/`insert` calls reproduces the same evictions byte-for-byte, which
+//! is what lets the serving layer keep its bit-identity guarantee while
+//! staying bounded.
+//!
+//! Every cache carries its own hit/miss/eviction counters
+//! ([`CacheCounters`]) so the serving layer can report per-cache hit rates
+//! instead of one aggregate number.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+/// Monotonic per-cache counters (since cache construction).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheCounters {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl CacheCounters {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Hit fraction in [0, 1]; 0 when the cache was never queried.
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+
+    /// Component-wise sum (for aggregate reporting).
+    pub fn merged(&self, other: &CacheCounters) -> CacheCounters {
+        CacheCounters {
+            hits: self.hits + other.hits,
+            misses: self.misses + other.misses,
+            evictions: self.evictions + other.evictions,
+        }
+    }
+}
+
+const NIL: usize = usize::MAX;
+
+struct Node<K, V> {
+    key: K,
+    value: V,
+    prev: usize,
+    next: usize,
+}
+
+/// Bounded map with least-recently-used eviction.
+///
+/// `get` promotes the entry to most-recently-used and counts a hit;
+/// a lookup of an absent key counts a miss.  `insert` beyond capacity
+/// evicts the least-recently-used entry and returns it.
+pub struct Lru<K, V> {
+    map: HashMap<K, usize>,
+    nodes: Vec<Option<Node<K, V>>>,
+    free: Vec<usize>,
+    /// Most-recently-used node (NIL when empty).
+    head: usize,
+    /// Least-recently-used node (NIL when empty).
+    tail: usize,
+    cap: usize,
+    counters: CacheCounters,
+}
+
+impl<K: Eq + Hash + Clone, V> Lru<K, V> {
+    pub fn new(cap: usize) -> Lru<K, V> {
+        assert!(cap >= 1, "LRU capacity must be at least 1");
+        Lru {
+            map: HashMap::new(),
+            nodes: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            cap,
+            counters: CacheCounters::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn counters(&self) -> CacheCounters {
+        self.counters
+    }
+
+    fn node(&self, i: usize) -> &Node<K, V> {
+        self.nodes[i].as_ref().expect("live LRU node")
+    }
+
+    fn node_mut(&mut self, i: usize) -> &mut Node<K, V> {
+        self.nodes[i].as_mut().expect("live LRU node")
+    }
+
+    fn unlink(&mut self, i: usize) {
+        let (prev, next) = {
+            let n = self.node(i);
+            (n.prev, n.next)
+        };
+        if prev == NIL {
+            self.head = next;
+        } else {
+            self.node_mut(prev).next = next;
+        }
+        if next == NIL {
+            self.tail = prev;
+        } else {
+            self.node_mut(next).prev = prev;
+        }
+    }
+
+    fn push_front(&mut self, i: usize) {
+        let old_head = self.head;
+        {
+            let n = self.node_mut(i);
+            n.prev = NIL;
+            n.next = old_head;
+        }
+        if old_head != NIL {
+            self.node_mut(old_head).prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+
+    /// Look up `k`, promoting it to most-recently-used on a hit.
+    pub fn get(&mut self, k: &K) -> Option<&V> {
+        match self.map.get(k).copied() {
+            Some(i) => {
+                self.counters.hits += 1;
+                self.unlink(i);
+                self.push_front(i);
+                Some(&self.node(i).value)
+            }
+            None => {
+                self.counters.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Look up `k` without touching recency or counters.
+    pub fn peek(&self, k: &K) -> Option<&V> {
+        self.map.get(k).map(|&i| &self.node(i).value)
+    }
+
+    /// Insert (or refresh) `k`.  Returns the evicted least-recently-used
+    /// entry if the insertion pushed the cache past capacity.
+    pub fn insert(&mut self, k: K, v: V) -> Option<(K, V)> {
+        if let Some(&i) = self.map.get(&k) {
+            self.node_mut(i).value = v;
+            self.unlink(i);
+            self.push_front(i);
+            return None;
+        }
+        let evicted = if self.map.len() >= self.cap {
+            let t = self.tail;
+            self.unlink(t);
+            let node = self.nodes[t].take().expect("live LRU tail");
+            self.map.remove(&node.key);
+            self.free.push(t);
+            self.counters.evictions += 1;
+            Some((node.key, node.value))
+        } else {
+            None
+        };
+        let slot = match self.free.pop() {
+            Some(i) => {
+                self.nodes[i] = Some(Node {
+                    key: k.clone(),
+                    value: v,
+                    prev: NIL,
+                    next: NIL,
+                });
+                i
+            }
+            None => {
+                self.nodes.push(Some(Node {
+                    key: k.clone(),
+                    value: v,
+                    prev: NIL,
+                    next: NIL,
+                }));
+                self.nodes.len() - 1
+            }
+        };
+        self.map.insert(k, slot);
+        self.push_front(slot);
+        evicted
+    }
+
+    /// Drop every entry (administrative invalidation — counters are
+    /// preserved, and nothing is recorded as an eviction).
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.nodes.clear();
+        self.free.clear();
+        self.head = NIL;
+        self.tail = NIL;
+    }
+
+    /// Keys from most- to least-recently-used (test/debug aid; this is the
+    /// reverse of eviction order).
+    pub fn keys_by_recency(&self) -> Vec<K> {
+        let mut out = Vec::with_capacity(self.map.len());
+        let mut i = self.head;
+        while i != NIL {
+            let n = self.node(i);
+            out.push(n.key.clone());
+            i = n.next;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_hits_and_misses_count() {
+        let mut c: Lru<u32, u32> = Lru::new(4);
+        c.insert(1, 10);
+        assert_eq!(c.get(&1), Some(&10));
+        assert_eq!(c.get(&2), None);
+        let ctr = c.counters();
+        assert_eq!((ctr.hits, ctr.misses, ctr.evictions), (1, 1, 0));
+        assert!((ctr.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eviction_is_least_recently_used() {
+        let mut c: Lru<&str, u32> = Lru::new(3);
+        c.insert("a", 1);
+        c.insert("b", 2);
+        c.insert("c", 3);
+        // Touch "a": now "b" is least recent.
+        assert!(c.get(&"a").is_some());
+        let evicted = c.insert("d", 4);
+        assert_eq!(evicted, Some(("b", 2)));
+        assert_eq!(c.keys_by_recency(), vec!["d", "a", "c"]);
+        assert_eq!(c.counters().evictions, 1);
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn eviction_order_is_insertion_order_without_gets() {
+        let mut c: Lru<u64, u64> = Lru::new(2);
+        // Keys chosen to collide/disorder under typical hashing; the list,
+        // not the hash, must define eviction order.
+        c.insert(0xDEAD_BEEF, 1);
+        c.insert(0x0000_0001, 2);
+        assert_eq!(c.insert(0xFFFF_FFFF, 3),
+                   Some((0xDEAD_BEEF, 1)));
+        assert_eq!(c.insert(0x1234_5678, 4),
+                   Some((0x0000_0001, 2)));
+    }
+
+    #[test]
+    fn reinsert_refreshes_value_and_recency() {
+        let mut c: Lru<u8, u8> = Lru::new(2);
+        c.insert(1, 1);
+        c.insert(2, 2);
+        c.insert(1, 9); // refresh, no eviction
+        assert_eq!(c.counters().evictions, 0);
+        assert_eq!(c.insert(3, 3), Some((2, 2)));
+        assert_eq!(c.peek(&1), Some(&9));
+    }
+
+    #[test]
+    fn peek_does_not_touch_counters_or_recency() {
+        let mut c: Lru<u8, u8> = Lru::new(2);
+        c.insert(1, 1);
+        c.insert(2, 2);
+        assert_eq!(c.peek(&1), Some(&1));
+        assert_eq!(c.counters().lookups(), 0);
+        // "1" was peeked, not promoted: still the eviction victim.
+        assert_eq!(c.insert(3, 3), Some((1, 1)));
+    }
+
+    #[test]
+    fn capacity_one_always_replaces() {
+        let mut c: Lru<u8, u8> = Lru::new(1);
+        assert_eq!(c.insert(1, 1), None);
+        assert_eq!(c.insert(2, 2), Some((1, 1)));
+        assert_eq!(c.insert(3, 3), Some((2, 2)));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn slab_slots_are_reused() {
+        let mut c: Lru<u32, u32> = Lru::new(2);
+        for i in 0..100 {
+            c.insert(i, i);
+        }
+        // 100 inserts through a capacity-2 cache must not grow the slab
+        // beyond capacity.
+        assert!(c.nodes.len() <= 2 + 1);
+        assert_eq!(c.counters().evictions, 98);
+    }
+
+    #[test]
+    fn clear_empties_but_keeps_counters() {
+        let mut c: Lru<u8, u8> = Lru::new(2);
+        c.insert(1, 1);
+        assert!(c.get(&1).is_some());
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.get(&1), None);
+        let ctr = c.counters();
+        assert_eq!((ctr.hits, ctr.misses, ctr.evictions), (1, 1, 0));
+        // Reusable after clearing.
+        c.insert(2, 2);
+        assert_eq!(c.peek(&2), Some(&2));
+    }
+
+    #[test]
+    fn merged_counters_sum() {
+        let a = CacheCounters { hits: 1, misses: 2, evictions: 3 };
+        let b = CacheCounters { hits: 10, misses: 20, evictions: 30 };
+        let m = a.merged(&b);
+        assert_eq!((m.hits, m.misses, m.evictions), (11, 22, 33));
+    }
+}

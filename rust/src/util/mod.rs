@@ -1,8 +1,10 @@
 //! Self-contained substrates the offline build cannot pull from crates.io:
-//! PRNG, JSON, CLI args, statistics, and a benchmark harness.
+//! PRNG, JSON, CLI args, statistics, a deterministic LRU cache, and a
+//! benchmark harness.
 
 pub mod args;
 pub mod bench;
 pub mod json;
+pub mod lru;
 pub mod rng;
 pub mod stats;

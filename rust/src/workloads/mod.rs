@@ -13,3 +13,11 @@ pub mod suite;
 pub mod synthetic;
 
 pub use spec::{Heterogeneity, Mixture, Suite, WorkloadSpec};
+
+/// Resolve a workload by name across the Table-1 suite and the §6.1
+/// synthetics (the lookup every serving entry point — CLI flags and the
+/// `serve` protocol — shares).
+pub fn find(name: &str) -> Option<WorkloadSpec> {
+    suite::by_name(name)
+        .or_else(|| synthetic::all(0).into_iter().find(|w| w.name == name))
+}

@@ -1,0 +1,289 @@
+//! Integration tests for the `server` subsystem:
+//!
+//! * the concurrent coalescing front-end returns bit-identical
+//!   predictions to serial per-query serving, under ≥8 client threads and
+//!   ≥1024 queries, on both paper machines;
+//! * a lone request is answered by the deadline flush (it never waits for
+//!   a full batch);
+//! * advising through a `server::Client` is bit-identical to advising
+//!   against the in-process service;
+//! * the JSONL smoke transcript reproduces its golden reply file (the
+//!   same pair CI pipes through the release binary).
+
+use std::time::{Duration, Instant};
+
+use numabw::coordinator::{
+    advisor, profile, FitRequest, PerfQuery, PredictionService,
+};
+use numabw::model::signature::ChannelSignature;
+use numabw::prelude::*;
+use numabw::server::{
+    serve_lines, FrontEnd, FrontEndConfig, ServeOptions,
+};
+use numabw::util::rng::Rng;
+use numabw::workloads;
+
+/// Deterministic stream of perf queries with placement repeats (the
+/// advisor's production shape: a bounded placement set, many askers).
+fn perf_stream(machine: &MachineTopology, n: usize, seed: u64)
+    -> Vec<PerfQuery> {
+    let caps: [f64; 8] = machine.capacities().try_into().unwrap();
+    let splits =
+        ThreadPlacement::all_splits(machine, machine.cores_per_socket);
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let p = &splits[i % splits.len()];
+            let a = rng.uniform(0.0, 0.5);
+            let l = rng.uniform(0.0, (1.0 - a) * 0.8);
+            // A small signature pool: forces both cache hits and misses.
+            let sig = if i % 3 == 0 {
+                ChannelSignature::new(0.2, 0.35, 0.3, 1)
+            } else {
+                ChannelSignature::new(a, l, 0.1, (i % 2) as usize)
+            };
+            PerfQuery {
+                sig,
+                threads: [p.threads_per_socket[0], p.threads_per_socket[1]],
+                demand_pt: [2.0e9, 1.0e9],
+                caps,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn coalesced_frontend_bit_identical_to_serial_on_both_machines() {
+    const THREADS: usize = 8;
+    const PER_THREAD: usize = 128; // 8 * 128 = 1024 queries per machine
+    for machine in MachineTopology::paper_machines() {
+        let queries = perf_stream(&machine, THREADS * PER_THREAD, 0x5E21);
+        // Serial per-query oracle: one unbatched backend call per query.
+        let oracle = PredictionService::reference();
+        let serial: Vec<Vec<f64>> = queries
+            .iter()
+            .map(|q| {
+                oracle
+                    .predict_performance(std::slice::from_ref(q))
+                    .unwrap()
+                    .pop()
+                    .unwrap()
+            })
+            .collect();
+        // Concurrent coalesced path: 8 client threads hammering one
+        // front-end, one query per request (maximum interleaving).
+        let fe = FrontEnd::start(
+            PredictionService::reference(),
+            FrontEndConfig {
+                batch_size: Some(64),
+                window: Duration::from_micros(200),
+            },
+        );
+        let mut results: Vec<Vec<Vec<f64>>> =
+            (0..THREADS).map(|_| Vec::new()).collect();
+        std::thread::scope(|scope| {
+            for (t, slot) in results.iter_mut().enumerate() {
+                let client = fe.client();
+                let chunk =
+                    &queries[t * PER_THREAD..(t + 1) * PER_THREAD];
+                scope.spawn(move || {
+                    *slot = chunk
+                        .iter()
+                        .map(|q| client.perf(q.clone()).unwrap())
+                        .collect();
+                });
+            }
+        });
+        let snap = fe.metrics().snapshot();
+        assert_eq!(snap.queries, (THREADS * PER_THREAD) as u64);
+        assert_eq!(snap.requests, (THREADS * PER_THREAD) as u64);
+        assert!(snap.flushes() >= 1);
+        fe.shutdown();
+        for (t, got) in results.iter().enumerate() {
+            let want = &serial[t * PER_THREAD..(t + 1) * PER_THREAD];
+            assert_eq!(got.len(), want.len());
+            for (i, (a, b)) in got.iter().zip(want).enumerate() {
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{}: thread {t} query {i} diverged",
+                        machine.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn block_requests_coalesce_and_stay_bit_identical() {
+    // 8 threads × 8 blocks × 16 queries = 1024, submitted via the block
+    // API so single flushes genuinely carry queries from many requests.
+    const THREADS: usize = 8;
+    const BLOCKS: usize = 8;
+    const BLOCK: usize = 16;
+    let machine = MachineTopology::xeon_e5_2699_v3();
+    let queries = perf_stream(&machine, THREADS * BLOCKS * BLOCK, 0x5E22);
+    let oracle = PredictionService::reference();
+    let serial = oracle.predict_performance(&queries).unwrap();
+    let fe = FrontEnd::start(
+        PredictionService::reference(),
+        FrontEndConfig {
+            batch_size: Some(64),
+            window: Duration::from_millis(1),
+        },
+    );
+    let per_thread = BLOCKS * BLOCK;
+    let mut results: Vec<Vec<Vec<f64>>> =
+        (0..THREADS).map(|_| Vec::new()).collect();
+    std::thread::scope(|scope| {
+        for (t, slot) in results.iter_mut().enumerate() {
+            let client = fe.client();
+            let chunk = &queries[t * per_thread..(t + 1) * per_thread];
+            scope.spawn(move || {
+                for block in chunk.chunks(BLOCK) {
+                    slot.extend(
+                        client.perf_many(block.to_vec()).unwrap(),
+                    );
+                }
+            });
+        }
+    });
+    let snap = fe.metrics().snapshot();
+    fe.shutdown();
+    assert_eq!(snap.queries, queries.len() as u64);
+    assert_eq!(snap.requests, (THREADS * BLOCKS) as u64);
+    assert!(
+        snap.max_batch >= BLOCK as u64,
+        "flushes must coalesce at least one full block: {snap:?}"
+    );
+    for (t, got) in results.iter().enumerate() {
+        for (i, (a, b)) in got
+            .iter()
+            .zip(&serial[t * per_thread..(t + 1) * per_thread])
+            .enumerate()
+        {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits(),
+                           "thread {t} query {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn lone_request_is_answered_within_the_batch_window() {
+    // A batch size nothing will ever fill: only the deadline flush can
+    // answer, and it must.
+    let fe = FrontEnd::start(
+        PredictionService::reference(),
+        FrontEndConfig {
+            batch_size: Some(1 << 20),
+            window: Duration::from_millis(10),
+        },
+    );
+    let client = fe.client();
+    let machine = MachineTopology::xeon_e5_2630_v3();
+    let q = perf_stream(&machine, 1, 1).pop().unwrap();
+    let started = Instant::now();
+    let served = client.perf(q.clone()).unwrap();
+    let elapsed = started.elapsed();
+    let direct = PredictionService::reference()
+        .predict_performance(&[q])
+        .unwrap()
+        .pop()
+        .unwrap();
+    for (x, y) in served.iter().zip(&direct) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    // Generous CI bound — the functional pin is the flush-reason counter.
+    assert!(elapsed < Duration::from_secs(30), "{elapsed:?}");
+    drop(client);
+    let snap = fe.metrics().snapshot();
+    fe.shutdown();
+    assert_eq!(snap.flushes_deadline, 1,
+               "a lone request must flush on the deadline: {snap:?}");
+    assert_eq!(snap.flushes_size, 0);
+}
+
+#[test]
+fn advising_through_the_client_matches_in_process_advising() {
+    let machine = MachineTopology::xeon_e5_2630_v3();
+    let w = workloads::find("cg").unwrap();
+    let sim = Simulator::new(machine.clone(), SimConfig::default());
+    let svc = PredictionService::reference();
+    let pair = profile(&sim, &w);
+    let sig = svc
+        .fit(&[FitRequest {
+            sym: pair.sym,
+            asym: pair.asym,
+        }])
+        .unwrap()
+        .pop()
+        .unwrap();
+    let direct = advisor::advise(&svc, &machine, &w, &sig, 8).unwrap();
+    let fe = FrontEnd::start(PredictionService::reference(),
+                             FrontEndConfig::default());
+    let client = fe.client();
+    let via_client =
+        advisor::advise(&client, &machine, &w, &sig, 8).unwrap();
+    drop(client);
+    fe.shutdown();
+    assert_eq!(direct.ranked.len(), via_client.ranked.len());
+    for (a, b) in direct.ranked.iter().zip(&via_client.ranked) {
+        assert_eq!(a.placement, b.placement);
+        assert_eq!(a.predicted_bw.to_bits(), b.predicted_bw.to_bits());
+        assert_eq!(a.qpi_headroom.to_bits(), b.qpi_headroom.to_bits());
+    }
+}
+
+#[test]
+fn repeated_stream_through_frontend_exceeds_90_percent_hit_rate() {
+    // The acceptance-criteria scenario: a repeated 1024-query stream over
+    // a bounded placement set served through the shared LRU.
+    let machine = MachineTopology::xeon_e5_2699_v3();
+    let caps: [f64; 8] = machine.capacities().try_into().unwrap();
+    let splits = ThreadPlacement::all_splits(&machine, 18);
+    let queries: Vec<PerfQuery> = (0..1024)
+        .map(|i| {
+            let p = &splits[i % splits.len()];
+            PerfQuery {
+                sig: ChannelSignature::new(0.2, 0.35, 0.3, 1),
+                threads: [p.threads_per_socket[0], p.threads_per_socket[1]],
+                demand_pt: [2.0e9, 1.0e9],
+                caps,
+            }
+        })
+        .collect();
+    let fe = FrontEnd::start(PredictionService::reference(),
+                             FrontEndConfig::default());
+    let client = fe.client();
+    client.perf_many(queries).unwrap();
+    let stats = fe.service().cache_stats();
+    drop(client);
+    fe.shutdown();
+    assert!(
+        stats.perf.hit_rate() >= 0.90,
+        "19 unique placements over 1024 queries must hit >= 90%: {:?}",
+        stats.perf
+    );
+}
+
+#[test]
+fn smoke_transcript_reproduces_the_golden_replies() {
+    // Same fixture CI pipes through the release binary:
+    //   numabw serve < serve_smoke.jsonl | diff - serve_smoke.golden.jsonl
+    let transcript = include_str!("data/serve_smoke.jsonl");
+    let golden = include_str!("data/serve_smoke.golden.jsonl");
+    let mut out = Vec::new();
+    serve_lines(
+        PredictionService::reference(),
+        ServeOptions::default(),
+        transcript.as_bytes(),
+        &mut out,
+    )
+    .unwrap();
+    assert_eq!(String::from_utf8(out).unwrap(), golden);
+}
