@@ -55,15 +55,19 @@ fn main() -> anyhow::Result<()> {
     {
         println!("--- target: {} ---", machine.name);
         let full = machine.cores_per_socket;
-        let threads = [full, full];
+        let threads = vec![full; machine.sockets];
+        let sockets = machine.sockets as f64;
         let per_thread = workload.bw_per_thread.min(machine.core_peak_bw);
-        let demand_total = per_thread * (2 * full) as f64;
+        let demand_total = per_thread * (machine.sockets * full) as f64;
 
-        // Where does the traffic land under an even spread?
-        let m = s.apply(&[threads[0], threads[1]]);
-        let static_bank_load: f64 =
-            demand_total * 0.5 * (m[0][s.static_socket]
-                + m[1][s.static_socket]);
+        // Where does the traffic land under an even spread?  Each socket
+        // issues 1/S of the demand; sum every socket's share routed to
+        // the static bank (reduces to the 2-socket arithmetic for S=2).
+        let m = s.apply(&threads);
+        let static_bank_load: f64 = demand_total / sockets
+            * (0..machine.sockets)
+                .map(|src| m[src][s.static_socket])
+                .sum::<f64>();
         let chan_cap = machine.local_read_bw;
         if static_bank_load > 0.8 * chan_cap {
             println!("  WARN: bank {} would carry {} of {} channel \
@@ -73,9 +77,19 @@ fn main() -> anyhow::Result<()> {
                      report::fmt_bw(chan_cap));
             warnings += 1;
         }
-        // Remote traffic vs interconnect.
-        let remote_frac = 0.5 * (m[0][1] + m[1][0]);
-        let remote_load = demand_total * remote_frac * 0.5; // per direction
+        // Remote traffic vs interconnect: mean off-diagonal mass per
+        // source socket, spread over the S(S-1) directed links.
+        let remote_frac = (0..machine.sockets)
+            .map(|src| {
+                (0..machine.sockets)
+                    .filter(|&dst| dst != src)
+                    .map(|dst| m[src][dst])
+                    .sum::<f64>()
+            })
+            .sum::<f64>()
+            / sockets;
+        let remote_load =
+            demand_total * remote_frac / (sockets * (sockets - 1.0));
         if remote_load > 0.8 * machine.qpi_read_bw {
             println!("  WARN: ~{} of remote traffic per QPI direction vs \
                       {} capacity — expect interconnect saturation",
@@ -86,10 +100,10 @@ fn main() -> anyhow::Result<()> {
         // Predicted achieved bandwidth at full blast.
         let q = PerfQuery {
             sig: *s,
-            threads,
+            threads: threads.clone(),
             demand_pt: [per_thread * workload.read_fraction,
                         per_thread * (1.0 - workload.read_fraction)],
-            caps: machine.capacities().try_into().unwrap(),
+            caps: machine.capacities(),
         };
         let achieved: f64 = svc.predict_performance(&[q])?[0].iter().sum();
         println!("  predicted achieved: {} of {} demanded ({:.0}%)",

@@ -1,17 +1,21 @@
-"""Shared fixtures + helpers for the Layer-1/Layer-2 test suite."""
+"""Shared fixtures + helpers for the Layer-1/Layer-2 test suite.
+
+JAX is imported lazily (inside the helpers) so collecting this conftest
+never errors when JAX is absent — each test module declares its own
+``pytest.importorskip("jax")`` and skips cleanly instead of failing the
+whole suite at collection time.
+"""
 
 from __future__ import annotations
 
 import numpy as np
 import pytest
 
-import jax.numpy as jnp
-
-from compile.kernels.ref import signature_apply_ref
-
 
 def random_signature(rng, b):
     """Random valid signatures: fracs >= 0 with sum <= 1, one-hot socket."""
+    import jax.numpy as jnp
+
     raw = rng.dirichlet(np.ones(4), size=b).astype(np.float32)
     fracs = raw[:, :3]                       # 4th component = interleaved
     sock = rng.integers(0, 2, size=b)
@@ -26,6 +30,10 @@ def counters_for(fracs, onehot, threads):
     threads), routed per the §4 matrix — i.e. data generated *by the model's
     own generative assumptions*, which the fit must invert exactly.
     """
+    import jax.numpy as jnp
+
+    from compile.kernels.ref import signature_apply_ref
+
     m = signature_apply_ref(fracs, onehot, threads)          # [B, S, S]
     flows = m * jnp.asarray(threads)[:, :, None]
     s = m.shape[1]

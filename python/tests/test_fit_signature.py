@@ -4,6 +4,10 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
+
+pytest.importorskip("jax", reason="kernel tests need JAX")
+pytest.importorskip("hypothesis",
+                    reason="kernel tests use hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -8,6 +8,8 @@ import os
 import numpy as np
 import pytest
 
+pytest.importorskip("jax", reason="kernel tests need JAX")
+
 import jax
 import jax.numpy as jnp
 

@@ -120,9 +120,8 @@ fn main() {
                 let pred = svc
                     .predict_counters(&[CounterQuery {
                         sig: sigc,
-                        threads: [p.threads_per_socket[0],
-                                  p.threads_per_socket[1]],
-                        cpu_totals: totals,
+                        threads: p.threads_per_socket.clone(),
+                        cpu_totals: totals.to_vec(),
                     }])
                     .unwrap();
                 for bank in 0..2 {

@@ -90,9 +90,9 @@ fn main() {
                 Pattern::PerThread => ChannelSignature::new(0.0, 0.0, 1.0, 0),
             };
             let t = if cfg.both_sockets {
-                [threads_full / 2, threads_full - threads_full / 2]
+                vec![threads_full / 2, threads_full - threads_full / 2]
             } else {
-                [threads_full, 0]
+                vec![threads_full, 0]
             };
             let w = fig1_workload(cfg.pattern);
             let per_thread = w.bw_per_thread.min(machine.core_peak_bw);
@@ -101,7 +101,7 @@ fn main() {
                 threads: t,
                 demand_pt: [per_thread * w.read_fraction,
                             per_thread * (1.0 - w.read_fraction)],
-                caps: machine.capacities().try_into().unwrap(),
+                caps: machine.capacities(),
             };
             let alloc = svc.predict_performance(&[q]).unwrap();
             model_rank.push((cfg.label, alloc[0].iter().sum::<f64>()));

@@ -81,8 +81,10 @@ fn main() {
     let queries: Vec<CounterQuery> = (0..256)
         .map(|_| CounterQuery {
             sig: truth,
-            threads: [1 + rng.below(17) as usize, 1 + rng.below(17) as usize],
-            cpu_totals: [rng.uniform(1e8, 1e10), rng.uniform(1e8, 1e10)],
+            threads: vec![1 + rng.below(17) as usize,
+                          1 + rng.below(17) as usize],
+            cpu_totals: vec![rng.uniform(1e8, 1e10),
+                             rng.uniform(1e8, 1e10)],
         })
         .collect();
     let reference = PredictionService::reference();
@@ -100,15 +102,15 @@ fn main() {
     // served path coalesces into engine-sized batches and memoizes by
     // placement, so repeats hit memory instead of the model.
     let splits = ThreadPlacement::all_splits(&sim.machine, 18);
-    let caps: [f64; 8] = sim.machine.capacities().try_into().unwrap();
+    let caps = sim.machine.capacities();
     let perf_queries: Vec<PerfQuery> = (0..1024)
         .map(|i| {
             let p = &splits[i % splits.len()];
             PerfQuery {
                 sig: truth,
-                threads: [p.threads_per_socket[0], p.threads_per_socket[1]],
+                threads: p.threads_per_socket.clone(),
                 demand_pt: [2.0e9, 1.0e9],
-                caps,
+                caps: caps.clone(),
             }
         })
         .collect();
@@ -144,8 +146,8 @@ fn main() {
             let p = &splits[i % splits.len()];
             CounterQuery {
                 sig: truth,
-                threads: [p.threads_per_socket[0], p.threads_per_socket[1]],
-                cpu_totals: [1.0e9 + i as f64, 2.0e9 - i as f64],
+                threads: p.threads_per_socket.clone(),
+                cpu_totals: vec![1.0e9 + i as f64, 2.0e9 - i as f64],
             }
         })
         .collect();

@@ -60,9 +60,11 @@ USAGE: numabw <subcommand> [flags]
   fit       --workload W [--machine M] [--hlo] [--save F]
                                     fit + print (optionally store) the
                                     signature
-  predict   --workload W --t0 N --t1 N [--machine M] [--hlo] [--store F]
+  predict   --workload W (--t0 N --t1 N | --split a,b,..) [--machine M]
+            [--hlo] [--store F]
                                     predict a placement's traffic matrix
-                                    (from a stored signature if --store)
+                                    (from a stored signature if --store;
+                                    --split takes one count per socket)
   advise    --workload W [--machine M] [--threads N] [--top K] [--hlo]
             [--store F] [--seed S]
                                     rank every valid thread placement by
@@ -78,13 +80,16 @@ USAGE: numabw <subcommand> [flags]
   evaluate  [--machine M] [--hlo] [--seed S]    full §6.2.2 sweep
   quickstart                        tiny end-to-end demo
 
-Flags: --machine xeon8|xeon18 (default xeon18); --hlo uses the AOT PJRT
-pipelines (default: Rust reference model); --seed u64.";
+Flags: --machine xeon8|xeon18|quad4 (default xeon18; quad4 is the
+synthetic 4-socket machine — every subcommand is socket-count-generic);
+--hlo uses the AOT PJRT pipelines (default: Rust reference model);
+--seed u64.";
 
 fn machine_flag(args: &Args) -> Result<MachineTopology> {
     let name = args.get_or("machine", "xeon18");
-    MachineTopology::by_name(name)
-        .ok_or_else(|| anyhow!("unknown machine {name:?} (xeon8|xeon18)"))
+    MachineTopology::by_name(name).ok_or_else(|| {
+        anyhow!("unknown machine {name:?} (xeon8|xeon18|quad4)")
+    })
 }
 
 fn workload_flag(args: &Args) -> Result<WorkloadSpec> {
@@ -115,7 +120,7 @@ fn sim_flag(args: &Args, machine: MachineTopology) -> Simulator {
 }
 
 fn cmd_machines() -> Result<()> {
-    let rows: Vec<Vec<String>> = MachineTopology::paper_machines()
+    let rows: Vec<Vec<String>> = MachineTopology::builtin_machines()
         .iter()
         .map(|m| {
             vec![
@@ -250,11 +255,27 @@ fn cmd_fit(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Placement for `predict`: `--split a,b,..` (one count per socket) or
+/// the 2-socket `--t0/--t1` shorthand.
+fn split_flag(args: &Args) -> Result<Vec<usize>> {
+    match args.get("split") {
+        Some(spec) => spec
+            .split(',')
+            .map(|tok| {
+                tok.trim().parse::<usize>().map_err(|_| {
+                    anyhow!("--split: comma-separated thread counts, got \
+                             {tok:?}")
+                })
+            })
+            .collect(),
+        None => Ok(vec![args.get_usize("t0", 1), args.get_usize("t1", 1)]),
+    }
+}
+
 fn cmd_predict(args: &Args) -> Result<()> {
     let machine = machine_flag(args)?;
     let w = workload_flag(args)?;
-    let t0 = args.get_usize("t0", 1);
-    let t1 = args.get_usize("t1", 1);
+    let split = split_flag(args)?;
     let sim = sim_flag(args, machine);
     // From a stored signature (no profiling) or a fresh two-run fit.
     let sig = if let Some(path) = args.get("store") {
@@ -274,11 +295,11 @@ fn cmd_predict(args: &Args) -> Result<()> {
         }])?[0]
     };
     let sig = &sig;
-    let placement = ThreadPlacement::new(vec![t0, t1]);
+    let placement = ThreadPlacement::new(split);
     placement.validate(&sim.machine).map_err(|e| anyhow!(e))?;
     println!(
-        "predicted traffic fractions for {} with threads ({t0}, {t1}):",
-        w.name
+        "predicted traffic fractions for {} with threads {:?}:",
+        w.name, placement.threads_per_socket
     );
     for (ch, s) in [("read", &sig.read), ("write", &sig.write)] {
         let m = s.apply(&placement.threads_per_socket);
@@ -509,6 +530,30 @@ mod tests {
             "advise --workload chase-static --machine xeon8 --threads 4"
         ))
         .unwrap();
+    }
+
+    #[test]
+    fn quad_socket_advise_and_predict_run_end_to_end() {
+        // The S-socket serving path through the CLI: profile on the
+        // 4-socket simulator, fit via fit_multi, rank all placements.
+        main_with(toks(
+            "advise --workload cg --machine quad4 --threads 8 --top 3"
+        ))
+        .unwrap();
+        main_with(toks(
+            "predict --workload cg --machine quad4 --split 4,2,1,1"
+        ))
+        .unwrap();
+        // The 2-socket shorthand cannot describe a quad placement.
+        assert!(main_with(toks(
+            "predict --workload cg --machine quad4 --t0 4 --t1 4"
+        ))
+        .is_err());
+        // Malformed split tokens error cleanly.
+        assert!(main_with(toks(
+            "predict --workload cg --machine quad4 --split 4,x,1,1"
+        ))
+        .is_err());
     }
 
     #[test]

@@ -107,14 +107,13 @@ pub fn enumerate_placements(machine: &MachineTopology, total: usize)
 /// Build the performance query scoring one placement: the per-thread
 /// demand is latency-adjusted from the signature's own traffic matrix
 /// (dependent-load workloads slow down when their accesses go remote —
-/// the same issue-rate model the simulator uses).
+/// the same issue-rate model the simulator uses).  Socket-count-generic:
+/// the query carries the machine's full `2S + 2S(S-1)` capacity vector
+/// and a length-S placement.
 pub fn placement_query(machine: &MachineTopology, workload: &WorkloadSpec,
                        sig: &BandwidthSignature,
                        placement: &ThreadPlacement) -> PerfQuery {
-    let caps: [f64; 8] = machine
-        .capacities()
-        .try_into()
-        .expect("advisor requires the 2-socket resource layout");
+    let caps = machine.capacities();
     let peak = workload.bw_per_thread.min(machine.core_peak_bw);
     let m = sig.combined.apply(&placement.threads_per_socket);
     let n = placement.total().max(1) as f64;
@@ -130,10 +129,7 @@ pub fn placement_query(machine: &MachineTopology, workload: &WorkloadSpec,
     let per_thread = peak * scale;
     PerfQuery {
         sig: sig.combined,
-        threads: [
-            placement.threads_per_socket[0],
-            placement.threads_per_socket[1],
-        ],
+        threads: placement.threads_per_socket.clone(),
         demand_pt: [
             per_thread * workload.read_fraction,
             per_thread * (1.0 - workload.read_fraction),
@@ -143,16 +139,17 @@ pub fn placement_query(machine: &MachineTopology, workload: &WorkloadSpec,
 }
 
 /// Per-resource loads implied by an allocation (flow layout
-/// `src*4 + dst*2 + rw`; resource footprint via the shared
+/// `(src*S + dst)*2 + rw`; resource footprint via the shared
 /// [`flow_resources`]), reduced to the QPI headroom: the smallest residual
-/// capacity fraction across the four interconnect links.
+/// capacity fraction across the `2S(S-1)` interconnect link directions.
 fn qpi_headroom(q: &PerfQuery, alloc: &[f64]) -> f64 {
-    let mut loads = [0.0f64; 8];
-    for src in 0..2 {
-        for dst in 0..2 {
+    let s = q.sockets();
+    let mut loads = vec![0.0f64; 2 * s * s];
+    for src in 0..s {
+        for dst in 0..s {
             for rw in 0..2 {
-                let a = alloc[src * 4 + dst * 2 + rw];
-                let (chan, link) = flow_resources(src, dst, rw);
+                let a = alloc[(src * s + dst) * 2 + rw];
+                let (chan, link) = flow_resources(s, src, dst, rw);
                 loads[chan] += a;
                 if let Some(l) = link {
                     loads[l] += a;
@@ -160,7 +157,7 @@ fn qpi_headroom(q: &PerfQuery, alloc: &[f64]) -> f64 {
             }
         }
     }
-    (4..8)
+    (2 * s..2 * s * s)
         .map(|r| {
             if q.caps[r] > 0.0 {
                 1.0 - loads[r] / q.caps[r]
@@ -206,10 +203,11 @@ fn rank(scores: &mut [PlacementScore]) {
 pub fn advise<S: PerfServer + ?Sized>(svc: &S, machine: &MachineTopology,
               workload: &WorkloadSpec, sig: &BandwidthSignature,
               total: usize) -> Result<Advice> {
-    if machine.sockets != 2 {
+    if sig.combined.static_socket >= machine.sockets {
         bail!(
-            "advisor supports 2-socket machines (the paper's fit and the \
-             compiled resource layout are 2-socket); {} has {}",
+            "signature's static socket {} does not exist on {} \
+             ({} sockets) — it was fitted for a different machine",
+            sig.combined.static_socket,
             machine.name,
             machine.sockets
         );
@@ -249,8 +247,14 @@ pub fn advise_brute_force(svc: &PredictionService,
                           workload: &WorkloadSpec,
                           sig: &BandwidthSignature, total: usize)
     -> Result<Advice> {
-    if machine.sockets != 2 {
-        bail!("advisor supports 2-socket machines");
+    if sig.combined.static_socket >= machine.sockets {
+        bail!(
+            "signature's static socket {} does not exist on {} \
+             ({} sockets)",
+            sig.combined.static_socket,
+            machine.name,
+            machine.sockets
+        );
     }
     let placements = enumerate_placements(machine, total);
     if placements.is_empty() {
@@ -370,22 +374,72 @@ mod tests {
         assert_eq!(order(&a), order(&b));
     }
 
+    fn handmade_sig(static_socket: usize)
+        -> crate::model::signature::BandwidthSignature {
+        let ch = crate::model::signature::ChannelSignature::new(
+            0.2, 0.3, 0.3, static_socket);
+        crate::model::signature::BandwidthSignature {
+            read: ch,
+            write: ch,
+            combined: ch,
+            read_bytes: 1.0,
+            write_bytes: 1.0,
+        }
+    }
+
     #[test]
-    fn rejects_non_two_socket_machines() {
+    fn four_socket_machines_are_advised_not_rejected() {
+        // Regression: this call used to die in `placement_query` on the
+        // 2-socket `caps` conversion (`expect("advisor requires the
+        // 2-socket resource layout")`).
         let mut m = m8();
         m.sockets = 4;
         let svc = PredictionService::reference();
         let w = suite::by_name("cg").unwrap();
-        let sig = crate::model::signature::BandwidthSignature {
-            read: crate::model::signature::ChannelSignature::new(
-                0.2, 0.3, 0.3, 0),
-            write: crate::model::signature::ChannelSignature::new(
-                0.2, 0.3, 0.3, 0),
-            combined: crate::model::signature::ChannelSignature::new(
-                0.2, 0.3, 0.3, 0),
-            read_bytes: 1.0,
-            write_bytes: 1.0,
-        };
-        assert!(advise(&svc, &m, &w, &sig, 8).is_err());
+        let advice = advise(&svc, &m, &w, &handmade_sig(0), 8).unwrap();
+        assert!(!advice.ranked.is_empty());
+        for s in &advice.ranked {
+            assert_eq!(s.placement.threads_per_socket.len(), 4);
+            assert_eq!(s.placement.total(), 8);
+            assert!(s.predicted_bw.is_finite());
+            assert!((0.0..=1.0).contains(&s.qpi_headroom));
+        }
+        // Brute force agrees bit-for-bit on S=4, exactly as on S=2.
+        let brute =
+            advise_brute_force(&svc, &m, &w, &handmade_sig(0), 8).unwrap();
+        for (a, b) in advice.ranked.iter().zip(&brute.ranked) {
+            assert_eq!(a.placement, b.placement);
+            assert_eq!(a.predicted_bw.to_bits(), b.predicted_bw.to_bits());
+            assert_eq!(a.qpi_headroom.to_bits(), b.qpi_headroom.to_bits());
+        }
+    }
+
+    #[test]
+    fn mismatched_signature_is_a_typed_error_not_a_panic() {
+        // A signature fitted for a bigger machine (static socket 3) cannot
+        // be applied to a 2-socket one: typed error, no assert.
+        let svc = PredictionService::reference();
+        let w = suite::by_name("cg").unwrap();
+        let err = advise(&svc, &m8(), &w, &handmade_sig(3), 8).unwrap_err();
+        assert!(format!("{err}").contains("static socket"), "{err}");
+        let err = advise_brute_force(&svc, &m8(), &w, &handmade_sig(3), 8)
+            .unwrap_err();
+        assert!(format!("{err}").contains("static socket"), "{err}");
+    }
+
+    #[test]
+    fn four_socket_workload_advises_end_to_end() {
+        // Full path on the synthetic quad machine: simulator profiling,
+        // fit through fit_multi, scoring through the generic flow layout.
+        let svc = PredictionService::reference();
+        let m = MachineTopology::synthetic_quad();
+        let sim = Simulator::new(m, SimConfig::default());
+        let w = suite::by_name("cg").unwrap();
+        let advice = advise_workload(&svc, &sim, &w, Some(8)).unwrap();
+        assert!(!advice.ranked.is_empty());
+        assert_eq!(advice.best().placement.threads_per_socket.len(), 4);
+        // Deterministic across calls.
+        let again = advise_workload(&svc, &sim, &w, Some(8)).unwrap();
+        assert_eq!(advice.best().placement, again.best().placement);
     }
 }

@@ -133,11 +133,8 @@ pub fn evaluate_suite(sim: &Simulator, svc: &PredictionService,
             ] {
                 queries.push(CounterQuery {
                     sig: csig,
-                    threads: [
-                        split.threads_per_socket[0],
-                        split.threads_per_socket[1],
-                    ],
-                    cpu_totals: cpu_totals(&matrix),
+                    threads: split.threads_per_socket.clone(),
+                    cpu_totals: cpu_totals(&matrix).to_vec(),
                 });
                 query_meta.push((wi, si, channel, matrix));
             }

@@ -40,11 +40,11 @@
 use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Mutex};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::counters::{Channel, ProfiledRun};
 use crate::model::signature::{BandwidthSignature, ChannelSignature};
-use crate::model::{apply, fit};
+use crate::model::{apply, fit, fit_multi};
 use crate::report;
 use crate::runtime::{batches, Batch, Engine, Tensor};
 use crate::util::lru::{CacheCounters, Lru};
@@ -58,24 +58,111 @@ pub struct FitRequest {
     pub asym: ProfiledRun,
 }
 
-/// One §6.2.2 counter-prediction query.
+/// One §6.2.2 counter-prediction query.  Socket-count-generic: `threads`
+/// and `cpu_totals` carry one entry per socket (S >= 2).
 #[derive(Clone, Debug)]
 pub struct CounterQuery {
     pub sig: ChannelSignature,
-    pub threads: [usize; 2],
-    /// Total traffic issued by each socket's threads (bytes).
-    pub cpu_totals: [f64; 2],
+    /// Threads pinned per socket (length = socket count S).
+    pub threads: Vec<usize>,
+    /// Total traffic issued by each socket's threads (bytes); length S.
+    pub cpu_totals: Vec<f64>,
 }
 
-/// One Fig-1-style performance query.
+impl CounterQuery {
+    /// Socket count implied by the placement.
+    pub fn sockets(&self) -> usize {
+        self.threads.len()
+    }
+
+    /// Internal-consistency check; the serving entry points (and the wire
+    /// protocol) run this so a malformed query becomes a per-request error
+    /// instead of a panic inside the dispatcher.
+    pub fn validate(&self) -> Result<(), String> {
+        let s = self.threads.len();
+        if s < 2 {
+            return Err(format!(
+                "query: \"threads\" needs one entry per socket (>= 2), \
+                 got {s}"
+            ));
+        }
+        if self.sig.static_socket >= s {
+            return Err(format!(
+                "query: sig.static_socket {} out of range for {s} sockets",
+                self.sig.static_socket
+            ));
+        }
+        if self.cpu_totals.len() != s {
+            return Err(format!(
+                "query: \"cpu_totals\" has {} entries for {s} sockets",
+                self.cpu_totals.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// One Fig-1-style performance query.  Socket-count-generic: `threads` has
+/// one entry per socket and `caps` covers the machine's full resource
+/// layout (2S local channels + 2S(S-1) link directions — see
+/// [`crate::topology::MachineTopology::capacities`]).
 #[derive(Clone, Debug)]
 pub struct PerfQuery {
     pub sig: ChannelSignature,
-    pub threads: [usize; 2],
+    /// Threads pinned per socket (length = socket count S).
+    pub threads: Vec<usize>,
     /// Per-thread full-speed (read, write) demand, bytes/s.
     pub demand_pt: [f64; 2],
-    /// Resource capacities (layout per `topology` / Python model).
-    pub caps: [f64; 8],
+    /// Resource capacities, length `2*S*S` (layout per `topology` /
+    /// Python model).
+    pub caps: Vec<f64>,
+}
+
+impl PerfQuery {
+    /// Socket count implied by the placement.
+    pub fn sockets(&self) -> usize {
+        self.threads.len()
+    }
+
+    /// Internal-consistency check; see [`CounterQuery::validate`].
+    pub fn validate(&self) -> Result<(), String> {
+        let s = self.threads.len();
+        if s < 2 {
+            return Err(format!(
+                "query: \"threads\" needs one entry per socket (>= 2), \
+                 got {s}"
+            ));
+        }
+        if self.sig.static_socket >= s {
+            return Err(format!(
+                "query: sig.static_socket {} out of range for {s} sockets",
+                self.sig.static_socket
+            ));
+        }
+        let want = 2 * s * s;
+        if self.caps.len() != want {
+            return Err(format!(
+                "query: \"caps\" has {} entries; {s} sockets need {want} \
+                 (2S local channels + 2S(S-1) link directions)",
+                self.caps.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+fn validate_counter_queries(queries: &[CounterQuery]) -> Result<()> {
+    for (i, q) in queries.iter().enumerate() {
+        q.validate().map_err(|e| anyhow!("query {i}: {e}"))?;
+    }
+    Ok(())
+}
+
+fn validate_perf_queries(queries: &[PerfQuery]) -> Result<()> {
+    for (i, q) in queries.iter().enumerate() {
+        q.validate().map_err(|e| anyhow!("query {i}: {e}"))?;
+    }
+    Ok(())
 }
 
 enum Backend {
@@ -94,15 +181,17 @@ pub const CACHE_CAP: usize = 1 << 16;
 
 /// Cache key of a §4 traffic matrix: the signature fields `apply` reads
 /// plus the placement.  `misfit` deliberately excluded — it does not
-/// affect the matrix, and excluding it raises the hit rate.
-#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+/// affect the matrix, and excluding it raises the hit rate.  The
+/// placement's length is the socket count, so queries against differently
+/// sized machines can never collide.
+#[derive(Clone, PartialEq, Eq, Hash)]
 struct MatrixKey {
     sig: [u64; 3],
     socket: usize,
-    threads: [usize; 2],
+    threads: Vec<usize>,
 }
 
-fn matrix_key(sig: &ChannelSignature, threads: [usize; 2]) -> MatrixKey {
+fn matrix_key(sig: &ChannelSignature, threads: &[usize]) -> MatrixKey {
     MatrixKey {
         sig: [
             sig.static_frac.to_bits(),
@@ -110,42 +199,55 @@ fn matrix_key(sig: &ChannelSignature, threads: [usize; 2]) -> MatrixKey {
             sig.perthread_frac.to_bits(),
         ],
         socket: sig.static_socket,
-        threads,
+        threads: threads.to_vec(),
     }
 }
 
 /// Full-bit key of a counter query (HLO mode caches whole results: f32
 /// engine output is not linearly decomposable client-side without breaking
 /// parity with the engine).
-#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Clone, PartialEq, Eq, Hash)]
 struct CounterKey {
     mk: MatrixKey,
-    totals: [u64; 2],
+    totals: Vec<u64>,
 }
 
 /// Full-bit key of a performance query (max-min is nonlinear, so the memo
 /// must be exact).
-#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Clone, PartialEq, Eq, Hash)]
 struct PerfKey {
     mk: MatrixKey,
     demand: [u64; 2],
-    caps: [u64; 8],
+    caps: Vec<u64>,
 }
 
-/// Resource footprint of performance-query flow `(src, dst, rw)` in the
-/// 2-socket layout the compiled pipelines bake in (`model.py
-/// build_incidence`, flow order `src*4 + dst*2 + rw`): the memory channel
-/// at the destination bank, plus the interconnect link for remote flows.
+/// Resource footprint of performance-query flow `(src, dst, rw)` on an
+/// S-socket machine (flow order `(src*S + dst)*2 + rw`, the S-socket
+/// generalisation of `model.py build_incidence`'s 2-socket
+/// `src*4 + dst*2 + rw`): the memory channel at the destination bank, plus
+/// the interconnect link for remote flows — read data crosses the
+/// `dst -> src` read link, write data the `src -> dst` write link.
+/// Index arithmetic matches
+/// [`crate::topology::MachineTopology::read_chan`] /
+/// [`write_chan`](crate::topology::MachineTopology::write_chan) /
+/// [`qpi_read_link`](crate::topology::MachineTopology::qpi_read_link) /
+/// [`qpi_write_link`](crate::topology::MachineTopology::qpi_write_link).
 /// Single source of truth shared by `perf_reference` and the advisor's
 /// headroom accounting.
-pub(crate) fn flow_resources(src: usize, dst: usize, rw: usize)
-    -> (usize, Option<usize>) {
-    let chan = if rw == 0 { dst } else { 2 + dst };
+pub(crate) fn flow_resources(sockets: usize, src: usize, dst: usize,
+                             rw: usize) -> (usize, Option<usize>) {
+    let s = sockets;
+    // Dense index over ordered pairs (a, b), a != b (row-major, matching
+    // MachineTopology::link_offset).
+    let off = |a: usize, b: usize| {
+        a * (s - 1) + if b > a { b - 1 } else { b }
+    };
+    let chan = if rw == 0 { dst } else { s + dst };
     let link = if src != dst {
         Some(if rw == 0 {
-            4 + if dst == 0 { 0 } else { 1 }
+            2 * s + off(dst, src)
         } else {
-            6 + if src == 0 { 0 } else { 1 }
+            2 * s + s * (s - 1) + off(src, dst)
         })
     } else {
         None
@@ -154,14 +256,10 @@ pub(crate) fn flow_resources(src: usize, dst: usize, rw: usize)
 }
 
 fn perf_key(q: &PerfQuery) -> PerfKey {
-    let mut caps = [0u64; 8];
-    for (c, v) in caps.iter_mut().zip(&q.caps) {
-        *c = v.to_bits();
-    }
     PerfKey {
-        mk: matrix_key(&q.sig, q.threads),
+        mk: matrix_key(&q.sig, &q.threads),
         demand: [q.demand_pt[0].to_bits(), q.demand_pt[1].to_bits()],
-        caps,
+        caps: q.caps.iter().map(|v| v.to_bits()).collect(),
     }
 }
 
@@ -342,13 +440,31 @@ impl PredictionService {
     // ---- fitting -----------------------------------------------------------
 
     /// Fit full signatures for a batch of run pairs.
+    ///
+    /// 2-socket runs go through the paper's exact fit ([`fit::fit_run_pair`]
+    /// or, in HLO mode, the compiled `fit_signature` pipeline); runs from
+    /// machines with more sockets go through the generalised §5.2 fit
+    /// ([`crate::model::fit_multi::fit_run_pair_multi`]), which reduces
+    /// exactly to the 2-socket fit when S = 2 but is kept on its own path
+    /// so the paper-validated numbers never move.  The compiled pipelines
+    /// bake in the 2-socket shapes, so a batch containing any S > 2 run is
+    /// served by the Rust reference fit even in HLO mode.
     pub fn fit(&self, reqs: &[FitRequest]) -> Result<Vec<BandwidthSignature>> {
+        let two_socket = reqs
+            .iter()
+            .all(|r| r.sym.counters.n_sockets() == 2);
         match &self.backend {
-            Backend::Reference => Ok(reqs
+            Backend::Hlo(engine) if two_socket => self.fit_hlo(engine, reqs),
+            _ => Ok(reqs
                 .iter()
-                .map(|r| fit::fit_run_pair(&r.sym, &r.asym))
+                .map(|r| {
+                    if r.sym.counters.n_sockets() == 2 {
+                        fit::fit_run_pair(&r.sym, &r.asym)
+                    } else {
+                        fit_multi::fit_run_pair_multi(&r.sym, &r.asym)
+                    }
+                })
                 .collect()),
-            Backend::Hlo(engine) => self.fit_hlo(engine, reqs),
         }
     }
 
@@ -474,6 +590,7 @@ impl PredictionService {
     /// Predict per-bank `(local, remote)` bytes for each query.
     pub fn predict_counters(&self, queries: &[CounterQuery])
         -> Result<Vec<Vec<[f64; 2]>>> {
+        validate_counter_queries(queries)?;
         match &self.backend {
             Backend::Reference => Ok(queries
                 .iter()
@@ -483,6 +600,13 @@ impl PredictionService {
                 })
                 .collect()),
             Backend::Hlo(engine) => {
+                if queries.iter().any(|q| q.sockets() != 2) {
+                    anyhow::bail!(
+                        "the compiled HLO pipelines bake in 2-socket \
+                         shapes; serve S > 2 queries through the \
+                         reference backend"
+                    );
+                }
                 let cap = engine.batch();
                 let mut out = Vec::with_capacity(queries.len());
                 for (start, len) in batches(queries.len(), cap) {
@@ -551,15 +675,24 @@ impl PredictionService {
 
     // ---- performance prediction ----------------------------------------------
 
-    /// Max-min achieved bytes/s per flow (layout: `src*4 + dst*2 + rw`).
+    /// Max-min achieved bytes/s per flow (layout: `(src*S + dst)*2 + rw`,
+    /// the S-socket generalisation of the 2-socket `src*4 + dst*2 + rw`).
     pub fn predict_performance(&self, queries: &[PerfQuery])
         -> Result<Vec<Vec<f64>>> {
+        validate_perf_queries(queries)?;
         match &self.backend {
             Backend::Reference => Ok(queries
                 .iter()
                 .map(Self::perf_reference)
                 .collect()),
             Backend::Hlo(engine) => {
+                if queries.iter().any(|q| q.sockets() != 2) {
+                    anyhow::bail!(
+                        "the compiled HLO pipelines bake in 2-socket \
+                         shapes; serve S > 2 queries through the \
+                         reference backend"
+                    );
+                }
                 let cap = engine.batch();
                 let mut out = Vec::with_capacity(queries.len());
                 for (start, len) in batches(queries.len(), cap) {
@@ -571,8 +704,8 @@ impl PredictionService {
                             .iter()
                             .map(|q| CounterQuery {
                                 sig: q.sig,
-                                threads: q.threads,
-                                cpu_totals: [0.0, 0.0],
+                                threads: q.threads.clone(),
+                                cpu_totals: vec![0.0, 0.0],
                             })
                             .collect::<Vec<_>>(),
                     );
@@ -607,18 +740,23 @@ impl PredictionService {
         }
     }
 
-    /// Reference twin of the `predict_performance` pipeline.
+    /// Reference twin of the `predict_performance` pipeline, for any
+    /// socket count.  For S = 2 this performs exactly the same
+    /// floating-point operations (in the same order) as the pre-S-generic
+    /// implementation, so paper-machine results are bit-identical (pinned
+    /// by `tests/advisor.rs`).
     fn perf_reference(q: &PerfQuery) -> Vec<f64> {
         use crate::simulator::contention::{maxmin, Flow};
+        let s = q.sockets();
         let m = apply::apply(&q.sig, &q.threads);
-        let mut flows = Vec::with_capacity(8);
-        for src in 0..2 {
-            for dst in 0..2 {
+        let mut flows = Vec::with_capacity(2 * s * s);
+        for src in 0..s {
+            for dst in 0..s {
                 for rw in 0..2 {
                     let demand = q.threads[src] as f64
                         * m[src][dst]
                         * q.demand_pt[rw];
-                    let (chan, link) = flow_resources(src, dst, rw);
+                    let (chan, link) = flow_resources(s, src, dst, rw);
                     let mut rs = vec![chan];
                     if let Some(l) = link {
                         rs.push(l);
@@ -646,7 +784,7 @@ impl PredictionService {
         compute: F,
     ) -> Result<Vec<Arc<V>>>
     where
-        K: Copy + Eq + std::hash::Hash,
+        K: Clone + Eq + std::hash::Hash,
         F: FnOnce(&[usize]) -> Result<Vec<V>>,
     {
         let mut resolved: Vec<Option<Arc<V>>> = Vec::with_capacity(keys.len());
@@ -658,7 +796,7 @@ impl PredictionService {
                 if let Some(v) = cache.get(k) {
                     resolved.push(Some(v.clone()));
                 } else {
-                    if fresh.insert(*k) {
+                    if fresh.insert(k.clone()) {
                         miss_first.push(i);
                     }
                     resolved.push(None);
@@ -678,8 +816,8 @@ impl PredictionService {
                 let mut cache = cache.lock().unwrap();
                 for (&i, v) in miss_first.iter().zip(values) {
                     let v = Arc::new(v);
-                    cache.insert(keys[i], v.clone());
-                    fresh_values.insert(keys[i], v);
+                    cache.insert(keys[i].clone(), v.clone());
+                    fresh_values.insert(keys[i].clone(), v);
                 }
             }
             for (i, slot) in resolved.iter_mut().enumerate() {
@@ -700,11 +838,12 @@ impl PredictionService {
     /// executes misses through the engine's batched pipeline.
     pub fn serve_counters(&self, queries: &[CounterQuery])
         -> Result<Vec<Vec<[f64; 2]>>> {
+        validate_counter_queries(queries)?;
         match &self.backend {
             Backend::Reference => {
                 let keys: Vec<MatrixKey> = queries
                     .iter()
-                    .map(|q| matrix_key(&q.sig, q.threads))
+                    .map(|q| matrix_key(&q.sig, &q.threads))
                     .collect();
                 let mats = self.memo_serve(&self.matrix_cache, &keys,
                                            |miss| {
@@ -733,11 +872,12 @@ impl PredictionService {
                 let keys: Vec<CounterKey> = queries
                     .iter()
                     .map(|q| CounterKey {
-                        mk: matrix_key(&q.sig, q.threads),
-                        totals: [
-                            q.cpu_totals[0].to_bits(),
-                            q.cpu_totals[1].to_bits(),
-                        ],
+                        mk: matrix_key(&q.sig, &q.threads),
+                        totals: q
+                            .cpu_totals
+                            .iter()
+                            .map(|v| v.to_bits())
+                            .collect(),
                     })
                     .collect();
                 let res = self.memo_serve(&self.counter_cache, &keys,
@@ -757,6 +897,7 @@ impl PredictionService {
     /// and memoized on the query's full key.
     pub fn serve_perf(&self, queries: &[PerfQuery])
         -> Result<Vec<Vec<f64>>> {
+        validate_perf_queries(queries)?;
         let keys: Vec<PerfKey> = queries.iter().map(perf_key).collect();
         let res = self.memo_serve(&self.perf_cache, &keys, |miss| {
             let miss_q: Vec<PerfQuery> =
@@ -847,8 +988,9 @@ mod tests {
         let p = rng.uniform(0.0, (1.0 - a - l).max(0.0));
         CounterQuery {
             sig: ChannelSignature::new(a, l, p, rng.below(2) as usize),
-            threads: [1 + rng.below(8) as usize, rng.below(9) as usize],
-            cpu_totals: [rng.uniform(0.0, 1e10), rng.uniform(0.0, 1e10)],
+            threads: vec![1 + rng.below(8) as usize, rng.below(9) as usize],
+            cpu_totals: vec![rng.uniform(0.0, 1e10),
+                             rng.uniform(0.0, 1e10)],
         }
     }
 
@@ -873,8 +1015,8 @@ mod tests {
         let svc = PredictionService::reference();
         let q = CounterQuery {
             sig,
-            threads: [3, 1],
-            cpu_totals: [3.0, 1.0],
+            threads: vec![3, 1],
+            cpu_totals: vec![3.0, 1.0],
         };
         let pred = svc.predict_counters(&[q]).unwrap();
         assert!((pred[0][0][0] - 1.95).abs() < 1e-9);
@@ -886,9 +1028,9 @@ mod tests {
         let svc = PredictionService::reference();
         let q = PerfQuery {
             sig: ChannelSignature::new(1.0, 0.0, 0.0, 0),
-            threads: [4, 4],
+            threads: vec![4, 4],
             demand_pt: [10.0, 0.0],
-            caps: [40.0, 40.0, 40.0, 40.0, 6.4, 6.4, 9.2, 9.2],
+            caps: vec![40.0, 40.0, 40.0, 40.0, 6.4, 6.4, 9.2, 9.2],
         };
         let alloc = svc.predict_performance(&[q]).unwrap();
         let total: f64 = alloc[0].iter().sum();
@@ -906,7 +1048,7 @@ mod tests {
         for i in 100..200 {
             let base = queries[i - 100].clone();
             queries[i].sig = base.sig;
-            queries[i].threads = base.threads;
+            queries[i].threads = base.threads.clone();
         }
         let batched = svc.serve_counters(&queries).unwrap();
         for (q, b) in queries.iter().zip(&batched) {
@@ -929,9 +1071,9 @@ mod tests {
         let svc = PredictionService::reference();
         let q = PerfQuery {
             sig: ChannelSignature::new(0.3, 0.3, 0.2, 1),
-            threads: [6, 2],
+            threads: vec![6, 2],
             demand_pt: [2.0e9, 1.0e9],
-            caps: [44e9, 44e9, 30e9, 30e9, 7e9, 7e9, 6.9e9, 6.9e9],
+            caps: vec![44e9, 44e9, 30e9, 30e9, 7e9, 7e9, 6.9e9, 6.9e9],
         };
         let queries = vec![q.clone(), q.clone(), q];
         let served = svc.serve_perf(&queries).unwrap();
@@ -997,6 +1139,178 @@ mod tests {
         assert_eq!(flushed, n);
         assert_eq!(batcher.pending(), 0);
         assert!(batcher.flush().unwrap().is_empty());
+    }
+
+    #[test]
+    fn malformed_queries_become_typed_errors_not_panics() {
+        let svc = PredictionService::reference();
+        // Static socket out of range for the placement.
+        let bad_sock = CounterQuery {
+            sig: ChannelSignature::new(0.5, 0.2, 0.1, 3),
+            threads: vec![2, 2],
+            cpu_totals: vec![1.0, 1.0],
+        };
+        let err = svc.predict_counters(&[bad_sock.clone()]).unwrap_err();
+        assert!(format!("{err}").contains("static_socket"), "{err}");
+        let err = svc.serve_counters(&[bad_sock]).unwrap_err();
+        assert!(format!("{err}").contains("static_socket"), "{err}");
+        // Capacity vector not matching the socket count.
+        let bad_caps = PerfQuery {
+            sig: ChannelSignature::new(0.5, 0.2, 0.1, 0),
+            threads: vec![2, 2, 2],
+            demand_pt: [1.0, 1.0],
+            caps: vec![10.0; 8], // 3 sockets need 18
+        };
+        let err = svc.serve_perf(&[bad_caps]).unwrap_err();
+        assert!(format!("{err}").contains("caps"), "{err}");
+        // Mismatched cpu_totals length.
+        let bad_totals = CounterQuery {
+            sig: ChannelSignature::new(0.1, 0.1, 0.1, 0),
+            threads: vec![2, 2],
+            cpu_totals: vec![1.0],
+        };
+        assert!(svc.predict_counters(&[bad_totals]).is_err());
+        // A single-socket "placement" is not a NUMA query.
+        let one_socket = PerfQuery {
+            sig: ChannelSignature::new(0.1, 0.1, 0.1, 0),
+            threads: vec![4],
+            demand_pt: [1.0, 1.0],
+            caps: vec![10.0; 2],
+        };
+        assert!(svc.predict_performance(&[one_socket]).is_err());
+    }
+
+    #[test]
+    fn three_socket_perf_serves_and_respects_caps() {
+        let svc = PredictionService::reference();
+        // 3 sockets -> 18 resources: 3 read + 3 write channels, 6 read +
+        // 6 write link directions.
+        let mut caps = vec![40.0; 6];
+        caps.extend(std::iter::repeat(8.0).take(12));
+        let q = PerfQuery {
+            sig: ChannelSignature::new(0.3, 0.3, 0.2, 2),
+            threads: vec![3, 2, 1],
+            demand_pt: [4.0, 2.0],
+            caps,
+        };
+        let direct = svc.predict_performance(&[q.clone()]).unwrap();
+        assert_eq!(direct[0].len(), 18, "2*S*S flows");
+        let served = svc.serve_perf(&[q.clone(), q.clone()]).unwrap();
+        for alloc in &served {
+            for (a, b) in alloc.iter().zip(&direct[0]) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        // Per-resource loads stay within capacity.
+        let s = 3;
+        let mut loads = vec![0.0f64; 2 * s * s];
+        for src in 0..s {
+            for dst in 0..s {
+                for rw in 0..2 {
+                    let a = direct[0][(src * s + dst) * 2 + rw];
+                    let (chan, link) = flow_resources(s, src, dst, rw);
+                    loads[chan] += a;
+                    if let Some(l) = link {
+                        loads[l] += a;
+                    }
+                }
+            }
+        }
+        for (l, c) in loads.iter().zip(&q.caps) {
+            assert!(*l <= c * (1.0 + 1e-6) + 1e-9, "load {l} cap {c}");
+        }
+    }
+
+    #[test]
+    fn flow_resources_matches_the_two_socket_compiled_layout() {
+        // The exact table `model.py build_incidence` bakes in for S=2
+        // (DESIGN.md §6): chan = dst (read) / 2+dst (write); link =
+        // 4..6 read by destination bank, 6..8 write by source socket.
+        let expect = |src: usize, dst: usize, rw: usize| {
+            let chan = if rw == 0 { dst } else { 2 + dst };
+            let link = if src != dst {
+                Some(if rw == 0 {
+                    4 + if dst == 0 { 0 } else { 1 }
+                } else {
+                    6 + if src == 0 { 0 } else { 1 }
+                })
+            } else {
+                None
+            };
+            (chan, link)
+        };
+        for src in 0..2 {
+            for dst in 0..2 {
+                for rw in 0..2 {
+                    assert_eq!(flow_resources(2, src, dst, rw),
+                               expect(src, dst, rw),
+                               "({src},{dst},{rw})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn flow_resources_matches_topology_indices_for_four_sockets() {
+        use crate::topology::MachineTopology;
+        let mut m = MachineTopology::xeon_e5_2699_v3();
+        m.sockets = 4;
+        for src in 0..4 {
+            for dst in 0..4 {
+                for rw in 0..2 {
+                    let (chan, link) = flow_resources(4, src, dst, rw);
+                    let want_chan = if rw == 0 {
+                        m.read_chan(dst)
+                    } else {
+                        m.write_chan(dst)
+                    };
+                    assert_eq!(chan, want_chan);
+                    if src == dst {
+                        assert_eq!(link, None);
+                    } else if rw == 0 {
+                        // Read data crosses the dst -> src link.
+                        assert_eq!(link, Some(m.qpi_read_link(dst, src)));
+                    } else {
+                        assert_eq!(link, Some(m.qpi_write_link(src, dst)));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fit_dispatches_to_the_multi_socket_path() {
+        // A 4-socket run pair must fit through fit_multi and recover the
+        // planted signature.
+        let truth = ChannelSignature::new(0.2, 0.3, 0.3, 2);
+        let svc = PredictionService::reference();
+        let mk = |tps: &[usize]| {
+            let m = apply::apply(&truth, tps);
+            let s = tps.len();
+            let mut c = CounterSnapshot::new(s);
+            for (src, &n) in tps.iter().enumerate() {
+                for dst in 0..s {
+                    c.record_traffic(src, dst, Channel::Read,
+                                     m[src][dst] * n as f64 * 1e9);
+                }
+                c.sockets[src].instructions = n as f64 * 1e9;
+            }
+            c.elapsed_s = 1.0;
+            ProfiledRun {
+                counters: c,
+                threads_per_socket: tps.to_vec(),
+            }
+        };
+        let sigs = svc
+            .fit(&[FitRequest {
+                sym: mk(&[4, 4, 4, 4]),
+                asym: mk(&[7, 4, 3, 2]),
+            }])
+            .unwrap();
+        let got = &sigs[0].read;
+        assert!((got.static_frac - 0.2).abs() < 1e-6, "{got:?}");
+        assert!((got.local_frac - 0.3).abs() < 1e-6);
+        assert_eq!(got.static_socket, 2);
     }
 
     #[test]

@@ -64,6 +64,30 @@
 //!   deterministic ranked recommendation — exposed as the `advise` CLI
 //!   subcommand (store-backed via `--store`) and
 //!   `examples/placement_advisor.rs`.
+//! * The whole serving path is **socket-count-generic** (paper §5.2):
+//!   queries carry length-S placements and the machine's full
+//!   `2S + 2S(S-1)` capacity vector, flows follow the
+//!   `(src*S + dst)*2 + rw` layout, and fitting dispatches to
+//!   [`model::fit_multi::fit_run_pair_multi`] for S > 2 runs (S = 2 stays
+//!   on the paper's exact fit and is bit-identical to the
+//!   pre-generalisation implementation — pinned by `tests/advisor.rs`).
+//!   A synthetic 4-socket machine
+//!   ([`topology::MachineTopology::synthetic_quad`], CLI name `quad4`)
+//!   exercises it end to end:
+//!
+//!   ```no_run
+//!   use numabw::coordinator::{advisor, PredictionService};
+//!   use numabw::prelude::*;
+//!
+//!   let quad = MachineTopology::synthetic_quad();   // 4 sockets
+//!   let sim = Simulator::new(quad, SimConfig::default());
+//!   let svc = PredictionService::reference();
+//!   let w = numabw::workloads::suite::by_name("cg").unwrap();
+//!   // Profiles on the quad simulator, fits via fit_channel_multi, ranks
+//!   // all 165 placements of 8 threads over the four sockets.
+//!   let advice = advisor::advise_workload(&svc, &sim, &w, Some(8)).unwrap();
+//!   println!("best: {:?}", advice.best().placement.threads_per_socket);
+//!   ```
 //!
 //! A `serve` session, verbatim (`$` lines are stdin; this is the smoke
 //! transcript CI diffs against `rust/tests/data/serve_smoke.golden.jsonl`):

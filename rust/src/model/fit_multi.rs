@@ -15,7 +15,7 @@
 //! For S = 2 this reduces exactly to [`crate::model::fit`] (tested below).
 
 use crate::counters::{Channel, ProfiledRun};
-use crate::model::signature::ChannelSignature;
+use crate::model::signature::{BandwidthSignature, ChannelSignature};
 
 const EPS: f64 = 1e-9;
 
@@ -179,6 +179,22 @@ pub fn fit_channel_multi(sym: &ProfiledRun, asym: &ProfiledRun,
     }
 }
 
+/// Fit the full signature (read, write, combined) from the §5.1 run pair
+/// on an S-socket machine — the generalised twin of
+/// [`crate::model::fit::fit_run_pair`], which
+/// [`crate::coordinator::PredictionService::fit`] dispatches to whenever a
+/// run pair covers more than two sockets.
+pub fn fit_run_pair_multi(sym: &ProfiledRun, asym: &ProfiledRun)
+    -> BandwidthSignature {
+    BandwidthSignature {
+        read: fit_channel_multi(sym, asym, Some(Channel::Read)),
+        write: fit_channel_multi(sym, asym, Some(Channel::Write)),
+        combined: fit_channel_multi(sym, asym, None),
+        read_bytes: sym.counters.channel_total(Channel::Read),
+        write_bytes: sym.counters.channel_total(Channel::Write),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -248,6 +264,36 @@ mod tests {
                 "{truth:?} -> {got:?}"
             );
         }
+    }
+
+    #[test]
+    fn full_pair_fit_recovers_four_socket_truth() {
+        let truth = ChannelSignature::new(0.25, 0.25, 0.25, 1);
+        let mk = |tps: &[usize]| {
+            let m = apply::apply(&truth, tps);
+            let s = tps.len();
+            let mut c = CounterSnapshot::new(s);
+            for (src, &n) in tps.iter().enumerate() {
+                for dst in 0..s {
+                    let bytes = m[src][dst] * n as f64 * 1e9;
+                    c.record_traffic(src, dst, Channel::Read, bytes);
+                    c.record_traffic(src, dst, Channel::Write, bytes * 0.5);
+                }
+                c.sockets[src].instructions = n as f64 * 1e9;
+            }
+            c.elapsed_s = 1.0;
+            ProfiledRun {
+                counters: c,
+                threads_per_socket: tps.to_vec(),
+            }
+        };
+        let sig = fit_run_pair_multi(&mk(&[4, 4, 4, 4]), &mk(&[7, 4, 3, 2]));
+        for ch in [&sig.read, &sig.write, &sig.combined] {
+            assert!((ch.static_frac - 0.25).abs() < 1e-6, "{ch:?}");
+            assert!((ch.local_frac - 0.25).abs() < 1e-6);
+            assert_eq!(ch.static_socket, 1);
+        }
+        assert!((sig.read_share() - 2.0 / 3.0).abs() < 1e-9);
     }
 
     #[test]

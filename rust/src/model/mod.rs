@@ -17,5 +17,6 @@ pub mod misfit;
 pub mod signature;
 
 pub use fit::{fit_channel, fit_run_pair};
+pub use fit_multi::{fit_channel_multi, fit_run_pair_multi};
 pub use misfit::FitQuality;
 pub use signature::{BandwidthSignature, ChannelSignature};

@@ -384,8 +384,9 @@ mod tests {
         let p = rng.uniform(0.0, (1.0 - a - l).max(0.0));
         CounterQuery {
             sig: ChannelSignature::new(a, l, p, rng.below(2) as usize),
-            threads: [1 + rng.below(8) as usize, rng.below(9) as usize],
-            cpu_totals: [rng.uniform(0.0, 1e10), rng.uniform(0.0, 1e10)],
+            threads: vec![1 + rng.below(8) as usize, rng.below(9) as usize],
+            cpu_totals: vec![rng.uniform(0.0, 1e10),
+                             rng.uniform(0.0, 1e10)],
         }
     }
 

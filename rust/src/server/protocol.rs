@@ -11,7 +11,7 @@
 //!
 //! ```text
 //! {"id":1,"op":"counters","sig":{...},"threads":[3,1],"cpu_totals":[3e9,1e9]}
-//! {"id":2,"op":"perf","sig":{...},"threads":[6,2],"demand_pt":[2e9,1e9],"caps":[...8 numbers]}
+//! {"id":2,"op":"perf","sig":{...},"threads":[6,2],"demand_pt":[2e9,1e9],"caps":[...2*S*S numbers]}
 //! {"id":3,"op":"advise","machine":"xeon8","workload":"cg","threads":8,"top":3}
 //! {"id":4,"op":"stats"}
 //! ```
@@ -23,12 +23,20 @@
 //! [`ModelRegistry`] (fit-once-serve-forever; seed-guarded when the server
 //! was started with `--store`) and scores placements through the
 //! coalescing front-end's [`Client`].
+//!
+//! Queries are socket-count-generic: `threads` / `cpu_totals` carry one
+//! entry per socket (any S >= 2) and `caps` covers the machine's full
+//! `2S + 2S(S-1)` resource layout.  Lengths and the signature's static
+//! socket are validated **here, at the protocol boundary**, so malformed
+//! wire input (e.g. a `static_socket` the placement does not have — which
+//! would trip an assert inside the §4 kernel) comes back as a per-request
+//! error instead of killing the dispatcher thread.
 
 use std::io::{BufRead, Write};
 use std::path::PathBuf;
 use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::coordinator::advisor;
 use crate::coordinator::service::{CounterQuery, FitRequest, PerfQuery};
@@ -123,9 +131,18 @@ fn f64_array<const N: usize>(j: &Json, key: &str)
         .map_err(|_| format!("field {key:?} must have {N} elements"))
 }
 
-fn usize_pair(j: &Json, key: &str) -> Result<[usize; 2], String> {
-    let v: [f64; 2] = f64_array(j, key)?;
-    Ok([checked_usize(v[0], key)?, checked_usize(v[1], key)?])
+fn f64_vec(j: &Json, key: &str) -> Result<Vec<f64>, String> {
+    field(j, key)?
+        .as_f64_vec()
+        .ok_or_else(|| format!("field {key:?} must be a number array"))
+}
+
+/// A per-socket integer array (length = socket count, any S >= 2).
+fn usize_vec(j: &Json, key: &str) -> Result<Vec<usize>, String> {
+    f64_vec(j, key)?
+        .into_iter()
+        .map(|v| checked_usize(v, key))
+        .collect()
 }
 
 fn parse_sig(j: &Json) -> Result<ChannelSignature, String> {
@@ -133,20 +150,28 @@ fn parse_sig(j: &Json) -> Result<ChannelSignature, String> {
 }
 
 fn parse_counter_query(j: &Json) -> Result<CounterQuery, String> {
-    Ok(CounterQuery {
+    let q = CounterQuery {
         sig: parse_sig(j)?,
-        threads: usize_pair(j, "threads")?,
-        cpu_totals: f64_array(j, "cpu_totals")?,
-    })
+        threads: usize_vec(j, "threads")?,
+        cpu_totals: f64_vec(j, "cpu_totals")?,
+    };
+    // Boundary validation: lengths consistent, static socket present.  A
+    // malformed query must fail its own request here — once coalesced
+    // into a shared batch it would poison every rider (or, pre-check,
+    // panic the dispatcher on the §4 kernel's assert).
+    q.validate()?;
+    Ok(q)
 }
 
 fn parse_perf_query(j: &Json) -> Result<PerfQuery, String> {
-    Ok(PerfQuery {
+    let q = PerfQuery {
         sig: parse_sig(j)?,
-        threads: usize_pair(j, "threads")?,
+        threads: usize_vec(j, "threads")?,
         demand_pt: f64_array(j, "demand_pt")?,
-        caps: f64_array(j, "caps")?,
-    })
+        caps: f64_vec(j, "caps")?,
+    };
+    q.validate()?;
+    Ok(q)
 }
 
 /// One query per request, or a `"queries"` block.
@@ -263,18 +288,50 @@ struct ServeContext {
 }
 
 impl ServeContext {
+    /// The compiled HLO pipelines bake in 2-socket shapes.  Reject S > 2
+    /// queries per-request *before* they join a coalesced batch: once
+    /// batched, the engine's shape error would fan out to every rider in
+    /// the flush, breaking the per-request error isolation the protocol
+    /// boundary guarantees.  (Reference mode serves any S.)
+    fn check_backend_shapes<I: IntoIterator<Item = usize>>(
+        &self,
+        sockets: I,
+    ) -> Result<(), String> {
+        if !self.frontend.service().is_hlo() {
+            return Ok(());
+        }
+        for s in sockets {
+            if s != 2 {
+                return Err(format!(
+                    "the compiled HLO pipelines are 2-socket; this server \
+                     cannot serve a {s}-socket query (restart without \
+                     --hlo to use the reference backend)"
+                ));
+            }
+        }
+        Ok(())
+    }
+
     fn execute(&self, req: ProtoRequest) -> Result<Json, String> {
         match req {
-            ProtoRequest::Counters { queries, .. } => self
-                .client
-                .counters_many(queries)
-                .map(|served| counters_result(&served))
-                .map_err(|e| format!("{e:#}")),
-            ProtoRequest::Perf { queries, .. } => self
-                .client
-                .perf_many(queries)
-                .map(|served| perf_result(&served))
-                .map_err(|e| format!("{e:#}")),
+            ProtoRequest::Counters { queries, .. } => {
+                self.check_backend_shapes(
+                    queries.iter().map(|q| q.sockets()),
+                )?;
+                self.client
+                    .counters_many(queries)
+                    .map(|served| counters_result(&served))
+                    .map_err(|e| format!("{e:#}"))
+            }
+            ProtoRequest::Perf { queries, .. } => {
+                self.check_backend_shapes(
+                    queries.iter().map(|q| q.sockets()),
+                )?;
+                self.client
+                    .perf_many(queries)
+                    .map(|served| perf_result(&served))
+                    .map_err(|e| format!("{e:#}"))
+            }
             ProtoRequest::Advise {
                 machine,
                 workload,
@@ -297,6 +354,14 @@ impl ServeContext {
             .ok_or_else(|| {
                 anyhow::anyhow!("unknown machine {machine_name:?}")
             })?;
+        if self.frontend.service().is_hlo() && machine.sockets != 2 {
+            bail!(
+                "the compiled HLO pipelines are 2-socket; cannot advise \
+                 {} ({} sockets) under --hlo",
+                machine.name,
+                machine.sockets
+            );
+        }
         let w = workloads::find(workload_name).ok_or_else(|| {
             anyhow::anyhow!("unknown workload {workload_name:?}")
         })?;
@@ -519,6 +584,65 @@ mod tests {
         assert!(parse_request(neg_top)
             .unwrap_err()
             .contains("non-negative integers"));
+    }
+
+    #[test]
+    fn boundary_validation_rejects_inconsistent_queries() {
+        // Static socket the placement does not have: previously this
+        // reached the §4 kernel's assert and killed the dispatcher.
+        let bad_sock = "{\"op\":\"counters\",\"sig\":{\"static\":0.5,\
+                        \"local\":0.2,\"perthread\":0.1,\
+                        \"static_socket\":7,\"misfit\":0},\
+                        \"threads\":[3,1],\"cpu_totals\":[3.0,1.0]}";
+        assert!(parse_request(bad_sock)
+            .unwrap_err()
+            .contains("static_socket"));
+        // Capacity vector not matching the socket count (3 sockets need
+        // 2*3*3 = 18 resources).
+        let bad_caps = format!(
+            "{{\"op\":\"perf\",\"sig\":{SIG},\"threads\":[2,2,2],\
+             \"demand_pt\":[1e9,1e9],\"caps\":[1,2,3,4,5,6,7,8]}}"
+        );
+        assert!(parse_request(&bad_caps).unwrap_err().contains("caps"));
+        // cpu_totals length must match the placement's socket count.
+        let bad_totals = format!(
+            "{{\"op\":\"counters\",\"sig\":{SIG},\"threads\":[2,2],\
+             \"cpu_totals\":[1.0,2.0,3.0]}}"
+        );
+        assert!(parse_request(&bad_totals)
+            .unwrap_err()
+            .contains("cpu_totals"));
+        // A single-socket placement is not a NUMA query.
+        let one = format!(
+            "{{\"op\":\"counters\",\"sig\":{SIG},\"threads\":[4],\
+             \"cpu_totals\":[1.0]}}"
+        );
+        assert!(parse_request(&one).unwrap_err().contains("threads"));
+    }
+
+    #[test]
+    fn s_socket_queries_parse_and_serve() {
+        // 3-socket perf query end to end through the serve loop: 18 caps,
+        // 18 flow allocations back.
+        let sig3 = "{\"static\":0.2,\"local\":0.35,\"perthread\":0.3,\
+                    \"static_socket\":2,\"misfit\":0}";
+        let caps: Vec<String> = std::iter::repeat("40e9".to_string())
+            .take(6)
+            .chain(std::iter::repeat("8e9".to_string()).take(12))
+            .collect();
+        let transcript = format!(
+            "{{\"id\":1,\"op\":\"perf\",\"sig\":{sig3},\
+             \"threads\":[3,2,1],\"demand_pt\":[2e9,1e9],\
+             \"caps\":[{}]}}\n",
+            caps.join(",")
+        );
+        let out = serve_str(&transcript, ServeOptions::default());
+        let reply = Json::parse(out.lines().next().unwrap()).unwrap();
+        assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{out}");
+        let alloc = reply.get("result").unwrap().as_arr().unwrap()[0]
+            .as_f64_vec()
+            .unwrap();
+        assert_eq!(alloc.len(), 18, "2*S*S flows for S=3");
     }
 
     #[test]

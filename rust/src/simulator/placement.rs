@@ -94,20 +94,46 @@ impl ThreadPlacement {
     /// *moderate*, machine-independent imbalance keeps the asymmetric-run
     /// contamination of the fit comparable across machines — maxing the
     /// skew out to the core budget would make fitted signatures
-    /// machine-dependent (Fig 14 would degrade).  2-socket form.
+    /// machine-dependent (Fig 14 would degrade).
+    ///
+    /// For S = 2 this is the paper's exact 2:1 split (kept byte-for-byte
+    /// so every seeded paper-machine run reproduces).  For S > 2 the
+    /// symmetric placement is tilted by moving threads from the last
+    /// socket to the first, which gives the §5.5 regression distinct
+    /// thread shares without starving any socket.
     pub fn asymmetric(machine: &MachineTopology, total: usize)
         -> Result<ThreadPlacement, String> {
-        if machine.sockets != 2 {
-            return Err("asymmetric profiling implemented for 2 sockets".into());
+        if machine.sockets == 2 {
+            let hi = ((total * 2) / 3).min(machine.cores_per_socket);
+            let lo = total - hi;
+            if lo == 0 || hi == lo || lo > machine.cores_per_socket {
+                return Err(format!(
+                    "cannot build an asymmetric placement of {total} threads"
+                ));
+            }
+            let p = ThreadPlacement::new(vec![hi, lo]);
+            p.validate(machine)?;
+            return Ok(p);
         }
-        let hi = ((total * 2) / 3).min(machine.cores_per_socket);
-        let lo = total - hi;
-        if lo == 0 || hi == lo || lo > machine.cores_per_socket {
+        if total % machine.sockets != 0 {
             return Err(format!(
-                "cannot build an asymmetric placement of {total} threads"
+                "asymmetric run needs a multiple of {} threads",
+                machine.sockets
             ));
         }
-        let p = ThreadPlacement::new(vec![hi, lo]);
+        let per = total / machine.sockets;
+        let shift = (per / 2).min(machine.cores_per_socket - per);
+        if shift == 0 || shift >= per {
+            return Err(format!(
+                "cannot build an asymmetric placement of {total} threads \
+                 on {} sockets of {} cores",
+                machine.sockets, machine.cores_per_socket
+            ));
+        }
+        let mut tps = vec![per; machine.sockets];
+        tps[0] += shift;
+        tps[machine.sockets - 1] -= shift;
+        let p = ThreadPlacement::new(tps);
         p.validate(machine)?;
         Ok(p)
     }
@@ -253,6 +279,22 @@ mod tests {
             assert!(ThreadPlacement::asymmetric(&m, total).is_ok(),
                     "machine {} total {total}", m.name);
         }
+    }
+
+    #[test]
+    fn multi_socket_profiling_placements() {
+        let quad = MachineTopology::synthetic_quad();
+        let total = ThreadPlacement::profiling_total(&quad);
+        let sym = ThreadPlacement::symmetric(&quad, total).unwrap();
+        assert!(sym.threads_per_socket.iter().all(|&t| t == total / 4));
+        let asym = ThreadPlacement::asymmetric(&quad, total).unwrap();
+        assert_eq!(asym.total(), total);
+        assert_ne!(asym.threads_per_socket[0],
+                   asym.threads_per_socket[3]);
+        asym.validate(&quad).unwrap();
+        // The 2-socket formula is untouched (seeded runs must reproduce).
+        let asym2 = ThreadPlacement::asymmetric(&m8(), 12).unwrap();
+        assert_eq!(asym2.threads_per_socket, vec![8, 4]);
     }
 
     #[test]

@@ -153,15 +153,49 @@ impl MachineTopology {
         }
     }
 
+    /// Synthetic quad-socket machine (no hardware counterpart in the
+    /// paper): four sockets on a fully-connected interconnect with
+    /// Fig-2-like capacity ratios.  Exercises the S-socket generalisation
+    /// (§5.2 normalization, the generic flow layout, `fit_multi`) end to
+    /// end — the topology class the multi-socket thread-migration
+    /// literature targets (arXiv:1809.10937 evaluates on 4-socket NUMA
+    /// hosts).
+    pub fn synthetic_quad() -> MachineTopology {
+        let local_read = 46.0 * GB;
+        let local_write = 32.0 * GB;
+        MachineTopology {
+            name: "synth-quad-4s".to_string(),
+            sockets: 4,
+            cores_per_socket: 8,
+            local_read_bw: local_read,
+            local_write_bw: local_write,
+            qpi_read_bw: 0.40 * local_read,
+            qpi_write_bw: 0.55 * local_write,
+            local_latency_ns: 95.0,
+            remote_latency_ns: 180.0,
+            core_peak_bw: 6.0 * GB,
+            price_usd: 2500.0,
+        }
+    }
+
     /// Both paper machines, in presentation order.
     pub fn paper_machines() -> Vec<MachineTopology> {
         vec![Self::xeon_e5_2630_v3(), Self::xeon_e5_2699_v3()]
+    }
+
+    /// Every built-in machine: the paper pair plus the synthetic
+    /// quad-socket topology.
+    pub fn builtin_machines() -> Vec<MachineTopology> {
+        let mut ms = Self::paper_machines();
+        ms.push(Self::synthetic_quad());
+        ms
     }
 
     pub fn by_name(name: &str) -> Option<MachineTopology> {
         match name {
             "xeon8" | "xeon-e5-2630v3-8c" => Some(Self::xeon_e5_2630_v3()),
             "xeon18" | "xeon-e5-2699v3-18c" => Some(Self::xeon_e5_2699_v3()),
+            "quad4" | "synth-quad-4s" => Some(Self::synthetic_quad()),
             _ => None,
         }
     }
@@ -244,9 +278,18 @@ mod tests {
 
     #[test]
     fn presets_validate() {
-        for m in MachineTopology::paper_machines() {
+        for m in MachineTopology::builtin_machines() {
             m.validate().unwrap();
         }
+    }
+
+    #[test]
+    fn synthetic_quad_is_addressable_and_four_socket() {
+        let q = MachineTopology::by_name("quad4").unwrap();
+        assert_eq!(q, MachineTopology::synthetic_quad());
+        assert_eq!(q.sockets, 4);
+        assert_eq!(q.n_resources(), 32);
+        assert_eq!(q.capacities().len(), 32);
     }
 
     #[test]

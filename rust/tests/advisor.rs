@@ -2,6 +2,13 @@
 //!
 //! * the ranked advisor output matches brute-force per-query scoring on
 //!   both paper machines (bit-identical in reference-backend mode);
+//! * the socket-generic scoring path is bit-identical to the pre-refactor
+//!   2-socket implementation (inlined below as `two_socket_oracle`) on
+//!   both paper machines — the S-generalisation moves nothing the model
+//!   was validated on;
+//! * `enumerate_placements` at S = 4 matches the capped stars-and-bars
+//!   closed form and stays deterministic;
+//! * a 4-socket machine advises end to end (signature via `fit_multi`);
 //! * the batched+cached serving paths are bit-identical to the unbatched
 //!   backend calls in reference mode;
 //! * the service is shareable (`Send + Sync`) and behaves identically when
@@ -98,15 +105,18 @@ fn batched_counter_path_bit_identical_to_unbatched() {
     for _ in 0..300 {
         queries.push(CounterQuery {
             sig: random_signature(&mut rng),
-            threads: [1 + rng.below(17) as usize, rng.below(18) as usize],
-            cpu_totals: [rng.uniform(0.0, 1e10), rng.uniform(0.0, 1e10)],
+            threads: vec![1 + rng.below(17) as usize,
+                          rng.below(18) as usize],
+            cpu_totals: vec![rng.uniform(0.0, 1e10),
+                             rng.uniform(0.0, 1e10)],
         });
     }
     // Inject exact placement repeats with fresh totals: these must be
     // served from the matrix cache yet stay bit-identical.
     for i in 0..100 {
         let mut q = queries[i].clone();
-        q.cpu_totals = [rng.uniform(0.0, 1e10), rng.uniform(0.0, 1e10)];
+        q.cpu_totals = vec![rng.uniform(0.0, 1e10),
+                            rng.uniform(0.0, 1e10)];
         queries.push(q);
     }
     let served = svc.serve_counters(&queries).unwrap();
@@ -129,13 +139,14 @@ fn batched_perf_path_bit_identical_to_unbatched() {
     let mut rng = Rng::new(0xAD02);
     let mut queries = Vec::new();
     for _ in 0..200 {
-        let mut caps = [0.0f64; 8];
+        let mut caps = vec![0.0f64; 8];
         for c in caps.iter_mut() {
             *c = rng.uniform(5.0, 60.0);
         }
         queries.push(PerfQuery {
             sig: random_signature(&mut rng),
-            threads: [1 + rng.below(9) as usize, 1 + rng.below(9) as usize],
+            threads: vec![1 + rng.below(9) as usize,
+                          1 + rng.below(9) as usize],
             demand_pt: [rng.uniform(0.5, 8.0), rng.uniform(0.0, 4.0)],
             caps,
         });
@@ -183,6 +194,211 @@ fn enumerate_placements_covers_the_evaluation_sweep() {
     let ps = enumerate_placements(&m, 18);
     assert_eq!(ps, ThreadPlacement::all_splits(&m, 18));
     assert_eq!(ps.len(), 19);
+}
+
+/// Compositions of `total` into `parts` parts, each `<= cap`, by
+/// inclusion–exclusion over the uncapped stars-and-bars count.
+fn capped_compositions(total: usize, parts: usize, cap: usize) -> i64 {
+    fn binom(n: i64, k: i64) -> i64 {
+        if k < 0 || k > n {
+            return 0;
+        }
+        let mut r: i64 = 1;
+        // Exact at every step: r always holds C(n, i+1)'s running product.
+        for i in 0..k {
+            r = r * (n - i) / (i + 1);
+        }
+        r
+    }
+    let (t, p, c) = (total as i64, parts as i64, cap as i64);
+    let mut sum = 0i64;
+    for k in 0..=p {
+        let rem = t - k * (c + 1);
+        if rem < 0 {
+            break;
+        }
+        let term = binom(p, k) * binom(rem + p - 1, p - 1);
+        sum += if k % 2 == 0 { term } else { -term };
+    }
+    sum
+}
+
+#[test]
+fn four_socket_enumeration_matches_the_closed_form() {
+    let quad = MachineTopology::synthetic_quad();
+    // Uncapped regime (total <= cores_per_socket) and the capped tail.
+    for total in [1, 4, 8, 13, 20, 29, 32] {
+        let ps = enumerate_placements(&quad, total);
+        let want = capped_compositions(total, 4, quad.cores_per_socket);
+        assert_eq!(ps.len() as i64, want, "total={total}");
+        for p in &ps {
+            assert_eq!(p.total(), total);
+            assert!(p
+                .threads_per_socket
+                .iter()
+                .all(|&t| t <= quad.cores_per_socket));
+        }
+        // Deterministic lexicographic order, no duplicates.
+        for w in ps.windows(2) {
+            assert!(w[0].threads_per_socket < w[1].threads_per_socket);
+        }
+        // And a second call reproduces it exactly.
+        assert_eq!(ps, enumerate_placements(&quad, total));
+    }
+    // Spot-check the two interesting counts by hand: C(11,3) = 165 and
+    // the capped 375 at total 20.
+    assert_eq!(enumerate_placements(&quad, 8).len(), 165);
+    assert_eq!(enumerate_placements(&quad, 20).len(), 375);
+}
+
+/// The pre-refactor 2-socket scoring path, inlined verbatim (fixed-size
+/// caps, hard-coded flow/resource table, headroom over resources 4..8).
+/// The socket-generic advisor must reproduce it bit for bit.
+fn two_socket_oracle(machine: &MachineTopology, workload: &WorkloadSpec,
+                     sig: &BandwidthSignature, total: usize)
+    -> Vec<(Vec<usize>, f64, f64)> {
+    use numabw::simulator::contention::{maxmin, Flow};
+    let caps: [f64; 8] = machine.capacities().try_into().unwrap();
+    let flow_res = |src: usize, dst: usize, rw: usize| {
+        let chan = if rw == 0 { dst } else { 2 + dst };
+        let link = if src != dst {
+            Some(if rw == 0 {
+                4 + if dst == 0 { 0 } else { 1 }
+            } else {
+                6 + if src == 0 { 0 } else { 1 }
+            })
+        } else {
+            None
+        };
+        (chan, link)
+    };
+    let mut scores = Vec::new();
+    for p in ThreadPlacement::all_splits(machine, total) {
+        let peak = workload.bw_per_thread.min(machine.core_peak_bw);
+        let m = sig.combined.apply(&p.threads_per_socket);
+        let n = p.total().max(1) as f64;
+        let mut lat = 0.0;
+        for (src, &cnt) in p.threads_per_socket.iter().enumerate() {
+            for (dst, w) in m[src].iter().enumerate() {
+                lat += cnt as f64 / n * w * machine.latency_ns(src, dst);
+            }
+        }
+        let scale = (1.0 - workload.latency_sensitivity)
+            + workload.latency_sensitivity * machine.local_latency_ns
+                / lat.max(machine.local_latency_ns);
+        let per_thread = peak * scale;
+        let demand_pt = [
+            per_thread * workload.read_fraction,
+            per_thread * (1.0 - workload.read_fraction),
+        ];
+        let threads = [p.threads_per_socket[0], p.threads_per_socket[1]];
+        let mut flows = Vec::with_capacity(8);
+        for src in 0..2 {
+            for dst in 0..2 {
+                for rw in 0..2 {
+                    let demand =
+                        threads[src] as f64 * m[src][dst] * demand_pt[rw];
+                    let (chan, link) = flow_res(src, dst, rw);
+                    let mut rs = vec![chan];
+                    if let Some(l) = link {
+                        rs.push(l);
+                    }
+                    flows.push(Flow::new(demand, &rs));
+                }
+            }
+        }
+        let alloc = maxmin(&flows, &caps);
+        let mut loads = [0.0f64; 8];
+        for src in 0..2 {
+            for dst in 0..2 {
+                for rw in 0..2 {
+                    let a = alloc[src * 4 + dst * 2 + rw];
+                    let (chan, link) = flow_res(src, dst, rw);
+                    loads[chan] += a;
+                    if let Some(l) = link {
+                        loads[l] += a;
+                    }
+                }
+            }
+        }
+        let headroom = (4..8)
+            .map(|r| {
+                if caps[r] > 0.0 {
+                    1.0 - loads[r] / caps[r]
+                } else {
+                    0.0
+                }
+            })
+            .fold(1.0, f64::min)
+            .clamp(0.0, 1.0);
+        scores.push((
+            p.threads_per_socket.clone(),
+            alloc.iter().sum::<f64>(),
+            headroom,
+        ));
+    }
+    scores.sort_by(|a, b| {
+        b.1.total_cmp(&a.1)
+            .then(b.2.total_cmp(&a.2))
+            .then(a.0.cmp(&b.0))
+    });
+    scores
+}
+
+#[test]
+fn generic_scoring_is_bit_identical_to_the_pre_refactor_two_socket_path() {
+    // The S=2 pin the acceptance criteria demand: on both paper machines
+    // the generalised flow layout, headroom accounting, and ranking
+    // reproduce the pre-refactor implementation bit for bit — the model's
+    // validated numbers (median 2.34% error) cannot have moved.
+    let svc = PredictionService::reference();
+    for machine in MachineTopology::paper_machines() {
+        for name in ["cg", "npo", "ep"] {
+            let (w, sig) = fitted(&svc, &machine, name);
+            let total = machine.cores_per_socket;
+            let served = advise(&svc, &machine, &w, &sig, total).unwrap();
+            let golden = two_socket_oracle(&machine, &w, &sig, total);
+            assert_eq!(served.ranked.len(), golden.len());
+            for (got, want) in served.ranked.iter().zip(&golden) {
+                assert_eq!(got.placement.threads_per_socket, want.0,
+                           "{}/{name}: order diverged", machine.name);
+                assert_eq!(got.predicted_bw.to_bits(), want.1.to_bits(),
+                           "{}/{name}: predicted bw moved", machine.name);
+                assert_eq!(got.qpi_headroom.to_bits(), want.2.to_bits(),
+                           "{}/{name}: headroom moved", machine.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn four_socket_advise_serves_fit_multi_signatures_end_to_end() {
+    // The acceptance scenario: a ranked placement list on the synthetic
+    // quad machine, signature fitted through fit_channel_multi (the
+    // service dispatches on socket count), scored through the generic
+    // flow layout, bit-identical between the batched and brute-force
+    // paths.
+    let svc = PredictionService::reference();
+    let quad = MachineTopology::synthetic_quad();
+    let (w, sig) = fitted(&svc, &quad, "cg");
+    let advice = advise(&svc, &quad, &w, &sig, 8).unwrap();
+    assert_eq!(advice.ranked.len(), 165, "capped stars-and-bars count");
+    let brute = advise_brute_force(&svc, &quad, &w, &sig, 8).unwrap();
+    for (a, b) in advice.ranked.iter().zip(&brute.ranked) {
+        assert_eq!(a.placement, b.placement);
+        assert_eq!(a.predicted_bw.to_bits(), b.predicted_bw.to_bits());
+        assert_eq!(a.qpi_headroom.to_bits(), b.qpi_headroom.to_bits());
+    }
+    for s in &advice.ranked {
+        assert_eq!(s.placement.threads_per_socket.len(), 4);
+        assert!(s.predicted_bw.is_finite());
+        assert!(s.predicted_bw <= s.demanded_bw * (1.0 + 1e-9));
+        assert!((0.0..=1.0).contains(&s.qpi_headroom));
+    }
+    // Ranking is genuinely ordered.
+    for w2 in advice.ranked.windows(2) {
+        assert!(w2[0].predicted_bw >= w2[1].predicted_bw);
+    }
 }
 
 #[test]

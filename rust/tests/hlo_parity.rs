@@ -135,9 +135,9 @@ fn hlo_counter_prediction_matches_reference() {
             let t1 = rng.below(18) as usize;
             CounterQuery {
                 sig: random_signature(&mut rng),
-                threads: [t0, t1],
-                cpu_totals: [rng.uniform(0.0, 1e10),
-                             rng.uniform(0.0, 1e10)],
+                threads: vec![t0, t1],
+                cpu_totals: vec![rng.uniform(0.0, 1e10),
+                                 rng.uniform(0.0, 1e10)],
             }
         })
         .collect();
@@ -163,14 +163,14 @@ fn hlo_performance_prediction_matches_reference() {
     let mut rng = Rng::new(0xC2C2);
     let queries: Vec<PerfQuery> = (0..80)
         .map(|_| {
-            let mut caps = [0.0; 8];
+            let mut caps = vec![0.0; 8];
             for c in caps.iter_mut() {
                 *c = rng.uniform(5.0, 60.0);
             }
             PerfQuery {
                 sig: random_signature(&mut rng),
-                threads: [1 + rng.below(9) as usize,
-                          1 + rng.below(9) as usize],
+                threads: vec![1 + rng.below(9) as usize,
+                              1 + rng.below(9) as usize],
                 demand_pt: [rng.uniform(0.5, 8.0), rng.uniform(0.0, 4.0)],
                 caps,
             }
@@ -200,13 +200,13 @@ fn engine_rejects_wrong_shapes() {
 #[ignore]
 fn dump_first_perf_query() {
     let mut rng = Rng::new(0xC2C2);
-    let mut caps = [0.0; 8];
+    let mut caps = vec![0.0; 8];
     for c in caps.iter_mut() {
         *c = rng.uniform(5.0, 60.0);
     }
     let q = PerfQuery {
         sig: random_signature(&mut rng),
-        threads: [1 + rng.below(9) as usize, 1 + rng.below(9) as usize],
+        threads: vec![1 + rng.below(9) as usize, 1 + rng.below(9) as usize],
         demand_pt: [rng.uniform(0.5, 8.0), rng.uniform(0.0, 4.0)],
         caps,
     };

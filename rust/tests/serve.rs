@@ -27,7 +27,7 @@ use numabw::workloads;
 /// advisor's production shape: a bounded placement set, many askers).
 fn perf_stream(machine: &MachineTopology, n: usize, seed: u64)
     -> Vec<PerfQuery> {
-    let caps: [f64; 8] = machine.capacities().try_into().unwrap();
+    let caps = machine.capacities();
     let splits =
         ThreadPlacement::all_splits(machine, machine.cores_per_socket);
     let mut rng = Rng::new(seed);
@@ -44,9 +44,9 @@ fn perf_stream(machine: &MachineTopology, n: usize, seed: u64)
             };
             PerfQuery {
                 sig,
-                threads: [p.threads_per_socket[0], p.threads_per_socket[1]],
+                threads: p.threads_per_socket.clone(),
                 demand_pt: [2.0e9, 1.0e9],
-                caps,
+                caps: caps.clone(),
             }
         })
         .collect()
@@ -244,16 +244,16 @@ fn repeated_stream_through_frontend_exceeds_90_percent_hit_rate() {
     // The acceptance-criteria scenario: a repeated 1024-query stream over
     // a bounded placement set served through the shared LRU.
     let machine = MachineTopology::xeon_e5_2699_v3();
-    let caps: [f64; 8] = machine.capacities().try_into().unwrap();
+    let caps = machine.capacities();
     let splits = ThreadPlacement::all_splits(&machine, 18);
     let queries: Vec<PerfQuery> = (0..1024)
         .map(|i| {
             let p = &splits[i % splits.len()];
             PerfQuery {
                 sig: ChannelSignature::new(0.2, 0.35, 0.3, 1),
-                threads: [p.threads_per_socket[0], p.threads_per_socket[1]],
+                threads: p.threads_per_socket.clone(),
                 demand_pt: [2.0e9, 1.0e9],
-                caps,
+                caps: caps.clone(),
             }
         })
         .collect();
@@ -269,6 +269,114 @@ fn repeated_stream_through_frontend_exceeds_90_percent_hit_rate() {
         "19 unique placements over 1024 queries must hit >= 90%: {:?}",
         stats.perf
     );
+}
+
+#[test]
+fn malformed_wire_input_errors_per_request_and_daemon_survives() {
+    // An out-of-range static socket used to reach the §4 kernel's
+    // `assert!(sig.static_socket < s)` and kill the dispatcher thread;
+    // now the protocol boundary rejects it and later requests still get
+    // answered.
+    let transcript = "\
+        {\"id\":1,\"op\":\"counters\",\"sig\":{\"static\":0.5,\
+         \"local\":0.2,\"perthread\":0.1,\"static_socket\":7,\
+         \"misfit\":0},\"threads\":[3,1],\"cpu_totals\":[3.0,1.0]}\n\
+        {\"id\":2,\"op\":\"perf\",\"sig\":{\"static\":0.2,\"local\":0.35,\
+         \"perthread\":0.3,\"static_socket\":1,\"misfit\":0},\
+         \"threads\":[2,2,2],\"demand_pt\":[1e9,1e9],\
+         \"caps\":[1,2,3,4,5,6,7,8]}\n\
+        {\"id\":3,\"op\":\"counters\",\"sig\":{\"static\":0.25,\
+         \"local\":0.5,\"perthread\":0.125,\"static_socket\":1,\
+         \"misfit\":0},\"threads\":[2,2],\"cpu_totals\":[4.0,2.0]}\n";
+    let mut out = Vec::new();
+    serve_lines(
+        PredictionService::reference(),
+        ServeOptions::default(),
+        transcript.as_bytes(),
+        &mut out,
+    )
+    .unwrap();
+    let out = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = out.lines().collect();
+    assert_eq!(lines.len(), 3, "{out}");
+    let first = numabw::util::json::Json::parse(lines[0]).unwrap();
+    assert_eq!(first.get("ok").and_then(|j| j.as_bool()), Some(false));
+    let err = first.get("error").unwrap().as_str().unwrap();
+    assert!(err.contains("static_socket"), "{err}");
+    let second = numabw::util::json::Json::parse(lines[1]).unwrap();
+    assert_eq!(second.get("ok").and_then(|j| j.as_bool()), Some(false));
+    assert!(second
+        .get("error")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .contains("caps"));
+    // The dispatcher survived both: the valid request is served with the
+    // smoke transcript's known answer.
+    let third = numabw::util::json::Json::parse(lines[2]).unwrap();
+    assert_eq!(third.get("ok").and_then(|j| j.as_bool()), Some(true),
+               "{out}");
+    let banks = third.get("result").unwrap().as_arr().unwrap()[0]
+        .as_arr()
+        .unwrap();
+    assert_eq!(banks[0].as_f64_vec().unwrap(), vec![2.5, 0.25]);
+}
+
+#[test]
+fn four_socket_advise_op_serves_through_the_daemon() {
+    // The serve daemon's advise op on the synthetic quad machine: fit via
+    // fit_multi under the registry, scoring through the coalescing
+    // front-end — the end-to-end acceptance scenario.
+    let transcript =
+        "{\"id\":1,\"op\":\"advise\",\"machine\":\"quad4\",\
+         \"workload\":\"cg\",\"threads\":8,\"top\":3}\n";
+    let mut out = Vec::new();
+    serve_lines(
+        PredictionService::reference(),
+        ServeOptions::default(),
+        transcript.as_bytes(),
+        &mut out,
+    )
+    .unwrap();
+    let out = String::from_utf8(out).unwrap();
+    let reply =
+        numabw::util::json::Json::parse(out.lines().next().unwrap())
+            .unwrap();
+    assert_eq!(reply.get("ok").and_then(|j| j.as_bool()), Some(true),
+               "{out}");
+    let result = reply.get("result").unwrap();
+    assert_eq!(result.get("machine").unwrap().as_str(),
+               Some("synth-quad-4s"));
+    // 165 = compositions of 8 threads over 4 sockets of 8 cores.
+    assert_eq!(result.get("candidates").unwrap().as_f64(), Some(165.0));
+    let ranked = result.get("ranked").unwrap().as_arr().unwrap();
+    assert_eq!(ranked.len(), 3);
+    for entry in ranked {
+        let threads = entry.get("threads").unwrap().as_f64_vec().unwrap();
+        assert_eq!(threads.len(), 4, "quad placements have 4 entries");
+        assert_eq!(threads.iter().sum::<f64>(), 8.0);
+    }
+    // And it matches the in-process advisor on the same fit seed.
+    let svc = PredictionService::reference();
+    let machine = MachineTopology::by_name("quad4").unwrap();
+    let w = workloads::find("cg").unwrap();
+    let sim = Simulator::new(machine.clone(), SimConfig::default());
+    let pair = profile(&sim, &w);
+    let sig = svc
+        .fit(&[FitRequest { sym: pair.sym, asym: pair.asym }])
+        .unwrap()
+        .pop()
+        .unwrap();
+    let advice = advisor::advise(&svc, &machine, &w, &sig, 8).unwrap();
+    let want: Vec<f64> = advice
+        .best()
+        .placement
+        .threads_per_socket
+        .iter()
+        .map(|&t| t as f64)
+        .collect();
+    assert_eq!(ranked[0].get("threads").unwrap().as_f64_vec().unwrap(),
+               want);
 }
 
 #[test]
