@@ -3,9 +3,10 @@
 //!
 //!     cargo run --release --example quickstart
 //!
-//! Uses the Rust reference model so it works before `make artifacts`; pass
-//! `--hlo` to route the fit and predictions through the AOT-compiled
-//! Pallas pipelines on PJRT.
+//! Uses the Rust reference model by default; pass
+//! `--engine native|pjrt` to route the fit and predictions through a
+//! batched execution backend (native runs everywhere; pjrt needs the AOT
+//! artifacts and the `xla` crate).
 
 use numabw::coordinator::{profile, FitRequest, PredictionService};
 use numabw::model::misfit;
@@ -14,12 +15,15 @@ use numabw::report;
 use numabw::workloads::suite;
 
 fn main() -> anyhow::Result<()> {
-    let use_hlo = std::env::args().any(|a| a == "--hlo");
-    let svc = if use_hlo {
-        PredictionService::auto()
-    } else {
-        PredictionService::reference()
-    };
+    let args: Vec<String> = std::env::args().collect();
+    let engine = args
+        .iter()
+        .position(|a| a == "--engine")
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+        .unwrap_or("reference");
+    let svc = PredictionService::by_name(engine)?;
+    println!("engine:   {}", svc.backend_name());
 
     // The 18-core Haswell testbed from the paper, and the CG benchmark.
     let machine = MachineTopology::xeon_e5_2699_v3();

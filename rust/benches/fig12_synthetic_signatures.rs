@@ -18,7 +18,7 @@ fn main() {
     let mut h = Harness::new("fig12");
     let svc = PredictionService::auto();
     println!("backend: {}\n",
-             if svc.is_hlo() { "HLO/PJRT" } else { "rust-reference" });
+             svc.backend_name());
     let mut worst = 0.0f64;
 
     for machine in MachineTopology::paper_machines() {

@@ -15,7 +15,7 @@ fn main() {
     let mut h = Harness::new("fig13");
     let svc = PredictionService::auto();
     println!("backend: {}\n",
-             if svc.is_hlo() { "HLO/PJRT" } else { "rust-reference" });
+             svc.backend_name());
     let ws = suite::table1();
 
     for machine in MachineTopology::paper_machines() {

@@ -23,7 +23,7 @@ fn main() {
     let mut h = Harness::new("fig17_18");
     let svc = PredictionService::auto();
     println!("backend: {}\n",
-             if svc.is_hlo() { "HLO/PJRT" } else { "rust-reference" });
+             svc.backend_name());
     let ws = suite::table1();
 
     let mut evs = Vec::new();

@@ -2,7 +2,8 @@
 //! the numbers recorded in EXPERIMENTS.md §Perf.
 //!
 //! L3 paths: simulator epoch loop, max-min solver, §5 fit (Rust), §4
-//! apply (Rust), batched prediction service (Rust reference vs HLO/PJRT),
+//! apply (Rust), batched prediction service (Rust reference vs the
+//! native batched f32 engine vs HLO/PJRT when artifacts exist),
 //! end-to-end evaluation throughput.
 //!
 //! Run: `cargo bench --bench perf_hotpaths`
@@ -190,6 +191,51 @@ fn main() {
         stats.perf.hit_rate() >= 0.90 && stats.matrix.hit_rate() >= 0.90,
         "repeated-stream serving must run >= 90% out of the shared LRU"
     );
+
+    // ---- native batched f32 engine vs reference -----------------------------
+    // The same streams through `--engine native`: full-batch f32 packing +
+    // the in-process batched kernels, uncached and cached.
+    let native = PredictionService::native();
+    let r = h.bench("predict_counters_256_native", || {
+        black_box(native.predict_counters(&queries).unwrap())
+    });
+    println!(
+        "  -> {:.2}M predictions/s (native f32 engine, incl. pack/unpack)\n",
+        256.0 / r.summary.median / 1e6
+    );
+    let native_perf_s = h
+        .bench("perf_1024_native_engine_uncached", || {
+            black_box(native.predict_performance(&perf_queries).unwrap())
+        })
+        .summary
+        .median;
+    println!(
+        "  -> native engine vs per-query reference loop on the \
+         1024-query perf stream: {:.1}x\n",
+        per_query_s / native_perf_s
+    );
+    let native_serving = PredictionService::native();
+    let native_served_s = h
+        .bench("perf_1024_native_batched_cached", || {
+            black_box(native_serving.serve_perf(&perf_queries).unwrap())
+        })
+        .summary
+        .median;
+    println!(
+        "  -> batched+cached serving, reference vs native engine: \
+         {:.2}x ({:.3} ms vs {:.3} ms per 1024 queries)\n",
+        served_s / native_served_s,
+        served_s * 1e3,
+        native_served_s * 1e3
+    );
+    let native_fit_reqs: Vec<FitRequest> = (0..21)
+        .map(|_| FitRequest { sym: sym.clone(), asym: asym.clone() })
+        .collect();
+    let r = h.bench("fit_21_workloads_native", || {
+        black_box(native.fit(&native_fit_reqs).unwrap())
+    });
+    println!("  -> {:.1}k fits/s (native; 63 rows, 1 batch)\n",
+             21.0 / r.summary.median / 1e3);
 
     match numabw::runtime::Engine::from_env() {
         Ok(engine) => {

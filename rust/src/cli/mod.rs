@@ -8,8 +8,9 @@
 //!   predict    — apply a fitted signature to a placement (§4)
 //!   advise     — rank every thread placement (batched+cached serving;
 //!                store-backed fit-once serving via --store)
-//!   serve      — long-lived JSONL daemon over stdin/stdout: concurrent
-//!                coalescing front-end + store-backed model registry
+//!   serve      — long-lived JSONL daemon (stdin/stdout, TCP, or unix
+//!                socket via --listen): concurrent coalescing front-end
+//!                + store-backed model registry
 //!   evaluate   — full measured-vs-predicted sweep (§6.2.2, Figs 16–18)
 //!   quickstart — tiny end-to-end demo
 
@@ -31,16 +32,38 @@ use crate::workloads::{self, suite, WorkloadSpec};
 
 pub fn main_with(args: Vec<String>) -> Result<()> {
     let args = Args::parse(args);
+    // Per-subcommand flag allowlists: a typo (or a removed flag such as
+    // the pre-backend-trait `--hlo`) must error, not silently change
+    // which engine serves.
+    let known = |allowed: &[&str]| -> Result<()> {
+        args.ensure_known(allowed).map_err(|e| anyhow!("{e}"))
+    };
     match args.command.as_deref() {
-        Some("machines") => cmd_machines(),
-        Some("workloads") => cmd_workloads(),
-        Some("profile") => cmd_profile(&args),
-        Some("fit") => cmd_fit(&args),
-        Some("predict") => cmd_predict(&args),
-        Some("advise") => cmd_advise(&args),
-        Some("serve") => cmd_serve(&args),
-        Some("evaluate") => cmd_evaluate(&args),
-        Some("quickstart") => cmd_quickstart(),
+        Some("machines") => known(&[]).and_then(|_| cmd_machines()),
+        Some("workloads") => known(&[]).and_then(|_| cmd_workloads()),
+        Some("profile") => known(&["workload", "machine", "seed"])
+            .and_then(|_| cmd_profile(&args)),
+        Some("fit") => {
+            known(&["workload", "machine", "engine", "save", "seed"])
+                .and_then(|_| cmd_fit(&args))
+        }
+        Some("predict") => known(&[
+            "workload", "machine", "engine", "store", "t0", "t1",
+            "split", "seed",
+        ])
+        .and_then(|_| cmd_predict(&args)),
+        Some("advise") => known(&[
+            "workload", "machine", "threads", "top", "engine", "store",
+            "seed",
+        ])
+        .and_then(|_| cmd_advise(&args)),
+        Some("serve") => known(&[
+            "listen", "store", "seed", "batch", "window-ms", "engine",
+        ])
+        .and_then(|_| cmd_serve(&args)),
+        Some("evaluate") => known(&["machine", "engine", "seed"])
+            .and_then(|_| cmd_evaluate(&args)),
+        Some("quickstart") => known(&[]).and_then(|_| cmd_quickstart()),
         Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
         None => {
             println!("{USAGE}");
@@ -57,32 +80,39 @@ USAGE: numabw <subcommand> [flags]
   machines                          list machine topologies
   workloads                         list the Table-1 workload suite
   profile   --workload W [--machine M]       run the two §5.1 runs
-  fit       --workload W [--machine M] [--hlo] [--save F]
+  fit       --workload W [--machine M] [--engine E] [--save F]
                                     fit + print (optionally store) the
                                     signature
   predict   --workload W (--t0 N --t1 N | --split a,b,..) [--machine M]
-            [--hlo] [--store F]
+            [--engine E] [--store F]
                                     predict a placement's traffic matrix
                                     (from a stored signature if --store;
                                     --split takes one count per socket)
-  advise    --workload W [--machine M] [--threads N] [--top K] [--hlo]
-            [--store F] [--seed S]
+  advise    --workload W [--machine M] [--threads N] [--top K]
+            [--engine E] [--store F] [--seed S]
                                     rank every valid thread placement by
                                     predicted bandwidth (Pandia-style;
                                     batched+cached serving path); with
                                     --store, fit once into F and serve
                                     forever (seed-guarded)
-  serve     [--store F] [--seed S] [--batch N] [--window-ms W] [--hlo]
-                                    line-delimited JSON daemon on
-                                    stdin/stdout: ops counters|perf|
-                                    advise|stats through the concurrent
-                                    coalescing front-end + model registry
-  evaluate  [--machine M] [--hlo] [--seed S]    full §6.2.2 sweep
+  serve     [--listen A] [--store F] [--seed S] [--batch N]
+            [--window-ms W] [--engine E]
+                                    line-delimited JSON daemon: ops
+                                    counters|perf|advise|stats through
+                                    the concurrent coalescing front-end
+                                    + model registry.  Default transport
+                                    is stdin/stdout; --listen serves TCP
+                                    (host:port) or a unix socket
+                                    (unix:/path), one thread per
+                                    connection into the same front-end
+  evaluate  [--machine M] [--engine E] [--seed S]   full §6.2.2 sweep
   quickstart                        tiny end-to-end demo
 
 Flags: --machine xeon8|xeon18|quad4 (default xeon18; quad4 is the
 synthetic 4-socket machine — every subcommand is socket-count-generic);
---hlo uses the AOT PJRT pipelines (default: Rust reference model);
+--engine reference|native|pjrt (default reference: the per-row f64
+model; native: the batched f32 engine, any socket count; pjrt: the AOT
+HLO pipelines, falls back to reference when the xla crate is absent);
 --seed u64.";
 
 fn machine_flag(args: &Args) -> Result<MachineTopology> {
@@ -106,12 +136,8 @@ fn seed_flag(args: &Args) -> u64 {
         .unwrap_or(SimConfig::default().seed)
 }
 
-fn service_flag(args: &Args) -> PredictionService {
-    if args.get_bool("hlo") {
-        PredictionService::auto()
-    } else {
-        PredictionService::reference()
-    }
+fn service_flag(args: &Args) -> Result<PredictionService> {
+    PredictionService::by_name(args.get_or("engine", "reference"))
 }
 
 fn sim_flag(args: &Args, machine: MachineTopology) -> Simulator {
@@ -204,7 +230,7 @@ fn cmd_fit(args: &Args) -> Result<()> {
     let machine = machine_flag(args)?;
     let w = workload_flag(args)?;
     let sim = sim_flag(args, machine);
-    let svc = service_flag(args);
+    let svc = service_flag(args)?;
     let pair = profile(&sim, &w);
     let sig = &svc.fit(&[FitRequest {
         sym: pair.sym,
@@ -287,7 +313,7 @@ fn cmd_predict(args: &Args) -> Result<()> {
                     args.get_or("machine", "xeon18"))
         })?
     } else {
-        let svc = service_flag(args);
+        let svc = service_flag(args)?;
         let pair = profile(&sim, &w);
         svc.fit(&[FitRequest {
             sym: pair.sym,
@@ -358,7 +384,7 @@ fn cmd_advise(args: &Args) -> Result<()> {
     let machine = machine_flag(args)?;
     let w = workload_flag(args)?;
     let sim = sim_flag(args, machine);
-    let svc = service_flag(args);
+    let svc = service_flag(args)?;
     let total = args.get_usize("threads", sim.machine.cores_per_socket);
     let top = args.get_usize("top", 5).max(1);
     println!(
@@ -366,7 +392,7 @@ fn cmd_advise(args: &Args) -> Result<()> {
          (backend: {})\n",
         w.name,
         sim.machine.name,
-        if svc.is_hlo() { "HLO/PJRT" } else { "rust-reference" }
+        svc.backend_name()
     );
     let sig = advise_signature(args, &svc, &sim, &w)?;
     let advice = advisor::advise(&svc, &sim.machine, &w, &sig, total)?;
@@ -404,7 +430,7 @@ fn cmd_advise(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let svc = service_flag(args);
+    let svc = service_flag(args)?;
     let opts = ServeOptions {
         store: args.get("store").map(std::path::PathBuf::from),
         seed: seed_flag(args),
@@ -415,6 +441,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
             (args.get_f64("window-ms", 2.0) * 1000.0) as u64,
         ),
     };
+    if let Some(addr) = args.get("listen") {
+        // Socket transports: TCP (`host:port`) or unix (`unix:/path`),
+        // one thread per connection, all coalescing into one front-end.
+        let listener = match addr.strip_prefix("unix:") {
+            Some(path) => server::LineServer::start_unix(
+                svc,
+                opts,
+                std::path::Path::new(path),
+            )?,
+            None => server::LineServer::start_tcp(svc, opts, addr)?,
+        };
+        eprintln!(
+            "numabw serve: listening on {}",
+            listener.endpoint_display()
+        );
+        return listener.run_forever();
+    }
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
     let summary =
@@ -426,13 +469,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_evaluate(args: &Args) -> Result<()> {
     let machine = machine_flag(args)?;
     let sim = sim_flag(args, machine);
-    let svc = service_flag(args);
+    let svc = service_flag(args)?;
     let ws = suite::table1();
     println!(
         "evaluating {} workloads on {} (backend: {}) ...",
         ws.len(),
         sim.machine.name,
-        if svc.is_hlo() { "HLO/PJRT" } else { "rust-reference" }
+        svc.backend_name()
     );
     let ev = evaluate_suite(&sim, &svc, &ws, None)?;
     let cdf = eval::error_cdf(&ev);
@@ -530,6 +573,47 @@ mod tests {
             "advise --workload chase-static --machine xeon8 --threads 4"
         ))
         .unwrap();
+    }
+
+    #[test]
+    fn native_engine_serves_every_machine_from_the_cli() {
+        // The batched f32 engine behind --engine native: 2-socket fit +
+        // advise, and the S-generic path on the synthetic quad machine
+        // (the scenario the compiled 2-socket pipelines used to reject).
+        main_with(toks(
+            "fit --workload cg --machine xeon8 --engine native"
+        ))
+        .unwrap();
+        main_with(toks(
+            "advise --workload cg --machine xeon8 --top 3 --engine native"
+        ))
+        .unwrap();
+        main_with(toks(
+            "advise --workload cg --machine quad4 --threads 8 --top 3 \
+             --engine native"
+        ))
+        .unwrap();
+        // Unknown engines error cleanly.
+        assert!(main_with(toks(
+            "fit --workload cg --engine warp"
+        ))
+        .is_err());
+    }
+
+    #[test]
+    fn removed_and_misspelled_flags_are_rejected() {
+        // `--hlo` predates the backend trait; silently ignoring it would
+        // serve a different engine than the caller asked for.
+        let err = main_with(toks("evaluate --machine xeon8 --hlo"))
+            .unwrap_err();
+        assert!(format!("{err}").contains("unknown flag --hlo"), "{err}");
+        // Typos are caught, not dropped.
+        let err = main_with(toks(
+            "advise --workload cg --machine xeon8 --engne native"
+        ))
+        .unwrap_err();
+        assert!(format!("{err}").contains("unknown flag --engne"),
+                "{err}");
     }
 
     #[test]

@@ -5,11 +5,16 @@
 //!
 //! * The **backend calls** ([`PredictionService::fit`],
 //!   [`PredictionService::predict_counters`],
-//!   [`PredictionService::predict_performance`]) execute through the AOT
-//!   HLO pipelines when an engine is available, or through the Rust
-//!   reference model otherwise (`PredictionService::reference()`), so
-//!   every caller works in both modes and the two paths can be compared
-//!   (see `tests/hlo_parity.rs`).
+//!   [`PredictionService::predict_performance`]) dispatch through an
+//!   [`ExecutionBackend`] — the native batched f32 engine
+//!   (`PredictionService::native()`), the PJRT handle for the AOT HLO
+//!   artifacts (`PredictionService::hlo`), or the f64 Rust reference
+//!   model (`PredictionService::reference()`) — so every caller works
+//!   against any backend and the engines can be compared to the
+//!   reference (see `tests/engine_parity.rs`).  Engine batches group
+//!   queries by socket count (shapes are per-S); a fixed-shape backend
+//!   (PJRT's compiled 2-socket artifacts) rejects other socket counts
+//!   per request, while the native engine executes any S.
 //!
 //! * The **serving front-end** ([`PredictionService::serve_counters`],
 //!   [`PredictionService::serve_perf`], [`CounterBatcher`]) coalesces
@@ -46,7 +51,9 @@ use crate::counters::{Channel, ProfiledRun};
 use crate::model::signature::{BandwidthSignature, ChannelSignature};
 use crate::model::{apply, fit, fit_multi};
 use crate::report;
-use crate::runtime::{batches, Batch, Engine, Tensor};
+use crate::runtime::{
+    batches, Batch, Engine, ExecutionBackend, NativeEngine, Tensor,
+};
 use crate::util::lru::{CacheCounters, Lru};
 
 use super::pool::parallel_map;
@@ -166,8 +173,43 @@ fn validate_perf_queries(queries: &[PerfQuery]) -> Result<()> {
 }
 
 enum Backend {
-    Hlo(Engine),
+    /// A batched engine behind the [`ExecutionBackend`] trait (native or
+    /// PJRT).
+    Engine(Box<dyn ExecutionBackend>),
+    /// The per-row f64 Rust reference model.
     Reference,
+}
+
+/// Indices grouped by socket count, in first-appearance order — engine
+/// pipelines run per-S batches (tensor shapes carry S), so mixed streams
+/// are partitioned before packing.
+fn group_by_sockets<I: Iterator<Item = usize>>(it: I)
+    -> Vec<(usize, Vec<usize>)> {
+    let mut groups: Vec<(usize, Vec<usize>)> = Vec::new();
+    for (i, s) in it.enumerate() {
+        match groups.iter_mut().find(|(gs, _)| *gs == s) {
+            Some((_, v)) => v.push(i),
+            None => groups.push((s, vec![i])),
+        }
+    }
+    groups
+}
+
+/// A fixed-shape backend (the compiled PJRT artifacts) can only take its
+/// own socket count; S-generic backends (native) take any.
+fn check_engine_sockets(engine: &dyn ExecutionBackend, s: usize)
+    -> Result<()> {
+    if let Some(fixed) = engine.sockets() {
+        if s != fixed {
+            anyhow::bail!(
+                "the {} backend is compiled for {fixed}-socket shapes and \
+                 cannot serve a {s}-socket query (use the native or \
+                 reference engine)",
+                engine.name()
+            );
+        }
+    }
+    Ok(())
 }
 
 /// Default front-end batch size when no engine dictates one (matches the
@@ -203,7 +245,7 @@ fn matrix_key(sig: &ChannelSignature, threads: &[usize]) -> MatrixKey {
     }
 }
 
-/// Full-bit key of a counter query (HLO mode caches whole results: f32
+/// Full-bit key of a counter query (engine mode caches whole results: f32
 /// engine output is not linearly decomposable client-side without breaking
 /// parity with the engine).
 #[derive(Clone, PartialEq, Eq, Hash)]
@@ -221,39 +263,11 @@ struct PerfKey {
     caps: Vec<u64>,
 }
 
-/// Resource footprint of performance-query flow `(src, dst, rw)` on an
-/// S-socket machine (flow order `(src*S + dst)*2 + rw`, the S-socket
-/// generalisation of `model.py build_incidence`'s 2-socket
-/// `src*4 + dst*2 + rw`): the memory channel at the destination bank, plus
-/// the interconnect link for remote flows — read data crosses the
-/// `dst -> src` read link, write data the `src -> dst` write link.
-/// Index arithmetic matches
-/// [`crate::topology::MachineTopology::read_chan`] /
-/// [`write_chan`](crate::topology::MachineTopology::write_chan) /
-/// [`qpi_read_link`](crate::topology::MachineTopology::qpi_read_link) /
-/// [`qpi_write_link`](crate::topology::MachineTopology::qpi_write_link).
-/// Single source of truth shared by `perf_reference` and the advisor's
-/// headroom accounting.
-pub(crate) fn flow_resources(sockets: usize, src: usize, dst: usize,
-                             rw: usize) -> (usize, Option<usize>) {
-    let s = sockets;
-    // Dense index over ordered pairs (a, b), a != b (row-major, matching
-    // MachineTopology::link_offset).
-    let off = |a: usize, b: usize| {
-        a * (s - 1) + if b > a { b - 1 } else { b }
-    };
-    let chan = if rw == 0 { dst } else { s + dst };
-    let link = if src != dst {
-        Some(if rw == 0 {
-            2 * s + off(dst, src)
-        } else {
-            2 * s + s * (s - 1) + off(src, dst)
-        })
-    } else {
-        None
-    };
-    (chan, link)
-}
+/// Re-export of the shared flow→resource footprint (now owned by
+/// [`crate::topology`] so the runtime's synthesized incidence, the
+/// reference `perf_reference`, and the advisor's headroom accounting all
+/// read one table).
+pub(crate) use crate::topology::flow_resources;
 
 fn perf_key(q: &PerfQuery) -> PerfKey {
     PerfKey {
@@ -271,7 +285,7 @@ type PerfCache = Mutex<Lru<PerfKey, Arc<Vec<f64>>>>;
 ///
 /// One [`CacheCounters`] triple per memo cache: the §4 traffic-matrix
 /// cache (reference-mode counter serving), the full-result counter cache
-/// (HLO-mode counter serving), and the performance-query cache.
+/// (engine-mode counter serving), and the performance-query cache.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub matrix: CacheCounters,
@@ -373,7 +387,7 @@ pub struct PredictionService {
 impl PredictionService {
     fn with_backend(backend: Backend) -> PredictionService {
         let batch_hint = match &backend {
-            Backend::Hlo(engine) => engine.batch().max(1),
+            Backend::Engine(engine) => engine.batch().max(1),
             Backend::Reference => DEFAULT_BATCH,
         };
         PredictionService {
@@ -395,17 +409,30 @@ impl PredictionService {
         self
     }
 
-    /// Serve through the compiled HLO artifacts.
-    pub fn hlo(engine: Engine) -> PredictionService {
-        Self::with_backend(Backend::Hlo(engine))
+    /// Serve through any [`ExecutionBackend`] implementation.
+    pub fn with_engine(engine: Box<dyn ExecutionBackend>)
+        -> PredictionService {
+        Self::with_backend(Backend::Engine(engine))
     }
 
-    /// Serve through the Rust reference model (no PJRT).
+    /// Serve through the native batched f32 engine (any socket count, no
+    /// build step — see [`crate::runtime::NativeEngine`]).
+    pub fn native() -> PredictionService {
+        Self::with_engine(Box::new(NativeEngine::new()))
+    }
+
+    /// Serve through the compiled HLO artifacts (PJRT).
+    pub fn hlo(engine: Engine) -> PredictionService {
+        Self::with_engine(Box::new(engine))
+    }
+
+    /// Serve through the Rust reference model (per-row f64).
     pub fn reference() -> PredictionService {
         Self::with_backend(Backend::Reference)
     }
 
-    /// Try HLO, fall back to reference with a warning.
+    /// Try PJRT, fall back to reference with a warning (the historical
+    /// `--hlo` behavior; in the offline build this always falls back).
     pub fn auto() -> PredictionService {
         match Engine::from_env() {
             Ok(engine) => PredictionService::hlo(engine),
@@ -419,8 +446,40 @@ impl PredictionService {
         }
     }
 
-    pub fn is_hlo(&self) -> bool {
-        matches!(self.backend, Backend::Hlo(_))
+    /// Resolve a service from its CLI name (`--engine ...`).
+    pub fn by_name(name: &str) -> Result<PredictionService> {
+        match name {
+            "reference" | "ref" => Ok(Self::reference()),
+            "native" => Ok(Self::native()),
+            "pjrt" | "hlo" => Ok(Self::auto()),
+            other => Err(anyhow!(
+                "unknown engine {other:?} (reference|native|pjrt)"
+            )),
+        }
+    }
+
+    /// True when serving through a batched engine (native or PJRT).
+    pub fn is_engine(&self) -> bool {
+        matches!(self.backend, Backend::Engine(_))
+    }
+
+    /// Short backend name for logs and CLI banners.
+    pub fn backend_name(&self) -> &'static str {
+        match &self.backend {
+            Backend::Engine(engine) => engine.name(),
+            Backend::Reference => "rust-reference",
+        }
+    }
+
+    /// The socket count this service's backend is restricted to, or
+    /// `None` when it serves any S (reference and native).  The serving
+    /// protocol turns a mismatch into a per-request error *before* the
+    /// query joins a coalesced batch.
+    pub fn supported_sockets(&self) -> Option<usize> {
+        match &self.backend {
+            Backend::Engine(engine) => engine.sockets(),
+            Backend::Reference => None,
+        }
     }
 
     /// The batch size the serving front-end coalesces into.
@@ -441,36 +500,64 @@ impl PredictionService {
 
     /// Fit full signatures for a batch of run pairs.
     ///
-    /// 2-socket runs go through the paper's exact fit ([`fit::fit_run_pair`]
-    /// or, in HLO mode, the compiled `fit_signature` pipeline); runs from
-    /// machines with more sockets go through the generalised §5.2 fit
-    /// ([`crate::model::fit_multi::fit_run_pair_multi`]), which reduces
-    /// exactly to the 2-socket fit when S = 2 but is kept on its own path
-    /// so the paper-validated numbers never move.  The compiled pipelines
-    /// bake in the 2-socket shapes, so a batch containing any S > 2 run is
-    /// served by the Rust reference fit even in HLO mode.
+    /// Engine mode batches run pairs through the backend's
+    /// `fit_signature` pipeline, grouped by socket count; run pairs the
+    /// backend's shapes cannot take (S ≠ 2 against the compiled PJRT
+    /// artifacts) are served by the reference fit instead, exactly as
+    /// before the backend trait existed.  The reference path dispatches
+    /// 2-socket runs to the paper's exact fit ([`fit::fit_run_pair`]) and
+    /// larger machines to the generalised §5.2 fit
+    /// ([`crate::model::fit_multi::fit_run_pair_multi`]) — the native
+    /// engine mirrors exactly that dispatch in f32, so the two always run
+    /// the same algorithm.
     pub fn fit(&self, reqs: &[FitRequest]) -> Result<Vec<BandwidthSignature>> {
-        let two_socket = reqs
-            .iter()
-            .all(|r| r.sym.counters.n_sockets() == 2);
+        let reference_one = |r: &FitRequest| -> BandwidthSignature {
+            if r.sym.counters.n_sockets() == 2 {
+                fit::fit_run_pair(&r.sym, &r.asym)
+            } else {
+                fit_multi::fit_run_pair_multi(&r.sym, &r.asym)
+            }
+        };
         match &self.backend {
-            Backend::Hlo(engine) if two_socket => self.fit_hlo(engine, reqs),
-            _ => Ok(reqs
-                .iter()
-                .map(|r| {
-                    if r.sym.counters.n_sockets() == 2 {
-                        fit::fit_run_pair(&r.sym, &r.asym)
+            Backend::Reference => Ok(reqs.iter().map(reference_one).collect()),
+            Backend::Engine(engine) => {
+                let mut out: Vec<Option<BandwidthSignature>> =
+                    vec![None; reqs.len()];
+                let groups = group_by_sockets(
+                    reqs.iter().map(|r| r.sym.counters.n_sockets()),
+                );
+                for (s, idxs) in groups {
+                    let engine_takes_s = match engine.sockets() {
+                        None => true,
+                        Some(fixed) => fixed == s,
+                    };
+                    if engine_takes_s {
+                        let group: Vec<&FitRequest> =
+                            idxs.iter().map(|&i| &reqs[i]).collect();
+                        let sigs = Self::fit_engine(engine.as_ref(), s,
+                                                    &group)?;
+                        for (&i, sig) in idxs.iter().zip(sigs) {
+                            out[i] = Some(sig);
+                        }
                     } else {
-                        fit_multi::fit_run_pair_multi(&r.sym, &r.asym)
+                        for &i in &idxs {
+                            out[i] = Some(reference_one(&reqs[i]));
+                        }
                     }
-                })
-                .collect()),
+                }
+                Ok(out.into_iter().map(Option::unwrap).collect())
+            }
         }
     }
 
-    fn fit_hlo(&self, engine: &Engine, reqs: &[FitRequest])
-        -> Result<Vec<BandwidthSignature>> {
-        // 3 rows per request: read, write, combined.
+    /// Batch a same-socket-count group of run pairs through an engine's
+    /// `fit_signature` pipeline (3 rows per request: read, write,
+    /// combined).  S-generic backends take the 6-argument layout with the
+    /// symmetric run's thread counts
+    /// ([`ExecutionBackend::fit_takes_sym_threads`]); the legacy compiled
+    /// pipelines take the historical 5-argument 2-socket layout.
+    fn fit_engine(engine: &dyn ExecutionBackend, s: usize,
+                  reqs: &[&FitRequest]) -> Result<Vec<BandwidthSignature>> {
         #[derive(Clone, Copy)]
         enum Row {
             Ch(Channel),
@@ -505,63 +592,56 @@ impl PredictionService {
         let rates_row = |run: &ProfiledRun| -> Vec<f32> {
             run.thread_rates().iter().map(|&r| r as f32).collect()
         };
+        let threads_row = |run: &ProfiledRun| -> Vec<f32> {
+            run.threads_per_socket.iter().map(|&t| t as f32).collect()
+        };
 
         let cap = engine.batch();
         let mut out: Vec<Option<ChannelSignature>> = vec![None; rows.len()];
         for (start, len) in batches(rows.len(), cap) {
             let chunk = &rows[start..start + len];
             let b = Batch::new(len, cap);
-            let sym_c = b.pack(
-                &chunk
-                    .iter()
-                    .map(|&(i, row)| counts_row(&reqs[i].sym, row))
-                    .collect::<Vec<_>>(),
-                &[2, 2],
-            );
-            let sym_r = b.pack(
-                &chunk
-                    .iter()
-                    .map(|&(i, _)| rates_row(&reqs[i].sym))
-                    .collect::<Vec<_>>(),
-                &[2],
-            );
-            let asym_c = b.pack(
-                &chunk
-                    .iter()
-                    .map(|&(i, row)| counts_row(&reqs[i].asym, row))
-                    .collect::<Vec<_>>(),
-                &[2, 2],
-            );
-            let asym_r = b.pack(
-                &chunk
-                    .iter()
-                    .map(|&(i, _)| rates_row(&reqs[i].asym))
-                    .collect::<Vec<_>>(),
-                &[2],
-            );
-            let thr = b.pack(
-                &chunk
-                    .iter()
-                    .map(|&(i, _)| {
-                        reqs[i]
-                            .asym
-                            .threads_per_socket
-                            .iter()
-                            .map(|&t| t as f32)
-                            .collect()
-                    })
-                    .collect::<Vec<_>>(),
-                &[2],
-            );
-            let result = engine
-                .execute("fit_signature", &[sym_c, sym_r, asym_c, asym_r,
-                                            thr])?;
+            let pack_per_row = |f: &dyn Fn(usize, Row) -> Vec<f32>,
+                                dims: &[usize]| {
+                b.pack(
+                    &chunk
+                        .iter()
+                        .map(|&(i, row)| f(i, row))
+                        .collect::<Vec<_>>(),
+                    dims,
+                )
+            };
+            let mut tensors = vec![
+                pack_per_row(&|i, row| counts_row(&reqs[i].sym, row),
+                             &[s, 2]),
+                pack_per_row(&|i, _| rates_row(&reqs[i].sym), &[s]),
+            ];
+            if engine.fit_takes_sym_threads() {
+                tensors.push(
+                    pack_per_row(&|i, _| threads_row(&reqs[i].sym), &[s]),
+                );
+            }
+            tensors.push(pack_per_row(
+                &|i, row| counts_row(&reqs[i].asym, row),
+                &[s, 2],
+            ));
+            tensors.push(pack_per_row(&|i, _| rates_row(&reqs[i].asym),
+                                      &[s]));
+            tensors.push(pack_per_row(&|i, _| threads_row(&reqs[i].asym),
+                                      &[s]));
+            let result = engine.execute("fit_signature", &tensors)?;
             let fracs = b.unpack(&result[0]);
             let onehot = b.unpack(&result[1]);
             let misfit = b.unpack(&result[2]);
             for (j, _) in chunk.iter().enumerate() {
                 let f = &fracs[j];
-                let sock = if onehot[j][0] >= onehot[j][1] { 0 } else { 1 };
+                // First-max argmax over the (possibly soft) one-hot.
+                let mut sock = 0usize;
+                for (c, &v) in onehot[j].iter().enumerate() {
+                    if v > onehot[j][sock] {
+                        sock = c;
+                    }
+                }
                 out[start + j] = Some(ChannelSignature {
                     static_frac: f[0] as f64,
                     local_frac: f[1] as f64,
@@ -599,78 +679,100 @@ impl PredictionService {
                                             &q.cpu_totals)
                 })
                 .collect()),
-            Backend::Hlo(engine) => {
-                if queries.iter().any(|q| q.sockets() != 2) {
-                    anyhow::bail!(
-                        "the compiled HLO pipelines bake in 2-socket \
-                         shapes; serve S > 2 queries through the \
-                         reference backend"
-                    );
-                }
+            Backend::Engine(engine) => {
                 let cap = engine.batch();
-                let mut out = Vec::with_capacity(queries.len());
-                for (start, len) in batches(queries.len(), cap) {
-                    let chunk = &queries[start..start + len];
-                    let b = Batch::new(len, cap);
-                    let tensors =
-                        Self::pack_counter_queries(&b, chunk);
-                    let result =
-                        engine.execute("predict_counters", &tensors)?;
-                    for row in b.unpack(&result[0]) {
-                        out.push(vec![
-                            [row[0] as f64, row[1] as f64],
-                            [row[2] as f64, row[3] as f64],
-                        ]);
+                let mut out: Vec<Option<Vec<[f64; 2]>>> =
+                    vec![None; queries.len()];
+                let groups = group_by_sockets(
+                    queries.iter().map(|q| q.sockets()),
+                );
+                for (s, idxs) in groups {
+                    check_engine_sockets(engine.as_ref(), s)?;
+                    for (start, len) in batches(idxs.len(), cap) {
+                        let chunk: Vec<&CounterQuery> = idxs
+                            [start..start + len]
+                            .iter()
+                            .map(|&i| &queries[i])
+                            .collect();
+                        let b = Batch::new(len, cap);
+                        let mut tensors = Self::pack_sig_placements(
+                            &b,
+                            s,
+                            &chunk
+                                .iter()
+                                .map(|q| (&q.sig, q.threads.as_slice()))
+                                .collect::<Vec<_>>(),
+                        );
+                        tensors.push(b.pack(
+                            &chunk
+                                .iter()
+                                .map(|q| {
+                                    q.cpu_totals
+                                        .iter()
+                                        .map(|&t| t as f32)
+                                        .collect()
+                                })
+                                .collect::<Vec<_>>(),
+                            &[s],
+                        ));
+                        let result =
+                            engine.execute("predict_counters", &tensors)?;
+                        for (j, row) in
+                            b.unpack(&result[0]).into_iter().enumerate()
+                        {
+                            out[idxs[start + j]] = Some(
+                                row.chunks(2)
+                                    .map(|c| [c[0] as f64, c[1] as f64])
+                                    .collect(),
+                            );
+                        }
                     }
                 }
-                Ok(out)
+                Ok(out.into_iter().map(Option::unwrap).collect())
             }
         }
     }
 
-    fn pack_counter_queries(b: &Batch, chunk: &[CounterQuery])
+    /// Pack the shared `(signature, placement)` prefix of a same-S query
+    /// chunk into the `[fracs, static_onehot, threads]` tensors every
+    /// prediction pipeline starts with.
+    fn pack_sig_placements(b: &Batch, s: usize,
+                           rows: &[(&ChannelSignature, &[usize])])
         -> Vec<Tensor> {
         let fracs = b.pack(
-            &chunk
+            &rows
                 .iter()
-                .map(|q| {
+                .map(|(sig, _)| {
                     vec![
-                        q.sig.static_frac as f32,
-                        q.sig.local_frac as f32,
-                        q.sig.perthread_frac as f32,
+                        sig.static_frac as f32,
+                        sig.local_frac as f32,
+                        sig.perthread_frac as f32,
                     ]
                 })
                 .collect::<Vec<_>>(),
             &[3],
         );
         let onehot = b.pack(
-            &chunk
+            &rows
                 .iter()
-                .map(|q| {
-                    let mut v = vec![0.0f32; 2];
-                    v[q.sig.static_socket] = 1.0;
+                .map(|(sig, _)| {
+                    let mut v = vec![0.0f32; s];
+                    v[sig.static_socket] = 1.0;
                     v
                 })
                 .collect::<Vec<_>>(),
-            &[2],
+            &[s],
         );
         let threads = b.pack(
-            &chunk
+            &rows
                 .iter()
-                .map(|q| vec![q.threads[0] as f32, q.threads[1] as f32])
-                .collect::<Vec<_>>(),
-            &[2],
-        );
-        let totals = b.pack(
-            &chunk
-                .iter()
-                .map(|q| {
-                    vec![q.cpu_totals[0] as f32, q.cpu_totals[1] as f32]
+                .map(|(_, threads)| {
+                    threads.iter().map(|&t| t as f32).collect()
                 })
                 .collect::<Vec<_>>(),
-            &[2],
+            &[s],
         );
-        vec![fracs, onehot, threads, totals]
+        vec![fracs, onehot, threads]
     }
 
     // ---- performance prediction ----------------------------------------------
@@ -685,57 +787,64 @@ impl PredictionService {
                 .iter()
                 .map(Self::perf_reference)
                 .collect()),
-            Backend::Hlo(engine) => {
-                if queries.iter().any(|q| q.sockets() != 2) {
-                    anyhow::bail!(
-                        "the compiled HLO pipelines bake in 2-socket \
-                         shapes; serve S > 2 queries through the \
-                         reference backend"
-                    );
-                }
+            Backend::Engine(engine) => {
                 let cap = engine.batch();
-                let mut out = Vec::with_capacity(queries.len());
-                for (start, len) in batches(queries.len(), cap) {
-                    let chunk = &queries[start..start + len];
-                    let b = Batch::new(len, cap);
-                    let mut tensors = Self::pack_counter_queries(
-                        &b,
-                        &chunk
+                let mut out: Vec<Option<Vec<f64>>> =
+                    vec![None; queries.len()];
+                let groups = group_by_sockets(
+                    queries.iter().map(|q| q.sockets()),
+                );
+                for (s, idxs) in groups {
+                    check_engine_sockets(engine.as_ref(), s)?;
+                    for (start, len) in batches(idxs.len(), cap) {
+                        let chunk: Vec<&PerfQuery> = idxs
+                            [start..start + len]
                             .iter()
-                            .map(|q| CounterQuery {
-                                sig: q.sig,
-                                threads: q.threads.clone(),
-                                cpu_totals: vec![0.0, 0.0],
-                            })
-                            .collect::<Vec<_>>(),
-                    );
-                    tensors.pop(); // drop cpu_totals
-                    tensors.push(b.pack(
-                        &chunk
-                            .iter()
-                            .map(|q| {
-                                vec![q.demand_pt[0] as f32,
-                                     q.demand_pt[1] as f32]
-                            })
-                            .collect::<Vec<_>>(),
-                        &[2],
-                    ));
-                    tensors.push(b.pack(
-                        &chunk
-                            .iter()
-                            .map(|q| {
-                                q.caps.iter().map(|&c| c as f32).collect()
-                            })
-                            .collect::<Vec<_>>(),
-                        &[8],
-                    ));
-                    let result =
-                        engine.execute("predict_performance", &tensors)?;
-                    for row in b.unpack(&result[0]) {
-                        out.push(row.iter().map(|&v| v as f64).collect());
+                            .map(|&i| &queries[i])
+                            .collect();
+                        let b = Batch::new(len, cap);
+                        let mut tensors = Self::pack_sig_placements(
+                            &b,
+                            s,
+                            &chunk
+                                .iter()
+                                .map(|q| (&q.sig, q.threads.as_slice()))
+                                .collect::<Vec<_>>(),
+                        );
+                        tensors.push(b.pack(
+                            &chunk
+                                .iter()
+                                .map(|q| {
+                                    vec![q.demand_pt[0] as f32,
+                                         q.demand_pt[1] as f32]
+                                })
+                                .collect::<Vec<_>>(),
+                            &[2],
+                        ));
+                        tensors.push(b.pack(
+                            &chunk
+                                .iter()
+                                .map(|q| {
+                                    q.caps
+                                        .iter()
+                                        .map(|&c| c as f32)
+                                        .collect()
+                                })
+                                .collect::<Vec<_>>(),
+                            &[2 * s * s],
+                        ));
+                        let result = engine
+                            .execute("predict_performance", &tensors)?;
+                        for (j, row) in
+                            b.unpack(&result[0]).into_iter().enumerate()
+                        {
+                            out[idxs[start + j]] = Some(
+                                row.iter().map(|&v| v as f64).collect(),
+                            );
+                        }
                     }
                 }
-                Ok(out)
+                Ok(out.into_iter().map(Option::unwrap).collect())
             }
         }
     }
@@ -834,7 +943,7 @@ impl PredictionService {
     /// Reference mode memoizes the §4 traffic matrix per
     /// `(signature, placement)` — any `cpu_totals` under a cached placement
     /// is a pure in-memory multiply — and computes misses in engine-sized
-    /// chunks in parallel.  HLO mode memoizes full query results and
+    /// chunks in parallel.  Engine mode memoizes full query results and
     /// executes misses through the engine's batched pipeline.
     pub fn serve_counters(&self, queries: &[CounterQuery])
         -> Result<Vec<Vec<[f64; 2]>>> {
@@ -868,7 +977,7 @@ impl PredictionService {
                     })
                     .collect())
             }
-            Backend::Hlo(_) => {
+            Backend::Engine(_) => {
                 let keys: Vec<CounterKey> = queries
                     .iter()
                     .map(|q| CounterKey {
@@ -893,7 +1002,7 @@ impl PredictionService {
 
     /// Serve a stream of performance queries through the batched+cached
     /// path: misses are computed in engine-sized chunks (in parallel in
-    /// reference mode, through the engine's batched pipeline in HLO mode)
+    /// reference mode, through the engine's batched pipeline in engine mode)
     /// and memoized on the query's full key.
     pub fn serve_perf(&self, queries: &[PerfQuery])
         -> Result<Vec<Vec<f64>>> {

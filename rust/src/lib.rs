@@ -9,16 +9,19 @@
 //!   AOT-lowered to HLO text under `artifacts/`.
 //! * **Layer 3 (this crate)** — the coordinator: a NUMA machine simulator
 //!   substrate producing performance-counter readings, the 23-benchmark
-//!   workload suite, a PJRT runtime executing the HLO artifacts, the
+//!   workload suite, a pluggable execution runtime (native batched f32
+//!   engine, PJRT for the HLO artifacts), the
 //!   profiling/fitting/prediction pipeline, and the evaluation harness
 //!   regenerating every figure and table in the paper.
 //!
-//! Python never runs at request time: after `make artifacts`, the `numabw`
-//! binary is self-contained.  (In the offline build the PJRT client is
-//! stubbed out — see [`runtime`] — and everything serves through the Rust
-//! reference model, the numerical twin of the Pallas kernels.)
+//! Python never runs at request time: the `numabw` binary is
+//! self-contained.  The execution layer is **pluggable** (see
+//! [`runtime`]): every model pipeline runs through an
+//! [`runtime::ExecutionBackend`], and the offline build ships a native
+//! batched f32 engine that executes all of them for any socket count —
+//! no `make artifacts` step needed.
 //!
-//! ## Serving architecture (placement advisor + serve daemon)
+//! ## Serving architecture (queries → FrontEnd → backend)
 //!
 //! On top of the model sits a concurrent serving stack, the growth path
 //! toward the paper's stated endgame of feeding systems like Pandia:
@@ -27,36 +30,58 @@
 //!  client threads ──┐
 //!  client threads ──┼─ server::Client ──mpsc──▶ FrontEnd dispatcher
 //!  client threads ──┘                           (coalesce across requests;
-//!   (or `numabw serve`                           flush on batch size or
-//!    JSONL stdin/stdout)                         deadline — BatchWindow)
+//!   (or `numabw serve`:                          flush on batch size or
+//!    JSONL stdin/stdout, TCP,                    deadline — BatchWindow)
+//!    or unix socket — one thread                         │
+//!    per connection, one shared            ModelRegistry + PredictionService
+//!    front-end)                             (one dispatch per batch; shared
+//!                                            LRU memo caches, CacheStats)
 //!                                                        │
-//!              ModelRegistry ────────▶ PredictionService (one dispatch
-//!       (store-backed signature LRU,    per batch; shared LRU memo
-//!        machine+seed invalidation)     caches with per-cache CacheStats)
-//!                                                        │
-//!                                          results fanned back over
-//!                                          per-request reply channels
+//!                                       ExecutionBackend dispatch
+//!                            ┌──────────────────┼─────────────────────┐
+//!                      reference            native               hlo-pjrt
+//!                   (per-row f64,     (batched f32 tensors,   (AOT Pallas/HLO
+//!                    the oracle)       any S, in-process —     artifacts via
+//!                                      the default engine)     the `xla` crate;
+//!                                                              stub offline)
 //! ```
 //!
+//! * **Execution backends** ([`runtime`]): [`runtime::NativeEngine`]
+//!   executes the four pipelines (`fit_signature`, `signature_apply`,
+//!   `predict_counters`, `predict_performance` with max-min
+//!   water-filling) over full-batch f32 [`runtime::Tensor`]s for **any**
+//!   socket count, against a manifest synthesized in memory
+//!   ([`runtime::Artifacts::synthesize`]).  The PJRT [`runtime::Engine`]
+//!   is a second impl of the same trait (a stub until `xla` is
+//!   vendored), and the f64 reference model is the oracle both are
+//!   pinned against: `tests/engine_parity.rs` runs in every build (no
+//!   self-skip) and holds native-vs-reference agreement within a
+//!   documented f32 tolerance on both paper machines and `quad4`,
+//!   including advisor-ranking equality.  Select with
+//!   `--engine reference|native|pjrt`.
 //! * [`coordinator::service::PredictionService`] is `Send + Sync` (all
 //!   caches use interior mutability) so a single instance serves many
 //!   threads.  Its front-end (`serve_counters` / `serve_perf` /
 //!   `CounterBatcher`) coalesces query streams into engine-sized batches
 //!   via [`runtime::batches`] and memoizes by placement: the §4 traffic
 //!   matrix depends only on `(signature, threads)`, so repeated placements
-//!   hit memory instead of the HLO engine.  The memo caches are bounded,
+//!   hit memory instead of the engine.  The memo caches are bounded,
 //!   deterministic LRUs ([`util::lru`]) with per-cache hit/miss/eviction
 //!   counters ([`coordinator::CacheStats`]).  In reference mode the
 //!   batched path is bit-identical to the per-query path (pinned by
-//!   `tests/advisor.rs`).
+//!   `tests/advisor.rs`).  Engine batches are grouped by socket count
+//!   (tensor shapes carry S), so one service serves a mixed fleet.
 //! * [`server`] generalises batching across callers: a std-only
 //!   [`server::FrontEnd`] (threads + channels + `Instant` deadlines)
 //!   coalesces queries from many client threads into one engine dispatch
 //!   per batch window, and [`server::ModelRegistry`] serves fitted
 //!   signatures out of the on-disk store, fit-once-serve-forever, with
 //!   machine+seed invalidation.  Exposed as the `numabw serve` JSONL
-//!   daemon and the in-process [`server::Client`] — still bit-identical
-//!   to per-query serving (pinned by `tests/serve.rs`).
+//!   daemon — stdin/stdout, or TCP / unix-socket via
+//!   `--listen` ([`server::LineServer`]: one thread per connection, every
+//!   connection coalescing into the same front-end) — and the in-process
+//!   [`server::Client`] — still bit-identical to per-query serving
+//!   (pinned by `tests/serve.rs`).
 //! * [`coordinator::advisor`] enumerates every valid [`ThreadPlacement`]
 //!   for a machine, scores each by predicted achieved bandwidth and
 //!   interconnect headroom through any [`coordinator::PerfServer`] (the

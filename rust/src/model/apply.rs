@@ -1,11 +1,12 @@
 //! §4 — applying a bandwidth signature to a thread placement.
 //!
 //! Rust reference implementation, numerically identical to the Pallas
-//! `signature_apply` kernel (pinned against each other by the integration
-//! test `tests/hlo_parity.rs`).  The coordinator uses the HLO executable
+//! `signature_apply` kernel and to the native engine's batched f32 twin
+//! (pinned against each other by the integration test
+//! `tests/engine_parity.rs`).  The coordinator uses an execution backend
 //! for batched prediction; this implementation serves single queries, the
-//! simulator-side ground truth, and the places where a PJRT client is not
-//! warranted (unit tests, examples).
+//! simulator-side ground truth, and the places where a batched engine is
+//! not warranted (unit tests, examples).
 
 use crate::model::signature::ChannelSignature;
 

@@ -3,8 +3,8 @@
 //!
 //! Rust reference implementation of the fitting pipeline, formula-for-
 //! formula identical to the Pallas `fit_signature` kernel (`ref.py` is the
-//! shared specification; `tests/hlo_parity.rs` pins the two against each
-//! other through the compiled artifact).
+//! shared specification) and to the native engine's batched f32 fit
+//! (`tests/engine_parity.rs` pins the engines against this reference).
 //!
 //! Pipeline per channel:
 //!   §5.2 normalize both runs by the per-thread instruction rate of the

@@ -1,21 +1,27 @@
-//! Runtime layer: AOT artifact manifest, host tensors, and batch plumbing
-//! for the compiled HLO pipelines produced by `python/compile/aot.py`.
+//! Runtime layer: pluggable execution backends, the artifact manifest,
+//! host tensors, and batch plumbing for the batched model pipelines.
 //!
 //! Design:
-//! * [`Artifacts`] parses `artifacts/manifest.json` and validates shapes.
-//! * [`Engine`] is the execution backend handle.  The PJRT path (the `xla`
-//!   crate) is **not in the offline vendor set**, so this build ships a
-//!   stub engine: [`Engine::cpu`] returns an error and every caller falls
-//!   back to the Rust reference model ([`crate::coordinator::service`]'s
-//!   `PredictionService::reference`), which is the numerical twin of the
-//!   Pallas kernels (pinned by `python/tests/` against `ref.py`).  The
-//!   `tests/hlo_parity.rs` suite self-skips when no engine is available.
-//!   Re-enabling PJRT is a matter of vendoring `xla` and restoring the
-//!   compile/execute body here — the manifest, tensor, and batch layers
-//!   below are exactly what it needs.
-//! * All pipelines are compiled for a fixed batch `B` (64); [`Batch`]
-//!   handles padding partial batches and slicing results back, and
-//!   [`batches`] is the canonical way to split a query stream into
+//! * [`ExecutionBackend`] is the trait every engine implements: execute a
+//!   named pipeline over full-batch [`Tensor`]s.  Three implementations:
+//!   - [`NativeEngine`] (`runtime/native.rs`) — the in-process batched
+//!     f32 engine.  Executes all four pipelines for **any** socket count
+//!     S and needs no build step: its manifest is synthesized in memory
+//!     ([`Artifacts::synthesize`]).
+//!   - [`Engine`] — the PJRT handle for the AOT HLO artifacts produced by
+//!     `python/compile/aot.py`.  The `xla` crate is **not in the offline
+//!     vendor set**, so in this build [`Engine::cpu`] errors and the impl
+//!     is a stub the trait is ready to host once `xla` is vendored.
+//!   - the Rust reference model (`PredictionService::reference`) is the
+//!     f64 oracle the engines are pinned against
+//!     (`tests/engine_parity.rs`).
+//! * [`Artifacts`] describes a backend's pipelines (shapes, batch,
+//!   socket count, flow→resource incidence): parsed from
+//!   `artifacts/manifest.json` for compiled backends, synthesized from a
+//!   [`MachineTopology`] (or a raw socket count) for the native engine.
+//! * All pipelines run at a fixed batch `B` ([`ENGINE_BATCH`] = 64);
+//!   [`Batch`] handles padding partial batches and slicing results back,
+//!   and [`batches`] is the canonical way to split a query stream into
 //!   engine-sized chunks (the serving layer coalesces with it too).
 
 use std::collections::HashMap;
@@ -23,7 +29,16 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::topology::{flow_resources, MachineTopology};
 use crate::util::json::Json;
+
+pub mod native;
+
+pub use native::NativeEngine;
+
+/// The fixed batch size every engine pipeline is built for (matches the
+/// AOT artifacts' compiled batch).
+pub const ENGINE_BATCH: usize = 64;
 
 /// Names of the compiled pipelines (must match `python/compile/model.py`).
 pub const PIPELINES: [&str; 4] = [
@@ -104,11 +119,13 @@ impl Artifacts {
                     .ok_or_else(|| anyhow!("manifest: {name} missing {k}"))?
                     .iter()
                     .map(|s| {
-                        Ok(s.as_f64_vec()
-                            .ok_or_else(|| anyhow!("bad shape"))?
+                        s.as_f64_vec()
+                            .ok_or_else(|| {
+                                anyhow!("manifest: {name} {k}: bad shape")
+                            })?
                             .into_iter()
-                            .map(|d| d as usize)
-                            .collect())
+                            .map(|d| checked_dim(d, name, k))
+                            .collect()
                     })
                     .collect()
             };
@@ -141,6 +158,115 @@ impl Artifacts {
         }
         Ok(a)
     }
+
+    /// Synthesize the manifest for a machine's socket count — the native
+    /// engine's path: no JAX lowering or `make artifacts` step exists for
+    /// it, so the shape/incidence metadata the runtime validates against
+    /// is built directly from the topology.
+    pub fn synthesize(machine: &MachineTopology) -> Artifacts {
+        Self::synthesize_for_sockets(machine.sockets)
+    }
+
+    /// [`Artifacts::synthesize`] from a raw socket count (S >= 2).
+    ///
+    /// Shapes generalise the compiled 2-socket manifest to S sockets
+    /// (`n_flows = n_resources = 2*S*S`; incidence via
+    /// [`flow_resources`]), with one deliberate difference:
+    /// `fit_signature` takes **six** arguments — `(sym_counts [B,S,2],
+    /// sym_rates [B,S], sym_threads [B,S], asym_counts [B,S,2],
+    /// asym_rates [B,S], asym_threads [B,S])` — because the S-generic
+    /// §5.2 normalization weights remote rate factors by the *symmetric*
+    /// run's thread counts too, which the legacy 5-argument PJRT layout
+    /// never carried (its 2-socket fit does not need them).
+    pub fn synthesize_for_sockets(sockets: usize) -> Artifacts {
+        assert!(sockets >= 2, "a NUMA pipeline needs >= 2 sockets");
+        let b = ENGINE_BATCH;
+        let s = sockets;
+        let n_flows = 2 * s * s;
+        let n_resources = 2 * s * s;
+        let mut incidence = vec![vec![0.0f64; n_resources]; n_flows];
+        for src in 0..s {
+            for dst in 0..s {
+                for rw in 0..2 {
+                    let f = (src * s + dst) * 2 + rw;
+                    let (chan, link) = flow_resources(s, src, dst, rw);
+                    incidence[f][chan] = 1.0;
+                    if let Some(l) = link {
+                        incidence[f][l] = 1.0;
+                    }
+                }
+            }
+        }
+        let mut pipelines = HashMap::new();
+        let mut put = |name: &str, args: Vec<Vec<usize>>,
+                       results: Vec<Vec<usize>>| {
+            pipelines.insert(
+                name.to_string(),
+                PipelineMeta {
+                    file: format!("<native:{name}>"),
+                    arg_shapes: args,
+                    result_shapes: results,
+                },
+            );
+        };
+        put(
+            "fit_signature",
+            vec![
+                vec![b, s, 2],
+                vec![b, s],
+                vec![b, s],
+                vec![b, s, 2],
+                vec![b, s],
+                vec![b, s],
+            ],
+            vec![vec![b, 3], vec![b, s], vec![b]],
+        );
+        put(
+            "signature_apply",
+            vec![vec![b, 3], vec![b, s], vec![b, s]],
+            vec![vec![b, s, s]],
+        );
+        put(
+            "predict_counters",
+            vec![vec![b, 3], vec![b, s], vec![b, s], vec![b, s]],
+            vec![vec![b, s, 2]],
+        );
+        put(
+            "predict_performance",
+            vec![
+                vec![b, 3],
+                vec![b, s],
+                vec![b, s],
+                vec![b, 2],
+                vec![b, n_resources],
+            ],
+            vec![vec![b, n_flows]],
+        );
+        Artifacts {
+            dir: PathBuf::from("<synthesized>"),
+            batch: b,
+            sockets: s,
+            n_flows,
+            n_resources,
+            incidence,
+            pipelines,
+        }
+    }
+}
+
+/// Manifest dimensions arrive as f64 (the JSON substrate); reject anything
+/// that would silently floor or wrap (2.7 -> 2, -1 -> huge) instead of
+/// validating shapes the artifacts never had — the same rule the serve
+/// wire protocol applies to integer fields.
+fn checked_dim(d: f64, pipeline: &str, key: &str) -> Result<usize> {
+    if d.fract() == 0.0 && (0.0..9e15).contains(&d) {
+        Ok(d as usize)
+    } else {
+        bail!(
+            "manifest: {pipeline} {key}: dimension {d} is not a \
+             non-negative integer"
+        )
+    }
 }
 
 /// A host-side tensor: flat f32 data + shape.  The runtime's lingua franca.
@@ -171,11 +297,66 @@ impl Tensor {
     }
 }
 
-/// Execution backend handle.  In this offline build the PJRT client cannot
-/// be constructed ([`Engine::cpu`] errors), so the engine is a validated
-/// manifest holder whose `execute` is unreachable; `PredictionService`
-/// treats a failed engine construction as "serve from the Rust reference
-/// model".
+/// The execution-backend contract: run a named model pipeline over
+/// full-batch tensors.  [`crate::coordinator::PredictionService`]
+/// dispatches through this trait, so engines are interchangeable behind
+/// the same serving stack ([`NativeEngine`] today, PJRT via [`Engine`]
+/// once `xla` is vendored).
+pub trait ExecutionBackend: Send + Sync {
+    /// Short backend name for logs and the CLI ("native", "hlo-pjrt").
+    fn name(&self) -> &'static str;
+
+    /// The batch size every pipeline is built for.
+    fn batch(&self) -> usize;
+
+    /// Socket count baked into the pipeline shapes, or `None` when the
+    /// backend executes any S.  The serving layer rejects (per request)
+    /// queries whose socket count a fixed-shape backend cannot take.
+    fn sockets(&self) -> Option<usize>;
+
+    /// Whether this backend's `fit_signature` pipeline takes the
+    /// symmetric run's thread counts as its third argument (the 6-arg
+    /// S-generic layout of [`Artifacts::synthesize_for_sockets`]) rather
+    /// than the legacy 5-arg 2-socket layout the AOT artifacts compile.
+    fn fit_takes_sym_threads(&self) -> bool {
+        false
+    }
+
+    /// Force-build every pipeline (startup warmup).
+    fn warmup(&self) -> Result<()>;
+
+    /// Execute a pipeline on full-batch tensors.
+    fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+}
+
+/// Shared input validation: every backend checks submitted tensors against
+/// its manifest's argument shapes before touching them.
+pub(crate) fn validate_pipeline_inputs(name: &str, meta: &PipelineMeta,
+                                       inputs: &[Tensor]) -> Result<()> {
+    if inputs.len() != meta.arg_shapes.len() {
+        bail!(
+            "{name}: expected {} inputs, got {}",
+            meta.arg_shapes.len(),
+            inputs.len()
+        );
+    }
+    for (i, (t, want)) in inputs.iter().zip(&meta.arg_shapes).enumerate() {
+        if &t.shape != want {
+            bail!(
+                "{name}: input {i} has shape {:?}, artifact wants {:?}",
+                t.shape,
+                want
+            );
+        }
+    }
+    Ok(())
+}
+
+/// PJRT execution backend handle.  In this offline build the PJRT client
+/// cannot be constructed ([`Engine::cpu`] errors), so the engine is a
+/// validated manifest holder whose `execute` is unreachable;
+/// `PredictionService` treats a failed engine construction as "serve from
+/// the Rust reference model".
 pub struct Engine {
     pub artifacts: Artifacts,
 }
@@ -219,25 +400,32 @@ impl Engine {
             .pipelines
             .get(name)
             .ok_or_else(|| anyhow!("unknown pipeline {name}"))?;
-        if inputs.len() != meta.arg_shapes.len() {
-            bail!(
-                "{name}: expected {} inputs, got {}",
-                meta.arg_shapes.len(),
-                inputs.len()
-            );
-        }
-        for (i, (t, want)) in inputs.iter().zip(&meta.arg_shapes).enumerate()
-        {
-            if &t.shape != want {
-                bail!(
-                    "{name}: input {i} has shape {:?}, artifact wants {:?}",
-                    t.shape,
-                    want
-                );
-            }
-        }
+        validate_pipeline_inputs(name, meta, inputs)?;
         bail!("PJRT backend not compiled into this build: cannot execute \
                pipeline {name}")
+    }
+}
+
+impl ExecutionBackend for Engine {
+    fn name(&self) -> &'static str {
+        "hlo-pjrt"
+    }
+
+    fn batch(&self) -> usize {
+        Engine::batch(self)
+    }
+
+    /// The AOT artifacts bake their socket count into every shape.
+    fn sockets(&self) -> Option<usize> {
+        Some(self.artifacts.sockets)
+    }
+
+    fn warmup(&self) -> Result<()> {
+        Engine::warmup(self)
+    }
+
+    fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        Engine::execute(self, name, inputs)
     }
 }
 
@@ -392,5 +580,97 @@ mod tests {
         // Without an artifacts directory the engine cannot even locate a
         // manifest; with one, cpu() still refuses (no PJRT in this build).
         assert!(Engine::from_env().is_err());
+    }
+
+    #[test]
+    fn synthesized_manifest_matches_the_compiled_two_socket_layout() {
+        let a = Artifacts::synthesize(
+            &crate::topology::MachineTopology::xeon_e5_2630_v3(),
+        );
+        assert_eq!(a.sockets, 2);
+        assert_eq!(a.batch, ENGINE_BATCH);
+        assert_eq!(a.n_flows, 8);
+        assert_eq!(a.n_resources, 8);
+        // The exact incidence rows `model.py build_incidence` bakes in
+        // (spot rows the old hlo_parity manifest test pinned): flow 0 =
+        // (0,0,read) -> read chan 0 only; flow 2 = (0,1,read) -> read
+        // chan 1 + qpi_r link (1,0) at index 5.
+        assert_eq!(a.incidence[0],
+                   vec![1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(a.incidence[2],
+                   vec![0.0, 1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0]);
+        for p in PIPELINES {
+            assert!(a.pipelines.contains_key(p), "{p} missing");
+        }
+        // S-generic fit layout: six args (sym_threads added).
+        assert_eq!(a.pipelines["fit_signature"].arg_shapes.len(), 6);
+        assert_eq!(a.pipelines["predict_performance"].arg_shapes[4],
+                   vec![ENGINE_BATCH, 8]);
+    }
+
+    #[test]
+    fn synthesized_manifest_generalises_to_four_sockets() {
+        let a = Artifacts::synthesize_for_sockets(4);
+        assert_eq!(a.n_flows, 32);
+        assert_eq!(a.n_resources, 32);
+        // Every flow touches its destination channel, remote flows also
+        // one link; the per-resource column sums must cover all flows.
+        for (f, row) in a.incidence.iter().enumerate() {
+            let touches: usize = row.iter().map(|&v| v as usize).sum();
+            let (src, dst) = ((f / 2) / 4, (f / 2) % 4);
+            assert_eq!(touches, if src == dst { 1 } else { 2 }, "flow {f}");
+        }
+        assert_eq!(a.pipelines["signature_apply"].result_shapes[0],
+                   vec![ENGINE_BATCH, 4, 4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn synthesize_rejects_single_socket() {
+        Artifacts::synthesize_for_sockets(1);
+    }
+
+    #[test]
+    fn manifest_load_rejects_fractional_and_negative_dims() {
+        // Regression for the silent `d as usize` floor/wrap: a manifest
+        // with a fractional or negative dimension must fail to load, not
+        // validate future tensors against shapes nobody compiled.
+        let write_manifest = |dims: &str| -> Result<Artifacts> {
+            let dir = std::env::temp_dir().join(format!(
+                "numabw-manifest-{}-{dims_tag}",
+                std::process::id(),
+                dims_tag = dims.replace(['.', '-', ','], "_")
+            ));
+            std::fs::create_dir_all(&dir).unwrap();
+            let pipe = |name: &str| {
+                format!(
+                    "\"{name}\": {{\"file\": \"{name}.hlo.txt\", \
+                     \"args\": [[{dims}]], \"results\": [[64, 3]]}}"
+                )
+            };
+            let manifest = format!(
+                "{{\"batch\": 64, \"sockets\": 2, \"n_flows\": 8, \
+                 \"n_resources\": 8, \"incidence\": [[1, 0]], \
+                 \"pipelines\": {{{}}}}}",
+                PIPELINES
+                    .iter()
+                    .map(|p| pipe(p))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            );
+            std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+            let r = Artifacts::load(&dir);
+            std::fs::remove_dir_all(&dir).ok();
+            r
+        };
+        // Sane dims load fine.
+        assert!(write_manifest("64, 2").is_ok());
+        // Fractional dims (would floor 2.7 -> 2) and negative dims (would
+        // wrap to a huge usize) are rejected with a pointed message.
+        for bad in ["64, 2.7", "64, -2"] {
+            let err = write_manifest(bad).unwrap_err();
+            assert!(format!("{err}").contains("non-negative integer"),
+                    "{bad}: {err}");
+        }
     }
 }

@@ -1,0 +1,741 @@
+//! The native batched execution engine: an in-process, f32,
+//! socket-count-generic implementation of all four model pipelines over
+//! full-batch [`Tensor`]s.
+//!
+//! This is the [`ExecutionBackend`] the offline build actually executes
+//! (the PJRT path needs the un-vendorable `xla` crate).  It is the
+//! batched twin of the Rust reference model with the compiled kernels'
+//! numerics: every tensor is f32, exactly like the AOT artifacts, so the
+//! parity story of `tests/engine_parity.rs` — native agrees with the f64
+//! reference within a documented f32 tolerance — carries over unchanged
+//! to a future PJRT backend.
+//!
+//! Differences from the compiled 2-socket artifacts:
+//!
+//! * **Any socket count.**  Shapes are not baked in: `execute` derives S
+//!   from the submitted tensors, synthesizes (and caches) the matching
+//!   manifest via [`Artifacts::synthesize_for_sockets`], and validates
+//!   against it.  This closes the ROADMAP's "Pallas kernel compiled for
+//!   S=2" gap: `predict_performance` (including the max-min
+//!   water-filling) runs for the synthetic `quad4` machine exactly as it
+//!   does for the paper's two-socket Xeons.
+//! * **Six-argument fit.**  The S-generic §5.2 normalization weights
+//!   remote rate factors by thread counts of the *other* sockets, which
+//!   requires the symmetric run's thread counts — an input the legacy
+//!   5-argument 2-socket pipeline never carried (see
+//!   [`Artifacts::synthesize_for_sockets`]).
+//!
+//! Numerics: for S = 2 the fit is the f32 port of the paper-exact
+//! [`crate::model::fit`]; for S > 2 it is the f32 port of
+//! [`crate::model::fit_multi`] — mirroring exactly the dispatch
+//! `PredictionService::fit` performs on the reference path, so native
+//! and reference always run the same algorithm and differ only by
+//! precision.  The water-filling loop ports
+//! [`crate::simulator::contention::maxmin_into`] with an f32 saturation
+//! tolerance of `1e-6` (the Pallas kernel's value; the reference's
+//! `1e-9` is below f32 resolution at bytes/second magnitudes).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::topology::flow_resources;
+
+use super::{
+    validate_pipeline_inputs, Artifacts, ExecutionBackend, Tensor,
+    ENGINE_BATCH,
+};
+
+const EPS: f32 = 1e-9;
+
+/// f32 saturation tolerance of the water-filling rounds (see module docs).
+const SAT_TOL: f32 = 1e-6;
+
+/// The native batched engine.  Stateless apart from a cache of per-S
+/// synthesized manifests; cheap to construct and `Send + Sync`, so one
+/// instance serves every thread behind a `PredictionService`.
+pub struct NativeEngine {
+    manifests: Mutex<HashMap<usize, Artifacts>>,
+}
+
+impl Default for NativeEngine {
+    fn default() -> NativeEngine {
+        NativeEngine::new()
+    }
+}
+
+impl NativeEngine {
+    pub fn new() -> NativeEngine {
+        NativeEngine {
+            manifests: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// The socket count a pipeline call is for, read off the submitted
+    /// tensor shapes (`fit_signature`: `sym_counts [B, S, 2]`; all other
+    /// pipelines: second input `[B, S]`).
+    fn derive_sockets(name: &str, inputs: &[Tensor]) -> Result<usize> {
+        let idx = match name {
+            "fit_signature" => 0,
+            "signature_apply" | "predict_counters"
+            | "predict_performance" => 1,
+            other => bail!("unknown pipeline {other}"),
+        };
+        let t = inputs.get(idx).ok_or_else(|| {
+            anyhow!("{name}: expected at least {} inputs", idx + 1)
+        })?;
+        let s = *t.shape.get(1).ok_or_else(|| {
+            anyhow!("{name}: input {idx} needs a [B, S, ...] shape")
+        })?;
+        if s < 2 {
+            bail!("{name}: socket dimension {s} (a NUMA pipeline needs \
+                   >= 2 sockets)");
+        }
+        Ok(s)
+    }
+
+    /// Validate inputs against the (cached) synthesized manifest for S.
+    fn validate(&self, s: usize, name: &str, inputs: &[Tensor])
+        -> Result<()> {
+        let mut manifests = self.manifests.lock().unwrap();
+        let art = manifests
+            .entry(s)
+            .or_insert_with(|| Artifacts::synthesize_for_sockets(s));
+        let meta = art
+            .pipelines
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown pipeline {name}"))?;
+        validate_pipeline_inputs(name, meta, inputs)
+    }
+
+    fn run_signature_apply(s: usize, inputs: &[Tensor]) -> Vec<Tensor> {
+        let b = inputs[0].shape[0];
+        let mut out = Vec::with_capacity(b * s * s);
+        for i in 0..b {
+            out.extend(apply_matrix(s, inputs[0].row(i), inputs[1].row(i),
+                                    inputs[2].row(i)));
+        }
+        vec![Tensor::new(out, vec![b, s, s])]
+    }
+
+    fn run_predict_counters(s: usize, inputs: &[Tensor]) -> Vec<Tensor> {
+        let b = inputs[0].shape[0];
+        let mut out = Vec::with_capacity(b * s * 2);
+        for i in 0..b {
+            let m = apply_matrix(s, inputs[0].row(i), inputs[1].row(i),
+                                 inputs[2].row(i));
+            out.extend(counters_row(s, &m, inputs[3].row(i)));
+        }
+        vec![Tensor::new(out, vec![b, s, 2])]
+    }
+
+    fn run_predict_performance(s: usize, inputs: &[Tensor]) -> Vec<Tensor> {
+        let b = inputs[0].shape[0];
+        let nf = 2 * s * s;
+        let mut out = Vec::with_capacity(b * nf);
+        for i in 0..b {
+            let m = apply_matrix(s, inputs[0].row(i), inputs[1].row(i),
+                                 inputs[2].row(i));
+            out.extend(perf_row(s, &m, inputs[2].row(i), inputs[3].row(i),
+                                inputs[4].row(i)));
+        }
+        vec![Tensor::new(out, vec![b, nf])]
+    }
+
+    fn run_fit(s: usize, inputs: &[Tensor]) -> Vec<Tensor> {
+        let b = inputs[0].shape[0];
+        let mut fracs = Vec::with_capacity(b * 3);
+        let mut onehot = Vec::with_capacity(b * s);
+        let mut misfit = Vec::with_capacity(b);
+        for i in 0..b {
+            let (sym_c, sym_r, sym_t) =
+                (inputs[0].row(i), inputs[1].row(i), inputs[2].row(i));
+            let (asym_c, asym_r, asym_t) =
+                (inputs[3].row(i), inputs[4].row(i), inputs[5].row(i));
+            let (f, k, mf) = if s == 2 {
+                fit2_row(sym_c, sym_r, asym_c, asym_r, asym_t)
+            } else {
+                fitn_row(s, sym_c, sym_r, sym_t, asym_c, asym_r, asym_t)
+            };
+            fracs.extend(f);
+            let mut oh = vec![0.0f32; s];
+            oh[k] = 1.0;
+            onehot.extend(oh);
+            misfit.push(mf);
+        }
+        vec![
+            Tensor::new(fracs, vec![b, 3]),
+            Tensor::new(onehot, vec![b, s]),
+            Tensor::new(misfit, vec![b]),
+        ]
+    }
+}
+
+impl ExecutionBackend for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn batch(&self) -> usize {
+        ENGINE_BATCH
+    }
+
+    /// Shapes are derived per call — any S executes.
+    fn sockets(&self) -> Option<usize> {
+        None
+    }
+
+    fn fit_takes_sym_threads(&self) -> bool {
+        true
+    }
+
+    /// Nothing to compile; pre-synthesize the common 2-socket manifest so
+    /// the first request pays no lock-and-build latency.
+    fn warmup(&self) -> Result<()> {
+        self.manifests
+            .lock()
+            .unwrap()
+            .entry(2)
+            .or_insert_with(|| Artifacts::synthesize_for_sockets(2));
+        Ok(())
+    }
+
+    fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let s = Self::derive_sockets(name, inputs)?;
+        self.validate(s, name, inputs)?;
+        Ok(match name {
+            "fit_signature" => Self::run_fit(s, inputs),
+            "signature_apply" => Self::run_signature_apply(s, inputs),
+            "predict_counters" => Self::run_predict_counters(s, inputs),
+            "predict_performance" => {
+                Self::run_predict_performance(s, inputs)
+            }
+            _ => unreachable!("derive_sockets vetted the name"),
+        })
+    }
+}
+
+// ---- §4 apply + counter projection (f32) ----------------------------------
+
+/// §4 traffic-fraction matrix, flattened row-major `[S, S]` — the f32 twin
+/// of [`crate::model::apply::apply`] with the one-hot static encoding of
+/// the compiled kernels.
+fn apply_matrix(s: usize, fracs: &[f32], onehot: &[f32], threads: &[f32])
+    -> Vec<f32> {
+    let (a, l, p) = (fracs[0], fracs[1], fracs[2]);
+    let il = (1.0 - (a + l + p)).clamp(0.0, 1.0);
+    let used: Vec<bool> = threads.iter().map(|&t| t > 0.0).collect();
+    let n_used = used.iter().filter(|&&u| u).count().max(1) as f32;
+    let n_total: f32 = threads.iter().sum();
+    let mut m = vec![0.0f32; s * s];
+    for r in 0..s {
+        for c in 0..s {
+            let mut v = a * onehot[c];
+            if r == c {
+                v += l;
+            }
+            if n_total > 0.0 {
+                v += p * threads[c] / n_total;
+            }
+            if used[r] && used[c] {
+                v += il / n_used;
+            }
+            m[r * s + c] = v;
+        }
+    }
+    m
+}
+
+/// Per-bank `(local, remote)` byte projection, flattened `[S, 2]` — the
+/// f32 twin of [`crate::model::apply::counters_from_matrix`].
+fn counters_row(s: usize, m: &[f32], totals: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; s * 2];
+    for bank in 0..s {
+        let mut local = 0.0f32;
+        let mut remote = 0.0f32;
+        for src in 0..s {
+            let flow = m[src * s + bank] * totals[src];
+            if src == bank {
+                local += flow;
+            } else {
+                remote += flow;
+            }
+        }
+        out[bank * 2] = local;
+        out[bank * 2 + 1] = remote;
+    }
+    out
+}
+
+// ---- performance prediction (f32 water-filling) ---------------------------
+
+/// Flow demands + max-min allocation for one query row (flow layout
+/// `(src*S + dst)*2 + rw`, resources via [`flow_resources`]).
+fn perf_row(s: usize, m: &[f32], threads: &[f32], demand_pt: &[f32],
+            caps: &[f32]) -> Vec<f32> {
+    let nf = 2 * s * s;
+    let mut demands = vec![0.0f32; nf];
+    let mut resources = Vec::with_capacity(nf);
+    for src in 0..s {
+        for dst in 0..s {
+            for rw in 0..2 {
+                let f = (src * s + dst) * 2 + rw;
+                demands[f] = threads[src] * m[src * s + dst] * demand_pt[rw];
+                resources.push(flow_resources(s, src, dst, rw));
+            }
+        }
+    }
+    maxmin_f32(&demands, &resources, caps)
+}
+
+/// Progressive water-filling in f32 — the port of
+/// [`crate::simulator::contention::maxmin_into`] with f32-appropriate
+/// tolerances.  Each flow touches its destination channel plus (for remote
+/// flows) one interconnect link, so the resource sets are the
+/// `(chan, Option<link>)` pairs of [`flow_resources`].
+fn maxmin_f32(demands: &[f32], resources: &[(usize, Option<usize>)],
+              caps: &[f32]) -> Vec<f32> {
+    let nf = demands.len();
+    let nr = caps.len();
+    let mut alloc = vec![0.0f32; nf];
+    let mut frozen = vec![false; nf];
+    let mut residual = caps.to_vec();
+    let mut counts = vec![0u32; nr];
+    let mut sat = vec![false; nr];
+
+    let mut n_active = 0usize;
+    for i in 0..nf {
+        if demands[i] <= 0.0 {
+            frozen[i] = true;
+        } else {
+            n_active += 1;
+        }
+    }
+
+    // Each round saturates >= 1 resource or satisfies >= 1 flow.
+    for _round in 0..(nf + nr + 2) {
+        if n_active == 0 {
+            break;
+        }
+        for c in counts.iter_mut() {
+            *c = 0;
+        }
+        for i in 0..nf {
+            if !frozen[i] {
+                let (chan, link) = resources[i];
+                counts[chan] += 1;
+                if let Some(l) = link {
+                    counts[l] += 1;
+                }
+            }
+        }
+        // Uniform level increment (the max-min invariant): the largest
+        // step every active flow can take together.
+        let mut level = f32::INFINITY;
+        for r in 0..nr {
+            if counts[r] > 0 {
+                level = level.min(residual[r] / counts[r] as f32);
+            }
+        }
+        if !level.is_finite() {
+            // No active flow touches any resource (unreachable with our
+            // flow sets — every flow has a channel — but kept to mirror
+            // the reference solver).
+            for i in 0..nf {
+                if !frozen[i] {
+                    alloc[i] = demands[i];
+                    frozen[i] = true;
+                }
+            }
+            break;
+        }
+        let level = level.max(0.0);
+
+        for i in 0..nf {
+            if frozen[i] {
+                continue;
+            }
+            let grow = level.min(demands[i] - alloc[i]);
+            alloc[i] += grow;
+            let (chan, link) = resources[i];
+            residual[chan] -= grow;
+            if let Some(l) = link {
+                residual[l] -= grow;
+            }
+        }
+        for r in 0..nr {
+            sat[r] = residual[r] <= SAT_TOL * caps[r].max(1.0);
+        }
+        for i in 0..nf {
+            if frozen[i] {
+                continue;
+            }
+            let (chan, link) = resources[i];
+            let hits_sat =
+                sat[chan] || link.is_some_and(|l| sat[l]);
+            if demands[i] - alloc[i] <= SAT_TOL * demands[i].max(1.0)
+                || hits_sat
+            {
+                frozen[i] = true;
+                n_active -= 1;
+            }
+        }
+    }
+    alloc
+}
+
+// ---- §5 fit (f32) ---------------------------------------------------------
+
+/// 2-socket fit row: the f32 port of [`crate::model::fit::fit_channel`]
+/// (the paper's exact algorithm).  `counts` rows are `[local, remote]` per
+/// bank, flattened `[2, 2]`.  Returns `(fracs, static_socket, misfit)`.
+fn fit2_row(sym_c: &[f32], sym_r: &[f32], asym_c: &[f32], asym_r: &[f32],
+            thr: &[f32]) -> ([f32; 3], usize, f32) {
+    let normalize = |counts: &[f32], rates: &[f32]| -> [[f32; 2]; 2] {
+        let mean = (rates[0] + rates[1]) / 2.0;
+        let factor = [mean / rates[0].max(EPS), mean / rates[1].max(EPS)];
+        let mut out = [[0.0f32; 2]; 2];
+        for bank in 0..2 {
+            out[bank][0] = counts[bank * 2] * factor[bank];
+            out[bank][1] = counts[bank * 2 + 1] * factor[1 - bank];
+        }
+        out
+    };
+    let sym_n = normalize(sym_c, sym_r);
+    let asym_n = normalize(asym_c, asym_r);
+
+    // §5.3 static socket + fraction (ties toward socket 0, argmax style).
+    let totals = [sym_n[0][0] + sym_n[0][1], sym_n[1][0] + sym_n[1][1]];
+    let grand = (totals[0] + totals[1]).max(EPS);
+    let k = if totals[0] >= totals[1] { 0 } else { 1 };
+    let static_frac = ((totals[k] - totals[1 - k]) / grand).clamp(0.0, 1.0);
+
+    // §5.4 local fraction from the remote ratio after static removal.
+    let static_bytes = static_frac * grand;
+    let t_other = totals[1 - k];
+    let s_remote = |bank: usize| -> f32 {
+        let raw = sym_n[bank][1]
+            - if bank == k { 0.5 * static_bytes } else { 0.0 };
+        raw.max(0.0)
+    };
+    let r_per_bank = [
+        (s_remote(0) / t_other.max(EPS)).clamp(0.0, 1.0),
+        (s_remote(1) / t_other.max(EPS)).clamp(0.0, 1.0),
+    ];
+    let r = 0.5 * (r_per_bank[0] + r_per_bank[1]);
+    let one_m_static = (1.0 - static_frac).max(EPS);
+    let local_frac = ((1.0 - 2.0 * r) * one_m_static)
+        .clamp(0.0, 1.0)
+        .min(one_m_static);
+    let misfit = (r_per_bank[0] - r_per_bank[1]).abs();
+
+    // §5.5 per-thread fraction.
+    let cpu_tot = [
+        asym_n[0][0] + asym_n[1][1],
+        asym_n[1][0] + asym_n[0][1],
+    ];
+    let mut a_local = [asym_n[0][0], asym_n[1][0]];
+    let mut a_remote = [asym_n[0][1], asym_n[1][1]];
+    a_local[k] -= static_frac * cpu_tot[k];
+    a_remote[k] -= static_frac * cpu_tot[1 - k];
+    for i in 0..2 {
+        a_local[i] = (a_local[i] - local_frac * cpu_tot[i]).max(0.0);
+        a_remote[i] = a_remote[i].max(0.0);
+    }
+    let n_tot = thr[0] + thr[1];
+    let mut num = 0.0f32;
+    let mut den = 0.0f32;
+    for i in 0..2 {
+        let l_i = a_local[i] / (a_local[i] + a_remote[1 - i]).max(EPS);
+        let pt_i = thr[i] / n_tot.max(EPS);
+        num += (l_i - 0.5) * (pt_i - 0.5);
+        den += (pt_i - 0.5) * (pt_i - 0.5);
+    }
+    let p = (num / den.max(EPS)).clamp(0.0, 1.0);
+    let perthread_frac =
+        (p * (1.0 - local_frac - static_frac)).clamp(0.0, 1.0);
+
+    ([static_frac, local_frac, perthread_frac], k, misfit)
+}
+
+/// S-socket fit row (S > 2): the f32 port of
+/// [`crate::model::fit_multi::fit_channel_multi`], including its remote
+/// normalization weighting (which needs `sym_t`) and its max-deviation
+/// misfit.
+fn fitn_row(s: usize, sym_c: &[f32], sym_r: &[f32], sym_t: &[f32],
+            asym_c: &[f32], asym_r: &[f32], asym_t: &[f32])
+    -> ([f32; 3], usize, f32) {
+    let s_f = s as f32;
+    let normalize = |counts: &[f32], rates: &[f32], threads: &[f32]|
+        -> Vec<[f32; 2]> {
+        let mean: f32 = rates.iter().sum::<f32>() / s_f;
+        let factor: Vec<f32> =
+            rates.iter().map(|&r| mean / r.max(EPS)).collect();
+        (0..s)
+            .map(|bank| {
+                let mut wsum = 0.0f32;
+                let mut fsum = 0.0f32;
+                for other in 0..s {
+                    if other != bank {
+                        wsum += threads[other];
+                        fsum += threads[other] * factor[other];
+                    }
+                }
+                let rf = if wsum > 0.0 { fsum / wsum } else { 1.0 };
+                [counts[bank * 2] * factor[bank], counts[bank * 2 + 1] * rf]
+            })
+            .collect()
+    };
+    let symn = normalize(sym_c, sym_r, sym_t);
+    let asymn = normalize(asym_c, asym_r, asym_t);
+
+    // §5.3 static socket (last max on ties — Iterator::max_by semantics
+    // of the reference) + fraction as the excess over the others' mean.
+    let totals: Vec<f32> = symn.iter().map(|b| b[0] + b[1]).collect();
+    let grand = totals.iter().sum::<f32>().max(EPS);
+    let mut k = 0usize;
+    for i in 0..s {
+        if totals[i] >= totals[k] {
+            k = i;
+        }
+    }
+    let mean_others = (grand - totals[k]) / (s_f - 1.0);
+    let static_frac = ((totals[k] - mean_others) / grand).clamp(0.0, 1.0);
+    let static_bytes = static_frac * grand;
+
+    // §5.4 local fraction.
+    let post_total = mean_others.max(EPS);
+    let mut r_sum = 0.0f32;
+    let mut r_vals = Vec::with_capacity(s);
+    for bank in 0..s {
+        let remote = if bank == k {
+            symn[bank][1] - static_bytes * (s_f - 1.0) / s_f
+        } else {
+            symn[bank][1]
+        }
+        .max(0.0);
+        let r = (remote / post_total).clamp(0.0, 1.0);
+        r_vals.push(r);
+        r_sum += r;
+    }
+    let r = r_sum / s_f;
+    let one_m_static = (1.0 - static_frac).max(EPS);
+    let local_frac = ((1.0 - r * s_f / (s_f - 1.0)) * one_m_static)
+        .clamp(0.0, 1.0)
+        .min(one_m_static);
+    let misfit = r_vals
+        .iter()
+        .map(|v| (v - r).abs())
+        .fold(0.0f32, f32::max);
+
+    // §5.5 per-thread fraction with symmetric remote-mixing attribution.
+    let n = asym_t;
+    let n_tot: f32 = n.iter().sum();
+    let share = |cpu: usize, bank: usize| -> f32 {
+        if cpu == bank {
+            return 0.0;
+        }
+        let others = n_tot - n[bank];
+        if others > 0.0 {
+            n[cpu] / others
+        } else {
+            0.0
+        }
+    };
+    let cpu_tot: Vec<f32> = (0..s)
+        .map(|i| {
+            asymn[i][0]
+                + (0..s)
+                    .map(|j| asymn[j][1] * share(i, j))
+                    .sum::<f32>()
+        })
+        .collect();
+    let used = n.iter().filter(|&&t| t > 0.0).count().max(1) as f32;
+    let il = 1.0 / used;
+    let mut num = 0.0f32;
+    let mut den = 0.0f32;
+    for i in 0..s {
+        let mut local = asymn[i][0];
+        if i == k {
+            local -= static_frac * cpu_tot[i];
+        }
+        local = (local - local_frac * cpu_tot[i]).max(0.0);
+        let mut remote = 0.0f32;
+        for j in 0..s {
+            if j != i {
+                let mut rj = asymn[j][1] * share(i, j);
+                if j == k {
+                    rj -= static_frac * cpu_tot[i];
+                }
+                remote += rj.max(0.0);
+            }
+        }
+        let l_i = local / (local + remote).max(EPS);
+        let pt_i = n[i] / n_tot.max(EPS);
+        num += (l_i - il) * (pt_i - il);
+        den += (pt_i - il) * (pt_i - il);
+    }
+    let p = (num / den.max(EPS)).clamp(0.0, 1.0);
+    let perthread_frac =
+        (p * (1.0 - local_frac - static_frac)).clamp(0.0, 1.0);
+
+    ([static_frac, local_frac, perthread_frac], k, misfit)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::apply;
+    use crate::model::signature::ChannelSignature;
+    use crate::runtime::Batch;
+    use crate::simulator::contention::{maxmin, Flow};
+
+    fn one_row_batch(rows: &[Vec<f32>], dims: &[usize]) -> Tensor {
+        Batch::new(rows.len(), ENGINE_BATCH).pack(rows, dims)
+    }
+
+    #[test]
+    fn apply_matrix_matches_the_f64_reference() {
+        // The paper's Fig 5 worked example.
+        let sig = ChannelSignature::new(0.2, 0.35, 0.3, 1);
+        let want = apply::apply(&sig, &[3, 1]);
+        let got = apply_matrix(2, &[0.2, 0.35, 0.3], &[0.0, 1.0],
+                               &[3.0, 1.0]);
+        for r in 0..2 {
+            for c in 0..2 {
+                assert!((got[r * 2 + c] - want[r][c] as f32).abs() < 1e-6,
+                        "m[{r}][{c}]");
+            }
+        }
+    }
+
+    #[test]
+    fn maxmin_f32_matches_the_f64_solver_on_small_cases() {
+        // Channel-only and channel+link flows over the 2-socket layout.
+        let caps64 = [10.0f64, 8.0, 6.0, 5.0, 2.0, 2.0, 3.0, 3.0];
+        let caps32: Vec<f32> = caps64.iter().map(|&c| c as f32).collect();
+        let mut demands = Vec::new();
+        let mut resources = Vec::new();
+        let mut flows64 = Vec::new();
+        for src in 0..2usize {
+            for dst in 0..2usize {
+                for rw in 0..2usize {
+                    let d = 1.0 + (src * 4 + dst * 2 + rw) as f64;
+                    let (chan, link) = flow_resources(2, src, dst, rw);
+                    demands.push(d as f32);
+                    resources.push((chan, link));
+                    let mut rs = vec![chan];
+                    if let Some(l) = link {
+                        rs.push(l);
+                    }
+                    flows64.push(Flow::new(d, &rs));
+                }
+            }
+        }
+        let got = maxmin_f32(&demands, &resources, &caps32);
+        let want = maxmin(&flows64, &caps64);
+        for (f, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!((*g as f64 - w).abs() < 1e-4 * w.abs().max(1.0),
+                    "flow {f}: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn predict_counters_pipeline_matches_reference_math() {
+        let engine = NativeEngine::new();
+        let sig = ChannelSignature::new(0.2, 0.35, 0.3, 1);
+        let b = Batch::new(1, ENGINE_BATCH);
+        let inputs = vec![
+            b.pack(&[vec![0.2, 0.35, 0.3]], &[3]),
+            b.pack(&[vec![0.0, 1.0]], &[2]),
+            b.pack(&[vec![3.0, 1.0]], &[2]),
+            b.pack(&[vec![3.0, 1.0]], &[2]),
+        ];
+        let out = engine.execute("predict_counters", &inputs).unwrap();
+        let rows = b.unpack(&out[0]);
+        let want = apply::predict_counters(&sig, &[3, 1], &[3.0, 1.0]);
+        // §6.2.2 spot values: bank0 local 1.95, bank1 remote 1.05.
+        for bank in 0..2 {
+            for j in 0..2 {
+                assert!((rows[0][bank * 2 + j] as f64 - want[bank][j]).abs()
+                            < 1e-6,
+                        "bank {bank} kind {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn fit_pipeline_recovers_the_worked_example() {
+        // Exact model-conforming counters for the Fig 5 signature.
+        let sig = ChannelSignature::new(0.2, 0.35, 0.3, 1);
+        let counts = |tps: &[usize]| -> Vec<f32> {
+            let m = apply::apply(&sig, tps);
+            let s = tps.len();
+            let mut banks = vec![[0.0f64; 2]; s];
+            for (src, &nsrc) in tps.iter().enumerate() {
+                for dst in 0..s {
+                    let bytes = m[src][dst] * nsrc as f64 * 1e9;
+                    if src == dst {
+                        banks[dst][0] += bytes;
+                    } else {
+                        banks[dst][1] += bytes;
+                    }
+                }
+            }
+            banks.iter().flat_map(|b| [b[0] as f32, b[1] as f32]).collect()
+        };
+        let rates = |tps: &[usize]| -> Vec<f32> {
+            tps.iter().map(|_| 1.0e9f32).collect()
+        };
+        let thr = |tps: &[usize]| -> Vec<f32> {
+            tps.iter().map(|&t| t as f32).collect()
+        };
+        let engine = NativeEngine::new();
+        let b = Batch::new(1, ENGINE_BATCH);
+        let inputs = vec![
+            b.pack(&[counts(&[2, 2])], &[2, 2]),
+            b.pack(&[rates(&[2, 2])], &[2]),
+            b.pack(&[thr(&[2, 2])], &[2]),
+            b.pack(&[counts(&[3, 1])], &[2, 2]),
+            b.pack(&[rates(&[3, 1])], &[2]),
+            b.pack(&[thr(&[3, 1])], &[2]),
+        ];
+        let out = engine.execute("fit_signature", &inputs).unwrap();
+        let fracs = &b.unpack(&out[0])[0];
+        let onehot = &b.unpack(&out[1])[0];
+        let misfit = b.unpack(&out[2])[0][0];
+        assert!((fracs[0] - 0.2).abs() < 1e-4, "{fracs:?}");
+        assert!((fracs[1] - 0.35).abs() < 1e-4);
+        assert!((fracs[2] - 0.3).abs() < 1e-4);
+        assert_eq!(onehot, &vec![0.0, 1.0]);
+        assert!(misfit < 1e-4);
+    }
+
+    #[test]
+    fn execute_validates_shapes_and_names() {
+        let engine = NativeEngine::new();
+        assert!(engine.execute("frobnicate", &[]).is_err());
+        // Wrong arg count for predict_counters (needs 4).
+        let t = one_row_batch(&[vec![0.2, 0.3, 0.1]], &[3]);
+        let two = one_row_batch(&[vec![1.0, 1.0]], &[2]);
+        let err = engine
+            .execute("predict_counters", &[t.clone(), two.clone()])
+            .unwrap_err();
+        assert!(format!("{err}").contains("inputs"), "{err}");
+        // Mismatched socket dims across inputs.
+        let three = one_row_batch(&[vec![1.0, 1.0, 1.0]], &[3]);
+        let err = engine
+            .execute("predict_counters",
+                     &[t, two.clone(), three, two])
+            .unwrap_err();
+        assert!(format!("{err}").contains("shape"), "{err}");
+    }
+
+    #[test]
+    fn warmup_is_infallible_and_caches_the_manifest() {
+        let engine = NativeEngine::new();
+        engine.warmup().unwrap();
+        assert!(engine.manifests.lock().unwrap().contains_key(&2));
+    }
+}

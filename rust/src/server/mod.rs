@@ -4,11 +4,12 @@
 //! ROADMAP's "heavy traffic" north star asks for.
 //!
 //! ```text
-//!              numabw serve (JSONL stdin/stdout)        in-process users
-//!                         │                                   │
-//!                   protocol::serve_lines              server::Client
-//!                         │                                   │
-//!        ┌────────────────┴───────────────┬──────────────────┘
+//!   numabw serve (JSONL stdin/stdout │ --listen tcp │ unix socket)
+//!                         │                                in-process users
+//!         protocol::serve_lines / transport::LineServer         │
+//!              (one thread per connection)               server::Client
+//!                         │                                     │
+//!        ┌────────────────┴───────────────┬────────────────────┘
 //!        │                                │
 //!  ModelRegistry                     FrontEnd dispatcher
 //!  (signature-keyed LRU          (cross-request coalescing:
@@ -16,7 +17,8 @@
 //!   machine+seed guarded)         flush via runtime::BatchWindow)
 //!        │                                │
 //!        └────────► PredictionService ◄───┘
-//!                   (shared LRU memo caches, CacheStats)
+//!              (ExecutionBackend dispatch: reference | native | PJRT;
+//!               shared LRU memo caches, CacheStats)
 //! ```
 //!
 //! * [`frontend`] — [`FrontEnd`] / [`Client`]: many client threads, one
@@ -26,7 +28,10 @@
 //! * [`registry`] — [`ModelRegistry`]: LRU-evicting, store-backed fitted
 //!   model registry with machine+seed invalidation.
 //! * [`protocol`] — the line-delimited JSON wire format and the
-//!   `numabw serve` loop ([`serve_lines`]).
+//!   `numabw serve` stdin/stdout loop ([`serve_lines`]).
+//! * [`transport`] — [`LineServer`]: std-only TCP and unix-socket
+//!   listeners, one thread per connection, every connection coalescing
+//!   into the same front-end (`numabw serve --listen <addr>`).
 //! * [`metrics`] — request/flush counters ([`ServeMetrics`]) and the
 //!   serve-side cache-table rendering.
 
@@ -34,8 +39,10 @@ pub mod frontend;
 pub mod metrics;
 pub mod protocol;
 pub mod registry;
+pub mod transport;
 
 pub use frontend::{Client, FrontEnd, FrontEndConfig};
 pub use metrics::{FlushReason, MetricsSnapshot, ServeMetrics};
 pub use protocol::{parse_request, serve_lines, ProtoRequest, ServeOptions};
 pub use registry::{ModelRegistry, DEFAULT_REGISTRY_CAP};
+pub use transport::LineServer;

@@ -279,8 +279,12 @@ fn perf_result(served: &[Vec<f64>]) -> Json {
     )
 }
 
-/// Shared serving context of one `serve` session.
-struct ServeContext {
+/// Shared serving context of one `serve` session.  One context backs any
+/// number of concurrent transports: the stdin/stdout loop
+/// ([`serve_lines`]) and every TCP / unix-socket connection of a
+/// [`super::transport::LineServer`] all feed the same coalescing
+/// front-end and model registry.
+pub(crate) struct ServeContext {
     frontend: FrontEnd,
     client: Client,
     registry: ModelRegistry,
@@ -288,24 +292,51 @@ struct ServeContext {
 }
 
 impl ServeContext {
-    /// The compiled HLO pipelines bake in 2-socket shapes.  Reject S > 2
-    /// queries per-request *before* they join a coalesced batch: once
-    /// batched, the engine's shape error would fan out to every rider in
-    /// the flush, breaking the per-request error isolation the protocol
-    /// boundary guarantees.  (Reference mode serves any S.)
+    /// Build the front-end + registry a serve session shares.
+    pub(crate) fn new(svc: PredictionService, opts: ServeOptions)
+        -> Result<ServeContext> {
+        let registry = match &opts.store {
+            Some(path) => ModelRegistry::open(path, DEFAULT_REGISTRY_CAP)?,
+            None => ModelRegistry::in_memory(DEFAULT_REGISTRY_CAP),
+        };
+        let frontend = FrontEnd::start(
+            svc,
+            FrontEndConfig {
+                batch_size: opts.batch_size,
+                window: opts.window,
+            },
+        );
+        let client = frontend.client();
+        Ok(ServeContext {
+            frontend,
+            client,
+            registry,
+            opts,
+        })
+    }
+
+    /// A fixed-shape backend (the compiled 2-socket PJRT artifacts) can
+    /// only take its own socket count.  Reject mismatched queries
+    /// per-request *before* they join a coalesced batch: once batched,
+    /// the engine's shape error would fan out to every rider in the
+    /// flush, breaking the per-request error isolation the protocol
+    /// boundary guarantees.  (The reference and native backends serve
+    /// any S — `supported_sockets()` is `None`.)
     fn check_backend_shapes<I: IntoIterator<Item = usize>>(
         &self,
         sockets: I,
     ) -> Result<(), String> {
-        if !self.frontend.service().is_hlo() {
+        let svc = self.frontend.service();
+        let Some(fixed) = svc.supported_sockets() else {
             return Ok(());
-        }
+        };
         for s in sockets {
-            if s != 2 {
+            if s != fixed {
                 return Err(format!(
-                    "the compiled HLO pipelines are 2-socket; this server \
-                     cannot serve a {s}-socket query (restart without \
-                     --hlo to use the reference backend)"
+                    "the {} backend is compiled for {fixed}-socket \
+                     shapes; this server cannot serve a {s}-socket query \
+                     (restart with --engine native or --engine reference)",
+                    svc.backend_name()
                 ));
             }
         }
@@ -354,13 +385,17 @@ impl ServeContext {
             .ok_or_else(|| {
                 anyhow::anyhow!("unknown machine {machine_name:?}")
             })?;
-        if self.frontend.service().is_hlo() && machine.sockets != 2 {
-            bail!(
-                "the compiled HLO pipelines are 2-socket; cannot advise \
-                 {} ({} sockets) under --hlo",
-                machine.name,
-                machine.sockets
-            );
+        let svc = self.frontend.service();
+        if let Some(fixed) = svc.supported_sockets() {
+            if machine.sockets != fixed {
+                bail!(
+                    "the {} backend is compiled for {fixed}-socket \
+                     shapes; cannot advise {} ({} sockets)",
+                    svc.backend_name(),
+                    machine.name,
+                    machine.sockets
+                );
+            }
         }
         let w = workloads::find(workload_name).ok_or_else(|| {
             anyhow::anyhow!("unknown workload {workload_name:?}")
@@ -437,6 +472,54 @@ impl ServeContext {
             ),
         ])
     }
+
+    /// Drive one line-oriented stream against this context: read JSONL
+    /// requests from `input`, write one JSONL reply per request to `out`
+    /// (in order), until EOF.  Every transport — stdin/stdout and each
+    /// TCP / unix-socket connection — is one call to this loop; they all
+    /// coalesce into the same front-end.
+    pub(crate) fn serve_io<R: BufRead, W: Write>(&self, input: R,
+                                                 out: &mut W)
+        -> Result<()> {
+        for line in input.lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let reply = handle_line(self, &line);
+            writeln!(out, "{}", reply.encode())?;
+            out.flush()?;
+        }
+        Ok(())
+    }
+
+    /// The shutdown summary `numabw serve` prints to stderr.
+    pub(crate) fn summary(&self) -> String {
+        let snap = self.frontend.metrics().snapshot();
+        let stats = self.frontend.service().cache_stats();
+        format!(
+            "numabw serve: {} requests / {} queries; {} flushes (size {}, \
+             deadline {}, drain {}; mean coalesced batch {:.1}); {} \
+             registry entries\n{}",
+            snap.requests,
+            snap.queries,
+            snap.flushes(),
+            snap.flushes_size,
+            snap.flushes_deadline,
+            snap.flushes_drain,
+            snap.mean_batch(),
+            self.registry.len(),
+            cache_table(&stats, &self.registry.stats()),
+        )
+    }
+
+    /// Tear down: drop the client handle, then drain and join the
+    /// dispatcher.
+    pub(crate) fn shutdown(self) {
+        let ServeContext { frontend, client, .. } = self;
+        drop(client);
+        frontend.shutdown();
+    }
 }
 
 /// Handle one input line, producing exactly one reply line.
@@ -453,58 +536,17 @@ fn handle_line(ctx: &ServeContext, line: &str) -> Json {
     }
 }
 
-/// The `numabw serve` loop: read JSONL requests from `input`, write one
-/// JSONL reply per request to `out` (in order), until EOF.  Returns the
-/// shutdown summary it also prints to stderr.
+/// The `numabw serve` stdin/stdout loop: one JSONL reply per request line,
+/// until EOF.  Returns the shutdown summary it also prints to stderr.
+/// (The TCP / unix-socket transports run the same per-connection loop —
+/// see [`super::transport::LineServer`].)
 pub fn serve_lines<R: BufRead, W: Write>(svc: PredictionService,
                                          opts: ServeOptions, input: R,
                                          out: &mut W) -> Result<String> {
-    let registry = match &opts.store {
-        Some(path) => ModelRegistry::open(path, DEFAULT_REGISTRY_CAP)?,
-        None => ModelRegistry::in_memory(DEFAULT_REGISTRY_CAP),
-    };
-    let frontend = FrontEnd::start(
-        svc,
-        FrontEndConfig {
-            batch_size: opts.batch_size,
-            window: opts.window,
-        },
-    );
-    let client = frontend.client();
-    let ctx = ServeContext {
-        frontend,
-        client,
-        registry,
-        opts,
-    };
-    for line in input.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        let reply = handle_line(&ctx, &line);
-        writeln!(out, "{}", reply.encode())?;
-        out.flush()?;
-    }
-    let snap = ctx.frontend.metrics().snapshot();
-    let stats = ctx.frontend.service().cache_stats();
-    let summary = format!(
-        "numabw serve: {} requests / {} queries; {} flushes (size {}, \
-         deadline {}, drain {}; mean coalesced batch {:.1}); {} registry \
-         entries\n{}",
-        snap.requests,
-        snap.queries,
-        snap.flushes(),
-        snap.flushes_size,
-        snap.flushes_deadline,
-        snap.flushes_drain,
-        snap.mean_batch(),
-        ctx.registry.len(),
-        cache_table(&stats, &ctx.registry.stats()),
-    );
-    let ServeContext { frontend, client, .. } = ctx;
-    drop(client);
-    frontend.shutdown();
+    let ctx = ServeContext::new(svc, opts)?;
+    ctx.serve_io(input, out)?;
+    let summary = ctx.summary();
+    ctx.shutdown();
     Ok(summary)
 }
 

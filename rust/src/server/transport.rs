@@ -1,0 +1,311 @@
+//! Socket transports for the serve daemon: `numabw serve --listen <addr>`.
+//!
+//! Std-only, like the rest of the serving stack: a [`std::net::TcpListener`]
+//! (or, on unix, a [`std::os::unix::net::UnixListener`]) accepts
+//! connections on a dedicated thread; each connection gets one thread
+//! running the same JSONL request/reply loop the stdin/stdout transport
+//! uses ([`ServeContext::serve_io`]), and **every connection feeds the
+//! same [`ServeContext`]** — one coalescing front-end, one model
+//! registry, one set of LRU caches — so queries from different fleet
+//! clients batch together exactly like queries from different in-process
+//! threads.
+//!
+//! Error isolation is per request (the protocol boundary) and per
+//! connection (an I/O failure on one socket ends that connection's loop
+//! and thread; the listener and every other connection keep serving).
+//!
+//! Shutdown: [`LineServer::shutdown`] stops the accept loop (flag + a
+//! self-connection to unblock `accept`), joins the connection threads
+//! (clients are expected to have disconnected), and returns the same
+//! summary string `serve_lines` produces.  The CLI's long-running mode
+//! ([`LineServer::run_forever`]) simply parks on the accept thread.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::PredictionService;
+
+use super::protocol::{ServeContext, ServeOptions};
+
+/// Joined-on-shutdown handles of the per-connection threads.
+type ConnHandles = Arc<Mutex<Vec<JoinHandle<()>>>>;
+
+/// Where a [`LineServer`] is listening.
+enum Endpoint {
+    Tcp(SocketAddr),
+    #[cfg(unix)]
+    Unix(std::path::PathBuf),
+}
+
+/// A running socket server: accept thread + one thread per connection,
+/// all sharing one [`ServeContext`].
+pub struct LineServer {
+    ctx: Arc<ServeContext>,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: ConnHandles,
+    endpoint: Endpoint,
+}
+
+impl LineServer {
+    /// Bind `addr` (e.g. `127.0.0.1:7654`; port 0 picks a free port) and
+    /// start serving.
+    pub fn start_tcp(svc: PredictionService, opts: ServeOptions,
+                     addr: &str) -> Result<LineServer> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding tcp listener on {addr}"))?;
+        let local = listener.local_addr()?;
+        let ctx = Arc::new(ServeContext::new(svc, opts)?);
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: ConnHandles = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let (ctx, stop, conns) =
+                (ctx.clone(), stop.clone(), conns.clone());
+            std::thread::Builder::new()
+                .name("numabw-accept-tcp".to_string())
+                .spawn(move || {
+                    for stream in listener.incoming() {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        match stream {
+                            Ok(stream) => {
+                                let reader = match stream.try_clone() {
+                                    Ok(r) => r,
+                                    Err(e) => {
+                                        eprintln!(
+                                            "numabw serve: cannot clone \
+                                             tcp stream: {e}"
+                                        );
+                                        continue;
+                                    }
+                                };
+                                spawn_connection(&ctx, &conns, reader,
+                                                 stream);
+                            }
+                            Err(e) => {
+                                eprintln!(
+                                    "numabw serve: tcp accept error: {e}"
+                                );
+                            }
+                        }
+                    }
+                })
+                .expect("spawning the tcp accept thread")
+        };
+        Ok(LineServer {
+            ctx,
+            stop,
+            accept: Some(accept),
+            conns,
+            endpoint: Endpoint::Tcp(local),
+        })
+    }
+
+    /// Bind a unix-domain socket at `path` (a *stale* socket file — one
+    /// nobody is listening on — is removed first) and start serving.
+    #[cfg(unix)]
+    pub fn start_unix(svc: PredictionService, opts: ServeOptions,
+                      path: &std::path::Path) -> Result<LineServer> {
+        use std::os::unix::net::{UnixListener, UnixStream};
+        // A dead daemon leaves its socket file behind, which would make
+        // bind fail with AddrInUse even though nobody is listening.  But
+        // only remove the file when a probe connect is REFUSED — blindly
+        // unlinking would silently hijack a live daemon's endpoint (its
+        // clients would reconnect to us, and both daemons could race on
+        // one --store file).
+        if path.exists() {
+            match UnixStream::connect(path) {
+                Ok(_) => anyhow::bail!(
+                    "{} already has a live listener (connect succeeded); \
+                     refusing to hijack it",
+                    path.display()
+                ),
+                Err(e)
+                    if e.kind()
+                        == std::io::ErrorKind::ConnectionRefused =>
+                {
+                    std::fs::remove_file(path).ok();
+                }
+                Err(_) => {
+                    // Not a live socket but not provably stale either
+                    // (e.g. a regular file): let bind report the error.
+                }
+            }
+        }
+        let listener = UnixListener::bind(path).with_context(|| {
+            format!("binding unix listener at {}", path.display())
+        })?;
+        let ctx = Arc::new(ServeContext::new(svc, opts)?);
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: ConnHandles = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let (ctx, stop, conns) =
+                (ctx.clone(), stop.clone(), conns.clone());
+            std::thread::Builder::new()
+                .name("numabw-accept-unix".to_string())
+                .spawn(move || {
+                    for stream in listener.incoming() {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        match stream {
+                            Ok(stream) => {
+                                let reader = match stream.try_clone() {
+                                    Ok(r) => r,
+                                    Err(e) => {
+                                        eprintln!(
+                                            "numabw serve: cannot clone \
+                                             unix stream: {e}"
+                                        );
+                                        continue;
+                                    }
+                                };
+                                spawn_connection(&ctx, &conns, reader,
+                                                 stream);
+                            }
+                            Err(e) => {
+                                eprintln!(
+                                    "numabw serve: unix accept error: {e}"
+                                );
+                            }
+                        }
+                    }
+                })
+                .expect("spawning the unix accept thread")
+        };
+        Ok(LineServer {
+            ctx,
+            stop,
+            accept: Some(accept),
+            conns,
+            endpoint: Endpoint::Unix(path.to_path_buf()),
+        })
+    }
+
+    /// Unsupported off unix.
+    #[cfg(not(unix))]
+    pub fn start_unix(_svc: PredictionService, _opts: ServeOptions,
+                      path: &std::path::Path) -> Result<LineServer> {
+        anyhow::bail!(
+            "unix-socket transport is unsupported on this platform \
+             (requested {})",
+            path.display()
+        )
+    }
+
+    /// The bound TCP address (None for unix sockets) — lets tests bind
+    /// port 0 and connect to whatever was picked.
+    pub fn local_addr(&self) -> Option<SocketAddr> {
+        match &self.endpoint {
+            Endpoint::Tcp(a) => Some(*a),
+            #[cfg(unix)]
+            Endpoint::Unix(_) => None,
+        }
+    }
+
+    /// Human-readable endpoint for the startup banner.
+    pub fn endpoint_display(&self) -> String {
+        match &self.endpoint {
+            Endpoint::Tcp(a) => format!("tcp {a}"),
+            #[cfg(unix)]
+            Endpoint::Unix(p) => format!("unix {}", p.display()),
+        }
+    }
+
+    /// Block on the accept loop — the CLI's daemon mode.  Only returns if
+    /// the accept thread dies.
+    pub fn run_forever(mut self) -> Result<()> {
+        if let Some(handle) = self.accept.take() {
+            handle
+                .join()
+                .map_err(|_| anyhow::anyhow!("accept thread panicked"))?;
+        }
+        Ok(())
+    }
+
+    /// Stop accepting, join connection threads (callers should have
+    /// disconnected their clients), and return the serve summary.
+    pub fn shutdown(mut self) -> String {
+        self.stop.store(true, Ordering::SeqCst);
+        self.wake_accept();
+        if let Some(handle) = self.accept.take() {
+            let _ = handle.join();
+        }
+        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
+        for handle in conns {
+            let _ = handle.join();
+        }
+        let summary = self.ctx.summary();
+        #[cfg(unix)]
+        if let Endpoint::Unix(path) = &self.endpoint {
+            std::fs::remove_file(path).ok();
+        }
+        // Dropping the last context Arc drains and joins the dispatcher.
+        summary
+    }
+
+    /// Unblock the accept loop with a throwaway self-connection (the
+    /// stop flag is already set, so it is never served).
+    fn wake_accept(&self) {
+        match &self.endpoint {
+            Endpoint::Tcp(addr) => {
+                // A wildcard bind (0.0.0.0 / ::) is not connectable on
+                // every platform; wake through loopback instead.
+                let mut addr = *addr;
+                if addr.ip().is_unspecified() {
+                    addr.set_ip(match addr {
+                        SocketAddr::V4(_) => std::net::IpAddr::V4(
+                            std::net::Ipv4Addr::LOCALHOST,
+                        ),
+                        SocketAddr::V6(_) => std::net::IpAddr::V6(
+                            std::net::Ipv6Addr::LOCALHOST,
+                        ),
+                    });
+                }
+                let _ = TcpStream::connect_timeout(
+                    &addr,
+                    std::time::Duration::from_millis(250),
+                );
+            }
+            #[cfg(unix)]
+            Endpoint::Unix(path) => {
+                let _ = std::os::unix::net::UnixStream::connect(path);
+            }
+        }
+    }
+}
+
+/// One thread per connection: run the shared JSONL loop until the peer
+/// closes or errors.  Connection failures are logged, never propagated —
+/// the daemon outlives its clients.
+fn spawn_connection<R, W>(ctx: &Arc<ServeContext>, conns: &ConnHandles,
+                          reader: R, mut writer: W)
+where
+    R: std::io::Read + Send + 'static,
+    W: std::io::Write + Send + 'static,
+{
+    let ctx = ctx.clone();
+    let handle = std::thread::Builder::new()
+        .name("numabw-conn".to_string())
+        .spawn(move || {
+            if let Err(e) = ctx.serve_io(BufReader::new(reader),
+                                         &mut writer) {
+                eprintln!("numabw serve: connection closed with error: \
+                           {e:#}");
+            }
+        })
+        .expect("spawning a connection thread");
+    let mut conns = conns.lock().unwrap();
+    // Reap handles whose connections already ended — the daemon mode
+    // (`run_forever`) never reaches shutdown's drain, so without this a
+    // long-lived server under short-lived clients would accumulate one
+    // retained JoinHandle per connection forever.
+    conns.retain(|h| !h.is_finished());
+    conns.push(handle);
+}

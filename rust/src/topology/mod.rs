@@ -16,6 +16,39 @@ use crate::util::json::Json;
 /// Gigabyte per second in bytes/second.
 pub const GB: f64 = 1e9;
 
+/// Resource footprint of performance-query flow `(src, dst, rw)` on an
+/// S-socket machine (flow order `(src*S + dst)*2 + rw`, the S-socket
+/// generalisation of `model.py build_incidence`'s 2-socket
+/// `src*4 + dst*2 + rw`): the memory channel at the destination bank, plus
+/// the interconnect link for remote flows — read data crosses the
+/// `dst -> src` read link, write data the `src -> dst` write link.
+/// Index arithmetic matches [`MachineTopology::read_chan`] /
+/// [`MachineTopology::write_chan`] / [`MachineTopology::qpi_read_link`] /
+/// [`MachineTopology::qpi_write_link`].  Single source of truth shared by
+/// the reference `predict_performance`, the advisor's headroom accounting,
+/// and the runtime's synthesized flow→resource incidence
+/// ([`crate::runtime::Artifacts::synthesize`]).
+pub fn flow_resources(sockets: usize, src: usize, dst: usize,
+                      rw: usize) -> (usize, Option<usize>) {
+    let s = sockets;
+    // Dense index over ordered pairs (a, b), a != b (row-major, matching
+    // MachineTopology::link_offset).
+    let off = |a: usize, b: usize| {
+        a * (s - 1) + if b > a { b - 1 } else { b }
+    };
+    let chan = if rw == 0 { dst } else { s + dst };
+    let link = if src != dst {
+        Some(if rw == 0 {
+            2 * s + off(dst, src)
+        } else {
+            2 * s + s * (s - 1) + off(src, dst)
+        })
+    } else {
+        None
+    };
+    (chan, link)
+}
+
 /// Description of one NUMA machine.
 #[derive(Clone, Debug, PartialEq)]
 pub struct MachineTopology {

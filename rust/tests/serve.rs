@@ -379,6 +379,102 @@ fn four_socket_advise_op_serves_through_the_daemon() {
                want);
 }
 
+const COUNTERS_LINE: &str =
+    "{\"id\":1,\"op\":\"counters\",\"sig\":{\"static\":0.25,\
+     \"local\":0.5,\"perthread\":0.125,\"static_socket\":1,\
+     \"misfit\":0},\"threads\":[2,2],\"cpu_totals\":[4.0,2.0]}\n";
+
+/// The smoke transcript's hand-computed reply for [`COUNTERS_LINE`].
+fn assert_counters_reply(line: &str) {
+    let reply = numabw::util::json::Json::parse(line).unwrap();
+    assert_eq!(reply.get("ok").and_then(|j| j.as_bool()), Some(true),
+               "{line}");
+    let banks = reply.get("result").unwrap().as_arr().unwrap()[0]
+        .as_arr()
+        .unwrap();
+    assert_eq!(banks[0].as_f64_vec().unwrap(), vec![2.5, 0.25]);
+    assert_eq!(banks[1].as_f64_vec().unwrap(), vec![1.75, 1.5]);
+}
+
+#[test]
+fn tcp_transport_serves_concurrent_connections_through_one_frontend() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    let server = numabw::server::LineServer::start_tcp(
+        PredictionService::reference(),
+        ServeOptions::default(),
+        "127.0.0.1:0", // port 0: the OS picks a free port
+    )
+    .unwrap();
+    let addr = server.local_addr().expect("tcp endpoints have an addr");
+    // Four concurrent clients, one query each.
+    let mut handles = Vec::new();
+    for _ in 0..4 {
+        handles.push(std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            stream.write_all(COUNTERS_LINE.as_bytes()).unwrap();
+            stream.flush().unwrap();
+            let mut reader =
+                BufReader::new(stream.try_clone().unwrap());
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            line
+        }));
+    }
+    for h in handles {
+        assert_counters_reply(&h.join().unwrap());
+    }
+    // Per-request error isolation holds on a socket exactly as on
+    // stdin/stdout: garbage gets its own error line, the connection (and
+    // the daemon) keep serving.
+    {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(b"this is not json\n").unwrap();
+        stream.write_all(COUNTERS_LINE.as_bytes()).unwrap();
+        stream.flush().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut first = String::new();
+        reader.read_line(&mut first).unwrap();
+        let err = numabw::util::json::Json::parse(&first).unwrap();
+        assert_eq!(err.get("ok").and_then(|j| j.as_bool()), Some(false));
+        let mut second = String::new();
+        reader.read_line(&mut second).unwrap();
+        assert_counters_reply(&second);
+    }
+    let summary = server.shutdown();
+    // 5 valid queries crossed the shared front-end (garbage never
+    // reaches it).
+    assert!(summary.contains("5 requests / 5 queries"), "{summary}");
+}
+
+#[cfg(unix)]
+#[test]
+fn unix_socket_transport_round_trips_and_cleans_up() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::os::unix::net::UnixStream;
+    let path = std::env::temp_dir()
+        .join(format!("numabw-serve-{}.sock", std::process::id()));
+    let server = numabw::server::LineServer::start_unix(
+        PredictionService::reference(),
+        ServeOptions::default(),
+        &path,
+    )
+    .unwrap();
+    assert!(server.local_addr().is_none());
+    {
+        let mut stream = UnixStream::connect(&path).unwrap();
+        stream.write_all(COUNTERS_LINE.as_bytes()).unwrap();
+        stream.flush().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_counters_reply(&line);
+    }
+    let summary = server.shutdown();
+    assert!(summary.contains("1 requests / 1 queries"), "{summary}");
+    assert!(!path.exists(), "socket file must be removed on shutdown");
+}
+
 #[test]
 fn smoke_transcript_reproduces_the_golden_replies() {
     // Same fixture CI pipes through the release binary:
