@@ -3,11 +3,12 @@
 //!
 //!   Rust simulator substrate (counters)
 //!     → §5.1 profiling orchestration (Rust coordinator)
-//!     → §5 signature fit (Pallas kernel → HLO → PJRT)
+//!     → §5 signature fit (HLO-text modules through the interpreter
+//!       engine — AOT artifacts when present, emitted offline otherwise)
 //!     → §4/§6.2.2 predictions for every thread split (same path)
 //!     → error statistics vs the paper's published numbers.
 //!
-//!     make artifacts && cargo run --release --example e2e_reproduction
+//!     cargo run --release --example e2e_reproduction
 //!
 //! Results are recorded in EXPERIMENTS.md.  Writes `e2e_results.json`.
 
@@ -25,11 +26,13 @@ use numabw::workloads::suite;
 fn main() -> anyhow::Result<()> {
     println!("=== numabw end-to-end reproduction ===\n");
 
-    // Layer check: the HLO artifacts must load and compile — this run is
-    // about proving the full stack, so no silent reference fallback.
+    // Layer check: the HLO modules must parse and execute — this run is
+    // about proving the full stack, so no silent reference fallback
+    // (from_env loads AOT artifacts when present, emitted modules
+    // otherwise; a broken artifacts dir is an error).
     let engine = Engine::from_env()?;
     engine.warmup()?;
-    println!("PJRT engine up: {} pipelines compiled (batch {})",
+    println!("hlo engine up: {} pipelines loaded (batch {})",
              numabw::runtime::PIPELINES.len(), engine.batch());
     let svc = PredictionService::hlo(engine);
 
@@ -99,7 +102,7 @@ fn main() -> anyhow::Result<()> {
     out.set("wall_seconds", Json::Num(wall));
     std::fs::write("e2e_results.json", out.encode())?;
     println!("\nwrote e2e_results.json; total {} points in {wall:.1}s \
-              (HLO/PJRT request path, Python not involved)",
+              (HLO request path, Python not involved)",
              evs.iter().map(|e| e.records.len()).sum::<usize>());
     Ok(())
 }

@@ -4,9 +4,10 @@
 //!     cargo run --release --example quickstart
 //!
 //! Uses the Rust reference model by default; pass
-//! `--engine native|pjrt` to route the fit and predictions through a
-//! batched execution backend (native runs everywhere; pjrt needs the AOT
-//! artifacts and the `xla` crate).
+//! `--engine native|hlo` to route the fit and predictions through a
+//! batched execution backend (both run everywhere: native is the
+//! in-process f32 engine, hlo interprets emitted — or AOT-exported —
+//! HLO-text modules).
 
 use numabw::coordinator::{profile, FitRequest, PredictionService};
 use numabw::model::misfit;

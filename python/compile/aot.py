@@ -8,11 +8,18 @@ Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
 jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
 xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
 reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+The Rust side now also ships its own HLO-text parser + interpreter
+(``rust/src/runtime/hlo``), so artifacts exported here are directly
+executable by ``--engine hlo`` with no PJRT at all.
 
 Each pipeline is lowered with ``return_tuple=True`` so the Rust side can
 uniformly unwrap tuple outputs.  A ``manifest.json`` records, for every
 artifact, the argument/result shapes and the batch size so the Rust loader
 can validate itself against what was actually compiled.
+
+JAX is imported **lazily** (inside the lowering functions): importing this
+module must work in a JAX-less environment so the schema constants below
+stay testable in every CI lane (the ROADMAP's "never-compiled corner").
 """
 
 from __future__ import annotations
@@ -22,20 +29,61 @@ import hashlib
 import json
 import os
 
-import jax
-from jax._src.lib import xla_client as xc
+#: Pipeline names, in manifest order.  Must match the Rust runtime's
+#: ``PIPELINES`` constant (rust/src/runtime/mod.rs) — pinned by
+#: ``tests/test_aot_manifest.py`` without needing JAX.
+PIPELINE_NAMES = (
+    "fit_signature",
+    "signature_apply",
+    "predict_counters",
+    "predict_performance",
+)
 
-from .model import BATCH, INCIDENCE, N_FLOWS, N_RESOURCES, PIPELINES, SOCKETS
+#: Top-level keys every ``manifest.json`` carries (the schema the Rust
+#: ``Artifacts::load`` validates against).
+MANIFEST_KEYS = (
+    "batch",
+    "sockets",
+    "n_flows",
+    "n_resources",
+    "incidence",
+    "pipelines",
+)
+
+#: Per-pipeline argument count of the **legacy AOT layout** this driver
+#: exports (2-socket shapes).  Note ``fit_signature`` takes FIVE
+#: arguments here — the historical compiled layout — while the Rust
+#: runtime's synthesized S-generic manifests take SIX (the §5.2
+#: normalization needs the symmetric run's thread counts as the third
+#: argument; ``ExecutionBackend::fit_takes_sym_threads``).  The Rust
+#: loader detects which layout a manifest declares from these counts.
+AOT_ARG_COUNTS = {
+    "fit_signature": 5,
+    "signature_apply": 3,
+    "predict_counters": 4,
+    "predict_performance": 5,
+}
+
+#: The S-generic synthesized layout's argument counts, for cross-checks.
+SYNTH_ARG_COUNTS = {
+    "fit_signature": 6,
+    "signature_apply": 3,
+    "predict_counters": 4,
+    "predict_performance": 5,
+}
 
 
 def to_hlo_text(lowered) -> str:
     """StableHLO → XlaComputation → HLO text (id-reassigning path).
 
     ``as_hlo_text(True)`` = print_large_constants: without it the printer
-    elides big literals as ``constant({...})`` and the Rust-side text parser
-    silently reads them as zeros (observed: the 8×8 incidence matrix of the
+    elides big literals as ``constant({...})`` and text parsers read them
+    as zeros — or, in the Rust interpreter's case, refuse to load the
+    module (observed before the flag: the 8×8 incidence matrix of the
     maxmin kernel vanished, turning water-filling into a no-op).
     """
+    from jax._src.lib import xla_client as xc
+
     mlir_mod = lowered.compiler_ir("stablehlo")
     comp = xc._xla.mlir.mlir_module_to_xla_computation(
         str(mlir_mod), use_tuple_args=False, return_tuple=True
@@ -44,6 +92,12 @@ def to_hlo_text(lowered) -> str:
 
 
 def lower_all(out_dir: str) -> dict:
+    import jax
+
+    from .model import BATCH, INCIDENCE, N_FLOWS, N_RESOURCES, PIPELINES, \
+        SOCKETS
+
+    assert tuple(PIPELINES) == PIPELINE_NAMES, "pipeline set drifted"
     os.makedirs(out_dir, exist_ok=True)
     manifest = {
         "batch": BATCH,
@@ -54,6 +108,7 @@ def lower_all(out_dir: str) -> dict:
         "pipelines": {},
     }
     for name, (fn, example_args) in PIPELINES.items():
+        assert len(example_args) == AOT_ARG_COUNTS[name], name
         lowered = jax.jit(fn).lower(*example_args)
         text = to_hlo_text(lowered)
         path = os.path.join(out_dir, f"{name}.hlo.txt")
@@ -79,7 +134,7 @@ def main() -> None:
     parser.add_argument("--out-dir", default="../artifacts",
                         help="directory for *.hlo.txt + manifest.json")
     args = parser.parse_args()
-    print(f"lowering {len(PIPELINES)} pipelines (B={BATCH}, S={SOCKETS})")
+    print(f"lowering {len(PIPELINE_NAMES)} pipelines")
     lower_all(args.out_dir)
     print("done")
 

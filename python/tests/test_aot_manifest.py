@@ -1,0 +1,111 @@
+"""No-JAX smoke tests for the AOT driver (``compile/aot.py``).
+
+The ROADMAP flags ``aot.py`` as the never-compiled corner: it only ran
+when JAX was installed, so a CI lane without JAX never even imported it.
+These tests run in *every* environment — the module must import JAX-free,
+and its schema constants must stay in lockstep with the Rust runtime
+(``PIPELINES`` and the 5-vs-6-argument ``fit_signature`` layouts).
+
+The JAX-dependent half (actual lowering) stays in
+``test_model_pipelines.py`` behind ``pytest.importorskip("jax")``.
+"""
+
+from __future__ import annotations
+
+import re
+from pathlib import Path
+
+from compile import aot
+
+RUNTIME_RS = (
+    Path(__file__).resolve().parents[2] / "rust" / "src" / "runtime"
+    / "mod.rs"
+)
+
+
+def test_aot_imports_without_jax():
+    # Import already happened above; pin the lazy-import contract so a
+    # future top-level `import jax` regression fails loudly here.
+    src = Path(aot.__file__).read_text()
+    for line in src.splitlines():
+        # Module-scope (unindented) imports only; lazy imports inside
+        # functions are the point.
+        assert not line.startswith(("import jax", "from jax")), (
+            f"aot.py must import JAX lazily (inside functions): {line!r}"
+        )
+        assert not line.startswith("from .model"), (
+            "model.py imports JAX at module scope; aot.py must only "
+            f"pull it in lazily: {line!r}"
+        )
+
+
+def test_pipeline_names_match_rust_runtime():
+    # Cross-language pin: the Rust runtime's PIPELINES constant names the
+    # same four pipelines, in the same order.
+    src = RUNTIME_RS.read_text()
+    m = re.search(
+        r"pub const PIPELINES: \[&str; (\d+)\] = \[(.*?)\];",
+        src,
+        re.S,
+    )
+    assert m, "PIPELINES constant not found in runtime/mod.rs"
+    assert int(m.group(1)) == len(aot.PIPELINE_NAMES)
+    rust_names = re.findall(r'"([a-z_]+)"', m.group(2))
+    assert tuple(rust_names) == aot.PIPELINE_NAMES
+
+
+def test_arg_layouts_cover_every_pipeline():
+    assert set(aot.AOT_ARG_COUNTS) == set(aot.PIPELINE_NAMES)
+    assert set(aot.SYNTH_ARG_COUNTS) == set(aot.PIPELINE_NAMES)
+    # Legacy AOT fit layout is 5 arguments; the synthesized S-generic
+    # layout adds the symmetric run's thread counts (6).  Everything
+    # else agrees between the two layouts.
+    assert aot.AOT_ARG_COUNTS["fit_signature"] == 5
+    assert aot.SYNTH_ARG_COUNTS["fit_signature"] == 6
+    for name in aot.PIPELINE_NAMES:
+        if name != "fit_signature":
+            assert aot.AOT_ARG_COUNTS[name] == aot.SYNTH_ARG_COUNTS[name]
+
+
+def test_six_arg_layout_matches_rust_synthesize():
+    # The Rust synthesized manifest builds fit_signature with six args
+    # (incl. sym_threads) and documents the legacy 5-arg detection; pin
+    # both ends so neither side drifts silently.
+    src = RUNTIME_RS.read_text()
+    m = re.search(r'put\(\s*"fit_signature",', src)
+    assert m, "synthesized fit_signature put() not found"
+    call = m.end()
+    # Walk the first (argument-shapes) vec![...] with balanced brackets
+    # and count its top-level vec![ children.
+    start = src.index("vec![", call)
+    depth = 0
+    n_args = 0
+    i = start
+    while True:
+        if src.startswith("vec![", i):
+            if depth == 1:
+                n_args += 1
+            depth += 1
+            i += 5
+            continue
+        ch = src[i]
+        if ch == "[":
+            depth += 1
+        elif ch == "]":
+            depth -= 1
+            if depth == 0:
+                break
+        i += 1
+    assert n_args == aot.SYNTH_ARG_COUNTS["fit_signature"]
+    assert "fit_takes_sym_threads" in src
+
+
+def test_manifest_schema_keys_are_stable():
+    assert aot.MANIFEST_KEYS == (
+        "batch",
+        "sockets",
+        "n_flows",
+        "n_resources",
+        "incidence",
+        "pipelines",
+    )

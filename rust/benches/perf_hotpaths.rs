@@ -3,7 +3,8 @@
 //!
 //! L3 paths: simulator epoch loop, max-min solver, §5 fit (Rust), §4
 //! apply (Rust), batched prediction service (Rust reference vs the
-//! native batched f32 engine vs HLO/PJRT when artifacts exist),
+//! native batched f32 engine vs the `hlo` interpreter engine — always
+//! available, so the interpreter's cost is tracked from day one),
 //! end-to-end evaluation throughput.
 //!
 //! Run: `cargo bench --bench perf_hotpaths`
@@ -228,38 +229,70 @@ fn main() {
         served_s * 1e3,
         native_served_s * 1e3
     );
-    let native_fit_reqs: Vec<FitRequest> = (0..21)
+    let fit_reqs: Vec<FitRequest> = (0..21)
         .map(|_| FitRequest { sym: sym.clone(), asym: asym.clone() })
         .collect();
-    let r = h.bench("fit_21_workloads_native", || {
-        black_box(native.fit(&native_fit_reqs).unwrap())
-    });
+    let native_fit_s = h
+        .bench("fit_21_workloads_native", || {
+            black_box(native.fit(&fit_reqs).unwrap())
+        })
+        .summary
+        .median;
     println!("  -> {:.1}k fits/s (native; 63 rows, 1 batch)\n",
-             21.0 / r.summary.median / 1e3);
+             21.0 / native_fit_s / 1e3);
 
-    match numabw::runtime::Engine::from_env() {
-        Ok(engine) => {
-            engine.warmup().unwrap();
-            let hlo = PredictionService::hlo(engine);
-            let r = h.bench("predict_counters_256_hlo", || {
-                black_box(hlo.predict_counters(&queries).unwrap())
-            });
-            println!("  -> {:.1}k predictions/s (HLO, incl. PJRT dispatch \
-                      of 4 batches)\n", 256.0 / r.summary.median / 1e3);
-            let fit_reqs: Vec<FitRequest> = (0..21)
-                .map(|_| FitRequest { sym: sym.clone(), asym: asym.clone() })
-                .collect();
-            let r = h.bench("fit_21_workloads_hlo", || {
-                black_box(hlo.fit(&fit_reqs).unwrap())
-            });
-            println!("  -> {:.1}k fits/s (HLO; 63 rows, 1 batch)\n",
-                     21.0 / r.summary.median / 1e3);
-            h.bench("fit_21_workloads_reference", || {
-                black_box(reference.fit(&fit_reqs).unwrap())
-            });
-        }
-        Err(e) => println!("(HLO benches skipped: {e})"),
-    }
+    // ---- hlo interpreter engine: reference vs native vs hlo -----------------
+    // The interpreter executes emitted HLO modules graph-node by
+    // graph-node, so its cost is tracked from day one against both the
+    // native engine and the reference model on identical streams.
+    let engine = numabw::runtime::Engine::from_env().unwrap();
+    engine.warmup().unwrap();
+    let hlo = PredictionService::hlo(engine);
+    let hlo_ctr_s = h
+        .bench("predict_counters_256_hlo", || {
+            black_box(hlo.predict_counters(&queries).unwrap())
+        })
+        .summary
+        .median;
+    println!(
+        "  -> {:.1}k predictions/s (hlo interpreter, incl. module \
+         dispatch of 4 batches)\n",
+        256.0 / hlo_ctr_s / 1e3
+    );
+    let hlo_perf_s = h
+        .bench("perf_1024_hlo_engine_uncached", || {
+            black_box(hlo.predict_performance(&perf_queries).unwrap())
+        })
+        .summary
+        .median;
+    let hlo_fit_s = h
+        .bench("fit_21_workloads_hlo", || {
+            black_box(hlo.fit(&fit_reqs).unwrap())
+        })
+        .summary
+        .median;
+    let ref_fit_s = h
+        .bench("fit_21_workloads_reference", || {
+            black_box(reference.fit(&fit_reqs).unwrap())
+        })
+        .summary
+        .median;
+    println!(
+        "  -> engine comparison on identical streams \
+         (reference / native / hlo):\n\
+         \x20    1024-query perf: {:.3} ms / {:.3} ms / {:.3} ms\n\
+         \x20    21-workload fit: {:.3} ms / {:.3} ms / {:.3} ms\n\
+         \x20    interpreter overhead vs native: {:.0}x perf, {:.0}x \
+         fit\n",
+        per_query_s * 1e3,
+        native_perf_s * 1e3,
+        hlo_perf_s * 1e3,
+        ref_fit_s * 1e3,
+        native_fit_s * 1e3,
+        hlo_fit_s * 1e3,
+        hlo_perf_s / native_perf_s,
+        hlo_fit_s / native_fit_s
+    );
 
     // ---- end-to-end: evaluation sweep throughput ---------------------------
     let ws: Vec<_> = suite::table1().into_iter().take(4).collect();

@@ -110,9 +110,10 @@ USAGE: numabw <subcommand> [flags]
 
 Flags: --machine xeon8|xeon18|quad4 (default xeon18; quad4 is the
 synthetic 4-socket machine — every subcommand is socket-count-generic);
---engine reference|native|pjrt (default reference: the per-row f64
-model; native: the batched f32 engine, any socket count; pjrt: the AOT
-HLO pipelines, falls back to reference when the xla crate is absent);
+--engine reference|native|hlo (default reference: the per-row f64
+model; native: the batched f32 engine, any socket count; hlo: the
+HLO-text pipelines through the in-repo interpreter — AOT artifacts when
+present, emitted per-S modules otherwise; `pjrt` is a legacy alias);
 --seed u64.";
 
 fn machine_flag(args: &Args) -> Result<MachineTopology> {
@@ -598,6 +599,24 @@ mod tests {
             "fit --workload cg --engine warp"
         ))
         .is_err());
+    }
+
+    #[test]
+    fn hlo_engine_serves_from_the_cli() {
+        // The restored `hlo` engine: fit + advise through the emitted
+        // modules and the interpreter (S=2 keeps this test cheap; the
+        // quad4 interpreter path runs release-mode in CI).
+        main_with(toks("fit --workload cg --machine xeon8 --engine hlo"))
+            .unwrap();
+        main_with(toks(
+            "advise --workload cg --machine xeon8 --top 3 --engine hlo"
+        ))
+        .unwrap();
+        // The legacy alias still resolves (to the same backend).
+        main_with(toks(
+            "fit --workload cg --machine xeon8 --engine pjrt"
+        ))
+        .unwrap();
     }
 
     #[test]

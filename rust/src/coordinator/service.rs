@@ -7,14 +7,15 @@
 //!   [`PredictionService::predict_counters`],
 //!   [`PredictionService::predict_performance`]) dispatch through an
 //!   [`ExecutionBackend`] — the native batched f32 engine
-//!   (`PredictionService::native()`), the PJRT handle for the AOT HLO
-//!   artifacts (`PredictionService::hlo`), or the f64 Rust reference
-//!   model (`PredictionService::reference()`) — so every caller works
-//!   against any backend and the engines can be compared to the
-//!   reference (see `tests/engine_parity.rs`).  Engine batches group
-//!   queries by socket count (shapes are per-S); a fixed-shape backend
-//!   (PJRT's compiled 2-socket artifacts) rejects other socket counts
-//!   per request, while the native engine executes any S.
+//!   (`PredictionService::native()`), the `hlo` interpreter engine over
+//!   AOT or emitted HLO-text modules (`PredictionService::hlo`), or the
+//!   f64 Rust reference model (`PredictionService::reference()`) — so
+//!   every caller works against any backend and the engines can be
+//!   compared to the reference (see `tests/engine_parity.rs`).  Engine
+//!   batches group queries by socket count (shapes are per-S); a
+//!   fixed-shape backend (an AOT-compiled 2-socket manifest) rejects
+//!   other socket counts per request, while the native and synthesized
+//!   hlo engines execute any S.
 //!
 //! * The **serving front-end** ([`PredictionService::serve_counters`],
 //!   [`PredictionService::serve_perf`], [`CounterBatcher`]) coalesces
@@ -421,7 +422,9 @@ impl PredictionService {
         Self::with_engine(Box::new(NativeEngine::new()))
     }
 
-    /// Serve through the compiled HLO artifacts (PJRT).
+    /// Serve through an `hlo` [`Engine`] (AOT artifacts when present,
+    /// the synthesized interpreter modules otherwise — see
+    /// [`Engine::from_env`]).
     pub fn hlo(engine: Engine) -> PredictionService {
         Self::with_engine(Box::new(engine))
     }
@@ -431,15 +434,17 @@ impl PredictionService {
         Self::with_backend(Backend::Reference)
     }
 
-    /// Try PJRT, fall back to reference with a warning (the historical
-    /// `--hlo` behavior; in the offline build this always falls back).
+    /// Prefer a *compiled* artifacts directory when one exists, fall
+    /// back to the reference model otherwise — the figure benches'
+    /// historical behavior.  (`--engine hlo` never falls back: the
+    /// synthesized interpreter engine always exists.)
     pub fn auto() -> PredictionService {
-        match Engine::from_env() {
+        match Engine::from_manifest() {
             Ok(engine) => PredictionService::hlo(engine),
             Err(e) => {
                 eprintln!(
-                    "numabw: PJRT engine unavailable ({e}); using the Rust \
-                     reference model"
+                    "numabw: compiled artifacts unavailable ({e:#}); \
+                     using the Rust reference model"
                 );
                 PredictionService::reference()
             }
@@ -451,9 +456,11 @@ impl PredictionService {
         match name {
             "reference" | "ref" => Ok(Self::reference()),
             "native" => Ok(Self::native()),
-            "pjrt" | "hlo" => Ok(Self::auto()),
+            // `pjrt` kept as a compatibility alias for the engine's old
+            // name; both resolve to the HLO interpreter backend.
+            "hlo" | "pjrt" => Ok(Self::hlo(Engine::from_env()?)),
             other => Err(anyhow!(
-                "unknown engine {other:?} (reference|native|pjrt)"
+                "unknown engine {other:?} (reference|native|hlo)"
             )),
         }
     }
@@ -502,9 +509,10 @@ impl PredictionService {
     ///
     /// Engine mode batches run pairs through the backend's
     /// `fit_signature` pipeline, grouped by socket count; run pairs the
-    /// backend's shapes cannot take (S ≠ 2 against the compiled PJRT
-    /// artifacts) are served by the reference fit instead, exactly as
-    /// before the backend trait existed.  The reference path dispatches
+    /// backend's shapes cannot take (S ≠ 2 against an AOT-compiled
+    /// 2-socket manifest) are served by the reference fit instead,
+    /// exactly as before the backend trait existed.  The reference path
+    /// dispatches
     /// 2-socket runs to the paper's exact fit ([`fit::fit_run_pair`]) and
     /// larger machines to the generalised §5.2 fit
     /// ([`crate::model::fit_multi::fit_run_pair_multi`]) — the native

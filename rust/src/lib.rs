@@ -4,9 +4,11 @@
 //! machines with performance counters"* (Goodman, Haecki, Harris; 2021) as
 //! a three-layer Rust + JAX + Pallas system:
 //!
-//! * **Layer 1/2 (build time)** — the paper's model (signature fitting,
-//!   application, contention) as Pallas kernels composed by JAX pipelines,
-//!   AOT-lowered to HLO text under `artifacts/`.
+//! * **Layer 1/2 (build time, optional)** — the paper's model (signature
+//!   fitting, application, contention) as Pallas kernels composed by JAX
+//!   pipelines, AOT-lowered to HLO text under `artifacts/`.  The offline
+//!   build needs neither: [`runtime::hlo::emit`] synthesizes equivalent
+//!   per-S HLO text in-process.
 //! * **Layer 3 (this crate)** — the coordinator: a NUMA machine simulator
 //!   substrate producing performance-counter readings, the 23-benchmark
 //!   workload suite, a pluggable execution runtime (native batched f32
@@ -39,11 +41,12 @@
 //!                                                        │
 //!                                       ExecutionBackend dispatch
 //!                            ┌──────────────────┼─────────────────────┐
-//!                      reference            native               hlo-pjrt
-//!                   (per-row f64,     (batched f32 tensors,   (AOT Pallas/HLO
-//!                    the oracle)       any S, in-process —     artifacts via
-//!                                      the default engine)     the `xla` crate;
-//!                                                              stub offline)
+//!                      reference            native                  hlo
+//!                   (per-row f64,     (batched f32 tensors,   (HLO-text modules
+//!                    the oracle)       any S, in-process)      through the in-repo
+//!                                                              parser + interpreter;
+//!                                                              emitted per-S offline,
+//!                                                              or AOT exports)
 //! ```
 //!
 //! * **Execution backends** ([`runtime`]): [`runtime::NativeEngine`]
@@ -51,14 +54,18 @@
 //!   `predict_counters`, `predict_performance` with max-min
 //!   water-filling) over full-batch f32 [`runtime::Tensor`]s for **any**
 //!   socket count, against a manifest synthesized in memory
-//!   ([`runtime::Artifacts::synthesize`]).  The PJRT [`runtime::Engine`]
-//!   is a second impl of the same trait (a stub until `xla` is
-//!   vendored), and the f64 reference model is the oracle both are
-//!   pinned against: `tests/engine_parity.rs` runs in every build (no
-//!   self-skip) and holds native-vs-reference agreement within a
-//!   documented f32 tolerance on both paper machines and `quad4`,
-//!   including advisor-ranking equality.  Select with
-//!   `--engine reference|native|pjrt`.
+//!   ([`runtime::Artifacts::synthesize`]).  The `hlo` [`runtime::Engine`]
+//!   is a second impl of the same trait: an in-repo HLO-text **parser +
+//!   graph interpreter** ([`runtime::hlo`]) running per-S modules the
+//!   emitter synthesizes offline ([`runtime::hlo::emit`]; pinned
+//!   byte-for-byte by golden fixtures) — or, when an artifacts directory
+//!   exists, the `python/compile/aot.py` exports.  The f64 reference
+//!   model is the oracle both engines are pinned against:
+//!   `tests/engine_parity.rs` runs in every build (no self-skip) and
+//!   holds engine-vs-reference agreement within a documented f32
+//!   tolerance on both paper machines and `quad4`, including
+//!   advisor-ranking equality, for native AND hlo.  Select with
+//!   `--engine reference|native|hlo` (`pjrt` is a legacy alias).
 //! * [`coordinator::service::PredictionService`] is `Send + Sync` (all
 //!   caches use interior mutability) so a single instance serves many
 //!   threads.  Its front-end (`serve_counters` / `serve_perf` /

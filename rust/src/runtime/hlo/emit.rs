@@ -1,0 +1,1111 @@
+//! Offline HLO-text emitter: synthesizes per-S `.hlo.txt` modules for
+//! the four model pipelines, so the `hlo` engine is self-contained — no
+//! JAX lowering or `make artifacts` step.
+//!
+//! Each emitted module is the instruction-level port of the native
+//! engine's f32 math ([`crate::runtime::native`]) with compile-time
+//! socket loops unrolled and data-dependent branches turned into
+//! `select`s:
+//!
+//! * `signature_apply` / `predict_counters` — §4 matrix + bank
+//!   projection as `[B]`-vector arithmetic over sliced columns;
+//! * `predict_performance` — flow demands plus the max-min water-filling
+//!   as a `while` loop over `(round, alloc, frozen, residual)` state,
+//!   one masked uniform-level round per trip (`SAT_TOL` = 1e-6, the
+//!   Pallas kernel's f32 saturation tolerance);
+//! * `fit_signature` — the §5 fit; S = 2 ports the paper-exact 2-socket
+//!   algorithm, S > 2 the generalised §5.2 fit (same dispatch the native
+//!   engine and the reference perform).  Takes the 6-argument S-generic
+//!   layout of [`crate::runtime::Artifacts::synthesize_for_sockets`].
+//!
+//! Constants are restricted to small integers and `inf`; fractional
+//! values (0.5, the 1e-9/1e-6 tolerances) are *computed* as quotients of
+//! exactly-representable integers, so the text needs no float
+//! formatting and the checked-in golden fixtures
+//! (`rust/tests/data/hlo/*.s2.hlo.txt`) pin it byte-for-byte.
+
+use crate::topology::flow_resources;
+
+use super::super::ENGINE_BATCH;
+
+/// An emitted SSA value: instruction name + shape text.
+#[derive(Clone)]
+struct V {
+    name: String,
+    shape: String,
+}
+
+/// Operand spelling: `shape %name`.
+fn o(v: &V) -> String {
+    format!("{} %{}", v.shape, v.name)
+}
+
+fn f1(b: usize) -> String {
+    format!("f32[{b}]")
+}
+
+fn f2(b: usize, n: usize) -> String {
+    format!("f32[{b},{n}]")
+}
+
+fn f3(b: usize, n: usize, m: usize) -> String {
+    format!("f32[{b},{n},{m}]")
+}
+
+/// `f32[...]` → `pred[...]`.
+fn pred_of(shape: &str) -> String {
+    let bracket = shape.find('[').expect("array shape");
+    format!("pred{}", &shape[bracket..])
+}
+
+fn fmt_dims(dims: &[usize]) -> String {
+    dims.iter()
+        .map(|d| d.to_string())
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// One computation under construction.
+struct Comp {
+    params: Vec<(String, String)>,
+    lines: Vec<String>,
+    next: usize,
+}
+
+impl Comp {
+    fn new() -> Comp {
+        Comp {
+            params: Vec::new(),
+            lines: Vec::new(),
+            next: 0,
+        }
+    }
+
+    fn param(&mut self, name: &str, shape: &str) -> V {
+        let i = self.params.len();
+        self.params.push((name.to_string(), shape.to_string()));
+        self.lines
+            .push(format!("  %{name} = {shape} parameter({i})"));
+        V {
+            name: name.to_string(),
+            shape: shape.to_string(),
+        }
+    }
+
+    fn push(&mut self, shape: &str, rhs: String) -> V {
+        let name = format!("v{}", self.next);
+        self.next += 1;
+        self.lines.push(format!("  %{name} = {shape} {rhs}"));
+        V {
+            name,
+            shape: shape.to_string(),
+        }
+    }
+
+    // ---- constants ---------------------------------------------------------
+
+    fn cst(&mut self, dtype: &str, v: i64) -> V {
+        self.push(&format!("{dtype}[]"), format!("constant({v})"))
+    }
+
+    fn cst_inf(&mut self) -> V {
+        self.push("f32[]", "constant(inf)".to_string())
+    }
+
+    /// 1-D f32 constant of integer-valued entries.
+    fn cvec(&mut self, vals: &[i64]) -> V {
+        let items = vals
+            .iter()
+            .map(|v| v.to_string())
+            .collect::<Vec<_>>()
+            .join(",");
+        self.push(&format!("f32[{}]", vals.len()),
+                  format!("constant({{{items}}})"))
+    }
+
+    /// 2-D f32 constant of integer-valued entries.
+    fn cmat(&mut self, rows: &[Vec<i64>]) -> V {
+        let body = rows
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{{}}}",
+                    r.iter()
+                        .map(|v| v.to_string())
+                        .collect::<Vec<_>>()
+                        .join(",")
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(",");
+        self.push(&format!("f32[{},{}]", rows.len(), rows[0].len()),
+                  format!("constant({{{body}}})"))
+    }
+
+    // ---- structural ops ----------------------------------------------------
+
+    fn bcast(&mut self, a: &V, out_shape: &str, dims: &[usize]) -> V {
+        self.push(out_shape, format!("broadcast({}), dimensions={{{}}}",
+                                     o(a), fmt_dims(dims)))
+    }
+
+    /// Scalar integer constant broadcast to `[B]`.
+    fn full1(&mut self, b: usize, v: i64) -> V {
+        let s = self.cst("f32", v);
+        self.bcast(&s, &f1(b), &[])
+    }
+
+    /// Scalar integer constant broadcast to `[B, N]`.
+    fn full2(&mut self, b: usize, n: usize, v: i64) -> V {
+        let s = self.cst("f32", v);
+        self.bcast(&s, &f2(b, n), &[])
+    }
+
+    /// Column `j` of a rank-2 `[rows, cols]` value, as `[rows]`.
+    fn col2(&mut self, a: &V, rows: usize, j: usize) -> V {
+        let t = self.push(
+            &format!("f32[{rows},1]"),
+            format!("slice({}), slice={{[0:{rows}], [{j}:{}]}}", o(a),
+                    j + 1),
+        );
+        self.push(&f1(rows), format!("reshape({})", o(&t)))
+    }
+
+    /// Element `[., i, j]` of a rank-3 `[rows, _, _]` value, as `[rows]`.
+    fn col3(&mut self, a: &V, rows: usize, i: usize, j: usize) -> V {
+        let t = self.push(
+            &format!("f32[{rows},1,1]"),
+            format!(
+                "slice({}), slice={{[0:{rows}], [{i}:{}], [{j}:{}]}}",
+                o(a),
+                i + 1,
+                j + 1
+            ),
+        );
+        self.push(&f1(rows), format!("reshape({})", o(&t)))
+    }
+
+    /// Stack `[B]` columns into `[B, n]` (reshape + concatenate).
+    fn concat_cols(&mut self, b: usize, cols: &[V]) -> V {
+        let mut parts = Vec::with_capacity(cols.len());
+        for v in cols {
+            parts.push(
+                self.push(&format!("f32[{b},1]"),
+                          format!("reshape({})", o(v))),
+            );
+        }
+        let ops = parts.iter().map(o).collect::<Vec<_>>().join(", ");
+        self.push(&f2(b, cols.len()),
+                  format!("concatenate({ops}), dimensions={{1}}"))
+    }
+
+    fn reshape(&mut self, a: &V, out_shape: &str) -> V {
+        self.push(out_shape, format!("reshape({})", o(a)))
+    }
+
+    fn tuple(&mut self, parts: &[V]) -> V {
+        let shape = format!(
+            "({})",
+            parts
+                .iter()
+                .map(|p| p.shape.clone())
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+        let ops = parts.iter().map(o).collect::<Vec<_>>().join(", ");
+        self.push(&shape, format!("tuple({ops})"))
+    }
+
+    fn gte(&mut self, t: &V, i: usize, part_shape: &str) -> V {
+        self.push(part_shape,
+                  format!("get-tuple-element({}), index={i}", o(t)))
+    }
+
+    // ---- arithmetic --------------------------------------------------------
+
+    fn bin(&mut self, opcode: &str, a: &V, b: &V) -> V {
+        assert_eq!(a.shape, b.shape, "{opcode} operand shapes");
+        let shape = a.shape.clone();
+        self.push(&shape, format!("{opcode}({}, {})", o(a), o(b)))
+    }
+
+    fn add(&mut self, a: &V, b: &V) -> V {
+        self.bin("add", a, b)
+    }
+
+    fn sub(&mut self, a: &V, b: &V) -> V {
+        self.bin("subtract", a, b)
+    }
+
+    fn mul(&mut self, a: &V, b: &V) -> V {
+        self.bin("multiply", a, b)
+    }
+
+    fn div(&mut self, a: &V, b: &V) -> V {
+        self.bin("divide", a, b)
+    }
+
+    fn max(&mut self, a: &V, b: &V) -> V {
+        self.bin("maximum", a, b)
+    }
+
+    fn min(&mut self, a: &V, b: &V) -> V {
+        self.bin("minimum", a, b)
+    }
+
+    fn abs(&mut self, a: &V) -> V {
+        let shape = a.shape.clone();
+        self.push(&shape, format!("abs({})", o(a)))
+    }
+
+    fn cmp(&mut self, dir: &str, a: &V, b: &V) -> V {
+        assert_eq!(a.shape, b.shape, "compare operand shapes");
+        let shape = pred_of(&a.shape);
+        self.push(&shape, format!("compare({}, {}), direction={dir}",
+                                  o(a), o(b)))
+    }
+
+    fn sel(&mut self, p: &V, a: &V, b: &V) -> V {
+        let shape = a.shape.clone();
+        self.push(&shape,
+                  format!("select({}, {}, {})", o(p), o(a), o(b)))
+    }
+
+    fn and(&mut self, a: &V, b: &V) -> V {
+        self.bin("and", a, b)
+    }
+
+    fn or(&mut self, a: &V, b: &V) -> V {
+        self.bin("or", a, b)
+    }
+
+    fn not(&mut self, a: &V) -> V {
+        let shape = a.shape.clone();
+        self.push(&shape, format!("not({})", o(a)))
+    }
+
+    fn reduce(&mut self, a: &V, init: &V, dims: &[usize], reducer: &str,
+              out_shape: &str) -> V {
+        self.push(
+            out_shape,
+            format!(
+                "reduce({}, {}), dimensions={{{}}}, to_apply=%{reducer}",
+                o(a),
+                o(init),
+                fmt_dims(dims)
+            ),
+        )
+    }
+
+    fn dot(&mut self, a: &V, b: &V, out_shape: &str) -> V {
+        self.push(
+            out_shape,
+            format!(
+                "dot({}, {}), lhs_contracting_dims={{1}}, \
+                 rhs_contracting_dims={{0}}",
+                o(a),
+                o(b)
+            ),
+        )
+    }
+
+    /// `x.clamp(0, 1)` — `max(min(x, 1), 0)`.
+    fn clamp01(&mut self, x: &V, cm: &Common) -> V {
+        let t = self.min(x, &cm.one);
+        self.max(&t, &cm.zero)
+    }
+
+    /// Assemble the computation block, marking `root` ROOT.
+    fn finish(mut self, name: &str, entry: bool, root: &V) -> String {
+        let needle = format!("  %{} = ", root.name);
+        for line in self.lines.iter_mut() {
+            if line.starts_with(&needle) {
+                *line = format!("  ROOT {}", &line[2..]);
+                break;
+            }
+        }
+        let params: Vec<String> = self
+            .params
+            .iter()
+            .map(|(n, s)| format!("{n}: {s}"))
+            .collect();
+        let head = format!(
+            "{}%{name} ({}) -> {} {{",
+            if entry { "ENTRY " } else { "" },
+            params.join(", "),
+            root.shape
+        );
+        let mut out = String::new();
+        out.push_str(&head);
+        out.push('\n');
+        for l in &self.lines {
+            out.push_str(l);
+            out.push('\n');
+        }
+        out.push_str("}\n");
+        out
+    }
+}
+
+/// Shared `[B]` constants every pipeline starts from (`eps` = 1e-9 and
+/// `half` are exact quotients, never float literals).
+struct Common {
+    zero: V,
+    one: V,
+    two: V,
+    half: V,
+    eps: V,
+}
+
+fn common(c: &mut Comp, b: usize) -> Common {
+    let zero = c.full1(b, 0);
+    let one = c.full1(b, 1);
+    let two = c.full1(b, 2);
+    let half = c.div(&one, &two);
+    let e9 = c.full1(b, 1_000_000_000);
+    let eps = c.div(&one, &e9);
+    Common {
+        zero,
+        one,
+        two,
+        half,
+        eps,
+    }
+}
+
+/// The scalar reducer computations shared by every module.
+const REDUCERS: &str = "\
+%add_f32 (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %r = f32[] add(f32[] %x, f32[] %y)
+}
+
+%min_f32 (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %r = f32[] minimum(f32[] %x, f32[] %y)
+}
+
+%max_f32 (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %r = f32[] maximum(f32[] %x, f32[] %y)
+}
+
+%or_pred (x: pred[], y: pred[]) -> pred[] {
+  %x = pred[] parameter(0)
+  %y = pred[] parameter(1)
+  ROOT %r = pred[] or(pred[] %x, pred[] %y)
+}
+";
+
+fn module(name: &str, extra: &[String], entry: String) -> String {
+    let mut out = format!("HloModule {name}\n\n");
+    out.push_str(REDUCERS);
+    for comp in extra {
+        out.push('\n');
+        out.push_str(comp);
+    }
+    out.push('\n');
+    out.push_str(&entry);
+    out
+}
+
+/// Emit the HLO text of `pipeline` for an S-socket machine.  Panics on an
+/// unknown pipeline name (callers iterate [`crate::runtime::PIPELINES`]).
+pub fn pipeline_text(pipeline: &str, sockets: usize) -> String {
+    assert!(sockets >= 2, "a NUMA pipeline needs >= 2 sockets");
+    let b = ENGINE_BATCH;
+    match pipeline {
+        "signature_apply" => emit_signature_apply(b, sockets),
+        "predict_counters" => emit_predict_counters(b, sockets),
+        "predict_performance" => emit_predict_performance(b, sockets),
+        "fit_signature" => {
+            if sockets == 2 {
+                emit_fit2(b)
+            } else {
+                emit_fitn(b, sockets)
+            }
+        }
+        other => panic!("unknown pipeline {other:?}"),
+    }
+}
+
+// ---- §4 apply + counters ---------------------------------------------------
+
+/// Emitted §4 state shared by the prediction pipelines.
+struct Apply {
+    /// Traffic-fraction matrix entries, row-major `[S*S]` of `[B]`.
+    m: Vec<V>,
+    /// Thread-count columns, `[S]` of `[B]`.
+    th: Vec<V>,
+}
+
+/// Port of `native::apply_matrix` (compile-time `r == c` folded,
+/// runtime `used` / `n_total > 0` guards as selects).
+fn apply_matrix(c: &mut Comp, cm: &Common, b: usize, s: usize, fracs: &V,
+                onehot: &V, threads: &V) -> Apply {
+    let a = c.col2(fracs, b, 0);
+    let l = c.col2(fracs, b, 1);
+    let p = c.col2(fracs, b, 2);
+    let al = c.add(&a, &l);
+    let alp = c.add(&al, &p);
+    let raw_il = c.sub(&cm.one, &alp);
+    let il = c.clamp01(&raw_il, cm);
+    let oh: Vec<V> = (0..s).map(|j| c.col2(onehot, b, j)).collect();
+    let th: Vec<V> = (0..s).map(|j| c.col2(threads, b, j)).collect();
+    let used: Vec<V> =
+        th.iter().map(|t| c.cmp("GT", t, &cm.zero)).collect();
+    let mut n_used = cm.zero.clone();
+    for u in &used {
+        let uf = c.sel(u, &cm.one, &cm.zero);
+        n_used = c.add(&n_used, &uf);
+    }
+    let n_used = c.max(&n_used, &cm.one);
+    let mut n_total = cm.zero.clone();
+    for t in &th {
+        n_total = c.add(&n_total, t);
+    }
+    let il_share = c.div(&il, &n_used);
+    let has_total = c.cmp("GT", &n_total, &cm.zero);
+    let mut m = Vec::with_capacity(s * s);
+    for r in 0..s {
+        for col in 0..s {
+            let mut v = c.mul(&a, &oh[col]);
+            if r == col {
+                v = c.add(&v, &l);
+            }
+            let pt_num = c.mul(&p, &th[col]);
+            let pt_div = c.div(&pt_num, &n_total);
+            let pt = c.sel(&has_total, &pt_div, &cm.zero);
+            v = c.add(&v, &pt);
+            let both = c.and(&used[r], &used[col]);
+            let ilt = c.sel(&both, &il_share, &cm.zero);
+            v = c.add(&v, &ilt);
+            m.push(v);
+        }
+    }
+    Apply { m, th }
+}
+
+fn emit_signature_apply(b: usize, s: usize) -> String {
+    let mut c = Comp::new();
+    let fracs = c.param("fracs", &f2(b, 3));
+    let onehot = c.param("static_onehot", &f2(b, s));
+    let threads = c.param("threads", &f2(b, s));
+    let cm = common(&mut c, b);
+    let ap = apply_matrix(&mut c, &cm, b, s, &fracs, &onehot, &threads);
+    let flat = c.concat_cols(b, &ap.m);
+    let out = c.reshape(&flat, &f3(b, s, s));
+    let root = c.tuple(&[out]);
+    module(
+        &format!("signature_apply_s{s}"),
+        &[],
+        c.finish("main", true, &root),
+    )
+}
+
+fn emit_predict_counters(b: usize, s: usize) -> String {
+    let mut c = Comp::new();
+    let fracs = c.param("fracs", &f2(b, 3));
+    let onehot = c.param("static_onehot", &f2(b, s));
+    let threads = c.param("threads", &f2(b, s));
+    let totals = c.param("cpu_totals", &f2(b, s));
+    let cm = common(&mut c, b);
+    let ap = apply_matrix(&mut c, &cm, b, s, &fracs, &onehot, &threads);
+    let tot: Vec<V> = (0..s).map(|j| c.col2(&totals, b, j)).collect();
+    // Port of `native::counters_row`: per bank, local is the src == bank
+    // flow, remote folds the others in src order (from 0.0, like the
+    // reference accumulator).
+    let mut cols = Vec::with_capacity(2 * s);
+    for bank in 0..s {
+        let mut local = cm.zero.clone();
+        let mut remote = cm.zero.clone();
+        for src in 0..s {
+            let flow = c.mul(&ap.m[src * s + bank], &tot[src]);
+            if src == bank {
+                local = c.add(&local, &flow);
+            } else {
+                remote = c.add(&remote, &flow);
+            }
+        }
+        cols.push(local);
+        cols.push(remote);
+    }
+    let flat = c.concat_cols(b, &cols);
+    let out = c.reshape(&flat, &f3(b, s, 2));
+    let root = c.tuple(&[out]);
+    module(
+        &format!("predict_counters_s{s}"),
+        &[],
+        c.finish("main", true, &root),
+    )
+}
+
+// ---- predict_performance (while-loop water-filling) ------------------------
+
+fn emit_predict_performance(b: usize, s: usize) -> String {
+    let nf = 2 * s * s;
+    let nr = 2 * s * s;
+    // Flow → resource incidence rows (and the transpose, for the
+    // saturated-resource hit count).
+    let mut inc_rows: Vec<Vec<i64>> = vec![vec![0; nr]; nf];
+    for src in 0..s {
+        for dst in 0..s {
+            for rw in 0..2 {
+                let f = (src * s + dst) * 2 + rw;
+                let (chan, link) = flow_resources(s, src, dst, rw);
+                inc_rows[f][chan] = 1;
+                if let Some(l) = link {
+                    inc_rows[f][l] = 1;
+                }
+            }
+        }
+    }
+    let inc_cols: Vec<Vec<i64>> = (0..nr)
+        .map(|r| (0..nf).map(|f| inc_rows[f][r]).collect())
+        .collect();
+
+    let mut c = Comp::new();
+    let fracs = c.param("fracs", &f2(b, 3));
+    let onehot = c.param("static_onehot", &f2(b, s));
+    let threads = c.param("threads", &f2(b, s));
+    let demand_pt = c.param("demand_pt", &f2(b, 2));
+    let caps = c.param("caps", &f2(b, nr));
+    let cm = common(&mut c, b);
+    let ap = apply_matrix(&mut c, &cm, b, s, &fracs, &onehot, &threads);
+    let dr = c.col2(&demand_pt, b, 0);
+    let dw = c.col2(&demand_pt, b, 1);
+    let mut dcols = Vec::with_capacity(nf);
+    for src in 0..s {
+        for dst in 0..s {
+            for rw in 0..2 {
+                let tm = c.mul(&ap.th[src], &ap.m[src * s + dst]);
+                let d = c.mul(&tm, if rw == 0 { &dr } else { &dw });
+                dcols.push(d);
+            }
+        }
+    }
+    let demands = c.concat_cols(b, &dcols);
+    let zero_bf = c.full2(b, nf, 0);
+    let frozen0 = c.cmp("LE", &demands, &zero_bf);
+    let round0 = c.cst("s32", 0);
+    let init = c.tuple(&[
+        round0,
+        zero_bf.clone(),
+        frozen0,
+        caps.clone(),
+        demands.clone(),
+        caps.clone(),
+    ]);
+    let state_shape = init.shape.clone();
+    let part_shapes = [
+        "s32[]".to_string(),
+        f2(b, nf),
+        pred_of(&f2(b, nf)),
+        f2(b, nr),
+        f2(b, nf),
+        f2(b, nr),
+    ];
+
+    // Condition: round < F + R + 2 and any flow still active.
+    let mut cc = Comp::new();
+    let st = cc.param("state", &state_shape);
+    let round = cc.gte(&st, 0, &part_shapes[0]);
+    let frozen = cc.gte(&st, 2, &part_shapes[2]);
+    let limit = cc.cst("s32", (nf + nr + 2) as i64);
+    let lt = cc.cmp("LT", &round, &limit);
+    let notf = cc.not(&frozen);
+    let fls = cc.push("pred[]", "constant(false)".to_string());
+    let any = cc.reduce(&notf, &fls, &[0, 1], "or_pred", "pred[]");
+    let go = cc.and(&lt, &any);
+    let cond_text = cc.finish("maxmin_cond", false, &go);
+
+    // Body: one water-filling round (the exact op sequence of
+    // `native::maxmin_f32`, with per-flow residual subtraction unrolled
+    // in flow order so the f32 rounding matches the sequential solver).
+    let mut bc = Comp::new();
+    let st = bc.param("state", &state_shape);
+    let round = bc.gte(&st, 0, &part_shapes[0]);
+    let alloc = bc.gte(&st, 1, &part_shapes[1]);
+    let frozen = bc.gte(&st, 2, &part_shapes[2]);
+    let residual = bc.gte(&st, 3, &part_shapes[3]);
+    let demands_b = bc.gte(&st, 4, &part_shapes[4]);
+    let caps_b = bc.gte(&st, 5, &part_shapes[5]);
+    let zero_bf = bc.full2(b, nf, 0);
+    let one_bf = bc.full2(b, nf, 1);
+    let zero_br = bc.full2(b, nr, 0);
+    let one_br = bc.full2(b, nr, 1);
+    let zero_b = bc.full1(b, 0);
+    let active = bc.sel(&frozen, &zero_bf, &one_bf);
+    let inc = bc.cmat(&inc_rows);
+    let counts = bc.dot(&active, &inc, &f2(b, nr));
+    let ratio = bc.div(&residual, &counts);
+    let cpos = bc.cmp("GT", &counts, &zero_br);
+    let inf = bc.cst_inf();
+    let inf_br = bc.bcast(&inf, &f2(b, nr), &[]);
+    let level_r = bc.sel(&cpos, &ratio, &inf_br);
+    let level = bc.reduce(&level_r, &inf, &[1], "min_f32", &f1(b));
+    let level = bc.max(&level, &zero_b);
+    let level_bf = bc.bcast(&level, &f2(b, nf), &[0]);
+    let room = bc.sub(&demands_b, &alloc);
+    let grow_raw = bc.min(&level_bf, &room);
+    let grow = bc.sel(&frozen, &zero_bf, &grow_raw);
+    let alloc2 = bc.add(&alloc, &grow);
+    let mut res = residual.clone();
+    for f in 0..nf {
+        let g = bc.col2(&grow, b, f);
+        let gb = bc.bcast(&g, &f2(b, nr), &[0]);
+        let mask = bc.cvec(&inc_rows[f]);
+        let maskb = bc.bcast(&mask, &f2(b, nr), &[1]);
+        let t = bc.mul(&gb, &maskb);
+        res = bc.sub(&res, &t);
+    }
+    // sat[r] = residual <= SAT_TOL * max(caps, 1); SAT_TOL = 1 / 1e6.
+    let e6 = bc.cst("f32", 1_000_000);
+    let e6_br = bc.bcast(&e6, &f2(b, nr), &[]);
+    let tol_br = bc.div(&one_br, &e6_br);
+    let capm = bc.max(&caps_b, &one_br);
+    let bound = bc.mul(&tol_br, &capm);
+    let sat = bc.cmp("LE", &res, &bound);
+    let satf = bc.sel(&sat, &one_br, &zero_br);
+    let inct = bc.cmat(&inc_cols);
+    let hits = bc.dot(&satf, &inct, &f2(b, nf));
+    let hpos = bc.cmp("GT", &hits, &zero_bf);
+    let rem = bc.sub(&demands_b, &alloc2);
+    let e6_bf = bc.bcast(&e6, &f2(b, nf), &[]);
+    let tol_bf = bc.div(&one_bf, &e6_bf);
+    let dm = bc.max(&demands_b, &one_bf);
+    let dbound = bc.mul(&tol_bf, &dm);
+    let done = bc.cmp("LE", &rem, &dbound);
+    let newly = bc.or(&done, &hpos);
+    let frozen2 = bc.or(&frozen, &newly);
+    let one_i = bc.cst("s32", 1);
+    let round2 = bc.add(&round, &one_i);
+    let next = bc.tuple(&[round2, alloc2, frozen2, res, demands_b,
+                          caps_b]);
+    let body_text = bc.finish("maxmin_body", false, &next);
+
+    let w = c.push(
+        &state_shape,
+        format!("while({}), condition=%maxmin_cond, body=%maxmin_body",
+                o(&init)),
+    );
+    let alloc = c.gte(&w, 1, &f2(b, nf));
+    let root = c.tuple(&[alloc]);
+    module(
+        &format!("predict_performance_s{s}"),
+        &[cond_text, body_text],
+        c.finish("main", true, &root),
+    )
+}
+
+// ---- fit (S = 2: the paper-exact algorithm) --------------------------------
+
+/// §5.2 normalization for S = 2 (port of the closure in
+/// `native::fit2_row`): returns `[[n00, n01], [n10, n11]]`.
+fn norm2(c: &mut Comp, cm: &Common, b: usize, counts: &V, rates: &V)
+    -> [[V; 2]; 2] {
+    let r0 = c.col2(rates, b, 0);
+    let r1 = c.col2(rates, b, 1);
+    let rsum = c.add(&r0, &r1);
+    let mean = c.div(&rsum, &cm.two);
+    let m0 = c.max(&r0, &cm.eps);
+    let f0 = c.div(&mean, &m0);
+    let m1 = c.max(&r1, &cm.eps);
+    let f1v = c.div(&mean, &m1);
+    let c00 = c.col3(counts, b, 0, 0);
+    let c01 = c.col3(counts, b, 0, 1);
+    let c10 = c.col3(counts, b, 1, 0);
+    let c11 = c.col3(counts, b, 1, 1);
+    let n00 = c.mul(&c00, &f0);
+    let n01 = c.mul(&c01, &f1v);
+    let n10 = c.mul(&c10, &f1v);
+    let n11 = c.mul(&c11, &f0);
+    [[n00, n01], [n10, n11]]
+}
+
+fn emit_fit2(b: usize) -> String {
+    let mut c = Comp::new();
+    let sym_c = c.param("sym_counts", &f3(b, 2, 2));
+    let sym_r = c.param("sym_rates", &f2(b, 2));
+    let _sym_t = c.param("sym_threads", &f2(b, 2));
+    let asym_c = c.param("asym_counts", &f3(b, 2, 2));
+    let asym_r = c.param("asym_rates", &f2(b, 2));
+    let asym_t = c.param("asym_threads", &f2(b, 2));
+    let cm = common(&mut c, b);
+    let sn = norm2(&mut c, &cm, b, &sym_c, &sym_r);
+    let an = norm2(&mut c, &cm, b, &asym_c, &asym_r);
+
+    // §5.3 static socket (ties toward socket 0) + fraction.
+    let t0 = c.add(&sn[0][0], &sn[0][1]);
+    let t1 = c.add(&sn[1][0], &sn[1][1]);
+    let tsum = c.add(&t0, &t1);
+    let grand = c.max(&tsum, &cm.eps);
+    let is0 = c.cmp("GE", &t0, &t1);
+    let tk = c.sel(&is0, &t0, &t1);
+    let to = c.sel(&is0, &t1, &t0);
+    let tdiff = c.sub(&tk, &to);
+    let sraw = c.div(&tdiff, &grand);
+    let stat = c.clamp01(&sraw, &cm);
+    let static_bytes = c.mul(&stat, &grand);
+
+    // §5.4 local fraction from the remote ratio after static removal.
+    let hsb = c.mul(&cm.half, &static_bytes);
+    let sub0 = c.sel(&is0, &hsb, &cm.zero);
+    let raw0 = c.sub(&sn[0][1], &sub0);
+    let sr0 = c.max(&raw0, &cm.zero);
+    let sub1 = c.sel(&is0, &cm.zero, &hsb);
+    let raw1 = c.sub(&sn[1][1], &sub1);
+    let sr1 = c.max(&raw1, &cm.zero);
+    let tod = c.max(&to, &cm.eps);
+    let q0 = c.div(&sr0, &tod);
+    let r0 = c.clamp01(&q0, &cm);
+    let q1 = c.div(&sr1, &tod);
+    let r1 = c.clamp01(&q1, &cm);
+    let rsum = c.add(&r0, &r1);
+    let r = c.mul(&cm.half, &rsum);
+    let oms_raw = c.sub(&cm.one, &stat);
+    let oms = c.max(&oms_raw, &cm.eps);
+    let two_r = c.mul(&cm.two, &r);
+    let lin = c.sub(&cm.one, &two_r);
+    let lprod = c.mul(&lin, &oms);
+    let lcl = c.clamp01(&lprod, &cm);
+    let lf = c.min(&lcl, &oms);
+    let rdiff = c.sub(&r0, &r1);
+    let misfit = c.abs(&rdiff);
+
+    // §5.5 per-thread fraction.
+    let ct0 = c.add(&an[0][0], &an[1][1]);
+    let ct1 = c.add(&an[1][0], &an[0][1]);
+    let s_ct0 = c.mul(&stat, &ct0);
+    let s_ct1 = c.mul(&stat, &ct1);
+    let d0 = c.sel(&is0, &s_ct0, &cm.zero);
+    let al0 = c.sub(&an[0][0], &d0);
+    let d1 = c.sel(&is0, &cm.zero, &s_ct1);
+    let al1 = c.sub(&an[1][0], &d1);
+    let e0 = c.sel(&is0, &s_ct1, &cm.zero);
+    let ar0 = c.sub(&an[0][1], &e0);
+    let e1 = c.sel(&is0, &cm.zero, &s_ct0);
+    let ar1 = c.sub(&an[1][1], &e1);
+    let l_ct0 = c.mul(&lf, &ct0);
+    let al0s = c.sub(&al0, &l_ct0);
+    let al0 = c.max(&al0s, &cm.zero);
+    let l_ct1 = c.mul(&lf, &ct1);
+    let al1s = c.sub(&al1, &l_ct1);
+    let al1 = c.max(&al1s, &cm.zero);
+    let ar0 = c.max(&ar0, &cm.zero);
+    let ar1 = c.max(&ar1, &cm.zero);
+    let thr0 = c.col2(&asym_t, b, 0);
+    let thr1 = c.col2(&asym_t, b, 1);
+    let ntot = c.add(&thr0, &thr1);
+    let den0 = c.add(&al0, &ar1);
+    let den0 = c.max(&den0, &cm.eps);
+    let l0 = c.div(&al0, &den0);
+    let den1 = c.add(&al1, &ar0);
+    let den1 = c.max(&den1, &cm.eps);
+    let l1 = c.div(&al1, &den1);
+    let ntm = c.max(&ntot, &cm.eps);
+    let pt0 = c.div(&thr0, &ntm);
+    let pt1 = c.div(&thr1, &ntm);
+    let mut num = cm.zero.clone();
+    let mut den = cm.zero.clone();
+    for (li, pti) in [(&l0, &pt0), (&l1, &pt1)] {
+        let ld = c.sub(li, &cm.half);
+        let pd = c.sub(pti, &cm.half);
+        let nterm = c.mul(&ld, &pd);
+        num = c.add(&num, &nterm);
+        let dterm = c.mul(&pd, &pd);
+        den = c.add(&den, &dterm);
+    }
+    let denm = c.max(&den, &cm.eps);
+    let praw = c.div(&num, &denm);
+    let p = c.clamp01(&praw, &cm);
+    let avail0 = c.sub(&cm.one, &lf);
+    let avail = c.sub(&avail0, &stat);
+    let ptraw = c.mul(&p, &avail);
+    let ptf = c.clamp01(&ptraw, &cm);
+
+    let fracs = c.concat_cols(b, &[stat, lf, ptf]);
+    let oh0 = c.sel(&is0, &cm.one, &cm.zero);
+    let oh1 = c.sel(&is0, &cm.zero, &cm.one);
+    let onehot = c.concat_cols(b, &[oh0, oh1]);
+    let root = c.tuple(&[fracs, onehot, misfit]);
+    module("fit_signature_s2", &[], c.finish("main", true, &root))
+}
+
+// ---- fit (S > 2: the generalised §5.2 algorithm) ---------------------------
+
+/// S-socket normalization (port of the closure in `native::fitn_row`):
+/// returns per-bank `(local, remote)` columns.
+#[allow(clippy::too_many_arguments)]
+fn normn(c: &mut Comp, cm: &Common, b: usize, s: usize, sconst: &V,
+         counts: &V, rates: &V, threads: &V) -> Vec<(V, V)> {
+    let rcols: Vec<V> = (0..s).map(|j| c.col2(rates, b, j)).collect();
+    let tcols: Vec<V> = (0..s).map(|j| c.col2(threads, b, j)).collect();
+    let mut rsum = cm.zero.clone();
+    for rj in &rcols {
+        rsum = c.add(&rsum, rj);
+    }
+    let mean = c.div(&rsum, sconst);
+    let factor: Vec<V> = rcols
+        .iter()
+        .map(|rj| {
+            let m = c.max(rj, &cm.eps);
+            c.div(&mean, &m)
+        })
+        .collect();
+    let mut out = Vec::with_capacity(s);
+    for bank in 0..s {
+        let mut wsum = cm.zero.clone();
+        let mut fsum = cm.zero.clone();
+        for other in 0..s {
+            if other != bank {
+                wsum = c.add(&wsum, &tcols[other]);
+                let tf = c.mul(&tcols[other], &factor[other]);
+                fsum = c.add(&fsum, &tf);
+            }
+        }
+        let haves = c.cmp("GT", &wsum, &cm.zero);
+        let quot = c.div(&fsum, &wsum);
+        let rf = c.sel(&haves, &quot, &cm.one);
+        let c0 = c.col3(counts, b, bank, 0);
+        let c1 = c.col3(counts, b, bank, 1);
+        let n0 = c.mul(&c0, &factor[bank]);
+        let n1 = c.mul(&c1, &rf);
+        out.push((n0, n1));
+    }
+    out
+}
+
+fn emit_fitn(b: usize, s: usize) -> String {
+    let mut c = Comp::new();
+    let sym_c = c.param("sym_counts", &f3(b, s, 2));
+    let sym_r = c.param("sym_rates", &f2(b, s));
+    let sym_t = c.param("sym_threads", &f2(b, s));
+    let asym_c = c.param("asym_counts", &f3(b, s, 2));
+    let asym_r = c.param("asym_rates", &f2(b, s));
+    let asym_t = c.param("asym_threads", &f2(b, s));
+    let cm = common(&mut c, b);
+    let sconst = c.full1(b, s as i64);
+    let s1const = c.full1(b, (s - 1) as i64);
+    let symn = normn(&mut c, &cm, b, s, &sconst, &sym_c, &sym_r, &sym_t);
+    let asymn =
+        normn(&mut c, &cm, b, s, &sconst, &asym_c, &asym_r, &asym_t);
+
+    // §5.3 static socket (last max on ties) + fraction.
+    let totals: Vec<V> = symn
+        .iter()
+        .map(|(n0, n1)| c.add(n0, n1))
+        .collect();
+    let mut gsum = cm.zero.clone();
+    for t in &totals {
+        gsum = c.add(&gsum, t);
+    }
+    let grand = c.max(&gsum, &cm.eps);
+    let tru = c.push("pred[]", "constant(true)".to_string());
+    let tru_b = c.bcast(&tru, &pred_of(&f1(b)), &[]);
+    let fls = c.push("pred[]", "constant(false)".to_string());
+    let fls_b = c.bcast(&fls, &pred_of(&f1(b)), &[]);
+    let mut tk = totals[0].clone();
+    let mut isk: Vec<V> = (0..s)
+        .map(|i| if i == 0 { tru_b.clone() } else { fls_b.clone() })
+        .collect();
+    for i in 1..s {
+        let cond = c.cmp("GE", &totals[i], &tk);
+        tk = c.sel(&cond, &totals[i], &tk);
+        for (bq, slot) in isk.iter_mut().enumerate() {
+            let target = if bq == i { &tru_b } else { &fls_b };
+            *slot = c.sel(&cond, target, slot);
+        }
+    }
+    let rest = c.sub(&grand, &tk);
+    let mean_others = c.div(&rest, &s1const);
+    let sdiff = c.sub(&tk, &mean_others);
+    let sraw = c.div(&sdiff, &grand);
+    let stat = c.clamp01(&sraw, &cm);
+    let static_bytes = c.mul(&stat, &grand);
+
+    // §5.4 local fraction.
+    let post_total = c.max(&mean_others, &cm.eps);
+    let sb_s1 = c.mul(&static_bytes, &s1const);
+    let sb_term = c.div(&sb_s1, &sconst);
+    let mut r_vals = Vec::with_capacity(s);
+    let mut r_sum = cm.zero.clone();
+    for bank in 0..s {
+        let d = c.sel(&isk[bank], &sb_term, &cm.zero);
+        let raw = c.sub(&symn[bank].1, &d);
+        let rem = c.max(&raw, &cm.zero);
+        let q = c.div(&rem, &post_total);
+        let rv = c.clamp01(&q, &cm);
+        r_sum = c.add(&r_sum, &rv);
+        r_vals.push(rv);
+    }
+    let r = c.div(&r_sum, &sconst);
+    let oms_raw = c.sub(&cm.one, &stat);
+    let oms = c.max(&oms_raw, &cm.eps);
+    let rs = c.mul(&r, &sconst);
+    let rss = c.div(&rs, &s1const);
+    let lin = c.sub(&cm.one, &rss);
+    let lprod = c.mul(&lin, &oms);
+    let lcl = c.clamp01(&lprod, &cm);
+    let lf = c.min(&lcl, &oms);
+    let mut misfit = cm.zero.clone();
+    for rv in &r_vals {
+        let d = c.sub(rv, &r);
+        let a = c.abs(&d);
+        misfit = c.max(&misfit, &a);
+    }
+
+    // §5.5 per-thread fraction with symmetric remote-mixing attribution.
+    let n: Vec<V> = (0..s).map(|j| c.col2(&asym_t, b, j)).collect();
+    let mut ntot = cm.zero.clone();
+    for nj in &n {
+        ntot = c.add(&ntot, nj);
+    }
+    // share(cpu, bank): select(others > 0, n[cpu]/others, 0), 0 on the
+    // diagonal (compile-time).
+    let others: Vec<V> = (0..s).map(|j| c.sub(&ntot, &n[j])).collect();
+    let share = |c: &mut Comp, cpu: usize, bank: usize,
+                 cmz: &V| -> Option<V> {
+        if cpu == bank {
+            return None;
+        }
+        let pos = c.cmp("GT", &others[bank], cmz);
+        let q = c.div(&n[cpu], &others[bank]);
+        Some(c.sel(&pos, &q, cmz))
+    };
+    let mut cpu_tot = Vec::with_capacity(s);
+    for i in 0..s {
+        let mut acc = cm.zero.clone();
+        for j in 0..s {
+            let term = match share(&mut c, i, j, &cm.zero) {
+                Some(sh) => c.mul(&asymn[j].1, &sh),
+                None => c.mul(&asymn[j].1, &cm.zero),
+            };
+            acc = c.add(&acc, &term);
+        }
+        let t = c.add(&asymn[i].0, &acc);
+        cpu_tot.push(t);
+    }
+    let mut usedn = cm.zero.clone();
+    for nj in &n {
+        let u = c.cmp("GT", nj, &cm.zero);
+        let uf = c.sel(&u, &cm.one, &cm.zero);
+        usedn = c.add(&usedn, &uf);
+    }
+    let usedn = c.max(&usedn, &cm.one);
+    let il = c.div(&cm.one, &usedn);
+    let ntm = c.max(&ntot, &cm.eps);
+    let mut num = cm.zero.clone();
+    let mut den = cm.zero.clone();
+    for i in 0..s {
+        let d = c.mul(&stat, &cpu_tot[i]);
+        let dk = c.sel(&isk[i], &d, &cm.zero);
+        let local0 = c.sub(&asymn[i].0, &dk);
+        let l_ct = c.mul(&lf, &cpu_tot[i]);
+        let local1 = c.sub(&local0, &l_ct);
+        let local = c.max(&local1, &cm.zero);
+        let mut remote = cm.zero.clone();
+        for j in 0..s {
+            if j != i {
+                let sh = share(&mut c, i, j, &cm.zero)
+                    .expect("off-diagonal");
+                let rj0 = c.mul(&asymn[j].1, &sh);
+                let dj = c.mul(&stat, &cpu_tot[i]);
+                let djk = c.sel(&isk[j], &dj, &cm.zero);
+                let rj1 = c.sub(&rj0, &djk);
+                let rj = c.max(&rj1, &cm.zero);
+                remote = c.add(&remote, &rj);
+            }
+        }
+        let lr = c.add(&local, &remote);
+        let lrm = c.max(&lr, &cm.eps);
+        let li = c.div(&local, &lrm);
+        let pti = c.div(&n[i], &ntm);
+        let ld = c.sub(&li, &il);
+        let pd = c.sub(&pti, &il);
+        let nterm = c.mul(&ld, &pd);
+        num = c.add(&num, &nterm);
+        let dterm = c.mul(&pd, &pd);
+        den = c.add(&den, &dterm);
+    }
+    let denm = c.max(&den, &cm.eps);
+    let praw = c.div(&num, &denm);
+    let p = c.clamp01(&praw, &cm);
+    let avail0 = c.sub(&cm.one, &lf);
+    let avail = c.sub(&avail0, &stat);
+    let ptraw = c.mul(&p, &avail);
+    let ptf = c.clamp01(&ptraw, &cm);
+
+    let fracs = c.concat_cols(b, &[stat, lf, ptf]);
+    let oh: Vec<V> = (0..s)
+        .map(|i| c.sel(&isk[i], &cm.one, &cm.zero))
+        .collect();
+    let onehot = c.concat_cols(b, &oh);
+    let root = c.tuple(&[fracs, onehot, misfit]);
+    module(&format!("fit_signature_s{s}"), &[],
+           c.finish("main", true, &root))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::hlo::parser::HloModule;
+    use crate::runtime::PIPELINES;
+
+    #[test]
+    fn every_emitted_pipeline_parses() {
+        for s in [2usize, 3, 4] {
+            for p in PIPELINES {
+                let text = pipeline_text(p, s);
+                let m = HloModule::parse(&text)
+                    .unwrap_or_else(|e| panic!("{p} s={s}: {e}"));
+                assert_eq!(m.name, format!("{p}_s{s}"));
+                let entry = m.entry_comp();
+                assert_eq!(entry.name, "main");
+                // Six fit args (S-generic layout), 3/4/5 for the others.
+                let want_params = match p {
+                    "fit_signature" => 6,
+                    "signature_apply" => 3,
+                    "predict_counters" => 4,
+                    "predict_performance" => 5,
+                    _ => unreachable!(),
+                };
+                assert_eq!(entry.params.len(), want_params, "{p}");
+            }
+        }
+    }
+
+    #[test]
+    fn emission_is_deterministic() {
+        for p in PIPELINES {
+            assert_eq!(pipeline_text(p, 2), pipeline_text(p, 2), "{p}");
+        }
+    }
+
+    #[test]
+    fn no_float_literals_in_emitted_text() {
+        // The golden-fixture story depends on constants being integers
+        // or `inf` — a decimal point would make the text formatter
+        // version-sensitive.
+        for s in [2usize, 4] {
+            for p in PIPELINES {
+                let text = pipeline_text(p, s);
+                for line in text.lines() {
+                    if line.contains("constant(") {
+                        assert!(!line.contains('.'),
+                                "float literal in {p} s={s}: {line}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn unknown_pipeline_panics() {
+        pipeline_text("frobnicate", 2);
+    }
+}

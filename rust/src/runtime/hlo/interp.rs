@@ -1,0 +1,1148 @@
+//! HLO graph interpreter: evaluates a parsed [`HloModule`] over host
+//! values.
+//!
+//! Covers the op set the four lowered model pipelines use (see
+//! [`super::emit`]): `parameter` / `constant` / `iota` / `broadcast` /
+//! `reshape` / `transpose` / `convert`, the elementwise arithmetic and
+//! logic ops, `compare` / `select`, `slice` / `concatenate`, `dot`,
+//! `reduce`, `tuple` / `get-tuple-element`, and control flow (`while`,
+//! `conditional`).  Arithmetic is f32 — exactly the compiled artifacts'
+//! precision, so the engine-vs-reference tolerance contract of
+//! `tests/engine_parity.rs` applies unchanged.
+//!
+//! Every instruction's computed value is shape-checked against the
+//! declared shape, so a miscompiled or hand-edited module fails loudly at
+//! the first divergence instead of producing silently misaligned tensors.
+//!
+//! Reduction and dot folds run in ascending row-major index order, so
+//! the interpreter's f32 rounding is deterministic.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::parser::{Computation, DType, HloModule, Instr, Shape};
+
+/// Hard cap on `while` trips — a backstop against modules whose loop
+/// condition never turns false (each model pipeline's loop is bounded by
+/// a compile-time round limit far below this).
+const MAX_WHILE_TRIPS: usize = 1 << 20;
+
+/// A host value: a dense array of one of the supported element types, or
+/// a tuple.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+    Pred { dims: Vec<usize>, data: Vec<bool> },
+    Tuple(Vec<Value>),
+}
+
+impl Value {
+    pub fn shape(&self) -> Shape {
+        match self {
+            Value::F32 { dims, .. } => Shape::array(DType::F32, dims),
+            Value::I32 { dims, .. } => Shape::array(DType::S32, dims),
+            Value::Pred { dims, .. } => Shape::array(DType::Pred, dims),
+            Value::Tuple(parts) => {
+                Shape::Tuple(parts.iter().map(Value::shape).collect())
+            }
+        }
+    }
+
+    fn dims(&self) -> Result<&[usize]> {
+        match self {
+            Value::F32 { dims, .. }
+            | Value::I32 { dims, .. }
+            | Value::Pred { dims, .. } => Ok(dims),
+            Value::Tuple(_) => bail!("expected an array, got a tuple"),
+        }
+    }
+
+    fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32 { data, .. } => Ok(data),
+            other => bail!("expected f32, got {}", other.shape()),
+        }
+    }
+
+    fn as_pred(&self) -> Result<&[bool]> {
+        match self {
+            Value::Pred { data, .. } => Ok(data),
+            other => bail!("expected pred, got {}", other.shape()),
+        }
+    }
+
+    /// Scalar pred (for `while` conditions / `conditional`).
+    fn scalar_pred(&self) -> Result<bool> {
+        let p = self.as_pred()?;
+        if p.len() != 1 {
+            bail!("expected a scalar pred, got {}", self.shape());
+        }
+        Ok(p[0])
+    }
+
+    /// Gather `data[idx[i]]` preserving the element type.
+    fn gather(&self, out_dims: &[usize], idx: &[usize]) -> Value {
+        match self {
+            Value::F32 { data, .. } => Value::F32 {
+                dims: out_dims.to_vec(),
+                data: idx.iter().map(|&i| data[i]).collect(),
+            },
+            Value::I32 { data, .. } => Value::I32 {
+                dims: out_dims.to_vec(),
+                data: idx.iter().map(|&i| data[i]).collect(),
+            },
+            Value::Pred { data, .. } => Value::Pred {
+                dims: out_dims.to_vec(),
+                data: idx.iter().map(|&i| data[i]).collect(),
+            },
+            Value::Tuple(_) => unreachable!("callers check for arrays"),
+        }
+    }
+}
+
+/// Row-major strides of `dims`.
+fn strides(dims: &[usize]) -> Vec<usize> {
+    let mut st = vec![1usize; dims.len()];
+    for d in (0..dims.len().saturating_sub(1)).rev() {
+        st[d] = st[d + 1] * dims[d + 1];
+    }
+    st
+}
+
+/// Visit every multi-index of `dims` in row-major order (in-place
+/// increment: no per-element allocation).
+fn for_each_index(dims: &[usize], mut f: impl FnMut(&[usize])) {
+    let total: usize = dims.iter().product();
+    if total == 0 {
+        return;
+    }
+    let mut ix = vec![0usize; dims.len()];
+    for _ in 0..total {
+        f(&ix);
+        for d in (0..dims.len()).rev() {
+            ix[d] += 1;
+            if ix[d] < dims[d] {
+                break;
+            }
+            ix[d] = 0;
+        }
+    }
+}
+
+/// Evaluate a computation over `args` (one per parameter).
+pub fn eval_computation(module: &HloModule, comp: &Computation,
+                        args: &[Value]) -> Result<Value> {
+    if args.len() != comp.params.len() {
+        bail!(
+            "%{}: called with {} arguments, takes {}",
+            comp.name,
+            args.len(),
+            comp.params.len()
+        );
+    }
+    let mut env: Vec<Option<Value>> = vec![None; comp.instrs.len()];
+    for (i, instr) in comp.instrs.iter().enumerate() {
+        let v = eval_instr(module, comp, instr, args, &env).map_err(|e| {
+            anyhow!("%{}.%{}: {e}", comp.name, instr.name)
+        })?;
+        let got = v.shape();
+        if got != instr.shape {
+            bail!(
+                "%{}.%{}: computed shape {got} does not match declared \
+                 shape {}",
+                comp.name,
+                instr.name,
+                instr.shape
+            );
+        }
+        env[i] = Some(v);
+    }
+    Ok(env[comp.root].take().expect("root evaluated"))
+}
+
+fn operand<'a>(comp: &Computation, env: &'a [Option<Value>],
+               instr: &Instr, i: usize) -> Result<&'a Value> {
+    let name = instr
+        .operands
+        .get(i)
+        .ok_or_else(|| anyhow!("missing operand {i}"))?;
+    let idx = *comp
+        .index
+        .get(name)
+        .ok_or_else(|| anyhow!("unknown operand %{name}"))?;
+    env[idx]
+        .as_ref()
+        .ok_or_else(|| anyhow!("operand %{name} used before definition"))
+}
+
+fn want_array(shape: &Shape) -> Result<(DType, &[usize])> {
+    match shape {
+        Shape::Array { dtype, dims } => Ok((*dtype, dims)),
+        Shape::Tuple(_) => bail!("expected an array result shape"),
+    }
+}
+
+fn eval_instr(module: &HloModule, comp: &Computation, instr: &Instr,
+              args: &[Value], env: &[Option<Value>]) -> Result<Value> {
+    let op = |i: usize| operand(comp, env, instr, i);
+    match instr.opcode.as_str() {
+        "parameter" => {
+            let i = instr.param_index.ok_or_else(|| {
+                anyhow!("parameter without an index")
+            })?;
+            Ok(args[i].clone())
+        }
+        "constant" => {
+            let lit = instr
+                .literal
+                .as_ref()
+                .ok_or_else(|| anyhow!("constant without a literal"))?;
+            let (dtype, dims) = want_array(&instr.shape)?;
+            Ok(match dtype {
+                DType::F32 => Value::F32 {
+                    dims: dims.to_vec(),
+                    data: lit.iter().map(|&v| v as f32).collect(),
+                },
+                DType::S32 => Value::I32 {
+                    dims: dims.to_vec(),
+                    data: lit.iter().map(|&v| v as i32).collect(),
+                },
+                DType::Pred => Value::Pred {
+                    dims: dims.to_vec(),
+                    data: lit.iter().map(|&v| v != 0.0).collect(),
+                },
+            })
+        }
+        "iota" => {
+            let (dtype, dims) = want_array(&instr.shape)?;
+            let axis = instr.attrs.iota_dimension.unwrap_or(0);
+            if axis >= dims.len() {
+                bail!("iota_dimension {axis} out of range");
+            }
+            let mut vals = Vec::with_capacity(dims.iter().product());
+            for_each_index(dims, |ix| vals.push(ix[axis]));
+            Ok(match dtype {
+                DType::F32 => Value::F32 {
+                    dims: dims.to_vec(),
+                    data: vals.iter().map(|&v| v as f32).collect(),
+                },
+                DType::S32 => Value::I32 {
+                    dims: dims.to_vec(),
+                    data: vals.iter().map(|&v| v as i32).collect(),
+                },
+                DType::Pred => bail!("pred iota is unsupported"),
+            })
+        }
+        "broadcast" => broadcast(instr, op(0)?),
+        "reshape" => {
+            let (_, dims) = want_array(&instr.shape)?;
+            reshape(op(0)?, dims)
+        }
+        "transpose" => transpose(instr, op(0)?),
+        "convert" => convert(&instr.shape, op(0)?),
+        "slice" => slice(instr, op(0)?),
+        "concatenate" => concatenate(instr, comp, env),
+        "add" | "subtract" | "multiply" | "divide" | "maximum"
+        | "minimum" => binary_arith(&instr.opcode, op(0)?, op(1)?),
+        "abs" | "negate" => unary_arith(&instr.opcode, op(0)?),
+        "and" | "or" | "xor" => binary_pred(&instr.opcode, op(0)?, op(1)?),
+        "not" => {
+            let a = op(0)?;
+            Ok(Value::Pred {
+                dims: a.dims()?.to_vec(),
+                data: a.as_pred()?.iter().map(|&b| !b).collect(),
+            })
+        }
+        "compare" => compare(instr, op(0)?, op(1)?),
+        "select" => select(op(0)?, op(1)?, op(2)?),
+        "dot" => dot(instr, op(0)?, op(1)?),
+        "reduce" => reduce(module, instr, op(0)?, op(1)?),
+        "tuple" => {
+            let mut parts = Vec::with_capacity(instr.operands.len());
+            for i in 0..instr.operands.len() {
+                parts.push(op(i)?.clone());
+            }
+            Ok(Value::Tuple(parts))
+        }
+        "get-tuple-element" => {
+            let i = instr
+                .attrs
+                .index
+                .ok_or_else(|| anyhow!("get-tuple-element needs index"))?;
+            match op(0)? {
+                Value::Tuple(parts) => parts
+                    .get(i)
+                    .cloned()
+                    .ok_or_else(|| anyhow!("tuple index {i} out of range")),
+                other => bail!("expected a tuple, got {}", other.shape()),
+            }
+        }
+        "while" => {
+            let cond = module.comp(instr.attrs.condition.as_deref()
+                .ok_or_else(|| anyhow!("while needs condition="))?)?;
+            let body = module.comp(instr.attrs.body.as_deref()
+                .ok_or_else(|| anyhow!("while needs body="))?)?;
+            let mut state = op(0)?.clone();
+            for _ in 0..MAX_WHILE_TRIPS {
+                let go = eval_computation(module, cond,
+                                          std::slice::from_ref(&state))?
+                    .scalar_pred()?;
+                if !go {
+                    return Ok(state);
+                }
+                state = eval_computation(module, body,
+                                         std::slice::from_ref(&state))?;
+            }
+            bail!("while exceeded {MAX_WHILE_TRIPS} trips")
+        }
+        "conditional" => {
+            let tc = module.comp(instr.attrs.true_computation.as_deref()
+                .ok_or_else(|| {
+                    anyhow!("conditional needs true_computation=")
+                })?)?;
+            let fc = module.comp(instr.attrs.false_computation.as_deref()
+                .ok_or_else(|| {
+                    anyhow!("conditional needs false_computation=")
+                })?)?;
+            let pred = op(0)?.scalar_pred()?;
+            let (branch, arg) =
+                if pred { (tc, op(1)?) } else { (fc, op(2)?) };
+            eval_computation(module, branch, std::slice::from_ref(arg))
+        }
+        "copy" | "bitcast" => Ok(op(0)?.clone()),
+        other => bail!("unsupported opcode {other:?}"),
+    }
+}
+
+fn broadcast(instr: &Instr, a: &Value) -> Result<Value> {
+    let (_, out_dims) = want_array(&instr.shape)?;
+    let src_dims = a.dims()?.to_vec();
+    let mapping = instr
+        .attrs
+        .dimensions
+        .clone()
+        .unwrap_or_default();
+    if mapping.len() != src_dims.len() {
+        bail!(
+            "broadcast dimensions {:?} do not cover the {}-d operand",
+            mapping,
+            src_dims.len()
+        );
+    }
+    for (i, &m) in mapping.iter().enumerate() {
+        if m >= out_dims.len() || out_dims[m] != src_dims[i] {
+            bail!("broadcast dimension {i}->{m} mismatches shapes");
+        }
+    }
+    // Fast path: scalar fill.
+    if src_dims.is_empty() {
+        let total: usize = out_dims.iter().product();
+        return Ok(match a {
+            Value::F32 { data, .. } => Value::F32 {
+                dims: out_dims.to_vec(),
+                data: vec![data[0]; total],
+            },
+            Value::I32 { data, .. } => Value::I32 {
+                dims: out_dims.to_vec(),
+                data: vec![data[0]; total],
+            },
+            Value::Pred { data, .. } => Value::Pred {
+                dims: out_dims.to_vec(),
+                data: vec![data[0]; total],
+            },
+            Value::Tuple(_) => bail!("cannot broadcast a tuple"),
+        });
+    }
+    let sst = strides(&src_dims);
+    let mut idx = Vec::with_capacity(out_dims.iter().product());
+    for_each_index(out_dims, |ix| {
+        let mut flat = 0usize;
+        for (i, &m) in mapping.iter().enumerate() {
+            flat += ix[m] * sst[i];
+        }
+        idx.push(flat);
+    });
+    Ok(a.gather(out_dims, &idx))
+}
+
+fn reshape(a: &Value, out_dims: &[usize]) -> Result<Value> {
+    let n: usize = a.dims()?.iter().product();
+    let m: usize = out_dims.iter().product();
+    if n != m {
+        bail!("reshape changes element count ({n} -> {m})");
+    }
+    let mut v = a.clone();
+    match &mut v {
+        Value::F32 { dims, .. }
+        | Value::I32 { dims, .. }
+        | Value::Pred { dims, .. } => *dims = out_dims.to_vec(),
+        Value::Tuple(_) => bail!("cannot reshape a tuple"),
+    }
+    Ok(v)
+}
+
+fn transpose(instr: &Instr, a: &Value) -> Result<Value> {
+    let src_dims = a.dims()?.to_vec();
+    let perm = instr
+        .attrs
+        .dimensions
+        .clone()
+        .ok_or_else(|| anyhow!("transpose needs dimensions="))?;
+    if perm.len() != src_dims.len() {
+        bail!("transpose permutation rank mismatch");
+    }
+    let mut seen = vec![false; src_dims.len()];
+    for &p in &perm {
+        if p >= src_dims.len() || seen[p] {
+            bail!("transpose dimensions {perm:?} are not a permutation \
+                   of 0..{}", src_dims.len());
+        }
+        seen[p] = true;
+    }
+    let out_dims: Vec<usize> = perm.iter().map(|&p| src_dims[p]).collect();
+    let sst = strides(&src_dims);
+    // Output dim d walks source dim perm[d].
+    let ost: Vec<usize> = perm.iter().map(|&p| sst[p]).collect();
+    let mut idx = Vec::with_capacity(out_dims.iter().product());
+    for_each_index(&out_dims, |ix| {
+        let mut flat = 0usize;
+        for (d, &i) in ix.iter().enumerate() {
+            flat += i * ost[d];
+        }
+        idx.push(flat);
+    });
+    Ok(a.gather(&out_dims, &idx))
+}
+
+fn convert(shape: &Shape, a: &Value) -> Result<Value> {
+    let (dtype, dims) = want_array(shape)?;
+    if a.dims()? != dims {
+        bail!("convert cannot change dims");
+    }
+    let as_f64: Vec<f64> = match a {
+        Value::F32 { data, .. } => data.iter().map(|&v| v as f64).collect(),
+        Value::I32 { data, .. } => data.iter().map(|&v| v as f64).collect(),
+        Value::Pred { data, .. } => {
+            data.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect()
+        }
+        Value::Tuple(_) => bail!("cannot convert a tuple"),
+    };
+    Ok(match dtype {
+        DType::F32 => Value::F32 {
+            dims: dims.to_vec(),
+            data: as_f64.iter().map(|&v| v as f32).collect(),
+        },
+        DType::S32 => Value::I32 {
+            dims: dims.to_vec(),
+            data: as_f64.iter().map(|&v| v as i32).collect(),
+        },
+        DType::Pred => Value::Pred {
+            dims: dims.to_vec(),
+            data: as_f64.iter().map(|&v| v != 0.0).collect(),
+        },
+    })
+}
+
+fn slice(instr: &Instr, a: &Value) -> Result<Value> {
+    let src_dims = a.dims()?.to_vec();
+    let spec = instr
+        .attrs
+        .slice
+        .clone()
+        .ok_or_else(|| anyhow!("slice needs slice= bounds"))?;
+    if spec.len() != src_dims.len() {
+        bail!("slice rank mismatch");
+    }
+    let mut out_dims = Vec::with_capacity(spec.len());
+    for (d, &(start, limit, stride)) in spec.iter().enumerate() {
+        if stride == 0 || limit > src_dims[d] || start > limit {
+            bail!("slice bounds out of range in dimension {d}");
+        }
+        out_dims.push((limit - start).div_ceil(stride));
+    }
+    let sst = strides(&src_dims);
+    let mut idx = Vec::with_capacity(out_dims.iter().product());
+    for_each_index(&out_dims, |ix| {
+        let mut flat = 0usize;
+        for (d, &i) in ix.iter().enumerate() {
+            flat += (spec[d].0 + i * spec[d].2) * sst[d];
+        }
+        idx.push(flat);
+    });
+    Ok(a.gather(&out_dims, &idx))
+}
+
+fn concatenate(instr: &Instr, comp: &Computation, env: &[Option<Value>])
+    -> Result<Value> {
+    let axis = instr
+        .attrs
+        .dimensions
+        .as_ref()
+        .and_then(|d| d.first().copied())
+        .ok_or_else(|| anyhow!("concatenate needs dimensions="))?;
+    let mut parts: Vec<&Value> = Vec::with_capacity(instr.operands.len());
+    for i in 0..instr.operands.len() {
+        parts.push(operand(comp, env, instr, i)?);
+    }
+    if parts.is_empty() {
+        bail!("concatenate needs operands");
+    }
+    let first_dims = parts[0].dims()?.to_vec();
+    if axis >= first_dims.len() {
+        bail!("concatenate axis {axis} out of range");
+    }
+    let mut out_dims = first_dims.clone();
+    out_dims[axis] = 0;
+    for p in &parts {
+        let d = p.dims()?;
+        if d.len() != first_dims.len() {
+            bail!("concatenate rank mismatch");
+        }
+        for (i, (&a, &b)) in d.iter().zip(&first_dims).enumerate() {
+            if i != axis && a != b {
+                bail!("concatenate non-axis dimension mismatch");
+            }
+        }
+        out_dims[axis] += d[axis];
+    }
+    // Copy part by part: the output decomposes into `outer` blocks, each
+    // a run of `axis_len * inner` contiguous source elements.
+    let outer: usize = out_dims[..axis].iter().product();
+    let inner: usize = out_dims[axis + 1..].iter().product();
+    let gather_plan = |part_dims: &[&[usize]]| -> Vec<(usize, usize)> {
+        // (part, src_offset) per output chunk, in output order.
+        let mut plan = Vec::new();
+        for o in 0..outer {
+            for (k, d) in part_dims.iter().enumerate() {
+                let run = d[axis] * inner;
+                plan.push((k, o * run));
+            }
+        }
+        plan
+    };
+    let dims_list: Vec<&[usize]> = parts
+        .iter()
+        .map(|p| p.dims().expect("checked above"))
+        .collect();
+    let plan = gather_plan(&dims_list);
+    macro_rules! concat_typed {
+        ($variant:ident, $ty:ty) => {{
+            let datas: Vec<&[$ty]> = parts
+                .iter()
+                .map(|p| match p {
+                    Value::$variant { data, .. } => Ok(&data[..]),
+                    other => Err(anyhow!(
+                        "concatenate dtype mismatch: {}",
+                        other.shape()
+                    )),
+                })
+                .collect::<Result<_>>()?;
+            let mut out: Vec<$ty> =
+                Vec::with_capacity(out_dims.iter().product());
+            for &(k, off) in &plan {
+                let run = dims_list[k][axis] * inner;
+                out.extend_from_slice(&datas[k][off..off + run]);
+            }
+            Ok(Value::$variant {
+                dims: out_dims.clone(),
+                data: out,
+            })
+        }};
+    }
+    match parts[0] {
+        Value::F32 { .. } => concat_typed!(F32, f32),
+        Value::I32 { .. } => concat_typed!(I32, i32),
+        Value::Pred { .. } => concat_typed!(Pred, bool),
+        Value::Tuple(_) => bail!("cannot concatenate tuples"),
+    }
+}
+
+fn binary_arith(opcode: &str, a: &Value, b: &Value) -> Result<Value> {
+    if a.dims()? != b.dims()? {
+        bail!("operand shape mismatch: {} vs {}", a.shape(), b.shape());
+    }
+    match (a, b) {
+        (Value::F32 { dims, data: x }, Value::F32 { data: y, .. }) => {
+            let f: fn(f32, f32) -> f32 = match opcode {
+                "add" => |a, b| a + b,
+                "subtract" => |a, b| a - b,
+                "multiply" => |a, b| a * b,
+                "divide" => |a, b| a / b,
+                "maximum" => f32::max,
+                "minimum" => f32::min,
+                _ => unreachable!(),
+            };
+            Ok(Value::F32 {
+                dims: dims.clone(),
+                data: x.iter().zip(y).map(|(&a, &b)| f(a, b)).collect(),
+            })
+        }
+        (Value::I32 { dims, data: x }, Value::I32 { data: y, .. }) => {
+            let f: fn(i32, i32) -> i32 = match opcode {
+                "add" => |a, b| a.wrapping_add(b),
+                "subtract" => |a, b| a.wrapping_sub(b),
+                "multiply" => |a, b| a.wrapping_mul(b),
+                "maximum" => i32::max,
+                "minimum" => i32::min,
+                other => bail!("{other} is unsupported on s32"),
+            };
+            Ok(Value::I32 {
+                dims: dims.clone(),
+                data: x.iter().zip(y).map(|(&a, &b)| f(a, b)).collect(),
+            })
+        }
+        _ => bail!(
+            "{opcode} needs two numeric operands of one type ({} vs {})",
+            a.shape(),
+            b.shape()
+        ),
+    }
+}
+
+fn unary_arith(opcode: &str, a: &Value) -> Result<Value> {
+    match a {
+        Value::F32 { dims, data } => {
+            let f: fn(f32) -> f32 = match opcode {
+                "abs" => f32::abs,
+                "negate" => |v| -v,
+                _ => unreachable!(),
+            };
+            Ok(Value::F32 {
+                dims: dims.clone(),
+                data: data.iter().map(|&v| f(v)).collect(),
+            })
+        }
+        Value::I32 { dims, data } => {
+            let f: fn(i32) -> i32 = match opcode {
+                "abs" => i32::wrapping_abs,
+                "negate" => i32::wrapping_neg,
+                _ => unreachable!(),
+            };
+            Ok(Value::I32 {
+                dims: dims.clone(),
+                data: data.iter().map(|&v| f(v)).collect(),
+            })
+        }
+        _ => bail!("{opcode} needs a numeric operand"),
+    }
+}
+
+fn binary_pred(opcode: &str, a: &Value, b: &Value) -> Result<Value> {
+    if a.dims()? != b.dims()? {
+        bail!("operand shape mismatch");
+    }
+    let (x, y) = (a.as_pred()?, b.as_pred()?);
+    let f: fn(bool, bool) -> bool = match opcode {
+        "and" => |a, b| a && b,
+        "or" => |a, b| a || b,
+        "xor" => |a, b| a ^ b,
+        _ => unreachable!(),
+    };
+    Ok(Value::Pred {
+        dims: a.dims()?.to_vec(),
+        data: x.iter().zip(y).map(|(&a, &b)| f(a, b)).collect(),
+    })
+}
+
+fn compare(instr: &Instr, a: &Value, b: &Value) -> Result<Value> {
+    if a.dims()? != b.dims()? {
+        bail!("operand shape mismatch");
+    }
+    let dir = instr
+        .attrs
+        .direction
+        .as_deref()
+        .ok_or_else(|| anyhow!("compare needs direction="))?;
+    let data: Vec<bool> = match (a, b) {
+        (Value::F32 { data: x, .. }, Value::F32 { data: y, .. }) => {
+            let f: fn(f32, f32) -> bool = match dir {
+                "EQ" => |a, b| a == b,
+                "NE" => |a, b| a != b,
+                "LT" => |a, b| a < b,
+                "LE" => |a, b| a <= b,
+                "GT" => |a, b| a > b,
+                "GE" => |a, b| a >= b,
+                other => bail!("unknown compare direction {other:?}"),
+            };
+            x.iter().zip(y).map(|(&a, &b)| f(a, b)).collect()
+        }
+        (Value::I32 { data: x, .. }, Value::I32 { data: y, .. }) => {
+            let f: fn(i32, i32) -> bool = match dir {
+                "EQ" => |a, b| a == b,
+                "NE" => |a, b| a != b,
+                "LT" => |a, b| a < b,
+                "LE" => |a, b| a <= b,
+                "GT" => |a, b| a > b,
+                "GE" => |a, b| a >= b,
+                other => bail!("unknown compare direction {other:?}"),
+            };
+            x.iter().zip(y).map(|(&a, &b)| f(a, b)).collect()
+        }
+        _ => bail!("compare needs two numeric operands of one type"),
+    };
+    Ok(Value::Pred {
+        dims: a.dims()?.to_vec(),
+        data,
+    })
+}
+
+fn select(p: &Value, a: &Value, b: &Value) -> Result<Value> {
+    if a.dims()? != b.dims()? {
+        bail!("select branch shape mismatch");
+    }
+    let preds = p.as_pred()?;
+    let n: usize = a.dims()?.iter().product();
+    let scalar = preds.len() == 1 && n != 1;
+    if !scalar && p.dims()? != a.dims()? {
+        bail!("select predicate shape mismatch");
+    }
+    let pick = |i: usize| -> bool {
+        if scalar {
+            preds[0]
+        } else {
+            preds[i]
+        }
+    };
+    match (a, b) {
+        (Value::F32 { dims, data: x }, Value::F32 { data: y, .. }) => {
+            Ok(Value::F32 {
+                dims: dims.clone(),
+                data: (0..x.len())
+                    .map(|i| if pick(i) { x[i] } else { y[i] })
+                    .collect(),
+            })
+        }
+        (Value::I32 { dims, data: x }, Value::I32 { data: y, .. }) => {
+            Ok(Value::I32 {
+                dims: dims.clone(),
+                data: (0..x.len())
+                    .map(|i| if pick(i) { x[i] } else { y[i] })
+                    .collect(),
+            })
+        }
+        (Value::Pred { dims, data: x }, Value::Pred { data: y, .. }) => {
+            Ok(Value::Pred {
+                dims: dims.clone(),
+                data: (0..x.len())
+                    .map(|i| if pick(i) { x[i] } else { y[i] })
+                    .collect(),
+            })
+        }
+        _ => bail!("select branch dtype mismatch"),
+    }
+}
+
+/// 2-D × 2-D matrix product (`lhs_contracting_dims={1}`,
+/// `rhs_contracting_dims={0}`) — the only dot the pipelines emit.  The
+/// contraction folds `k` in ascending order from 0.0.
+fn dot(instr: &Instr, a: &Value, b: &Value) -> Result<Value> {
+    let lc = instr.attrs.lhs_contracting.as_deref().unwrap_or(&[1]);
+    let rc = instr.attrs.rhs_contracting.as_deref().unwrap_or(&[0]);
+    if lc != [1] || rc != [0] {
+        bail!("only plain matmul dots are supported");
+    }
+    let (ad, bd) = (a.dims()?, b.dims()?);
+    if ad.len() != 2 || bd.len() != 2 || ad[1] != bd[0] {
+        bail!("dot wants [M,K] x [K,N], got {} x {}", a.shape(), b.shape());
+    }
+    let (m, k, n) = (ad[0], ad[1], bd[1]);
+    let (x, y) = (a.as_f32()?, b.as_f32()?);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let xv = x[i * k + kk];
+            let row = &y[kk * n..(kk + 1) * n];
+            for (o, &yv) in out[i * n..(i + 1) * n].iter_mut().zip(row) {
+                *o += xv * yv;
+            }
+        }
+    }
+    Ok(Value::F32 {
+        dims: vec![m, n],
+        data: out,
+    })
+}
+
+/// Scalar fold the reducer computation encodes, recognized structurally
+/// (a 2-parameter computation whose root is one arithmetic/logic op on
+/// the parameters).
+enum Folder {
+    AddF32,
+    MulF32,
+    MaxF32,
+    MinF32,
+    OrPred,
+    AndPred,
+}
+
+fn recognize_folder(comp: &Computation) -> Result<Folder> {
+    if comp.params.len() != 2 {
+        bail!("reducer %{} must take two parameters", comp.name);
+    }
+    let root = &comp.instrs[comp.root];
+    Ok(match root.opcode.as_str() {
+        "add" => Folder::AddF32,
+        "multiply" => Folder::MulF32,
+        "maximum" => Folder::MaxF32,
+        "minimum" => Folder::MinF32,
+        "or" => Folder::OrPred,
+        "and" => Folder::AndPred,
+        other => bail!(
+            "reducer %{} root {other:?} is not a recognized fold",
+            comp.name
+        ),
+    })
+}
+
+fn reduce(module: &HloModule, instr: &Instr, a: &Value, init: &Value)
+    -> Result<Value> {
+    let reducer = module.comp(instr.attrs.to_apply.as_deref()
+        .ok_or_else(|| anyhow!("reduce needs to_apply="))?)?;
+    let folder = recognize_folder(reducer)?;
+    let dims_attr = instr
+        .attrs
+        .dimensions
+        .clone()
+        .ok_or_else(|| anyhow!("reduce needs dimensions="))?;
+    let src_dims = a.dims()?.to_vec();
+    let reduced: Vec<bool> = (0..src_dims.len())
+        .map(|d| dims_attr.contains(&d))
+        .collect();
+    let out_dims: Vec<usize> = src_dims
+        .iter()
+        .zip(&reduced)
+        .filter(|(_, &r)| !r)
+        .map(|(&d, _)| d)
+        .collect();
+    let out_len: usize = out_dims.iter().product();
+    // Output stride each source dimension contributes (0 if reduced).
+    let ost = strides(&out_dims);
+    let mut contrib = vec![0usize; src_dims.len()];
+    let mut kept = 0usize;
+    for (d, &r) in reduced.iter().enumerate() {
+        if !r {
+            contrib[d] = ost[kept];
+            kept += 1;
+        }
+    }
+
+    // Fold in row-major order of the source (deterministic, ascending).
+    match folder {
+        Folder::AddF32 | Folder::MulF32 | Folder::MaxF32
+        | Folder::MinF32 => {
+            let x = a.as_f32()?;
+            let i0 = init.as_f32()?;
+            if i0.len() != 1 {
+                bail!("reduce init must be scalar");
+            }
+            let mut out = vec![i0[0]; out_len];
+            let mut flat = 0usize;
+            for_each_index(&src_dims, |ix| {
+                let mut o = 0usize;
+                for (d, &i) in ix.iter().enumerate() {
+                    o += i * contrib[d];
+                }
+                let v = x[flat];
+                let slot = &mut out[o];
+                *slot = match folder {
+                    Folder::AddF32 => *slot + v,
+                    Folder::MulF32 => *slot * v,
+                    Folder::MaxF32 => slot.max(v),
+                    Folder::MinF32 => slot.min(v),
+                    _ => unreachable!(),
+                };
+                flat += 1;
+            });
+            Ok(Value::F32 {
+                dims: out_dims,
+                data: out,
+            })
+        }
+        Folder::OrPred | Folder::AndPred => {
+            let x = a.as_pred()?;
+            let i0 = init.as_pred()?;
+            if i0.len() != 1 {
+                bail!("reduce init must be scalar");
+            }
+            let mut out = vec![i0[0]; out_len];
+            let mut flat = 0usize;
+            for_each_index(&src_dims, |ix| {
+                let mut o = 0usize;
+                for (d, &i) in ix.iter().enumerate() {
+                    o += i * contrib[d];
+                }
+                let v = x[flat];
+                let slot = &mut out[o];
+                *slot = match folder {
+                    Folder::OrPred => *slot || v,
+                    Folder::AndPred => *slot && v,
+                    _ => unreachable!(),
+                };
+                flat += 1;
+            });
+            Ok(Value::Pred {
+                dims: out_dims,
+                data: out,
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(text: &str, args: &[Value]) -> Result<Value> {
+        let m = HloModule::parse(text)?;
+        eval_computation(&m, m.entry_comp(), args)
+    }
+
+    #[test]
+    fn elementwise_broadcast_and_reduce() {
+        let text = "\
+HloModule t
+%add_f32 (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %add = f32[] add(f32[] %x, f32[] %y)
+}
+ENTRY %e (a: f32[2,3]) -> f32[2] {
+  %a = f32[2,3] parameter(0)
+  %c = f32[] constant(2)
+  %cb = f32[2,3] broadcast(f32[] %c), dimensions={}
+  %m = f32[2,3] multiply(f32[2,3] %a, f32[2,3] %cb)
+  %z = f32[] constant(0)
+  ROOT %r = f32[2] reduce(f32[2,3] %m, f32[] %z), dimensions={1}, to_apply=%add_f32
+}
+";
+        let a = Value::F32 {
+            dims: vec![2, 3],
+            data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+        };
+        let got = run(text, &[a]).unwrap();
+        assert_eq!(
+            got,
+            Value::F32 {
+                dims: vec![2],
+                data: vec![12.0, 30.0]
+            }
+        );
+    }
+
+    #[test]
+    fn reduce_to_scalar_over_all_dims() {
+        let text = "\
+HloModule t
+%or_pred (x: pred[], y: pred[]) -> pred[] {
+  %x = pred[] parameter(0)
+  %y = pred[] parameter(1)
+  ROOT %or = pred[] or(pred[] %x, pred[] %y)
+}
+ENTRY %e (a: f32[2,2]) -> pred[] {
+  %a = f32[2,2] parameter(0)
+  %z = f32[] constant(0)
+  %zb = f32[2,2] broadcast(f32[] %z), dimensions={}
+  %p = pred[2,2] compare(f32[2,2] %a, f32[2,2] %zb), direction=GT
+  %f = pred[] constant(false)
+  ROOT %any = pred[] reduce(pred[2,2] %p, pred[] %f), dimensions={0,1}, to_apply=%or_pred
+}
+";
+        let yes = Value::F32 {
+            dims: vec![2, 2],
+            data: vec![0.0, 0.0, 0.5, 0.0],
+        };
+        let no = Value::F32 {
+            dims: vec![2, 2],
+            data: vec![0.0, 0.0, 0.0, 0.0],
+        };
+        assert_eq!(run(text, &[yes]).unwrap(), Value::Pred {
+            dims: vec![],
+            data: vec![true]
+        });
+        assert_eq!(run(text, &[no]).unwrap(), Value::Pred {
+            dims: vec![],
+            data: vec![false]
+        });
+    }
+
+    #[test]
+    fn slice_concat_select_compare() {
+        let text = "\
+HloModule t
+ENTRY %e (a: f32[2,2]) -> f32[2,2] {
+  %a = f32[2,2] parameter(0)
+  %c0 = f32[2,1] slice(f32[2,2] %a), slice={[0:2], [0:1]}
+  %c1 = f32[2,1] slice(f32[2,2] %a), slice={[0:2], [1:2]}
+  %swap = f32[2,2] concatenate(f32[2,1] %c1, f32[2,1] %c0), dimensions={1}
+  %p = pred[2,2] compare(f32[2,2] %swap, f32[2,2] %a), direction=GT
+  ROOT %s = f32[2,2] select(pred[2,2] %p, f32[2,2] %swap, f32[2,2] %a)
+}
+";
+        let a = Value::F32 {
+            dims: vec![2, 2],
+            data: vec![1.0, 5.0, 7.0, 3.0],
+        };
+        let got = run(text, &[a]).unwrap();
+        // Per-element max(original, swapped).
+        assert_eq!(
+            got,
+            Value::F32 {
+                dims: vec![2, 2],
+                data: vec![5.0, 5.0, 7.0, 7.0]
+            }
+        );
+    }
+
+    #[test]
+    fn dot_matches_matmul() {
+        let text = "\
+HloModule t
+ENTRY %e (a: f32[2,3], b: f32[3,2]) -> f32[2,2] {
+  %a = f32[2,3] parameter(0)
+  %b = f32[3,2] parameter(1)
+  ROOT %d = f32[2,2] dot(f32[2,3] %a, f32[3,2] %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+";
+        let a = Value::F32 {
+            dims: vec![2, 3],
+            data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+        };
+        let b = Value::F32 {
+            dims: vec![3, 2],
+            data: vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0],
+        };
+        let got = run(text, &[a, b]).unwrap();
+        assert_eq!(
+            got,
+            Value::F32 {
+                dims: vec![2, 2],
+                data: vec![58.0, 64.0, 139.0, 154.0]
+            }
+        );
+    }
+
+    #[test]
+    fn while_loop_counts_and_terminates() {
+        let text = "\
+HloModule t
+%cond (s: (s32[], f32[2])) -> pred[] {
+  %s = (s32[], f32[2]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[2]) %s), index=0
+  %k = s32[] constant(4)
+  ROOT %lt = pred[] compare(s32[] %i, s32[] %k), direction=LT
+}
+%body (s2: (s32[], f32[2])) -> (s32[], f32[2]) {
+  %s2 = (s32[], f32[2]) parameter(0)
+  %i2 = s32[] get-tuple-element((s32[], f32[2]) %s2), index=0
+  %v = f32[2] get-tuple-element((s32[], f32[2]) %s2), index=1
+  %one = s32[] constant(1)
+  %ni = s32[] add(s32[] %i2, s32[] %one)
+  %two = f32[] constant(2)
+  %tb = f32[2] broadcast(f32[] %two), dimensions={}
+  %nv = f32[2] multiply(f32[2] %v, f32[2] %tb)
+  ROOT %t = (s32[], f32[2]) tuple(s32[] %ni, f32[2] %nv)
+}
+ENTRY %e (v0: f32[2]) -> (s32[], f32[2]) {
+  %v0 = f32[2] parameter(0)
+  %z = s32[] constant(0)
+  %init = (s32[], f32[2]) tuple(s32[] %z, f32[2] %v0)
+  ROOT %w = (s32[], f32[2]) while((s32[], f32[2]) %init), condition=%cond, body=%body
+}
+";
+        let v0 = Value::F32 {
+            dims: vec![2],
+            data: vec![1.0, 3.0],
+        };
+        let got = run(text, &[v0]).unwrap();
+        match got {
+            Value::Tuple(parts) => {
+                assert_eq!(parts[0], Value::I32 {
+                    dims: vec![],
+                    data: vec![4]
+                });
+                assert_eq!(parts[1], Value::F32 {
+                    dims: vec![2],
+                    data: vec![16.0, 48.0]
+                });
+            }
+            other => panic!("expected tuple, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_is_a_loud_error() {
+        let text = "\
+HloModule t
+ENTRY %e (a: f32[2]) -> f32[3] {
+  %a = f32[2] parameter(0)
+  ROOT %r = f32[3] add(f32[2] %a, f32[2] %a)
+}
+";
+        let a = Value::F32 {
+            dims: vec![2],
+            data: vec![1.0, 2.0],
+        };
+        let err = run(text, &[a]).unwrap_err();
+        assert!(format!("{err}").contains("declared shape"), "{err}");
+    }
+
+    #[test]
+    fn iota_transpose_convert() {
+        let text = "\
+HloModule t
+ENTRY %e () -> f32[3,2] {
+  %i = s32[2,3] iota(), iota_dimension=1
+  %t = s32[3,2] transpose(s32[2,3] %i), dimensions={1,0}
+  ROOT %f = f32[3,2] convert(s32[3,2] %t)
+}
+";
+        let got = run(text, &[]).unwrap();
+        assert_eq!(
+            got,
+            Value::F32 {
+                dims: vec![3, 2],
+                data: vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0]
+            }
+        );
+    }
+
+    #[test]
+    fn conditional_picks_a_branch() {
+        let text = "\
+HloModule t
+%double (x: f32[2]) -> f32[2] {
+  %x = f32[2] parameter(0)
+  ROOT %d = f32[2] add(f32[2] %x, f32[2] %x)
+}
+%zero (y: f32[2]) -> f32[2] {
+  %y = f32[2] parameter(0)
+  ROOT %z = f32[2] subtract(f32[2] %y, f32[2] %y)
+}
+ENTRY %e (p: pred[], v: f32[2]) -> f32[2] {
+  %p = pred[] parameter(0)
+  %v = f32[2] parameter(1)
+  ROOT %c = f32[2] conditional(pred[] %p, f32[2] %v, f32[2] %v), true_computation=%double, false_computation=%zero
+}
+";
+        let v = Value::F32 {
+            dims: vec![2],
+            data: vec![1.5, 2.0],
+        };
+        let t = Value::Pred {
+            dims: vec![],
+            data: vec![true],
+        };
+        let f = Value::Pred {
+            dims: vec![],
+            data: vec![false],
+        };
+        assert_eq!(run(text, &[t, v.clone()]).unwrap(), Value::F32 {
+            dims: vec![2],
+            data: vec![3.0, 4.0]
+        });
+        assert_eq!(run(text, &[f, v]).unwrap(), Value::F32 {
+            dims: vec![2],
+            data: vec![0.0, 0.0]
+        });
+    }
+}

@@ -1,0 +1,114 @@
+//! In-repo HLO-text toolchain: parser, interpreter, and offline emitter.
+//!
+//! This is what makes the `hlo` [`crate::runtime::ExecutionBackend`] real
+//! without vendoring `xla`/PJRT: the engine loads `.hlo.txt` modules —
+//! either AOT-exported by `python/compile/aot.py` (when JAX exists) or
+//! synthesized per-S by [`emit`] (always) — and executes them with the
+//! [`interp`] graph interpreter in f32.
+//!
+//! Split:
+//! * [`parser`] — HLO text → module → computations → instruction graph
+//!   (shapes, literals, attributes);
+//! * [`interp`] — evaluate a computation over host [`interp::Value`]s,
+//!   covering the op set the four pipelines use (elementwise arithmetic,
+//!   compare/select, slice/concatenate, dot, reduce, while/conditional);
+//! * [`emit`] — synthesize per-S module text for `fit_signature`,
+//!   `signature_apply`, `predict_counters`, and `predict_performance`
+//!   (max-min water-filling as a `while` loop), mirroring the native
+//!   f32 engine's arithmetic op for op.
+//!
+//! The emitted 2-socket text is pinned byte-for-byte by checked-in
+//! golden fixtures (`rust/tests/data/hlo/*.s2.hlo.txt`, asserted in
+//! `tests/engine_parity.rs`), so the emitter cannot drift silently.
+
+pub mod emit;
+pub mod interp;
+pub mod parser;
+
+pub use interp::{eval_computation, Value};
+pub use parser::{DType, HloModule, Shape};
+
+use anyhow::{bail, Result};
+
+use super::Tensor;
+
+/// Run an entry computation over input [`Tensor`]s and slice the tuple
+/// result back into output tensors — the engine's execute body.
+///
+/// Inputs are f32 tensors (every pipeline argument is); the module's
+/// result must be a tuple of f32 arrays (`aot.py` lowers with
+/// `return_tuple=True`, and the emitter does the same), though a single
+/// array result is accepted for hand-written modules.
+pub fn run_module(module: &HloModule, inputs: &[Tensor])
+    -> Result<Vec<Tensor>> {
+    let args: Vec<Value> = inputs
+        .iter()
+        .map(|t| Value::F32 {
+            dims: t.shape.clone(),
+            data: t.data.clone(),
+        })
+        .collect();
+    let out = eval_computation(module, module.entry_comp(), &args)?;
+    let parts = match out {
+        Value::Tuple(parts) => parts,
+        single => vec![single],
+    };
+    parts
+        .into_iter()
+        .map(|p| match p {
+            Value::F32 { dims, data } => Ok(Tensor::new(data, dims)),
+            other => bail!(
+                "module {} returned a non-f32 result {}",
+                module.name,
+                other.shape()
+            ),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_module_roundtrips_tensors() {
+        let text = "\
+HloModule t
+ENTRY %main (a: f32[2,2], b: f32[2,2]) -> (f32[2,2]) {
+  %a = f32[2,2] parameter(0)
+  %b = f32[2,2] parameter(1)
+  %s = f32[2,2] add(f32[2,2] %a, f32[2,2] %b)
+  ROOT %t = (f32[2,2]) tuple(f32[2,2] %s)
+}
+";
+        let m = HloModule::parse(text).unwrap();
+        let a = Tensor::new(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        let b = Tensor::new(vec![10.0, 20.0, 30.0, 40.0], vec![2, 2]);
+        let out = run_module(&m, &[a, b]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape, vec![2, 2]);
+        assert_eq!(out[0].data, vec![11.0, 22.0, 33.0, 44.0]);
+    }
+
+    #[test]
+    fn emitted_pipelines_execute_through_run_module() {
+        // Smoke: the S=2 signature_apply module runs on a padded batch
+        // and reproduces the Fig 5 worked example in its first row.
+        use crate::runtime::{Batch, ENGINE_BATCH};
+        let text = emit::pipeline_text("signature_apply", 2);
+        let m = HloModule::parse(&text).unwrap();
+        let b = Batch::new(1, ENGINE_BATCH);
+        let inputs = vec![
+            b.pack(&[vec![0.2, 0.35, 0.3]], &[3]),
+            b.pack(&[vec![0.0, 1.0]], &[2]),
+            b.pack(&[vec![3.0, 1.0]], &[2]),
+        ];
+        let out = run_module(&m, &inputs).unwrap();
+        assert_eq!(out[0].shape, vec![ENGINE_BATCH, 2, 2]);
+        let row = out[0].row(0);
+        let want = [0.65f32, 0.35, 0.30, 0.70];
+        for (g, w) in row.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-6, "{row:?}");
+        }
+    }
+}

@@ -1,0 +1,827 @@
+//! HLO-text parser: module → computations → instruction graph.
+//!
+//! Parses the HLO text interchange format — the same format
+//! `python/compile/aot.py` exports (`xla::XlaComputation::as_hlo_text`)
+//! and [`super::emit`] synthesizes offline.  The grammar covered is the
+//! line-oriented core every printer agrees on:
+//!
+//! ```text
+//! HloModule <name>[, <header attrs ignored>]
+//!
+//! %comp (p0: f32[64,2], p1: f32[64]) -> f32[64] {
+//!   %p0 = f32[64,2] parameter(0)
+//!   ...
+//!   ROOT %r = f32[64] reduce(f32[64,2] %p0, f32[] %c), dimensions={1},
+//! }
+//!
+//! ENTRY %main (...) -> (f32[64,3], f32[64]) { ... }
+//! ```
+//!
+//! * shapes: `f32` / `s32` / `pred` arrays with optional `{...}` layout
+//!   suffixes (ignored), and tuples thereof;
+//! * literals: scalars (`0`, `2.5`, `inf`, `true`), nested-brace
+//!   dense arrays (`{{1,0},{0,1}}`) — but an *elided* literal
+//!   (`constant({...})`, printed without `print_large_constants`) is a
+//!   hard error, never silently zeros (the failure mode the AOT driver
+//!   documents);
+//! * attributes: the ones the interpreter consumes (`dimensions`,
+//!   `direction`, `index`, `to_apply`, `condition`, `body`, `slice`,
+//!   `iota_dimension`, `*_contracting_dims`) are parsed; anything else
+//!   (`metadata`, `sharding`, ...) is skipped with balanced braces.
+//!
+//! The parser only builds the graph; execution lives in
+//! [`super::interp`].
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Element type of an array shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    S32,
+    Pred,
+}
+
+impl DType {
+    fn from_token(s: &str) -> Option<DType> {
+        match s {
+            "f32" => Some(DType::F32),
+            "s32" => Some(DType::S32),
+            "pred" => Some(DType::Pred),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::S32 => "s32",
+            DType::Pred => "pred",
+        }
+    }
+}
+
+/// An instruction or computation shape: a dense array or a tuple.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Shape {
+    Array { dtype: DType, dims: Vec<usize> },
+    Tuple(Vec<Shape>),
+}
+
+impl Shape {
+    pub fn array(dtype: DType, dims: &[usize]) -> Shape {
+        Shape::Array {
+            dtype,
+            dims: dims.to_vec(),
+        }
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Shape::Array { dtype, dims } => {
+                let dims: Vec<String> =
+                    dims.iter().map(|d| d.to_string()).collect();
+                write!(f, "{}[{}]", dtype.as_str(), dims.join(","))
+            }
+            Shape::Tuple(parts) => {
+                let parts: Vec<String> =
+                    parts.iter().map(|p| p.to_string()).collect();
+                write!(f, "({})", parts.join(", "))
+            }
+        }
+    }
+}
+
+/// Parsed attributes the interpreter consumes.
+#[derive(Clone, Debug, Default)]
+pub struct Attrs {
+    pub dimensions: Option<Vec<usize>>,
+    pub direction: Option<String>,
+    pub index: Option<usize>,
+    pub to_apply: Option<String>,
+    pub condition: Option<String>,
+    pub body: Option<String>,
+    /// Per-dimension `(start, limit, stride)`.
+    pub slice: Option<Vec<(usize, usize, usize)>>,
+    pub iota_dimension: Option<usize>,
+    pub lhs_contracting: Option<Vec<usize>>,
+    pub rhs_contracting: Option<Vec<usize>>,
+    pub true_computation: Option<String>,
+    pub false_computation: Option<String>,
+}
+
+/// One instruction: `[ROOT] %name = shape opcode(operands), attrs`.
+#[derive(Clone, Debug)]
+pub struct Instr {
+    pub name: String,
+    pub shape: Shape,
+    pub opcode: String,
+    /// Operand instruction names (within the same computation).
+    pub operands: Vec<String>,
+    /// `parameter(i)` index.
+    pub param_index: Option<usize>,
+    /// Row-major literal payload of a `constant` (booleans as 0/1).
+    pub literal: Option<Vec<f64>>,
+    pub attrs: Attrs,
+    pub is_root: bool,
+}
+
+/// One computation: parameters + topologically ordered instructions.
+#[derive(Clone, Debug)]
+pub struct Computation {
+    pub name: String,
+    pub instrs: Vec<Instr>,
+    /// Instruction index by name.
+    pub index: HashMap<String, usize>,
+    /// Instruction index of each parameter, by parameter number.
+    pub params: Vec<usize>,
+    /// Instruction index of the root.
+    pub root: usize,
+}
+
+/// A parsed HLO module.
+#[derive(Clone, Debug)]
+pub struct HloModule {
+    pub name: String,
+    pub comps: Vec<Computation>,
+    pub by_name: HashMap<String, usize>,
+    /// Index of the ENTRY computation in `comps`.
+    pub entry: usize,
+}
+
+impl HloModule {
+    pub fn entry_comp(&self) -> &Computation {
+        &self.comps[self.entry]
+    }
+
+    pub fn comp(&self, name: &str) -> Result<&Computation> {
+        self.by_name
+            .get(name)
+            .map(|&i| &self.comps[i])
+            .ok_or_else(|| anyhow!("hlo: unknown computation %{name}"))
+    }
+
+    /// Parse HLO text into a module.
+    pub fn parse(text: &str) -> Result<HloModule> {
+        let mut name = String::new();
+        let mut comps: Vec<Computation> = Vec::new();
+        let mut entry: Option<usize> = None;
+
+        // Current computation being accumulated.
+        let mut cur: Option<(String, bool, Vec<Instr>)> = None;
+
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            let ctx = |msg: &str| anyhow!("hlo line {}: {msg}", lineno + 1);
+            if line.is_empty() || line.starts_with("//") {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("HloModule") {
+                let rest = rest.trim();
+                let end = rest
+                    .find([',', ' '])
+                    .unwrap_or(rest.len());
+                name = rest[..end].trim_matches('%').to_string();
+                continue;
+            }
+            if line.starts_with('}') {
+                let (cname, is_entry, instrs) = cur
+                    .take()
+                    .ok_or_else(|| ctx("unmatched '}'"))?;
+                let comp = finish_computation(cname, instrs)
+                    .map_err(|e| ctx(&format!("{e}")))?;
+                if is_entry {
+                    entry = Some(comps.len());
+                }
+                comps.push(comp);
+                continue;
+            }
+            if line.ends_with('{') && line.contains("->") {
+                if cur.is_some() {
+                    bail!(ctx("computation inside computation"));
+                }
+                let is_entry = line.starts_with("ENTRY");
+                let header = line
+                    .trim_start_matches("ENTRY")
+                    .trim_start();
+                let cname = header
+                    .split(['(', ' '])
+                    .next()
+                    .unwrap_or("")
+                    .trim_matches('%')
+                    .to_string();
+                if cname.is_empty() {
+                    bail!(ctx("computation header without a name"));
+                }
+                cur = Some((cname, is_entry, Vec::new()));
+                continue;
+            }
+            // Anything else must be an instruction line inside a
+            // computation; stray header continuation lines outside one
+            // (e.g. a wrapped entry_computation_layout) are skipped.
+            match cur.as_mut() {
+                Some((_, _, instrs)) => {
+                    let instr = parse_instr(line)
+                        .map_err(|e| ctx(&format!("{e}")))?;
+                    instrs.push(instr);
+                }
+                None => continue,
+            }
+        }
+        if cur.is_some() {
+            bail!("hlo: unterminated computation at end of input");
+        }
+        let entry = entry.ok_or_else(|| anyhow!("hlo: no ENTRY computation"))?;
+        let by_name = comps
+            .iter()
+            .enumerate()
+            .map(|(i, c)| (c.name.clone(), i))
+            .collect();
+        Ok(HloModule {
+            name,
+            comps,
+            by_name,
+            entry,
+        })
+    }
+}
+
+fn finish_computation(name: String, instrs: Vec<Instr>)
+    -> Result<Computation> {
+    if instrs.is_empty() {
+        bail!("computation %{name} has no instructions");
+    }
+    let index: HashMap<String, usize> = instrs
+        .iter()
+        .enumerate()
+        .map(|(i, ins)| (ins.name.clone(), i))
+        .collect();
+    if index.len() != instrs.len() {
+        bail!("computation %{name} has duplicate instruction names");
+    }
+    let mut params: Vec<(usize, usize)> = instrs
+        .iter()
+        .enumerate()
+        .filter_map(|(i, ins)| ins.param_index.map(|p| (p, i)))
+        .collect();
+    params.sort();
+    for (want, (got, _)) in params.iter().enumerate() {
+        if want != *got {
+            bail!("computation %{name}: parameter numbers are not dense");
+        }
+    }
+    let params = params.into_iter().map(|(_, i)| i).collect();
+    // The ROOT marker wins; default to the last instruction (what every
+    // printer emits anyway).
+    let root = instrs
+        .iter()
+        .position(|i| i.is_root)
+        .unwrap_or(instrs.len() - 1);
+    Ok(Computation {
+        name,
+        instrs,
+        index,
+        params,
+        root,
+    })
+}
+
+/// Character cursor over one instruction line (or one shape/operand
+/// fragment).
+struct Cursor<'a> {
+    s: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(s: &'a str) -> Cursor<'a> {
+        Cursor { s: s.as_bytes(), pos: 0 }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.s.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek();
+        if b.is_some() {
+            self.pos += 1;
+        }
+        b
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t')) {
+            self.pos += 1;
+        }
+    }
+
+    fn eat(&mut self, b: u8) -> bool {
+        self.skip_ws();
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        if self.eat(b) {
+            Ok(())
+        } else {
+            bail!("expected {:?} at byte {}", b as char, self.pos)
+        }
+    }
+
+    fn rest(&self) -> &str {
+        std::str::from_utf8(&self.s[self.pos..]).unwrap_or("")
+    }
+
+    /// Identifier: letters, digits, `_`, `-`, `.`.
+    fn ident(&mut self) -> String {
+        self.skip_ws();
+        let start = self.pos;
+        while matches!(self.peek(),
+                       Some(c) if c.is_ascii_alphanumeric()
+                           || c == b'_' || c == b'-' || c == b'.') {
+            self.pos += 1;
+        }
+        std::str::from_utf8(&self.s[start..self.pos])
+            .unwrap_or("")
+            .to_string()
+    }
+
+    fn usize_list(&mut self) -> Result<Vec<usize>> {
+        // `{a,b,...}` or a bare integer.
+        self.skip_ws();
+        let mut out = Vec::new();
+        if self.eat(b'{') {
+            loop {
+                self.skip_ws();
+                if self.eat(b'}') {
+                    break;
+                }
+                out.push(self.usize_token()?);
+                self.eat(b',');
+            }
+        } else {
+            out.push(self.usize_token()?);
+        }
+        Ok(out)
+    }
+
+    fn usize_token(&mut self) -> Result<usize> {
+        self.skip_ws();
+        let start = self.pos;
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        std::str::from_utf8(&self.s[start..self.pos])
+            .ok()
+            .and_then(|t| t.parse().ok())
+            .ok_or_else(|| anyhow!("expected integer at byte {start}"))
+    }
+
+    /// Parse a shape (array or tuple), skipping `{...}` layout suffixes.
+    fn shape(&mut self) -> Result<Shape> {
+        self.skip_ws();
+        if self.eat(b'(') {
+            let mut parts = Vec::new();
+            loop {
+                self.skip_ws();
+                if self.eat(b')') {
+                    break;
+                }
+                parts.push(self.shape()?);
+                self.eat(b',');
+            }
+            return Ok(Shape::Tuple(parts));
+        }
+        let dt = self.ident();
+        let dtype = DType::from_token(&dt)
+            .ok_or_else(|| anyhow!("unsupported element type {dt:?}"))?;
+        self.expect(b'[')?;
+        let mut dims = Vec::new();
+        loop {
+            self.skip_ws();
+            if self.eat(b']') {
+                break;
+            }
+            dims.push(self.usize_token()?);
+            self.eat(b',');
+        }
+        // Optional layout suffix `{1,0}` — ignored.
+        self.skip_ws();
+        if self.peek() == Some(b'{') {
+            self.skip_balanced()?;
+        }
+        Ok(Shape::Array { dtype, dims })
+    }
+
+    /// Skip a balanced `{...}` block.
+    fn skip_balanced(&mut self) -> Result<()> {
+        self.expect(b'{')?;
+        let mut depth = 1usize;
+        while depth > 0 {
+            match self.bump() {
+                Some(b'{') => depth += 1,
+                Some(b'}') => depth -= 1,
+                Some(_) => {}
+                None => bail!("unbalanced braces"),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Parse one instruction line.
+fn parse_instr(line: &str) -> Result<Instr> {
+    let mut c = Cursor::new(line);
+    c.skip_ws();
+    let is_root = c.rest().starts_with("ROOT ");
+    if is_root {
+        c.pos += 5;
+    }
+    c.skip_ws();
+    c.eat(b'%');
+    let name = c.ident();
+    if name.is_empty() {
+        bail!("missing instruction name");
+    }
+    c.expect(b'=')?;
+    let shape = c.shape()?;
+    let opcode = c.ident();
+    if opcode.is_empty() {
+        bail!("missing opcode for %{name}");
+    }
+    c.expect(b'(')?;
+
+    let mut operands = Vec::new();
+    let mut param_index = None;
+    let mut literal = None;
+    match opcode.as_str() {
+        "parameter" => {
+            param_index = Some(c.usize_token()?);
+            c.expect(b')')?;
+        }
+        "constant" => {
+            let (data, elided) = parse_literal(&mut c)?;
+            if elided {
+                bail!(
+                    "%{name}: elided constant literal ({{...}}) — \
+                     regenerate the artifact with print_large_constants"
+                );
+            }
+            let want = match &shape {
+                Shape::Array { dims, .. } => {
+                    dims.iter().product::<usize>()
+                }
+                Shape::Tuple(_) => {
+                    bail!("%{name}: tuple constants are unsupported")
+                }
+            };
+            if data.len() != want {
+                bail!(
+                    "%{name}: constant has {} elements, shape {shape} \
+                     wants {want}",
+                    data.len()
+                );
+            }
+            literal = Some(data);
+            c.expect(b')')?;
+        }
+        _ => {
+            // Operand list: `[shape] %name` items, comma separated.
+            loop {
+                c.skip_ws();
+                if c.eat(b')') {
+                    break;
+                }
+                if c.eat(b',') {
+                    continue;
+                }
+                if c.peek() == Some(b'%') {
+                    c.bump();
+                    operands.push(c.ident());
+                } else {
+                    // A shape prefix (or a tuple shape) before the
+                    // operand name — parse and discard.
+                    c.shape()?;
+                }
+            }
+        }
+    }
+
+    // Attributes: `, key=value` pairs; unknown values skipped.
+    let mut attrs = Attrs::default();
+    loop {
+        c.skip_ws();
+        if c.peek().is_none() {
+            break;
+        }
+        if !c.eat(b',') {
+            // Trailing junk (printers sometimes emit a trailing comma or
+            // comment-free garbage is a real error).
+            let rest = c.rest().trim();
+            if rest.is_empty() {
+                break;
+            }
+            bail!("%{name}: unexpected trailing {rest:?}");
+        }
+        c.skip_ws();
+        if c.peek().is_none() {
+            break;
+        }
+        let key = c.ident();
+        if key.is_empty() {
+            bail!("%{name}: empty attribute name");
+        }
+        c.expect(b'=')?;
+        c.skip_ws();
+        match key.as_str() {
+            "dimensions" => attrs.dimensions = Some(c.usize_list()?),
+            "direction" => attrs.direction = Some(c.ident()),
+            "index" => attrs.index = Some(c.usize_token()?),
+            "to_apply" => {
+                c.eat(b'%');
+                attrs.to_apply = Some(c.ident());
+            }
+            "condition" => {
+                c.eat(b'%');
+                attrs.condition = Some(c.ident());
+            }
+            "body" => {
+                c.eat(b'%');
+                attrs.body = Some(c.ident());
+            }
+            "iota_dimension" => {
+                attrs.iota_dimension = Some(c.usize_token()?)
+            }
+            "true_computation" => {
+                c.eat(b'%');
+                attrs.true_computation = Some(c.ident());
+            }
+            "false_computation" => {
+                c.eat(b'%');
+                attrs.false_computation = Some(c.ident());
+            }
+            "lhs_contracting_dims" => {
+                attrs.lhs_contracting = Some(c.usize_list()?)
+            }
+            "rhs_contracting_dims" => {
+                attrs.rhs_contracting = Some(c.usize_list()?)
+            }
+            "slice" => attrs.slice = Some(parse_slice(&mut c)?),
+            _ => skip_attr_value(&mut c)?,
+        }
+    }
+
+    Ok(Instr {
+        name,
+        shape,
+        opcode,
+        operands,
+        param_index,
+        literal,
+        attrs,
+        is_root,
+    })
+}
+
+/// `{[0:64], [1:2]}` or `{[0:64:1], ...}`.
+fn parse_slice(c: &mut Cursor) -> Result<Vec<(usize, usize, usize)>> {
+    c.expect(b'{')?;
+    let mut out = Vec::new();
+    loop {
+        c.skip_ws();
+        if c.eat(b'}') {
+            break;
+        }
+        if c.eat(b',') {
+            continue;
+        }
+        c.expect(b'[')?;
+        let start = c.usize_token()?;
+        c.expect(b':')?;
+        let limit = c.usize_token()?;
+        let stride = if c.eat(b':') { c.usize_token()? } else { 1 };
+        c.expect(b']')?;
+        out.push((start, limit, stride));
+    }
+    Ok(out)
+}
+
+/// Skip an attribute value we do not consume: a balanced-brace block, a
+/// quoted string, or a bare token.
+fn skip_attr_value(c: &mut Cursor) -> Result<()> {
+    c.skip_ws();
+    match c.peek() {
+        Some(b'{') => c.skip_balanced(),
+        Some(b'"') => {
+            c.bump();
+            while let Some(b) = c.bump() {
+                if b == b'"' {
+                    return Ok(());
+                }
+            }
+            bail!("unterminated string attribute")
+        }
+        _ => {
+            while matches!(c.peek(),
+                           Some(b) if b != b',' && b != b' ') {
+                c.pos += 1;
+            }
+            Ok(())
+        }
+    }
+}
+
+/// Parse a (possibly nested-brace) dense literal into row-major f64s.
+/// Returns `(data, elided)` where `elided` flags the printer's `{...}`
+/// ellipsis form.
+fn parse_literal(c: &mut Cursor) -> Result<(Vec<f64>, bool)> {
+    let mut out = Vec::new();
+    let mut elided = false;
+    parse_literal_into(c, &mut out, &mut elided)?;
+    Ok((out, elided))
+}
+
+fn parse_literal_into(c: &mut Cursor, out: &mut Vec<f64>,
+                      elided: &mut bool) -> Result<()> {
+    c.skip_ws();
+    if c.eat(b'{') {
+        loop {
+            c.skip_ws();
+            if c.eat(b'}') {
+                return Ok(());
+            }
+            if c.eat(b',') {
+                continue;
+            }
+            if c.rest().starts_with("...") {
+                c.pos += 3;
+                *elided = true;
+                continue;
+            }
+            parse_literal_into(c, out, elided)?;
+        }
+    }
+    // Scalar token: number, inf/-inf/nan, true/false.
+    let start = c.pos;
+    while matches!(c.peek(),
+                   Some(b) if b != b',' && b != b'}' && b != b')'
+                       && b != b' ') {
+        c.pos += 1;
+    }
+    let tok = std::str::from_utf8(&c.s[start..c.pos]).unwrap_or("");
+    let v = match tok {
+        "true" => 1.0,
+        "false" => 0.0,
+        "inf" => f64::INFINITY,
+        "-inf" => f64::NEG_INFINITY,
+        "nan" | "-nan" => f64::NAN,
+        t => t
+            .parse::<f64>()
+            .map_err(|_| anyhow!("bad literal token {t:?}"))?,
+    };
+    out.push(v);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SMALL: &str = "\
+HloModule test_mod, entry_computation_layout={(f32[2]{0})->f32[2]{0}}
+
+%add_f32 (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %add = f32[] add(f32[] %x, f32[] %y)
+}
+
+ENTRY %main (p: f32[2,3]) -> (f32[2]) {
+  %p = f32[2,3] parameter(0)
+  %zero = f32[] constant(0)
+  %inc = f32[2,3] constant({{1,0,2},{0,1,0}})
+  %r = f32[2] reduce(f32[2,3] %p, f32[] %zero), dimensions={1}, to_apply=%add_f32, metadata={op_name=\"jit_main\"}
+  ROOT %t = (f32[2]) tuple(f32[2] %r)
+}
+";
+
+    #[test]
+    fn parses_module_computations_and_attrs() {
+        let m = HloModule::parse(SMALL).unwrap();
+        assert_eq!(m.name, "test_mod");
+        assert_eq!(m.comps.len(), 2);
+        let entry = m.entry_comp();
+        assert_eq!(entry.name, "main");
+        assert_eq!(entry.params.len(), 1);
+        let red = &entry.instrs[entry.index["r"]];
+        assert_eq!(red.opcode, "reduce");
+        assert_eq!(red.operands, vec!["p", "zero"]);
+        assert_eq!(red.attrs.dimensions, Some(vec![1]));
+        assert_eq!(red.attrs.to_apply.as_deref(), Some("add_f32"));
+        let root = &entry.instrs[entry.root];
+        assert_eq!(root.opcode, "tuple");
+        assert_eq!(root.shape,
+                   Shape::Tuple(vec![Shape::array(DType::F32, &[2])]));
+        let k = &entry.instrs[entry.index["inc"]];
+        assert_eq!(k.literal.as_deref(),
+                   Some(&[1.0, 0.0, 2.0, 0.0, 1.0, 0.0][..]));
+        let add = m.comp("add_f32").unwrap();
+        assert_eq!(add.params.len(), 2);
+        assert_eq!(add.instrs[add.root].opcode, "add");
+    }
+
+    #[test]
+    fn parses_scalar_specials_and_slices() {
+        let text = "\
+HloModule t
+ENTRY %e (a: f32[4,2]) -> f32[4] {
+  %a = f32[4,2] parameter(0)
+  %i = f32[] constant(inf)
+  %b = pred[] constant(true)
+  %s = f32[4,1] slice(f32[4,2] %a), slice={[0:4], [1:2]}
+  ROOT %r = f32[4] reshape(f32[4,1] %s)
+}
+";
+        let m = HloModule::parse(text).unwrap();
+        let e = m.entry_comp();
+        assert_eq!(e.instrs[e.index["i"]].literal.as_deref(),
+                   Some(&[f64::INFINITY][..]));
+        assert_eq!(e.instrs[e.index["b"]].literal.as_deref(),
+                   Some(&[1.0][..]));
+        assert_eq!(e.instrs[e.index["s"]].attrs.slice.as_deref(),
+                   Some(&[(0, 4, 1), (1, 2, 1)][..]));
+    }
+
+    #[test]
+    fn rejects_elided_constants_and_garbage() {
+        let elided = "\
+HloModule t
+ENTRY %e () -> f32[8] {
+  ROOT %c = f32[8] constant({...})
+}
+";
+        let err = HloModule::parse(elided).unwrap_err();
+        assert!(format!("{err}").contains("print_large_constants"),
+                "{err}");
+        assert!(HloModule::parse("ENTRY %e () -> f32[] {").is_err(),
+                "unterminated computation must fail");
+        let no_entry = "\
+HloModule t
+%c (x: f32[]) -> f32[] {
+  ROOT %x = f32[] parameter(0)
+}
+";
+        let err = HloModule::parse(no_entry).unwrap_err();
+        assert!(format!("{err}").contains("ENTRY"), "{err}");
+        // Wrong element count in a literal.
+        let bad = "\
+HloModule t
+ENTRY %e () -> f32[3] {
+  ROOT %c = f32[3] constant({1,2})
+}
+";
+        assert!(HloModule::parse(bad).is_err());
+    }
+
+    #[test]
+    fn while_attrs_resolve() {
+        let text = "\
+HloModule t
+%cond (s: (s32[])) -> pred[] {
+  %s = (s32[]) parameter(0)
+  %r = s32[] get-tuple-element((s32[]) %s), index=0
+  %k = s32[] constant(3)
+  ROOT %lt = pred[] compare(s32[] %r, s32[] %k), direction=LT
+}
+%body (s2: (s32[])) -> (s32[]) {
+  %s2 = (s32[]) parameter(0)
+  %r2 = s32[] get-tuple-element((s32[]) %s2), index=0
+  %one = s32[] constant(1)
+  %n = s32[] add(s32[] %r2, s32[] %one)
+  ROOT %t = (s32[]) tuple(s32[] %n)
+}
+ENTRY %e () -> (s32[]) {
+  %z = s32[] constant(0)
+  %init = (s32[]) tuple(s32[] %z)
+  ROOT %w = (s32[]) while((s32[]) %init), condition=%cond, body=%body
+}
+";
+        let m = HloModule::parse(text).unwrap();
+        let e = m.entry_comp();
+        let w = &e.instrs[e.root];
+        assert_eq!(w.opcode, "while");
+        assert_eq!(w.attrs.condition.as_deref(), Some("cond"));
+        assert_eq!(w.attrs.body.as_deref(), Some("body"));
+        assert!(m.comp("cond").is_ok());
+    }
+}

@@ -8,17 +8,19 @@
 //!     f32 engine.  Executes all four pipelines for **any** socket count
 //!     S and needs no build step: its manifest is synthesized in memory
 //!     ([`Artifacts::synthesize`]).
-//!   - [`Engine`] — the PJRT handle for the AOT HLO artifacts produced by
-//!     `python/compile/aot.py`.  The `xla` crate is **not in the offline
-//!     vendor set**, so in this build [`Engine::cpu`] errors and the impl
-//!     is a stub the trait is ready to host once `xla` is vendored.
+//!   - [`Engine`] — the `hlo` backend: parses `.hlo.txt` modules and
+//!     runs them with the in-repo HLO interpreter ([`hlo`]).  Modules
+//!     come from an AOT artifacts directory (`python/compile/aot.py`,
+//!     when JAX exists) or are **emitted offline** per socket count
+//!     ([`hlo::emit`]), so `--engine hlo` works with no build step too.
 //!   - the Rust reference model (`PredictionService::reference`) is the
 //!     f64 oracle the engines are pinned against
 //!     (`tests/engine_parity.rs`).
 //! * [`Artifacts`] describes a backend's pipelines (shapes, batch,
 //!   socket count, flow→resource incidence): parsed from
 //!   `artifacts/manifest.json` for compiled backends, synthesized from a
-//!   [`MachineTopology`] (or a raw socket count) for the native engine.
+//!   [`MachineTopology`] (or a raw socket count) — with inline emitted
+//!   HLO text — for the offline engines.
 //! * All pipelines run at a fixed batch `B` ([`ENGINE_BATCH`] = 64);
 //!   [`Batch`] handles padding partial batches and slicing results back,
 //!   and [`batches`] is the canonical way to split a query stream into
@@ -26,12 +28,14 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::topology::{flow_resources, MachineTopology};
 use crate::util::json::Json;
 
+pub mod hlo;
 pub mod native;
 
 pub use native::NativeEngine;
@@ -66,17 +70,29 @@ pub struct PipelineMeta {
     pub file: String,
     pub arg_shapes: Vec<Vec<usize>>,
     pub result_shapes: Vec<Vec<usize>>,
+    /// Inline HLO text for synthesized manifests
+    /// ([`Artifacts::synthesize_for_sockets`] emits it); `None` for
+    /// manifests loaded from disk, whose text lives in `file`.
+    pub hlo_text: Option<String>,
 }
 
 impl Artifacts {
+    /// The default artifacts directory: `$NUMABW_ARTIFACTS` or
+    /// `./artifacts` relative to the workspace root.  Single source of
+    /// the resolution policy, shared by [`Artifacts::locate`] and
+    /// [`Engine::from_env`].
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("NUMABW_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
     /// Locate the artifacts directory: explicit path, `$NUMABW_ARTIFACTS`,
     /// or `./artifacts` relative to the workspace root.
     pub fn locate(explicit: Option<&Path>) -> Result<Artifacts> {
         let dir = match explicit {
             Some(p) => p.to_path_buf(),
-            None => std::env::var_os("NUMABW_ARTIFACTS")
-                .map(PathBuf::from)
-                .unwrap_or_else(|| PathBuf::from("artifacts")),
+            None => Self::default_dir(),
         };
         Self::load(&dir)
     }
@@ -139,6 +155,7 @@ impl Artifacts {
                         .to_string(),
                     arg_shapes: shapes("args")?,
                     result_shapes: shapes("results")?,
+                    hlo_text: None,
                 },
             );
         }
@@ -159,10 +176,12 @@ impl Artifacts {
         Ok(a)
     }
 
-    /// Synthesize the manifest for a machine's socket count — the native
-    /// engine's path: no JAX lowering or `make artifacts` step exists for
-    /// it, so the shape/incidence metadata the runtime validates against
-    /// is built directly from the topology.
+    /// Synthesize the manifest for a machine's socket count — the
+    /// offline engines' path: no JAX lowering or `make artifacts` step
+    /// exists for them, so the shape/incidence metadata the runtime
+    /// validates against is built directly from the topology, and each
+    /// pipeline carries freshly **emitted HLO text**
+    /// ([`hlo::emit::pipeline_text`]) the interpreter engine executes.
     pub fn synthesize(machine: &MachineTopology) -> Artifacts {
         Self::synthesize_for_sockets(machine.sockets)
     }
@@ -203,9 +222,10 @@ impl Artifacts {
             pipelines.insert(
                 name.to_string(),
                 PipelineMeta {
-                    file: format!("<native:{name}>"),
+                    file: format!("<synthesized:{name}>"),
                     arg_shapes: args,
                     result_shapes: results,
+                    hlo_text: Some(hlo::emit::pipeline_text(name, s)),
                 },
             );
         };
@@ -352,72 +372,206 @@ pub(crate) fn validate_pipeline_inputs(name: &str, meta: &PipelineMeta,
     Ok(())
 }
 
-/// PJRT execution backend handle.  In this offline build the PJRT client
-/// cannot be constructed ([`Engine::cpu`] errors), so the engine is a
-/// validated manifest holder whose `execute` is unreachable;
-/// `PredictionService` treats a failed engine construction as "serve from
-/// the Rust reference model".
+/// The `hlo` execution backend: loads HLO-text modules and runs them
+/// with the in-repo graph interpreter ([`hlo::interp`]) in f32.
+///
+/// Two modes:
+/// * **Manifest** ([`Engine::cpu`]) — modules read from an artifacts
+///   directory (`python/compile/aot.py` output, when JAX exists) or
+///   from a synthesized manifest's inline text.  Shapes (and the socket
+///   count) are fixed to what was compiled; the legacy AOT 5-argument
+///   2-socket `fit_signature` layout is detected from the manifest.
+/// * **Synthesized** ([`Engine::synthesized`]) — fully self-contained:
+///   per-S module text is emitted on demand
+///   ([`hlo::emit::pipeline_text`]), parsed once, and cached, so the
+///   engine executes **any** socket count exactly like the native
+///   engine.  This is what `--engine hlo` uses offline.
+///
+/// (The historical PJRT path — compiling the same artifacts through the
+/// `xla` crate — remains a vendoring exercise; the interpreter closes
+/// the execution gap without it.)
 pub struct Engine {
-    pub artifacts: Artifacts,
+    mode: EngineMode,
+}
+
+enum EngineMode {
+    Manifest {
+        artifacts: Artifacts,
+        modules: HashMap<String, hlo::HloModule>,
+    },
+    Synthesized {
+        /// Per-S parsed modules, built lazily; `Arc` so execution runs
+        /// outside the cache lock (many threads share one engine).
+        modules: Mutex<HashMap<usize, Arc<SynthEntry>>>,
+    },
+}
+
+struct SynthEntry {
+    artifacts: Artifacts,
+    modules: HashMap<String, hlo::HloModule>,
+}
+
+fn parse_synth(s: usize) -> Result<SynthEntry> {
+    let artifacts = Artifacts::synthesize_for_sockets(s);
+    let mut modules = HashMap::new();
+    for p in PIPELINES {
+        let text = artifacts.pipelines[p]
+            .hlo_text
+            .as_deref()
+            .expect("synthesized manifests carry inline text");
+        let module = hlo::HloModule::parse(text)
+            .with_context(|| format!("emitted {p} (S={s})"))?;
+        modules.insert(p.to_string(), module);
+    }
+    Ok(SynthEntry { artifacts, modules })
 }
 
 impl Engine {
-    /// Create a CPU engine over an artifacts directory.  Always fails in
-    /// this build: the `xla` crate (PJRT bindings) is not in the offline
-    /// vendor set.
+    /// Build an engine over a loaded manifest: parse every pipeline's
+    /// HLO text (inline for synthesized manifests, from `dir/<file>`
+    /// otherwise) and validate it against the declared shapes.
     pub fn cpu(artifacts: Artifacts) -> Result<Engine> {
-        bail!(
-            "PJRT backend not compiled into this build (the `xla` crate is \
-             not in the offline vendor set); artifacts at {} are loadable \
-             but cannot be executed — use the Rust reference model \
-             (PredictionService::reference)",
-            artifacts.dir.display()
-        )
+        let mut modules = HashMap::new();
+        for p in PIPELINES {
+            let meta = &artifacts.pipelines[p];
+            let text = match &meta.hlo_text {
+                Some(t) => t.clone(),
+                None => {
+                    let path = artifacts.dir.join(&meta.file);
+                    std::fs::read_to_string(&path).with_context(|| {
+                        format!("reading {} — run `make artifacts` \
+                                 first", path.display())
+                    })?
+                }
+            };
+            let module = hlo::HloModule::parse(&text)
+                .with_context(|| format!("parsing {p} HLO text"))?;
+            let n_params = module.entry_comp().params.len();
+            if n_params != meta.arg_shapes.len() {
+                bail!(
+                    "{p}: module takes {n_params} parameters, manifest \
+                     declares {} args",
+                    meta.arg_shapes.len()
+                );
+            }
+            modules.insert(p.to_string(), module);
+        }
+        Ok(Engine {
+            mode: EngineMode::Manifest { artifacts, modules },
+        })
     }
 
-    /// Convenience: locate artifacts and build the engine.
-    pub fn from_env() -> Result<Engine> {
+    /// Fully self-contained S-generic engine over emitted modules.
+    pub fn synthesized() -> Engine {
+        Engine {
+            mode: EngineMode::Synthesized {
+                modules: Mutex::new(HashMap::new()),
+            },
+        }
+    }
+
+    /// Engine over an AOT artifacts directory (explicit path,
+    /// `$NUMABW_ARTIFACTS`, or `./artifacts`).  Errors when none exists
+    /// — callers that want the offline fallback use
+    /// [`Engine::from_env`].
+    pub fn from_manifest() -> Result<Engine> {
         Self::cpu(Artifacts::locate(None)?)
     }
 
+    /// The `--engine hlo` resolution: an AOT artifacts directory when
+    /// one is present (a broken one is an error, not a silent skip),
+    /// the synthesized S-generic engine otherwise.
+    pub fn from_env() -> Result<Engine> {
+        let dir = Artifacts::default_dir();
+        if dir.join("manifest.json").exists() {
+            Self::cpu(Artifacts::load(&dir)?)
+        } else {
+            Ok(Self::synthesized())
+        }
+    }
+
     pub fn batch(&self) -> usize {
-        self.artifacts.batch
+        match &self.mode {
+            EngineMode::Manifest { artifacts, .. } => artifacts.batch,
+            EngineMode::Synthesized { .. } => ENGINE_BATCH,
+        }
     }
 
-    /// Force-compile every pipeline (startup warmup).  Unreachable in the
-    /// stub build — kept so callers compile against the full API.
+    /// Pre-parse the common 2-socket modules (synthesized mode); a
+    /// manifest engine parsed everything at construction.
     pub fn warmup(&self) -> Result<()> {
-        bail!("PJRT backend not compiled into this build")
+        if let EngineMode::Synthesized { modules } = &self.mode {
+            let mut map = modules.lock().unwrap();
+            if !map.contains_key(&2) {
+                map.insert(2, Arc::new(parse_synth(2)?));
+            }
+        }
+        Ok(())
     }
 
-    /// Execute a pipeline on full-batch tensors.  Inputs are validated
-    /// against the manifest's argument shapes, then the stub reports that
-    /// no PJRT client exists.
+    /// Execute a pipeline on full-batch tensors through the interpreter.
     pub fn execute(&self, name: &str, inputs: &[Tensor])
         -> Result<Vec<Tensor>> {
-        let meta = self
-            .artifacts
-            .pipelines
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown pipeline {name}"))?;
-        validate_pipeline_inputs(name, meta, inputs)?;
-        bail!("PJRT backend not compiled into this build: cannot execute \
-               pipeline {name}")
+        match &self.mode {
+            EngineMode::Manifest { artifacts, modules } => {
+                let meta = artifacts
+                    .pipelines
+                    .get(name)
+                    .ok_or_else(|| anyhow!("unknown pipeline {name}"))?;
+                validate_pipeline_inputs(name, meta, inputs)?;
+                hlo::run_module(&modules[name], inputs)
+            }
+            EngineMode::Synthesized { modules } => {
+                let s = NativeEngine::derive_sockets(name, inputs)?;
+                let entry = {
+                    let mut map = modules.lock().unwrap();
+                    if !map.contains_key(&s) {
+                        map.insert(s, Arc::new(parse_synth(s)?));
+                    }
+                    map[&s].clone()
+                };
+                let meta = entry
+                    .artifacts
+                    .pipelines
+                    .get(name)
+                    .ok_or_else(|| anyhow!("unknown pipeline {name}"))?;
+                validate_pipeline_inputs(name, meta, inputs)?;
+                hlo::run_module(&entry.modules[name], inputs)
+            }
+        }
     }
 }
 
 impl ExecutionBackend for Engine {
     fn name(&self) -> &'static str {
-        "hlo-pjrt"
+        "hlo"
     }
 
     fn batch(&self) -> usize {
         Engine::batch(self)
     }
 
-    /// The AOT artifacts bake their socket count into every shape.
+    /// AOT artifacts bake their socket count into every shape; the
+    /// synthesized engine derives shapes per call and takes any S.
     fn sockets(&self) -> Option<usize> {
-        Some(self.artifacts.sockets)
+        match &self.mode {
+            EngineMode::Manifest { artifacts, .. } => {
+                Some(artifacts.sockets)
+            }
+            EngineMode::Synthesized { .. } => None,
+        }
+    }
+
+    /// Synthesized modules take the 6-argument S-generic fit layout;
+    /// AOT-compiled manifests may still carry the legacy 5-argument
+    /// 2-socket layout, detected from their declared shapes.
+    fn fit_takes_sym_threads(&self) -> bool {
+        match &self.mode {
+            EngineMode::Manifest { artifacts, .. } => {
+                artifacts.pipelines["fit_signature"].arg_shapes.len() == 6
+            }
+            EngineMode::Synthesized { .. } => true,
+        }
     }
 
     fn warmup(&self) -> Result<()> {
@@ -576,10 +730,91 @@ mod tests {
     }
 
     #[test]
-    fn stub_engine_reports_missing_backend() {
-        // Without an artifacts directory the engine cannot even locate a
-        // manifest; with one, cpu() still refuses (no PJRT in this build).
-        assert!(Engine::from_env().is_err());
+    fn hlo_engine_synthesizes_offline_and_executes() {
+        // Without an artifacts directory `from_env` yields the
+        // self-contained synthesized engine: any S, 6-arg fit layout.
+        let engine = Engine::from_env().unwrap();
+        assert_eq!(ExecutionBackend::name(&engine), "hlo");
+        assert_eq!(ExecutionBackend::sockets(&engine), None);
+        assert!(engine.fit_takes_sym_threads());
+        engine.warmup().unwrap();
+        let b = Batch::new(1, ENGINE_BATCH);
+        let inputs = vec![
+            b.pack(&[vec![0.2, 0.35, 0.3]], &[3]),
+            b.pack(&[vec![0.0, 1.0]], &[2]),
+            b.pack(&[vec![3.0, 1.0]], &[2]),
+        ];
+        let out = engine.execute("signature_apply", &inputs).unwrap();
+        assert_eq!(out[0].shape, vec![ENGINE_BATCH, 2, 2]);
+        // Fig 5 worked example, first row.
+        let row = out[0].row(0);
+        for (g, w) in row.iter().zip(&[0.65f32, 0.35, 0.30, 0.70]) {
+            assert!((g - w).abs() < 1e-6, "{row:?}");
+        }
+        // Malformed calls stay per-request errors.
+        assert!(engine.execute("frobnicate", &inputs).is_err());
+        assert!(engine.execute("signature_apply", &inputs[..2]).is_err());
+    }
+
+    #[test]
+    fn manifest_engine_loads_hlo_text_files_from_a_dir() {
+        // An on-disk manifest whose pipeline files hold emitted HLO
+        // text: the engine must read, parse, and execute them — the
+        // `aot.py` loading path, minus JAX.
+        let dir = std::env::temp_dir().join(format!(
+            "numabw-hlo-manifest-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let synth = Artifacts::synthesize_for_sockets(2);
+        let mut pipes = Vec::new();
+        for p in PIPELINES {
+            let meta = &synth.pipelines[p];
+            std::fs::write(dir.join(format!("{p}.hlo.txt")),
+                           meta.hlo_text.as_deref().unwrap())
+                .unwrap();
+            let shapes = |ss: &[Vec<usize>]| {
+                ss.iter()
+                    .map(|s| {
+                        format!(
+                            "[{}]",
+                            s.iter()
+                                .map(|d| d.to_string())
+                                .collect::<Vec<_>>()
+                                .join(",")
+                        )
+                    })
+                    .collect::<Vec<_>>()
+                    .join(",")
+            };
+            pipes.push(format!(
+                "\"{p}\": {{\"file\": \"{p}.hlo.txt\", \"args\": [{}], \
+                 \"results\": [{}]}}",
+                shapes(&meta.arg_shapes),
+                shapes(&meta.result_shapes)
+            ));
+        }
+        let manifest = format!(
+            "{{\"batch\": {ENGINE_BATCH}, \"sockets\": 2, \
+             \"n_flows\": 8, \"n_resources\": 8, \"incidence\": [[1]], \
+             \"pipelines\": {{{}}}}}",
+            pipes.join(", ")
+        );
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let engine = Engine::cpu(Artifacts::load(&dir).unwrap()).unwrap();
+        // Fixed-shape mode: sockets pinned, 6-arg fit detected.
+        assert_eq!(ExecutionBackend::sockets(&engine), Some(2));
+        assert!(engine.fit_takes_sym_threads());
+        engine.warmup().unwrap();
+        let b = Batch::new(1, ENGINE_BATCH);
+        let inputs = vec![
+            b.pack(&[vec![0.2, 0.35, 0.3]], &[3]),
+            b.pack(&[vec![0.0, 1.0]], &[2]),
+            b.pack(&[vec![3.0, 1.0]], &[2]),
+        ];
+        let out = engine.execute("signature_apply", &inputs).unwrap();
+        assert_eq!(out[0].shape, vec![ENGINE_BATCH, 2, 2]);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

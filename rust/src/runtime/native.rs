@@ -74,8 +74,10 @@ impl NativeEngine {
 
     /// The socket count a pipeline call is for, read off the submitted
     /// tensor shapes (`fit_signature`: `sym_counts [B, S, 2]`; all other
-    /// pipelines: second input `[B, S]`).
-    fn derive_sockets(name: &str, inputs: &[Tensor]) -> Result<usize> {
+    /// pipelines: second input `[B, S]`).  Shared with the synthesized
+    /// `hlo` engine, which derives its per-S modules the same way.
+    pub(crate) fn derive_sockets(name: &str, inputs: &[Tensor])
+        -> Result<usize> {
         let idx = match name {
             "fit_signature" => 0,
             "signature_apply" | "predict_counters"

@@ -17,7 +17,7 @@
 //!   machine+seed guarded)         flush via runtime::BatchWindow)
 //!        │                                │
 //!        └────────► PredictionService ◄───┘
-//!              (ExecutionBackend dispatch: reference | native | PJRT;
+//!              (ExecutionBackend dispatch: reference | native | hlo;
 //!               shared LRU memo caches, CacheStats)
 //! ```
 //!

@@ -315,7 +315,7 @@ impl ServeContext {
         })
     }
 
-    /// A fixed-shape backend (the compiled 2-socket PJRT artifacts) can
+    /// A fixed-shape backend (an AOT-compiled 2-socket manifest) can
     /// only take its own socket count.  Reject mismatched queries
     /// per-request *before* they join a coalesced batch: once batched,
     /// the engine's shape error would fan out to every rider in the

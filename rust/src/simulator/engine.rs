@@ -165,11 +165,7 @@ impl Simulator {
         // fitted signatures stay machine-stable (Fig 14), while evaluation
         // sweeps at other occupancies pick up genuine model error.
         let n_total = placement.total() as f64;
-        let imbalance = if s == 2 && n_total > 0.0 {
-            (tps[0] as f64 - tps[1] as f64) / n_total
-        } else {
-            0.0
-        };
+        let imbalance = placement_imbalance(tps);
         // Blending toward a uniform spread barely moves mixtures that are
         // already interleave-heavy, so the drift always pulls toward the
         // thread's own bank ("more threads per socket → more of the
@@ -427,6 +423,35 @@ impl Simulator {
     }
 }
 
+/// §6.2.1 signed placement-imbalance measure, socket-count-generic: the
+/// mean signed pairwise thread-count difference over ordered socket
+/// pairs, normalized by total threads —
+///
+/// ```text
+///   imbalance = Σ_{i<j} (tps[i] - tps[j]) / (n_total * (S - 1))
+/// ```
+///
+/// For S = 2 this is exactly the historical `(tps[0] - tps[1]) / n`
+/// (one pair, denominator `n * 1`), so 2-socket simulations are
+/// bit-identical to the pre-generalisation drift.  For S > 2 it is
+/// nonzero for asymmetric placements — the regression the old
+/// `if s == 2 { ... } else { 0.0 }` form silently zeroed, flattening
+/// quad4's Fig-17-style error floor.
+pub fn placement_imbalance(tps: &[usize]) -> f64 {
+    let s = tps.len();
+    let n_total: usize = tps.iter().sum();
+    if s < 2 || n_total == 0 {
+        return 0.0;
+    }
+    let mut sum = 0.0f64;
+    for i in 0..s {
+        for j in (i + 1)..s {
+            sum += tps[i] as f64 - tps[j] as f64;
+        }
+    }
+    sum / (n_total as f64 * (s - 1) as f64)
+}
+
 fn hash_str(s: &str) -> u64 {
     // FNV-1a.
     let mut h = 0xcbf2_9ce4_8422_2325u64;
@@ -611,6 +636,68 @@ mod tests {
         let b0 = |r: &RunResult| r.run.counters.banks[0].total();
         assert!(b0(&skewed) > b0(&uniform) * 1.3,
                 "hot head should concentrate on bank 0");
+    }
+
+    #[test]
+    fn imbalance_is_byte_identical_to_the_two_socket_formula() {
+        // The S-generic measure must not move any 2-socket bit: the
+        // drift term feeds seeded, bit-reproducible counter streams.
+        for t0 in 0..=8usize {
+            for t1 in 0..=8usize {
+                if t0 + t1 == 0 {
+                    continue;
+                }
+                let old = (t0 as f64 - t1 as f64) / (t0 + t1) as f64;
+                let new = placement_imbalance(&[t0, t1]);
+                assert_eq!(old.to_bits(), new.to_bits(), "({t0},{t1})");
+            }
+        }
+        assert_eq!(placement_imbalance(&[0, 0]), 0.0);
+    }
+
+    #[test]
+    fn imbalance_is_nonzero_for_asymmetric_quad_placements() {
+        // Regression for the `if s == 2 { ... } else { 0.0 }` bug: on
+        // S > 2 machines asymmetric placements must register drift.
+        assert_eq!(placement_imbalance(&[4, 4, 4, 4]), 0.0);
+        let skew = placement_imbalance(&[8, 4, 2, 2]);
+        assert!(skew > 0.0, "{skew}");
+        // Mirrored skew flips sign (signed measure, like 2-socket).
+        let anti = placement_imbalance(&[2, 2, 4, 8]);
+        assert!((skew + anti).abs() < 1e-15, "{skew} vs {anti}");
+        // Normalization keeps it in [-1, 1].
+        assert!(placement_imbalance(&[8, 0, 0, 0]) <= 1.0);
+    }
+
+    #[test]
+    fn quad_socket_drift_shifts_counters_under_asymmetric_placements() {
+        // End-to-end regression: on quad4, a drift-prone workload under
+        // an asymmetric placement at EXACTLY the anchor occupancy (3/4
+        // of the cores — the count term is zero) must still drift,
+        // i.e. its counters must differ from the drift-free run.  With
+        // the old S==2-only imbalance the two runs were bit-identical
+        // and quad simulations lost all placement-dependent drift.
+        let quad = MachineTopology::synthetic_quad();
+        let sim = Simulator::new(quad, SimConfig::noiseless());
+        let p = ThreadPlacement::new(vec![8, 8, 6, 2]); // 24/32 = 0.75
+        let mut w = streaming(Mixture::pure_interleave(), 1.0, 1.0 * GB);
+        let base = sim.run(&w, &p);
+        w.placement_drift = 0.5;
+        let drifted = sim.run(&w, &p);
+        assert_ne!(base.run.counters, drifted.run.counters,
+                   "imbalance drift must engage on S > 2");
+        // Drift pulls toward each thread's own bank: local read traffic
+        // strictly grows on the most-loaded socket's bank.
+        let local = |r: &RunResult| r.run.counters.banks[0].local_read;
+        assert!(local(&drifted) > local(&base),
+                "{} vs {}", local(&drifted), local(&base));
+        // The symmetric placement stays drift-free at the anchor
+        // occupancy (imbalance 0, occupancy exactly 0.75).
+        let sym = ThreadPlacement::new(vec![6, 6, 6, 6]);
+        let a = sim.run(&w, &sym);
+        w.placement_drift = 0.0;
+        let b = sim.run(&w, &sym);
+        assert_eq!(a.run.counters, b.run.counters);
     }
 
     #[test]

@@ -15,6 +15,6 @@ pub mod latency;
 pub mod noise;
 pub mod placement;
 
-pub use engine::{RunResult, SimConfig, Simulator};
+pub use engine::{placement_imbalance, RunResult, SimConfig, Simulator};
 pub use noise::NoiseConfig;
 pub use placement::{MemoryPolicy, PageAllocator, ThreadPlacement};

@@ -221,6 +221,17 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Four hex digits starting at byte `start` (the `\uXXXX` payload).
+    fn hex4(&self, start: usize) -> Result<u32, JsonError> {
+        if start + 4 > self.bytes.len() {
+            return Err(self.err("bad \\u escape"));
+        }
+        let hex = std::str::from_utf8(&self.bytes[start..start + 4])
+            .map_err(|_| self.err("bad \\u escape"))?;
+        u32::from_str_radix(hex, 16)
+            .map_err(|_| self.err("bad \\u escape"))
+    }
+
     fn expect(&mut self, b: u8) -> Result<(), JsonError> {
         if self.peek() == Some(b) {
             self.pos += 1;
@@ -307,22 +318,45 @@ impl<'a> Parser<'a> {
                         Some(b'b') => out.push('\u{8}'),
                         Some(b'f') => out.push('\u{c}'),
                         Some(b'u') => {
-                            if self.pos + 5 > self.bytes.len() {
-                                return Err(self.err("bad \\u escape"));
-                            }
-                            let hex = std::str::from_utf8(
-                                &self.bytes[self.pos + 1..self.pos + 5],
-                            )
-                            .map_err(|_| self.err("bad \\u escape"))?;
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            // Surrogate pairs are rejected (not needed for
-                            // our config payloads).
+                            let hi = self.hex4(self.pos + 1)?;
+                            self.pos += 4;
+                            let cp = if (0xD800..0xDC00).contains(&hi) {
+                                // High surrogate: a valid escaped
+                                // UTF-16 pair (e.g. \ud83d\ude00 =
+                                // U+1F600) decodes to one scalar;
+                                // anything else is malformed.
+                                if self.bytes.get(self.pos + 1)
+                                    != Some(&b'\\')
+                                    || self.bytes.get(self.pos + 2)
+                                        != Some(&b'u')
+                                {
+                                    return Err(self.err(
+                                        "lone high surrogate (expected \
+                                         \\u low surrogate)",
+                                    ));
+                                }
+                                let lo = self.hex4(self.pos + 3)?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    return Err(self.err(
+                                        "invalid low surrogate in \\u \
+                                         pair",
+                                    ));
+                                }
+                                self.pos += 6;
+                                0x10000
+                                    + ((hi - 0xD800) << 10)
+                                    + (lo - 0xDC00)
+                            } else if (0xDC00..0xE000).contains(&hi) {
+                                return Err(
+                                    self.err("lone low surrogate")
+                                );
+                            } else {
+                                hi
+                            };
                             out.push(
                                 char::from_u32(cp)
                                     .ok_or_else(|| self.err("bad codepoint"))?,
                             );
-                            self.pos += 4;
                         }
                         _ => return Err(self.err("bad escape")),
                     }
@@ -476,6 +510,55 @@ mod tests {
                 Json::Obj(m)
             }
         }
+    }
+
+    #[test]
+    fn decodes_utf16_surrogate_pairs() {
+        // Regression: a client payload carrying an escaped non-BMP
+        // scalar (e.g. an emoji in a workload name) was a per-request
+        // "bad codepoint" error.
+        let v = Json::parse(r#""\ud83d\ude00""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "\u{1F600}");
+        // Pair inside surrounding text, and BMP escapes unaffected.
+        let v = Json::parse(r#""a\ud83d\ude00b\u00e9""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "a\u{1F600}b\u{e9}");
+        // Lowest/highest representable pairs.
+        let v = Json::parse(r#""\ud800\udc00 \udbff\udfff""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "\u{10000} \u{10FFFF}");
+    }
+
+    #[test]
+    fn rejects_lone_and_malformed_surrogates() {
+        for bad in [
+            r#""\ud83d""#,            // lone high at end of string
+            r#""\ud83dx""#,           // high followed by a raw char
+            r#""\ud83d\n""#,          // high followed by another escape
+            r#""\ud83d\u0041""#,      // high + a non-surrogate escape
+            r#""\ude00""#,            // lone low
+            r#""\ud83d\ud83d""#,      // high followed by another high
+        ] {
+            let err = Json::parse(bad).unwrap_err();
+            assert!(format!("{err}").contains("surrogate"),
+                    "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn surrogate_pair_roundtrips_through_encode() {
+        // Encode writes raw UTF-8 for printable scalars; the decoder
+        // must accept both the raw and the escaped spelling and agree.
+        let v = Json::Str("numa \u{1F600}\u{10FFFF} bw".to_string());
+        let encoded = v.encode();
+        assert_eq!(Json::parse(&encoded).unwrap(), v);
+        let mut obj = Json::obj();
+        obj.set("name", v.clone());
+        let back = Json::parse(&obj.encode()).unwrap();
+        assert_eq!(back.get("name"), Some(&v));
+        // Escaped spelling decodes to the same value the raw round-trip
+        // produced.
+        let escaped =
+            r#"{"name":"numa \ud83d\ude00\udbff\udfff bw"}"#;
+        assert_eq!(Json::parse(escaped).unwrap().get("name"), Some(&v));
     }
 
     #[test]

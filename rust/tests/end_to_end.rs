@@ -13,10 +13,12 @@ use numabw::topology::MachineTopology;
 use numabw::workloads::suite;
 
 fn service() -> PredictionService {
-    // Prefer the HLO backend when artifacts exist (CI runs after
-    // `make artifacts`); otherwise the reference backend keeps the test
-    // meaningful.
-    match numabw::runtime::Engine::from_env() {
+    // Prefer the HLO backend when compiled artifacts exist (CI runs
+    // after `make artifacts`); otherwise the reference backend keeps the
+    // test meaningful.  (The synthesized interpreter engine is covered
+    // by `tests/engine_parity.rs`; the f64 reference keeps this suite's
+    // error-statistics thresholds sharp.)
+    match numabw::runtime::Engine::from_manifest() {
         Ok(e) => PredictionService::hlo(e),
         Err(_) => PredictionService::reference(),
     }

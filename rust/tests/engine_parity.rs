@@ -1,19 +1,22 @@
-//! Integration: the native batched f32 engine must agree with the f64
-//! Rust reference model — the load-bearing test of the pluggable-backend
+//! Integration: every batched engine must agree with the f64 Rust
+//! reference model — the load-bearing test of the pluggable-backend
 //! architecture.  Unlike its predecessor (`hlo_parity.rs`, which
 //! self-skipped whenever the PJRT artifacts were absent), this suite
-//! **always runs**: the native engine needs no `make artifacts` step, its
-//! manifest is synthesized in memory.
+//! **always runs**, and it now runs TWICE per scenario: once for the
+//! native batched f32 engine and once for the `hlo` backend (the in-repo
+//! HLO-text interpreter over synthesized per-S modules — no
+//! `make artifacts` step for either).
 //!
 //! Coverage: all four pipelines on both paper machines (S = 2) and the
 //! synthetic `quad4` machine (S = 4), plus mixed-S batches, advisor
-//! ranking equality, and a seeded randomized fuzz sweep.
+//! ranking equality, a seeded randomized fuzz sweep, and byte-exact
+//! golden fixtures for the emitted 2-socket HLO text.
 //!
 //! ## Tolerance contract (the documented f32 error budget)
 //!
-//! The native engine stores and computes in f32 (like the compiled Pallas
-//! artifacts); the reference model is f64.  Agreement is therefore pinned
-//! within:
+//! Both engines store and compute in f32 (like the compiled Pallas
+//! artifacts); the reference model is f64.  Agreement is therefore
+//! pinned within:
 //!
 //! * **fit fractions / misfit**: `1e-3` absolute (fractions live in
 //!   [0, 1]; the §5 pipeline divides normalized counters, costing a few
@@ -29,6 +32,10 @@
 //!   bound.  Placements inside one tolerance tie-group may permute —
 //!   there the ordering is defined by sub-tolerance noise in either
 //!   precision.
+//!
+//! The HLO interpreter emits modules that port the native engine's f32
+//! arithmetic op for op (see `runtime/hlo/emit.rs`), so one contract
+//! covers both backends.
 
 use std::collections::HashMap;
 
@@ -39,7 +46,9 @@ use numabw::counters::{Channel, CounterSnapshot, ProfiledRun};
 use numabw::model::apply;
 use numabw::model::signature::ChannelSignature;
 use numabw::prelude::*;
-use numabw::runtime::{Batch, ExecutionBackend, NativeEngine, ENGINE_BATCH};
+use numabw::runtime::{
+    Batch, Engine, ExecutionBackend, NativeEngine, ENGINE_BATCH, PIPELINES,
+};
 use numabw::util::rng::Rng;
 use numabw::workloads::suite;
 
@@ -51,6 +60,14 @@ const REL_PERF: f64 = 1e-3;
 const ABS_FIT: f64 = 1e-3;
 /// Relative tolerance on advisor scores (of the sweep's score scale).
 const REL_RANK: f64 = 1e-4;
+
+/// The two engine-backed services under test, by backend name.
+fn engines() -> Vec<(&'static str, PredictionService)> {
+    vec![
+        ("native", PredictionService::native()),
+        ("hlo", PredictionService::hlo(Engine::synthesized())),
+    ]
+}
 
 fn random_signature(rng: &mut Rng, sockets: usize) -> ChannelSignature {
     // static >= 0.05 keeps the §5.3 argmax well separated, so f32 vs f64
@@ -115,12 +132,12 @@ fn random_perf_query(rng: &mut Rng, machine: &MachineTopology)
     }
 }
 
-fn assert_counter_parity(machine: &MachineTopology,
-                         native: &[Vec<[f64; 2]>],
+fn assert_counter_parity(tag: &str, machine: &MachineTopology,
+                         engine: &[Vec<[f64; 2]>],
                          reference: &[Vec<[f64; 2]>],
                          queries: &[CounterQuery]) {
     for (i, ((n, r), q)) in
-        native.iter().zip(reference).zip(queries).enumerate()
+        engine.iter().zip(reference).zip(queries).enumerate()
     {
         let scale: f64 = q.cpu_totals.iter().sum::<f64>().max(1.0);
         for bank in 0..machine.sockets {
@@ -128,17 +145,18 @@ fn assert_counter_parity(machine: &MachineTopology,
                 let (nv, rv) = (n[bank][kind], r[bank][kind]);
                 let tol = REL_COUNTERS * rv.abs() + 1e-6 * scale;
                 assert!((nv - rv).abs() <= tol,
-                        "{}: query {i} bank {bank} kind {kind}: native \
-                         {nv} vs reference {rv}", machine.name);
+                        "{tag}/{}: query {i} bank {bank} kind {kind}: \
+                         engine {nv} vs reference {rv}", machine.name);
             }
         }
     }
 }
 
-fn assert_perf_parity(machine: &MachineTopology, native: &[Vec<f64>],
-                      reference: &[Vec<f64>], queries: &[PerfQuery]) {
+fn assert_perf_parity(tag: &str, machine: &MachineTopology,
+                      engine: &[Vec<f64>], reference: &[Vec<f64>],
+                      queries: &[PerfQuery]) {
     for (i, ((n, r), q)) in
-        native.iter().zip(reference).zip(queries).enumerate()
+        engine.iter().zip(reference).zip(queries).enumerate()
     {
         assert_eq!(n.len(), 2 * machine.sockets * machine.sockets);
         assert_eq!(n.len(), r.len());
@@ -146,21 +164,21 @@ fn assert_perf_parity(machine: &MachineTopology, native: &[Vec<f64>],
         for (f, (nv, rv)) in n.iter().zip(r).enumerate() {
             let tol = REL_PERF * rv.abs() + 1e-6 * scale;
             assert!((nv - rv).abs() <= tol,
-                    "{}: query {i} flow {f}: native {nv} vs reference \
-                     {rv}", machine.name);
+                    "{tag}/{}: query {i} flow {f}: engine {nv} vs \
+                     reference {rv}", machine.name);
         }
     }
 }
 
 /// Ranking-equality modulo f32 tie-groups — see the module docs.
-fn assert_ranking_parity(reference: &advisor::Advice,
-                         native: &advisor::Advice) {
-    assert_eq!(reference.ranked.len(), native.ranked.len(),
-               "both backends must score every placement");
+fn assert_ranking_parity(tag: &str, reference: &advisor::Advice,
+                         engine: &advisor::Advice) {
+    assert_eq!(reference.ranked.len(), engine.ranked.len(),
+               "{tag}: both backends must score every placement");
     let key = |s: &advisor::PlacementScore| -> Vec<usize> {
         s.placement.threads_per_socket.clone()
     };
-    let native_by_placement: HashMap<Vec<usize>, (usize, f64)> = native
+    let engine_by_placement: HashMap<Vec<usize>, (usize, f64)> = engine
         .ranked
         .iter()
         .enumerate()
@@ -174,13 +192,13 @@ fn assert_ranking_parity(reference: &advisor::Advice,
     let tol = REL_RANK * scale;
     // Same placement set; per-placement score and headroom agreement.
     for s in &reference.ranked {
-        let (_, nv) = native_by_placement
+        let (_, nv) = engine_by_placement
             .get(&key(s))
-            .expect("native ranking must contain every placement");
+            .expect("engine ranking must contain every placement");
         assert!((nv - s.predicted_bw).abs() <= tol,
-                "score drift beyond the f32 budget for {:?}: native {nv} \
-                 vs reference {}", s.placement.threads_per_socket,
-                s.predicted_bw);
+                "{tag}: score drift beyond the f32 budget for {:?}: \
+                 engine {nv} vs reference {}",
+                s.placement.threads_per_socket, s.predicted_bw);
     }
     // Identical order wherever the reference separates scores by more
     // than twice the per-score budget (inside that band the order is
@@ -189,10 +207,10 @@ fn assert_ranking_parity(reference: &advisor::Advice,
         for j in (i + 1)..reference.ranked.len() {
             let (a, b) = (&reference.ranked[i], &reference.ranked[j]);
             if a.predicted_bw - b.predicted_bw > 2.0 * tol {
-                let (pa, _) = native_by_placement[&key(a)];
-                let (pb, _) = native_by_placement[&key(b)];
+                let (pa, _) = engine_by_placement[&key(a)];
+                let (pb, _) = engine_by_placement[&key(b)];
                 assert!(pa < pb,
-                        "native ranks {:?} below {:?} despite a \
+                        "{tag}: engine ranks {:?} below {:?} despite a \
                          {:.3e}-wide reference gap",
                         a.placement.threads_per_socket,
                         b.placement.threads_per_socket,
@@ -200,8 +218,8 @@ fn assert_ranking_parity(reference: &advisor::Advice,
             }
         }
     }
-    // The native best must sit in the reference's top tie-group.
-    let best = &native.ranked[0];
+    // The engine best must sit in the reference's top tie-group.
+    let best = &engine.ranked[0];
     let ref_of_best = reference
         .ranked
         .iter()
@@ -209,11 +227,12 @@ fn assert_ranking_parity(reference: &advisor::Advice,
         .unwrap();
     assert!(ref_of_best.predicted_bw
                 >= reference.ranked[0].predicted_bw - 2.0 * tol,
-            "native best {:?} is outside the reference top tie-group",
+            "{tag}: engine best {:?} is outside the reference top \
+             tie-group",
             best.placement.threads_per_socket);
 }
 
-// ---- engine surface --------------------------------------------------------
+// ---- engine surfaces -------------------------------------------------------
 
 #[test]
 fn native_engine_is_socket_generic_and_warm() {
@@ -233,59 +252,104 @@ fn native_engine_is_socket_generic_and_warm() {
 }
 
 #[test]
+fn hlo_engine_is_socket_generic_and_warm() {
+    let engine = Engine::synthesized();
+    assert_eq!(ExecutionBackend::name(&engine), "hlo");
+    assert_eq!(ExecutionBackend::batch(&engine), ENGINE_BATCH);
+    assert_eq!(ExecutionBackend::sockets(&engine), None,
+               "synthesized modules are emitted per call");
+    assert!(engine.fit_takes_sym_threads());
+    engine.warmup().expect("module emission+parse never fails");
+
+    let svc = PredictionService::hlo(Engine::synthesized());
+    assert!(svc.is_engine());
+    assert_eq!(svc.backend_name(), "hlo");
+    assert_eq!(svc.supported_sockets(), None);
+    assert_eq!(svc.batch_hint(), ENGINE_BATCH);
+}
+
+#[test]
+fn emitted_two_socket_hlo_text_matches_the_checked_in_goldens() {
+    // The golden fixtures pin the emitter byte for byte: any arithmetic
+    // reordering, renamed instruction, or formatting change in the
+    // emitted modules shows up as a diff here, not as silent numeric
+    // drift.  Regenerate with
+    // `cargo run --example dump_hlo` equivalents — or simply update the
+    // fixture to the newly asserted text after review.
+    for p in PIPELINES {
+        let path = format!(
+            "{}/rust/tests/data/hlo/{p}.s2.hlo.txt",
+            env!("CARGO_MANIFEST_DIR")
+        );
+        let want = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("{path}: {e}"));
+        let got = numabw::runtime::hlo::emit::pipeline_text(p, 2);
+        assert!(got == want,
+                "{p}: emitted 2-socket HLO text drifted from the golden \
+                 fixture {path}");
+    }
+}
+
+#[test]
 fn signature_apply_pipeline_matches_reference_on_every_machine() {
-    let engine = NativeEngine::new();
     let mut rng = Rng::new(0xA11);
-    for machine in MachineTopology::builtin_machines() {
-        let s = machine.sockets;
-        let queries: Vec<CounterQuery> = (0..40)
-            .map(|_| random_counter_query(&mut rng, &machine))
-            .collect();
-        let b = Batch::new(queries.len(), ENGINE_BATCH);
-        let inputs = vec![
-            b.pack(
-                &queries
-                    .iter()
-                    .map(|q| {
-                        vec![
-                            q.sig.static_frac as f32,
-                            q.sig.local_frac as f32,
-                            q.sig.perthread_frac as f32,
-                        ]
-                    })
-                    .collect::<Vec<_>>(),
-                &[3],
-            ),
-            b.pack(
-                &queries
-                    .iter()
-                    .map(|q| {
-                        let mut v = vec![0.0f32; s];
-                        v[q.sig.static_socket] = 1.0;
-                        v
-                    })
-                    .collect::<Vec<_>>(),
-                &[s],
-            ),
-            b.pack(
-                &queries
-                    .iter()
-                    .map(|q| {
-                        q.threads.iter().map(|&t| t as f32).collect()
-                    })
-                    .collect::<Vec<_>>(),
-                &[s],
-            ),
-        ];
-        let out = engine.execute("signature_apply", &inputs).unwrap();
-        assert_eq!(out[0].shape, vec![ENGINE_BATCH, s, s]);
-        for (row, q) in b.unpack(&out[0]).iter().zip(&queries) {
-            let want = apply::apply(&q.sig, &q.threads);
-            for r in 0..s {
-                for c in 0..s {
-                    assert!((row[r * s + c] as f64 - want[r][c]).abs()
-                                < 1e-5,
-                            "{}: m[{r}][{c}]", machine.name);
+    let backends: Vec<(&str, Box<dyn ExecutionBackend>)> = vec![
+        ("native", Box::new(NativeEngine::new())),
+        ("hlo", Box::new(Engine::synthesized())),
+    ];
+    for (tag, engine) in backends {
+        for machine in MachineTopology::builtin_machines() {
+            let s = machine.sockets;
+            let queries: Vec<CounterQuery> = (0..40)
+                .map(|_| random_counter_query(&mut rng, &machine))
+                .collect();
+            let b = Batch::new(queries.len(), ENGINE_BATCH);
+            let inputs = vec![
+                b.pack(
+                    &queries
+                        .iter()
+                        .map(|q| {
+                            vec![
+                                q.sig.static_frac as f32,
+                                q.sig.local_frac as f32,
+                                q.sig.perthread_frac as f32,
+                            ]
+                        })
+                        .collect::<Vec<_>>(),
+                    &[3],
+                ),
+                b.pack(
+                    &queries
+                        .iter()
+                        .map(|q| {
+                            let mut v = vec![0.0f32; s];
+                            v[q.sig.static_socket] = 1.0;
+                            v
+                        })
+                        .collect::<Vec<_>>(),
+                    &[s],
+                ),
+                b.pack(
+                    &queries
+                        .iter()
+                        .map(|q| {
+                            q.threads.iter().map(|&t| t as f32).collect()
+                        })
+                        .collect::<Vec<_>>(),
+                    &[s],
+                ),
+            ];
+            let out = engine.execute("signature_apply", &inputs).unwrap();
+            assert_eq!(out[0].shape, vec![ENGINE_BATCH, s, s]);
+            for (row, q) in b.unpack(&out[0]).iter().zip(&queries) {
+                let want = apply::apply(&q.sig, &q.threads);
+                for r in 0..s {
+                    for c in 0..s {
+                        assert!((row[r * s + c] as f64 - want[r][c])
+                                    .abs()
+                                    < 1e-5,
+                                "{tag}/{}: m[{r}][{c}]", machine.name);
+                    }
                 }
             }
         }
@@ -301,14 +365,16 @@ fn fit_matches_reference_on_the_worked_example() {
         sym: run_for(&truth, &[2, 2], 1e9),
         asym: run_for(&truth, &[3, 1], 1e9),
     };
-    let native = PredictionService::native();
-    let sig = &native.fit(std::slice::from_ref(&req)).unwrap()[0];
-    // The paper's published worked-example values.
-    assert!((sig.read.static_frac - 0.2).abs() < 1e-4, "{sig:?}");
-    assert!((sig.read.local_frac - 0.35).abs() < 1e-4);
-    assert!((sig.read.perthread_frac - 0.3).abs() < 1e-4);
-    assert_eq!(sig.read.static_socket, 1);
-    assert!(sig.read.misfit < 1e-4);
+    for (tag, svc) in engines() {
+        let sig = &svc.fit(std::slice::from_ref(&req)).unwrap()[0];
+        // The paper's published worked-example values.
+        assert!((sig.read.static_frac - 0.2).abs() < 1e-4,
+                "{tag}: {sig:?}");
+        assert!((sig.read.local_frac - 0.35).abs() < 1e-4, "{tag}");
+        assert!((sig.read.perthread_frac - 0.3).abs() < 1e-4, "{tag}");
+        assert_eq!(sig.read.static_socket, 1, "{tag}");
+        assert!(sig.read.misfit < 1e-4, "{tag}");
+    }
 }
 
 #[test]
@@ -324,31 +390,35 @@ fn fit_matches_reference_on_random_batches_across_batch_boundaries() {
             }
         })
         .collect();
-    let native = PredictionService::native();
     let reference = PredictionService::reference();
-    let got = native.fit(&reqs).unwrap();
     let want = reference.fit(&reqs).unwrap();
-    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
-        for (gc, wc) in [(g.read, w.read), (g.write, w.write),
-                         (g.combined, w.combined)] {
-            assert!((gc.static_frac - wc.static_frac).abs() < ABS_FIT,
-                    "req {i}: {gc:?} vs {wc:?}");
-            assert!((gc.local_frac - wc.local_frac).abs() < ABS_FIT);
-            assert!((gc.perthread_frac - wc.perthread_frac).abs()
-                    < ABS_FIT);
-            assert_eq!(gc.static_socket, wc.static_socket, "req {i}");
-            assert!((gc.misfit - wc.misfit).abs() < ABS_FIT);
+    for (tag, svc) in engines() {
+        let got = svc.fit(&reqs).unwrap();
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            for (gc, wc) in [(g.read, w.read), (g.write, w.write),
+                             (g.combined, w.combined)] {
+                assert!((gc.static_frac - wc.static_frac).abs() < ABS_FIT,
+                        "{tag} req {i}: {gc:?} vs {wc:?}");
+                assert!((gc.local_frac - wc.local_frac).abs() < ABS_FIT,
+                        "{tag}");
+                assert!((gc.perthread_frac - wc.perthread_frac).abs()
+                        < ABS_FIT, "{tag}");
+                assert_eq!(gc.static_socket, wc.static_socket,
+                           "{tag} req {i}");
+                assert!((gc.misfit - wc.misfit).abs() < ABS_FIT, "{tag}");
+            }
+            assert_eq!(g.read_bytes, w.read_bytes,
+                       "{tag}: byte volumes are exact");
+            assert_eq!(g.write_bytes, w.write_bytes, "{tag}");
         }
-        assert_eq!(g.read_bytes, w.read_bytes, "byte volumes are exact");
-        assert_eq!(g.write_bytes, w.write_bytes);
     }
 }
 
 #[test]
 fn fit_matches_the_multi_socket_reference_on_quad4() {
-    // S = 4 run pairs: the native engine must mirror the fit_multi
-    // dispatch the reference performs (the compiled 2-socket pipelines
-    // could never take these shapes).
+    // S = 4 run pairs: the engines must mirror the fit_multi dispatch
+    // the reference performs (the compiled 2-socket pipelines could
+    // never take these shapes).
     let mut rng = Rng::new(0xBEEF);
     let reqs: Vec<FitRequest> = (0..30)
         .map(|_| {
@@ -359,20 +429,23 @@ fn fit_matches_the_multi_socket_reference_on_quad4() {
             }
         })
         .collect();
-    let native = PredictionService::native();
     let reference = PredictionService::reference();
-    let got = native.fit(&reqs).unwrap();
     let want = reference.fit(&reqs).unwrap();
-    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
-        for (gc, wc) in [(g.read, w.read), (g.write, w.write),
-                         (g.combined, w.combined)] {
-            assert!((gc.static_frac - wc.static_frac).abs() < ABS_FIT,
-                    "req {i}: {gc:?} vs {wc:?}");
-            assert!((gc.local_frac - wc.local_frac).abs() < ABS_FIT);
-            assert!((gc.perthread_frac - wc.perthread_frac).abs()
-                    < ABS_FIT);
-            assert_eq!(gc.static_socket, wc.static_socket, "req {i}");
-            assert!((gc.misfit - wc.misfit).abs() < ABS_FIT);
+    for (tag, svc) in engines() {
+        let got = svc.fit(&reqs).unwrap();
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            for (gc, wc) in [(g.read, w.read), (g.write, w.write),
+                             (g.combined, w.combined)] {
+                assert!((gc.static_frac - wc.static_frac).abs() < ABS_FIT,
+                        "{tag} req {i}: {gc:?} vs {wc:?}");
+                assert!((gc.local_frac - wc.local_frac).abs() < ABS_FIT,
+                        "{tag}");
+                assert!((gc.perthread_frac - wc.perthread_frac).abs()
+                        < ABS_FIT, "{tag}");
+                assert_eq!(gc.static_socket, wc.static_socket,
+                           "{tag} req {i}");
+                assert!((gc.misfit - wc.misfit).abs() < ABS_FIT, "{tag}");
+            }
         }
     }
 }
@@ -381,31 +454,33 @@ fn fit_matches_the_multi_socket_reference_on_quad4() {
 
 #[test]
 fn counter_predictions_match_reference_on_every_machine() {
-    let native = PredictionService::native();
     let reference = PredictionService::reference();
     let mut rng = Rng::new(0xB1B1);
-    for machine in MachineTopology::builtin_machines() {
-        let queries: Vec<CounterQuery> = (0..100)
-            .map(|_| random_counter_query(&mut rng, &machine))
-            .collect();
-        let got = native.predict_counters(&queries).unwrap();
-        let want = reference.predict_counters(&queries).unwrap();
-        assert_counter_parity(&machine, &got, &want, &queries);
+    for (tag, svc) in engines() {
+        for machine in MachineTopology::builtin_machines() {
+            let queries: Vec<CounterQuery> = (0..100)
+                .map(|_| random_counter_query(&mut rng, &machine))
+                .collect();
+            let got = svc.predict_counters(&queries).unwrap();
+            let want = reference.predict_counters(&queries).unwrap();
+            assert_counter_parity(tag, &machine, &got, &want, &queries);
+        }
     }
 }
 
 #[test]
 fn performance_predictions_match_reference_on_every_machine() {
-    let native = PredictionService::native();
     let reference = PredictionService::reference();
     let mut rng = Rng::new(0xC2C2);
-    for machine in MachineTopology::builtin_machines() {
-        let queries: Vec<PerfQuery> = (0..80)
-            .map(|_| random_perf_query(&mut rng, &machine))
-            .collect();
-        let got = native.predict_performance(&queries).unwrap();
-        let want = reference.predict_performance(&queries).unwrap();
-        assert_perf_parity(&machine, &got, &want, &queries);
+    for (tag, svc) in engines() {
+        for machine in MachineTopology::builtin_machines() {
+            let queries: Vec<PerfQuery> = (0..80)
+                .map(|_| random_perf_query(&mut rng, &machine))
+                .collect();
+            let got = svc.predict_performance(&queries).unwrap();
+            let want = reference.predict_performance(&queries).unwrap();
+            assert_perf_parity(tag, &machine, &got, &want, &queries);
+        }
     }
 }
 
@@ -413,8 +488,8 @@ fn performance_predictions_match_reference_on_every_machine() {
 fn mixed_socket_batches_are_grouped_not_rejected() {
     // One stream interleaving 2- and 4-socket queries: the engine path
     // partitions by S (per-S tensor shapes) and reassembles results in
-    // request order.  The old HLO path rejected the whole batch.
-    let native = PredictionService::native();
+    // request order.  The old fixed-shape HLO path rejected the whole
+    // batch.
     let reference = PredictionService::reference();
     let machines = [
         MachineTopology::xeon_e5_2630_v3(),
@@ -422,35 +497,40 @@ fn mixed_socket_batches_are_grouped_not_rejected() {
         MachineTopology::xeon_e5_2699_v3(),
     ];
     let mut rng = Rng::new(0xD00D);
-    let queries: Vec<PerfQuery> = (0..150)
-        .map(|i| random_perf_query(&mut rng, &machines[i % 3]))
-        .collect();
-    let got = native.predict_performance(&queries).unwrap();
-    let want = reference.predict_performance(&queries).unwrap();
-    for (i, (n, r)) in got.iter().zip(&want).enumerate() {
-        let q = &queries[i];
-        assert_eq!(n.len(), 2 * q.sockets() * q.sockets(),
-                   "row {i} has the right flow count for its own S");
-        let scale = q.caps.iter().cloned().fold(1.0f64, f64::max);
-        for (nv, rv) in n.iter().zip(r) {
-            assert!((nv - rv).abs() <= REL_PERF * rv.abs() + 1e-6 * scale,
-                    "query {i}: {nv} vs {rv}");
+    for (tag, svc) in engines() {
+        let queries: Vec<PerfQuery> = (0..150)
+            .map(|i| random_perf_query(&mut rng, &machines[i % 3]))
+            .collect();
+        let got = svc.predict_performance(&queries).unwrap();
+        let want = reference.predict_performance(&queries).unwrap();
+        for (i, (n, r)) in got.iter().zip(&want).enumerate() {
+            let q = &queries[i];
+            assert_eq!(n.len(), 2 * q.sockets() * q.sockets(),
+                       "{tag}: row {i} has the right flow count for its \
+                        own S");
+            let scale = q.caps.iter().cloned().fold(1.0f64, f64::max);
+            for (nv, rv) in n.iter().zip(r) {
+                assert!((nv - rv).abs()
+                            <= REL_PERF * rv.abs() + 1e-6 * scale,
+                        "{tag}: query {i}: {nv} vs {rv}");
+            }
         }
-    }
-    // Counter path too.
-    let cqueries: Vec<CounterQuery> = (0..90)
-        .map(|i| random_counter_query(&mut rng, &machines[i % 3]))
-        .collect();
-    let got = native.serve_counters(&cqueries).unwrap();
-    let want = reference.predict_counters(&cqueries).unwrap();
-    for (i, (n, r)) in got.iter().zip(&want).enumerate() {
-        let q = &cqueries[i];
-        let scale: f64 = q.cpu_totals.iter().sum::<f64>().max(1.0);
-        for (nb, rb) in n.iter().zip(r) {
-            for k in 0..2 {
-                assert!((nb[k] - rb[k]).abs()
-                            <= REL_COUNTERS * rb[k].abs() + 1e-6 * scale,
-                        "query {i}");
+        // Counter path too.
+        let cqueries: Vec<CounterQuery> = (0..90)
+            .map(|i| random_counter_query(&mut rng, &machines[i % 3]))
+            .collect();
+        let got = svc.serve_counters(&cqueries).unwrap();
+        let want = reference.predict_counters(&cqueries).unwrap();
+        for (i, (n, r)) in got.iter().zip(&want).enumerate() {
+            let q = &cqueries[i];
+            let scale: f64 = q.cpu_totals.iter().sum::<f64>().max(1.0);
+            for (nb, rb) in n.iter().zip(r) {
+                for k in 0..2 {
+                    assert!((nb[k] - rb[k]).abs()
+                                <= REL_COUNTERS * rb[k].abs()
+                                    + 1e-6 * scale,
+                            "{tag}: query {i}");
+                }
             }
         }
     }
@@ -460,12 +540,11 @@ fn mixed_socket_batches_are_grouped_not_rejected() {
 
 #[test]
 fn advisor_rankings_agree_on_both_paper_machines_and_quad4() {
-    let native = PredictionService::native();
     let reference = PredictionService::reference();
     let w = suite::by_name("cg").unwrap();
     for machine in MachineTopology::builtin_machines() {
         // One shared signature (fitted once on the reference path) so
-        // the two sweeps differ only in the scoring backend.
+        // the sweeps differ only in the scoring backend.
         let sim = Simulator::new(machine.clone(), SimConfig::default());
         let pair = numabw::coordinator::profile(&sim, &w);
         let sig = reference
@@ -477,9 +556,11 @@ fn advisor_rankings_agree_on_both_paper_machines_and_quad4() {
         let ref_advice =
             advisor::advise(&reference, &machine, &w, &sig, total)
                 .unwrap();
-        let nat_advice =
-            advisor::advise(&native, &machine, &w, &sig, total).unwrap();
-        assert_ranking_parity(&ref_advice, &nat_advice);
+        for (tag, svc) in engines() {
+            let eng_advice =
+                advisor::advise(&svc, &machine, &w, &sig, total).unwrap();
+            assert_ranking_parity(tag, &ref_advice, &eng_advice);
+        }
     }
 }
 
@@ -487,41 +568,45 @@ fn advisor_rankings_agree_on_both_paper_machines_and_quad4() {
 
 #[test]
 fn fuzz_randomized_queries_agree_across_backends() {
-    // The satellite sweep: seeded random counter/perf streams over all
-    // three built-in machines, served through the *cached* native path
+    // The fuzz sweep: seeded random counter/perf streams over all three
+    // built-in machines, served through each engine's *cached* path
     // (serve_counters / serve_perf) against the per-query reference —
     // covering packing, grouping, batching, memoization, and the f32
-    // kernels in one pass.
-    let native = PredictionService::native();
+    // kernels (native loops and emitted HLO modules alike) in one pass.
     let reference = PredictionService::reference();
     let mut rng = Rng::new(0xF022);
-    for _round in 0..4 {
-        for machine in MachineTopology::builtin_machines() {
-            let counters: Vec<CounterQuery> = (0..64)
-                .map(|_| random_counter_query(&mut rng, &machine))
-                .collect();
-            let perfs: Vec<PerfQuery> = (0..64)
-                .map(|_| random_perf_query(&mut rng, &machine))
-                .collect();
-            let got = native.serve_counters(&counters).unwrap();
-            let want = reference.predict_counters(&counters).unwrap();
-            assert_counter_parity(&machine, &got, &want, &counters);
-            let got = native.serve_perf(&perfs).unwrap();
-            let want = reference.predict_performance(&perfs).unwrap();
-            assert_perf_parity(&machine, &got, &want, &perfs);
+    for (tag, svc) in engines() {
+        for _round in 0..2 {
+            for machine in MachineTopology::builtin_machines() {
+                let counters: Vec<CounterQuery> = (0..64)
+                    .map(|_| random_counter_query(&mut rng, &machine))
+                    .collect();
+                let perfs: Vec<PerfQuery> = (0..64)
+                    .map(|_| random_perf_query(&mut rng, &machine))
+                    .collect();
+                let got = svc.serve_counters(&counters).unwrap();
+                let want = reference.predict_counters(&counters).unwrap();
+                assert_counter_parity(tag, &machine, &got, &want,
+                                      &counters);
+                let got = svc.serve_perf(&perfs).unwrap();
+                let want =
+                    reference.predict_performance(&perfs).unwrap();
+                assert_perf_parity(tag, &machine, &got, &want, &perfs);
+            }
         }
+        // Repeats hit the service's memo caches without changing
+        // results (cached values are pure functions of their keys).
+        let machine = MachineTopology::synthetic_quad();
+        let perfs: Vec<PerfQuery> = (0..32)
+            .map(|_| random_perf_query(&mut rng, &machine))
+            .collect();
+        let first = svc.serve_perf(&perfs).unwrap();
+        let hits_before = svc.cache_stats().perf.hits;
+        let second = svc.serve_perf(&perfs).unwrap();
+        assert_eq!(first, second,
+                   "{tag}: cache replay must be bit-stable");
+        assert!(svc.cache_stats().perf.hits >= hits_before + 32, "{tag}");
     }
-    // Repeats hit the native service's memo caches without changing
-    // results (cached values are pure functions of their keys).
-    let machine = MachineTopology::synthetic_quad();
-    let perfs: Vec<PerfQuery> = (0..32)
-        .map(|_| random_perf_query(&mut rng, &machine))
-        .collect();
-    let first = native.serve_perf(&perfs).unwrap();
-    let hits_before = native.cache_stats().perf.hits;
-    let second = native.serve_perf(&perfs).unwrap();
-    assert_eq!(first, second, "cache replay must be bit-stable");
-    assert!(native.cache_stats().perf.hits >= hits_before + 32);
 }
 
 #[test]
@@ -529,12 +614,11 @@ fn fuzz_advisor_rankings_with_random_signatures() {
     // Ranking equality under handmade random (but well-formed)
     // signatures, machines × signatures seeded — the advisor analogue of
     // the query fuzz above.
-    let native = PredictionService::native();
     let reference = PredictionService::reference();
     let w = suite::by_name("ft").unwrap();
     let mut rng = Rng::new(0xFACE);
     for machine in MachineTopology::builtin_machines() {
-        for _ in 0..3 {
+        for _ in 0..2 {
             let ch = random_signature(&mut rng, machine.sockets);
             let sig = numabw::model::signature::BandwidthSignature {
                 read: ch,
@@ -547,10 +631,12 @@ fn fuzz_advisor_rankings_with_random_signatures() {
             let ref_advice =
                 advisor::advise(&reference, &machine, &w, &sig, total)
                     .unwrap();
-            let nat_advice =
-                advisor::advise(&native, &machine, &w, &sig, total)
-                    .unwrap();
-            assert_ranking_parity(&ref_advice, &nat_advice);
+            for (tag, svc) in engines() {
+                let eng_advice =
+                    advisor::advise(&svc, &machine, &w, &sig, total)
+                        .unwrap();
+                assert_ranking_parity(tag, &ref_advice, &eng_advice);
+            }
         }
     }
 }
