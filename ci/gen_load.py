@@ -1,0 +1,48 @@
+#!/usr/bin/env python3
+"""Generate a JSONL load file for the serve daemon's telemetry CI step.
+
+Writes a mixed stream to the path given as argv[1]: many counters
+queries over a bounded placement set (so the matrix cache sees repeats),
+a few perf queries, an extended stats probe, and a final metrics op.
+"""
+import json
+import sys
+
+
+def main() -> None:
+    out = sys.argv[1] if len(sys.argv) > 1 else "/tmp/load.jsonl"
+    sig = {
+        "static": 0.25,
+        "local": 0.5,
+        "perthread": 0.125,
+        "static_socket": 1,
+        "misfit": 0,
+    }
+    caps = [44e9, 44e9, 30e9, 30e9, 7e9, 7e9, 6.9e9, 6.9e9]
+    lines = []
+    for i in range(200):
+        lines.append(json.dumps({
+            "id": i,
+            "op": "counters",
+            "sig": sig,
+            "threads": [1 + i % 8, 1 + (i * 3) % 8],
+            "cpu_totals": [4.0e9 + i, 2.0e9],
+        }))
+    for i in range(20):
+        lines.append(json.dumps({
+            "id": 1000 + i,
+            "op": "perf",
+            "sig": sig,
+            "threads": [1 + i % 8, 1 + i % 4],
+            "demand_pt": [2e9, 1e9],
+            "caps": caps,
+        }))
+    lines.append(json.dumps({"id": "s", "op": "stats", "extended": True}))
+    lines.append(json.dumps({"id": "m", "op": "metrics"}))
+    with open(out, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {len(lines)} requests to {out}")
+
+
+if __name__ == "__main__":
+    main()

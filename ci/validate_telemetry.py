@@ -1,0 +1,76 @@
+#!/usr/bin/env python3
+"""Validate the serve daemon's telemetry artifacts.
+
+Usage: validate_telemetry.py METRICS_JSON TRACE_JSON EXPECTED_REQUESTS
+
+Checks that both files parse as JSON, that the latency-histogram totals
+and connection counters agree with the observed reply count, that the
+per-flush queue-wait histogram agrees with the front-end's flush
+counters, and that the Chrome trace_event spans are well-nested on every
+thread.
+"""
+import json
+import sys
+
+
+def fail(msg: str) -> None:
+    sys.exit(f"validate_telemetry: FAIL: {msg}")
+
+
+def main() -> None:
+    metrics_path, trace_path, expected = (
+        sys.argv[1],
+        sys.argv[2],
+        int(sys.argv[3]),
+    )
+
+    with open(metrics_path) as f:
+        m = json.load(f)
+    lat = m["histograms"]["request_latency"]
+    total = sum(h["count"] for h in lat.values())
+    if total != expected:
+        fail(f"request_latency total {total} != {expected} replies")
+    if m["connections"]["requests"] != expected:
+        fail(f"connections.requests {m['connections']['requests']} != "
+             f"{expected}")
+    for name, h in lat.items():
+        bucket_sum = sum(count for _, count in h["buckets"])
+        if bucket_sum != h["count"]:
+            fail(f"{name}: bucket sum {bucket_sum} != count {h['count']}")
+    fe = m["frontend"]
+    flushes = (fe["flushes_size"] + fe["flushes_deadline"]
+               + fe["flushes_drain"])
+    queue_waits = m["histograms"]["queue_wait"]["count"]
+    if queue_waits != flushes:
+        fail(f"queue_wait count {queue_waits} != {flushes} flushes")
+
+    with open(trace_path) as f:
+        t = json.load(f)
+    if t.get("droppedEvents") != 0:
+        fail(f"trace dropped {t.get('droppedEvents')} events")
+    events = t["traceEvents"]
+    if not events:
+        fail("trace has no events")
+    by_tid = {}
+    for e in events:
+        if e["ph"] != "X":
+            fail(f"unexpected event phase {e['ph']!r}")
+        by_tid.setdefault(e["tid"], []).append((e["ts"], e["ts"] + e["dur"]))
+    for tid, spans in by_tid.items():
+        spans.sort(key=lambda s: s[0])  # stable: ties keep export order
+        stack = []
+        for start, end in spans:
+            while stack and start >= stack[-1]:
+                stack.pop()
+            if stack and end > stack[-1]:
+                fail(f"tid {tid}: span [{start}, {end}] crosses its "
+                     f"enclosing span's end {stack[-1]}")
+            stack.append(end)
+
+    print(f"telemetry ok: {expected} requests, {total} histogram records, "
+          f"{flushes} flushes, {len(events)} trace events on "
+          f"{len(by_tid)} threads")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,11 +16,144 @@ use numabw::model::signature::ChannelSignature;
 use numabw::model::{apply, fit};
 use numabw::prelude::*;
 use numabw::simulator::contention::{maxmin, Flow};
+use numabw::server::{FrontEnd, FrontEndConfig};
 use numabw::util::bench::{black_box, Harness};
+use numabw::util::json::Json;
 use numabw::util::rng::Rng;
 use numabw::workloads::suite;
 
+/// Open-loop serving load generator: `workers` client threads fire
+/// counter queries at a fixed aggregate arrival rate against one shared
+/// coalescing front-end, and each request's latency is measured from its
+/// *scheduled* arrival (not from when the worker got around to sending
+/// it), so queueing delay from an overloaded server shows up in the tail
+/// instead of silently throttling the offered load.  Exact quantiles over
+/// all recorded latencies (sorted, rank `ceil(q*n)`) are printed and
+/// written to `BENCH_serve.json` — the machine-readable perf trajectory
+/// CI records on every run.
+fn bench_serve_open_loop() {
+    use std::sync::{Arc, Barrier, Mutex};
+    use std::time::{Duration, Instant};
+
+    const WORKERS: usize = 4;
+    const RATE_QPS: f64 = 2_000.0;
+    const DURATION_S: f64 = 2.0;
+    let total = (RATE_QPS * DURATION_S) as usize;
+
+    println!(
+        "=== serve: open-loop load ({WORKERS} workers, \
+         {RATE_QPS:.0} qps offered, {DURATION_S:.0}s) ===\n"
+    );
+    let frontend = FrontEnd::start(
+        PredictionService::reference(),
+        FrontEndConfig {
+            batch_size: None,
+            window: Duration::from_micros(200),
+        },
+    );
+    let sig = ChannelSignature::new(0.2, 0.35, 0.3, 1);
+    // A bounded placement set with repeats — the advisor's production
+    // shape — so the matrix cache works like it would in the field.
+    let placements: Vec<Vec<usize>> = (0..19)
+        .map(|i| vec![i, 18 - i])
+        .filter(|t| t.iter().sum::<usize>() > 0)
+        .collect();
+
+    let barrier = Arc::new(Barrier::new(WORKERS + 1));
+    let latencies: Arc<Mutex<Vec<u64>>> =
+        Arc::new(Mutex::new(Vec::with_capacity(total)));
+    let mut handles = Vec::new();
+    for w in 0..WORKERS {
+        let client = frontend.client();
+        let barrier = barrier.clone();
+        let latencies = latencies.clone();
+        let placements = placements.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut local = Vec::with_capacity(total / WORKERS + 1);
+            barrier.wait();
+            let t0 = Instant::now();
+            // Worker w owns arrivals w, w+W, w+2W, ... of the shared
+            // schedule: request k is due at k/rate seconds after start.
+            let mut k = w;
+            while k < total {
+                let due = Duration::from_secs_f64(k as f64 / RATE_QPS);
+                while t0.elapsed() < due {
+                    std::thread::sleep(Duration::from_micros(50));
+                }
+                let scheduled = t0 + due;
+                let p = &placements[k % placements.len()];
+                client
+                    .counters(CounterQuery {
+                        sig,
+                        threads: p.clone(),
+                        cpu_totals: vec![1.0e9 + k as f64, 2.0e9],
+                    })
+                    .expect("serve bench query");
+                local.push(scheduled.elapsed().as_nanos() as u64);
+                k += WORKERS;
+            }
+            latencies.lock().unwrap().extend(local);
+        }));
+    }
+    barrier.wait();
+    let t0 = Instant::now();
+    for handle in handles {
+        handle.join().expect("serve bench worker");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let mut lat = Arc::try_unwrap(latencies)
+        .expect("workers joined")
+        .into_inner()
+        .unwrap();
+    lat.sort_unstable();
+    let n = lat.len();
+    assert_eq!(n, total, "every scheduled request must be answered");
+    let q = |q: f64| -> f64 {
+        let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+        lat[rank - 1] as f64 / 1e6
+    };
+    let (p50, p90, p99) = (q(0.50), q(0.90), q(0.99));
+    let max_ms = lat[n - 1] as f64 / 1e6;
+    let achieved_qps = n as f64 / wall;
+    let snap = frontend.metrics().snapshot();
+    frontend.shutdown();
+
+    println!(
+        "  {n} requests in {wall:.2}s -> {achieved_qps:.0} qps achieved\n\
+         \x20 latency (from scheduled arrival): p50 {p50:.3} ms, \
+         p90 {p90:.3} ms, p99 {p99:.3} ms, max {max_ms:.3} ms\n\
+         \x20 {} flushes, mean coalesced batch {:.1}\n",
+        snap.flushes(),
+        snap.mean_batch()
+    );
+    let record = Json::from_pairs([
+        ("bench", Json::Str("serve_open_loop".to_string())),
+        ("backend", Json::Str("rust-reference".to_string())),
+        ("workers", Json::from_u64(WORKERS as u64)),
+        ("arrival_rate_qps", Json::Num(RATE_QPS)),
+        ("duration_s", Json::Num(DURATION_S)),
+        ("requests", Json::from_u64(n as u64)),
+        ("achieved_qps", Json::Num(achieved_qps)),
+        ("p50_ms", Json::Num(p50)),
+        ("p90_ms", Json::Num(p90)),
+        ("p99_ms", Json::Num(p99)),
+        ("max_ms", Json::Num(max_ms)),
+        ("flushes", Json::from_u64(snap.flushes())),
+        ("mean_batch", Json::Num(snap.mean_batch())),
+    ]);
+    match std::fs::write("BENCH_serve.json", record.encode()) {
+        Ok(()) => println!("  wrote BENCH_serve.json\n"),
+        Err(e) => eprintln!("  could not write BENCH_serve.json: {e}"),
+    }
+}
+
 fn main() {
+    // `NUMABW_BENCH_ONLY=serve` runs just the serving load generator —
+    // the cheap, CI-friendly slice that records the perf trajectory.
+    if std::env::var("NUMABW_BENCH_ONLY").as_deref() == Ok("serve") {
+        bench_serve_open_loop();
+        return;
+    }
     println!("=== perf: hot paths per layer ===\n");
     let mut h = Harness::new("perf");
 
@@ -303,4 +436,8 @@ fn main() {
     println!("  -> {:.1}k eval points/s\n", points / r.summary.median / 1e3);
 
     h.report();
+    println!();
+
+    // ---- serving layer under open-loop load --------------------------------
+    bench_serve_open_loop();
 }

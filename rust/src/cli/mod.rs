@@ -59,6 +59,7 @@ pub fn main_with(args: Vec<String>) -> Result<()> {
         .and_then(|_| cmd_advise(&args)),
         Some("serve") => known(&[
             "listen", "store", "seed", "batch", "window-ms", "engine",
+            "trace-out", "metrics-dump",
         ])
         .and_then(|_| cmd_serve(&args)),
         Some("evaluate") => known(&["machine", "engine", "seed"])
@@ -96,15 +97,21 @@ USAGE: numabw <subcommand> [flags]
                                     --store, fit once into F and serve
                                     forever (seed-guarded)
   serve     [--listen A] [--store F] [--seed S] [--batch N]
-            [--window-ms W] [--engine E]
+            [--window-ms W] [--engine E] [--trace-out F]
+            [--metrics-dump F]
                                     line-delimited JSON daemon: ops
-                                    counters|perf|advise|stats through
-                                    the concurrent coalescing front-end
-                                    + model registry.  Default transport
-                                    is stdin/stdout; --listen serves TCP
-                                    (host:port) or a unix socket
-                                    (unix:/path), one thread per
-                                    connection into the same front-end
+                                    counters|perf|advise|stats|metrics
+                                    through the concurrent coalescing
+                                    front-end + model registry.  Default
+                                    transport is stdin/stdout; --listen
+                                    serves TCP (host:port) or a unix
+                                    socket (unix:/path), one thread per
+                                    connection into the same front-end.
+                                    --trace-out records request spans and
+                                    writes Chrome trace_event JSON at
+                                    shutdown (load into chrome://tracing);
+                                    --metrics-dump writes the full
+                                    histogram/counter state as JSON
   evaluate  [--machine M] [--engine E] [--seed S]   full §6.2.2 sweep
   quickstart                        tiny end-to-end demo
 
@@ -441,6 +448,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         window: std::time::Duration::from_micros(
             (args.get_f64("window-ms", 2.0) * 1000.0) as u64,
         ),
+        trace_out: args.get("trace-out").map(std::path::PathBuf::from),
+        metrics_dump: args
+            .get("metrics-dump")
+            .map(std::path::PathBuf::from),
     };
     if let Some(addr) = args.get("listen") {
         // Socket transports: TCP (`host:port`) or unix (`unix:/path`),

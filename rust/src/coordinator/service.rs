@@ -51,9 +51,12 @@ use anyhow::{anyhow, Result};
 use crate::counters::{Channel, ProfiledRun};
 use crate::model::signature::{BandwidthSignature, ChannelSignature};
 use crate::model::{apply, fit, fit_multi};
+use crate::obs::hist::HistFamily;
+use crate::obs::trace::Tracer;
 use crate::report;
 use crate::runtime::{
     batches, Batch, Engine, ExecutionBackend, NativeEngine, Tensor,
+    TimedBackend,
 };
 use crate::util::lru::{CacheCounters, Lru};
 
@@ -414,6 +417,25 @@ impl PredictionService {
     pub fn with_engine(engine: Box<dyn ExecutionBackend>)
         -> PredictionService {
         Self::with_backend(Backend::Engine(engine))
+    }
+
+    /// Wrap the engine backend (if any) in a [`TimedBackend`] so every
+    /// `execute` records its wall time into `hists` (keyed by pipeline)
+    /// and — when `tracer` is set — a `pipeline:*` trace span.  The
+    /// reference backend has no `execute` boundary to time and passes
+    /// through unchanged.
+    pub fn with_exec_observer(
+        mut self,
+        hists: Arc<HistFamily>,
+        tracer: Option<Arc<Tracer>>,
+    ) -> PredictionService {
+        self.backend = match self.backend {
+            Backend::Engine(engine) => Backend::Engine(Box::new(
+                TimedBackend::new(engine, hists, tracer),
+            )),
+            Backend::Reference => Backend::Reference,
+        };
+        self
     }
 
     /// Serve through the native batched f32 engine (any socket count, no

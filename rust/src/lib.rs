@@ -96,6 +96,24 @@
 //!   deterministic ranked recommendation — exposed as the `advise` CLI
 //!   subcommand (store-backed via `--store`) and
 //!   `examples/placement_advisor.rs`.
+//! * [`obs`] instruments the whole serve path, because the paper's first
+//!   stated use of the model is *performance debugging* and the serving
+//!   stack must be debuggable too.  [`obs::ServeObs`] bundles
+//!   deterministic lock-free log2-bucket latency histograms
+//!   ([`obs::hist`]: request end-to-end by op, per-flush queue wait,
+//!   engine execute by pipeline — recording is a couple of relaxed atomic
+//!   adds, always on), aggregate per-connection transport counters, and
+//!   opt-in request-scoped span tracing ([`obs::trace`]: client recv →
+//!   enqueue → flush → engine execute → reply, bounded per-thread rings,
+//!   Chrome `trace_event` export via `numabw serve --trace-out FILE`).
+//!   Engine execute timing attaches as a [`runtime::TimedBackend`]
+//!   decorator around any [`runtime::ExecutionBackend`].  The state is
+//!   exported three ways: the `metrics` protocol op (sorted-key JSON),
+//!   `--metrics-dump FILE` at shutdown, and a Prometheus-style text
+//!   exposition appended to the shutdown summary.  `benches/`
+//!   `perf_hotpaths.rs` closes the loop with an open-loop load generator
+//!   writing `BENCH_serve.json` (p50/p99/QPS), the recorded perf
+//!   trajectory CI extends on every run.
 //! * The whole serving path is **socket-count-generic** (paper §5.2):
 //!   queries carry length-S placements and the machine's full
 //!   `2S + 2S(S-1)` capacity vector, flows follow the
@@ -163,6 +181,7 @@
 #![allow(clippy::needless_range_loop)]
 
 pub mod counters;
+pub mod obs;
 pub mod topology;
 pub mod util;
 pub mod workloads;

@@ -1,0 +1,373 @@
+//! Lock-free log2-bucket latency histograms.
+//!
+//! A [`LatencyHistogram`] is 64 `AtomicU64` buckets plus an exact running
+//! sum and max.  Recording a value is one relaxed `fetch_add` into the
+//! bucket whose index is the bit length of the value (`bucket 0` holds the
+//! value 0, bucket `k >= 1` holds `2^(k-1) ..= 2^k - 1`, clamped at the
+//! top), one `fetch_add` into the sum, and one `fetch_max` — no locks, no
+//! allocation, wait-free on x86/ARM.  That makes the record path cheap
+//! enough to leave on unconditionally in the serve hot loop.
+//!
+//! Quantile extraction is deterministic: for quantile `q` over `n` recorded
+//! values the rank is `ceil(q * n)` (1-based, clamped to `[1, n]`), and the
+//! reported quantile is the inclusive `[lower, upper]` bound pair of the
+//! bucket holding the rank-th smallest value.  The true order statistic is
+//! mathematically guaranteed to lie inside that interval — the sorted-oracle
+//! test below checks exactly that on seeded xoshiro256** streams.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+/// Number of log2 buckets: bucket 0 plus one per possible bit length.
+pub const NUM_BUCKETS: usize = 64;
+
+/// Bucket index for a value: 0 for 0, otherwise its bit length, clamped so
+/// the top bucket absorbs everything from `2^62` up.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        ((64 - v.leading_zeros()) as usize).min(NUM_BUCKETS - 1)
+    }
+}
+
+/// Inclusive `[lower, upper]` value range covered by bucket `idx`.
+pub fn bucket_bounds(idx: usize) -> (u64, u64) {
+    match idx {
+        0 => (0, 0),
+        k if k < NUM_BUCKETS - 1 => (1u64 << (k - 1), (1u64 << k) - 1),
+        _ => (1u64 << (NUM_BUCKETS - 2), u64::MAX),
+    }
+}
+
+/// Lock-free histogram; all methods take `&self`.
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; NUM_BUCKETS],
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value (nanoseconds in all our uses, but unit-agnostic).
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Consistent-enough copy of the counters (individual loads are
+    /// relaxed; totals are exact once recording has quiesced).
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: std::array::from_fn(|i| {
+                self.buckets[i].load(Ordering::Relaxed)
+            }),
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-data copy of a histogram, with quantile extraction.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; NUM_BUCKETS],
+    pub sum: u64,
+    pub max: u64,
+}
+
+impl HistSnapshot {
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// `[lower, upper]` bounds of the bucket holding the rank-`ceil(q*n)`
+    /// order statistic; `None` when empty.
+    pub fn quantile_bounds(&self, q: f64) -> Option<(u64, u64)> {
+        let n = self.count();
+        if n == 0 {
+            return None;
+        }
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut cum = 0u64;
+        for (idx, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return Some(bucket_bounds(idx));
+            }
+        }
+        unreachable!("rank is clamped to the total count")
+    }
+
+    /// Point estimate for a quantile: the bucket's upper bound, clamped to
+    /// the exact observed max so reported quantiles never exceed it.
+    pub fn quantile(&self, q: f64) -> u64 {
+        self.quantile_bounds(q)
+            .map(|(_, hi)| hi.min(self.max))
+            .unwrap_or(0)
+    }
+
+    /// Deterministic JSON rendering: totals, quantile point estimates, and
+    /// the non-empty buckets as `[lower_bound, count]` pairs.
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(idx, &c)| {
+                Json::Arr(vec![
+                    Json::from_u64(bucket_bounds(idx).0),
+                    Json::from_u64(c),
+                ])
+            })
+            .collect();
+        Json::from_pairs([
+            ("buckets", Json::Arr(buckets)),
+            ("count", Json::from_u64(self.count())),
+            ("max_ns", Json::from_u64(self.max)),
+            ("p50_ns", Json::from_u64(self.quantile(0.50))),
+            ("p90_ns", Json::from_u64(self.quantile(0.90))),
+            ("p99_ns", Json::from_u64(self.quantile(0.99))),
+            ("sum_ns", Json::from_u64(self.sum)),
+        ])
+    }
+}
+
+/// A fixed set of named histograms (one per op, or one per pipeline).
+/// Names are `'static` so lookup is a linear scan over a handful of
+/// entries — no hashing on the record path.
+pub struct HistFamily {
+    names: &'static [&'static str],
+    hists: Vec<LatencyHistogram>,
+}
+
+impl HistFamily {
+    pub fn new(names: &'static [&'static str]) -> HistFamily {
+        HistFamily {
+            names,
+            hists: names.iter().map(|_| LatencyHistogram::new()).collect(),
+        }
+    }
+
+    pub fn names(&self) -> &'static [&'static str] {
+        self.names
+    }
+
+    pub fn get(&self, name: &str) -> Option<&LatencyHistogram> {
+        self.names
+            .iter()
+            .position(|n| *n == name)
+            .map(|i| &self.hists[i])
+    }
+
+    /// Record under `name`; values for unknown names are dropped (returns
+    /// whether the name was known).
+    #[inline]
+    pub fn record(&self, name: &str, v: u64) -> bool {
+        match self.get(name) {
+            Some(h) => {
+                h.record(v);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Sum of counts across all member histograms.
+    pub fn total_count(&self) -> u64 {
+        self.hists.iter().map(|h| h.snapshot().count()).sum()
+    }
+
+    /// `{name: histogram}` object, keys sorted by the JSON encoder.
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        for (name, hist) in self.names.iter().zip(&self.hists) {
+            obj.set(name, hist.snapshot().to_json());
+        }
+        obj
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&'static str, &LatencyHistogram)> {
+        self.names.iter().copied().zip(self.hists.iter())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    #[test]
+    fn bucket_boundaries_are_deterministic() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        for k in 1..=62usize {
+            // Bucket k covers exactly [2^(k-1), 2^k - 1].
+            assert_eq!(bucket_index(1u64 << (k - 1)), k, "lower edge of {k}");
+            assert_eq!(bucket_index((1u64 << k) - 1), k, "upper edge of {k}");
+            let (lo, hi) = bucket_bounds(k);
+            assert_eq!((lo, hi), (1u64 << (k - 1), (1u64 << k) - 1));
+        }
+        // The top bucket absorbs everything from 2^62 up.
+        assert_eq!(bucket_index(1u64 << 62), 63);
+        assert_eq!(bucket_index(u64::MAX), 63);
+        assert_eq!(bucket_bounds(63), (1u64 << 62, u64::MAX));
+        assert_eq!(bucket_bounds(0), (0, 0));
+    }
+
+    #[test]
+    fn every_value_lands_inside_its_bucket_bounds() {
+        let mut rng = Rng::new(7);
+        for _ in 0..10_000 {
+            let v = rng.next_u64();
+            let (lo, hi) = bucket_bounds(bucket_index(v));
+            assert!(lo <= v && v <= hi, "{v} outside [{lo}, {hi}]");
+        }
+    }
+
+    #[test]
+    fn quantiles_bracket_the_sorted_oracle() {
+        // Brute-force oracle on seeded xoshiro256** streams spanning many
+        // scales: the true order statistic at rank ceil(q*n) must fall
+        // inside the reported bucket bounds, and max must be exact.
+        for seed in [1u64, 42, 2024] {
+            let mut rng = Rng::new(seed);
+            let hist = LatencyHistogram::new();
+            let mut values = Vec::with_capacity(1000);
+            for i in 0..1000usize {
+                // Mix scales: small counts, microsecond-ish, and huge.
+                let v = match i % 3 {
+                    0 => rng.below(64),
+                    1 => 1_000 + rng.below(1 << 20),
+                    _ => rng.next_u64() >> (rng.below(40) as u32),
+                };
+                hist.record(v);
+                values.push(v);
+            }
+            values.sort_unstable();
+            let snap = hist.snapshot();
+            assert_eq!(snap.count(), 1000);
+            assert_eq!(snap.max, *values.last().unwrap(), "exact max");
+            assert_eq!(snap.sum,
+                       values.iter().fold(0u64, |a, &v| a.wrapping_add(v)));
+            for q in [0.01, 0.25, 0.50, 0.90, 0.99, 1.0] {
+                let rank = ((q * 1000.0).ceil() as usize).clamp(1, 1000);
+                let oracle = values[rank - 1];
+                let (lo, hi) = snap.quantile_bounds(q).unwrap();
+                assert!(
+                    lo <= oracle && oracle <= hi,
+                    "seed {seed} q {q}: oracle {oracle} outside [{lo}, {hi}]"
+                );
+                assert!(snap.quantile(q) <= snap.max);
+            }
+        }
+    }
+
+    #[test]
+    fn quantile_extraction_is_deterministic() {
+        // Same recorded multiset => byte-identical JSON, regardless of
+        // recording order.
+        let a = LatencyHistogram::new();
+        let b = LatencyHistogram::new();
+        let vals = [0u64, 1, 5, 5, 17, 300, 4096, 70_000];
+        for &v in &vals {
+            a.record(v);
+        }
+        for &v in vals.iter().rev() {
+            b.record(v);
+        }
+        assert_eq!(a.snapshot(), b.snapshot());
+        assert_eq!(a.snapshot().to_json().encode(),
+                   b.snapshot().to_json().encode());
+    }
+
+    #[test]
+    fn empty_histogram_renders_zeroes() {
+        let snap = LatencyHistogram::new().snapshot();
+        assert_eq!(snap.quantile_bounds(0.5), None);
+        assert_eq!(
+            snap.to_json().encode(),
+            "{\"buckets\":[],\"count\":0,\"max_ns\":0,\"p50_ns\":0,\
+             \"p90_ns\":0,\"p99_ns\":0,\"sum_ns\":0}"
+        );
+    }
+
+    #[test]
+    fn pinned_json_for_known_values() {
+        let h = LatencyHistogram::new();
+        for v in [0u64, 1, 2, 3, 1024] {
+            h.record(v);
+        }
+        // Buckets: 0 -> [0], 1 -> [1], 2 -> [2,3], 11 -> [1024].
+        // n=5: p50 rank 3 -> bucket 2 (upper 3), p90 rank 5 -> bucket 11
+        // (upper 2047, clamped to max 1024), p99 rank 5 -> same.
+        assert_eq!(
+            h.snapshot().to_json().encode(),
+            "{\"buckets\":[[0,1],[1,1],[2,2],[1024,1]],\"count\":5,\
+             \"max_ns\":1024,\"p50_ns\":3,\"p90_ns\":1024,\
+             \"p99_ns\":1024,\"sum_ns\":1030}"
+        );
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        const THREADS: u64 = 8;
+        const PER_THREAD: u64 = 10_000;
+        let hist = Arc::new(LatencyHistogram::new());
+        let handles: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let h = Arc::clone(&hist);
+                std::thread::spawn(move || {
+                    for i in 0..PER_THREAD {
+                        h.record(t * PER_THREAD + i);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let snap = hist.snapshot();
+        let n = THREADS * PER_THREAD;
+        assert_eq!(snap.count(), n);
+        assert_eq!(snap.max, n - 1);
+        assert_eq!(snap.sum, n * (n - 1) / 2);
+    }
+
+    #[test]
+    fn family_records_by_name_and_drops_unknown() {
+        let fam = HistFamily::new(&["alpha", "beta"]);
+        assert!(fam.record("alpha", 10));
+        assert!(fam.record("alpha", 20));
+        assert!(fam.record("beta", 5));
+        assert!(!fam.record("gamma", 1));
+        assert_eq!(fam.total_count(), 3);
+        assert_eq!(fam.get("alpha").unwrap().snapshot().count(), 2);
+        let json = fam.to_json();
+        assert_eq!(json.get("beta").unwrap().get("count"),
+                   Some(&Json::Num(1.0)));
+        assert!(json.get("gamma").is_none());
+    }
+}

@@ -1,0 +1,359 @@
+//! Serving observability: latency histograms, request tracing, and
+//! machine-readable metrics export.
+//!
+//! The paper's first stated use of the bandwidth model is performance
+//! debugging; this module makes the serving stack itself debuggable.
+//! [`ServeObs`] is the per-server bundle threaded through the serve path:
+//!
+//! - [`hist::LatencyHistogram`] / [`hist::HistFamily`] — deterministic
+//!   lock-free log2-bucket histograms recording request end-to-end latency
+//!   (keyed by op), per-flush queue wait, and per-pipeline engine execute
+//!   time.  The record path is a couple of relaxed atomic adds, so these
+//!   are always on.
+//! - [`trace::Tracer`] — request-scoped span tracing (client recv →
+//!   dispatcher enqueue → flush → engine execute → reply) into bounded
+//!   per-thread rings, exported as Chrome `trace_event` JSON.  Off by
+//!   default; enabled by `numabw serve --trace-out FILE`, and the disabled
+//!   path is a single `Option` branch per record site.
+//! - [`ConnTotals`] — aggregate per-connection counters (connections
+//!   opened/closed, requests, errors, bytes in/out) maintained by the
+//!   transports.
+//!
+//! Everything renders two ways: sorted-key JSON (the `metrics` protocol op
+//! and `--metrics-dump FILE`) and Prometheus-style text exposition
+//! ([`prometheus_text`], appended to the shutdown summary).
+
+pub mod hist;
+pub mod trace;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::runtime::PIPELINES;
+use crate::util::json::Json;
+use crate::util::lru::CacheCounters;
+use hist::{HistFamily, LatencyHistogram};
+use trace::{SpanGuard, Tracer};
+
+/// Ops for which request latency is recorded.  `invalid` absorbs lines
+/// that fail to parse far enough to name an op.
+pub const REQUEST_OPS: &[&str] =
+    &["advise", "counters", "invalid", "metrics", "perf", "stats"];
+
+/// Aggregate transport counters.  Updated inline per line / connection so
+/// a `stats` or `metrics` op observes live totals.
+#[derive(Default)]
+pub struct ConnTotals {
+    pub opened: AtomicU64,
+    pub closed: AtomicU64,
+    pub requests: AtomicU64,
+    pub errors: AtomicU64,
+    pub bytes_in: AtomicU64,
+    pub bytes_out: AtomicU64,
+}
+
+impl ConnTotals {
+    pub fn to_json(&self) -> Json {
+        let ld = |a: &AtomicU64| Json::from_u64(a.load(Ordering::Relaxed));
+        Json::from_pairs([
+            ("bytes_in", ld(&self.bytes_in)),
+            ("bytes_out", ld(&self.bytes_out)),
+            ("closed", ld(&self.closed)),
+            ("errors", ld(&self.errors)),
+            ("opened", ld(&self.opened)),
+            ("requests", ld(&self.requests)),
+        ])
+    }
+}
+
+/// The per-server observability bundle.  Cheap to create (a few hundred
+/// atomics); shared via `Arc` between transports, the front-end
+/// dispatcher, and the execution backend wrapper.
+pub struct ServeObs {
+    started: Instant,
+    /// End-to-end request latency (parse → reply flushed), keyed by op.
+    pub request_latency: HistFamily,
+    /// Per-flush queue wait: oldest enqueue in the batch → flush start.
+    pub queue_wait: LatencyHistogram,
+    /// Engine execute wall time keyed by pipeline; `Arc` because the
+    /// `TimedBackend` wrapper in `runtime` shares it.
+    pub engine_execute: Arc<HistFamily>,
+    /// Aggregate connection counters.
+    pub conns: ConnTotals,
+    next_conn_id: AtomicU64,
+    tracer: Option<Arc<Tracer>>,
+}
+
+impl Default for ServeObs {
+    fn default() -> Self {
+        ServeObs::new()
+    }
+}
+
+impl ServeObs {
+    pub fn new() -> ServeObs {
+        ServeObs::build(None)
+    }
+
+    /// Obs bundle with span tracing enabled (`--trace-out`).
+    pub fn with_tracer(ring_cap: usize) -> ServeObs {
+        ServeObs::build(Some(Arc::new(Tracer::new(ring_cap))))
+    }
+
+    fn build(tracer: Option<Arc<Tracer>>) -> ServeObs {
+        ServeObs {
+            started: Instant::now(),
+            request_latency: HistFamily::new(REQUEST_OPS),
+            queue_wait: LatencyHistogram::new(),
+            engine_execute: Arc::new(HistFamily::new(&PIPELINES)),
+            conns: ConnTotals::default(),
+            next_conn_id: AtomicU64::new(0),
+            tracer,
+        }
+    }
+
+    /// Milliseconds since this server came up; monotonic.
+    pub fn uptime_ms(&self) -> u64 {
+        self.started.elapsed().as_millis() as u64
+    }
+
+    pub fn tracer(&self) -> Option<&Arc<Tracer>> {
+        self.tracer.as_ref()
+    }
+
+    /// Open a span iff tracing is enabled — the whole disabled-path cost.
+    #[inline]
+    pub fn span(&self, name: &'static str) -> Option<SpanGuard> {
+        self.tracer.as_ref().map(|t| Tracer::span(t, name))
+    }
+
+    /// Next connection ID (0 is the stdin transport; TCP/unix connections
+    /// count up from whatever is unused).
+    pub fn next_conn_id(&self) -> u64 {
+        self.next_conn_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// All histogram families as one JSON object.
+    pub fn histograms_json(&self) -> Json {
+        Json::from_pairs([
+            ("engine_execute", self.engine_execute.to_json()),
+            ("queue_wait", self.queue_wait.snapshot().to_json()),
+            ("request_latency", self.request_latency.to_json()),
+        ])
+    }
+
+    /// Deterministic rendering of everything this bundle owns (histograms
+    /// and connection totals; uptime is added by the protocol layer since
+    /// it is inherently wall-clock).
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs([
+            ("connections", self.conns.to_json()),
+            ("histograms", self.histograms_json()),
+        ])
+    }
+}
+
+/// Prometheus-style text exposition: flat counters, cache counters, and
+/// one `summary` block per histogram (quantile point estimates plus
+/// `_sum`/`_count`).  Deterministic given the recorded state; empty
+/// histograms are skipped to keep the shutdown summary compact.
+pub fn prometheus_text(
+    obs: &ServeObs,
+    counters: &[(&str, u64)],
+    caches: &[(&str, CacheCounters)],
+) -> String {
+    let mut out = String::new();
+    for (name, v) in counters {
+        out.push_str(&format!(
+            "# TYPE numabw_{name}_total counter\nnumabw_{name}_total {v}\n"
+        ));
+    }
+    let conn = [
+        ("connections_opened", obs.conns.opened.load(Ordering::Relaxed)),
+        ("connections_closed", obs.conns.closed.load(Ordering::Relaxed)),
+        ("connection_requests", obs.conns.requests.load(Ordering::Relaxed)),
+        ("connection_errors", obs.conns.errors.load(Ordering::Relaxed)),
+        ("bytes_read", obs.conns.bytes_in.load(Ordering::Relaxed)),
+        ("bytes_written", obs.conns.bytes_out.load(Ordering::Relaxed)),
+    ];
+    for (name, v) in conn {
+        out.push_str(&format!(
+            "# TYPE numabw_{name}_total counter\nnumabw_{name}_total {v}\n"
+        ));
+    }
+    for which in ["hits", "misses", "evictions"] {
+        out.push_str(&format!(
+            "# TYPE numabw_cache_{which}_total counter\n"
+        ));
+        for (cache, c) in caches {
+            let v = match which {
+                "hits" => c.hits,
+                "misses" => c.misses,
+                _ => c.evictions,
+            };
+            out.push_str(&format!(
+                "numabw_cache_{which}_total{{cache=\"{cache}\"}} {v}\n"
+            ));
+        }
+    }
+    let mut summary = |metric: &str, label: Option<(&str, &str)>,
+                       hist: &LatencyHistogram| {
+        let snap = hist.snapshot();
+        if snap.count() == 0 {
+            return;
+        }
+        let labels = |extra: &str| match label {
+            Some((k, v)) if extra.is_empty() => format!("{{{k}=\"{v}\"}}"),
+            Some((k, v)) => format!("{{{k}=\"{v}\",{extra}}}"),
+            None if extra.is_empty() => String::new(),
+            None => format!("{{{extra}}}"),
+        };
+        for (q, qs) in [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99")] {
+            out.push_str(&format!(
+                "numabw_{metric}{} {}\n",
+                labels(&format!("quantile=\"{qs}\"")),
+                snap.quantile(q)
+            ));
+        }
+        out.push_str(&format!(
+            "numabw_{metric}_sum{} {}\n", labels(""), snap.sum
+        ));
+        out.push_str(&format!(
+            "numabw_{metric}_count{} {}\n", labels(""), snap.count()
+        ));
+    };
+    for (op, hist) in obs.request_latency.iter() {
+        summary("request_latency_ns", Some(("op", op)), hist);
+    }
+    summary("queue_wait_ns", None, &obs.queue_wait);
+    for (pipeline, hist) in obs.engine_execute.iter() {
+        summary("engine_execute_ns", Some(("pipeline", pipeline)), hist);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_obs_renders_pinned_empty_json() {
+        let obs = ServeObs::new();
+        let empty_hist = "{\"buckets\":[],\"count\":0,\"max_ns\":0,\
+                          \"p50_ns\":0,\"p90_ns\":0,\"p99_ns\":0,\
+                          \"sum_ns\":0}";
+        let ops = "{\"advise\":H,\"counters\":H,\"invalid\":H,\
+                   \"metrics\":H,\"perf\":H,\"stats\":H}"
+            .replace('H', empty_hist);
+        let pipelines = "{\"fit_signature\":H,\"predict_counters\":H,\
+                         \"predict_performance\":H,\"signature_apply\":H}"
+            .replace('H', empty_hist);
+        let expect = format!(
+            "{{\"connections\":{{\"bytes_in\":0,\"bytes_out\":0,\
+             \"closed\":0,\"errors\":0,\"opened\":0,\"requests\":0}},\
+             \"histograms\":{{\"engine_execute\":{pipelines},\
+             \"queue_wait\":{empty_hist},\"request_latency\":{ops}}}}}"
+        );
+        assert_eq!(obs.to_json().encode(), expect);
+    }
+
+    #[test]
+    fn recorded_state_shows_up_in_json() {
+        let obs = ServeObs::new();
+        obs.request_latency.record("counters", 1000);
+        obs.request_latency.record("counters", 3000);
+        obs.queue_wait.record(500);
+        obs.engine_execute.record("fit_signature", 2048);
+        obs.conns.requests.fetch_add(2, Ordering::Relaxed);
+        let j = obs.to_json();
+        let h = j.get("histograms").unwrap();
+        assert_eq!(
+            h.get("request_latency").unwrap().get("counters").unwrap()
+                .get("count").unwrap().as_u64(),
+            Some(2)
+        );
+        assert_eq!(
+            h.get("queue_wait").unwrap().get("max_ns").unwrap().as_u64(),
+            Some(500)
+        );
+        assert_eq!(
+            h.get("engine_execute").unwrap().get("fit_signature").unwrap()
+                .get("sum_ns").unwrap().as_u64(),
+            Some(2048)
+        );
+        assert_eq!(
+            j.get("connections").unwrap().get("requests").unwrap().as_u64(),
+            Some(2)
+        );
+        assert_eq!(obs.request_latency.total_count(), 2);
+    }
+
+    #[test]
+    fn spans_disabled_by_default_enabled_with_tracer() {
+        let plain = ServeObs::new();
+        assert!(plain.span("request").is_none());
+        assert!(plain.tracer().is_none());
+        let traced = ServeObs::with_tracer(64);
+        {
+            let _g = traced.span("request");
+        }
+        assert_eq!(traced.tracer().unwrap().events().len(), 1);
+    }
+
+    #[test]
+    fn conn_ids_are_monotonic_from_zero() {
+        let obs = ServeObs::new();
+        assert_eq!(obs.next_conn_id(), 0);
+        assert_eq!(obs.next_conn_id(), 1);
+        assert_eq!(obs.next_conn_id(), 2);
+    }
+
+    #[test]
+    fn prometheus_text_is_pinned() {
+        let obs = ServeObs::new();
+        obs.request_latency.record("counters", 900);
+        obs.request_latency.record("counters", 1100);
+        obs.queue_wait.record(10);
+        obs.conns.opened.fetch_add(1, Ordering::Relaxed);
+        obs.conns.requests.fetch_add(2, Ordering::Relaxed);
+        let caches = [(
+            "matrix",
+            CacheCounters { hits: 3, misses: 1, evictions: 0 },
+        )];
+        let text = prometheus_text(&obs, &[("requests", 2)], &caches);
+        let expect = "\
+# TYPE numabw_requests_total counter
+numabw_requests_total 2
+# TYPE numabw_connections_opened_total counter
+numabw_connections_opened_total 1
+# TYPE numabw_connections_closed_total counter
+numabw_connections_closed_total 0
+# TYPE numabw_connection_requests_total counter
+numabw_connection_requests_total 2
+# TYPE numabw_connection_errors_total counter
+numabw_connection_errors_total 0
+# TYPE numabw_bytes_read_total counter
+numabw_bytes_read_total 0
+# TYPE numabw_bytes_written_total counter
+numabw_bytes_written_total 0
+# TYPE numabw_cache_hits_total counter
+numabw_cache_hits_total{cache=\"matrix\"} 3
+# TYPE numabw_cache_misses_total counter
+numabw_cache_misses_total{cache=\"matrix\"} 1
+# TYPE numabw_cache_evictions_total counter
+numabw_cache_evictions_total{cache=\"matrix\"} 0
+numabw_request_latency_ns{op=\"counters\",quantile=\"0.5\"} 1023
+numabw_request_latency_ns{op=\"counters\",quantile=\"0.9\"} 1100
+numabw_request_latency_ns{op=\"counters\",quantile=\"0.99\"} 1100
+numabw_request_latency_ns_sum{op=\"counters\"} 2000
+numabw_request_latency_ns_count{op=\"counters\"} 2
+numabw_queue_wait_ns{quantile=\"0.5\"} 10
+numabw_queue_wait_ns{quantile=\"0.9\"} 10
+numabw_queue_wait_ns{quantile=\"0.99\"} 10
+numabw_queue_wait_ns_sum 10
+numabw_queue_wait_ns_count 1
+";
+        assert_eq!(text, expect);
+    }
+}

@@ -1,0 +1,399 @@
+//! Request-scoped span tracing with Chrome `trace_event` export.
+//!
+//! A [`Tracer`] hands out RAII [`SpanGuard`]s with monotonically increasing
+//! span IDs.  Each thread that records spans registers a bounded ring
+//! buffer with the tracer on first use; pushing a finished span takes one
+//! uncontended mutex on that thread-local ring (contention only at export
+//! time).  Parent links are tracked with a per-thread span stack, so the
+//! exported events are well-nested per `tid` by construction: a guard's
+//! lifetime is lexically contained in its parent's.
+//!
+//! Tracing is opt-in: the serve stack holds an `Option<Arc<Tracer>>` that
+//! is `None` unless `--trace-out` was passed, so the disabled path is a
+//! single branch per record site.
+//!
+//! Export format is the Chrome `trace_event` JSON array-of-`"X"`
+//! (complete) events understood by `chrome://tracing` and Perfetto:
+//! `ts`/`dur` are microseconds since the tracer's origin, `tid` is the
+//! per-tracer thread registration index, and `args` carries the span ID,
+//! parent span ID (0 = root), and any op label.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Default per-thread ring capacity (events retained per thread).
+pub const DEFAULT_RING_CAP: usize = 65_536;
+
+/// One finished span.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    pub ts_ns: u64,
+    pub dur_ns: u64,
+    pub tid: u64,
+    pub span: u64,
+    pub parent: u64,
+    pub arg: Option<(&'static str, String)>,
+}
+
+struct Ring {
+    events: Vec<TraceEvent>,
+    start: usize,
+    cap: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Ring {
+        Ring { events: Vec::new(), start: 0, cap: cap.max(1), dropped: 0 }
+    }
+
+    fn push(&mut self, ev: TraceEvent) {
+        if self.events.len() < self.cap {
+            self.events.push(ev);
+        } else {
+            // Overwrite the oldest entry; bounded memory beats completeness.
+            self.events[self.start] = ev;
+            self.start = (self.start + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    fn drain_in_order(&self) -> impl Iterator<Item = &TraceEvent> {
+        let (tail, head) = self.events.split_at(self.start);
+        head.iter().chain(tail.iter())
+    }
+}
+
+struct ThreadSlot {
+    tid: u64,
+    ring: Arc<Mutex<Ring>>,
+    stack: Vec<u64>,
+}
+
+thread_local! {
+    // Keyed by tracer identity so independent tracers (tests, multiple
+    // serve contexts in one process) never share rings or span stacks.
+    static SLOTS: RefCell<HashMap<usize, ThreadSlot>> =
+        RefCell::new(HashMap::new());
+}
+
+static NEXT_TRACER_ID: AtomicUsize = AtomicUsize::new(1);
+
+pub struct Tracer {
+    id: usize,
+    origin: Instant,
+    ring_cap: usize,
+    next_span: AtomicU64,
+    next_tid: AtomicU64,
+    rings: Mutex<Vec<Arc<Mutex<Ring>>>>,
+}
+
+impl Tracer {
+    pub fn new(ring_cap: usize) -> Tracer {
+        Tracer {
+            id: NEXT_TRACER_ID.fetch_add(1, Ordering::Relaxed),
+            origin: Instant::now(),
+            ring_cap,
+            next_span: AtomicU64::new(1),
+            next_tid: AtomicU64::new(1),
+            rings: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn now_ns(&self) -> u64 {
+        self.origin.elapsed().as_nanos() as u64
+    }
+
+    fn alloc_span(&self) -> u64 {
+        self.next_span.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Run `f` with this tracer's slot for the current thread, registering
+    /// a fresh ring on first use.
+    fn with_slot<T>(&self, f: impl FnOnce(&mut ThreadSlot) -> T) -> T {
+        SLOTS.with(|slots| {
+            let mut slots = slots.borrow_mut();
+            let slot = slots.entry(self.id).or_insert_with(|| {
+                let ring = Arc::new(Mutex::new(Ring::new(self.ring_cap)));
+                self.rings.lock().unwrap().push(Arc::clone(&ring));
+                ThreadSlot {
+                    tid: self.next_tid.fetch_add(1, Ordering::Relaxed),
+                    ring,
+                    stack: Vec::new(),
+                }
+            });
+            f(slot)
+        })
+    }
+
+    /// Open a span; it closes (and is recorded) when the guard drops.
+    pub fn span(tracer: &Arc<Tracer>, name: &'static str) -> SpanGuard {
+        let span = tracer.alloc_span();
+        let parent =
+            tracer.with_slot(|slot| {
+                let parent = slot.stack.last().copied().unwrap_or(0);
+                slot.stack.push(span);
+                parent
+            });
+        SpanGuard {
+            tracer: Arc::clone(tracer),
+            name,
+            span,
+            parent,
+            start_ns: tracer.now_ns(),
+            arg: None,
+        }
+    }
+
+    /// Record an already-elapsed interval (`started` → now) as a root span
+    /// on the current thread.  Used where the start happened before the
+    /// span's owner could hold a guard (e.g. batch coalescing windows).
+    pub fn complete_since(
+        &self,
+        name: &'static str,
+        started: Instant,
+        arg: Option<(&'static str, String)>,
+    ) {
+        let ts_ns = started
+            .checked_duration_since(self.origin)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        let ev = TraceEvent {
+            name,
+            ts_ns,
+            dur_ns: self.now_ns().saturating_sub(ts_ns),
+            tid: 0, // patched below with the thread's tid
+            span: self.alloc_span(),
+            parent: 0,
+            arg,
+        };
+        self.with_slot(|slot| {
+            let mut ev = ev;
+            ev.tid = slot.tid;
+            slot.ring.lock().unwrap().push(ev);
+        });
+    }
+
+    fn finish(&self, guard: &mut SpanGuard) {
+        let dur_ns = self.now_ns().saturating_sub(guard.start_ns);
+        let ev = TraceEvent {
+            name: guard.name,
+            ts_ns: guard.start_ns,
+            dur_ns,
+            tid: 0,
+            span: guard.span,
+            parent: guard.parent,
+            arg: guard.arg.take(),
+        };
+        self.with_slot(|slot| {
+            // Guards drop in LIFO order within a thread, so the top of the
+            // stack is this span (unless the ring was cleared mid-flight).
+            if slot.stack.last() == Some(&guard.span) {
+                slot.stack.pop();
+            } else {
+                slot.stack.retain(|&s| s != guard.span);
+            }
+            let mut ev = ev;
+            ev.tid = slot.tid;
+            slot.ring.lock().unwrap().push(ev);
+        });
+    }
+
+    /// Snapshot of all recorded events, sorted by (ts, span id).
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let rings = self.rings.lock().unwrap();
+        let mut out = Vec::new();
+        for ring in rings.iter() {
+            let ring = ring.lock().unwrap();
+            out.extend(ring.drain_in_order().cloned());
+        }
+        out.sort_by_key(|e| (e.ts_ns, e.span));
+        out
+    }
+
+    /// Total events overwritten across all rings (0 unless a thread
+    /// out-recorded its bounded ring).
+    pub fn dropped(&self) -> u64 {
+        let rings = self.rings.lock().unwrap();
+        rings.iter().map(|r| r.lock().unwrap().dropped).sum()
+    }
+
+    /// Chrome `trace_event` JSON object (`chrome://tracing` / Perfetto).
+    pub fn chrome_json(&self) -> Json {
+        let events: Vec<Json> = self
+            .events()
+            .iter()
+            .map(|e| {
+                let mut args = Json::obj();
+                args.set("parent", Json::from_u64(e.parent));
+                args.set("span", Json::from_u64(e.span));
+                if let Some((k, v)) = &e.arg {
+                    args.set(k, Json::Str(v.clone()));
+                }
+                Json::from_pairs([
+                    ("args", args),
+                    ("cat", Json::Str("serve".to_string())),
+                    ("dur", Json::Num(e.dur_ns as f64 / 1000.0)),
+                    ("name", Json::Str(e.name.to_string())),
+                    ("ph", Json::Str("X".to_string())),
+                    ("pid", Json::Num(1.0)),
+                    ("tid", Json::from_u64(e.tid)),
+                    ("ts", Json::Num(e.ts_ns as f64 / 1000.0)),
+                ])
+            })
+            .collect();
+        Json::from_pairs([
+            ("displayTimeUnit", Json::Str("ms".to_string())),
+            ("droppedEvents", Json::from_u64(self.dropped())),
+            ("traceEvents", Json::Arr(events)),
+        ])
+    }
+}
+
+/// RAII span handle; records the span into the thread's ring on drop.
+pub struct SpanGuard {
+    tracer: Arc<Tracer>,
+    name: &'static str,
+    span: u64,
+    parent: u64,
+    start_ns: u64,
+    arg: Option<(&'static str, String)>,
+}
+
+impl SpanGuard {
+    /// Attach a single `key: value` label (e.g. the op name, known only
+    /// after parsing) to the span.
+    pub fn set_arg(&mut self, key: &'static str, value: impl Into<String>) {
+        self.arg = Some((key, value.into()));
+    }
+
+    pub fn span_id(&self) -> u64 {
+        self.span
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let tracer = Arc::clone(&self.tracer);
+        tracer.finish(self);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tracer() -> Arc<Tracer> {
+        Arc::new(Tracer::new(1024))
+    }
+
+    #[test]
+    fn span_ids_are_monotonic_and_parents_nest() {
+        let t = tracer();
+        {
+            let _a = Tracer::span(&t, "request");
+            {
+                let mut b = Tracer::span(&t, "enqueue");
+                b.set_arg("op", "counters");
+            }
+            let _c = Tracer::span(&t, "reply");
+        }
+        let evs = t.events();
+        assert_eq!(evs.len(), 3);
+        // Sorted by start time: request first, then enqueue, then reply.
+        assert_eq!(evs[0].name, "request");
+        assert_eq!(evs[1].name, "enqueue");
+        assert_eq!(evs[2].name, "reply");
+        assert!(evs[0].span < evs[1].span && evs[1].span < evs[2].span);
+        // Both children point at the request span; the request is a root.
+        assert_eq!(evs[0].parent, 0);
+        assert_eq!(evs[1].parent, evs[0].span);
+        assert_eq!(evs[2].parent, evs[0].span);
+        assert_eq!(evs[1].arg, Some(("op", "counters".to_string())));
+        // Proper time nesting: children start no earlier and end no later.
+        for child in &evs[1..] {
+            assert!(child.ts_ns >= evs[0].ts_ns);
+            assert!(child.ts_ns + child.dur_ns
+                    <= evs[0].ts_ns + evs[0].dur_ns);
+        }
+        // Siblings are ordered, not overlapping.
+        assert!(evs[1].ts_ns + evs[1].dur_ns <= evs[2].ts_ns);
+    }
+
+    #[test]
+    fn threads_get_distinct_tids() {
+        let t = tracer();
+        {
+            let _a = Tracer::span(&t, "main");
+        }
+        let t2 = Arc::clone(&t);
+        std::thread::spawn(move || {
+            let _b = Tracer::span(&t2, "worker");
+        })
+        .join()
+        .unwrap();
+        let evs = t.events();
+        assert_eq!(evs.len(), 2);
+        let tids: std::collections::HashSet<u64> =
+            evs.iter().map(|e| e.tid).collect();
+        assert_eq!(tids.len(), 2);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_drops_oldest() {
+        let t = Arc::new(Tracer::new(8));
+        for _ in 0..20 {
+            let _g = Tracer::span(&t, "tick");
+        }
+        assert_eq!(t.events().len(), 8);
+        assert_eq!(t.dropped(), 12);
+        // The retained events are the 8 newest: span ids 13..=20.
+        let spans: Vec<u64> = t.events().iter().map(|e| e.span).collect();
+        assert_eq!(spans, (13..=20).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn complete_since_records_explicit_interval() {
+        let t = tracer();
+        let started = Instant::now();
+        t.complete_since("coalesce", started,
+                         Some(("reason", "deadline".to_string())));
+        let evs = t.events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].name, "coalesce");
+        assert_eq!(evs[0].parent, 0);
+        assert_eq!(evs[0].arg, Some(("reason", "deadline".to_string())));
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        let t = tracer();
+        {
+            let _a = Tracer::span(&t, "request");
+            let _b = Tracer::span(&t, "reply");
+        }
+        let j = t.chrome_json();
+        assert_eq!(j.get("displayTimeUnit").unwrap().as_str(), Some("ms"));
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 2);
+        for e in evs {
+            assert_eq!(e.get("ph").unwrap().as_str(), Some("X"));
+            assert_eq!(e.get("cat").unwrap().as_str(), Some("serve"));
+            assert!(e.get("ts").unwrap().as_f64().is_some());
+            assert!(e.get("dur").unwrap().as_f64().is_some());
+            assert!(e.get("tid").unwrap().as_u64().is_some());
+            assert!(e.get("args").unwrap().get("span").is_some());
+        }
+        // Parent linkage survives export.
+        assert_eq!(
+            evs[1].get("args").unwrap().get("parent"),
+            evs[0].get("args").unwrap().get("span").cloned().as_ref()
+        );
+    }
+}

@@ -32,6 +32,8 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::obs::hist::HistFamily;
+use crate::obs::trace::Tracer;
 use crate::topology::{flow_resources, MachineTopology};
 use crate::util::json::Json;
 
@@ -347,6 +349,72 @@ pub trait ExecutionBackend: Send + Sync {
 
     /// Execute a pipeline on full-batch tensors.
     fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+}
+
+/// Decorator backend that times every `execute` into a per-pipeline
+/// latency histogram (one relaxed atomic add per call) and, when tracing
+/// is enabled, wraps the call in a `pipeline:<name>` span.  All trait
+/// answers delegate to the inner backend, so attaching the wrapper never
+/// changes behaviour — only adds observability.
+pub struct TimedBackend {
+    inner: Box<dyn ExecutionBackend>,
+    hists: Arc<HistFamily>,
+    tracer: Option<Arc<Tracer>>,
+}
+
+/// Span labels per pipeline (span names must be `'static`).
+const PIPELINE_SPANS: [&str; 4] = [
+    "pipeline:fit_signature",
+    "pipeline:signature_apply",
+    "pipeline:predict_counters",
+    "pipeline:predict_performance",
+];
+
+impl TimedBackend {
+    pub fn new(
+        inner: Box<dyn ExecutionBackend>,
+        hists: Arc<HistFamily>,
+        tracer: Option<Arc<Tracer>>,
+    ) -> TimedBackend {
+        TimedBackend { inner, hists, tracer }
+    }
+}
+
+impl ExecutionBackend for TimedBackend {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn batch(&self) -> usize {
+        self.inner.batch()
+    }
+
+    fn sockets(&self) -> Option<usize> {
+        self.inner.sockets()
+    }
+
+    fn fit_takes_sym_threads(&self) -> bool {
+        self.inner.fit_takes_sym_threads()
+    }
+
+    fn warmup(&self) -> Result<()> {
+        self.inner.warmup()
+    }
+
+    fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let _span = self.tracer.as_ref().map(|t| {
+            let label = PIPELINES
+                .iter()
+                .position(|p| *p == name)
+                .map(|i| PIPELINE_SPANS[i])
+                .unwrap_or("pipeline:other");
+            crate::obs::trace::Tracer::span(t, label)
+        });
+        let t0 = std::time::Instant::now();
+        let out = self.inner.execute(name, inputs);
+        self.hists.record(name, t0.elapsed().as_nanos() as u64);
+        out
+    }
 }
 
 /// Shared input validation: every backend checks submitted tensors against

@@ -41,6 +41,8 @@ use anyhow::{anyhow, Result};
 use crate::coordinator::service::{
     CounterQuery, PerfQuery, PerfServer, PredictionService,
 };
+use crate::obs::trace::Tracer;
+use crate::obs::ServeObs;
 use crate::runtime::BatchWindow;
 
 use super::metrics::{FlushReason, ServeMetrics};
@@ -58,10 +60,14 @@ enum Request {
     Counters {
         queries: Vec<CounterQuery>,
         reply: Sender<Reply<CounterResults>>,
+        /// When the client put this request on the channel (queue-wait
+        /// telemetry: oldest enqueue → flush start).
+        enqueued: Instant,
     },
     Perf {
         queries: Vec<PerfQuery>,
         reply: Sender<Reply<PerfResults>>,
+        enqueued: Instant,
     },
     /// Sent by [`FrontEnd`] shutdown: drain pending work and exit, even if
     /// client handles still hold senders.
@@ -107,11 +113,24 @@ pub struct FrontEnd {
     handle: Option<JoinHandle<()>>,
     svc: Arc<PredictionService>,
     metrics: Arc<ServeMetrics>,
+    obs: Arc<ServeObs>,
 }
 
 impl FrontEnd {
     /// Take ownership of a service and start the dispatcher thread.
     pub fn start(svc: PredictionService, cfg: FrontEndConfig) -> FrontEnd {
+        FrontEnd::start_with_obs(svc, cfg, Arc::new(ServeObs::new()))
+    }
+
+    /// Like [`FrontEnd::start`] but sharing an externally owned
+    /// observability bundle (the serve daemon's, so the dispatcher's
+    /// queue-wait histogram and flush spans land next to the transport's
+    /// request histograms).
+    pub fn start_with_obs(
+        svc: PredictionService,
+        cfg: FrontEndConfig,
+        obs: Arc<ServeObs>,
+    ) -> FrontEnd {
         let svc = Arc::new(svc);
         let metrics = Arc::new(ServeMetrics::default());
         let window = BatchWindow::new(
@@ -121,11 +140,12 @@ impl FrontEnd {
         let (tx, rx) = mpsc::channel();
         let dispatcher_svc = svc.clone();
         let dispatcher_metrics = metrics.clone();
+        let dispatcher_obs = obs.clone();
         let handle = std::thread::Builder::new()
             .name("numabw-frontend".to_string())
             .spawn(move || {
                 dispatch_loop(rx, &dispatcher_svc, window,
-                              &dispatcher_metrics)
+                              &dispatcher_metrics, &dispatcher_obs)
             })
             .expect("spawning the front-end dispatcher thread");
         FrontEnd {
@@ -133,6 +153,7 @@ impl FrontEnd {
             handle: Some(handle),
             svc,
             metrics,
+            obs,
         }
     }
 
@@ -140,6 +161,7 @@ impl FrontEnd {
     pub fn client(&self) -> Client {
         Client {
             tx: self.tx.as_ref().expect("front-end is running").clone(),
+            tracer: self.obs.tracer().cloned(),
         }
     }
 
@@ -150,6 +172,11 @@ impl FrontEnd {
 
     pub fn metrics(&self) -> &ServeMetrics {
         &self.metrics
+    }
+
+    /// The observability bundle (histograms, connection totals, tracer).
+    pub fn obs(&self) -> &Arc<ServeObs> {
+        &self.obs
     }
 
     /// Stop accepting work, drain pending requests, and join the
@@ -182,17 +209,24 @@ impl Drop for FrontEnd {
 #[derive(Clone)]
 pub struct Client {
     tx: Sender<Request>,
+    /// Present iff the owning front-end traces; spans the channel send
+    /// ("enqueue") and the blocking wait ("await_reply").
+    tracer: Option<Arc<Tracer>>,
 }
 
 impl Client {
     fn roundtrip<T>(
         &self,
-        make: impl FnOnce(Sender<Reply<T>>) -> Request,
+        make: impl FnOnce(Sender<Reply<T>>, Instant) -> Request,
     ) -> Result<T> {
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx
-            .send(make(reply_tx))
-            .map_err(|_| anyhow!("serving front-end is shut down"))?;
+        {
+            let _g = self.tracer.as_ref().map(|t| Tracer::span(t, "enqueue"));
+            self.tx
+                .send(make(reply_tx, Instant::now()))
+                .map_err(|_| anyhow!("serving front-end is shut down"))?;
+        }
+        let _g = self.tracer.as_ref().map(|t| Tracer::span(t, "await_reply"));
         reply_rx
             .recv()
             .map_err(|_| anyhow!("serving front-end dropped the request"))?
@@ -206,7 +240,9 @@ impl Client {
         if queries.is_empty() {
             return Ok(Vec::new());
         }
-        self.roundtrip(|reply| Request::Counters { queries, reply })
+        self.roundtrip(|reply, enqueued| {
+            Request::Counters { queries, reply, enqueued }
+        })
     }
 
     /// Submit one counter query.
@@ -224,7 +260,9 @@ impl Client {
         if queries.is_empty() {
             return Ok(Vec::new());
         }
-        self.roundtrip(|reply| Request::Perf { queries, reply })
+        self.roundtrip(|reply, enqueued| {
+            Request::Perf { queries, reply, enqueued }
+        })
     }
 
     /// Submit one performance query.
@@ -253,6 +291,13 @@ struct PendingBatch {
     counter_spans: Vec<(Sender<Reply<CounterResults>>, usize)>,
     perf: Vec<PerfQuery>,
     perf_spans: Vec<(Sender<Reply<PerfResults>>, usize)>,
+    /// Earliest client-side enqueue time in the batch (queue-wait
+    /// histogram: this → flush start).
+    oldest: Option<Instant>,
+    /// When the dispatcher opened this batch (its first dequeue), which is
+    /// always after any previous flush finished — so the "coalesce" trace
+    /// span never overlaps a "flush" span on the dispatcher thread.
+    opened: Option<Instant>,
 }
 
 impl PendingBatch {
@@ -265,12 +310,23 @@ impl PendingBatch {
     }
 
     fn enqueue(&mut self, req: Request) {
+        let enqueued = match &req {
+            Request::Counters { enqueued, .. }
+            | Request::Perf { enqueued, .. } => Some(*enqueued),
+            Request::Shutdown => None,
+        };
+        if let Some(t) = enqueued {
+            self.oldest = Some(match self.oldest {
+                Some(prev) => prev.min(t),
+                None => t,
+            });
+        }
         match req {
-            Request::Counters { mut queries, reply } => {
+            Request::Counters { mut queries, reply, .. } => {
                 self.counter_spans.push((reply, queries.len()));
                 self.counters.append(&mut queries);
             }
-            Request::Perf { mut queries, reply } => {
+            Request::Perf { mut queries, reply, .. } => {
                 self.perf_spans.push((reply, queries.len()));
                 self.perf.append(&mut queries);
             }
@@ -282,7 +338,8 @@ impl PendingBatch {
 }
 
 fn dispatch_loop(rx: Receiver<Request>, svc: &PredictionService,
-                 window: BatchWindow, metrics: &ServeMetrics) {
+                 window: BatchWindow, metrics: &ServeMetrics,
+                 obs: &ServeObs) {
     let mut pending = PendingBatch::default();
     let mut deadline: Option<Instant> = None;
     loop {
@@ -298,31 +355,36 @@ fn dispatch_loop(rx: Receiver<Request>, svc: &PredictionService,
         match msg {
             Ok(Request::Shutdown) => {
                 if !pending.is_empty() {
-                    flush(svc, &mut pending, metrics, FlushReason::Drain);
+                    flush(svc, &mut pending, metrics, obs,
+                          FlushReason::Drain);
                 }
                 return;
             }
             Ok(req) => {
                 metrics.record_request(req.len());
                 if pending.is_empty() {
-                    deadline = Some(window.deadline(Instant::now()));
+                    let now = Instant::now();
+                    deadline = Some(window.deadline(now));
+                    pending.opened = Some(now);
                 }
                 pending.enqueue(req);
                 if window.size_triggered(pending.len()) {
-                    flush(svc, &mut pending, metrics, FlushReason::Size);
+                    flush(svc, &mut pending, metrics, obs,
+                          FlushReason::Size);
                     deadline = None;
                 }
             }
             Err(RecvTimeoutError::Timeout) => {
                 if !pending.is_empty() {
-                    flush(svc, &mut pending, metrics,
+                    flush(svc, &mut pending, metrics, obs,
                           FlushReason::Deadline);
                 }
                 deadline = None;
             }
             Err(RecvTimeoutError::Disconnected) => {
                 if !pending.is_empty() {
-                    flush(svc, &mut pending, metrics, FlushReason::Drain);
+                    flush(svc, &mut pending, metrics, obs,
+                          FlushReason::Drain);
                 }
                 return;
             }
@@ -333,20 +395,48 @@ fn dispatch_loop(rx: Receiver<Request>, svc: &PredictionService,
 /// Serve everything pending in one dispatch per query kind, then fan the
 /// results back out to each requester by its span.
 fn flush(svc: &PredictionService, pending: &mut PendingBatch,
-         metrics: &ServeMetrics, reason: FlushReason) {
+         metrics: &ServeMetrics, obs: &ServeObs, reason: FlushReason) {
     let batch = std::mem::take(pending);
     metrics.record_flush(reason, batch.len());
-    if !batch.counters.is_empty() {
-        fan_out(
-            svc.serve_counters(&batch.counters),
-            batch.counter_spans,
+    let now = Instant::now();
+    if let Some(oldest) = batch.oldest {
+        obs.queue_wait.record(
+            now.saturating_duration_since(oldest).as_nanos() as u64,
         );
     }
-    if !batch.perf.is_empty() {
-        fan_out(
-            PredictionService::serve_perf(svc, &batch.perf),
-            batch.perf_spans,
+    if let (Some(tracer), Some(opened)) = (obs.tracer(), batch.opened) {
+        // The coalescing window as a closed interval ending where the
+        // flush span starts.
+        tracer.complete_since(
+            "coalesce", opened,
+            Some(("reason", reason.as_str().to_string())),
         );
+    }
+    let mut flush_span = obs.span("flush");
+    if let Some(s) = flush_span.as_mut() {
+        s.set_arg("reason", reason.as_str());
+    }
+    let counters_result = if batch.counters.is_empty() {
+        None
+    } else {
+        let _g = obs.span("execute:counters");
+        Some(svc.serve_counters(&batch.counters))
+    };
+    let perf_result = if batch.perf.is_empty() {
+        None
+    } else {
+        let _g = obs.span("execute:perf");
+        Some(PredictionService::serve_perf(svc, &batch.perf))
+    };
+    // Commit the dispatcher-side spans to the rings *before* any reply
+    // unblocks a client: a client racing ahead to shutdown (and the trace
+    // dump) must already find flush/execute recorded.
+    drop(flush_span);
+    if let Some(result) = counters_result {
+        fan_out(result, batch.counter_spans);
+    }
+    if let Some(result) = perf_result {
+        fan_out(result, batch.perf_spans);
     }
 }
 
@@ -438,6 +528,61 @@ mod tests {
         assert_eq!(snap.max_batch, 16);
         drop(client);
         fe.shutdown();
+    }
+
+    #[test]
+    fn queue_wait_is_recorded_per_flush() {
+        let fe = FrontEnd::start(
+            PredictionService::reference(),
+            FrontEndConfig {
+                batch_size: Some(4),
+                window: Duration::from_millis(1),
+            },
+        );
+        let client = fe.client();
+        let mut rng = Rng::new(0xFE04);
+        for _ in 0..3 {
+            client.counters(random_counter_query(&mut rng)).unwrap();
+        }
+        let snap = fe.obs().queue_wait.snapshot();
+        // One queue-wait sample per flush, and flush count matches the
+        // front-end metrics.
+        assert_eq!(snap.count(), fe.metrics().snapshot().flushes());
+        assert!(snap.count() >= 1);
+        // No tracer was attached: spans are off by default.
+        assert!(fe.obs().tracer().is_none());
+        drop(client);
+        fe.shutdown();
+    }
+
+    #[test]
+    fn tracing_records_request_spans_when_enabled() {
+        let obs = Arc::new(ServeObs::with_tracer(4096));
+        let fe = FrontEnd::start_with_obs(
+            PredictionService::reference(),
+            FrontEndConfig {
+                batch_size: Some(1),
+                window: Duration::from_millis(1),
+            },
+            obs.clone(),
+        );
+        let client = fe.client();
+        let mut rng = Rng::new(0xFE05);
+        client.counters(random_counter_query(&mut rng)).unwrap();
+        drop(client);
+        fe.shutdown();
+        let events = obs.tracer().unwrap().events();
+        let names: Vec<&str> = events.iter().map(|e| e.name).collect();
+        for want in ["enqueue", "await_reply", "coalesce", "flush",
+                     "execute:counters"] {
+            assert!(names.contains(&want), "missing {want} in {names:?}");
+        }
+        // The execute span is a child of the flush span.
+        let flush = events.iter().find(|e| e.name == "flush").unwrap();
+        let exec =
+            events.iter().find(|e| e.name == "execute:counters").unwrap();
+        assert_eq!(exec.parent, flush.span);
+        assert_eq!(flush.arg, Some(("reason", "size".to_string())));
     }
 
     #[test]

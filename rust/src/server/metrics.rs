@@ -24,6 +24,17 @@ pub enum FlushReason {
     Drain,
 }
 
+impl FlushReason {
+    /// Stable label used by trace spans.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FlushReason::Size => "size",
+            FlushReason::Deadline => "deadline",
+            FlushReason::Drain => "drain",
+        }
+    }
+}
+
 /// Live counters owned by the front-end (monotonic since start).
 #[derive(Debug, Default)]
 pub struct ServeMetrics {
@@ -91,13 +102,16 @@ impl MetricsSnapshot {
     }
 
     pub fn to_json(&self) -> Json {
+        // `from_u64` keeps small counters on the historical Num spelling
+        // and switches to the exact Int path above 2^53 (a lifetime query
+        // counter can get there; the f64 cast silently rounded it).
         Json::from_pairs([
-            ("requests", Json::Num(self.requests as f64)),
-            ("queries", Json::Num(self.queries as f64)),
-            ("flushes_size", Json::Num(self.flushes_size as f64)),
-            ("flushes_deadline", Json::Num(self.flushes_deadline as f64)),
-            ("flushes_drain", Json::Num(self.flushes_drain as f64)),
-            ("max_batch", Json::Num(self.max_batch as f64)),
+            ("requests", Json::from_u64(self.requests)),
+            ("queries", Json::from_u64(self.queries)),
+            ("flushes_size", Json::from_u64(self.flushes_size)),
+            ("flushes_deadline", Json::from_u64(self.flushes_deadline)),
+            ("flushes_drain", Json::from_u64(self.flushes_drain)),
+            ("max_batch", Json::from_u64(self.max_batch)),
         ])
     }
 }
@@ -105,9 +119,9 @@ impl MetricsSnapshot {
 /// JSON rendering of one cache's counters (used by the `stats` op).
 pub fn counters_json(c: &CacheCounters) -> Json {
     Json::from_pairs([
-        ("hits", Json::Num(c.hits as f64)),
-        ("misses", Json::Num(c.misses as f64)),
-        ("evictions", Json::Num(c.evictions as f64)),
+        ("hits", Json::from_u64(c.hits)),
+        ("misses", Json::from_u64(c.misses)),
+        ("evictions", Json::from_u64(c.evictions)),
     ])
 }
 
@@ -160,6 +174,33 @@ mod tests {
              \"flushes_size\":1,\"max_batch\":3,\"queries\":4,\
              \"requests\":2}"
         );
+    }
+
+    #[test]
+    fn counters_above_2_pow_53_roundtrip_byte_exactly() {
+        // Regression: the old `Json::Num(c.hits as f64)` path rounded
+        // (2^53 + 1) down to 2^53, so a long-lived server's stats reply
+        // quietly corrupted large counters.
+        let big = (1u64 << 53) + 1;
+        let j = counters_json(&CacheCounters {
+            hits: big,
+            misses: u64::MAX,
+            evictions: 7,
+        });
+        let text = j.encode();
+        assert_eq!(
+            text,
+            format!("{{\"evictions\":7,\"hits\":{big},\"misses\":{}}}",
+                    u64::MAX)
+        );
+        // encode -> parse -> encode is byte-stable.
+        assert_eq!(Json::parse(&text).unwrap().encode(), text);
+        assert_eq!(Json::parse(&text).unwrap().get("hits").unwrap().as_u64(),
+                   Some(big));
+        let snap = MetricsSnapshot { queries: big, ..Default::default() };
+        let text = snap.to_json().encode();
+        assert!(text.contains(&format!("\"queries\":{big}")), "{text}");
+        assert_eq!(Json::parse(&text).unwrap().encode(), text);
     }
 
     #[test]

@@ -34,6 +34,16 @@
 //!   into the same front-end (`numabw serve --listen <addr>`).
 //! * [`metrics`] — request/flush counters ([`ServeMetrics`]) and the
 //!   serve-side cache-table rendering.
+//!
+//! The whole path is instrumented through [`crate::obs`]: always-on
+//! lock-free latency histograms (request end-to-end by op, per-flush
+//! queue wait, engine execute by pipeline), per-connection transport
+//! counters, and opt-in span tracing (`--trace-out`, Chrome
+//! `trace_event` JSON).  The recorded state is served live by the
+//! `metrics` protocol op and `{"op":"stats","extended":true}`, dumped
+//! at shutdown via
+//! `--metrics-dump`, and rendered as a Prometheus-style exposition under
+//! the shutdown summary.
 
 pub mod frontend;
 pub mod metrics;

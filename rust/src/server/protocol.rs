@@ -14,7 +14,16 @@
 //! {"id":2,"op":"perf","sig":{...},"threads":[6,2],"demand_pt":[2e9,1e9],"caps":[...2*S*S numbers]}
 //! {"id":3,"op":"advise","machine":"xeon8","workload":"cg","threads":8,"top":3}
 //! {"id":4,"op":"stats"}
+//! {"id":5,"op":"stats","extended":true}
+//! {"id":6,"op":"metrics"}
 //! ```
+//!
+//! `stats` with `"extended": true` adds `uptime_ms` and aggregate
+//! connection totals to the reply (the plain reply is unchanged so golden
+//! transcripts stay byte-identical).  `metrics` returns the full
+//! observability state — latency histograms keyed by op and pipeline,
+//! queue-wait, connection totals, cache and front-end counters — as one
+//! sorted-key JSON object (see [`crate::obs`]).
 //!
 //! `counters` / `perf` also accept `"queries": [{...}, ...]` for a block
 //! of queries in one request (one coalesced dispatch).  `sig` is a channel
@@ -34,7 +43,9 @@
 
 use std::io::{BufRead, Write};
 use std::path::PathBuf;
-use std::time::Duration;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
@@ -42,6 +53,7 @@ use crate::coordinator::advisor;
 use crate::coordinator::service::{CounterQuery, FitRequest, PerfQuery};
 use crate::coordinator::{profile, PredictionService};
 use crate::model::signature::ChannelSignature;
+use crate::obs::{prometheus_text, trace, ServeObs};
 use crate::simulator::{SimConfig, Simulator};
 use crate::topology::MachineTopology;
 use crate::util::json::Json;
@@ -62,6 +74,12 @@ pub struct ServeOptions {
     pub batch_size: Option<usize>,
     /// Batch-window deadline (`--window-ms`).
     pub window: Duration,
+    /// Enable span tracing and write Chrome `trace_event` JSON here at
+    /// shutdown (`--trace-out`).  Tracing is off unless this is set.
+    pub trace_out: Option<PathBuf>,
+    /// Write the full `metrics`-op JSON here at shutdown
+    /// (`--metrics-dump`).
+    pub metrics_dump: Option<PathBuf>,
 }
 
 impl Default for ServeOptions {
@@ -71,6 +89,8 @@ impl Default for ServeOptions {
             seed: SimConfig::default().seed,
             batch_size: None,
             window: Duration::from_millis(2),
+            trace_out: None,
+            metrics_dump: None,
         }
     }
 }
@@ -86,7 +106,8 @@ pub enum ProtoRequest {
         threads: Option<usize>,
         top: usize,
     },
-    Stats { id: Json },
+    Stats { id: Json, extended: bool },
+    Metrics { id: Json },
 }
 
 impl ProtoRequest {
@@ -95,7 +116,19 @@ impl ProtoRequest {
             ProtoRequest::Counters { id, .. }
             | ProtoRequest::Perf { id, .. }
             | ProtoRequest::Advise { id, .. }
-            | ProtoRequest::Stats { id } => id,
+            | ProtoRequest::Stats { id, .. }
+            | ProtoRequest::Metrics { id } => id,
+        }
+    }
+
+    /// Stable op label for latency histograms and trace spans.
+    pub fn op_key(&self) -> &'static str {
+        match self {
+            ProtoRequest::Counters { .. } => "counters",
+            ProtoRequest::Perf { .. } => "perf",
+            ProtoRequest::Advise { .. } => "advise",
+            ProtoRequest::Stats { .. } => "stats",
+            ProtoRequest::Metrics { .. } => "metrics",
         }
     }
 }
@@ -231,9 +264,16 @@ pub fn parse_request(line: &str) -> Result<ProtoRequest, String> {
                 None => 5,
             },
         }),
-        "stats" => Ok(ProtoRequest::Stats { id }),
+        "stats" => Ok(ProtoRequest::Stats {
+            id,
+            extended: j
+                .get("extended")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+        }),
+        "metrics" => Ok(ProtoRequest::Metrics { id }),
         other => Err(format!(
-            "unknown op {other:?} (counters|perf|advise|stats)"
+            "unknown op {other:?} (counters|perf|advise|stats|metrics)"
         )),
     }
 }
@@ -299,12 +339,26 @@ impl ServeContext {
             Some(path) => ModelRegistry::open(path, DEFAULT_REGISTRY_CAP)?,
             None => ModelRegistry::in_memory(DEFAULT_REGISTRY_CAP),
         };
-        let frontend = FrontEnd::start(
+        // One observability bundle for the whole session; span tracing
+        // only when --trace-out asked for it.
+        let obs = if opts.trace_out.is_some() {
+            Arc::new(ServeObs::with_tracer(trace::DEFAULT_RING_CAP))
+        } else {
+            Arc::new(ServeObs::new())
+        };
+        // Time engine executes per pipeline (and trace them) by wrapping
+        // whatever backend the service runs on.
+        let svc = svc.with_exec_observer(
+            obs.engine_execute.clone(),
+            obs.tracer().cloned(),
+        );
+        let frontend = FrontEnd::start_with_obs(
             svc,
             FrontEndConfig {
                 batch_size: opts.batch_size,
                 window: opts.window,
             },
+            obs,
         );
         let client = frontend.client();
         Ok(ServeContext {
@@ -313,6 +367,11 @@ impl ServeContext {
             registry,
             opts,
         })
+    }
+
+    /// The session's observability bundle (owned by the front-end).
+    pub(crate) fn obs(&self) -> &Arc<ServeObs> {
+        self.frontend.obs()
     }
 
     /// A fixed-shape backend (an AOT-compiled 2-socket manifest) can
@@ -372,7 +431,10 @@ impl ServeContext {
             } => self
                 .advise(&machine, &workload, threads, top)
                 .map_err(|e| format!("{e:#}")),
-            ProtoRequest::Stats { .. } => Ok(self.stats()),
+            ProtoRequest::Stats { extended, .. } => {
+                Ok(self.stats(extended))
+            }
+            ProtoRequest::Metrics { .. } => Ok(self.metrics_json()),
         }
     }
 
@@ -455,22 +517,49 @@ impl ServeContext {
         ]))
     }
 
-    fn stats(&self) -> Json {
+    fn caches_json(&self) -> Json {
         let cache = self.frontend.service().cache_stats();
-        let caches = Json::from_pairs([
+        Json::from_pairs([
             ("matrix", counters_json(&cache.matrix)),
             ("counter", counters_json(&cache.counter)),
             ("perf", counters_json(&cache.perf)),
             ("registry", counters_json(&self.registry.stats())),
-        ]);
-        Json::from_pairs([
+        ])
+    }
+
+    fn stats(&self, extended: bool) -> Json {
+        let mut j = Json::from_pairs([
             ("frontend", self.frontend.metrics().snapshot().to_json()),
-            ("caches", caches),
+            ("caches", self.caches_json()),
             (
                 "registry_entries",
                 Json::Num(self.registry.len() as f64),
             ),
-        ])
+        ]);
+        // Extended fields are opt-in so the plain reply — and the golden
+        // transcript CI diffs byte-for-byte — is unchanged.
+        if extended {
+            j.set("connections", self.obs().conns.to_json());
+            j.set("uptime_ms", Json::from_u64(self.obs().uptime_ms()));
+        }
+        j
+    }
+
+    /// The `metrics` op: full observability state as sorted-key JSON.
+    /// This is also what `--metrics-dump` writes at shutdown.
+    fn metrics_json(&self) -> Json {
+        let mut j = self.obs().to_json();
+        j.set(
+            "backend",
+            Json::Str(self.frontend.service().backend_name().to_string()),
+        );
+        j.set("caches", self.caches_json());
+        j.set("frontend",
+              self.frontend.metrics().snapshot().to_json());
+        j.set("registry_entries",
+              Json::from_u64(self.registry.len() as u64));
+        j.set("uptime_ms", Json::from_u64(self.obs().uptime_ms()));
+        j
     }
 
     /// Drive one line-oriented stream against this context: read JSONL
@@ -481,26 +570,118 @@ impl ServeContext {
     pub(crate) fn serve_io<R: BufRead, W: Write>(&self, input: R,
                                                  out: &mut W)
         -> Result<()> {
-        for line in input.lines() {
-            let line = line?;
-            if line.trim().is_empty() {
-                continue;
-            }
-            let reply = handle_line(self, &line);
-            writeln!(out, "{}", reply.encode())?;
-            out.flush()?;
-        }
-        Ok(())
+        let conn_id = self.obs().next_conn_id();
+        self.serve_conn(conn_id, input, out).map(|_| ())
     }
 
-    /// The shutdown summary `numabw serve` prints to stderr.
+    /// [`Self::serve_io`] with an explicit connection identity: records
+    /// per-line request latency (by op), connection byte/request/error
+    /// totals, and — when tracing — a `request` span around each line.
+    /// Returns this connection's totals for the transport's close line.
+    pub(crate) fn serve_conn<R: BufRead, W: Write>(
+        &self,
+        conn_id: u64,
+        input: R,
+        out: &mut W,
+    ) -> Result<ConnStats> {
+        let obs = self.obs();
+        obs.conns.opened.fetch_add(1, Ordering::Relaxed);
+        let mut stats = ConnStats { id: conn_id, ..ConnStats::default() };
+        let result = (|| -> Result<()> {
+            for line in input.lines() {
+                let line = line?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let bytes_in = line.len() as u64 + 1;
+                stats.bytes_in += bytes_in;
+                obs.conns.bytes_in.fetch_add(bytes_in, Ordering::Relaxed);
+                let t0 = Instant::now();
+                let mut span = obs.span("request");
+                let (op, reply) = handle_line(self, &line);
+                if let Some(s) = span.as_mut() {
+                    s.set_arg("op", op);
+                }
+                let ok = reply.get("ok") == Some(&Json::Bool(true));
+                let encoded = reply.encode();
+                {
+                    let _g = obs.span("reply");
+                    writeln!(out, "{encoded}")?;
+                    out.flush()?;
+                }
+                drop(span);
+                obs.request_latency
+                    .record(op, t0.elapsed().as_nanos() as u64);
+                let bytes_out = encoded.len() as u64 + 1;
+                stats.requests += 1;
+                stats.bytes_out += bytes_out;
+                obs.conns.requests.fetch_add(1, Ordering::Relaxed);
+                obs.conns.bytes_out.fetch_add(bytes_out, Ordering::Relaxed);
+                if !ok {
+                    stats.errors += 1;
+                    obs.conns.errors.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Ok(())
+        })();
+        obs.conns.closed.fetch_add(1, Ordering::Relaxed);
+        result.map(|_| stats)
+    }
+
+    /// Write the `--trace-out` / `--metrics-dump` artifacts, if
+    /// configured.  Failures are reported to stderr but never fail the
+    /// session (telemetry must not take the server down with it).
+    pub(crate) fn dump_artifacts(&self) {
+        if let Some(path) = &self.opts.metrics_dump {
+            if let Err(e) =
+                std::fs::write(path, self.metrics_json().encode())
+            {
+                eprintln!(
+                    "numabw serve: failed to write --metrics-dump {}: {e}",
+                    path.display()
+                );
+            }
+        }
+        if let (Some(path), Some(tracer)) =
+            (&self.opts.trace_out, self.obs().tracer())
+        {
+            if let Err(e) =
+                std::fs::write(path, tracer.chrome_json().encode())
+            {
+                eprintln!(
+                    "numabw serve: failed to write --trace-out {}: {e}",
+                    path.display()
+                );
+            }
+        }
+    }
+
+    /// The shutdown summary `numabw serve` prints to stderr: the human
+    /// line, the cache table, and a Prometheus-style exposition of every
+    /// non-empty histogram and counter.
     pub(crate) fn summary(&self) -> String {
         let snap = self.frontend.metrics().snapshot();
         let stats = self.frontend.service().cache_stats();
+        let prom = prometheus_text(
+            self.obs(),
+            &[
+                ("requests", snap.requests),
+                ("queries", snap.queries),
+                ("flushes_size", snap.flushes_size),
+                ("flushes_deadline", snap.flushes_deadline),
+                ("flushes_drain", snap.flushes_drain),
+            ],
+            &[
+                ("counter", stats.counter),
+                ("matrix", stats.matrix),
+                ("perf", stats.perf),
+                ("registry", self.registry.stats()),
+            ],
+        );
         format!(
             "numabw serve: {} requests / {} queries; {} flushes (size {}, \
              deadline {}, drain {}; mean coalesced batch {:.1}); {} \
-             registry entries\n{}",
+             registry entries\n{}\n{}",
             snap.requests,
             snap.queries,
             snap.flushes(),
@@ -510,6 +691,7 @@ impl ServeContext {
             snap.mean_batch(),
             self.registry.len(),
             cache_table(&stats, &self.registry.stats()),
+            prom.trim_end(),
         )
     }
 
@@ -522,16 +704,32 @@ impl ServeContext {
     }
 }
 
-/// Handle one input line, producing exactly one reply line.
-fn handle_line(ctx: &ServeContext, line: &str) -> Json {
+/// Per-connection totals, returned by [`ServeContext::serve_conn`] so the
+/// transport can report them on close.  Byte counts include the trailing
+/// newline of each line.
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct ConnStats {
+    pub id: u64,
+    pub requests: u64,
+    pub errors: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+/// Handle one input line, producing exactly one reply line plus the op
+/// label the latency histogram records under (`"invalid"` for lines that
+/// never parsed into a request).
+fn handle_line(ctx: &ServeContext, line: &str) -> (&'static str, Json) {
     match parse_request(line) {
-        Err(e) => reply_err(Json::Null, e),
+        Err(e) => ("invalid", reply_err(Json::Null, e)),
         Ok(req) => {
             let id = req.id().clone();
-            match ctx.execute(req) {
+            let op = req.op_key();
+            let reply = match ctx.execute(req) {
                 Ok(result) => reply_ok(id, result),
                 Err(e) => reply_err(id, e),
-            }
+            };
+            (op, reply)
         }
     }
 }
@@ -545,6 +743,7 @@ pub fn serve_lines<R: BufRead, W: Write>(svc: PredictionService,
                                          out: &mut W) -> Result<String> {
     let ctx = ServeContext::new(svc, opts)?;
     ctx.serve_io(input, out)?;
+    ctx.dump_artifacts();
     let summary = ctx.summary();
     ctx.shutdown();
     Ok(summary)
@@ -735,6 +934,143 @@ mod tests {
         // Identical queries in one batch: identical allocations.
         assert_eq!(results[0], results[1]);
         assert_eq!(results[0].as_f64_vec().unwrap().len(), 8);
+    }
+
+    #[test]
+    fn metrics_op_returns_telemetry_state() {
+        let transcript = format!(
+            "{{\"id\":1,\"op\":\"counters\",\"sig\":{SIG},\
+             \"threads\":[3,1],\"cpu_totals\":[3.0,1.0]}}\n\
+             {{\"id\":2,\"op\":\"metrics\"}}\n"
+        );
+        let out = serve_str(&transcript, ServeOptions::default());
+        let reply = Json::parse(out.lines().nth(1).unwrap()).unwrap();
+        assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{out}");
+        let m = reply.get("result").unwrap();
+        assert_eq!(m.get("backend"),
+                   Some(&Json::Str("rust-reference".to_string())));
+        // The metrics line itself is recorded only after its reply is
+        // written, so at execute time exactly the counters request shows.
+        let conns = m.get("connections").unwrap();
+        assert_eq!(conns.get("opened").and_then(Json::as_u64), Some(1));
+        assert_eq!(conns.get("requests").and_then(Json::as_u64), Some(1));
+        assert_eq!(conns.get("errors").and_then(Json::as_u64), Some(0));
+        assert!(conns.get("bytes_in").and_then(Json::as_u64).unwrap() > 0);
+        let lat = m.get("histograms").unwrap()
+            .get("request_latency").unwrap();
+        assert_eq!(lat.get("counters").unwrap().get("count")
+                       .and_then(Json::as_u64),
+                   Some(1), "{out}");
+        assert_eq!(lat.get("metrics").unwrap().get("count")
+                       .and_then(Json::as_u64),
+                   Some(0));
+        // One flush of one query ran through the engine-facing histogram's
+        // pipeline family and the queue-wait histogram.
+        let qw = m.get("histograms").unwrap().get("queue_wait").unwrap();
+        assert_eq!(qw.get("count").and_then(Json::as_u64), Some(1));
+        assert!(m.get("uptime_ms").and_then(Json::as_u64).is_some());
+        assert_eq!(m.get("registry_entries").and_then(Json::as_u64),
+                   Some(0));
+        assert_eq!(m.get("frontend").unwrap().get("requests")
+                       .and_then(Json::as_u64),
+                   Some(1));
+        assert!(m.get("caches").unwrap().get("counter").is_some());
+    }
+
+    #[test]
+    fn extended_stats_adds_fields_without_touching_plain_stats() {
+        let transcript = "{\"id\":1,\"op\":\"stats\"}\n\
+                          {\"id\":2,\"op\":\"stats\",\"extended\":true}\n\
+                          {\"id\":3,\"op\":\"stats\",\"extended\":true}\n";
+        let out = serve_str(transcript, ServeOptions::default());
+        let lines: Vec<&str> = out.lines().collect();
+        let plain = Json::parse(lines[0]).unwrap();
+        let plain = plain.get("result").unwrap();
+        // The golden transcript pins plain stats byte-for-byte: no new
+        // keys may appear there.
+        assert!(plain.get("connections").is_none(), "{out}");
+        assert!(plain.get("uptime_ms").is_none());
+        let ext1 = Json::parse(lines[1]).unwrap();
+        let ext1 = ext1.get("result").unwrap();
+        let ext2 = Json::parse(lines[2]).unwrap();
+        let ext2 = ext2.get("result").unwrap();
+        let conns = ext1.get("connections").unwrap();
+        assert_eq!(conns.get("requests").and_then(Json::as_u64), Some(1));
+        assert_eq!(ext2.get("connections").unwrap().get("requests")
+                       .and_then(Json::as_u64),
+                   Some(2));
+        // Monotonic wall clock.
+        let up1 = ext1.get("uptime_ms").and_then(Json::as_u64).unwrap();
+        let up2 = ext2.get("uptime_ms").and_then(Json::as_u64).unwrap();
+        assert!(up2 >= up1);
+        // Extended stats keeps every plain field too.
+        assert!(ext1.get("caches").is_some());
+        assert!(ext1.get("frontend").is_some());
+    }
+
+    #[test]
+    fn summary_appends_prometheus_exposition() {
+        let transcript = format!(
+            "{{\"id\":1,\"op\":\"counters\",\"sig\":{SIG},\
+             \"threads\":[3,1],\"cpu_totals\":[3.0,1.0]}}\n"
+        );
+        let mut out = Vec::new();
+        let summary = serve_lines(
+            PredictionService::reference(),
+            ServeOptions::default(),
+            transcript.as_bytes(),
+            &mut out,
+        )
+        .unwrap();
+        assert!(summary.contains("1 requests / 1 queries"), "{summary}");
+        assert!(summary.contains("# TYPE numabw_requests_total counter"));
+        assert!(summary.contains("numabw_requests_total 1"));
+        assert!(summary.contains("numabw_connection_requests_total 1"));
+        assert!(summary.contains(
+            "numabw_request_latency_ns_count{op=\"counters\"} 1"
+        ));
+        assert!(summary.contains("numabw_queue_wait_ns_count 1"));
+        assert!(summary.contains(
+            "numabw_cache_hits_total{cache=\"registry\"} 0"
+        ));
+        assert!(!summary.ends_with('\n'));
+    }
+
+    #[test]
+    fn artifacts_are_dumped_at_shutdown() {
+        let dir = std::env::temp_dir().join(format!(
+            "numabw_proto_artifacts_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let trace = dir.join("trace.json");
+        let metrics = dir.join("metrics.json");
+        let transcript = format!(
+            "{{\"id\":1,\"op\":\"counters\",\"sig\":{SIG},\
+             \"threads\":[3,1],\"cpu_totals\":[3.0,1.0]}}\n"
+        );
+        let opts = ServeOptions {
+            trace_out: Some(trace.clone()),
+            metrics_dump: Some(metrics.clone()),
+            ..ServeOptions::default()
+        };
+        serve_str(&transcript, opts);
+        let m = Json::parse(&std::fs::read_to_string(&metrics).unwrap())
+            .unwrap();
+        // At dump time everything is recorded, the metrics op included.
+        assert_eq!(m.get("connections").unwrap().get("requests")
+                       .and_then(Json::as_u64),
+                   Some(1));
+        let t = Json::parse(&std::fs::read_to_string(&trace).unwrap())
+            .unwrap();
+        let events = t.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!events.is_empty(), "trace should hold request spans");
+        let names: Vec<&str> = events.iter()
+            .filter_map(|e| e.get("name").and_then(Json::as_str))
+            .collect();
+        assert!(names.contains(&"request"), "{names:?}");
+        assert!(names.contains(&"flush"), "{names:?}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -241,6 +241,9 @@ impl LineServer {
         for handle in conns {
             let _ = handle.join();
         }
+        // Every connection is drained: dump --metrics-dump / --trace-out
+        // (if configured) while the full recorded state is visible.
+        self.ctx.dump_artifacts();
         let summary = self.ctx.summary();
         #[cfg(unix)]
         if let Endpoint::Unix(path) = &self.endpoint {
@@ -283,7 +286,9 @@ impl LineServer {
 
 /// One thread per connection: run the shared JSONL loop until the peer
 /// closes or errors.  Connection failures are logged, never propagated —
-/// the daemon outlives its clients.
+/// the daemon outlives its clients.  Each connection draws a monotonic id
+/// from the shared [`crate::obs::ServeObs`] so its close line (and any
+/// error) can be matched to the aggregate transport counters.
 fn spawn_connection<R, W>(ctx: &Arc<ServeContext>, conns: &ConnHandles,
                           reader: R, mut writer: W)
 where
@@ -294,10 +299,23 @@ where
     let handle = std::thread::Builder::new()
         .name("numabw-conn".to_string())
         .spawn(move || {
-            if let Err(e) = ctx.serve_io(BufReader::new(reader),
-                                         &mut writer) {
-                eprintln!("numabw serve: connection closed with error: \
-                           {e:#}");
+            let conn_id = ctx.obs().next_conn_id();
+            match ctx.serve_conn(conn_id, BufReader::new(reader),
+                                 &mut writer) {
+                Ok(cs) => {
+                    eprintln!(
+                        "numabw serve: connection {conn_id} closed \
+                         ({} requests, {} errors, {} bytes in, {} bytes \
+                         out)",
+                        cs.requests, cs.errors, cs.bytes_in, cs.bytes_out
+                    );
+                }
+                Err(e) => {
+                    eprintln!(
+                        "numabw serve: connection {conn_id} closed with \
+                         error: {e:#}"
+                    );
+                }
             }
         })
         .expect("spawning a connection thread");

@@ -9,12 +9,17 @@ use std::collections::BTreeMap;
 use std::fmt;
 
 /// A JSON value.  Numbers are kept as `f64` (all our payloads are counters,
-/// fractions, and shapes — comfortably inside the 2^53 integer range).
+/// fractions, and shapes — comfortably inside the 2^53 integer range), with
+/// an exact `Int` escape hatch for u64 counters that exceed 2^53 (a lifetime
+/// byte counter can: `(1<<53) as f64` silently rounds).  `Int` is only ever
+/// produced for values where the f64 path would lose precision, so the two
+/// spellings never alias for small integers.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
     Null,
     Bool(bool),
     Num(f64),
+    Int(u64),
     Str(String),
     Arr(Vec<Json>),
     Obj(BTreeMap<String, Json>),
@@ -42,6 +47,17 @@ impl Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
 
+    /// Exact u64 counter.  Values at or below 2^53 use the `Num` spelling
+    /// (identical bytes on the wire, and `==` keeps working against parsed
+    /// replies); larger values use the lossless `Int` spelling.
+    pub fn from_u64(n: u64) -> Json {
+        if n <= MAX_SAFE_F64_INT {
+            Json::Num(n as f64)
+        } else {
+            Json::Int(n)
+        }
+    }
+
     // ---- accessors ---------------------------------------------------------
 
     pub fn get(&self, key: &str) -> Option<&Json> {
@@ -51,16 +67,34 @@ impl Json {
         }
     }
 
-    /// Panic-free typed getters.
+    /// Panic-free typed getters.  `Int` answers as `f64` too (lossy above
+    /// 2^53) so numeric call sites need not care which spelling arrived.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
+            Json::Int(n) => Some(*n as f64),
             _ => None,
         }
     }
 
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
+    }
+
+    /// Exact u64 view: `Int` verbatim, `Num` when it is a non-negative
+    /// integer inside the safe range.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Int(n) => Some(*n),
+            Json::Num(n)
+                if n.fract() == 0.0
+                    && *n >= 0.0
+                    && *n <= MAX_SAFE_F64_INT as f64 =>
+            {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
     }
 
     pub fn as_str(&self) -> Option<&str> {
@@ -118,6 +152,7 @@ impl Json {
                     out.push_str("null"); // JSON has no Inf/NaN
                 }
             }
+            Json::Int(n) => out.push_str(&format!("{n}")),
             Json::Str(s) => write_escaped(s, out),
             Json::Arr(a) => {
                 out.push('[');
@@ -196,6 +231,10 @@ impl fmt::Display for JsonError {
 impl std::error::Error for JsonError {}
 
 const MAX_DEPTH: usize = 128;
+
+/// Largest integer such that every non-negative integer up to it maps to a
+/// distinct f64 (2^53).
+const MAX_SAFE_F64_INT: u64 = 1 << 53;
 
 struct Parser<'a> {
     bytes: &'a [u8],
@@ -291,6 +330,19 @@ impl<'a> Parser<'a> {
         }
         let s = std::str::from_utf8(&self.bytes[start..self.pos])
             .map_err(|_| self.err("invalid utf8 in number"))?;
+        // Unsigned integer literals above 2^53 take the exact path: the f64
+        // representation would round them, so `parse -> encode` would change
+        // the bytes of a large counter.  Everything else (small integers
+        // included) keeps the historical `Num` spelling.
+        if !s.starts_with('-')
+            && s.bytes().all(|b| b.is_ascii_digit())
+        {
+            if let Ok(n) = s.parse::<u64>() {
+                if n > MAX_SAFE_F64_INT {
+                    return Ok(Json::Int(n));
+                }
+            }
+        }
         s.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("invalid number"))
@@ -478,6 +530,39 @@ mod tests {
     fn integers_encode_without_fraction() {
         assert_eq!(Json::Num(64.0).encode(), "64");
         assert_eq!(Json::Num(2.5).encode(), "2.5");
+    }
+
+    #[test]
+    fn large_counters_roundtrip_byte_exactly() {
+        // Regression: (2^53 + 1) as f64 rounds to 2^53, so the Num path
+        // silently decremented any odd counter above the safe range.
+        let odd = (1u64 << 53) + 1;
+        assert_ne!((odd as f64) as u64, odd, "f64 path must be lossy here");
+        for n in [odd, u64::MAX, u64::MAX - 1, (1u64 << 60) + 7] {
+            let text = n.to_string();
+            let v = Json::parse(&text).unwrap();
+            assert_eq!(v, Json::Int(n), "{n}");
+            assert_eq!(v.encode(), text, "byte-exact round-trip for {n}");
+            assert_eq!(v.as_u64(), Some(n));
+            assert_eq!(Json::from_u64(n), Json::Int(n));
+        }
+        // Exact integers inside the safe range keep the historical Num
+        // spelling so equality against parsed replies still holds.
+        for n in [0u64, 1, 64, (1 << 53) - 1, 1 << 53] {
+            assert_eq!(Json::from_u64(n), Json::Num(n as f64), "{n}");
+            assert_eq!(Json::parse(&n.to_string()).unwrap(),
+                       Json::Num(n as f64));
+            assert_eq!(Json::from_u64(n).encode(), n.to_string());
+            assert_eq!(Json::Num(n as f64).as_u64(), Some(n));
+        }
+        // Negative and fractional literals never take the Int path.
+        assert_eq!(Json::parse("-9007199254740993").unwrap(),
+                   Json::Num(-9007199254740993i64 as f64));
+        assert_eq!(Json::parse("2.5").unwrap(), Json::Num(2.5));
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Num(2.5).as_u64(), None);
+        // Int answers the lossy f64 view too.
+        assert_eq!(Json::Int(odd).as_f64(), Some(odd as f64));
     }
 
     #[test]

@@ -476,6 +476,140 @@ fn unix_socket_transport_round_trips_and_cleans_up() {
 }
 
 #[test]
+fn telemetry_artifacts_record_tcp_load() {
+    use std::collections::HashMap;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    use numabw::util::json::Json;
+
+    let dir = std::env::temp_dir()
+        .join(format!("numabw-telemetry-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("trace.json");
+    let metrics = dir.join("metrics.json");
+    let opts = ServeOptions {
+        trace_out: Some(trace.clone()),
+        metrics_dump: Some(metrics.clone()),
+        ..ServeOptions::default()
+    };
+    let server = numabw::server::LineServer::start_tcp(
+        PredictionService::reference(),
+        opts,
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap();
+    // Two sequential connections, two requests each: a counters query
+    // plus a live metrics op.
+    for conn in 0..2u64 {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(COUNTERS_LINE.as_bytes()).unwrap();
+        stream
+            .write_all(b"{\"id\":2,\"op\":\"metrics\"}\n")
+            .unwrap();
+        stream.flush().unwrap();
+        stream.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_counters_reply(&line);
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let reply = Json::parse(&line).unwrap();
+        assert_eq!(reply.get("ok").and_then(|j| j.as_bool()), Some(true),
+                   "{line}");
+        let m = reply.get("result").unwrap();
+        // The live view counts every request already replied to: conn 0
+        // sees 1 (its counters line), conn 1 sees 3 (a request's own
+        // latency is recorded only after its reply is on the wire).
+        assert_eq!(
+            m.get("connections").unwrap().get("requests")
+                .and_then(Json::as_u64),
+            Some(2 * conn + 1),
+            "{line}"
+        );
+        // Drain to EOF so the server has fully finished (and recorded)
+        // this connection before the next one opens.
+        line.clear();
+        while reader.read_line(&mut line).unwrap() > 0 {
+            line.clear();
+        }
+    }
+    let summary = server.shutdown();
+    assert!(
+        summary.contains(
+            "numabw_request_latency_ns_count{op=\"counters\"} 2"
+        ),
+        "{summary}"
+    );
+
+    // --metrics-dump: written after every connection drained, so totals
+    // cover all 4 replies and both connections.
+    let m = Json::parse(&std::fs::read_to_string(&metrics).unwrap())
+        .unwrap();
+    let conns = m.get("connections").unwrap();
+    assert_eq!(conns.get("opened").and_then(Json::as_u64), Some(2));
+    assert_eq!(conns.get("closed").and_then(Json::as_u64), Some(2));
+    assert_eq!(conns.get("requests").and_then(Json::as_u64), Some(4));
+    assert_eq!(conns.get("errors").and_then(Json::as_u64), Some(0));
+    let lat = m.get("histograms").unwrap().get("request_latency")
+        .unwrap();
+    let total: u64 = ["advise", "counters", "invalid", "metrics", "perf",
+                      "stats"]
+        .iter()
+        .map(|op| {
+            lat.get(op).unwrap().get("count").and_then(Json::as_u64)
+                .unwrap()
+        })
+        .sum();
+    assert_eq!(total, 4,
+               "histogram totals must equal the request count: {lat:?}");
+
+    // --trace-out: parses, nothing dropped, and the X events on each
+    // thread are well-nested (every span closes inside its enclosing
+    // span).
+    let t = Json::parse(&std::fs::read_to_string(&trace).unwrap())
+        .unwrap();
+    assert_eq!(t.get("droppedEvents").and_then(Json::as_u64), Some(0));
+    let events = t.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    let names: Vec<&str> = events.iter()
+        .filter_map(|e| e.get("name").and_then(Json::as_str))
+        .collect();
+    for want in ["request", "enqueue", "await_reply", "flush",
+                 "execute:counters", "reply"] {
+        assert!(names.contains(&want), "missing {want:?} in {names:?}");
+    }
+    let mut by_tid: HashMap<u64, Vec<(f64, f64)>> = HashMap::new();
+    for e in events {
+        assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"));
+        let tid = e.get("tid").and_then(Json::as_u64).unwrap();
+        let ts = e.get("ts").and_then(Json::as_f64).unwrap();
+        let dur = e.get("dur").and_then(Json::as_f64).unwrap();
+        by_tid.entry(tid).or_default().push((ts, ts + dur));
+    }
+    for (tid, spans) in by_tid {
+        // The export is sorted by start time; walk a stack of open ends.
+        let mut stack: Vec<f64> = Vec::new();
+        for (start, end) in spans {
+            while stack.last().is_some_and(|&top| start >= top) {
+                stack.pop();
+            }
+            if let Some(&top) = stack.last() {
+                assert!(
+                    end <= top,
+                    "tid {tid}: span [{start}, {end}] crosses its \
+                     enclosing span's end {top}"
+                );
+            }
+            stack.push(end);
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn smoke_transcript_reproduces_the_golden_replies() {
     // Same fixture CI pipes through the release binary:
     //   numabw serve < serve_smoke.jsonl | diff - serve_smoke.golden.jsonl
