@@ -1,0 +1,130 @@
+#!/usr/bin/env python3
+"""Shard-scaling smoke for the serve daemon (CI, release binary).
+
+Drives the same deterministic 1024-request counters load, over a real
+TCP socket with concurrent clients, against `--shards 1` and
+`--shards 4`.  Sharding must be invisible in results: after sorting by
+request id, the two reply sets must be byte-identical.  Also reports
+the throughput delta (informational — CI runners are too noisy to
+gate on wall-clock).
+
+Counters-only on purpose: `stats`/`metrics` replies are snapshots of
+live counters, which legitimately differ run to run under concurrency.
+
+Usage: shard_smoke.py <numabw-binary> [base-port]
+"""
+
+import json
+import socket
+import subprocess
+import sys
+import threading
+import time
+
+CLIENTS = 4
+PER_CLIENT = 256
+
+
+def load_lines():
+    """CLIENTS * PER_CLIENT deterministic single-query counters requests.
+
+    Both daemons parse the exact same bytes, so float round-tripping
+    cannot introduce drift between the runs.
+    """
+    lines = []
+    for i in range(CLIENTS * PER_CLIENT):
+        req = {
+            "id": i,
+            "op": "counters",
+            "sig": {
+                "static": 0.05 + (i % 7) * 0.05,
+                "local": 0.1 + (i % 5) * 0.1,
+                "perthread": 0.02 * (i % 4),
+                "static_socket": i % 2,
+                "misfit": 0,
+            },
+            "threads": [1 + i % 17, 1 + (i * 7) % 17],
+            "cpu_totals": [1e9 + i, 2e9 - i],
+        }
+        lines.append(json.dumps(req, separators=(",", ":")))
+    return lines
+
+
+def start_daemon(binary, port, shards):
+    proc = subprocess.Popen(
+        [binary, "serve", "--listen", f"127.0.0.1:{port}",
+         "--shards", str(shards)],
+        stdout=subprocess.DEVNULL,
+        stderr=subprocess.DEVNULL,
+    )
+    for _ in range(100):
+        try:
+            socket.create_connection(("127.0.0.1", port),
+                                     timeout=0.2).close()
+            return proc
+        except OSError:
+            time.sleep(0.1)
+    proc.kill()
+    raise SystemExit(f"daemon with --shards {shards} never came up")
+
+
+def run_load(binary, port, shards, lines):
+    proc = start_daemon(binary, port, shards)
+    replies = [None] * CLIENTS
+    errors = []
+
+    def client(c):
+        try:
+            chunk = lines[c * PER_CLIENT:(c + 1) * PER_CLIENT]
+            with socket.create_connection(("127.0.0.1", port)) as s:
+                s.sendall(("\n".join(chunk) + "\n").encode())
+                f = s.makefile("r")
+                got = [f.readline() for _ in chunk]
+            if any(not line for line in got):
+                raise RuntimeError("daemon closed the connection early")
+            replies[c] = got
+        except Exception as e:  # surfaced after join
+            errors.append(f"client {c}: {e}")
+
+    threads = [threading.Thread(target=client, args=(c,))
+               for c in range(CLIENTS)]
+    t0 = time.monotonic()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.monotonic() - t0
+    proc.terminate()
+    proc.wait(timeout=10)
+    if errors:
+        raise SystemExit("; ".join(errors))
+    flat = [line for chunk in replies for line in chunk]
+    return sorted(flat, key=lambda r: json.loads(r)["id"]), wall
+
+
+def main():
+    if len(sys.argv) < 2:
+        raise SystemExit(__doc__)
+    binary = sys.argv[1]
+    base_port = int(sys.argv[2]) if len(sys.argv) > 2 else 7701
+    lines = load_lines()
+    single, t1 = run_load(binary, base_port, 1, lines)
+    sharded, t4 = run_load(binary, base_port + 1, 4, lines)
+    n = CLIENTS * PER_CLIENT
+    assert len(single) == n and len(sharded) == n
+    for a, b in zip(single, sharded):
+        if a != b:
+            raise SystemExit(
+                "reply drift between --shards 1 and --shards 4:\n"
+                f"  {a}  {b}")
+    bad = [r for r in single if not json.loads(r)["ok"]]
+    if bad:
+        raise SystemExit(f"{len(bad)} error replies, first: {bad[0]}")
+    print(f"shard smoke: {n} replies byte-identical between "
+          f"--shards 1 ({n / t1:.0f} qps) and "
+          f"--shards 4 ({n / t4:.0f} qps); "
+          f"speedup {t1 / t4:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,18 +22,20 @@ use numabw::util::json::Json;
 use numabw::util::rng::Rng;
 use numabw::workloads::suite;
 
-/// Open-loop serving load generator: `workers` client threads fire
-/// counter queries at a fixed aggregate arrival rate against one shared
-/// coalescing front-end, and each request's latency is measured from its
-/// *scheduled* arrival (not from when the worker got around to sending
-/// it), so queueing delay from an overloaded server shows up in the tail
-/// instead of silently throttling the offered load.  Exact quantiles over
-/// all recorded latencies (sorted, rank `ceil(q*n)`) are printed and
-/// written to `BENCH_serve.json` — the machine-readable perf trajectory
-/// CI records on every run.
-fn bench_serve_open_loop() {
+/// One open-loop serving run at a given shard count: `workers` client
+/// threads fire counter queries at a fixed aggregate arrival rate
+/// against a sharded front-end group, and each request's latency is
+/// measured from its *scheduled* arrival (not from when the worker got
+/// around to sending it), so queueing delay from an overloaded server
+/// shows up in the tail instead of silently throttling the offered
+/// load.  Exact quantiles over all recorded latencies (sorted, rank
+/// `ceil(q*n)`) are printed and returned as a JSON record.
+fn serve_open_loop_run(shards: usize) -> Json {
     use std::sync::{Arc, Barrier, Mutex};
     use std::time::{Duration, Instant};
+
+    use numabw::obs::ServeObs;
+    use numabw::server::{sharded_client, MetricsSnapshot};
 
     const WORKERS: usize = 4;
     const RATE_QPS: f64 = 2_000.0;
@@ -42,15 +44,23 @@ fn bench_serve_open_loop() {
 
     println!(
         "=== serve: open-loop load ({WORKERS} workers, \
-         {RATE_QPS:.0} qps offered, {DURATION_S:.0}s) ===\n"
+         {RATE_QPS:.0} qps offered, {DURATION_S:.0}s, \
+         {shards} shard(s)) ===\n"
     );
-    let frontend = FrontEnd::start(
-        PredictionService::reference(),
-        FrontEndConfig {
-            batch_size: None,
-            window: Duration::from_micros(200),
-        },
-    );
+    let obs = Arc::new(ServeObs::for_shards(shards));
+    let frontends: Vec<FrontEnd> = (0..shards)
+        .map(|i| {
+            FrontEnd::start_shard(
+                PredictionService::reference(),
+                FrontEndConfig {
+                    batch_size: None,
+                    window: Duration::from_micros(200),
+                },
+                obs.clone(),
+                i,
+            )
+        })
+        .collect();
     let sig = ChannelSignature::new(0.2, 0.35, 0.3, 1);
     // A bounded placement set with repeats — the advisor's production
     // shape — so the matrix cache works like it would in the field.
@@ -64,7 +74,7 @@ fn bench_serve_open_loop() {
         Arc::new(Mutex::new(Vec::with_capacity(total)));
     let mut handles = Vec::new();
     for w in 0..WORKERS {
-        let client = frontend.client();
+        let client = sharded_client(&frontends);
         let barrier = barrier.clone();
         let latencies = latencies.clone();
         let placements = placements.clone();
@@ -115,8 +125,12 @@ fn bench_serve_open_loop() {
     let (p50, p90, p99) = (q(0.50), q(0.90), q(0.99));
     let max_ms = lat[n - 1] as f64 / 1e6;
     let achieved_qps = n as f64 / wall;
-    let snap = frontend.metrics().snapshot();
-    frontend.shutdown();
+    let snaps: Vec<MetricsSnapshot> =
+        frontends.iter().map(|f| f.metrics().snapshot()).collect();
+    let snap = MetricsSnapshot::merged_over(snaps.iter());
+    for frontend in frontends {
+        frontend.shutdown();
+    }
 
     println!(
         "  {n} requests in {wall:.2}s -> {achieved_qps:.0} qps achieved\n\
@@ -126,10 +140,11 @@ fn bench_serve_open_loop() {
         snap.flushes(),
         snap.mean_batch()
     );
-    let record = Json::from_pairs([
+    Json::from_pairs([
         ("bench", Json::Str("serve_open_loop".to_string())),
         ("backend", Json::Str("rust-reference".to_string())),
         ("workers", Json::from_u64(WORKERS as u64)),
+        ("shards", Json::from_u64(shards as u64)),
         ("arrival_rate_qps", Json::Num(RATE_QPS)),
         ("duration_s", Json::Num(DURATION_S)),
         ("requests", Json::from_u64(n as u64)),
@@ -140,7 +155,18 @@ fn bench_serve_open_loop() {
         ("max_ms", Json::Num(max_ms)),
         ("flushes", Json::from_u64(snap.flushes())),
         ("mean_batch", Json::Num(snap.mean_batch())),
-    ]);
+    ])
+}
+
+/// Open-loop sweep over shard counts.  `BENCH_serve.json` keeps its
+/// historical top-level keys (taken from the 1-shard run, so the perf
+/// trajectory stays comparable across commits) and gains a
+/// `shard_sweep` array with one record per shard count.
+fn bench_serve_open_loop() {
+    let sweep: Vec<Json> =
+        [1usize, 2, 4].iter().map(|&s| serve_open_loop_run(s)).collect();
+    let mut record = sweep[0].clone();
+    record.set("shard_sweep", Json::Arr(sweep));
     match std::fs::write("BENCH_serve.json", record.encode()) {
         Ok(()) => println!("  wrote BENCH_serve.json\n"),
         Err(e) => eprintln!("  could not write BENCH_serve.json: {e}"),

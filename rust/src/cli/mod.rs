@@ -59,7 +59,7 @@ pub fn main_with(args: Vec<String>) -> Result<()> {
         .and_then(|_| cmd_advise(&args)),
         Some("serve") => known(&[
             "listen", "store", "seed", "batch", "window-ms", "engine",
-            "trace-out", "metrics-dump",
+            "trace-out", "metrics-dump", "shards", "workers",
         ])
         .and_then(|_| cmd_serve(&args)),
         Some("evaluate") => known(&["machine", "engine", "seed"])
@@ -98,15 +98,26 @@ USAGE: numabw <subcommand> [flags]
                                     forever (seed-guarded)
   serve     [--listen A] [--store F] [--seed S] [--batch N]
             [--window-ms W] [--engine E] [--trace-out F]
-            [--metrics-dump F]
+            [--metrics-dump F] [--shards N] [--workers M]
                                     line-delimited JSON daemon: ops
                                     counters|perf|advise|stats|metrics
                                     through the concurrent coalescing
                                     front-end + model registry.  Default
                                     transport is stdin/stdout; --listen
                                     serves TCP (host:port) or a unix
-                                    socket (unix:/path), one thread per
-                                    connection into the same front-end.
+                                    socket (unix:/path) through a fixed
+                                    pool of --workers connection threads
+                                    (default 8; over-capacity connections
+                                    get one error line and are closed).
+                                    --shards N (default 1, max 16) runs N
+                                    front-end dispatcher shards; queries
+                                    route by a deterministic key hash, so
+                                    results are bit-identical to one
+                                    shard — raise it when one dispatcher
+                                    saturates a core, keep the default
+                                    for small fleets (one shard batches
+                                    best).  Size --workers to expected
+                                    concurrent connections, not shards.
                                     --trace-out records request spans and
                                     writes Chrome trace_event JSON at
                                     shutdown (load into chrome://tracing);
@@ -366,10 +377,8 @@ fn advise_signature(args: &Args, svc: &PredictionService, sim: &Simulator,
     match args.get("store") {
         None => fit_fresh(),
         Some(path) => {
-            let registry = ModelRegistry::open(
-                std::path::Path::new(path),
-                server::DEFAULT_REGISTRY_CAP,
-            )?;
+            let registry =
+                ModelRegistry::open(std::path::Path::new(path))?;
             let known = registry.len();
             let sig = registry.get_or_fit(&sim.machine.name, &w.name,
                                           seed_flag(args), fit_fresh)?;
@@ -439,6 +448,18 @@ fn cmd_advise(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let svc = service_flag(args)?;
+    let defaults = ServeOptions::default();
+    let shards = args.get_usize("shards", defaults.shards);
+    if !(1..=crate::obs::MAX_SHARDS).contains(&shards) {
+        bail!(
+            "--shards must be in 1..={}, got {shards}",
+            crate::obs::MAX_SHARDS
+        );
+    }
+    let workers = args.get_usize("workers", defaults.workers);
+    if workers == 0 {
+        bail!("--workers must be at least 1");
+    }
     let opts = ServeOptions {
         store: args.get("store").map(std::path::PathBuf::from),
         seed: seed_flag(args),
@@ -452,10 +473,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         metrics_dump: args
             .get("metrics-dump")
             .map(std::path::PathBuf::from),
+        shards,
+        workers,
     };
     if let Some(addr) = args.get("listen") {
         // Socket transports: TCP (`host:port`) or unix (`unix:/path`),
-        // one thread per connection, all coalescing into one front-end.
+        // a fixed pool of --workers connection threads, all coalescing
+        // into the same sharded front-end group.
         let listener = match addr.strip_prefix("unix:") {
             Some(path) => server::LineServer::start_unix(
                 svc,
@@ -748,6 +772,17 @@ mod tests {
         .unwrap();
         let text = String::from_utf8(out).unwrap();
         assert!(text.contains("\"ok\":true"), "{text}");
+    }
+
+    #[test]
+    fn serve_flag_validation_rejects_bad_shards_and_workers() {
+        // Validation fires before any transport (or stdin loop) starts.
+        let err = main_with(toks("serve --shards 0")).unwrap_err();
+        assert!(format!("{err}").contains("--shards"), "{err}");
+        let err = main_with(toks("serve --shards 99")).unwrap_err();
+        assert!(format!("{err}").contains("--shards"), "{err}");
+        let err = main_with(toks("serve --workers 0")).unwrap_err();
+        assert!(format!("{err}").contains("--workers"), "{err}");
     }
 
     #[test]

@@ -309,9 +309,27 @@ impl CacheStats {
 
     /// Component-wise sum over all caches.
     pub fn total(&self) -> CacheCounters {
-        self.named()
-            .iter()
-            .fold(CacheCounters::default(), |acc, (_, c)| acc.merged(c))
+        CacheCounters::merged_over(self.named().map(|(_, c)| c))
+    }
+
+    /// Per-cache component-wise sum of two services' stats (per-shard
+    /// roll-up: each front-end shard owns its own memo caches).
+    pub fn merged(&self, other: &CacheStats) -> CacheStats {
+        CacheStats {
+            matrix: self.matrix.merged(&other.matrix),
+            counter: self.counter.merged(&other.counter),
+            perf: self.perf.merged(&other.perf),
+        }
+    }
+
+    /// Roll up every shard's cache stats into one aggregate.
+    pub fn merged_over<'a, I>(stats: I) -> CacheStats
+    where
+        I: IntoIterator<Item = &'a CacheStats>,
+    {
+        stats
+            .into_iter()
+            .fold(CacheStats::default(), |acc, s| acc.merged(s))
     }
 
     /// Aggregate hits across all caches.
@@ -484,6 +502,17 @@ impl PredictionService {
             other => Err(anyhow!(
                 "unknown engine {other:?} (reference|native|hlo)"
             )),
+        }
+    }
+
+    /// A fresh service over the same engine kind, with its own (cold)
+    /// memo caches — the sharded serving front-end builds one per shard.
+    /// Cold caches cannot change results: every cache memoizes a pure
+    /// function of its key, so siblings are bit-identical servers.
+    pub fn sibling(&self) -> Result<PredictionService> {
+        match self.backend_name() {
+            "rust-reference" => Ok(Self::reference()),
+            name => Self::by_name(name),
         }
     }
 

@@ -29,24 +29,33 @@
 //! toward the paper's stated endgame of feeding systems like Pandia:
 //!
 //! ```text
-//!  client threads ──┐
-//!  client threads ──┼─ server::Client ──mpsc──▶ FrontEnd dispatcher
-//!  client threads ──┘                           (coalesce across requests;
-//!   (or `numabw serve`:                          flush on batch size or
-//!    JSONL stdin/stdout, TCP,                    deadline — BatchWindow)
-//!    or unix socket — one thread                         │
-//!    per connection, one shared            ModelRegistry + PredictionService
-//!    front-end)                             (one dispatch per batch; shared
-//!                                            LRU memo caches, CacheStats)
-//!                                                        │
-//!                                       ExecutionBackend dispatch
-//!                            ┌──────────────────┼─────────────────────┐
-//!                      reference            native                  hlo
-//!                   (per-row f64,     (batched f32 tensors,   (HLO-text modules
-//!                    the oracle)       any S, in-process)      through the in-repo
-//!                                                              parser + interpreter;
-//!                                                              emitted per-S offline,
-//!                                                              or AOT exports)
+//!  connections ──▶ accept thread ──▶ bounded queue ──▶ worker pool
+//!   (TCP / unix      (over-capacity connections        (--workers M
+//!    sockets)         shed with one JSON error          threads running
+//!                     line)                             the JSONL loop)
+//!                                                            │
+//!  client threads ── server::Client ────────────────────────┤
+//!   (or `numabw serve` JSONL stdin/stdout)                  │
+//!                                                           │
+//!                                     shard = hash(query key) % N
+//!                                        ┌──────────┼──────────┐
+//!         ModelRegistry              FrontEnd   FrontEnd   FrontEnd
+//!   (epoch-stamped immutable        (--shards N dispatchers: coalesce
+//!    snapshots; fits publish         across requests; flush on batch
+//!    a new epoch)                    size or deadline — BatchWindow)
+//!                                        │          │          │
+//!                          PredictionService (one per shard; per-shard
+//!                           LRU memo caches, CacheStats merged for
+//!                           stats; one engine dispatch per flush)
+//!                                             │
+//!                                ExecutionBackend dispatch
+//!                     ┌──────────────────┼─────────────────────┐
+//!               reference            native                  hlo
+//!            (per-row f64,     (batched f32 tensors,   (HLO-text modules
+//!             the oracle)       any S, in-process)      through the in-repo
+//!                                                       parser + interpreter;
+//!                                                       emitted per-S offline,
+//!                                                       or AOT exports)
 //! ```
 //!
 //! * **Execution backends** ([`runtime`]): [`runtime::NativeEngine`]
@@ -81,14 +90,23 @@
 //! * [`server`] generalises batching across callers: a std-only
 //!   [`server::FrontEnd`] (threads + channels + `Instant` deadlines)
 //!   coalesces queries from many client threads into one engine dispatch
-//!   per batch window, and [`server::ModelRegistry`] serves fitted
-//!   signatures out of the on-disk store, fit-once-serve-forever, with
+//!   per batch window per shard — `--shards N` runs N dispatcher shards,
+//!   each owning the slice of the key space its deterministic FNV-1a
+//!   query-key hash selects ([`server::shard_of_counter`] /
+//!   [`server::shard_of_perf`]), with its own batch window and memo
+//!   caches.  [`server::ModelRegistry`] serves fitted signatures out of
+//!   the on-disk store through epoch-stamped immutable
+//!   [`server::RegistrySnapshot`]s — hot-path reads clone the current
+//!   snapshot instead of taking the write lock, fits/refits publish a
+//!   new snapshot with the epoch bumped, fit-once-serve-forever, with
 //!   machine+seed invalidation.  Exposed as the `numabw serve` JSONL
-//!   daemon — stdin/stdout, or TCP / unix-socket via
-//!   `--listen` ([`server::LineServer`]: one thread per connection, every
-//!   connection coalescing into the same front-end) — and the in-process
-//!   [`server::Client`] — still bit-identical to per-query serving
-//!   (pinned by `tests/serve.rs`).
+//!   daemon — stdin/stdout, or TCP / unix-socket via `--listen`
+//!   ([`server::LineServer`]: an accept thread feeding a bounded queue
+//!   drained by a fixed `--workers` pool that sheds over-capacity
+//!   connections with one JSON error line) — and the in-process
+//!   [`server::Client`] (scatter/gather across shards) — still
+//!   bit-identical to per-query, single-dispatcher serving at any shard
+//!   count (pinned by `tests/serve.rs`).
 //! * [`coordinator::advisor`] enumerates every valid [`ThreadPlacement`]
 //!   for a machine, scores each by predicted achieved bandwidth and
 //!   interconnect headroom through any [`coordinator::PerfServer`] (the
@@ -112,8 +130,8 @@
 //!   `--metrics-dump FILE` at shutdown, and a Prometheus-style text
 //!   exposition appended to the shutdown summary.  `benches/`
 //!   `perf_hotpaths.rs` closes the loop with an open-loop load generator
-//!   writing `BENCH_serve.json` (p50/p99/QPS), the recorded perf
-//!   trajectory CI extends on every run.
+//!   writing `BENCH_serve.json` (p50/p99/QPS, swept over `--shards`
+//!   1/2/4), the recorded perf trajectory CI extends on every run.
 //! * The whole serving path is **socket-count-generic** (paper §5.2):
 //!   queries carry length-S placements and the machine's full
 //!   `2S + 2S(S-1)` capacity vector, flows follow the

@@ -41,6 +41,25 @@ use trace::{SpanGuard, Tracer};
 pub const REQUEST_OPS: &[&str] =
     &["advise", "counters", "invalid", "metrics", "perf", "stats"];
 
+/// Upper bound on `serve --shards N`: [`hist::HistFamily`] labels must be
+/// `'static`, so the shard label table is fixed at build time.  Sixteen
+/// dispatcher shards saturate any machine this daemon runs on long before
+/// the label table does.
+pub const MAX_SHARDS: usize = 16;
+
+/// `'static` per-shard histogram labels (`shard0`..`shard15`).
+static SHARD_LABELS: [&str; MAX_SHARDS] = [
+    "shard0", "shard1", "shard2", "shard3", "shard4", "shard5", "shard6",
+    "shard7", "shard8", "shard9", "shard10", "shard11", "shard12",
+    "shard13", "shard14", "shard15",
+];
+
+/// The `'static` histogram label of shard `i` (panics past [`MAX_SHARDS`];
+/// the CLI validates user input first).
+pub fn shard_label(i: usize) -> &'static str {
+    SHARD_LABELS[i]
+}
+
 /// Aggregate transport counters.  Updated inline per line / connection so
 /// a `stats` or `metrics` op observes live totals.
 #[derive(Default)]
@@ -51,6 +70,10 @@ pub struct ConnTotals {
     pub errors: AtomicU64,
     pub bytes_in: AtomicU64,
     pub bytes_out: AtomicU64,
+    /// Connections shed at the accept queue (worker pool at capacity);
+    /// these are never `opened` — they are answered with one error line
+    /// and closed.
+    pub rejected: AtomicU64,
 }
 
 impl ConnTotals {
@@ -62,6 +85,7 @@ impl ConnTotals {
             ("closed", ld(&self.closed)),
             ("errors", ld(&self.errors)),
             ("opened", ld(&self.opened)),
+            ("rejected", ld(&self.rejected)),
             ("requests", ld(&self.requests)),
         ])
     }
@@ -75,7 +99,13 @@ pub struct ServeObs {
     /// End-to-end request latency (parse → reply flushed), keyed by op.
     pub request_latency: HistFamily,
     /// Per-flush queue wait: oldest enqueue in the batch → flush start.
+    /// Aggregated over every shard (telemetry invariant: its count equals
+    /// the summed flush counters).
     pub queue_wait: LatencyHistogram,
+    /// The same queue-wait samples keyed by dispatcher shard.  Sized by
+    /// the server's `--shards`; rendered only when sharded (a one-shard
+    /// family would duplicate `queue_wait` line for line).
+    pub shard_queue_wait: HistFamily,
     /// Engine execute wall time keyed by pipeline; `Arc` because the
     /// `TimedBackend` wrapper in `runtime` shares it.
     pub engine_execute: Arc<HistFamily>,
@@ -93,24 +123,46 @@ impl Default for ServeObs {
 
 impl ServeObs {
     pub fn new() -> ServeObs {
-        ServeObs::build(None)
+        ServeObs::build(1, None)
     }
 
     /// Obs bundle with span tracing enabled (`--trace-out`).
     pub fn with_tracer(ring_cap: usize) -> ServeObs {
-        ServeObs::build(Some(Arc::new(Tracer::new(ring_cap))))
+        ServeObs::build(1, Some(Arc::new(Tracer::new(ring_cap))))
     }
 
-    fn build(tracer: Option<Arc<Tracer>>) -> ServeObs {
+    /// Obs bundle for an N-shard front-end group (per-shard queue-wait
+    /// labels `shard0..shard{N-1}`).
+    pub fn for_shards(shards: usize) -> ServeObs {
+        ServeObs::build(shards, None)
+    }
+
+    /// [`ServeObs::for_shards`] with span tracing enabled.
+    pub fn for_shards_with_tracer(shards: usize, ring_cap: usize)
+        -> ServeObs {
+        ServeObs::build(shards, Some(Arc::new(Tracer::new(ring_cap))))
+    }
+
+    fn build(shards: usize, tracer: Option<Arc<Tracer>>) -> ServeObs {
+        assert!(
+            (1..=MAX_SHARDS).contains(&shards),
+            "shard count must be in 1..={MAX_SHARDS}, got {shards}"
+        );
         ServeObs {
             started: Instant::now(),
             request_latency: HistFamily::new(REQUEST_OPS),
             queue_wait: LatencyHistogram::new(),
+            shard_queue_wait: HistFamily::new(&SHARD_LABELS[..shards]),
             engine_execute: Arc::new(HistFamily::new(&PIPELINES)),
             conns: ConnTotals::default(),
             next_conn_id: AtomicU64::new(0),
             tracer,
         }
+    }
+
+    /// How many front-end shards this bundle is labeled for.
+    pub fn shards(&self) -> usize {
+        self.shard_queue_wait.names().len()
     }
 
     /// Milliseconds since this server came up; monotonic.
@@ -134,13 +186,21 @@ impl ServeObs {
         self.next_conn_id.fetch_add(1, Ordering::Relaxed)
     }
 
-    /// All histogram families as one JSON object.
+    /// All histogram families as one JSON object.  The per-shard
+    /// queue-wait view appears only when actually sharded — a one-shard
+    /// family would duplicate `queue_wait` entry for entry (and the
+    /// single-shard rendering is pinned by golden fixtures).
     pub fn histograms_json(&self) -> Json {
-        Json::from_pairs([
+        let mut pairs = vec![
             ("engine_execute", self.engine_execute.to_json()),
             ("queue_wait", self.queue_wait.snapshot().to_json()),
-            ("request_latency", self.request_latency.to_json()),
-        ])
+        ];
+        if self.shards() > 1 {
+            pairs.push(("queue_wait_by_shard",
+                        self.shard_queue_wait.to_json()));
+        }
+        pairs.push(("request_latency", self.request_latency.to_json()));
+        Json::from_pairs(pairs)
     }
 
     /// Deterministic rendering of everything this bundle owns (histograms
@@ -174,6 +234,8 @@ pub fn prometheus_text(
         ("connections_closed", obs.conns.closed.load(Ordering::Relaxed)),
         ("connection_requests", obs.conns.requests.load(Ordering::Relaxed)),
         ("connection_errors", obs.conns.errors.load(Ordering::Relaxed)),
+        ("connections_rejected",
+         obs.conns.rejected.load(Ordering::Relaxed)),
         ("bytes_read", obs.conns.bytes_in.load(Ordering::Relaxed)),
         ("bytes_written", obs.conns.bytes_out.load(Ordering::Relaxed)),
     ];
@@ -227,6 +289,11 @@ pub fn prometheus_text(
         summary("request_latency_ns", Some(("op", op)), hist);
     }
     summary("queue_wait_ns", None, &obs.queue_wait);
+    if obs.shards() > 1 {
+        for (shard, hist) in obs.shard_queue_wait.iter() {
+            summary("queue_wait_ns", Some(("shard", shard)), hist);
+        }
+    }
     for (pipeline, hist) in obs.engine_execute.iter() {
         summary("engine_execute_ns", Some(("pipeline", pipeline)), hist);
     }
@@ -251,7 +318,8 @@ mod tests {
             .replace('H', empty_hist);
         let expect = format!(
             "{{\"connections\":{{\"bytes_in\":0,\"bytes_out\":0,\
-             \"closed\":0,\"errors\":0,\"opened\":0,\"requests\":0}},\
+             \"closed\":0,\"errors\":0,\"opened\":0,\"rejected\":0,\
+             \"requests\":0}},\
              \"histograms\":{{\"engine_execute\":{pipelines},\
              \"queue_wait\":{empty_hist},\"request_latency\":{ops}}}}}"
         );
@@ -302,6 +370,54 @@ mod tests {
     }
 
     #[test]
+    fn sharded_obs_adds_labeled_queue_wait_views() {
+        let obs = ServeObs::for_shards(3);
+        assert_eq!(obs.shards(), 3);
+        obs.queue_wait.record(100);
+        obs.shard_queue_wait.record(shard_label(0), 100);
+        obs.queue_wait.record(900);
+        obs.shard_queue_wait.record(shard_label(2), 900);
+        let h = obs.to_json();
+        let by_shard = h.get("histograms").unwrap()
+            .get("queue_wait_by_shard").unwrap();
+        assert_eq!(
+            by_shard.get("shard0").unwrap().get("count").unwrap().as_u64(),
+            Some(1)
+        );
+        assert_eq!(
+            by_shard.get("shard1").unwrap().get("count").unwrap().as_u64(),
+            Some(0)
+        );
+        assert_eq!(
+            by_shard.get("shard2").unwrap().get("max_ns").unwrap().as_u64(),
+            Some(900)
+        );
+        // The aggregate view still carries every sample.
+        assert_eq!(obs.queue_wait.snapshot().count(), 2);
+        // And the exposition gains shard-labeled summaries.
+        let text = prometheus_text(&obs, &[], &[]);
+        assert!(text.contains("numabw_queue_wait_ns_count{shard=\"shard0\"} 1"),
+                "{text}");
+        assert!(text.contains("numabw_queue_wait_ns_count{shard=\"shard2\"} 1"),
+                "{text}");
+        assert!(!text.contains("shard1\"}"), "empty shards are skipped");
+    }
+
+    #[test]
+    fn unsharded_obs_renders_no_shard_views() {
+        // The default bundle must keep the pinned single-shard renderings:
+        // no queue_wait_by_shard key, no shard-labeled summaries, even
+        // with samples recorded into the (size-1) family.
+        let obs = ServeObs::new();
+        assert_eq!(obs.shards(), 1);
+        obs.queue_wait.record(50);
+        obs.shard_queue_wait.record(shard_label(0), 50);
+        assert!(obs.to_json().get("histograms").unwrap()
+            .get("queue_wait_by_shard").is_none());
+        assert!(!prometheus_text(&obs, &[], &[]).contains("shard"));
+    }
+
+    #[test]
     fn conn_ids_are_monotonic_from_zero() {
         let obs = ServeObs::new();
         assert_eq!(obs.next_conn_id(), 0);
@@ -333,6 +449,8 @@ numabw_connections_closed_total 0
 numabw_connection_requests_total 2
 # TYPE numabw_connection_errors_total counter
 numabw_connection_errors_total 0
+# TYPE numabw_connections_rejected_total counter
+numabw_connections_rejected_total 0
 # TYPE numabw_bytes_read_total counter
 numabw_bytes_read_total 0
 # TYPE numabw_bytes_written_total counter

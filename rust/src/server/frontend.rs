@@ -1,17 +1,20 @@
 //! The concurrent serving front-end: cross-request coalescing over the
 //! prediction service, std-only (threads + channels + `Instant`
-//! deadlines — no async runtime).
+//! deadlines — no async runtime), optionally sharded N ways by a
+//! deterministic hash of the query key.
 //!
 //! ```text
-//!  client thread ──┐
-//!  client thread ──┼─ Client::perf/counters ──mpsc──▶ dispatcher thread
-//!  client thread ──┘      (one reply channel               │
-//!                          per request)          coalesce into one pending
+//!  client thread ──┐            shard = fnv1a(sig, threads) % N
+//!  client thread ──┼─ Client::perf/counters ──mpsc──▶ shard 0 dispatcher
+//!  client thread ──┘      (one reply channel     ├──▶ shard 1 dispatcher
+//!                          per request span)     └──▶ ...
+//!                                                          │ per shard:
+//!                                                coalesce into one pending
 //!                                                batch; flush on size or
 //!                                                deadline (BatchWindow)
 //!                                                          │
 //!                                              PredictionService::serve_*
-//!                                               (shared LRU memo caches)
+//!                                               (per-shard LRU memo caches)
 //!                                                          │
 //!                                        split results by request span and
 //!                                        fan out over the reply channels
@@ -25,6 +28,14 @@
 //! [`PredictionService::serve_perf`] are bit-identical to the per-query
 //! path regardless of how a stream is grouped, any interleaving of
 //! arrivals produces bit-identical answers (pinned by `tests/serve.rs`).
+//!
+//! Sharding only *partitions the key space*: every query deterministically
+//! lands on one shard ([`shard_of_counter`] / [`shard_of_perf`] hash the
+//! signature + placement, i.e. the memo-cache key prefix), each shard's
+//! caches memoize pure functions of their keys, and the batched paths
+//! perform exactly the per-query floating-point operations — so an
+//! N-shard front-end is bit-identical to the single-dispatcher path too
+//! (also pinned by `tests/serve.rs`).
 //!
 //! Shutdown: dropping the [`FrontEnd`] (after all [`Client`] handles are
 //! gone) disconnects the request channel; the dispatcher drains pending
@@ -41,8 +52,9 @@ use anyhow::{anyhow, Result};
 use crate::coordinator::service::{
     CounterQuery, PerfQuery, PerfServer, PredictionService,
 };
+use crate::model::signature::ChannelSignature;
 use crate::obs::trace::Tracer;
-use crate::obs::ServeObs;
+use crate::obs::{shard_label, ServeObs};
 use crate::runtime::BatchWindow;
 
 use super::metrics::{FlushReason, ServeMetrics};
@@ -84,6 +96,66 @@ impl Request {
     }
 }
 
+// ---- deterministic shard routing -------------------------------------------
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Tiny FNV-1a accumulator: a stable, dependency-free hash whose value is
+/// part of the serving contract (the same query must land on the same
+/// shard in every process, so cache locality and the scaling smoke's
+/// reply-set comparison are reproducible).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(FNV_OFFSET)
+    }
+
+    fn bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= u64::from(b);
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.bytes(&v.to_bits().to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+}
+
+/// Hash the shard key — the full-bit signature plus the thread placement,
+/// i.e. the prefix every memo-cache key starts with, so all cache entries
+/// of a key live on exactly one shard.
+fn shard_key(sig: &ChannelSignature, threads: &[usize]) -> u64 {
+    let mut h = Fnv::new();
+    h.f64(sig.static_frac);
+    h.f64(sig.local_frac);
+    h.f64(sig.perthread_frac);
+    h.f64(sig.misfit);
+    h.u64(sig.static_socket as u64);
+    for &t in threads {
+        h.u64(t as u64);
+    }
+    h.0
+}
+
+/// The shard (in `0..shards`) a counter query deterministically routes to.
+pub fn shard_of_counter(q: &CounterQuery, shards: usize) -> usize {
+    (shard_key(&q.sig, &q.threads) % shards.max(1) as u64) as usize
+}
+
+/// The shard (in `0..shards`) a performance query deterministically
+/// routes to.  Keyed by `(sig, threads)` only — `demand`/`caps` variants
+/// of one placement share the shard, keeping its matrix cache hot.
+pub fn shard_of_perf(q: &PerfQuery, shards: usize) -> usize {
+    (shard_key(&q.sig, &q.threads) % shards.max(1) as u64) as usize
+}
+
 /// Front-end tuning.
 #[derive(Clone, Copy, Debug)]
 pub struct FrontEndConfig {
@@ -104,7 +176,7 @@ impl Default for FrontEndConfig {
     }
 }
 
-/// Handle owning the dispatcher thread.  Dropping (or
+/// Handle owning one dispatcher (shard) thread.  Dropping (or
 /// [`FrontEnd::shutdown`]-ing) it sends an explicit shutdown message,
 /// drains pending work, and joins the dispatcher — outstanding [`Client`]
 /// handles do not block shutdown; their later requests error cleanly.
@@ -114,6 +186,7 @@ pub struct FrontEnd {
     svc: Arc<PredictionService>,
     metrics: Arc<ServeMetrics>,
     obs: Arc<ServeObs>,
+    shard: usize,
 }
 
 impl FrontEnd {
@@ -131,6 +204,18 @@ impl FrontEnd {
         cfg: FrontEndConfig,
         obs: Arc<ServeObs>,
     ) -> FrontEnd {
+        FrontEnd::start_shard(svc, cfg, obs, 0)
+    }
+
+    /// Start dispatcher shard `shard` of a sharded front-end: its own
+    /// thread (`numabw-frontend-<shard>`), [`BatchWindow`], and service
+    /// (memo caches) — sharing only the observability bundle.
+    pub fn start_shard(
+        svc: PredictionService,
+        cfg: FrontEndConfig,
+        obs: Arc<ServeObs>,
+        shard: usize,
+    ) -> FrontEnd {
         let svc = Arc::new(svc);
         let metrics = Arc::new(ServeMetrics::default());
         let window = BatchWindow::new(
@@ -141,11 +226,12 @@ impl FrontEnd {
         let dispatcher_svc = svc.clone();
         let dispatcher_metrics = metrics.clone();
         let dispatcher_obs = obs.clone();
+        let label = shard_label(shard);
         let handle = std::thread::Builder::new()
-            .name("numabw-frontend".to_string())
+            .name(format!("numabw-frontend-{shard}"))
             .spawn(move || {
                 dispatch_loop(rx, &dispatcher_svc, window,
-                              &dispatcher_metrics, &dispatcher_obs)
+                              &dispatcher_metrics, &dispatcher_obs, label)
             })
             .expect("spawning the front-end dispatcher thread");
         FrontEnd {
@@ -154,18 +240,29 @@ impl FrontEnd {
             svc,
             metrics,
             obs,
+            shard,
         }
     }
 
-    /// A cheap, clonable submission handle (one per client thread).
+    /// A cheap, clonable submission handle into this one shard.  For a
+    /// sharded front-end, use [`sharded_client`] over all shards instead.
     pub fn client(&self) -> Client {
         Client {
-            tx: self.tx.as_ref().expect("front-end is running").clone(),
+            txs: vec![self.sender()],
             tracer: self.obs.tracer().cloned(),
         }
     }
 
-    /// The shared service behind the dispatcher (fit calls, cache stats).
+    fn sender(&self) -> Sender<Request> {
+        self.tx.as_ref().expect("front-end is running").clone()
+    }
+
+    /// This shard's index within its front-end group (0 for unsharded).
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// The shard's service behind the dispatcher (fit calls, cache stats).
     pub fn service(&self) -> &PredictionService {
         &self.svc
     }
@@ -204,11 +301,23 @@ impl Drop for FrontEnd {
     }
 }
 
-/// Blocking request handle into the front-end.  Clone freely — every
-/// client thread should own one.
+/// A fan-out [`Client`] over a group of front-end shards: every query in
+/// a request routes to its key's shard, replies reassemble in request
+/// order.  With one shard this is exactly [`FrontEnd::client`].
+pub fn sharded_client(shards: &[FrontEnd]) -> Client {
+    assert!(!shards.is_empty(), "a front-end group has at least one shard");
+    Client {
+        txs: shards.iter().map(FrontEnd::sender).collect(),
+        tracer: shards[0].obs.tracer().cloned(),
+    }
+}
+
+/// Blocking request handle into the front-end (one shard, or a fan-out
+/// over N — see [`sharded_client`]).  Clone freely — every client thread
+/// should own one.
 #[derive(Clone)]
 pub struct Client {
-    tx: Sender<Request>,
+    txs: Vec<Sender<Request>>,
     /// Present iff the owning front-end traces; spans the channel send
     /// ("enqueue") and the blocking wait ("await_reply").
     tracer: Option<Arc<Tracer>>,
@@ -222,7 +331,7 @@ impl Client {
         let (reply_tx, reply_rx) = mpsc::channel();
         {
             let _g = self.tracer.as_ref().map(|t| Tracer::span(t, "enqueue"));
-            self.tx
+            self.txs[0]
                 .send(make(reply_tx, Instant::now()))
                 .map_err(|_| anyhow!("serving front-end is shut down"))?;
         }
@@ -233,6 +342,72 @@ impl Client {
             .map_err(|e| anyhow!(e))
     }
 
+    /// Partition `queries` by shard, submit one sub-request per non-empty
+    /// shard (all sends before any receive, so shards coalesce and serve
+    /// concurrently), then reassemble the replies in request order.
+    fn scatter<Q, T>(
+        &self,
+        queries: Vec<Q>,
+        shard_of: fn(&Q, usize) -> usize,
+        make: impl Fn(Vec<Q>, Sender<Reply<Vec<T>>>, Instant) -> Request,
+    ) -> Result<Vec<T>> {
+        let n = self.txs.len();
+        let mut parts: Vec<Vec<Q>> = Vec::with_capacity(n);
+        parts.resize_with(n, Vec::new);
+        let mut route = Vec::with_capacity(queries.len());
+        for q in queries {
+            let s = shard_of(&q, n);
+            route.push(s);
+            parts[s].push(q);
+        }
+        let mut rxs: Vec<Option<Receiver<Reply<Vec<T>>>>> =
+            Vec::with_capacity(n);
+        rxs.resize_with(n, || None);
+        {
+            let _g = self.tracer.as_ref().map(|t| Tracer::span(t, "enqueue"));
+            for (s, part) in parts.into_iter().enumerate() {
+                if part.is_empty() {
+                    continue;
+                }
+                let (reply_tx, reply_rx) = mpsc::channel();
+                self.txs[s]
+                    .send(make(part, reply_tx, Instant::now()))
+                    .map_err(|_| {
+                        anyhow!("serving front-end is shut down")
+                    })?;
+                rxs[s] = Some(reply_rx);
+            }
+        }
+        let _g = self.tracer.as_ref().map(|t| Tracer::span(t, "await_reply"));
+        let mut results: Vec<Option<std::vec::IntoIter<T>>> =
+            Vec::with_capacity(n);
+        for rx in rxs {
+            results.push(match rx {
+                Some(rx) => Some(
+                    rx.recv()
+                        .map_err(|_| anyhow!(
+                            "serving front-end dropped the request"
+                        ))?
+                        .map_err(|e| anyhow!(e))?
+                        .into_iter(),
+                ),
+                None => None,
+            });
+        }
+        // Per-shard results arrive in the order their queries were pushed,
+        // so walking the route replays the original request order.
+        let mut out = Vec::with_capacity(route.len());
+        for s in route {
+            out.push(
+                results[s]
+                    .as_mut()
+                    .and_then(Iterator::next)
+                    .expect("one result per routed query"),
+            );
+        }
+        Ok(out)
+    }
+
     /// Submit a block of counter queries; blocks until the coalesced batch
     /// containing them is served.
     pub fn counters_many(&self, queries: Vec<CounterQuery>)
@@ -240,7 +415,12 @@ impl Client {
         if queries.is_empty() {
             return Ok(Vec::new());
         }
-        self.roundtrip(|reply, enqueued| {
+        if self.txs.len() == 1 {
+            return self.roundtrip(|reply, enqueued| {
+                Request::Counters { queries, reply, enqueued }
+            });
+        }
+        self.scatter(queries, shard_of_counter, |queries, reply, enqueued| {
             Request::Counters { queries, reply, enqueued }
         })
     }
@@ -260,7 +440,12 @@ impl Client {
         if queries.is_empty() {
             return Ok(Vec::new());
         }
-        self.roundtrip(|reply, enqueued| {
+        if self.txs.len() == 1 {
+            return self.roundtrip(|reply, enqueued| {
+                Request::Perf { queries, reply, enqueued }
+            });
+        }
+        self.scatter(queries, shard_of_perf, |queries, reply, enqueued| {
             Request::Perf { queries, reply, enqueued }
         })
     }
@@ -339,7 +524,7 @@ impl PendingBatch {
 
 fn dispatch_loop(rx: Receiver<Request>, svc: &PredictionService,
                  window: BatchWindow, metrics: &ServeMetrics,
-                 obs: &ServeObs) {
+                 obs: &ServeObs, shard: &'static str) {
     let mut pending = PendingBatch::default();
     let mut deadline: Option<Instant> = None;
     loop {
@@ -355,7 +540,7 @@ fn dispatch_loop(rx: Receiver<Request>, svc: &PredictionService,
         match msg {
             Ok(Request::Shutdown) => {
                 if !pending.is_empty() {
-                    flush(svc, &mut pending, metrics, obs,
+                    flush(svc, &mut pending, metrics, obs, shard,
                           FlushReason::Drain);
                 }
                 return;
@@ -369,21 +554,21 @@ fn dispatch_loop(rx: Receiver<Request>, svc: &PredictionService,
                 }
                 pending.enqueue(req);
                 if window.size_triggered(pending.len()) {
-                    flush(svc, &mut pending, metrics, obs,
+                    flush(svc, &mut pending, metrics, obs, shard,
                           FlushReason::Size);
                     deadline = None;
                 }
             }
             Err(RecvTimeoutError::Timeout) => {
                 if !pending.is_empty() {
-                    flush(svc, &mut pending, metrics, obs,
+                    flush(svc, &mut pending, metrics, obs, shard,
                           FlushReason::Deadline);
                 }
                 deadline = None;
             }
             Err(RecvTimeoutError::Disconnected) => {
                 if !pending.is_empty() {
-                    flush(svc, &mut pending, metrics, obs,
+                    flush(svc, &mut pending, metrics, obs, shard,
                           FlushReason::Drain);
                 }
                 return;
@@ -395,14 +580,15 @@ fn dispatch_loop(rx: Receiver<Request>, svc: &PredictionService,
 /// Serve everything pending in one dispatch per query kind, then fan the
 /// results back out to each requester by its span.
 fn flush(svc: &PredictionService, pending: &mut PendingBatch,
-         metrics: &ServeMetrics, obs: &ServeObs, reason: FlushReason) {
+         metrics: &ServeMetrics, obs: &ServeObs, shard: &'static str,
+         reason: FlushReason) {
     let batch = std::mem::take(pending);
     metrics.record_flush(reason, batch.len());
     let now = Instant::now();
     if let Some(oldest) = batch.oldest {
-        obs.queue_wait.record(
-            now.saturating_duration_since(oldest).as_nanos() as u64,
-        );
+        let waited = now.saturating_duration_since(oldest).as_nanos() as u64;
+        obs.queue_wait.record(waited);
+        obs.shard_queue_wait.record(shard, waited);
     }
     if let (Some(tracer), Some(opened)) = (obs.tracer(), batch.opened) {
         // The coalescing window as a closed interval ending where the
@@ -465,7 +651,6 @@ fn fan_out<T>(result: Result<Vec<T>>,
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::signature::ChannelSignature;
     use crate::util::rng::Rng;
 
     fn random_counter_query(rng: &mut Rng) -> CounterQuery {
@@ -597,5 +782,81 @@ mod tests {
             .counters(random_counter_query(&mut rng))
             .unwrap_err();
         assert!(format!("{err}").contains("shut down"), "{err}");
+    }
+
+    #[test]
+    fn shard_routing_is_deterministic_and_in_range() {
+        let mut rng = Rng::new(0xFE06);
+        for shards in [1usize, 2, 4, 7] {
+            let mut used = vec![0usize; shards];
+            for _ in 0..64 {
+                let q = random_counter_query(&mut rng);
+                let s = shard_of_counter(&q, shards);
+                assert_eq!(s, shard_of_counter(&q, shards));
+                assert!(s < shards);
+                used[s] += 1;
+            }
+            if shards > 1 {
+                // 64 random keys over ≤7 shards: all-on-one-shard would
+                // mean the hash ignores its input.
+                assert!(used.iter().filter(|&&c| c > 0).count() > 1,
+                        "{used:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_client_is_bit_identical_to_one_shard() {
+        let mut rng = Rng::new(0xFE07);
+        let queries: Vec<CounterQuery> =
+            (0..256).map(|_| random_counter_query(&mut rng)).collect();
+        let single = FrontEnd::start(
+            PredictionService::reference(),
+            FrontEndConfig {
+                batch_size: Some(32),
+                window: Duration::from_micros(200),
+            },
+        );
+        let want = single.client().counters_many(queries.clone()).unwrap();
+        single.shutdown();
+
+        let obs = Arc::new(ServeObs::for_shards(4));
+        let shards: Vec<FrontEnd> = (0..4)
+            .map(|i| {
+                FrontEnd::start_shard(
+                    PredictionService::reference(),
+                    FrontEndConfig {
+                        batch_size: Some(32),
+                        window: Duration::from_micros(200),
+                    },
+                    obs.clone(),
+                    i,
+                )
+            })
+            .collect();
+        let client = sharded_client(&shards);
+        let got = client.counters_many(queries.clone()).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x[0].to_bits(), y[0].to_bits(), "query {i}");
+                assert_eq!(x[1].to_bits(), y[1].to_bits(), "query {i}");
+            }
+        }
+        // Every query landed on exactly one shard, and the per-shard
+        // metrics partition the stream.
+        let served: u64 = shards
+            .iter()
+            .map(|fe| fe.metrics().snapshot().queries)
+            .sum();
+        assert_eq!(served, queries.len() as u64);
+        let busy = shards
+            .iter()
+            .filter(|fe| fe.metrics().snapshot().queries > 0)
+            .count();
+        assert!(busy > 1, "256 keys must spread over >1 of 4 shards");
+        for fe in shards {
+            fe.shutdown();
+        }
     }
 }

@@ -10,6 +10,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::coordinator::service::{counters_table, CacheStats};
+use crate::report;
 use crate::util::json::Json;
 use crate::util::lru::CacheCounters;
 
@@ -92,6 +93,32 @@ impl MetricsSnapshot {
         self.flushes_size + self.flushes_deadline + self.flushes_drain
     }
 
+    /// Component-wise roll-up of two shards' snapshots: counters sum,
+    /// `max_batch` takes the max (it is a high-water mark, not a total).
+    pub fn merged(&self, other: &MetricsSnapshot) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests + other.requests,
+            queries: self.queries + other.queries,
+            flushes_size: self.flushes_size + other.flushes_size,
+            flushes_deadline: self.flushes_deadline
+                + other.flushes_deadline,
+            flushes_drain: self.flushes_drain + other.flushes_drain,
+            max_batch: self.max_batch.max(other.max_batch),
+        }
+    }
+
+    /// Roll up every shard of a front-end group into one snapshot — the
+    /// aggregate the plain `stats` op and the shutdown summary render, so
+    /// their shape is independent of `--shards`.
+    pub fn merged_over<'a, I>(snaps: I) -> MetricsSnapshot
+    where
+        I: IntoIterator<Item = &'a MetricsSnapshot>,
+    {
+        snaps
+            .into_iter()
+            .fold(MetricsSnapshot::default(), |acc, s| acc.merged(s))
+    }
+
     /// Mean queries coalesced per engine dispatch.
     pub fn mean_batch(&self) -> f64 {
         if self.flushes() == 0 {
@@ -131,6 +158,37 @@ pub fn cache_table(stats: &CacheStats, registry: &CacheCounters) -> String {
     let mut named: Vec<(&str, CacheCounters)> = stats.named().to_vec();
     named.push(("registry", *registry));
     counters_table(&named)
+}
+
+/// Per-shard flush/batch rows plus the roll-up row — the sharded
+/// counterpart of [`MetricsSnapshot`] rendering in the shutdown summary
+/// (only printed when `--shards > 1`; aggregate-only output stays
+/// byte-identical to the unsharded daemon's).
+pub fn shard_table(snaps: &[MetricsSnapshot]) -> String {
+    let row = |name: String, s: &MetricsSnapshot| -> Vec<String> {
+        vec![
+            name,
+            s.requests.to_string(),
+            s.queries.to_string(),
+            s.flushes_size.to_string(),
+            s.flushes_deadline.to_string(),
+            s.flushes_drain.to_string(),
+            s.max_batch.to_string(),
+            format!("{:.1}", s.mean_batch()),
+        ]
+    };
+    let mut rows: Vec<Vec<String>> = snaps
+        .iter()
+        .enumerate()
+        .map(|(i, s)| row(format!("shard{i}"), s))
+        .collect();
+    rows.push(row("total".to_string(),
+                  &MetricsSnapshot::merged_over(snaps)));
+    report::table(
+        &["shard", "requests", "queries", "fl_size", "fl_deadline",
+          "fl_drain", "max_batch", "mean_batch"],
+        &rows,
+    )
 }
 
 #[cfg(test)]
@@ -201,6 +259,53 @@ mod tests {
         let text = snap.to_json().encode();
         assert!(text.contains(&format!("\"queries\":{big}")), "{text}");
         assert_eq!(Json::parse(&text).unwrap().encode(), text);
+    }
+
+    #[test]
+    fn merged_snapshots_sum_counters_and_max_the_high_water_mark() {
+        let a = MetricsSnapshot {
+            requests: 2,
+            queries: 10,
+            flushes_size: 1,
+            flushes_deadline: 2,
+            flushes_drain: 0,
+            max_batch: 8,
+        };
+        let b = MetricsSnapshot {
+            requests: 3,
+            queries: 5,
+            flushes_size: 0,
+            flushes_deadline: 1,
+            flushes_drain: 1,
+            max_batch: 5,
+        };
+        let m = MetricsSnapshot::merged_over([&a, &b]);
+        assert_eq!(m.requests, 5);
+        assert_eq!(m.queries, 15);
+        assert_eq!(m.flushes(), 5);
+        assert_eq!(m.max_batch, 8, "high-water mark, not a sum");
+        assert_eq!(MetricsSnapshot::merged_over([&a]), a);
+        assert_eq!(MetricsSnapshot::merged_over(std::iter::empty()),
+                   Default::default());
+    }
+
+    #[test]
+    fn shard_table_renders_one_row_per_shard_plus_total() {
+        let a = MetricsSnapshot {
+            requests: 1, queries: 4, flushes_size: 1,
+            flushes_deadline: 0, flushes_drain: 0, max_batch: 4,
+        };
+        let b = MetricsSnapshot {
+            requests: 2, queries: 2, flushes_size: 0,
+            flushes_deadline: 2, flushes_drain: 0, max_batch: 1,
+        };
+        let t = shard_table(&[a, b]);
+        assert!(t.contains("shard0"), "{t}");
+        assert!(t.contains("shard1"), "{t}");
+        assert!(t.contains("total"), "{t}");
+        let total_row = t.lines().find(|l| l.contains("total")).unwrap();
+        assert!(total_row.contains('3') && total_row.contains('6'),
+                "{total_row}");
     }
 
     #[test]

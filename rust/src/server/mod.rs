@@ -5,45 +5,59 @@
 //!
 //! ```text
 //!   numabw serve (JSONL stdin/stdout │ --listen tcp │ unix socket)
-//!                         │                                in-process users
-//!         protocol::serve_lines / transport::LineServer         │
-//!              (one thread per connection)               server::Client
-//!                         │                                     │
-//!        ┌────────────────┴───────────────┬────────────────────┘
-//!        │                                │
-//!  ModelRegistry                     FrontEnd dispatcher
-//!  (signature-keyed LRU          (cross-request coalescing:
-//!   over SignatureStore,          size- or deadline-triggered
-//!   machine+seed guarded)         flush via runtime::BatchWindow)
-//!        │                                │
-//!        └────────► PredictionService ◄───┘
+//!                         │
+//!              accept thread → bounded queue            in-process users
+//!                         │                                    │
+//!           worker pool (--workers M threads,           server::Client
+//!            over-capacity connections shed                   │
+//!            with one JSON error line)                        │
+//!                         │                                   │
+//!        ┌────────────────┴────────────────┬─────────────────┘
+//!        │                                 │
+//!  ModelRegistry              shard = hash(query key) % N
+//!  (epoch-stamped immutable      ┌─────────┼─────────┐
+//!   snapshots over a          FrontEnd  FrontEnd  FrontEnd  (--shards N)
+//!   SignatureStore;           (per-shard cross-request coalescing:
+//!   fits/refits publish        size- or deadline-triggered flush via
+//!   a new snapshot and         runtime::BatchWindow; per-shard memo
+//!   bump the epoch;            caches + CacheStats, merged for stats)
+//!   machine+seed guarded)        │         │         │
+//!        │                       └─────────┼─────────┘
+//!        └──────────► PredictionService ◄──┘  (one per shard)
 //!              (ExecutionBackend dispatch: reference | native | hlo;
 //!               shared LRU memo caches, CacheStats)
 //! ```
 //!
-//! * [`frontend`] — [`FrontEnd`] / [`Client`]: many client threads, one
-//!   dispatcher, one engine dispatch per batch window, results fanned
-//!   back over per-request channels.  Bit-identical to per-query serving
+//! * [`frontend`] — [`FrontEnd`] / [`Client`]: many client threads, N
+//!   dispatcher shards, one engine dispatch per batch window per shard,
+//!   results fanned back over per-request channels.  Queries route to
+//!   shards by a deterministic FNV-1a hash of the query key, so sharding
+//!   is invisible in results: bit-identical to a single dispatcher
 //!   (pinned by `tests/serve.rs`).
-//! * [`registry`] — [`ModelRegistry`]: LRU-evicting, store-backed fitted
-//!   model registry with machine+seed invalidation.
+//! * [`registry`] — [`ModelRegistry`]: store-backed fitted model
+//!   registry serving epoch-stamped immutable [`RegistrySnapshot`]s.
+//!   Reads never take the write lock; fits and refits build the next
+//!   snapshot and publish it atomically with an epoch bump.
 //! * [`protocol`] — the line-delimited JSON wire format and the
 //!   `numabw serve` stdin/stdout loop ([`serve_lines`]).
 //! * [`transport`] — [`LineServer`]: std-only TCP and unix-socket
-//!   listeners, one thread per connection, every connection coalescing
-//!   into the same front-end (`numabw serve --listen <addr>`).
-//! * [`metrics`] — request/flush counters ([`ServeMetrics`]) and the
-//!   serve-side cache-table rendering.
+//!   listeners feeding a fixed-size connection worker pool
+//!   (`numabw serve --listen <addr> --workers M`); the pool bounds both
+//!   thread count and queued connections, shedding over-capacity
+//!   connections with a JSON error line.
+//! * [`metrics`] — request/flush counters ([`ServeMetrics`]), per-shard
+//!   roll-ups ([`MetricsSnapshot::merged_over`]), and the serve-side
+//!   cache/shard table renderings.
 //!
 //! The whole path is instrumented through [`crate::obs`]: always-on
 //! lock-free latency histograms (request end-to-end by op, per-flush
-//! queue wait, engine execute by pipeline), per-connection transport
-//! counters, and opt-in span tracing (`--trace-out`, Chrome
-//! `trace_event` JSON).  The recorded state is served live by the
-//! `metrics` protocol op and `{"op":"stats","extended":true}`, dumped
-//! at shutdown via
-//! `--metrics-dump`, and rendered as a Prometheus-style exposition under
-//! the shutdown summary.
+//! queue wait — aggregate and per shard — engine execute by pipeline),
+//! per-connection transport counters (including shed connections), and
+//! opt-in span tracing (`--trace-out`, Chrome `trace_event` JSON).  The
+//! recorded state is served live by the `metrics` protocol op and
+//! `{"op":"stats","extended":true}` (which adds per-shard detail and the
+//! registry epoch), dumped at shutdown via `--metrics-dump`, and
+//! rendered as a Prometheus-style exposition under the shutdown summary.
 
 pub mod frontend;
 pub mod metrics;
@@ -51,8 +65,11 @@ pub mod protocol;
 pub mod registry;
 pub mod transport;
 
-pub use frontend::{Client, FrontEnd, FrontEndConfig};
+pub use frontend::{
+    shard_of_counter, shard_of_perf, sharded_client, Client, FrontEnd,
+    FrontEndConfig,
+};
 pub use metrics::{FlushReason, MetricsSnapshot, ServeMetrics};
 pub use protocol::{parse_request, serve_lines, ProtoRequest, ServeOptions};
-pub use registry::{ModelRegistry, DEFAULT_REGISTRY_CAP};
-pub use transport::LineServer;
+pub use registry::{ModelRegistry, RegistrySnapshot};
+pub use transport::{LineServer, DEFAULT_WORKERS};

@@ -18,12 +18,15 @@
 //! {"id":6,"op":"metrics"}
 //! ```
 //!
-//! `stats` with `"extended": true` adds `uptime_ms` and aggregate
-//! connection totals to the reply (the plain reply is unchanged so golden
-//! transcripts stay byte-identical).  `metrics` returns the full
-//! observability state — latency histograms keyed by op and pipeline,
-//! queue-wait, connection totals, cache and front-end counters — as one
-//! sorted-key JSON object (see [`crate::obs`]).
+//! `stats` with `"extended": true` adds `uptime_ms`, aggregate connection
+//! totals, the registry epoch, and a per-shard detail array to the reply
+//! (the plain reply is unchanged so golden transcripts stay
+//! byte-identical).  `metrics` returns the full observability state —
+//! latency histograms keyed by op and pipeline, queue-wait (aggregate and
+//! per shard), connection totals, cache and front-end counters — as one
+//! sorted-key JSON object (see [`crate::obs`]).  Any request may add
+//! `"epoch": true` to have its reply stamped with the registry epoch that
+//! answered it.
 //!
 //! `counters` / `perf` also accept `"queries": [{...}, ...]` for a block
 //! of queries in one request (one coalesced dispatch).  `sig` is a channel
@@ -50,7 +53,9 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::coordinator::advisor;
-use crate::coordinator::service::{CounterQuery, FitRequest, PerfQuery};
+use crate::coordinator::service::{
+    CacheStats, CounterQuery, FitRequest, PerfQuery,
+};
 use crate::coordinator::{profile, PredictionService};
 use crate::model::signature::ChannelSignature;
 use crate::obs::{prometheus_text, trace, ServeObs};
@@ -59,9 +64,12 @@ use crate::topology::MachineTopology;
 use crate::util::json::Json;
 use crate::workloads;
 
-use super::frontend::{Client, FrontEnd, FrontEndConfig};
-use super::metrics::{cache_table, counters_json};
-use super::registry::{ModelRegistry, DEFAULT_REGISTRY_CAP};
+use super::frontend::{sharded_client, Client, FrontEnd, FrontEndConfig};
+use super::metrics::{
+    cache_table, counters_json, shard_table, MetricsSnapshot,
+};
+use super::registry::ModelRegistry;
+use super::transport::DEFAULT_WORKERS;
 
 /// `numabw serve` configuration.
 #[derive(Clone, Debug)]
@@ -80,6 +88,14 @@ pub struct ServeOptions {
     /// Write the full `metrics`-op JSON here at shutdown
     /// (`--metrics-dump`).
     pub metrics_dump: Option<PathBuf>,
+    /// Front-end dispatcher shards (`--shards`; each shard runs its own
+    /// coalescing loop and memo caches, and queries route to shards by a
+    /// deterministic hash of the query key, so results are bit-identical
+    /// to a single dispatcher).
+    pub shards: usize,
+    /// Connection worker pool size for the socket transports
+    /// (`--workers`).
+    pub workers: usize,
 }
 
 impl Default for ServeOptions {
@@ -91,6 +107,8 @@ impl Default for ServeOptions {
             window: Duration::from_millis(2),
             trace_out: None,
             metrics_dump: None,
+            shards: 1,
+            workers: DEFAULT_WORKERS,
         }
     }
 }
@@ -229,6 +247,13 @@ fn parse_queries<T>(j: &Json, one: fn(&Json) -> Result<T, String>)
 /// Parse one request line.
 pub fn parse_request(line: &str) -> Result<ProtoRequest, String> {
     let j = Json::parse(line).map_err(|e| e.to_string())?;
+    parse_request_json(&j)
+}
+
+/// Parse an already-decoded request object (the serve loop decodes once
+/// and also reads the transport-level `"epoch"` flag from the same
+/// object).
+fn parse_request_json(j: &Json) -> Result<ProtoRequest, String> {
     let id = j.get("id").cloned().unwrap_or(Json::Null);
     let op = j
         .get("op")
@@ -237,30 +262,30 @@ pub fn parse_request(line: &str) -> Result<ProtoRequest, String> {
     match op {
         "counters" => Ok(ProtoRequest::Counters {
             id,
-            queries: parse_queries(&j, parse_counter_query)?,
+            queries: parse_queries(j, parse_counter_query)?,
         }),
         "perf" => Ok(ProtoRequest::Perf {
             id,
-            queries: parse_queries(&j, parse_perf_query)?,
+            queries: parse_queries(j, parse_perf_query)?,
         }),
         "advise" => Ok(ProtoRequest::Advise {
             id,
-            machine: field(&j, "machine")?
+            machine: field(j, "machine")?
                 .as_str()
                 .ok_or_else(|| "field \"machine\" must be a string"
                     .to_string())?
                 .to_string(),
-            workload: field(&j, "workload")?
+            workload: field(j, "workload")?
                 .as_str()
                 .ok_or_else(|| "field \"workload\" must be a string"
                     .to_string())?
                 .to_string(),
             threads: match j.get("threads") {
-                Some(_) => Some(usize_field(&j, "threads")?),
+                Some(_) => Some(usize_field(j, "threads")?),
                 None => None,
             },
             top: match j.get("top") {
-                Some(_) => usize_field(&j, "top")?.max(1),
+                Some(_) => usize_field(j, "top")?.max(1),
                 None => 5,
             },
         }),
@@ -322,56 +347,99 @@ fn perf_result(served: &[Vec<f64>]) -> Json {
 /// Shared serving context of one `serve` session.  One context backs any
 /// number of concurrent transports: the stdin/stdout loop
 /// ([`serve_lines`]) and every TCP / unix-socket connection of a
-/// [`super::transport::LineServer`] all feed the same coalescing
-/// front-end and model registry.
+/// [`super::transport::LineServer`] all feed the same sharded front-end
+/// group and model registry.
 pub(crate) struct ServeContext {
-    frontend: FrontEnd,
+    /// The front-end dispatcher shards (`--shards` of them; one by
+    /// default).  Queries route to shards by a deterministic hash of the
+    /// query key, so sharding never changes results, only contention.
+    shards: Vec<FrontEnd>,
     client: Client,
     registry: ModelRegistry,
     opts: ServeOptions,
 }
 
 impl ServeContext {
-    /// Build the front-end + registry a serve session shares.
+    /// Build the front-end shards + registry a serve session shares.
     pub(crate) fn new(svc: PredictionService, opts: ServeOptions)
         -> Result<ServeContext> {
         let registry = match &opts.store {
-            Some(path) => ModelRegistry::open(path, DEFAULT_REGISTRY_CAP)?,
-            None => ModelRegistry::in_memory(DEFAULT_REGISTRY_CAP),
+            Some(path) => ModelRegistry::open(path)?,
+            None => ModelRegistry::in_memory(),
         };
-        // One observability bundle for the whole session; span tracing
-        // only when --trace-out asked for it.
+        let shard_count = opts.shards.max(1);
+        // One observability bundle for the whole session (with per-shard
+        // queue-wait labels); span tracing only when --trace-out asked
+        // for it.
         let obs = if opts.trace_out.is_some() {
-            Arc::new(ServeObs::with_tracer(trace::DEFAULT_RING_CAP))
+            Arc::new(ServeObs::for_shards_with_tracer(
+                shard_count,
+                trace::DEFAULT_RING_CAP,
+            ))
         } else {
-            Arc::new(ServeObs::new())
+            Arc::new(ServeObs::for_shards(shard_count))
         };
-        // Time engine executes per pipeline (and trace them) by wrapping
-        // whatever backend the service runs on.
-        let svc = svc.with_exec_observer(
-            obs.engine_execute.clone(),
-            obs.tracer().cloned(),
-        );
-        let frontend = FrontEnd::start_with_obs(
-            svc,
-            FrontEndConfig {
-                batch_size: opts.batch_size,
-                window: opts.window,
-            },
-            obs,
-        );
-        let client = frontend.client();
+        // Shard 0 runs the caller's service; every other shard runs a
+        // fresh same-engine sibling with its own memo caches.  Each
+        // wraps its backend so engine executes are timed (and traced)
+        // into the shared obs bundle.
+        let mut services = Vec::with_capacity(shard_count);
+        for _ in 1..shard_count {
+            services.push(svc.sibling()?);
+        }
+        services.insert(0, svc);
+        let shards: Vec<FrontEnd> = services
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let s = s.with_exec_observer(
+                    obs.engine_execute.clone(),
+                    obs.tracer().cloned(),
+                );
+                FrontEnd::start_shard(
+                    s,
+                    FrontEndConfig {
+                        batch_size: opts.batch_size,
+                        window: opts.window,
+                    },
+                    obs.clone(),
+                    i,
+                )
+            })
+            .collect();
+        let client = sharded_client(&shards);
         Ok(ServeContext {
-            frontend,
+            shards,
             client,
             registry,
             opts,
         })
     }
 
-    /// The session's observability bundle (owned by the front-end).
+    /// The session's observability bundle (shared by every shard).
     pub(crate) fn obs(&self) -> &Arc<ServeObs> {
-        self.frontend.obs()
+        self.shards[0].obs()
+    }
+
+    /// Connection worker pool size the socket transports should run
+    /// (`--workers`).
+    pub(crate) fn workers(&self) -> usize {
+        self.opts.workers.max(1)
+    }
+
+    /// Point-in-time metrics of every shard, in shard order.
+    fn shard_snapshots(&self) -> Vec<MetricsSnapshot> {
+        self.shards.iter().map(|f| f.metrics().snapshot()).collect()
+    }
+
+    /// Cache counters rolled up over every shard's service.
+    fn merged_cache_stats(&self) -> CacheStats {
+        let all: Vec<CacheStats> = self
+            .shards
+            .iter()
+            .map(|f| f.service().cache_stats())
+            .collect();
+        CacheStats::merged_over(all.iter())
     }
 
     /// A fixed-shape backend (an AOT-compiled 2-socket manifest) can
@@ -385,7 +453,7 @@ impl ServeContext {
         &self,
         sockets: I,
     ) -> Result<(), String> {
-        let svc = self.frontend.service();
+        let svc = self.shards[0].service();
         let Some(fixed) = svc.supported_sockets() else {
             return Ok(());
         };
@@ -447,7 +515,7 @@ impl ServeContext {
             .ok_or_else(|| {
                 anyhow::anyhow!("unknown machine {machine_name:?}")
             })?;
-        let svc = self.frontend.service();
+        let svc = self.shards[0].service();
         if let Some(fixed) = svc.supported_sockets() {
             if machine.sockets != fixed {
                 bail!(
@@ -473,8 +541,7 @@ impl ServeContext {
                     SimConfig::default().with_seed(seed),
                 );
                 let pair = profile(&sim, &w);
-                Ok(self
-                    .frontend
+                Ok(self.shards[0]
                     .service()
                     .fit(&[FitRequest {
                         sym: pair.sym,
@@ -517,8 +584,9 @@ impl ServeContext {
         ]))
     }
 
+    /// Cache counters (rolled up over every shard) plus the registry row.
     fn caches_json(&self) -> Json {
-        let cache = self.frontend.service().cache_stats();
+        let cache = self.merged_cache_stats();
         Json::from_pairs([
             ("matrix", counters_json(&cache.matrix)),
             ("counter", counters_json(&cache.counter)),
@@ -527,9 +595,38 @@ impl ServeContext {
         ])
     }
 
+    /// Per-shard detail array (shard id, front-end counters, cache
+    /// counters) — rendered by extended stats and the metrics op.
+    fn shards_json(&self) -> Json {
+        Json::Arr(
+            self.shards
+                .iter()
+                .map(|f| {
+                    let cache = f.service().cache_stats();
+                    Json::from_pairs([
+                        (
+                            "caches",
+                            Json::from_pairs([
+                                ("matrix", counters_json(&cache.matrix)),
+                                ("counter", counters_json(&cache.counter)),
+                                ("perf", counters_json(&cache.perf)),
+                            ]),
+                        ),
+                        ("frontend", f.metrics().snapshot().to_json()),
+                        ("shard", Json::from_u64(f.shard() as u64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
     fn stats(&self, extended: bool) -> Json {
+        let snaps = self.shard_snapshots();
         let mut j = Json::from_pairs([
-            ("frontend", self.frontend.metrics().snapshot().to_json()),
+            (
+                "frontend",
+                MetricsSnapshot::merged_over(snaps.iter()).to_json(),
+            ),
             ("caches", self.caches_json()),
             (
                 "registry_entries",
@@ -537,9 +634,13 @@ impl ServeContext {
             ),
         ]);
         // Extended fields are opt-in so the plain reply — and the golden
-        // transcript CI diffs byte-for-byte — is unchanged.
+        // transcript CI diffs byte-for-byte — is unchanged regardless of
+        // `--shards`: the plain view only ever renders the roll-up.
         if extended {
             j.set("connections", self.obs().conns.to_json());
+            j.set("registry_epoch",
+                  Json::from_u64(self.registry.epoch()));
+            j.set("shards", self.shards_json());
             j.set("uptime_ms", Json::from_u64(self.obs().uptime_ms()));
         }
         j
@@ -548,16 +649,23 @@ impl ServeContext {
     /// The `metrics` op: full observability state as sorted-key JSON.
     /// This is also what `--metrics-dump` writes at shutdown.
     fn metrics_json(&self) -> Json {
+        let snaps = self.shard_snapshots();
         let mut j = self.obs().to_json();
         j.set(
             "backend",
-            Json::Str(self.frontend.service().backend_name().to_string()),
+            Json::Str(
+                self.shards[0].service().backend_name().to_string(),
+            ),
         );
         j.set("caches", self.caches_json());
-        j.set("frontend",
-              self.frontend.metrics().snapshot().to_json());
+        j.set(
+            "frontend",
+            MetricsSnapshot::merged_over(snaps.iter()).to_json(),
+        );
         j.set("registry_entries",
               Json::from_u64(self.registry.len() as u64));
+        j.set("registry_epoch", Json::from_u64(self.registry.epoch()));
+        j.set("shards", self.shards_json());
         j.set("uptime_ms", Json::from_u64(self.obs().uptime_ms()));
         j
     }
@@ -660,8 +768,9 @@ impl ServeContext {
     /// line, the cache table, and a Prometheus-style exposition of every
     /// non-empty histogram and counter.
     pub(crate) fn summary(&self) -> String {
-        let snap = self.frontend.metrics().snapshot();
-        let stats = self.frontend.service().cache_stats();
+        let snaps = self.shard_snapshots();
+        let snap = MetricsSnapshot::merged_over(snaps.iter());
+        let stats = self.merged_cache_stats();
         let prom = prometheus_text(
             self.obs(),
             &[
@@ -678,10 +787,17 @@ impl ServeContext {
                 ("registry", self.registry.stats()),
             ],
         );
+        // The per-shard table only appears when actually sharded, so the
+        // single-dispatcher summary stays byte-identical.
+        let shard_block = if self.shards.len() > 1 {
+            format!("{}\n", shard_table(&snaps).trim_end())
+        } else {
+            String::new()
+        };
         format!(
             "numabw serve: {} requests / {} queries; {} flushes (size {}, \
              deadline {}, drain {}; mean coalesced batch {:.1}); {} \
-             registry entries\n{}\n{}",
+             registry entries\n{}\n{}{}",
             snap.requests,
             snap.queries,
             snap.flushes(),
@@ -691,16 +807,19 @@ impl ServeContext {
             snap.mean_batch(),
             self.registry.len(),
             cache_table(&stats, &self.registry.stats()),
+            shard_block,
             prom.trim_end(),
         )
     }
 
-    /// Tear down: drop the client handle, then drain and join the
-    /// dispatcher.
+    /// Tear down: drop the client handle, then drain and join every
+    /// shard's dispatcher.
     pub(crate) fn shutdown(self) {
-        let ServeContext { frontend, client, .. } = self;
+        let ServeContext { shards, client, .. } = self;
         drop(client);
-        frontend.shutdown();
+        for frontend in shards {
+            frontend.shutdown();
+        }
     }
 }
 
@@ -720,15 +839,28 @@ pub(crate) struct ConnStats {
 /// label the latency histogram records under (`"invalid"` for lines that
 /// never parsed into a request).
 fn handle_line(ctx: &ServeContext, line: &str) -> (&'static str, Json) {
-    match parse_request(line) {
+    let j = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return ("invalid", reply_err(Json::Null, e.to_string())),
+    };
+    // {"epoch":true} on any op stamps the reply with the registry epoch
+    // that answered it, letting clients detect refits racing their
+    // queries.
+    let want_epoch =
+        j.get("epoch").and_then(Json::as_bool).unwrap_or(false);
+    match parse_request_json(&j) {
         Err(e) => ("invalid", reply_err(Json::Null, e)),
         Ok(req) => {
             let id = req.id().clone();
             let op = req.op_key();
-            let reply = match ctx.execute(req) {
+            let mut reply = match ctx.execute(req) {
                 Ok(result) => reply_ok(id, result),
                 Err(e) => reply_err(id, e),
             };
+            if want_epoch {
+                reply.set("epoch",
+                          Json::from_u64(ctx.registry.epoch()));
+            }
             (op, reply)
         }
     }
@@ -1071,6 +1203,91 @@ mod tests {
         assert!(names.contains(&"request"), "{names:?}");
         assert!(names.contains(&"flush"), "{names:?}");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sharded_serve_loop_matches_single_shard_byte_for_byte() {
+        // Sharding partitions the key space; every reply — results and
+        // the aggregate stats roll-up — must be byte-identical to the
+        // single-dispatcher daemon's.
+        let sig_b = "{\"static\":0.4,\"local\":0.15,\"perthread\":0.2,\
+                     \"static_socket\":0,\"misfit\":0}";
+        let transcript = format!(
+            "{{\"id\":1,\"op\":\"counters\",\"sig\":{SIG},\
+             \"threads\":[3,1],\"cpu_totals\":[3.0,1.0]}}\n\
+             {{\"id\":2,\"op\":\"counters\",\"sig\":{sig_b},\
+             \"threads\":[2,2],\"cpu_totals\":[2.0,2.0]}}\n\
+             {{\"id\":3,\"op\":\"perf\",\"sig\":{SIG},\"threads\":[6,2],\
+             \"demand_pt\":[2e9,1e9],\
+             \"caps\":[44e9,44e9,30e9,30e9,7e9,7e9,6.9e9,6.9e9]}}\n\
+             {{\"id\":4,\"op\":\"stats\"}}\n"
+        );
+        let one = serve_str(&transcript, ServeOptions::default());
+        let four = serve_str(
+            &transcript,
+            ServeOptions { shards: 4, ..ServeOptions::default() },
+        );
+        assert_eq!(one, four);
+    }
+
+    #[test]
+    fn epoch_flag_stamps_replies_with_the_registry_epoch() {
+        let transcript = format!(
+            "{{\"id\":1,\"op\":\"counters\",\"sig\":{SIG},\
+             \"threads\":[3,1],\"cpu_totals\":[3.0,1.0],\"epoch\":true}}\n\
+             {{\"id\":2,\"op\":\"advise\",\"machine\":\"xeon8\",\
+             \"workload\":\"cg\",\"threads\":8,\"top\":1}}\n\
+             {{\"id\":3,\"op\":\"stats\",\"epoch\":true}}\n\
+             {{\"id\":4,\"op\":\"stats\"}}\n"
+        );
+        let out = serve_str(&transcript, ServeOptions::default());
+        let lines: Vec<&str> = out.lines().collect();
+        // Before any fit the registry serves epoch 0.
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("epoch").and_then(Json::as_u64), Some(0),
+                   "{out}");
+        // The advise fit published a new snapshot: epoch 1.
+        let third = Json::parse(lines[2]).unwrap();
+        assert_eq!(third.get("epoch").and_then(Json::as_u64), Some(1),
+                   "{out}");
+        // Without the flag, no epoch key appears (golden transcripts).
+        let fourth = Json::parse(lines[3]).unwrap();
+        assert!(fourth.get("epoch").is_none(), "{out}");
+    }
+
+    #[test]
+    fn extended_stats_reports_per_shard_detail() {
+        let transcript = format!(
+            "{{\"id\":1,\"op\":\"counters\",\"sig\":{SIG},\
+             \"threads\":[3,1],\"cpu_totals\":[3.0,1.0]}}\n\
+             {{\"id\":2,\"op\":\"stats\",\"extended\":true}}\n"
+        );
+        let out = serve_str(
+            &transcript,
+            ServeOptions { shards: 3, ..ServeOptions::default() },
+        );
+        let reply = Json::parse(out.lines().nth(1).unwrap()).unwrap();
+        assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{out}");
+        let r = reply.get("result").unwrap();
+        assert_eq!(r.get("registry_epoch").and_then(Json::as_u64),
+                   Some(0));
+        let shards = r.get("shards").unwrap().as_arr().unwrap();
+        assert_eq!(shards.len(), 3);
+        let per_shard_queries: u64 = shards
+            .iter()
+            .map(|s| {
+                s.get("frontend").unwrap().get("queries").unwrap()
+                    .as_u64().unwrap()
+            })
+            .sum();
+        // The roll-up equals the sum of the per-shard counters.
+        assert_eq!(per_shard_queries,
+                   r.get("frontend").unwrap().get("queries").unwrap()
+                       .as_u64().unwrap());
+        assert_eq!(shards[1].get("shard").and_then(Json::as_u64),
+                   Some(1));
+        assert!(shards[0].get("caches").unwrap().get("counter")
+                    .is_some());
     }
 
     #[test]

@@ -1,153 +1,251 @@
-//! Store-backed model registry: fitted signatures served out of a
-//! bounded, signature-keyed LRU in front of the on-disk
-//! [`SignatureStore`], with machine+seed invalidation — the
+//! Store-backed model registry served through epoch-stamped immutable
+//! snapshots: fitted signatures resolve against an `Arc`-swapped
+//! [`RegistrySnapshot`] so the serve hot path (`counters`/`perf`/
+//! `advise` reads) never takes the write lock — the
 //! fit-once-serve-forever layer behind `numabw advise --store` and the
 //! `serve` daemon's `advise` op.
 //!
+//! Concurrency model (the quiescent-reader shape, std-only):
+//!
+//! * **Readers** clone the current `Arc<RegistrySnapshot>` (a brief
+//!   `RwLock` read guard around one refcount bump) and resolve every
+//!   lookup for their request against that one immutable world.  A
+//!   snapshot can never change underneath a reader, so a reply can
+//!   never mix signatures from two epochs.
+//! * **Writers** (fit, refit, invalidate) serialize on a `Mutex` around
+//!   the backing [`SignatureStore`], persist, then publish a fresh
+//!   snapshot with the epoch bumped — one atomic world swap per
+//!   mutation, visible to the next reader clone.
+//!
 //! Resolution order for `(machine, workload)`:
 //!
-//! 1. the in-memory LRU (recency-defined eviction, counters exposed via
+//! 1. the current snapshot (hit/miss counters exposed via
 //!    [`ModelRegistry::stats`]);
-//! 2. the backing store (loaded once at open; hydrates the LRU);
-//! 3. a caller-supplied `fit` closure ([`ModelRegistry::get_or_fit`]),
-//!    whose result is registered, persisted (when store-backed), and
-//!    stamped with the fit seed.
+//! 2. a caller-supplied `fit` closure ([`ModelRegistry::get_or_fit`]),
+//!    whose result is registered, persisted (when store-backed),
+//!    stamped with the fit seed, and published as a new epoch.
 //!
 //! Invalidation: a store records the simulator seed each machine's
 //! signatures were fitted with.  A request under a different seed is a
 //! different world — the registry refuses it with a clear error instead
 //! of serving a stale model ([`ModelRegistry::get`] / `get_or_fit`).
 
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::SignatureStore;
 use crate::model::signature::BandwidthSignature;
-use crate::util::lru::{CacheCounters, Lru};
+use crate::util::lru::CacheCounters;
 
-/// Default LRU bound: fleets serve a few machines × a few dozen
-/// workloads; 256 hot signatures is plenty and keeps eviction exercised.
-pub const DEFAULT_REGISTRY_CAP: usize = 256;
-
-#[derive(Clone, PartialEq, Eq, Hash)]
-struct RegistryKey {
-    machine: String,
-    workload: String,
+/// One immutable, epoch-stamped view of every fitted signature.  Built
+/// by a writer under the store mutex, then shared read-only: lookups
+/// are pure map reads, and the `Arc<BandwidthSignature>` values are the
+/// same allocations across snapshots that didn't change them.
+pub struct RegistrySnapshot {
+    epoch: u64,
+    seeds: BTreeMap<String, u64>,
+    sigs: BTreeMap<(String, String), Arc<BandwidthSignature>>,
 }
 
-struct Inner {
-    store: SignatureStore,
-    cache: Lru<RegistryKey, Arc<BandwidthSignature>>,
+impl RegistrySnapshot {
+    fn from_store(epoch: u64, store: &SignatureStore) -> RegistrySnapshot {
+        let mut seeds = BTreeMap::new();
+        let mut sigs = BTreeMap::new();
+        for machine in store.machines() {
+            if let Some(seed) = store.seed(machine) {
+                seeds.insert(machine.to_string(), seed);
+            }
+            for workload in store.workloads(machine) {
+                if let Some(sig) = store.get(machine, workload) {
+                    sigs.insert(
+                        (machine.to_string(), workload.to_string()),
+                        Arc::new(*sig),
+                    );
+                }
+            }
+        }
+        RegistrySnapshot { epoch, seeds, sigs }
+    }
+
+    /// The world version: bumped by every fit/refit/invalidate publish.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn len(&self) -> usize {
+        self.sigs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sigs.is_empty()
+    }
+
+    /// The recorded fit seed for `machine`, if any.
+    pub fn seed_of(&self, machine: &str) -> Option<u64> {
+        self.seeds.get(machine).copied()
+    }
+
+    /// Pure lookup against this frozen world (no counters, no locks).
+    pub fn get(&self, machine: &str, workload: &str)
+        -> Option<Arc<BandwidthSignature>> {
+        self.sigs
+            .get(&(machine.to_string(), workload.to_string()))
+            .cloned()
+    }
+
+    fn check_seed(&self, path: Option<&Path>, machine: &str, seed: u64)
+        -> Result<()> {
+        check_seed_of(self.seed_of(machine), path, machine, seed)
+    }
+}
+
+fn check_seed_of(recorded: Option<u64>, path: Option<&Path>,
+                 machine: &str, seed: u64) -> Result<()> {
+    if let Some(recorded) = recorded {
+        if recorded != seed {
+            let whence = path
+                .map(|p| p.display().to_string())
+                .unwrap_or_else(|| "registry".to_string());
+            bail!(
+                "{whence}: signatures for {machine} were fitted with \
+                 seed {recorded}, but this request uses seed {seed}; \
+                 pass --seed {recorded} or refit the store \
+                 (`numabw fit --save`)"
+            );
+        }
+    }
+    Ok(())
 }
 
 pub struct ModelRegistry {
     store_path: Option<PathBuf>,
-    inner: Mutex<Inner>,
+    /// Writer side: every mutation serializes here, then publishes.
+    store: Mutex<SignatureStore>,
+    /// Reader side: the current world, swapped whole on publish.
+    snap: RwLock<Arc<RegistrySnapshot>>,
+    /// Mirror of the published snapshot's epoch, readable lock-free.
+    epoch: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
 }
 
 impl ModelRegistry {
-    /// A registry with no backing file: signatures live only in the LRU
-    /// (and the in-memory store behind it).
-    pub fn in_memory(cap: usize) -> ModelRegistry {
+    fn with_store(store_path: Option<PathBuf>, store: SignatureStore)
+        -> ModelRegistry {
+        let snap = Arc::new(RegistrySnapshot::from_store(0, &store));
         ModelRegistry {
-            store_path: None,
-            inner: Mutex::new(Inner {
-                store: SignatureStore::new(),
-                cache: Lru::new(cap),
-            }),
+            store_path,
+            store: Mutex::new(store),
+            snap: RwLock::new(snap),
+            epoch: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
         }
+    }
+
+    /// A registry with no backing file: signatures live only in memory.
+    pub fn in_memory() -> ModelRegistry {
+        Self::with_store(None, SignatureStore::new())
     }
 
     /// Open a store-backed registry.  A missing file is an empty store
     /// (it is created on the first persisted fit); a malformed file is an
     /// error.
-    pub fn open(path: &Path, cap: usize) -> Result<ModelRegistry> {
+    pub fn open(path: &Path) -> Result<ModelRegistry> {
         let store = if path.exists() {
             SignatureStore::load(path)?
         } else {
             SignatureStore::new()
         };
-        Ok(ModelRegistry {
-            store_path: Some(path.to_path_buf()),
-            inner: Mutex::new(Inner {
-                store,
-                cache: Lru::new(cap),
-            }),
-        })
+        Ok(Self::with_store(Some(path.to_path_buf()), store))
     }
 
-    /// Number of signatures known (store-resident, not just LRU-hot).
+    /// Clone the current immutable world: a brief read-guard around one
+    /// `Arc` refcount bump — never the writer mutex.  Resolve every
+    /// lookup of one request against one snapshot for epoch consistency.
+    pub fn snapshot(&self) -> Arc<RegistrySnapshot> {
+        self.snap.read().unwrap().clone()
+    }
+
+    /// The currently published epoch (lock-free).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Publish `store` as the next world.  Caller holds the store mutex,
+    /// so bump-then-swap is atomic with respect to other writers.
+    fn publish(&self, store: &SignatureStore) {
+        let epoch = self.epoch.load(Ordering::Acquire) + 1;
+        let next = Arc::new(RegistrySnapshot::from_store(epoch, store));
+        *self.snap.write().unwrap() = next;
+        self.epoch.store(epoch, Ordering::Release);
+    }
+
+    /// Number of signatures in the published snapshot.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().store.len()
+        self.snapshot().len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// LRU hit/miss/eviction counters.
+    /// Snapshot-lookup hit/miss counters (no evictions: snapshots hold
+    /// every fitted signature).
     pub fn stats(&self) -> CacheCounters {
-        self.inner.lock().unwrap().cache.counters()
+        CacheCounters {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: 0,
+        }
     }
 
     /// The recorded fit seed for `machine`, if any.
     pub fn seed_of(&self, machine: &str) -> Option<u64> {
-        self.inner.lock().unwrap().store.seed(machine)
+        self.snapshot().seed_of(machine)
     }
 
-    fn check_seed(store: &SignatureStore, path: Option<&Path>,
-                  machine: &str, seed: u64) -> Result<()> {
-        if let Some(recorded) = store.seed(machine) {
-            if recorded != seed {
-                let whence = path
-                    .map(|p| p.display().to_string())
-                    .unwrap_or_else(|| "registry".to_string());
-                bail!(
-                    "{whence}: signatures for {machine} were fitted with \
-                     seed {recorded}, but this request uses seed {seed}; \
-                     pass --seed {recorded} or refit the store \
-                     (`numabw fit --save`)"
-                );
-            }
-        }
-        Ok(())
-    }
-
-    /// Strict lookup: LRU, then store.  Errors on a seed mismatch or a
-    /// missing signature (with refit guidance).
+    /// Strict lookup against the current snapshot.  Errors on a seed
+    /// mismatch or a missing signature (with refit guidance).
     pub fn get(&self, machine: &str, workload: &str, seed: u64)
         -> Result<Arc<BandwidthSignature>> {
-        let mut inner = self.inner.lock().unwrap();
-        Self::check_seed(&inner.store, self.store_path.as_deref(), machine,
-                         seed)?;
-        let key = RegistryKey {
-            machine: machine.to_string(),
-            workload: workload.to_string(),
-        };
-        if let Some(sig) = inner.cache.get(&key) {
-            return Ok(sig.clone());
-        }
-        match inner.store.get(machine, workload) {
+        self.get_at(&self.snapshot(), machine, workload, seed)
+    }
+
+    /// [`ModelRegistry::get`] against a caller-held snapshot, so multi-
+    /// lookup requests stay within one epoch.  Counts hits/misses on the
+    /// shared registry counters.
+    pub fn get_at(&self, snap: &RegistrySnapshot, machine: &str,
+                  workload: &str, seed: u64)
+        -> Result<Arc<BandwidthSignature>> {
+        // A seed mismatch is a refused request, not a cache outcome: it
+        // counts neither a hit nor a miss.
+        snap.check_seed(self.store_path.as_deref(), machine, seed)?;
+        match snap.get(machine, workload) {
             Some(sig) => {
-                let sig = Arc::new(*sig);
-                inner.cache.insert(key, sig.clone());
+                self.hits.fetch_add(1, Ordering::Relaxed);
                 Ok(sig)
             }
-            None => Err(anyhow!(
-                "no fitted signature for {machine}/{workload} — run \
-                 `numabw fit --workload {workload} --machine {machine} \
-                 --save <store>` first",
-            )),
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Err(anyhow!(
+                    "no fitted signature for {machine}/{workload} — run \
+                     `numabw fit --workload {workload} --machine {machine} \
+                     --save <store>` first",
+                ))
+            }
         }
     }
 
     /// Lookup with a fit fallback: on a registry miss, run `fit` once,
-    /// register the result, stamp the machine's fit seed, and persist when
-    /// store-backed.  Subsequent calls (and subsequent processes, for
-    /// store-backed registries) serve the stored signature without
-    /// refitting.
+    /// register the result, stamp the machine's fit seed, persist when
+    /// store-backed, and publish a new snapshot (epoch bump).  Subsequent
+    /// calls (and subsequent processes, for store-backed registries)
+    /// serve the stored signature without refitting.
     ///
     /// Concurrent cold misses on the same key may each run `fit` (the fit
     /// is deterministic, so results agree); the first insert wins and
@@ -157,53 +255,79 @@ impl ModelRegistry {
     where
         F: FnOnce() -> Result<BandwidthSignature>,
     {
-        match self.get(machine, workload, seed) {
+        let snap = self.snapshot();
+        match self.get_at(&snap, machine, workload, seed) {
             Ok(sig) => return Ok(sig),
             // A seed mismatch must not be papered over by refitting into
             // the same store; only a genuine miss falls through.
-            Err(e) if self.seed_conflict(machine, seed) => return Err(e),
+            Err(e) if snap.seed_of(machine).is_some_and(|s| s != seed) => {
+                return Err(e)
+            }
             Err(_) => {}
         }
-        // Fit outside the lock: profiling + fitting is the expensive part.
+        // Fit outside every lock: profiling + fitting is the expensive
+        // part, and readers keep serving the old epoch meanwhile.
         let sig = fit()?;
-        let mut inner = self.inner.lock().unwrap();
-        // Re-validate after reacquiring the lock: a racer under a
+        let mut store = self.store.lock().unwrap();
+        // Re-validate after acquiring the writer lock: a racer under a
         // different seed may have stamped the machine while we fitted.
-        Self::check_seed(&inner.store, self.store_path.as_deref(), machine,
-                         seed)?;
-        let key = RegistryKey {
-            machine: machine.to_string(),
-            workload: workload.to_string(),
-        };
-        // Double-check after reacquiring the lock: a racing caller may
-        // have registered the key while we were fitting.
-        if let Some(existing) = inner.store.get(machine, workload) {
-            let existing = Arc::new(*existing);
-            inner.cache.insert(key, existing.clone());
-            return Ok(existing);
+        check_seed_of(store.seed(machine), self.store_path.as_deref(),
+                      machine, seed)?;
+        // Double-check: a racing caller may have registered the key (and
+        // published it) while we were fitting.
+        if let Some(existing) = store.get(machine, workload) {
+            return Ok(Arc::new(*existing));
         }
         // The machine's seed metadata certifies ALL its stored
         // signatures.  Signatures from a legacy (seed-less) store were
         // fitted in an unverifiable world — drop them rather than
         // certify them under this seed, which would defeat the guard.
-        let legacy = inner.store.seed(machine).is_none()
-            && !inner.store.workloads(machine).is_empty();
+        let legacy = store.seed(machine).is_none()
+            && !store.workloads(machine).is_empty();
         if legacy {
-            inner.store.remove_machine(machine);
-            inner.cache.clear();
+            store.remove_machine(machine);
         }
-        inner.store.insert(machine, workload, sig);
-        inner.store.set_seed(machine, seed);
-        let sig = Arc::new(sig);
-        inner.cache.insert(key, sig.clone());
+        store.insert(machine, workload, sig);
+        store.set_seed(machine, seed);
         if let Some(path) = &self.store_path {
-            inner.store.save(path)?;
+            store.save(path)?;
         }
-        Ok(sig)
+        self.publish(&store);
+        Ok(Arc::new(sig))
     }
 
-    fn seed_conflict(&self, machine: &str, seed: u64) -> bool {
-        self.seed_of(machine).is_some_and(|s| s != seed)
+    /// Atomically replace every signature of `machine` with a freshly
+    /// fitted world: existing entries (and the old seed stamp) are
+    /// dropped, the given `(workload, signature)` pairs installed under
+    /// `seed`, the store persisted, and ONE new snapshot published — so
+    /// readers see either the whole old world or the whole new one,
+    /// never a mix.
+    pub fn refit_machine(&self, machine: &str, seed: u64,
+                         sigs: &[(&str, BandwidthSignature)]) -> Result<()> {
+        let mut store = self.store.lock().unwrap();
+        store.remove_machine(machine);
+        for (workload, sig) in sigs {
+            store.insert(machine, workload, *sig);
+        }
+        store.set_seed(machine, seed);
+        if let Some(path) = &self.store_path {
+            store.save(path)?;
+        }
+        self.publish(&store);
+        Ok(())
+    }
+
+    /// Drop every signature (and the seed stamp) of `machine`, persist,
+    /// and publish the shrunken world.  Returns the number of signatures
+    /// removed.
+    pub fn invalidate_machine(&self, machine: &str) -> Result<usize> {
+        let mut store = self.store.lock().unwrap();
+        let dropped = store.remove_machine(machine);
+        if let Some(path) = &self.store_path {
+            store.save(path)?;
+        }
+        self.publish(&store);
+        Ok(dropped)
     }
 }
 
@@ -224,7 +348,7 @@ mod tests {
 
     #[test]
     fn fit_once_then_serve_from_cache() {
-        let reg = ModelRegistry::in_memory(8);
+        let reg = ModelRegistry::in_memory();
         let mut fits = 0;
         for _ in 0..3 {
             let got = reg
@@ -243,7 +367,7 @@ mod tests {
 
     #[test]
     fn seed_mismatch_errors_and_does_not_refit() {
-        let reg = ModelRegistry::in_memory(8);
+        let reg = ModelRegistry::in_memory();
         reg.get_or_fit("xeon8", "cg", 7, || Ok(sig(0.25))).unwrap();
         let err = reg
             .get_or_fit("xeon8", "cg", 8, || {
@@ -260,7 +384,7 @@ mod tests {
 
     #[test]
     fn missing_signature_error_carries_guidance() {
-        let reg = ModelRegistry::in_memory(8);
+        let reg = ModelRegistry::in_memory();
         let err = reg.get("xeon18", "mg", 7).unwrap_err();
         assert!(format!("{err}").contains("numabw fit"), "{err}");
     }
@@ -272,12 +396,12 @@ mod tests {
         let path = dir.join("reg.json");
         std::fs::remove_file(&path).ok();
         {
-            let reg = ModelRegistry::open(&path, 8).unwrap();
+            let reg = ModelRegistry::open(&path).unwrap();
             assert!(reg.is_empty());
             reg.get_or_fit("xeon8", "ft", 42, || Ok(sig(0.3))).unwrap();
         }
         {
-            let reg = ModelRegistry::open(&path, 8).unwrap();
+            let reg = ModelRegistry::open(&path).unwrap();
             assert_eq!(reg.len(), 1);
             let got = reg
                 .get_or_fit("xeon8", "ft", 42, || {
@@ -301,9 +425,9 @@ mod tests {
         legacy.insert("m", "cg", sig(0.1));
         legacy.save(&path).unwrap();
 
-        let reg = ModelRegistry::open(&path, 8).unwrap();
+        let reg = ModelRegistry::open(&path).unwrap();
         // Legacy signatures stay serveable while no seed is recorded
-        // (documented legacy behavior) — this also hydrates the LRU.
+        // (documented legacy behavior).
         assert!(reg.get("m", "cg", 7).is_ok());
         // Fitting a new workload under seed 7 must NOT certify the
         // legacy cg signature as seed-7: it is dropped instead.
@@ -312,25 +436,63 @@ mod tests {
         assert!(reg.get("m", "cg", 7).is_err(),
                 "legacy signature must be dropped, not certified");
         // And the drop survived persistence.
-        let reloaded = ModelRegistry::open(&path, 8).unwrap();
+        let reloaded = ModelRegistry::open(&path).unwrap();
         assert!(reloaded.get("m", "cg", 7).is_err());
         assert!(reloaded.get("m", "zz", 7).is_ok());
         std::fs::remove_file(&path).ok();
     }
 
     #[test]
-    fn lru_evicts_but_store_retains() {
-        let reg = ModelRegistry::in_memory(2);
-        for (i, w) in ["a", "b", "c", "d"].iter().enumerate() {
-            reg.get_or_fit("m", w, 1, || Ok(sig(0.1 * i as f64)))
-                .unwrap();
-        }
-        assert!(reg.stats().evictions >= 2);
-        assert_eq!(reg.len(), 4, "eviction must not lose store entries");
-        // Evicted entries re-hydrate from the store without refitting.
-        let got = reg
-            .get_or_fit("m", "a", 1, || panic!("store must rehydrate"))
+    fn fits_publish_new_epochs_and_old_snapshots_stay_frozen() {
+        let reg = ModelRegistry::in_memory();
+        let empty = reg.snapshot();
+        assert_eq!(empty.epoch(), 0);
+        assert_eq!(reg.epoch(), 0);
+
+        reg.get_or_fit("m", "a", 1, || Ok(sig(0.1))).unwrap();
+        let one = reg.snapshot();
+        assert_eq!(one.epoch(), 1);
+        assert_eq!(reg.epoch(), 1);
+        assert!(one.get("m", "a").is_some());
+        // The epoch-0 world a reader may still hold is unchanged.
+        assert!(empty.get("m", "a").is_none());
+        assert_eq!(empty.epoch(), 0);
+
+        // A snapshot hit does not publish: the epoch is stable.
+        reg.get_or_fit("m", "a", 1, || panic!("must not refit")).unwrap();
+        assert_eq!(reg.epoch(), 1);
+
+        reg.get_or_fit("m", "b", 1, || Ok(sig(0.2))).unwrap();
+        assert_eq!(reg.epoch(), 2);
+        // Reader-side consistency: both workloads resolve from the one
+        // snapshot that contains them.
+        let two = reg.snapshot();
+        assert!(two.get("m", "a").is_some() && two.get("m", "b").is_some());
+        assert!(one.get("m", "b").is_none());
+    }
+
+    #[test]
+    fn refit_machine_swaps_the_whole_world_in_one_epoch() {
+        let reg = ModelRegistry::in_memory();
+        reg.refit_machine("m", 1, &[("a", sig(0.1)), ("b", sig(0.1))])
             .unwrap();
-        assert_eq!(*got, sig(0.0));
+        assert_eq!(reg.epoch(), 1);
+        assert_eq!(reg.len(), 2);
+        let old = reg.snapshot();
+
+        reg.refit_machine("m", 2, &[("a", sig(0.9)), ("b", sig(0.9))])
+            .unwrap();
+        assert_eq!(reg.epoch(), 2, "one publish per refit");
+        assert_eq!(reg.seed_of("m"), Some(2));
+        let new = reg.snapshot();
+        assert_eq!(*new.get("m", "a").unwrap(), sig(0.9));
+        assert_eq!(*new.get("m", "b").unwrap(), sig(0.9));
+        // The old world is intact for readers that still hold it.
+        assert_eq!(*old.get("m", "a").unwrap(), sig(0.1));
+        assert_eq!(old.seed_of("m"), Some(1));
+
+        assert_eq!(reg.invalidate_machine("m").unwrap(), 2);
+        assert_eq!(reg.epoch(), 3);
+        assert!(reg.snapshot().is_empty());
     }
 }

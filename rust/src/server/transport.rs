@@ -2,27 +2,37 @@
 //!
 //! Std-only, like the rest of the serving stack: a [`std::net::TcpListener`]
 //! (or, on unix, a [`std::os::unix::net::UnixListener`]) accepts
-//! connections on a dedicated thread; each connection gets one thread
-//! running the same JSONL request/reply loop the stdin/stdout transport
-//! uses ([`ServeContext::serve_io`]), and **every connection feeds the
-//! same [`ServeContext`]** — one coalescing front-end, one model
-//! registry, one set of LRU caches — so queries from different fleet
-//! clients batch together exactly like queries from different in-process
-//! threads.
+//! connections on a dedicated thread and hands them to a **fixed-size
+//! worker pool** over a bounded queue — `--workers M` threads serve every
+//! connection, in accept order, running the same JSONL request/reply loop
+//! the stdin/stdout transport uses ([`ServeContext::serve_io`]).  Every
+//! connection feeds the same [`ServeContext`] — one sharded front-end
+//! group, one model registry — so queries from different fleet clients
+//! batch together exactly like queries from different in-process threads.
+//!
+//! The pool replaces the old thread-per-connection model: a long-lived
+//! daemon under connection churn keeps exactly M worker threads and ZERO
+//! per-connection `JoinHandle`s (the old `Mutex<Vec<JoinHandle>>`
+//! accumulated one per connection between reaps).  When all workers are
+//! busy and the accept queue (4 slots per worker) is full, the daemon
+//! sheds load *visibly*: the over-capacity connection is answered with a
+//! one-line JSON error and closed, and the rejection is counted
+//! (`connections.rejected`) instead of queueing without bound.
 //!
 //! Error isolation is per request (the protocol boundary) and per
-//! connection (an I/O failure on one socket ends that connection's loop
-//! and thread; the listener and every other connection keep serving).
+//! connection (an I/O failure on one socket ends that connection's loop;
+//! the listener, its worker, and every other connection keep serving).
 //!
 //! Shutdown: [`LineServer::shutdown`] stops the accept loop (flag + a
-//! self-connection to unblock `accept`), joins the connection threads
-//! (clients are expected to have disconnected), and returns the same
-//! summary string `serve_lines` produces.  The CLI's long-running mode
-//! ([`LineServer::run_forever`]) simply parks on the accept thread.
+//! self-connection to unblock `accept`), closes the queue, joins the
+//! workers (clients are expected to have disconnected), and returns the
+//! same summary string `serve_lines` produces.  The CLI's long-running
+//! mode ([`LineServer::run_forever`]) simply parks on the accept thread.
 
-use std::io::BufReader;
+use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
@@ -32,8 +42,45 @@ use crate::coordinator::PredictionService;
 
 use super::protocol::{ServeContext, ServeOptions};
 
-/// Joined-on-shutdown handles of the per-connection threads.
-type ConnHandles = Arc<Mutex<Vec<JoinHandle<()>>>>;
+/// Default `--workers`: enough for every historical concurrent-client
+/// test and small fleets; bump it for daemons fronting many clients.
+pub const DEFAULT_WORKERS: usize = 8;
+
+/// Queue slots per worker: accepted connections waiting for a free
+/// worker.  Past `workers * QUEUE_SLOTS_PER_WORKER` pending connections
+/// the daemon rejects instead of buffering without bound.
+const QUEUE_SLOTS_PER_WORKER: usize = 4;
+
+/// The JSONL line an over-capacity connection is answered with before
+/// being closed (`id` is null: no request was read).
+const REJECT_LINE: &[u8] =
+    b"{\"id\":null,\"ok\":false,\"error\":\"server at capacity: \
+connection queue is full; retry later\"}\n";
+
+/// An accepted, not-yet-served connection travelling accept → queue →
+/// worker.
+enum Conn {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(std::os::unix::net::UnixStream),
+}
+
+impl Conn {
+    /// Best-effort single-line write (the over-capacity rejection).
+    fn write_line(&self, line: &[u8]) {
+        match self {
+            Conn::Tcp(s) => {
+                let _ = (&*s).write_all(line);
+                let _ = (&*s).flush();
+            }
+            #[cfg(unix)]
+            Conn::Unix(s) => {
+                let _ = (&*s).write_all(line);
+                let _ = (&*s).flush();
+            }
+        }
+    }
+}
 
 /// Where a [`LineServer`] is listening.
 enum Endpoint {
@@ -42,13 +89,16 @@ enum Endpoint {
     Unix(std::path::PathBuf),
 }
 
-/// A running socket server: accept thread + one thread per connection,
-/// all sharing one [`ServeContext`].
+/// A running socket server: accept thread + a fixed pool of connection
+/// workers, all sharing one [`ServeContext`].
 pub struct LineServer {
     ctx: Arc<ServeContext>,
     stop: Arc<AtomicBool>,
     accept: Option<JoinHandle<()>>,
-    conns: ConnHandles,
+    /// Closing this (dropping it at shutdown) disconnects the workers'
+    /// receiver once the queue drains.
+    queue_tx: Option<SyncSender<Conn>>,
+    workers: Vec<JoinHandle<()>>,
     endpoint: Endpoint,
 }
 
@@ -62,10 +112,10 @@ impl LineServer {
         let local = listener.local_addr()?;
         let ctx = Arc::new(ServeContext::new(svc, opts)?);
         let stop = Arc::new(AtomicBool::new(false));
-        let conns: ConnHandles = Arc::new(Mutex::new(Vec::new()));
+        let (queue_tx, workers) = start_workers(&ctx);
         let accept = {
-            let (ctx, stop, conns) =
-                (ctx.clone(), stop.clone(), conns.clone());
+            let (ctx, stop, tx) = (ctx.clone(), stop.clone(),
+                                   queue_tx.clone());
             std::thread::Builder::new()
                 .name("numabw-accept-tcp".to_string())
                 .spawn(move || {
@@ -75,18 +125,9 @@ impl LineServer {
                         }
                         match stream {
                             Ok(stream) => {
-                                let reader = match stream.try_clone() {
-                                    Ok(r) => r,
-                                    Err(e) => {
-                                        eprintln!(
-                                            "numabw serve: cannot clone \
-                                             tcp stream: {e}"
-                                        );
-                                        continue;
-                                    }
-                                };
-                                spawn_connection(&ctx, &conns, reader,
-                                                 stream);
+                                if !enqueue(&ctx, &tx, Conn::Tcp(stream)) {
+                                    break;
+                                }
                             }
                             Err(e) => {
                                 eprintln!(
@@ -102,7 +143,8 @@ impl LineServer {
             ctx,
             stop,
             accept: Some(accept),
-            conns,
+            queue_tx: Some(queue_tx),
+            workers,
             endpoint: Endpoint::Tcp(local),
         })
     }
@@ -143,10 +185,10 @@ impl LineServer {
         })?;
         let ctx = Arc::new(ServeContext::new(svc, opts)?);
         let stop = Arc::new(AtomicBool::new(false));
-        let conns: ConnHandles = Arc::new(Mutex::new(Vec::new()));
+        let (queue_tx, workers) = start_workers(&ctx);
         let accept = {
-            let (ctx, stop, conns) =
-                (ctx.clone(), stop.clone(), conns.clone());
+            let (ctx, stop, tx) = (ctx.clone(), stop.clone(),
+                                   queue_tx.clone());
             std::thread::Builder::new()
                 .name("numabw-accept-unix".to_string())
                 .spawn(move || {
@@ -156,18 +198,9 @@ impl LineServer {
                         }
                         match stream {
                             Ok(stream) => {
-                                let reader = match stream.try_clone() {
-                                    Ok(r) => r,
-                                    Err(e) => {
-                                        eprintln!(
-                                            "numabw serve: cannot clone \
-                                             unix stream: {e}"
-                                        );
-                                        continue;
-                                    }
-                                };
-                                spawn_connection(&ctx, &conns, reader,
-                                                 stream);
+                                if !enqueue(&ctx, &tx, Conn::Unix(stream)) {
+                                    break;
+                                }
                             }
                             Err(e) => {
                                 eprintln!(
@@ -183,7 +216,8 @@ impl LineServer {
             ctx,
             stop,
             accept: Some(accept),
-            conns,
+            queue_tx: Some(queue_tx),
+            workers,
             endpoint: Endpoint::Unix(path.to_path_buf()),
         })
     }
@@ -218,6 +252,13 @@ impl LineServer {
         }
     }
 
+    /// Size of the fixed connection worker pool (`--workers`) — also the
+    /// total per-connection thread budget: connection churn never grows
+    /// it.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
     /// Block on the accept loop — the CLI's daemon mode.  Only returns if
     /// the accept thread dies.
     pub fn run_forever(mut self) -> Result<()> {
@@ -229,16 +270,19 @@ impl LineServer {
         Ok(())
     }
 
-    /// Stop accepting, join connection threads (callers should have
-    /// disconnected their clients), and return the serve summary.
+    /// Stop accepting, drain the queue and join the worker pool (callers
+    /// should have disconnected their clients), and return the serve
+    /// summary.
     pub fn shutdown(mut self) -> String {
         self.stop.store(true, Ordering::SeqCst);
         self.wake_accept();
         if let Some(handle) = self.accept.take() {
             let _ = handle.join();
         }
-        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
-        for handle in conns {
+        // Close the queue: workers serve whatever is still queued, then
+        // see the disconnect and exit.
+        self.queue_tx = None;
+        for handle in std::mem::take(&mut self.workers) {
             let _ = handle.join();
         }
         // Every connection is drained: dump --metrics-dump / --trace-out
@@ -249,12 +293,12 @@ impl LineServer {
         if let Endpoint::Unix(path) = &self.endpoint {
             std::fs::remove_file(path).ok();
         }
-        // Dropping the last context Arc drains and joins the dispatcher.
+        // Dropping the last context Arc drains and joins the dispatchers.
         summary
     }
 
     /// Unblock the accept loop with a throwaway self-connection (the
-    /// stop flag is already set, so it is never served).
+    /// stop flag is already set, so it is never queued).
     fn wake_accept(&self) {
         match &self.endpoint {
             Endpoint::Tcp(addr) => {
@@ -284,46 +328,100 @@ impl LineServer {
     }
 }
 
-/// One thread per connection: run the shared JSONL loop until the peer
-/// closes or errors.  Connection failures are logged, never propagated —
-/// the daemon outlives its clients.  Each connection draws a monotonic id
-/// from the shared [`crate::obs::ServeObs`] so its close line (and any
-/// error) can be matched to the aggregate transport counters.
-fn spawn_connection<R, W>(ctx: &Arc<ServeContext>, conns: &ConnHandles,
-                          reader: R, mut writer: W)
-where
-    R: std::io::Read + Send + 'static,
-    W: std::io::Write + Send + 'static,
-{
-    let ctx = ctx.clone();
-    let handle = std::thread::Builder::new()
-        .name("numabw-conn".to_string())
-        .spawn(move || {
-            let conn_id = ctx.obs().next_conn_id();
-            match ctx.serve_conn(conn_id, BufReader::new(reader),
-                                 &mut writer) {
-                Ok(cs) => {
-                    eprintln!(
-                        "numabw serve: connection {conn_id} closed \
-                         ({} requests, {} errors, {} bytes in, {} bytes \
-                         out)",
-                        cs.requests, cs.errors, cs.bytes_in, cs.bytes_out
-                    );
-                }
-                Err(e) => {
-                    eprintln!(
-                        "numabw serve: connection {conn_id} closed with \
-                         error: {e:#}"
-                    );
-                }
-            }
+/// Spawn the fixed worker pool: `ctx.workers()` threads sharing one
+/// bounded connection queue.
+fn start_workers(ctx: &Arc<ServeContext>)
+    -> (SyncSender<Conn>, Vec<JoinHandle<()>>) {
+    let workers = ctx.workers().max(1);
+    let (tx, rx) =
+        mpsc::sync_channel::<Conn>(workers * QUEUE_SLOTS_PER_WORKER);
+    let rx = Arc::new(Mutex::new(rx));
+    let handles = (0..workers)
+        .map(|i| {
+            let ctx = ctx.clone();
+            let rx = rx.clone();
+            std::thread::Builder::new()
+                .name(format!("numabw-worker-{i}"))
+                .spawn(move || worker_loop(&ctx, &rx))
+                .expect("spawning a connection worker thread")
         })
-        .expect("spawning a connection thread");
-    let mut conns = conns.lock().unwrap();
-    // Reap handles whose connections already ended — the daemon mode
-    // (`run_forever`) never reaches shutdown's drain, so without this a
-    // long-lived server under short-lived clients would accumulate one
-    // retained JoinHandle per connection forever.
-    conns.retain(|h| !h.is_finished());
-    conns.push(handle);
+        .collect();
+    (tx, handles)
+}
+
+/// Try to queue an accepted connection for the worker pool.  A full
+/// queue is answered with [`REJECT_LINE`] and counted — bounded load
+/// shedding instead of unbounded buffering.  Returns false only when the
+/// pool is gone (shutdown), which ends the accept loop.
+fn enqueue(ctx: &ServeContext, tx: &SyncSender<Conn>, conn: Conn) -> bool {
+    match tx.try_send(conn) {
+        Ok(()) => true,
+        Err(TrySendError::Full(conn)) => {
+            ctx.obs().conns.rejected.fetch_add(1, Ordering::Relaxed);
+            conn.write_line(REJECT_LINE);
+            eprintln!(
+                "numabw serve: rejected a connection (queue full; \
+                 {} workers busy)",
+                ctx.workers()
+            );
+            true
+        }
+        Err(TrySendError::Disconnected(_)) => false,
+    }
+}
+
+/// One worker: pull connections off the shared queue (the mutex guards
+/// only the dequeue, never the serving) until the queue closes.
+fn worker_loop(ctx: &Arc<ServeContext>, rx: &Mutex<Receiver<Conn>>) {
+    loop {
+        let conn = match rx.lock().unwrap().recv() {
+            Ok(conn) => conn,
+            Err(_) => return,
+        };
+        serve_one(ctx, conn);
+    }
+}
+
+/// Run the shared JSONL loop on one connection until the peer closes or
+/// errors.  Connection failures are logged, never propagated — the daemon
+/// outlives its clients.  Each connection draws a monotonic id from the
+/// shared [`crate::obs::ServeObs`] so its close line (and any error) can
+/// be matched to the aggregate transport counters.
+fn serve_one(ctx: &Arc<ServeContext>, conn: Conn) {
+    let conn_id = ctx.obs().next_conn_id();
+    let served = match conn {
+        Conn::Tcp(stream) => stream
+            .try_clone()
+            .context("cloning a tcp stream")
+            .and_then(|reader| {
+                let mut writer = stream;
+                ctx.serve_conn(conn_id, BufReader::new(reader),
+                               &mut writer)
+            }),
+        #[cfg(unix)]
+        Conn::Unix(stream) => stream
+            .try_clone()
+            .context("cloning a unix stream")
+            .and_then(|reader| {
+                let mut writer = stream;
+                ctx.serve_conn(conn_id, BufReader::new(reader),
+                               &mut writer)
+            }),
+    };
+    match served {
+        Ok(cs) => {
+            eprintln!(
+                "numabw serve: connection {conn_id} closed \
+                 ({} requests, {} errors, {} bytes in, {} bytes \
+                 out)",
+                cs.requests, cs.errors, cs.bytes_in, cs.bytes_out
+            );
+        }
+        Err(e) => {
+            eprintln!(
+                "numabw serve: connection {conn_id} closed with \
+                 error: {e:#}"
+            );
+        }
+    }
 }

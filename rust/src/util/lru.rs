@@ -46,6 +46,17 @@ impl CacheCounters {
             evictions: self.evictions + other.evictions,
         }
     }
+
+    /// Component-wise sum over any number of counters — the roll-up the
+    /// sharded serving layer renders next to its per-shard tables.
+    pub fn merged_over<I>(counters: I) -> CacheCounters
+    where
+        I: IntoIterator<Item = CacheCounters>,
+    {
+        counters
+            .into_iter()
+            .fold(CacheCounters::default(), |acc, c| acc.merged(&c))
+    }
 }
 
 const NIL: usize = usize::MAX;
@@ -342,5 +353,9 @@ mod tests {
         let b = CacheCounters { hits: 10, misses: 20, evictions: 30 };
         let m = a.merged(&b);
         assert_eq!((m.hits, m.misses, m.evictions), (11, 22, 33));
+        let over = CacheCounters::merged_over([a, b, m]);
+        assert_eq!((over.hits, over.misses, over.evictions), (22, 44, 66));
+        assert_eq!(CacheCounters::merged_over(std::iter::empty()),
+                   CacheCounters::default());
     }
 }

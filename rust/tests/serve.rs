@@ -609,6 +609,312 @@ fn telemetry_artifacts_record_tcp_load() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// A deterministic perf-op wire line for `q`.  Rust's `{}` float
+/// formatting is shortest-round-trip, so the sharded daemon and the
+/// single-shard baseline parse back the exact same f64 bits from the
+/// same text.
+fn perf_wire_line(id: usize, q: &PerfQuery) -> String {
+    let nums = |xs: &[f64]| {
+        xs.iter()
+            .map(|x| format!("{x}"))
+            .collect::<Vec<_>>()
+            .join(",")
+    };
+    let threads = q
+        .threads
+        .iter()
+        .map(|t| t.to_string())
+        .collect::<Vec<_>>()
+        .join(",");
+    format!(
+        "{{\"id\":{id},\"op\":\"perf\",\"sig\":{{\"static\":{},\
+         \"local\":{},\"perthread\":{},\"static_socket\":{},\
+         \"misfit\":{}}},\"threads\":[{threads}],\"demand_pt\":[{}],\
+         \"caps\":[{}]}}",
+        q.sig.static_frac,
+        q.sig.local_frac,
+        q.sig.perthread_frac,
+        q.sig.static_socket,
+        q.sig.misfit,
+        nums(&q.demand_pt),
+        nums(&q.caps),
+    )
+}
+
+#[test]
+fn sharded_tcp_daemon_is_bit_identical_to_the_single_shard_path() {
+    use std::collections::HashMap;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    use numabw::util::json::Json;
+
+    // 8 saturating clients x 128 queries = 1024 queries, interleaved
+    // over both paper machines and the synthetic quad so shard routing
+    // is exercised across socket counts.
+    const CLIENTS: usize = 8;
+    const PER_CLIENT: usize = 128;
+    const TOTAL: usize = CLIENTS * PER_CLIENT;
+    let machines = [
+        MachineTopology::xeon_e5_2630_v3(),
+        MachineTopology::xeon_e5_2699_v3(),
+        MachineTopology::by_name("quad4").unwrap(),
+    ];
+    let streams: Vec<Vec<PerfQuery>> = machines
+        .iter()
+        .enumerate()
+        .map(|(m, machine)| {
+            perf_stream(machine, TOTAL / machines.len() + 1,
+                        0x51A2 + m as u64)
+        })
+        .collect();
+    let lines: Vec<String> = (0..TOTAL)
+        .map(|i| {
+            perf_wire_line(
+                i,
+                &streams[i % machines.len()][i / machines.len()],
+            )
+        })
+        .collect();
+
+    // Single-shard oracle: the exact same wire lines through the
+    // sequential stdin/stdout loop.
+    let mut baseline_out = Vec::new();
+    serve_lines(
+        PredictionService::reference(),
+        ServeOptions::default(),
+        format!("{}\n", lines.join("\n")).as_bytes(),
+        &mut baseline_out,
+    )
+    .unwrap();
+    let baseline_out = String::from_utf8(baseline_out).unwrap();
+    let baseline: HashMap<u64, &str> = baseline_out
+        .lines()
+        .map(|line| {
+            let id = Json::parse(line)
+                .unwrap()
+                .get("id")
+                .and_then(Json::as_u64)
+                .unwrap();
+            (id, line)
+        })
+        .collect();
+    assert_eq!(baseline.len(), TOTAL);
+
+    // Sharded daemon: 4 front-end shards behind the TCP worker pool.
+    let server = numabw::server::LineServer::start_tcp(
+        PredictionService::reference(),
+        ServeOptions { shards: 4, ..ServeOptions::default() },
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap();
+    std::thread::scope(|scope| {
+        for t in 0..CLIENTS {
+            let chunk = &lines[t * PER_CLIENT..(t + 1) * PER_CLIENT];
+            let baseline = &baseline;
+            scope.spawn(move || {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                let mut reader =
+                    BufReader::new(stream.try_clone().unwrap());
+                let mut reply = String::new();
+                for line in chunk {
+                    stream.write_all(line.as_bytes()).unwrap();
+                    stream.write_all(b"\n").unwrap();
+                    stream.flush().unwrap();
+                    reply.clear();
+                    reader.read_line(&mut reply).unwrap();
+                    let got = reply.trim_end_matches('\n');
+                    let id = Json::parse(got)
+                        .unwrap()
+                        .get("id")
+                        .and_then(Json::as_u64)
+                        .unwrap();
+                    assert_eq!(
+                        got,
+                        baseline[&id],
+                        "shard routing must be invisible in replies"
+                    );
+                }
+            });
+        }
+    });
+    let summary = server.shutdown();
+    // All 1024 single-query requests crossed the shards, and the
+    // shutdown summary breaks them down per shard.
+    assert!(summary.contains("1024 requests / 1024 queries"),
+            "{summary}");
+    assert!(summary.contains("shard0") && summary.contains("shard3"),
+            "{summary}");
+}
+
+#[test]
+fn registry_refits_never_tear_a_snapshot_across_epochs() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    use numabw::model::signature::BandwidthSignature;
+    use numabw::server::ModelRegistry;
+
+    fn world(tag: f64) -> BandwidthSignature {
+        BandwidthSignature {
+            read: ChannelSignature::new(0.2, 0.3, tag, 1),
+            write: ChannelSignature::new(0.1, 0.5, tag, 0),
+            combined: ChannelSignature::new(0.15, 0.4, tag, 1),
+            read_bytes: 1e9,
+            write_bytes: 5e8,
+        }
+    }
+
+    let reg = ModelRegistry::in_memory();
+    reg.refit_machine("m", 0, &[("a", world(0.0)), ("b", world(0.0))])
+        .unwrap();
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let (reg, stop) = (&reg, &stop);
+        scope.spawn(move || {
+            // Writer: flip the whole machine between two tagged worlds,
+            // one atomic publish per refit.
+            for i in 1..=200u64 {
+                let tag = (i % 2) as f64;
+                reg.refit_machine(
+                    "m",
+                    i,
+                    &[("a", world(tag)), ("b", world(tag))],
+                )
+                .unwrap();
+            }
+            stop.store(true, Ordering::Release);
+        });
+        for _ in 0..4 {
+            scope.spawn(move || {
+                let mut last_epoch = 0;
+                while !stop.load(Ordering::Acquire) {
+                    let snap = reg.snapshot();
+                    assert!(snap.epoch() >= last_epoch,
+                            "epochs must be monotonic");
+                    last_epoch = snap.epoch();
+                    let a = snap.get("m", "a").unwrap();
+                    let b = snap.get("m", "b").unwrap();
+                    // Both lookups resolve against ONE frozen world: a
+                    // reply can never mix signatures from two epochs.
+                    assert_eq!(
+                        a.read.perthread_frac.to_bits(),
+                        b.read.perthread_frac.to_bits(),
+                        "snapshot mixed two refit worlds at epoch {}",
+                        snap.epoch()
+                    );
+                }
+            });
+        }
+    });
+    assert_eq!(reg.epoch(), 201, "one epoch per publish");
+}
+
+#[test]
+fn bounded_worker_pool_survives_connection_churn() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    let server = numabw::server::LineServer::start_tcp(
+        PredictionService::reference(),
+        ServeOptions { workers: 2, ..ServeOptions::default() },
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    assert_eq!(server.workers(), 2, "pool size is fixed at start");
+    let addr = server.local_addr().unwrap();
+    // 32 sequential connections through a 2-thread pool: the regression
+    // guard for the old thread-per-connection design, which grew one
+    // JoinHandle per accept and never reaped them.
+    for _ in 0..32 {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(COUNTERS_LINE.as_bytes()).unwrap();
+        stream.flush().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_counters_reply(&line);
+    }
+    assert_eq!(server.workers(), 2,
+               "the pool must not grow with connection churn");
+    let summary = server.shutdown();
+    assert!(summary.contains("32 requests / 32 queries"), "{summary}");
+    assert!(summary.contains("numabw_connections_opened_total 32"),
+            "{summary}");
+    assert!(summary.contains("numabw_connections_rejected_total 0"),
+            "{summary}");
+}
+
+#[test]
+fn over_capacity_connections_are_shed_with_a_json_error_line() {
+    use std::io::{BufRead, BufReader, ErrorKind, Write};
+    use std::net::TcpStream;
+    let server = numabw::server::LineServer::start_tcp(
+        PredictionService::reference(),
+        ServeOptions { workers: 1, ..ServeOptions::default() },
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap();
+    // Pin the lone worker: serve one query, then hold the connection
+    // open so the worker blocks reading its next line.
+    let mut busy = TcpStream::connect(addr).unwrap();
+    busy.write_all(COUNTERS_LINE.as_bytes()).unwrap();
+    busy.flush().unwrap();
+    let mut busy_reader = BufReader::new(busy.try_clone().unwrap());
+    let mut line = String::new();
+    busy_reader.read_line(&mut line).unwrap();
+    assert_counters_reply(&line);
+    // Fill the bounded accept queue, then overflow it: the shed
+    // connection gets one JSON error line instead of hanging.  Queued
+    // connections get no reply (they are still waiting for a worker),
+    // which a read timeout distinguishes from the rejection line.
+    let mut queued = Vec::new();
+    let mut rejection = None;
+    for _ in 0..32 {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_millis(500)))
+            .unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            Ok(n) if n > 0 => {
+                rejection = Some(line);
+                break;
+            }
+            Ok(_) => panic!("server closed a queued connection"),
+            Err(e) => {
+                assert!(
+                    matches!(e.kind(),
+                             ErrorKind::WouldBlock | ErrorKind::TimedOut),
+                    "unexpected read error on a queued connection: {e}"
+                );
+                queued.push(stream);
+            }
+        }
+    }
+    let line = rejection.expect("the bounded queue must shed overflow");
+    let reply = numabw::util::json::Json::parse(&line).unwrap();
+    assert_eq!(reply.get("ok").and_then(|j| j.as_bool()), Some(false),
+               "{line}");
+    assert!(
+        reply
+            .get("error")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("capacity"),
+        "{line}"
+    );
+    // Release the worker and the queued clients so shutdown drains.
+    drop(busy_reader);
+    drop(busy);
+    drop(queued);
+    let summary = server.shutdown();
+    assert!(summary.contains("numabw_connections_rejected_total 1"),
+            "{summary}");
+}
+
 #[test]
 fn smoke_transcript_reproduces_the_golden_replies() {
     // Same fixture CI pipes through the release binary:
