@@ -173,11 +173,380 @@ fn bench_serve_open_loop() {
     }
 }
 
+/// The pre-PR native kernels, kept verbatim as the bench baseline: one
+/// fresh `Vec` per row for the matrix, the counters, the demands, the
+/// resource table, and five solver work arrays.  The engine no longer
+/// contains these loops (it runs structure-of-arrays lane chunks over
+/// preallocated scratch), so `BENCH_kernels.json`'s `scalar` variant is
+/// the measured before, not a simulation of it.
+mod scalar_baseline {
+    use numabw::topology::flow_resources;
+
+    const SAT_TOL: f32 = 1e-6;
+
+    pub fn apply_matrix(s: usize, fracs: &[f32], onehot: &[f32],
+                        threads: &[f32]) -> Vec<f32> {
+        let (a, l, p) = (fracs[0], fracs[1], fracs[2]);
+        let il = (1.0 - (a + l + p)).clamp(0.0, 1.0);
+        let used: Vec<bool> = threads.iter().map(|&t| t > 0.0).collect();
+        let n_used = used.iter().filter(|&&u| u).count().max(1) as f32;
+        let n_total: f32 = threads.iter().sum();
+        let mut m = vec![0.0f32; s * s];
+        for r in 0..s {
+            for c in 0..s {
+                let mut v = a * onehot[c];
+                if r == c {
+                    v += l;
+                }
+                if n_total > 0.0 {
+                    v += p * threads[c] / n_total;
+                }
+                if used[r] && used[c] {
+                    v += il / n_used;
+                }
+                m[r * s + c] = v;
+            }
+        }
+        m
+    }
+
+    pub fn counters_row(s: usize, m: &[f32], totals: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; s * 2];
+        for bank in 0..s {
+            let mut local = 0.0f32;
+            let mut remote = 0.0f32;
+            for src in 0..s {
+                let flow = m[src * s + bank] * totals[src];
+                if src == bank {
+                    local += flow;
+                } else {
+                    remote += flow;
+                }
+            }
+            out[bank * 2] = local;
+            out[bank * 2 + 1] = remote;
+        }
+        out
+    }
+
+    pub fn perf_row(s: usize, m: &[f32], threads: &[f32],
+                    demand_pt: &[f32], caps: &[f32]) -> Vec<f32> {
+        let nf = 2 * s * s;
+        let mut demands = vec![0.0f32; nf];
+        let mut resources = Vec::with_capacity(nf);
+        for src in 0..s {
+            for dst in 0..s {
+                for rw in 0..2 {
+                    let f = (src * s + dst) * 2 + rw;
+                    demands[f] =
+                        threads[src] * m[src * s + dst] * demand_pt[rw];
+                    resources.push(flow_resources(s, src, dst, rw));
+                }
+            }
+        }
+        maxmin_f32(&demands, &resources, caps)
+    }
+
+    fn maxmin_f32(demands: &[f32],
+                  resources: &[(usize, Option<usize>)],
+                  caps: &[f32]) -> Vec<f32> {
+        let nf = demands.len();
+        let nr = caps.len();
+        let mut alloc = vec![0.0f32; nf];
+        let mut frozen = vec![false; nf];
+        let mut residual = caps.to_vec();
+        let mut counts = vec![0u32; nr];
+        let mut sat = vec![false; nr];
+
+        let mut n_active = 0usize;
+        for i in 0..nf {
+            if demands[i] <= 0.0 {
+                frozen[i] = true;
+            } else {
+                n_active += 1;
+            }
+        }
+        for _round in 0..(nf + nr + 2) {
+            if n_active == 0 {
+                break;
+            }
+            for c in counts.iter_mut() {
+                *c = 0;
+            }
+            for i in 0..nf {
+                if !frozen[i] {
+                    let (chan, link) = resources[i];
+                    counts[chan] += 1;
+                    if let Some(l) = link {
+                        counts[l] += 1;
+                    }
+                }
+            }
+            let mut level = f32::INFINITY;
+            for r in 0..nr {
+                if counts[r] > 0 {
+                    level = level.min(residual[r] / counts[r] as f32);
+                }
+            }
+            if !level.is_finite() {
+                for i in 0..nf {
+                    if !frozen[i] {
+                        alloc[i] = demands[i];
+                        frozen[i] = true;
+                    }
+                }
+                break;
+            }
+            let level = level.max(0.0);
+            for i in 0..nf {
+                if frozen[i] {
+                    continue;
+                }
+                let grow = level.min(demands[i] - alloc[i]);
+                alloc[i] += grow;
+                let (chan, link) = resources[i];
+                residual[chan] -= grow;
+                if let Some(l) = link {
+                    residual[l] -= grow;
+                }
+            }
+            for r in 0..nr {
+                sat[r] = residual[r] <= SAT_TOL * caps[r].max(1.0);
+            }
+            for i in 0..nf {
+                if frozen[i] {
+                    continue;
+                }
+                let (chan, link) = resources[i];
+                let hits_sat = sat[chan] || link.is_some_and(|l| sat[l]);
+                if demands[i] - alloc[i] <= SAT_TOL * demands[i].max(1.0)
+                    || hits_sat
+                {
+                    frozen[i] = true;
+                    n_active -= 1;
+                }
+            }
+        }
+        alloc
+    }
+}
+
+/// Engine-kernel throughput: rows/sec per pipeline x socket count x
+/// variant, written to `BENCH_kernels.json` (the CI-tracked record of
+/// the SoA rewrite's measured win over the pre-PR per-row loops).
+///
+/// Variants: `scalar` is the [`scalar_baseline`] per-row loop driven over
+/// the same packed tensors; `chunked` is `NativeEngine::new()` (lane
+/// chunks, serial); `pooled` is `NativeEngine::with_threads(4)` — 4 is
+/// the most the pool can use on a 64-row batch (16-row-per-worker
+/// floor), so more threads would measure the same split.
+/// `fit_signature` has no scalar row: its pre-PR row kernels (fit2/fitn)
+/// are unchanged algorithms, so only chunked-vs-pooled is interesting.
+fn bench_kernels() {
+    use numabw::runtime::{
+        Batch, ExecutionBackend, NativeEngine, Tensor, ENGINE_BATCH,
+    };
+
+    const POOL_THREADS: usize = 4;
+    println!("=== kernels: SoA batch kernels vs per-row baseline ===\n");
+    let mut h = Harness::new("kernels");
+    let mut records: Vec<Json> = Vec::new();
+    let chunked = NativeEngine::new();
+    let pooled = NativeEngine::with_threads(POOL_THREADS);
+
+    for s in [2usize, 4] {
+        let machine = if s == 2 {
+            MachineTopology::xeon_e5_2630_v3()
+        } else {
+            MachineTopology::synthetic_quad()
+        };
+        let caps: Vec<f32> =
+            machine.capacities().iter().map(|&c| c as f32).collect();
+        let mut rng = Rng::new(0xBE00 + s as u64);
+        let b = Batch::new(ENGINE_BATCH, ENGINE_BATCH);
+        let rows: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = (0..ENGINE_BATCH)
+            .map(|_| {
+                let a = rng.uniform(0.05, 0.6) as f32;
+                let l = rng.uniform(0.0, 0.3) as f32;
+                let p = rng.uniform(0.0, 0.3) as f32;
+                let mut onehot = vec![0.0f32; s];
+                onehot[rng.below(s as u64) as usize] = 1.0;
+                let threads: Vec<f32> = (0..s)
+                    .map(|_| rng.below(9) as f32)
+                    .collect();
+                (vec![a, l, p], onehot, threads)
+            })
+            .collect();
+        let fracs =
+            b.pack(&rows.iter().map(|r| r.0.clone()).collect::<Vec<_>>(),
+                   &[3]);
+        let onehot =
+            b.pack(&rows.iter().map(|r| r.1.clone()).collect::<Vec<_>>(),
+                   &[s]);
+        let threads =
+            b.pack(&rows.iter().map(|r| r.2.clone()).collect::<Vec<_>>(),
+                   &[s]);
+        let totals = b.pack(
+            &(0..ENGINE_BATCH)
+                .map(|_| {
+                    (0..s).map(|_| rng.uniform(1e8, 1e10) as f32).collect()
+                })
+                .collect::<Vec<_>>(),
+            &[s],
+        );
+        let demand_pt = b.pack(
+            &(0..ENGINE_BATCH)
+                .map(|_| vec![rng.uniform(0.2e9, 8e9) as f32,
+                              rng.uniform(0.0, 4e9) as f32])
+                .collect::<Vec<_>>(),
+            &[2],
+        );
+        let caps_t = b.pack(
+            &(0..ENGINE_BATCH).map(|_| caps.clone()).collect::<Vec<_>>(),
+            &[caps.len()],
+        );
+
+        let apply_in = vec![fracs, onehot, threads];
+        let counter_in = {
+            let mut v = apply_in.clone();
+            v.push(totals);
+            v
+        };
+        let perf_in = {
+            let mut v = apply_in.clone();
+            v.push(demand_pt);
+            v.push(caps_t);
+            v
+        };
+
+        // (pipeline, inputs, scalar row driver)
+        type RowFn = Box<dyn Fn(&[Tensor], usize) -> Vec<f32>>;
+        let pipelines: Vec<(&str, &[Tensor], RowFn)> = vec![
+            ("signature_apply", &apply_in,
+             Box::new(move |t: &[Tensor], i: usize| {
+                 scalar_baseline::apply_matrix(s, t[0].row(i), t[1].row(i),
+                                               t[2].row(i))
+             })),
+            ("predict_counters", &counter_in,
+             Box::new(move |t: &[Tensor], i: usize| {
+                 let m = scalar_baseline::apply_matrix(s, t[0].row(i),
+                                                       t[1].row(i),
+                                                       t[2].row(i));
+                 scalar_baseline::counters_row(s, &m, t[3].row(i))
+             })),
+            ("predict_performance", &perf_in,
+             Box::new(move |t: &[Tensor], i: usize| {
+                 let m = scalar_baseline::apply_matrix(s, t[0].row(i),
+                                                       t[1].row(i),
+                                                       t[2].row(i));
+                 scalar_baseline::perf_row(s, &m, t[2].row(i),
+                                           t[3].row(i), t[4].row(i))
+             })),
+        ];
+
+        for (name, inputs, scalar_row) in pipelines {
+            let mut rec = |variant: &str, median: f64| {
+                let rows_per_sec = ENGINE_BATCH as f64 / median;
+                println!("  -> {name} S={s} {variant}: {:.2}M rows/s",
+                         rows_per_sec / 1e6);
+                records.push(Json::from_pairs([
+                    ("pipeline", Json::Str(name.to_string())),
+                    ("sockets", Json::from_u64(s as u64)),
+                    ("variant", Json::Str(variant.to_string())),
+                    ("rows_per_sec", Json::Num(rows_per_sec)),
+                    ("ms_per_batch", Json::Num(median * 1e3)),
+                ]));
+            };
+            let r = h.bench(&format!("{name}_s{s}_scalar"), || {
+                let mut acc = 0.0f32;
+                for i in 0..ENGINE_BATCH {
+                    acc += scalar_row(inputs, i)[0];
+                }
+                black_box(acc)
+            });
+            rec("scalar", r.summary.median);
+            let r = h.bench(&format!("{name}_s{s}_chunked"), || {
+                black_box(chunked.execute(name, inputs).unwrap())
+            });
+            rec("chunked", r.summary.median);
+            let r = h.bench(&format!("{name}_s{s}_pooled"), || {
+                black_box(pooled.execute(name, inputs).unwrap())
+            });
+            rec("pooled", r.summary.median);
+        }
+
+        // fit_signature via the service (packing + kernels): 3 engine
+        // rows per request, 64 requests -> 3 full batches.
+        let truth = ChannelSignature::new(0.2, 0.35, 0.3, 1);
+        let mk = |tps: &[usize]| {
+            let m = apply::apply(&truth, tps);
+            let mut c = numabw::counters::CounterSnapshot::new(s);
+            for (src, &n) in tps.iter().enumerate() {
+                for dst in 0..s {
+                    c.record_traffic(src, dst, Channel::Read,
+                                     m[src][dst] * n as f64 * 1e9);
+                    c.record_traffic(src, dst, Channel::Write,
+                                     m[src][dst] * n as f64 * 4e8);
+                }
+                c.sockets[src].instructions = n as f64 * 1e9;
+            }
+            c.elapsed_s = 1.0;
+            ProfiledRun { counters: c, threads_per_socket: tps.to_vec() }
+        };
+        let (sym_t, asym_t): (Vec<usize>, Vec<usize>) = if s == 2 {
+            (vec![4, 4], vec![6, 2])
+        } else {
+            (vec![4, 4, 4, 4], vec![7, 4, 3, 2])
+        };
+        let fit_reqs: Vec<FitRequest> = (0..ENGINE_BATCH)
+            .map(|_| FitRequest { sym: mk(&sym_t), asym: mk(&asym_t) })
+            .collect();
+        let fit_rows = 3.0 * fit_reqs.len() as f64;
+        for (variant, svc) in [
+            ("chunked", PredictionService::native()),
+            ("pooled", PredictionService::native_with_threads(POOL_THREADS)),
+        ] {
+            let r = h.bench(&format!("fit_signature_s{s}_{variant}"), || {
+                black_box(svc.fit(&fit_reqs).unwrap())
+            });
+            let rows_per_sec = fit_rows / r.summary.median;
+            println!("  -> fit_signature S={s} {variant}: \
+                      {:.1}k rows/s", rows_per_sec / 1e3);
+            records.push(Json::from_pairs([
+                ("pipeline", Json::Str("fit_signature".to_string())),
+                ("sockets", Json::from_u64(s as u64)),
+                ("variant", Json::Str(variant.to_string())),
+                ("rows_per_sec", Json::Num(rows_per_sec)),
+                ("ms_per_batch",
+                 Json::Num(r.summary.median * 1e3 / 3.0)),
+            ]));
+        }
+        println!();
+    }
+
+    let record = Json::from_pairs([
+        ("bench", Json::Str("kernels".to_string())),
+        ("batch", Json::from_u64(ENGINE_BATCH as u64)),
+        ("pooled_threads", Json::from_u64(POOL_THREADS as u64)),
+        ("records", Json::Arr(records)),
+    ]);
+    match std::fs::write("BENCH_kernels.json", record.encode()) {
+        Ok(()) => println!("  wrote BENCH_kernels.json\n"),
+        Err(e) => eprintln!("  could not write BENCH_kernels.json: {e}"),
+    }
+}
+
 fn main() {
     // `NUMABW_BENCH_ONLY=serve` runs just the serving load generator —
     // the cheap, CI-friendly slice that records the perf trajectory.
     if std::env::var("NUMABW_BENCH_ONLY").as_deref() == Ok("serve") {
         bench_serve_open_loop();
+        return;
+    }
+    // `NUMABW_BENCH_ONLY=kernels` runs just the engine-kernel comparison
+    // (per-row scalar baseline vs lane-chunked vs pooled).
+    if std::env::var("NUMABW_BENCH_ONLY").as_deref() == Ok("kernels") {
+        bench_kernels();
         return;
     }
     println!("=== perf: hot paths per layer ===\n");

@@ -43,27 +43,31 @@ pub fn main_with(args: Vec<String>) -> Result<()> {
         Some("workloads") => known(&[]).and_then(|_| cmd_workloads()),
         Some("profile") => known(&["workload", "machine", "seed"])
             .and_then(|_| cmd_profile(&args)),
-        Some("fit") => {
-            known(&["workload", "machine", "engine", "save", "seed"])
-                .and_then(|_| cmd_fit(&args))
-        }
+        Some("fit") => known(&[
+            "workload", "machine", "engine", "engine-threads", "save",
+            "seed",
+        ])
+        .and_then(|_| cmd_fit(&args)),
         Some("predict") => known(&[
-            "workload", "machine", "engine", "store", "t0", "t1",
-            "split", "seed",
+            "workload", "machine", "engine", "engine-threads", "store",
+            "t0", "t1", "split", "seed",
         ])
         .and_then(|_| cmd_predict(&args)),
         Some("advise") => known(&[
-            "workload", "machine", "threads", "top", "engine", "store",
-            "seed",
+            "workload", "machine", "threads", "top", "engine",
+            "engine-threads", "store", "seed",
         ])
         .and_then(|_| cmd_advise(&args)),
         Some("serve") => known(&[
             "listen", "store", "seed", "batch", "window-ms", "engine",
-            "trace-out", "metrics-dump", "shards", "workers",
+            "engine-threads", "trace-out", "metrics-dump", "shards",
+            "workers",
         ])
         .and_then(|_| cmd_serve(&args)),
-        Some("evaluate") => known(&["machine", "engine", "seed"])
-            .and_then(|_| cmd_evaluate(&args)),
+        Some("evaluate") => {
+            known(&["machine", "engine", "engine-threads", "seed"])
+                .and_then(|_| cmd_evaluate(&args))
+        }
         Some("quickstart") => known(&[]).and_then(|_| cmd_quickstart()),
         Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
         None => {
@@ -132,6 +136,10 @@ synthetic 4-socket machine — every subcommand is socket-count-generic);
 model; native: the batched f32 engine, any socket count; hlo: the
 HLO-text pipelines through the in-repo interpreter — AOT artifacts when
 present, emitted per-S modules otherwise; `pjrt` is a legacy alias);
+--engine-threads N (default 1; native only) splits engine batches of
+>= 32 rows across N pooled worker threads — results are bit-identical
+to N=1, so size it to spare cores (it multiplies with --shards: total
+engine threads = shards x N);
 --seed u64.";
 
 fn machine_flag(args: &Args) -> Result<MachineTopology> {
@@ -156,7 +164,14 @@ fn seed_flag(args: &Args) -> u64 {
 }
 
 fn service_flag(args: &Args) -> Result<PredictionService> {
-    PredictionService::by_name(args.get_or("engine", "reference"))
+    let threads = args.get_usize("engine-threads", 1);
+    if threads == 0 {
+        bail!("--engine-threads must be >= 1");
+    }
+    PredictionService::by_name_with_threads(
+        args.get_or("engine", "reference"),
+        threads,
+    )
 }
 
 fn sim_flag(args: &Args, machine: MachineTopology) -> Simulator {
@@ -783,6 +798,22 @@ mod tests {
         assert!(format!("{err}").contains("--shards"), "{err}");
         let err = main_with(toks("serve --workers 0")).unwrap_err();
         assert!(format!("{err}").contains("--workers"), "{err}");
+    }
+
+    #[test]
+    fn engine_threads_flag_is_validated_and_accepted() {
+        // 0 is rejected on every service-constructing subcommand path.
+        let err =
+            main_with(toks("serve --engine-threads 0")).unwrap_err();
+        assert!(format!("{err}").contains("--engine-threads"), "{err}");
+        // A pooled advise run end to end: the result path is pinned
+        // bit-identical to serial by tests/engine_parity.rs; here the
+        // flag just has to parse and serve.
+        main_with(toks(
+            "advise --workload cg --machine xeon8 --threads 4 --top 2 \
+             --engine native --engine-threads 2",
+        ))
+        .unwrap();
     }
 
     #[test]

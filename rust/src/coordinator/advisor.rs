@@ -114,8 +114,38 @@ pub fn placement_query(machine: &MachineTopology, workload: &WorkloadSpec,
                        sig: &BandwidthSignature,
                        placement: &ThreadPlacement) -> PerfQuery {
     let caps = machine.capacities();
+    let mut scratch = QueryScratch::default();
+    placement_query_cached(machine, workload, sig, placement, &caps,
+                           &mut scratch)
+}
+
+/// Reused per-sweep scratch of the advisor scoring path: the §4 matrix
+/// buffer and the per-resource load vector that used to be fresh
+/// allocations per placement ([`advise`] scores hundreds of placements
+/// per call — `quad4` alone enumerates 165).
+#[derive(Default)]
+struct QueryScratch {
+    /// [`crate::model::apply::apply_into`] target.
+    m: Vec<Vec<f64>>,
+    /// Per-resource loads of [`qpi_headroom`].
+    loads: Vec<f64>,
+}
+
+/// [`placement_query`] against a hoisted capacity vector and reused
+/// matrix scratch — the same floating-point operations (capacities don't
+/// depend on the placement; the matrix buffer only changes *where* the
+/// §4 values land), so served scores are bit-identical to the
+/// allocate-per-placement path.
+fn placement_query_cached(machine: &MachineTopology,
+                          workload: &WorkloadSpec,
+                          sig: &BandwidthSignature,
+                          placement: &ThreadPlacement, caps: &[f64],
+                          scratch: &mut QueryScratch) -> PerfQuery {
     let peak = workload.bw_per_thread.min(machine.core_peak_bw);
-    let m = sig.combined.apply(&placement.threads_per_socket);
+    crate::model::apply::apply_into(&sig.combined,
+                                    &placement.threads_per_socket,
+                                    &mut scratch.m);
+    let m = &scratch.m;
     let n = placement.total().max(1) as f64;
     let mut lat = 0.0;
     for (src, &cnt) in placement.threads_per_socket.iter().enumerate() {
@@ -134,7 +164,7 @@ pub fn placement_query(machine: &MachineTopology, workload: &WorkloadSpec,
             per_thread * workload.read_fraction,
             per_thread * (1.0 - workload.read_fraction),
         ],
-        caps,
+        caps: caps.to_vec(),
     }
 }
 
@@ -142,9 +172,10 @@ pub fn placement_query(machine: &MachineTopology, workload: &WorkloadSpec,
 /// `(src*S + dst)*2 + rw`; resource footprint via the shared
 /// [`flow_resources`]), reduced to the QPI headroom: the smallest residual
 /// capacity fraction across the `2S(S-1)` interconnect link directions.
-fn qpi_headroom(q: &PerfQuery, alloc: &[f64]) -> f64 {
+fn qpi_headroom(q: &PerfQuery, alloc: &[f64], loads: &mut Vec<f64>) -> f64 {
     let s = q.sockets();
-    let mut loads = vec![0.0f64; 2 * s * s];
+    loads.clear();
+    loads.resize(2 * s * s, 0.0f64);
     for src in 0..s {
         for dst in 0..s {
             for rw in 0..2 {
@@ -169,14 +200,14 @@ fn qpi_headroom(q: &PerfQuery, alloc: &[f64]) -> f64 {
         .clamp(0.0, 1.0)
 }
 
-fn score_one(placement: &ThreadPlacement, q: &PerfQuery, alloc: &[f64])
-    -> PlacementScore {
+fn score_one(placement: ThreadPlacement, q: &PerfQuery, alloc: &[f64],
+             loads: &mut Vec<f64>) -> PlacementScore {
     PlacementScore {
-        placement: placement.clone(),
-        predicted_bw: alloc.iter().sum(),
         demanded_bw: placement.total() as f64
             * (q.demand_pt[0] + q.demand_pt[1]),
-        qpi_headroom: qpi_headroom(q, alloc),
+        placement,
+        predicted_bw: alloc.iter().sum(),
+        qpi_headroom: qpi_headroom(q, alloc, loads),
     }
 }
 
@@ -220,16 +251,21 @@ pub fn advise<S: PerfServer + ?Sized>(svc: &S, machine: &MachineTopology,
             machine.total_cores()
         );
     }
+    let caps = machine.capacities();
+    let mut scratch = QueryScratch::default();
     let queries: Vec<PerfQuery> = placements
         .iter()
-        .map(|p| placement_query(machine, workload, sig, p))
+        .map(|p| {
+            placement_query_cached(machine, workload, sig, p, &caps,
+                                   &mut scratch)
+        })
         .collect();
     let allocs = svc.serve_perf(&queries)?;
     let mut ranked: Vec<PlacementScore> = placements
-        .iter()
+        .into_iter()
         .zip(&queries)
         .zip(&allocs)
-        .map(|((p, q), alloc)| score_one(p, q, alloc))
+        .map(|((p, q), alloc)| score_one(p, q, alloc, &mut scratch.loads))
         .collect();
     rank(&mut ranked);
     Ok(Advice {
@@ -260,14 +296,17 @@ pub fn advise_brute_force(svc: &PredictionService,
     if placements.is_empty() {
         bail!("no valid placement of {total} threads on {}", machine.name);
     }
+    let caps = machine.capacities();
+    let mut scratch = QueryScratch::default();
     let mut ranked = Vec::with_capacity(placements.len());
-    for p in &placements {
-        let q = placement_query(machine, workload, sig, p);
+    for p in placements {
+        let q = placement_query_cached(machine, workload, sig, &p, &caps,
+                                       &mut scratch);
         let alloc = svc
             .predict_performance(std::slice::from_ref(&q))?
             .pop()
             .expect("one allocation per query");
-        ranked.push(score_one(p, &q, &alloc));
+        ranked.push(score_one(p, &q, &alloc, &mut scratch.loads));
     }
     rank(&mut ranked);
     Ok(Advice {

@@ -401,6 +401,10 @@ pub struct PredictionService {
     backend: Backend,
     /// Engine-sized chunk the front-end coalesces into.
     batch_hint: usize,
+    /// Execute-pool width the native engine was built with (`--engine-
+    /// threads`).  Carried on the service so [`PredictionService::sibling`]
+    /// reproduces it when the sharded front-end builds per-shard services.
+    engine_threads: usize,
     matrix_cache: MatrixCache,
     counter_cache: CounterCache,
     perf_cache: PerfCache,
@@ -408,6 +412,11 @@ pub struct PredictionService {
 
 impl PredictionService {
     fn with_backend(backend: Backend) -> PredictionService {
+        Self::with_backend_threads(backend, 1)
+    }
+
+    fn with_backend_threads(backend: Backend, engine_threads: usize)
+        -> PredictionService {
         let batch_hint = match &backend {
             Backend::Engine(engine) => engine.batch().max(1),
             Backend::Reference => DEFAULT_BATCH,
@@ -415,6 +424,7 @@ impl PredictionService {
         PredictionService {
             backend,
             batch_hint,
+            engine_threads,
             matrix_cache: Mutex::new(Lru::new(CACHE_CAP)),
             counter_cache: Mutex::new(Lru::new(CACHE_CAP)),
             perf_cache: Mutex::new(Lru::new(CACHE_CAP)),
@@ -459,7 +469,18 @@ impl PredictionService {
     /// Serve through the native batched f32 engine (any socket count, no
     /// build step — see [`crate::runtime::NativeEngine`]).
     pub fn native() -> PredictionService {
-        Self::with_engine(Box::new(NativeEngine::new()))
+        Self::native_with_threads(1)
+    }
+
+    /// Native engine with a bounded execute pool: batches above the
+    /// row-split threshold run on up to `threads` scoped workers
+    /// (`--engine-threads`; bit-identical to `threads = 1` — see
+    /// [`crate::runtime::NativeEngine::with_threads`]).
+    pub fn native_with_threads(threads: usize) -> PredictionService {
+        Self::with_backend_threads(
+            Backend::Engine(Box::new(NativeEngine::with_threads(threads))),
+            threads,
+        )
     }
 
     /// Serve through an `hlo` [`Engine`] (AOT artifacts when present,
@@ -493,26 +514,52 @@ impl PredictionService {
 
     /// Resolve a service from its CLI name (`--engine ...`).
     pub fn by_name(name: &str) -> Result<PredictionService> {
+        Self::by_name_with_threads(name, 1)
+    }
+
+    /// [`PredictionService::by_name`] with an explicit native
+    /// execute-pool width (`--engine-threads`).  Backends without an
+    /// execute pool ignore the width but still record it, so siblings of
+    /// any service reproduce the configured value.
+    pub fn by_name_with_threads(name: &str, threads: usize)
+        -> Result<PredictionService> {
         match name {
-            "reference" | "ref" => Ok(Self::reference()),
-            "native" => Ok(Self::native()),
+            "reference" | "ref" => {
+                Ok(Self::with_backend_threads(Backend::Reference, threads))
+            }
+            "native" => Ok(Self::native_with_threads(threads)),
             // `pjrt` kept as a compatibility alias for the engine's old
             // name; both resolve to the HLO interpreter backend.
-            "hlo" | "pjrt" => Ok(Self::hlo(Engine::from_env()?)),
+            "hlo" | "pjrt" => Ok(Self::with_backend_threads(
+                Backend::Engine(Box::new(Engine::from_env()?)),
+                threads,
+            )),
             other => Err(anyhow!(
                 "unknown engine {other:?} (reference|native|hlo)"
             )),
         }
     }
 
+    /// The configured native execute-pool width (1 unless built via
+    /// [`PredictionService::native_with_threads`] /
+    /// [`PredictionService::by_name_with_threads`]).
+    pub fn engine_threads(&self) -> usize {
+        self.engine_threads
+    }
+
     /// A fresh service over the same engine kind, with its own (cold)
     /// memo caches — the sharded serving front-end builds one per shard.
     /// Cold caches cannot change results: every cache memoizes a pure
-    /// function of its key, so siblings are bit-identical servers.
+    /// function of its key, so siblings are bit-identical servers (the
+    /// native execute-pool width carries over, and pooled execution is
+    /// itself bit-identical to serial).
     pub fn sibling(&self) -> Result<PredictionService> {
         match self.backend_name() {
-            "rust-reference" => Ok(Self::reference()),
-            name => Self::by_name(name),
+            "rust-reference" => Ok(Self::with_backend_threads(
+                Backend::Reference,
+                self.engine_threads,
+            )),
+            name => Self::by_name_with_threads(name, self.engine_threads),
         }
     }
 

@@ -63,7 +63,18 @@
 //!   `predict_counters`, `predict_performance` with max-min
 //!   water-filling) over full-batch f32 [`runtime::Tensor`]s for **any**
 //!   socket count, against a manifest synthesized in memory
-//!   ([`runtime::Artifacts::synthesize`]).  The `hlo` [`runtime::Engine`]
+//!   ([`runtime::Artifacts::synthesize`]).  The kernels are
+//!   **structure-of-arrays**: contiguous `[B, ...]` input planes walked
+//!   in fixed 8-wide lane chunks over preallocated per-worker scratch
+//!   (shaped for the auto-vectorizer; the nightly-only `simd` cargo
+//!   feature swaps in explicit `core::simd::f32x8` kernels performing
+//!   the same operations in the same order, bit-identical).  Batches of
+//!   >= 32 rows can additionally split across a bounded **execute
+//!   pool** ([`runtime::pool`], `--engine-threads N`,
+//!   [`runtime::NativeEngine::with_threads`]): contiguous row ranges of
+//!   >= 16 rows per worker, reassembled in row order, bit-identical to
+//!   serial execution at every thread count (pinned by
+//!   `tests/engine_parity.rs`).  The `hlo` [`runtime::Engine`]
 //!   is a second impl of the same trait: an in-repo HLO-text **parser +
 //!   graph interpreter** ([`runtime::hlo`]) running per-S modules the
 //!   emitter synthesizes offline ([`runtime::hlo::emit`]; pinned
@@ -197,6 +208,9 @@
 // house style here (they mirror the paper's subscript algebra); the lint's
 // iterator rewrites obscure which index couples which arrays.
 #![allow(clippy::needless_range_loop)]
+// The opt-in `simd` cargo feature uses `core::simd` (portable SIMD), which
+// is nightly-only; stable builds take the chunked-scalar lane kernels.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 
 pub mod counters;
 pub mod obs;

@@ -15,40 +15,58 @@ use crate::model::signature::ChannelSignature;
 /// sockets sum to 1.
 pub fn apply(sig: &ChannelSignature, threads_per_socket: &[usize])
     -> Vec<Vec<f64>> {
+    let mut m = Vec::new();
+    apply_into(sig, threads_per_socket, &mut m);
+    m
+}
+
+/// [`apply`] into a reusable matrix buffer: the outer `Vec` and its row
+/// `Vec`s are recycled in place, so a caller scoring many placements
+/// (the advisor sweep) allocates once instead of once per placement.
+/// Identical floating-point operations in identical order — [`apply`]
+/// delegates here, so the two surfaces cannot drift.
+pub fn apply_into(sig: &ChannelSignature, threads_per_socket: &[usize],
+                  m: &mut Vec<Vec<f64>>) {
     let s = threads_per_socket.len();
     assert!(sig.static_socket < s, "static socket out of range");
     let n_total: usize = threads_per_socket.iter().sum();
-    let used: Vec<bool> = threads_per_socket.iter().map(|&n| n > 0).collect();
-    let n_used = used.iter().filter(|&&u| u).count().max(1);
+    let n_used = threads_per_socket
+        .iter()
+        .filter(|&&n| n > 0)
+        .count()
+        .max(1);
     let il = sig.interleave_frac();
 
-    (0..s)
-        .map(|r| {
-            (0..s)
-                .map(|c| {
-                    let mut v = 0.0;
-                    // Static: all to the static socket's bank.
-                    if c == sig.static_socket {
-                        v += sig.static_frac;
-                    }
-                    // Local: identity.
-                    if r == c {
-                        v += sig.local_frac;
-                    }
-                    // Per-thread: weighted by thread share.
-                    if n_total > 0 {
-                        v += sig.perthread_frac * threads_per_socket[c] as f64
-                            / n_total as f64;
-                    }
-                    // Interleaved: uniform over used sockets.
-                    if used[r] && used[c] {
-                        v += il / n_used as f64;
-                    }
-                    v
-                })
-                .collect()
-        })
-        .collect()
+    m.truncate(s);
+    while m.len() < s {
+        m.push(Vec::with_capacity(s));
+    }
+    for r in 0..s {
+        let used_r = threads_per_socket[r] > 0;
+        let row = &mut m[r];
+        row.clear();
+        for c in 0..s {
+            let mut v = 0.0;
+            // Static: all to the static socket's bank.
+            if c == sig.static_socket {
+                v += sig.static_frac;
+            }
+            // Local: identity.
+            if r == c {
+                v += sig.local_frac;
+            }
+            // Per-thread: weighted by thread share.
+            if n_total > 0 {
+                v += sig.perthread_frac * threads_per_socket[c] as f64
+                    / n_total as f64;
+            }
+            // Interleaved: uniform over used sockets.
+            if used_r && threads_per_socket[c] > 0 {
+                v += il / n_used as f64;
+            }
+            row.push(v);
+        }
+    }
 }
 
 /// Multiply an already-built §4 traffic matrix into per-bank

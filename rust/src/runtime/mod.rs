@@ -39,6 +39,7 @@ use crate::util::json::Json;
 
 pub mod hlo;
 pub mod native;
+pub mod pool;
 
 pub use native::NativeEngine;
 
@@ -316,6 +317,19 @@ impl Tensor {
     pub fn row(&self, i: usize) -> &[f32] {
         let stride: usize = self.shape[1..].iter().product();
         &self.data[i * stride..(i + 1) * stride]
+    }
+
+    /// f32 elements per leading-dim row (the flat stride of [`Tensor::row`]).
+    pub fn row_stride(&self) -> usize {
+        self.shape[1..].iter().product()
+    }
+
+    /// Contiguous view of `len` rows starting at row `start` — the
+    /// zero-copy row-range slice the execute pool hands each worker
+    /// ([`pool`], [`NativeEngine`]).
+    pub fn rows(&self, start: usize, len: usize) -> &[f32] {
+        let stride = self.row_stride();
+        &self.data[start * stride..(start + len) * stride]
     }
 }
 

@@ -10,6 +10,34 @@
 //! reference within a documented f32 tolerance — carries over unchanged
 //! to a future PJRT backend.
 //!
+//! ## Batch layout and execution strategy
+//!
+//! The engine is structured for throughput, not per-row convenience:
+//!
+//! * **Structure-of-arrays batch kernels.**  Each pipeline driver writes
+//!   one preallocated flat `[B, ...]` output plane in place; no per-row
+//!   `Vec` is ever allocated on the hot path.  The shared §4 apply stage
+//!   runs over fixed-width lane chunks ([`LANES`] = 8 rows at a time):
+//!   per-row scalars (`il / n_used`, the per-socket
+//!   `p * threads[c] / n_total` terms) are hoisted into lane-transposed
+//!   scratch ([`ApplyScratch`], reused across chunks), and the
+//!   elementwise stage is a straight-line loop over the lanes that
+//!   rustc/LLVM can auto-vectorize.  Hoisting only moves *where* each
+//!   quotient is computed, never its operands or order, so chunked rows
+//!   are bit-identical to the old one-row-at-a-time loops.
+//! * **Optional explicit SIMD.**  Behind the `simd` cargo feature
+//!   (nightly: `core::simd`), the full-width apply chunk runs as
+//!   `f32x8` lane arithmetic with masked adds — same operations, same
+//!   per-lane order, so the f32 results are unchanged.  Remainder chunks
+//!   and stable toolchains fall back to the chunked-scalar code.
+//! * **Bounded execute pool.**  [`NativeEngine::with_threads`] splits
+//!   batches above [`pool::MIN_ROWS_PER_WORKER`]` * 2` rows into
+//!   contiguous row ranges executed by scoped workers, each writing a
+//!   disjoint slice of the output plane ([`pool::split_rows`]).  Rows
+//!   are independent in every pipeline, so pooled execution is
+//!   **bit-identical** to `threads = 1` — pinned by
+//!   `tests/engine_parity.rs`.
+//!
 //! Differences from the compiled 2-socket artifacts:
 //!
 //! * **Any socket count.**  Shapes are not baked in: `execute` derives S
@@ -43,7 +71,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::topology::flow_resources;
 
 use super::{
-    validate_pipeline_inputs, Artifacts, ExecutionBackend, Tensor,
+    pool, validate_pipeline_inputs, Artifacts, ExecutionBackend, Tensor,
     ENGINE_BATCH,
 };
 
@@ -52,11 +80,18 @@ const EPS: f32 = 1e-9;
 /// f32 saturation tolerance of the water-filling rounds (see module docs).
 const SAT_TOL: f32 = 1e-6;
 
+/// Lane width of the chunked batch kernels: 8 f32 rows per chunk (one
+/// AVX2 / NEON-pair register of f32, and the `f32x8` width of the
+/// feature-gated `core::simd` path).
+const LANES: usize = 8;
+
 /// The native batched engine.  Stateless apart from a cache of per-S
-/// synthesized manifests; cheap to construct and `Send + Sync`, so one
-/// instance serves every thread behind a `PredictionService`.
+/// synthesized manifests and the configured execute-pool width; cheap to
+/// construct and `Send + Sync`, so one instance serves every thread
+/// behind a `PredictionService`.
 pub struct NativeEngine {
     manifests: Mutex<HashMap<usize, Artifacts>>,
+    threads: usize,
 }
 
 impl Default for NativeEngine {
@@ -66,10 +101,27 @@ impl Default for NativeEngine {
 }
 
 impl NativeEngine {
+    /// Serial engine (`threads = 1`): every batch executes on the caller
+    /// thread.
     pub fn new() -> NativeEngine {
+        NativeEngine::with_threads(1)
+    }
+
+    /// Engine with a bounded execute pool: batches with at least
+    /// `2 * `[`pool::MIN_ROWS_PER_WORKER`] rows split into contiguous
+    /// row ranges over up to `threads` scoped workers (`0` = available
+    /// parallelism).  Results are bit-identical to [`NativeEngine::new`]
+    /// for any thread count — rows never read each other.
+    pub fn with_threads(threads: usize) -> NativeEngine {
         NativeEngine {
             manifests: Mutex::new(HashMap::new()),
+            threads,
         }
+    }
+
+    /// The configured execute-pool width (`0` = available parallelism).
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     /// The socket count a pipeline call is for, read off the submitted
@@ -111,61 +163,90 @@ impl NativeEngine {
         validate_pipeline_inputs(name, meta, inputs)
     }
 
-    fn run_signature_apply(s: usize, inputs: &[Tensor]) -> Vec<Tensor> {
+    fn run_signature_apply(&self, s: usize, inputs: &[Tensor])
+        -> Vec<Tensor> {
         let b = inputs[0].shape[0];
-        let mut out = Vec::with_capacity(b * s * s);
-        for i in 0..b {
-            out.extend(apply_matrix(s, inputs[0].row(i), inputs[1].row(i),
-                                    inputs[2].row(i)));
-        }
+        let ss = s * s;
+        let mut out = vec![0.0f32; b * ss];
+        let ranges = pool::plan(b, self.threads);
+        let chunks = pool::split_rows(&mut out, &ranges, ss);
+        pool::run(
+            ranges
+                .iter()
+                .zip(chunks)
+                .map(|(&(start, len), chunk)| {
+                    move || {
+                        batch_signature_apply(s, inputs, start, len, chunk)
+                    }
+                })
+                .collect(),
+        );
         vec![Tensor::new(out, vec![b, s, s])]
     }
 
-    fn run_predict_counters(s: usize, inputs: &[Tensor]) -> Vec<Tensor> {
+    fn run_predict_counters(&self, s: usize, inputs: &[Tensor])
+        -> Vec<Tensor> {
         let b = inputs[0].shape[0];
-        let mut out = Vec::with_capacity(b * s * 2);
-        for i in 0..b {
-            let m = apply_matrix(s, inputs[0].row(i), inputs[1].row(i),
-                                 inputs[2].row(i));
-            out.extend(counters_row(s, &m, inputs[3].row(i)));
-        }
+        let mut out = vec![0.0f32; b * s * 2];
+        let ranges = pool::plan(b, self.threads);
+        let chunks = pool::split_rows(&mut out, &ranges, s * 2);
+        pool::run(
+            ranges
+                .iter()
+                .zip(chunks)
+                .map(|(&(start, len), chunk)| {
+                    move || {
+                        batch_predict_counters(s, inputs, start, len, chunk)
+                    }
+                })
+                .collect(),
+        );
         vec![Tensor::new(out, vec![b, s, 2])]
     }
 
-    fn run_predict_performance(s: usize, inputs: &[Tensor]) -> Vec<Tensor> {
+    fn run_predict_performance(&self, s: usize, inputs: &[Tensor])
+        -> Vec<Tensor> {
         let b = inputs[0].shape[0];
         let nf = 2 * s * s;
-        let mut out = Vec::with_capacity(b * nf);
-        for i in 0..b {
-            let m = apply_matrix(s, inputs[0].row(i), inputs[1].row(i),
-                                 inputs[2].row(i));
-            out.extend(perf_row(s, &m, inputs[2].row(i), inputs[3].row(i),
-                                inputs[4].row(i)));
-        }
+        let mut out = vec![0.0f32; b * nf];
+        let ranges = pool::plan(b, self.threads);
+        let chunks = pool::split_rows(&mut out, &ranges, nf);
+        pool::run(
+            ranges
+                .iter()
+                .zip(chunks)
+                .map(|(&(start, len), chunk)| {
+                    move || {
+                        batch_predict_performance(
+                            s, inputs, start, len, chunk,
+                        )
+                    }
+                })
+                .collect(),
+        );
         vec![Tensor::new(out, vec![b, nf])]
     }
 
-    fn run_fit(s: usize, inputs: &[Tensor]) -> Vec<Tensor> {
+    fn run_fit(&self, s: usize, inputs: &[Tensor]) -> Vec<Tensor> {
         let b = inputs[0].shape[0];
-        let mut fracs = Vec::with_capacity(b * 3);
-        let mut onehot = Vec::with_capacity(b * s);
-        let mut misfit = Vec::with_capacity(b);
-        for i in 0..b {
-            let (sym_c, sym_r, sym_t) =
-                (inputs[0].row(i), inputs[1].row(i), inputs[2].row(i));
-            let (asym_c, asym_r, asym_t) =
-                (inputs[3].row(i), inputs[4].row(i), inputs[5].row(i));
-            let (f, k, mf) = if s == 2 {
-                fit2_row(sym_c, sym_r, asym_c, asym_r, asym_t)
-            } else {
-                fitn_row(s, sym_c, sym_r, sym_t, asym_c, asym_r, asym_t)
-            };
-            fracs.extend(f);
-            let mut oh = vec![0.0f32; s];
-            oh[k] = 1.0;
-            onehot.extend(oh);
-            misfit.push(mf);
-        }
+        let mut fracs = vec![0.0f32; b * 3];
+        let mut onehot = vec![0.0f32; b * s];
+        let mut misfit = vec![0.0f32; b];
+        let ranges = pool::plan(b, self.threads);
+        let f_chunks = pool::split_rows(&mut fracs, &ranges, 3);
+        let o_chunks = pool::split_rows(&mut onehot, &ranges, s);
+        let m_chunks = pool::split_rows(&mut misfit, &ranges, 1);
+        pool::run(
+            ranges
+                .iter()
+                .zip(f_chunks)
+                .zip(o_chunks)
+                .zip(m_chunks)
+                .map(|(((&(start, len), f), o), m)| {
+                    move || batch_fit(s, inputs, start, len, f, o, m)
+                })
+                .collect(),
+        );
         vec![
             Tensor::new(fracs, vec![b, 3]),
             Tensor::new(onehot, vec![b, s]),
@@ -207,52 +288,201 @@ impl ExecutionBackend for NativeEngine {
         let s = Self::derive_sockets(name, inputs)?;
         self.validate(s, name, inputs)?;
         Ok(match name {
-            "fit_signature" => Self::run_fit(s, inputs),
-            "signature_apply" => Self::run_signature_apply(s, inputs),
-            "predict_counters" => Self::run_predict_counters(s, inputs),
+            "fit_signature" => self.run_fit(s, inputs),
+            "signature_apply" => self.run_signature_apply(s, inputs),
+            "predict_counters" => self.run_predict_counters(s, inputs),
             "predict_performance" => {
-                Self::run_predict_performance(s, inputs)
+                self.run_predict_performance(s, inputs)
             }
             _ => unreachable!("derive_sockets vetted the name"),
         })
     }
 }
 
-// ---- §4 apply + counter projection (f32) ----------------------------------
+// ---- §4 apply: lane-chunked batch kernel ----------------------------------
 
-/// §4 traffic-fraction matrix, flattened row-major `[S, S]` — the f32 twin
-/// of [`crate::model::apply::apply`] with the one-hot static encoding of
-/// the compiled kernels.
-fn apply_matrix(s: usize, fracs: &[f32], onehot: &[f32], threads: &[f32])
-    -> Vec<f32> {
-    let (a, l, p) = (fracs[0], fracs[1], fracs[2]);
-    let il = (1.0 - (a + l + p)).clamp(0.0, 1.0);
-    let used: Vec<bool> = threads.iter().map(|&t| t > 0.0).collect();
-    let n_used = used.iter().filter(|&&u| u).count().max(1) as f32;
-    let n_total: f32 = threads.iter().sum();
-    let mut m = vec![0.0f32; s * s];
-    for r in 0..s {
-        for c in 0..s {
-            let mut v = a * onehot[c];
-            if r == c {
-                v += l;
-            }
-            if n_total > 0.0 {
-                v += p * threads[c] / n_total;
-            }
-            if used[r] && used[c] {
-                v += il / n_used;
-            }
-            m[r * s + c] = v;
-        }
-    }
-    m
+/// Per-chunk scratch for the §4 apply stage, lane-transposed
+/// (`[socket][LANES]`) so the elementwise loop reads each socket's lane
+/// vector contiguously.  One instance per worker, reused across chunks —
+/// zero steady-state allocation.
+struct ApplyScratch {
+    /// `a * onehot[c]` per `[socket][lane]`.
+    a_oh: Vec<f32>,
+    /// `p * threads[c] / n_total` per `[socket][lane]` (valid only where
+    /// `has_pt`).
+    pt: Vec<f32>,
+    /// `threads[c] > 0` per `[socket][lane]`.
+    used: Vec<bool>,
+    /// The row's local fraction `l`.
+    lfrac: [f32; LANES],
+    /// The hoisted `il / n_used` quotient.
+    ilq: [f32; LANES],
+    /// Whether the row has any threads (`n_total > 0`).
+    has_pt: [bool; LANES],
 }
 
-/// Per-bank `(local, remote)` byte projection, flattened `[S, 2]` — the
-/// f32 twin of [`crate::model::apply::counters_from_matrix`].
-fn counters_row(s: usize, m: &[f32], totals: &[f32]) -> Vec<f32> {
-    let mut out = vec![0.0f32; s * 2];
+impl ApplyScratch {
+    fn new(s: usize) -> ApplyScratch {
+        ApplyScratch {
+            a_oh: vec![0.0; s * LANES],
+            pt: vec![0.0; s * LANES],
+            used: vec![false; s * LANES],
+            lfrac: [0.0; LANES],
+            ilq: [0.0; LANES],
+            has_pt: [false; LANES],
+        }
+    }
+}
+
+/// Stage 1 of the chunked apply: hoist every per-row scalar of the §4
+/// matrix into lane-transposed scratch.  Each quotient is computed from
+/// the same operands, in the same order, as the per-row loops it
+/// replaces — only *where* it is computed moves, so the bits don't.
+fn apply_precompute(s: usize, lanes: usize, fracs: &[f32], onehot: &[f32],
+                    threads: &[f32], scr: &mut ApplyScratch) {
+    for l in 0..lanes {
+        let fr = &fracs[l * 3..l * 3 + 3];
+        let (a, lv, p) = (fr[0], fr[1], fr[2]);
+        let il = (1.0 - (a + lv + p)).clamp(0.0, 1.0);
+        let oh = &onehot[l * s..(l + 1) * s];
+        let th = &threads[l * s..(l + 1) * s];
+        let mut n_used = 0usize;
+        for c in 0..s {
+            let u = th[c] > 0.0;
+            scr.used[c * LANES + l] = u;
+            if u {
+                n_used += 1;
+            }
+        }
+        let n_used = n_used.max(1) as f32;
+        let n_total: f32 = th.iter().sum();
+        scr.lfrac[l] = lv;
+        scr.ilq[l] = il / n_used;
+        scr.has_pt[l] = n_total > 0.0;
+        for c in 0..s {
+            scr.a_oh[c * LANES + l] = a * oh[c];
+            scr.pt[c * LANES + l] = if n_total > 0.0 {
+                p * th[c] / n_total
+            } else {
+                0.0
+            };
+        }
+    }
+}
+
+/// Stage 2, chunked-scalar: the straight-line elementwise loop LLVM
+/// auto-vectorizes.  `out` holds `lanes` contiguous `[S, S]` rows.
+fn apply_elementwise(s: usize, lanes: usize, scr: &ApplyScratch,
+                     out: &mut [f32]) {
+    let ss = s * s;
+    for l in 0..lanes {
+        let lf = scr.lfrac[l];
+        let ilq = scr.ilq[l];
+        let has_pt = scr.has_pt[l];
+        for r in 0..s {
+            let used_r = scr.used[r * LANES + l];
+            for c in 0..s {
+                let mut v = scr.a_oh[c * LANES + l];
+                if r == c {
+                    v += lf;
+                }
+                if has_pt {
+                    v += scr.pt[c * LANES + l];
+                }
+                if used_r && scr.used[c * LANES + l] {
+                    v += ilq;
+                }
+                out[l * ss + r * s + c] = v;
+            }
+        }
+    }
+}
+
+/// Explicit `core::simd` variant of the elementwise stage: 8 rows per
+/// `f32x8` with masked adds.  Same operations in the same per-lane order
+/// as [`apply_elementwise`], so the f32 results are identical; this only
+/// exists to hand the vectorizer the lanes explicitly.  Nightly-only
+/// (`core::simd`); the `simd` cargo feature gates it and everything else
+/// falls back to the chunked-scalar stage.
+#[cfg(feature = "simd")]
+mod simd_lanes {
+    use core::simd::{f32x8, Mask};
+
+    use super::{ApplyScratch, LANES};
+
+    pub(super) fn elementwise(s: usize, scr: &ApplyScratch,
+                              out: &mut [f32]) {
+        let ss = s * s;
+        let lf = f32x8::from_array(scr.lfrac);
+        let il = f32x8::from_array(scr.ilq);
+        let has_pt: Mask<i32, LANES> = Mask::from_array(scr.has_pt);
+        for r in 0..s {
+            for c in 0..s {
+                let mut v = f32x8::from_slice(
+                    &scr.a_oh[c * LANES..(c + 1) * LANES],
+                );
+                if r == c {
+                    v += lf;
+                }
+                let pt =
+                    f32x8::from_slice(&scr.pt[c * LANES..(c + 1) * LANES]);
+                v = has_pt.select(v + pt, v);
+                let used: [bool; LANES] = std::array::from_fn(|l| {
+                    scr.used[r * LANES + l] && scr.used[c * LANES + l]
+                });
+                let used: Mask<i32, LANES> = Mask::from_array(used);
+                v = used.select(v + il, v);
+                let arr = v.to_array();
+                for (l, value) in arr.iter().enumerate() {
+                    out[l * ss + r * s + c] = *value;
+                }
+            }
+        }
+    }
+}
+
+/// One apply chunk: precompute + elementwise for `lanes <= LANES` rows
+/// starting at the front of the given input slices, writing `lanes`
+/// contiguous `[S, S]` rows into `out`.
+fn apply_chunk(s: usize, lanes: usize, fracs: &[f32], onehot: &[f32],
+               threads: &[f32], scr: &mut ApplyScratch, out: &mut [f32]) {
+    apply_precompute(s, lanes, fracs, onehot, threads, scr);
+    #[cfg(feature = "simd")]
+    if lanes == LANES {
+        simd_lanes::elementwise(s, scr, out);
+        return;
+    }
+    apply_elementwise(s, lanes, scr, out);
+}
+
+// ---- batch kernels (one worker's contiguous row range each) ---------------
+
+/// `signature_apply` over rows `[row0, row0 + rows)`, writing directly
+/// into the worker's disjoint `[rows, S, S]` output slice.
+fn batch_signature_apply(s: usize, inputs: &[Tensor], row0: usize,
+                         rows: usize, out: &mut [f32]) {
+    let ss = s * s;
+    let mut scr = ApplyScratch::new(s);
+    let mut cs = 0;
+    while cs < rows {
+        let lanes = LANES.min(rows - cs);
+        apply_chunk(
+            s,
+            lanes,
+            inputs[0].rows(row0 + cs, lanes),
+            inputs[1].rows(row0 + cs, lanes),
+            inputs[2].rows(row0 + cs, lanes),
+            &mut scr,
+            &mut out[cs * ss..(cs + lanes) * ss],
+        );
+        cs += lanes;
+    }
+}
+
+/// Per-bank `(local, remote)` byte projection for one row — the f32 twin
+/// of [`crate::model::apply::counters_from_matrix`], writing a `[S, 2]`
+/// slice in place.
+fn counters_into(s: usize, m: &[f32], totals: &[f32], out: &mut [f32]) {
     for bank in 0..s {
         let mut local = 0.0f32;
         let mut remote = 0.0f32;
@@ -267,44 +497,179 @@ fn counters_row(s: usize, m: &[f32], totals: &[f32]) -> Vec<f32> {
         out[bank * 2] = local;
         out[bank * 2 + 1] = remote;
     }
-    out
+}
+
+/// `predict_counters` over one worker's row range: chunked apply into
+/// lane scratch, then the counter projection per lane.
+fn batch_predict_counters(s: usize, inputs: &[Tensor], row0: usize,
+                          rows: usize, out: &mut [f32]) {
+    let ss = s * s;
+    let mut scr = ApplyScratch::new(s);
+    let mut ms = vec![0.0f32; LANES * ss];
+    let mut cs = 0;
+    while cs < rows {
+        let lanes = LANES.min(rows - cs);
+        apply_chunk(
+            s,
+            lanes,
+            inputs[0].rows(row0 + cs, lanes),
+            inputs[1].rows(row0 + cs, lanes),
+            inputs[2].rows(row0 + cs, lanes),
+            &mut scr,
+            &mut ms[..lanes * ss],
+        );
+        for l in 0..lanes {
+            let row = cs + l;
+            counters_into(
+                s,
+                &ms[l * ss..(l + 1) * ss],
+                inputs[3].row(row0 + row),
+                &mut out[row * s * 2..(row + 1) * s * 2],
+            );
+        }
+        cs += lanes;
+    }
+}
+
+/// `predict_performance` over one worker's row range: chunked apply,
+/// then per-row demand construction + water-filling out of reused
+/// scratch ([`MaxminScratch`] — the flow→resource incidence is computed
+/// once per range, not per row).
+fn batch_predict_performance(s: usize, inputs: &[Tensor], row0: usize,
+                             rows: usize, out: &mut [f32]) {
+    let ss = s * s;
+    let nf = 2 * ss;
+    let mut scr = ApplyScratch::new(s);
+    let mut ms = vec![0.0f32; LANES * ss];
+    let mut mm = MaxminScratch::new(s, inputs[4].row_stride());
+    let mut cs = 0;
+    while cs < rows {
+        let lanes = LANES.min(rows - cs);
+        apply_chunk(
+            s,
+            lanes,
+            inputs[0].rows(row0 + cs, lanes),
+            inputs[1].rows(row0 + cs, lanes),
+            inputs[2].rows(row0 + cs, lanes),
+            &mut scr,
+            &mut ms[..lanes * ss],
+        );
+        for l in 0..lanes {
+            let row = cs + l;
+            perf_row_into(
+                s,
+                &ms[l * ss..(l + 1) * ss],
+                inputs[2].row(row0 + row),
+                inputs[3].row(row0 + row),
+                inputs[4].row(row0 + row),
+                &mut mm,
+                &mut out[row * nf..(row + 1) * nf],
+            );
+        }
+        cs += lanes;
+    }
+}
+
+/// `fit_signature` over one worker's row range.  The fit is inherently
+/// per-row (argmax + regression over a handful of banks); the batch win
+/// is the scratch reuse in [`fitn_row`] and writing the three output
+/// planes in place.
+fn batch_fit(s: usize, inputs: &[Tensor], row0: usize, rows: usize,
+             fracs: &mut [f32], onehot: &mut [f32], misfit: &mut [f32]) {
+    let mut scr = FitScratch::new(s);
+    for i in 0..rows {
+        let g = row0 + i;
+        let (f, k, mf) = if s == 2 {
+            fit2_row(inputs[0].row(g), inputs[1].row(g), inputs[3].row(g),
+                     inputs[4].row(g), inputs[5].row(g))
+        } else {
+            fitn_row(s, inputs[0].row(g), inputs[1].row(g),
+                     inputs[2].row(g), inputs[3].row(g), inputs[4].row(g),
+                     inputs[5].row(g), &mut scr)
+        };
+        fracs[i * 3..i * 3 + 3].copy_from_slice(&f);
+        onehot[i * s + k] = 1.0;
+        misfit[i] = mf;
+    }
 }
 
 // ---- performance prediction (f32 water-filling) ---------------------------
 
+/// Reused per-worker scratch of the water-filling solver.  The
+/// flow→resource incidence ([`flow_resources`]) depends only on S, so it
+/// is built once per worker range instead of once per row.
+struct MaxminScratch {
+    demands: Vec<f32>,
+    resources: Vec<(usize, Option<usize>)>,
+    frozen: Vec<bool>,
+    residual: Vec<f32>,
+    counts: Vec<u32>,
+    sat: Vec<bool>,
+}
+
+impl MaxminScratch {
+    fn new(s: usize, n_resources: usize) -> MaxminScratch {
+        let nf = 2 * s * s;
+        let mut resources = Vec::with_capacity(nf);
+        for src in 0..s {
+            for dst in 0..s {
+                for rw in 0..2 {
+                    resources.push(flow_resources(s, src, dst, rw));
+                }
+            }
+        }
+        MaxminScratch {
+            demands: vec![0.0; nf],
+            resources,
+            frozen: vec![false; nf],
+            residual: vec![0.0; n_resources],
+            counts: vec![0; n_resources],
+            sat: vec![false; n_resources],
+        }
+    }
+}
+
 /// Flow demands + max-min allocation for one query row (flow layout
-/// `(src*S + dst)*2 + rw`, resources via [`flow_resources`]).
-fn perf_row(s: usize, m: &[f32], threads: &[f32], demand_pt: &[f32],
-            caps: &[f32]) -> Vec<f32> {
-    let nf = 2 * s * s;
-    let mut demands = vec![0.0f32; nf];
-    let mut resources = Vec::with_capacity(nf);
+/// `(src*S + dst)*2 + rw`), allocated into the row's output slice.
+fn perf_row_into(s: usize, m: &[f32], threads: &[f32], demand_pt: &[f32],
+                 caps: &[f32], mm: &mut MaxminScratch, out: &mut [f32]) {
     for src in 0..s {
         for dst in 0..s {
             for rw in 0..2 {
                 let f = (src * s + dst) * 2 + rw;
-                demands[f] = threads[src] * m[src * s + dst] * demand_pt[rw];
-                resources.push(flow_resources(s, src, dst, rw));
+                mm.demands[f] =
+                    threads[src] * m[src * s + dst] * demand_pt[rw];
             }
         }
     }
-    maxmin_f32(&demands, &resources, caps)
+    maxmin_f32_into(mm, caps, out);
 }
 
 /// Progressive water-filling in f32 — the port of
 /// [`crate::simulator::contention::maxmin_into`] with f32-appropriate
 /// tolerances.  Each flow touches its destination channel plus (for remote
 /// flows) one interconnect link, so the resource sets are the
-/// `(chan, Option<link>)` pairs of [`flow_resources`].
-fn maxmin_f32(demands: &[f32], resources: &[(usize, Option<usize>)],
-              caps: &[f32]) -> Vec<f32> {
+/// `(chan, Option<link>)` pairs of [`flow_resources`].  `alloc` is the
+/// caller's output slice; every other buffer lives in the reused scratch.
+fn maxmin_f32_into(scr: &mut MaxminScratch, caps: &[f32],
+                   alloc: &mut [f32]) {
+    let MaxminScratch {
+        demands,
+        resources,
+        frozen,
+        residual,
+        counts,
+        sat,
+    } = scr;
     let nf = demands.len();
     let nr = caps.len();
-    let mut alloc = vec![0.0f32; nf];
-    let mut frozen = vec![false; nf];
-    let mut residual = caps.to_vec();
-    let mut counts = vec![0u32; nr];
-    let mut sat = vec![false; nr];
+    for a in alloc.iter_mut() {
+        *a = 0.0;
+    }
+    for f in frozen.iter_mut() {
+        *f = false;
+    }
+    residual.copy_from_slice(caps);
 
     let mut n_active = 0usize;
     for i in 0..nf {
@@ -384,7 +749,6 @@ fn maxmin_f32(demands: &[f32], resources: &[(usize, Option<usize>)],
             }
         }
     }
-    alloc
 }
 
 // ---- §5 fit (f32) ---------------------------------------------------------
@@ -392,6 +756,7 @@ fn maxmin_f32(demands: &[f32], resources: &[(usize, Option<usize>)],
 /// 2-socket fit row: the f32 port of [`crate::model::fit::fit_channel`]
 /// (the paper's exact algorithm).  `counts` rows are `[local, remote]` per
 /// bank, flattened `[2, 2]`.  Returns `(fracs, static_socket, misfit)`.
+/// Allocation-free: every intermediate is a fixed-size array.
 fn fit2_row(sym_c: &[f32], sym_r: &[f32], asym_c: &[f32], asym_r: &[f32],
             thr: &[f32]) -> ([f32; 3], usize, f32) {
     let normalize = |counts: &[f32], rates: &[f32]| -> [[f32; 2]; 2] {
@@ -461,40 +826,80 @@ fn fit2_row(sym_c: &[f32], sym_r: &[f32], asym_c: &[f32], asym_r: &[f32],
     ([static_frac, local_frac, perthread_frac], k, misfit)
 }
 
+/// Reused per-worker scratch of the S > 2 fit ([`fitn_row`]): the
+/// normalization factors, normalized banks, and regression intermediates
+/// that used to be fresh `Vec`s per row.
+struct FitScratch {
+    factor: Vec<f32>,
+    symn: Vec<[f32; 2]>,
+    asymn: Vec<[f32; 2]>,
+    totals: Vec<f32>,
+    r_vals: Vec<f32>,
+    cpu_tot: Vec<f32>,
+}
+
+impl FitScratch {
+    fn new(s: usize) -> FitScratch {
+        FitScratch {
+            factor: Vec::with_capacity(s),
+            symn: Vec::with_capacity(s),
+            asymn: Vec::with_capacity(s),
+            totals: Vec::with_capacity(s),
+            r_vals: Vec::with_capacity(s),
+            cpu_tot: Vec::with_capacity(s),
+        }
+    }
+}
+
+/// The §5.2 rate normalization of [`fitn_row`], filled into reused
+/// scratch.  Element order and arithmetic match the old
+/// collect-into-fresh-`Vec` version exactly.
+fn normalize_into(s: usize, counts: &[f32], rates: &[f32], threads: &[f32],
+                  factor: &mut Vec<f32>, out: &mut Vec<[f32; 2]>) {
+    let s_f = s as f32;
+    let mean: f32 = rates.iter().sum::<f32>() / s_f;
+    factor.clear();
+    factor.extend(rates.iter().map(|&r| mean / r.max(EPS)));
+    out.clear();
+    for bank in 0..s {
+        let mut wsum = 0.0f32;
+        let mut fsum = 0.0f32;
+        for other in 0..s {
+            if other != bank {
+                wsum += threads[other];
+                fsum += threads[other] * factor[other];
+            }
+        }
+        let rf = if wsum > 0.0 { fsum / wsum } else { 1.0 };
+        out.push([counts[bank * 2] * factor[bank],
+                  counts[bank * 2 + 1] * rf]);
+    }
+}
+
 /// S-socket fit row (S > 2): the f32 port of
 /// [`crate::model::fit_multi::fit_channel_multi`], including its remote
 /// normalization weighting (which needs `sym_t`) and its max-deviation
-/// misfit.
+/// misfit.  All intermediates live in the worker's [`FitScratch`].
+#[allow(clippy::too_many_arguments)]
 fn fitn_row(s: usize, sym_c: &[f32], sym_r: &[f32], sym_t: &[f32],
-            asym_c: &[f32], asym_r: &[f32], asym_t: &[f32])
-    -> ([f32; 3], usize, f32) {
+            asym_c: &[f32], asym_r: &[f32], asym_t: &[f32],
+            scr: &mut FitScratch) -> ([f32; 3], usize, f32) {
     let s_f = s as f32;
-    let normalize = |counts: &[f32], rates: &[f32], threads: &[f32]|
-        -> Vec<[f32; 2]> {
-        let mean: f32 = rates.iter().sum::<f32>() / s_f;
-        let factor: Vec<f32> =
-            rates.iter().map(|&r| mean / r.max(EPS)).collect();
-        (0..s)
-            .map(|bank| {
-                let mut wsum = 0.0f32;
-                let mut fsum = 0.0f32;
-                for other in 0..s {
-                    if other != bank {
-                        wsum += threads[other];
-                        fsum += threads[other] * factor[other];
-                    }
-                }
-                let rf = if wsum > 0.0 { fsum / wsum } else { 1.0 };
-                [counts[bank * 2] * factor[bank], counts[bank * 2 + 1] * rf]
-            })
-            .collect()
-    };
-    let symn = normalize(sym_c, sym_r, sym_t);
-    let asymn = normalize(asym_c, asym_r, asym_t);
+    let FitScratch {
+        factor,
+        symn,
+        asymn,
+        totals,
+        r_vals,
+        cpu_tot,
+    } = scr;
+    normalize_into(s, sym_c, sym_r, sym_t, factor, symn);
+    normalize_into(s, asym_c, asym_r, asym_t, factor, asymn);
 
     // §5.3 static socket (last max on ties — Iterator::max_by semantics
     // of the reference) + fraction as the excess over the others' mean.
-    let totals: Vec<f32> = symn.iter().map(|b| b[0] + b[1]).collect();
+    totals.clear();
+    totals.extend(symn.iter().map(|b| b[0] + b[1]));
     let grand = totals.iter().sum::<f32>().max(EPS);
     let mut k = 0usize;
     for i in 0..s {
@@ -509,7 +914,7 @@ fn fitn_row(s: usize, sym_c: &[f32], sym_r: &[f32], sym_t: &[f32],
     // §5.4 local fraction.
     let post_total = mean_others.max(EPS);
     let mut r_sum = 0.0f32;
-    let mut r_vals = Vec::with_capacity(s);
+    r_vals.clear();
     for bank in 0..s {
         let remote = if bank == k {
             symn[bank][1] - static_bytes * (s_f - 1.0) / s_f
@@ -545,14 +950,15 @@ fn fitn_row(s: usize, sym_c: &[f32], sym_r: &[f32], sym_t: &[f32],
             0.0
         }
     };
-    let cpu_tot: Vec<f32> = (0..s)
-        .map(|i| {
+    cpu_tot.clear();
+    for i in 0..s {
+        cpu_tot.push(
             asymn[i][0]
                 + (0..s)
                     .map(|j| asymn[j][1] * share(i, j))
-                    .sum::<f32>()
-        })
-        .collect();
+                    .sum::<f32>(),
+        );
+    }
     let used = n.iter().filter(|&&t| t > 0.0).count().max(1) as f32;
     let il = 1.0 / used;
     let mut num = 0.0f32;
@@ -597,6 +1003,33 @@ mod tests {
         Batch::new(rows.len(), ENGINE_BATCH).pack(rows, dims)
     }
 
+    /// One-row §4 matrix through the chunked kernel (the old per-row
+    /// `apply_matrix` surface, for the worked-example tests).
+    fn apply_matrix(s: usize, fracs: &[f32], onehot: &[f32],
+                    threads: &[f32]) -> Vec<f32> {
+        let mut scr = ApplyScratch::new(s);
+        let mut out = vec![0.0f32; s * s];
+        apply_chunk(s, 1, fracs, onehot, threads, &mut scr, &mut out);
+        out
+    }
+
+    /// Scratch-allocating wrapper over [`maxmin_f32_into`] with explicit
+    /// resource sets (the solver tests build custom topologies).
+    fn maxmin_f32(demands: &[f32], resources: &[(usize, Option<usize>)],
+                  caps: &[f32]) -> Vec<f32> {
+        let mut scr = MaxminScratch {
+            demands: demands.to_vec(),
+            resources: resources.to_vec(),
+            frozen: vec![false; demands.len()],
+            residual: vec![0.0; caps.len()],
+            counts: vec![0; caps.len()],
+            sat: vec![false; caps.len()],
+        };
+        let mut alloc = vec![0.0f32; demands.len()];
+        maxmin_f32_into(&mut scr, caps, &mut alloc);
+        alloc
+    }
+
     #[test]
     fn apply_matrix_matches_the_f64_reference() {
         // The paper's Fig 5 worked example.
@@ -608,6 +1041,57 @@ mod tests {
             for c in 0..2 {
                 assert!((got[r * 2 + c] - want[r][c] as f32).abs() < 1e-6,
                         "m[{r}][{c}]");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_apply_matches_per_row_apply_bit_for_bit() {
+        // A 19-row batch (two full lanes + a 3-row remainder) through the
+        // chunked kernel must equal 19 single-row calls exactly.
+        let s = 4usize;
+        let b = 19usize;
+        let mut fracs = Vec::new();
+        let mut onehot = Vec::new();
+        let mut threads = Vec::new();
+        for i in 0..b {
+            let x = i as f32;
+            fracs.extend([0.01 * x, 0.3 - 0.005 * x, 0.02 * x]);
+            let mut oh = vec![0.0f32; s];
+            oh[i % s] = 1.0;
+            onehot.extend(oh);
+            for c in 0..s {
+                threads.push(if (i + c) % 3 == 0 {
+                    0.0
+                } else {
+                    (c + 1) as f32
+                });
+            }
+        }
+        let mut chunked = vec![0.0f32; b * s * s];
+        let mut scr = ApplyScratch::new(s);
+        let mut cs = 0;
+        while cs < b {
+            let lanes = LANES.min(b - cs);
+            apply_chunk(
+                s,
+                lanes,
+                &fracs[cs * 3..(cs + lanes) * 3],
+                &onehot[cs * s..(cs + lanes) * s],
+                &threads[cs * s..(cs + lanes) * s],
+                &mut scr,
+                &mut chunked[cs * s * s..(cs + lanes) * s * s],
+            );
+            cs += lanes;
+        }
+        for i in 0..b {
+            let row = apply_matrix(s, &fracs[i * 3..i * 3 + 3],
+                                   &onehot[i * s..(i + 1) * s],
+                                   &threads[i * s..(i + 1) * s]);
+            for j in 0..s * s {
+                assert_eq!(chunked[i * s * s + j].to_bits(),
+                           row[j].to_bits(),
+                           "row {i} elem {j}");
             }
         }
     }
@@ -640,6 +1124,29 @@ mod tests {
         for (f, (g, w)) in got.iter().zip(&want).enumerate() {
             assert!((*g as f64 - w).abs() < 1e-4 * w.abs().max(1.0),
                     "flow {f}: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn maxmin_scratch_reuse_is_bit_identical_across_rows() {
+        // The same solve through a dirty scratch (after a different row)
+        // must give the same bits as through a fresh one.
+        let caps = [10.0f32, 8.0, 6.0, 5.0, 2.0, 2.0, 3.0, 3.0];
+        let mut scr = MaxminScratch::new(2, caps.len());
+        let demands_a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let demands_b = [0.5f32, 0.0, 9.0, 1.5, 2.5, 0.0, 4.5, 3.0];
+        let mut first = vec![0.0f32; 8];
+        scr.demands.copy_from_slice(&demands_b);
+        maxmin_f32_into(&mut scr, &caps, &mut first);
+        // Dirty the scratch with a different row, then re-solve B.
+        scr.demands.copy_from_slice(&demands_a);
+        let mut junk = vec![0.0f32; 8];
+        maxmin_f32_into(&mut scr, &caps, &mut junk);
+        scr.demands.copy_from_slice(&demands_b);
+        let mut second = vec![7.0f32; 8]; // dirty output slice too
+        maxmin_f32_into(&mut scr, &caps, &mut second);
+        for i in 0..8 {
+            assert_eq!(first[i].to_bits(), second[i].to_bits(), "flow {i}");
         }
     }
 
@@ -712,6 +1219,57 @@ mod tests {
         assert!((fracs[2] - 0.3).abs() < 1e-4);
         assert_eq!(onehot, &vec![0.0, 1.0]);
         assert!(misfit < 1e-4);
+    }
+
+    #[test]
+    fn pooled_execution_is_bit_identical_to_serial() {
+        // A full 64-row batch splits into 4 worker ranges under 8
+        // threads (MIN_ROWS_PER_WORKER = 16); every pipeline output must
+        // match the serial engine bit for bit.
+        let s = 2usize;
+        let b = ENGINE_BATCH;
+        let mut fracs = Vec::new();
+        let mut onehot = Vec::new();
+        let mut threads = Vec::new();
+        let mut totals = Vec::new();
+        for i in 0..b {
+            let x = (i % 17) as f32;
+            fracs.push(vec![0.01 * x, 0.25, 0.02 * x]);
+            onehot.push(if i % 2 == 0 {
+                vec![1.0, 0.0]
+            } else {
+                vec![0.0, 1.0]
+            });
+            threads.push(vec![1.0 + x, (i % 3) as f32]);
+            totals.push(vec![2.0 + x, 1.0]);
+        }
+        let pack = |rows: &Vec<Vec<f32>>, dims: &[usize]| {
+            Batch::new(b, ENGINE_BATCH).pack(rows, dims)
+        };
+        let inputs = vec![
+            pack(&fracs, &[3]),
+            pack(&onehot, &[2]),
+            pack(&threads, &[2]),
+            pack(&totals, &[2]),
+        ];
+        let serial = NativeEngine::new();
+        let pooled = NativeEngine::with_threads(8);
+        for name in ["signature_apply", "predict_counters"] {
+            let args = if name == "signature_apply" {
+                &inputs[..3]
+            } else {
+                &inputs[..4]
+            };
+            let a = serial.execute(name, args).unwrap();
+            let p = pooled.execute(name, args).unwrap();
+            assert_eq!(a.len(), p.len());
+            for (ta, tp) in a.iter().zip(&p) {
+                assert_eq!(ta.shape, tp.shape, "{name}");
+                for (va, vp) in ta.data.iter().zip(&tp.data) {
+                    assert_eq!(va.to_bits(), vp.to_bits(), "{name}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,198 @@
+//! Bounded execute pool for the native engine: split a `[B, ...]` batch
+//! into contiguous row ranges, run one worker per range on scoped
+//! threads, and let each worker write its rows into a disjoint slice of
+//! the preallocated output plane.
+//!
+//! Determinism contract: rows are independent in every model pipeline
+//! (the §4 apply, the §5 fit, the counter projection, and the per-row
+//! water-filling never read across rows), each worker executes the
+//! identical per-row arithmetic the serial path executes, and the output
+//! slices are disjoint row ranges reassembled in row order by
+//! construction — so pooled execution is **bit-identical** to
+//! `threads = 1`, pinned by `tests/engine_parity.rs`.
+//!
+//! This is deliberately not [`crate::coordinator::pool::parallel_map`]:
+//! that pool moves owned items through `Mutex<Option<T>>` slots (fan-out
+//! over simulator runs), while the engine needs zero-copy splitting of
+//! one flat `f32` plane — `split_rows` + `std::thread::scope` borrows do
+//! that without any per-row boxing or locking.
+
+/// Minimum rows each worker should receive before splitting a batch is
+/// worth the spawn cost.  Batches smaller than `2 * MIN_ROWS_PER_WORKER`
+/// therefore always run serially regardless of the configured thread
+/// count (`ENGINE_BATCH = 64` splits across at most 4 workers).
+pub const MIN_ROWS_PER_WORKER: usize = 16;
+
+/// Worker count for a batch of `rows` given the configured engine thread
+/// count (`0` = available parallelism): never more than `threads`, and
+/// never so many that a worker would get fewer than
+/// [`MIN_ROWS_PER_WORKER`] rows.
+pub fn plan_workers(rows: usize, threads: usize) -> usize {
+    if rows == 0 {
+        return 1;
+    }
+    let cap = if threads == 0 {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(4)
+    } else {
+        threads
+    };
+    // Floor division: every worker keeps >= MIN_ROWS_PER_WORKER rows.
+    let by_rows = (rows / MIN_ROWS_PER_WORKER).max(1);
+    cap.clamp(1, by_rows)
+}
+
+/// Contiguous `(start, len)` row ranges covering `[0, rows)`, one per
+/// worker, in row order.  The remainder spreads one extra row over the
+/// leading ranges, so range sizes differ by at most one.
+pub fn row_ranges(rows: usize, workers: usize) -> Vec<(usize, usize)> {
+    let workers = workers.clamp(1, rows.max(1));
+    let base = rows / workers;
+    let rem = rows % workers;
+    let mut out = Vec::with_capacity(workers);
+    let mut start = 0;
+    for w in 0..workers {
+        let len = base + usize::from(w < rem);
+        out.push((start, len));
+        start += len;
+    }
+    debug_assert_eq!(start, rows);
+    out
+}
+
+/// [`plan_workers`] + [`row_ranges`] in one call: the range plan for a
+/// batch of `rows` under an engine configured with `threads`.
+pub fn plan(rows: usize, threads: usize) -> Vec<(usize, usize)> {
+    row_ranges(rows, plan_workers(rows, threads))
+}
+
+/// Split a flat `[B, stride]` output plane into per-range disjoint
+/// mutable row chunks matching `ranges` (which must be contiguous from
+/// row 0, as [`row_ranges`] produces).
+pub fn split_rows<'a>(buf: &'a mut [f32], ranges: &[(usize, usize)],
+                      stride: usize) -> Vec<&'a mut [f32]> {
+    let mut rest = buf;
+    let mut out = Vec::with_capacity(ranges.len());
+    let mut expect = 0usize;
+    for &(start, len) in ranges {
+        debug_assert_eq!(start, expect, "ranges must tile the batch");
+        expect = start + len;
+        let (chunk, tail) = rest.split_at_mut(len * stride);
+        out.push(chunk);
+        rest = tail;
+    }
+    debug_assert!(rest.is_empty(), "ranges must cover every row");
+    out
+}
+
+/// Run one job per row range.  A single job runs inline on the caller
+/// thread (the serial path — no spawn, no synchronization); multiple
+/// jobs run on scoped threads and this returns once all complete.
+pub fn run<F>(jobs: Vec<F>)
+where
+    F: FnOnce() + Send,
+{
+    if jobs.len() <= 1 {
+        for job in jobs {
+            job();
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        for job in jobs {
+            scope.spawn(job);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_tile_the_batch_with_odd_remainders() {
+        for rows in [1usize, 2, 7, 63, 64, 65, 100] {
+            for workers in [1usize, 2, 3, 8] {
+                let ranges = row_ranges(rows, workers);
+                let mut next = 0;
+                for &(start, len) in &ranges {
+                    assert_eq!(start, next);
+                    next += len;
+                }
+                assert_eq!(next, rows, "rows={rows} workers={workers}");
+                let lens: Vec<usize> =
+                    ranges.iter().map(|&(_, l)| l).collect();
+                let (min, max) = (
+                    *lens.iter().min().unwrap(),
+                    *lens.iter().max().unwrap(),
+                );
+                assert!(max - min <= 1, "balanced split: {lens:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn small_batches_stay_serial() {
+        assert_eq!(plan_workers(8, 8), 1);
+        assert_eq!(plan_workers(2 * MIN_ROWS_PER_WORKER - 1, 8), 1);
+        assert_eq!(plan_workers(0, 8), 1);
+        // 64 rows / 16-row floor = at most 4 workers even with 8 threads.
+        assert_eq!(plan_workers(64, 8), 4);
+        assert_eq!(plan_workers(64, 2), 2);
+        assert_eq!(plan_workers(64, 1), 1);
+        assert!(plan_workers(1024, 0) >= 1);
+    }
+
+    #[test]
+    fn split_rows_gives_disjoint_covering_chunks() {
+        let mut buf = vec![0.0f32; 10 * 3];
+        let ranges = row_ranges(10, 3); // 4 + 3 + 3
+        let chunks = split_rows(&mut buf, &ranges, 3);
+        assert_eq!(chunks.len(), 3);
+        assert_eq!(chunks[0].len(), 4 * 3);
+        assert_eq!(chunks[1].len(), 3 * 3);
+        assert_eq!(chunks[2].len(), 3 * 3);
+    }
+
+    #[test]
+    fn run_executes_every_job_and_parallel_matches_serial() {
+        let rows = 37usize;
+        let stride = 4usize;
+        let fill = |threads: usize| -> Vec<f32> {
+            let mut out = vec![0.0f32; rows * stride];
+            let ranges = plan(rows, threads);
+            let chunks = split_rows(&mut out, &ranges, stride);
+            run(ranges
+                .iter()
+                .zip(chunks)
+                .map(|(&(start, _len), chunk)| {
+                    move || {
+                        for (i, v) in chunk.iter_mut().enumerate() {
+                            *v = (start * stride + i) as f32 * 0.5;
+                        }
+                    }
+                })
+                .collect());
+            out
+        };
+        let serial = fill(1);
+        // Force a multi-range plan by bypassing the row floor.
+        let mut forced = vec![0.0f32; rows * stride];
+        let ranges = row_ranges(rows, 8);
+        assert!(ranges.len() > 1);
+        let chunks = split_rows(&mut forced, &ranges, stride);
+        run(ranges
+            .iter()
+            .zip(chunks)
+            .map(|(&(start, _len), chunk)| {
+                move || {
+                    for (i, v) in chunk.iter_mut().enumerate() {
+                        *v = (start * stride + i) as f32 * 0.5;
+                    }
+                }
+            })
+            .collect());
+        assert_eq!(serial, forced);
+    }
+}

@@ -609,6 +609,185 @@ fn fuzz_randomized_queries_agree_across_backends() {
     }
 }
 
+// ---- pooled execution determinism ------------------------------------------
+//
+// The native engine's execute pool splits batches of >= 32 rows into
+// contiguous row ranges run by `--engine-threads` workers.  The contract
+// is *bit identity*, not tolerance: every worker runs the same per-row
+// kernels into disjoint output slices, so the thread count may change
+// wall-clock but never a single output bit.  These tests pin that with
+// `f32::to_bits` / `f64::to_bits` — any drift (a reassociated reduction,
+// a range-dependent accumulator) fails exactly, not within epsilon.
+
+/// Packed `signature_apply` inputs for a full `ENGINE_BATCH` of random
+/// queries on `machine` (the pool splits the padded 64-row batch, so
+/// row ranges are exercised even though only `queries.len()` rows carry
+/// signal).
+fn packed_apply_inputs(rng: &mut Rng, machine: &MachineTopology)
+    -> (Vec<numabw::runtime::Tensor>, usize) {
+    let s = machine.sockets;
+    let queries: Vec<CounterQuery> = (0..ENGINE_BATCH)
+        .map(|_| random_counter_query(rng, machine))
+        .collect();
+    let b = Batch::new(queries.len(), ENGINE_BATCH);
+    let inputs = vec![
+        b.pack(
+            &queries
+                .iter()
+                .map(|q| {
+                    vec![
+                        q.sig.static_frac as f32,
+                        q.sig.local_frac as f32,
+                        q.sig.perthread_frac as f32,
+                    ]
+                })
+                .collect::<Vec<_>>(),
+            &[3],
+        ),
+        b.pack(
+            &queries
+                .iter()
+                .map(|q| {
+                    let mut v = vec![0.0f32; s];
+                    v[q.sig.static_socket] = 1.0;
+                    v
+                })
+                .collect::<Vec<_>>(),
+            &[s],
+        ),
+        b.pack(
+            &queries
+                .iter()
+                .map(|q| q.threads.iter().map(|&t| t as f32).collect())
+                .collect::<Vec<_>>(),
+            &[s],
+        ),
+    ];
+    (inputs, s)
+}
+
+#[test]
+fn pooled_signature_apply_is_bit_identical_to_serial() {
+    // threads = 3 forces an odd row split (64 rows -> 22/21/21, none a
+    // multiple of the 8-wide lane chunk); threads = 8 caps at 4 workers
+    // (16-row floor); threads = 1 is the serial baseline.
+    let mut rng = Rng::new(0x5EED);
+    for machine in MachineTopology::builtin_machines() {
+        let (inputs, s) = packed_apply_inputs(&mut rng, &machine);
+        let serial = NativeEngine::new()
+            .execute("signature_apply", &inputs)
+            .unwrap();
+        for threads in [2, 3, 8] {
+            let pooled = NativeEngine::with_threads(threads)
+                .execute("signature_apply", &inputs)
+                .unwrap();
+            assert_eq!(pooled[0].shape, vec![ENGINE_BATCH, s, s]);
+            for (i, (p, q)) in pooled[0]
+                .data
+                .iter()
+                .zip(&serial[0].data)
+                .enumerate()
+            {
+                assert_eq!(p.to_bits(), q.to_bits(),
+                           "{}: threads={threads} elem {i}: {p} vs {q}",
+                           machine.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn pooled_service_pipelines_are_bit_identical_across_thread_counts() {
+    // All four pipelines through the service surface, on a mixed-S
+    // stream interleaving both paper machines and quad4 — the pool must
+    // be invisible at every thread count, including across the per-S
+    // grouping and reassembly.
+    let machines = [
+        MachineTopology::xeon_e5_2630_v3(),
+        MachineTopology::synthetic_quad(),
+        MachineTopology::xeon_e5_2699_v3(),
+    ];
+    let mut rng = Rng::new(0x1DE7);
+    let counters: Vec<CounterQuery> = (0..150)
+        .map(|i| random_counter_query(&mut rng, &machines[i % 3]))
+        .collect();
+    let perfs: Vec<PerfQuery> = (0..150)
+        .map(|i| random_perf_query(&mut rng, &machines[i % 3]))
+        .collect();
+    let fits: Vec<FitRequest> = (0..40)
+        .map(|i| {
+            let s = if i % 3 == 1 { 4 } else { 2 };
+            let truth = random_signature(&mut rng, s);
+            let (sym, asym) = if s == 4 {
+                (run_for(&truth, &[4, 4, 4, 4], 1e9),
+                 run_for(&truth, &[7, 4, 3, 2], 1e9))
+            } else {
+                (run_for(&truth, &[4, 4], 1e9),
+                 run_for(&truth, &[6, 2], 1e9))
+            };
+            FitRequest { sym, asym }
+        })
+        .collect();
+
+    let serial = PredictionService::native();
+    let base_counters = serial.predict_counters(&counters).unwrap();
+    let base_perfs = serial.predict_performance(&perfs).unwrap();
+    let base_fits = serial.fit(&fits).unwrap();
+
+    for threads in [1, 2, 8] {
+        let svc = PredictionService::native_with_threads(threads);
+        // Twice per service: repeated runs must be deterministic too.
+        for run in 0..2 {
+            let tag = format!("threads={threads} run={run}");
+            let got = svc.predict_counters(&counters).unwrap();
+            for (g, w) in got.iter().flatten().zip(base_counters
+                                                       .iter()
+                                                       .flatten()) {
+                for k in 0..2 {
+                    assert_eq!(g[k].to_bits(), w[k].to_bits(), "{tag}");
+                }
+            }
+            let got = svc.predict_performance(&perfs).unwrap();
+            for (g, w) in got.iter().flatten().zip(base_perfs
+                                                       .iter()
+                                                       .flatten()) {
+                assert_eq!(g.to_bits(), w.to_bits(), "{tag}");
+            }
+            let got = svc.fit(&fits).unwrap();
+            for (g, w) in got.iter().zip(&base_fits) {
+                for (gc, wc) in [(g.read, w.read), (g.write, w.write),
+                                 (g.combined, w.combined)] {
+                    assert_eq!(gc.static_frac.to_bits(),
+                               wc.static_frac.to_bits(), "{tag}");
+                    assert_eq!(gc.local_frac.to_bits(),
+                               wc.local_frac.to_bits(), "{tag}");
+                    assert_eq!(gc.perthread_frac.to_bits(),
+                               wc.perthread_frac.to_bits(), "{tag}");
+                    assert_eq!(gc.static_socket, wc.static_socket,
+                               "{tag}");
+                    assert_eq!(gc.misfit.to_bits(), wc.misfit.to_bits(),
+                               "{tag}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_threads_survive_sibling_construction() {
+    // Sharded serve builds one service per shard via `sibling()`; the
+    // pool width must carry over or `--engine-threads` would silently
+    // degrade to 1 under `--shards > 1`.
+    let svc = PredictionService::native_with_threads(8);
+    assert_eq!(svc.engine_threads(), 8);
+    assert_eq!(svc.sibling().unwrap().engine_threads(), 8);
+    assert_eq!(PredictionService::native().engine_threads(), 1);
+    let by_name =
+        PredictionService::by_name_with_threads("native", 4).unwrap();
+    assert_eq!(by_name.engine_threads(), 4);
+    assert_eq!(by_name.sibling().unwrap().engine_threads(), 4);
+}
+
 #[test]
 fn fuzz_advisor_rankings_with_random_signatures() {
     // Ranking equality under handmade random (but well-formed)
