@@ -2,6 +2,9 @@
 //!
 //! Subcommands:
 //!   machines   — list the built-in machine topologies (paper §2, Fig 2)
+//!   discover   — build a topology file from Linux sysfs (node distances,
+//!                cpulists, per-node memory; bandwidth seeded from
+//!                distance ratios, overridable)
 //!   workloads  — list the workload suite (paper Table 1)
 //!   profile    — run the two §5.1 profiling runs for one workload
 //!   fit        — profile + fit, print the bandwidth signature (§5)
@@ -40,6 +43,11 @@ pub fn main_with(args: Vec<String>) -> Result<()> {
     };
     match args.command.as_deref() {
         Some("machines") => known(&[]).and_then(|_| cmd_machines()),
+        Some("discover") => known(&[
+            "sysfs", "out", "name", "local-read-gbs", "local-write-gbs",
+            "latency-ns", "core-peak-gbs", "price-usd",
+        ])
+        .and_then(|_| cmd_discover(&args)),
         Some("workloads") => known(&[]).and_then(|_| cmd_workloads()),
         Some("profile") => known(&["workload", "machine", "seed"])
             .and_then(|_| cmd_profile(&args)),
@@ -83,6 +91,20 @@ numabw — NUMA bandwidth-pattern modeling (paper reproduction)
 USAGE: numabw <subcommand> [flags]
 
   machines                          list machine topologies
+  discover  [--sysfs DIR] [--out F] [--name N] [--local-read-gbs X]
+            [--local-write-gbs X] [--latency-ns X] [--core-peak-gbs X]
+            [--price-usd X]
+                                    build a topology file from Linux
+                                    sysfs (default root /sys; any
+                                    directory with the same layout
+                                    works).  Node distances, cpulists and
+                                    per-node memory come from sysfs;
+                                    bandwidth/latency are seeded from the
+                                    distance ratios and the overridable
+                                    scales above.  Writes the versioned
+                                    topology JSON to --out (stdout
+                                    otherwise); use it anywhere as
+                                    --machine @F
   workloads                         list the Table-1 workload suite
   profile   --workload W [--machine M]       run the two §5.1 runs
   fit       --workload W [--machine M] [--engine E] [--save F]
@@ -130,8 +152,10 @@ USAGE: numabw <subcommand> [flags]
   evaluate  [--machine M] [--engine E] [--seed S]   full §6.2.2 sweep
   quickstart                        tiny end-to-end demo
 
-Flags: --machine xeon8|xeon18|quad4 (default xeon18; quad4 is the
-synthetic 4-socket machine — every subcommand is socket-count-generic);
+Flags: --machine xeon8|xeon18|quad4|@topology.json (default xeon18;
+quad4 is the synthetic 4-socket machine — every subcommand is
+socket-count-generic; @file loads a topology file, e.g. one written by
+`numabw discover`, so asymmetric machines serve end to end);
 --engine reference|native|hlo (default reference: the per-row f64
 model; native: the batched f32 engine, any socket count; hlo: the
 HLO-text pipelines through the in-repo interpreter — AOT artifacts when
@@ -143,10 +167,8 @@ engine threads = shards x N);
 --seed u64.";
 
 fn machine_flag(args: &Args) -> Result<MachineTopology> {
-    let name = args.get_or("machine", "xeon18");
-    MachineTopology::by_name(name).ok_or_else(|| {
-        anyhow!("unknown machine {name:?} (xeon8|xeon18|quad4)")
-    })
+    let spec = args.get_or("machine", "xeon18");
+    crate::topology::file::resolve_machine(spec).map_err(|e| anyhow!(e))
 }
 
 fn workload_flag(args: &Args) -> Result<WorkloadSpec> {
@@ -186,10 +208,11 @@ fn cmd_machines() -> Result<()> {
             vec![
                 m.name.clone(),
                 format!("{}x{}", m.sockets, m.cores_per_socket),
-                report::fmt_bw(m.local_read_bw),
-                report::fmt_bw(m.local_write_bw),
-                format!("{:.2}x", m.qpi_read_bw / m.local_read_bw),
-                format!("{:.2}x", m.qpi_write_bw / m.local_write_bw),
+                report::fmt_bw(m.chan_read_cap(0)),
+                report::fmt_bw(m.chan_write_cap(0)),
+                format!("{:.2}x", m.link_read_cap(0, 1) / m.chan_read_cap(0)),
+                format!("{:.2}x",
+                        m.link_write_cap(0, 1) / m.chan_write_cap(0)),
                 format!("${:.0}", m.price_usd),
             ]
         })
@@ -202,6 +225,39 @@ fn cmd_machines() -> Result<()> {
             &rows
         )
     );
+    Ok(())
+}
+
+fn cmd_discover(args: &Args) -> Result<()> {
+    use crate::topology::{discover, file, GB};
+    let defaults = discover::DiscoverOptions::default();
+    let opts = discover::DiscoverOptions {
+        name: args.get("name").map(str::to_string),
+        local_read_bw: args
+            .get_f64("local-read-gbs", defaults.local_read_bw / GB) * GB,
+        local_write_bw: args
+            .get_f64("local-write-gbs", defaults.local_write_bw / GB) * GB,
+        local_latency_ns: args
+            .get_f64("latency-ns", defaults.local_latency_ns),
+        core_peak_bw: args
+            .get_f64("core-peak-gbs", defaults.core_peak_bw / GB) * GB,
+        price_usd: args.get_f64("price-usd", defaults.price_usd),
+    };
+    let root = std::path::PathBuf::from(args.get_or("sysfs", "/sys"));
+    let t = discover::discover_from(&root, &opts).map_err(|e| anyhow!(e))?;
+    match args.get("out") {
+        Some(path) => {
+            let path = std::path::Path::new(path);
+            file::save(&t, path).map_err(|e| anyhow!(e))?;
+            println!(
+                "discovered {} ({} sockets x {} cores) from {} -> {}",
+                t.name, t.sockets, t.cores_per_socket, root.display(),
+                path.display()
+            );
+            println!("use it anywhere: --machine @{}", path.display());
+        }
+        None => println!("{}", t.to_json().encode()),
+    }
     Ok(())
 }
 
@@ -296,6 +352,10 @@ fn cmd_fit(args: &Args) -> Result<()> {
         }
         store.insert(&sim.machine.name, &w.name, *sig);
         store.set_seed(&sim.machine.name, seed);
+        // Embed the topology so the store is portable: a host that has
+        // neither the preset nor the @file can still serve this machine
+        // by name.
+        store.set_topology(&sim.machine.name, sim.machine.clone());
         store.save(path)?;
         println!("saved to {} ({} signatures)", path.display(), store.len());
     }
@@ -395,8 +455,8 @@ fn advise_signature(args: &Args, svc: &PredictionService, sim: &Simulator,
             let registry =
                 ModelRegistry::open(std::path::Path::new(path))?;
             let known = registry.len();
-            let sig = registry.get_or_fit(&sim.machine.name, &w.name,
-                                          seed_flag(args), fit_fresh)?;
+            let sig = registry.get_or_fit_for(&sim.machine, &w.name,
+                                              seed_flag(args), fit_fresh)?;
             println!(
                 "signature for {}/{} served from store {path} ({})",
                 sim.machine.name,
@@ -613,6 +673,69 @@ mod tests {
     #[test]
     fn unknown_workload_errors() {
         assert!(main_with(toks("fit --workload nope")).is_err());
+    }
+
+    #[test]
+    fn unknown_machine_error_lists_presets_and_file_form() {
+        let err = main_with(toks("fit --workload cg --machine epyc"))
+            .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("unknown machine \"epyc\""), "{msg}");
+        for name in ["xeon8", "xeon18", "quad4", "@<file.json>"] {
+            assert!(msg.contains(name), "{msg} should list {name}");
+        }
+        // A missing topology file is a path error, not an unknown name.
+        let err = main_with(toks(
+            "fit --workload cg --machine @/no/such/topo.json"
+        ))
+        .unwrap_err();
+        assert!(format!("{err}").contains("/no/such/topo.json"), "{err}");
+    }
+
+    #[test]
+    fn discover_writes_a_file_the_machine_flag_loads() {
+        use crate::topology::MachineTopology;
+        let dir = std::env::temp_dir().join("numabw-cli-discover");
+        let sys = dir.join("sys/devices/system/node");
+        for (id, (dist, cpus)) in
+            [("10 21", "0-7"), ("21 10", "8-15")].into_iter().enumerate()
+        {
+            let node = sys.join(format!("node{id}"));
+            std::fs::create_dir_all(&node).unwrap();
+            std::fs::write(node.join("distance"), format!("{dist}\n"))
+                .unwrap();
+            std::fs::write(node.join("cpulist"), format!("{cpus}\n"))
+                .unwrap();
+        }
+        let out = dir.join("topo.json");
+        std::fs::remove_file(&out).ok();
+        main_with(toks(&format!(
+            "discover --sysfs {} --name testbox --out {}",
+            dir.join("sys").display(), out.display()
+        )))
+        .unwrap();
+        // The written file loads through --machine @file and matches the
+        // library-level discovery byte for byte.
+        let loaded = crate::topology::file::load(&out).unwrap();
+        assert_eq!(loaded.name, "testbox");
+        assert_eq!(loaded.sockets, 2);
+        main_with(toks(&format!(
+            "advise --workload cg --machine @{} --threads 4 --top 2",
+            out.display()
+        )))
+        .unwrap();
+        // Stdout mode (no --out) also works against the mock root.
+        main_with(toks(&format!(
+            "discover --sysfs {}", dir.join("sys").display()
+        )))
+        .unwrap();
+        // Preset twins: a round-tripped preset is == to its in-code twin.
+        let preset = dir.join("xeon8.json");
+        crate::topology::file::save(
+            &MachineTopology::xeon_e5_2630_v3(), &preset).unwrap();
+        assert_eq!(crate::topology::file::load(&preset).unwrap(),
+                   MachineTopology::xeon_e5_2630_v3());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

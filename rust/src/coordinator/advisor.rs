@@ -154,8 +154,8 @@ fn placement_query_cached(machine: &MachineTopology,
         }
     }
     let scale = (1.0 - workload.latency_sensitivity)
-        + workload.latency_sensitivity * machine.local_latency_ns
-            / lat.max(machine.local_latency_ns);
+        + workload.latency_sensitivity * machine.local_latency_ns()
+            / lat.max(machine.local_latency_ns());
     let per_thread = peak * scale;
     PerfQuery {
         sig: sig.combined,
@@ -234,6 +234,12 @@ fn rank(scores: &mut [PlacementScore]) {
 pub fn advise<S: PerfServer + ?Sized>(svc: &S, machine: &MachineTopology,
               workload: &WorkloadSpec, sig: &BandwidthSignature,
               total: usize) -> Result<Advice> {
+    // Hand-built topologies reach the advisor unvalidated (files and
+    // discovery validate on load, struct literals don't): reject shape
+    // errors here instead of letting the index arithmetic panic.
+    if let Err(e) = machine.validate() {
+        bail!("invalid machine topology: {e}");
+    }
     if sig.combined.static_socket >= machine.sockets {
         bail!(
             "signature's static socket {} does not exist on {} \
@@ -283,6 +289,9 @@ pub fn advise_brute_force(svc: &PredictionService,
                           workload: &WorkloadSpec,
                           sig: &BandwidthSignature, total: usize)
     -> Result<Advice> {
+    if let Err(e) = machine.validate() {
+        bail!("invalid machine topology: {e}");
+    }
     if sig.combined.static_socket >= machine.sockets {
         bail!(
             "signature's static socket {} does not exist on {} \
@@ -431,8 +440,11 @@ mod tests {
         // Regression: this call used to die in `placement_query` on the
         // 2-socket `caps` conversion (`expect("advisor requires the
         // 2-socket resource layout")`).
-        let mut m = m8();
-        m.sockets = 4;
+        let m = MachineTopology::uniform(
+            "xeon8-but-wider", 4, 8, 44.0 * crate::topology::GB,
+            30.0 * crate::topology::GB, 7.04 * crate::topology::GB,
+            6.9 * crate::topology::GB, 90.0, 200.0,
+            5.5 * crate::topology::GB, 667.0);
         let svc = PredictionService::reference();
         let w = suite::by_name("cg").unwrap();
         let advice = advise(&svc, &m, &w, &handmade_sig(0), 8).unwrap();
@@ -451,6 +463,25 @@ mod tests {
             assert_eq!(a.predicted_bw.to_bits(), b.predicted_bw.to_bits());
             assert_eq!(a.qpi_headroom.to_bits(), b.qpi_headroom.to_bits());
         }
+    }
+
+    #[test]
+    fn malformed_topology_is_a_typed_error_not_silent_nonsense() {
+        // The old debug_assert!-only index checks meant a hand-built
+        // topology with resized sockets but stale per-socket vectors
+        // produced garbage resource indices in release builds.  Now both
+        // advise paths validate first.
+        let mut m = m8();
+        m.sockets = 4; // vectors still sized for 2 sockets
+        let svc = PredictionService::reference();
+        let w = suite::by_name("cg").unwrap();
+        let err = advise(&svc, &m, &w, &handmade_sig(0), 8).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("invalid machine topology"), "{msg}");
+        assert!(msg.contains("chan_read_bw"), "{msg}");
+        let err = advise_brute_force(&svc, &m, &w, &handmade_sig(0), 8)
+            .unwrap_err();
+        assert!(format!("{err}").contains("invalid machine topology"));
     }
 
     #[test]

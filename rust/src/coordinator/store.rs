@@ -15,13 +15,25 @@
 //! metadata keep the legacy single-object JSON layout byte-for-byte; a
 //! store with metadata persists as `{"machines": ..., "meta": ...}` and
 //! both layouts load.
+//!
+//! Portability metadata: a store can also embed, per machine, the full
+//! [`MachineTopology`] the signatures were fitted against (`set_topology`
+//! / `topology`, serialized through the versioned topology file format).
+//! A store fitted against an `@file.json` or discovered topology then
+//! carries everything needed to serve that machine on another host — the
+//! wire protocol resolves unknown `machine` names against the store's
+//! embedded topologies.  The topology is a hardware description, not a
+//! fit product, so [`SignatureStore::remove_machine`] (seed-change
+//! invalidation) leaves it in place.
 
 use std::collections::BTreeMap;
+use std::collections::BTreeSet;
 use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::model::signature::BandwidthSignature;
+use crate::topology::MachineTopology;
 use crate::util::json::Json;
 
 #[derive(Clone, Debug, Default)]
@@ -31,6 +43,9 @@ pub struct SignatureStore {
     /// machine name → simulator seed the machine's signatures were fitted
     /// with (absent for legacy stores).
     seeds: BTreeMap<String, u64>,
+    /// machine name → embedded topology (absent for legacy stores and
+    /// preset-only fits from older builds).
+    topologies: BTreeMap<String, MachineTopology>,
 }
 
 impl SignatureStore {
@@ -72,6 +87,24 @@ impl SignatureStore {
         self.seeds.get(machine).copied()
     }
 
+    /// Embed the topology `machine`'s signatures were fitted against, so
+    /// the store serves the machine on hosts that know neither the preset
+    /// nor the source `@file.json`.
+    pub fn set_topology(&mut self, machine: &str, topology: MachineTopology)
+    {
+        self.topologies.insert(machine.to_string(), topology);
+    }
+
+    /// The embedded topology for `machine`, if the store carries one.
+    pub fn topology(&self, machine: &str) -> Option<&MachineTopology> {
+        self.topologies.get(machine)
+    }
+
+    /// Machines with embedded topologies, sorted.
+    pub fn topology_machines(&self) -> Vec<&str> {
+        self.topologies.keys().map(String::as_str).collect()
+    }
+
     pub fn machines(&self) -> Vec<&str> {
         self.entries.keys().map(String::as_str).collect()
     }
@@ -110,24 +143,28 @@ impl SignatureStore {
     }
 
     pub fn to_json(&self) -> Json {
-        if self.seeds.is_empty() {
+        if self.seeds.is_empty() && self.topologies.is_empty() {
             // Legacy layout: metadata-free stores stay byte-identical to
             // what earlier versions persisted.
             return self.machines_json();
         }
-        // Seeds encode as decimal strings: JSON numbers are f64 here and a
-        // u64 seed above 2^53 must survive exactly.
+        // One meta entry per machine that has a seed, a topology, or
+        // both.  Seeds encode as decimal strings: JSON numbers are f64
+        // here and a u64 seed above 2^53 must survive exactly.
+        let meta_machines: BTreeSet<&String> =
+            self.seeds.keys().chain(self.topologies.keys()).collect();
         let meta = Json::Obj(
-            self.seeds
-                .iter()
-                .map(|(m, seed)| {
-                    (
-                        m.clone(),
-                        Json::from_pairs([(
-                            "seed",
-                            Json::Str(seed.to_string()),
-                        )]),
-                    )
+            meta_machines
+                .into_iter()
+                .map(|m| {
+                    let mut entry = Json::obj();
+                    if let Some(seed) = self.seeds.get(m) {
+                        entry.set("seed", Json::Str(seed.to_string()));
+                    }
+                    if let Some(t) = self.topologies.get(m) {
+                        entry.set("topology", t.to_json());
+                    }
+                    (m.clone(), entry)
                 })
                 .collect(),
         );
@@ -147,17 +184,42 @@ impl SignatureStore {
         };
         if let Some(Json::Obj(meta)) = meta {
             for (machine, entry) in meta {
-                let seed = entry
-                    .get("seed")
-                    .and_then(Json::as_str)
-                    .ok_or_else(|| {
-                        anyhow!("store meta for {machine}: missing seed")
-                    })?
-                    .parse::<u64>()
-                    .map_err(|e| {
-                        anyhow!("store meta for {machine}: bad seed ({e})")
-                    })?;
-                store.set_seed(machine, seed);
+                let has_topology = entry.get("topology").is_some();
+                match entry.get("seed") {
+                    Some(s) => {
+                        let seed = s
+                            .as_str()
+                            .ok_or_else(|| {
+                                anyhow!("store meta for {machine}: bad \
+                                         seed (expected a decimal string)")
+                            })?
+                            .parse::<u64>()
+                            .map_err(|e| {
+                                anyhow!(
+                                    "store meta for {machine}: bad seed \
+                                     ({e})"
+                                )
+                            })?;
+                        store.set_seed(machine, seed);
+                    }
+                    // A topology-only entry is valid (hardware metadata
+                    // without any fitted signatures); an empty entry is
+                    // the legacy missing-seed error.
+                    None if has_topology => {}
+                    None => {
+                        return Err(anyhow!(
+                            "store meta for {machine}: missing seed"
+                        ));
+                    }
+                }
+                if let Some(t) = entry.get("topology") {
+                    store.set_topology(
+                        machine,
+                        MachineTopology::from_json(t).map_err(|e| {
+                            anyhow!("store meta for {machine}: {e}")
+                        })?,
+                    );
+                }
             }
         }
         let top = match machines {
@@ -297,6 +359,60 @@ mod tests {
         // Deterministic: encoding is stable under a save→load→save cycle.
         assert_eq!(j.encode(),
                    SignatureStore::from_json(&j).unwrap().to_json().encode());
+    }
+
+    #[test]
+    fn topology_metadata_roundtrips_byte_identically() {
+        let mut s = SignatureStore::new();
+        s.insert("box", "cg", sig());
+        s.set_seed("box", 42);
+        s.set_topology("box", MachineTopology::synthetic_quad());
+        // A topology-only machine (fleet registry shape: hardware known,
+        // nothing fitted yet).
+        s.set_topology("spare", MachineTopology::xeon_e5_2630_v3());
+        let j = s.to_json();
+        let back = SignatureStore::from_json(&j).unwrap();
+        assert_eq!(back.topology("box"),
+                   Some(&MachineTopology::synthetic_quad()));
+        assert_eq!(back.topology("spare"),
+                   Some(&MachineTopology::xeon_e5_2630_v3()));
+        assert_eq!(back.seed("box"), Some(42));
+        assert_eq!(back.seed("spare"), None);
+        assert_eq!(back.topology_machines(), vec!["box", "spare"]);
+        assert_eq!(back.to_json().encode(), j.encode(),
+                   "embedded topologies must re-encode byte-identically");
+    }
+
+    #[test]
+    fn seed_only_stores_keep_their_prior_layout() {
+        // Stores persisted before topologies existed (meta entries with
+        // only a seed) must keep loading and re-encoding unchanged.
+        let mut s = SignatureStore::new();
+        s.insert("xeon8", "cg", sig());
+        s.set_seed("xeon8", 7);
+        let j = s.to_json();
+        let meta = j.get("meta").unwrap().get("xeon8").unwrap();
+        assert!(meta.get("seed").is_some());
+        assert!(meta.get("topology").is_none());
+        assert_eq!(SignatureStore::from_json(&j).unwrap()
+                       .to_json().encode(),
+                   j.encode());
+        // An empty meta entry is still the legacy missing-seed error.
+        let bad = Json::parse(
+            r#"{"machines":{},"meta":{"ghost":{}}}"#).unwrap();
+        let err = SignatureStore::from_json(&bad).unwrap_err();
+        assert!(format!("{err}").contains("missing seed"), "{err}");
+    }
+
+    #[test]
+    fn remove_machine_keeps_the_topology() {
+        // Seed-change invalidation drops fit products, not hardware
+        // descriptions.
+        let mut s = SignatureStore::new();
+        s.insert("box", "cg", sig());
+        s.set_topology("box", MachineTopology::synthetic_quad());
+        assert_eq!(s.remove_machine("box"), 1);
+        assert!(s.topology("box").is_some());
     }
 
     #[test]

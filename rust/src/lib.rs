@@ -168,6 +168,24 @@
 //!   println!("best: {:?}", advice.best().placement.threads_per_socket);
 //!   ```
 //!
+//! * The machine model itself is **data, not code** ([`topology`]):
+//!   [`topology::MachineTopology`] carries per-socket channel
+//!   capacities, per-directed-link interconnect capacities, and S×S
+//!   distance/latency matrices, so asymmetric hardware (sub-NUMA
+//!   clusters, mismatched DIMM population, direction-dependent links)
+//!   is expressible and flows through fit/advise/serve via the same
+//!   [`topology::MachineTopology::capacities`] vector the presets use
+//!   (the presets are uniform special cases with bit-identical
+//!   vectors).  Topologies serialize to a versioned, strictly-validated
+//!   JSON file format ([`topology::file`]; encode → decode → encode is
+//!   the identity, byte for byte), load anywhere a machine name is
+//!   accepted as `@file.json` (CLI `--machine` and the wire protocol's
+//!   `machine` field), embed into fitted signature stores so a serve
+//!   daemon can be asked for them **by name**, and are discovered from
+//!   Linux sysfs by `numabw discover` ([`topology::discover`]:
+//!   mockable `--sysfs` root; per-link bandwidth and latency seeded
+//!   from the SLIT distance ratios, overridable).
+//!
 //! A `serve` session, verbatim (`$` lines are stdin; this is the smoke
 //! transcript CI diffs against `rust/tests/data/serve_smoke.golden.jsonl`):
 //!

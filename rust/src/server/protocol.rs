@@ -34,7 +34,12 @@
 //! `static_socket`, `misfit`).  `advise` serves its signature through the
 //! [`ModelRegistry`] (fit-once-serve-forever; seed-guarded when the server
 //! was started with `--store`) and scores placements through the
-//! coalescing front-end's [`Client`].
+//! coalescing front-end's [`Client`].  Its `machine` field accepts a
+//! preset name (`xeon8`), a topology file on the server's filesystem
+//! (`@path/to/topology.json`), or the name of any topology embedded in
+//! the server's model store — fits triggered through the registry embed
+//! the machine they were fitted on, so a store round-trips custom
+//! machines by name.
 //!
 //! Queries are socket-count-generic: `threads` / `cpu_totals` carry one
 //! entry per socket (any S >= 2) and `caps` covers the machine's full
@@ -506,15 +511,34 @@ impl ServeContext {
         }
     }
 
+    /// Resolve a wire `machine` spec to a full topology.  Three forms,
+    /// tried in order: `@path.json` loads a topology file from the
+    /// server's filesystem, a preset name hits the in-code machines,
+    /// and any other name is looked up among topologies embedded in the
+    /// model store (a fitted store carries the machines it was fitted
+    /// on, so clients can address them by name alone).
+    fn resolve_machine(&self, spec: &str) -> Result<MachineTopology> {
+        if spec.starts_with('@') {
+            return crate::topology::file::resolve_machine(spec)
+                .map_err(|e| anyhow::anyhow!(e));
+        }
+        if let Some(m) = MachineTopology::by_name(spec) {
+            return Ok(m);
+        }
+        if let Some(t) = self.registry.topology_of(spec) {
+            return Ok((*t).clone());
+        }
+        Err(anyhow::anyhow!(crate::topology::file::unknown_machine_error(
+            spec
+        )))
+    }
+
     /// Serve a ranked-placement request: signature through the registry
     /// (fit once under this server's seed, then serve forever), scoring
     /// through the coalescing front-end.
     fn advise(&self, machine_name: &str, workload_name: &str,
               threads: Option<usize>, top: usize) -> Result<Json> {
-        let machine = MachineTopology::by_name(machine_name)
-            .ok_or_else(|| {
-                anyhow::anyhow!("unknown machine {machine_name:?}")
-            })?;
+        let machine = self.resolve_machine(machine_name)?;
         let svc = self.shards[0].service();
         if let Some(fixed) = svc.supported_sockets() {
             if machine.sockets != fixed {
@@ -531,8 +555,8 @@ impl ServeContext {
             anyhow::anyhow!("unknown workload {workload_name:?}")
         })?;
         let seed = self.opts.seed;
-        let sig = self.registry.get_or_fit(
-            &machine.name,
+        let sig = self.registry.get_or_fit_for(
+            &machine,
             &w.name,
             seed,
             || {

@@ -39,6 +39,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::SignatureStore;
 use crate::model::signature::BandwidthSignature;
+use crate::topology::MachineTopology;
 use crate::util::lru::CacheCounters;
 
 /// One immutable, epoch-stamped view of every fitted signature.  Built
@@ -49,6 +50,10 @@ pub struct RegistrySnapshot {
     epoch: u64,
     seeds: BTreeMap<String, u64>,
     sigs: BTreeMap<(String, String), Arc<BandwidthSignature>>,
+    /// Topologies embedded in the store ([`SignatureStore::topology`]):
+    /// machines the registry can serve by name even when the name is
+    /// neither a preset nor an `@file` on this host.
+    topologies: BTreeMap<String, Arc<MachineTopology>>,
 }
 
 impl RegistrySnapshot {
@@ -68,7 +73,16 @@ impl RegistrySnapshot {
                 }
             }
         }
-        RegistrySnapshot { epoch, seeds, sigs }
+        let topologies = store
+            .topology_machines()
+            .into_iter()
+            .filter_map(|m| {
+                store
+                    .topology(m)
+                    .map(|t| (m.to_string(), Arc::new(t.clone())))
+            })
+            .collect();
+        RegistrySnapshot { epoch, seeds, sigs, topologies }
     }
 
     /// The world version: bumped by every fit/refit/invalidate publish.
@@ -95,6 +109,12 @@ impl RegistrySnapshot {
         self.sigs
             .get(&(machine.to_string(), workload.to_string()))
             .cloned()
+    }
+
+    /// The store-embedded topology registered under `machine`, if any.
+    pub fn topology_of(&self, machine: &str)
+        -> Option<Arc<MachineTopology>> {
+        self.topologies.get(machine).cloned()
     }
 
     fn check_seed(&self, path: Option<&Path>, machine: &str, seed: u64)
@@ -209,6 +229,12 @@ impl ModelRegistry {
         self.snapshot().seed_of(machine)
     }
 
+    /// The store-embedded topology registered under `machine`, if any.
+    pub fn topology_of(&self, machine: &str)
+        -> Option<Arc<MachineTopology>> {
+        self.snapshot().topology_of(machine)
+    }
+
     /// Strict lookup against the current snapshot.  Errors on a seed
     /// mismatch or a missing signature (with refit guidance).
     pub fn get(&self, machine: &str, workload: &str, seed: u64)
@@ -255,6 +281,31 @@ impl ModelRegistry {
     where
         F: FnOnce() -> Result<BandwidthSignature>,
     {
+        self.get_or_fit_inner(machine, None, workload, seed, fit)
+    }
+
+    /// [`ModelRegistry::get_or_fit`] with the full topology in hand: on a
+    /// fit, the topology is embedded in the store alongside the signature
+    /// and seed stamp, so the persisted store serves this machine on
+    /// hosts that know neither the preset nor the source `@file.json`.
+    /// Snapshot hits return without touching the store (no rewrite).
+    pub fn get_or_fit_for<F>(&self, machine: &MachineTopology,
+                             workload: &str, seed: u64, fit: F)
+        -> Result<Arc<BandwidthSignature>>
+    where
+        F: FnOnce() -> Result<BandwidthSignature>,
+    {
+        self.get_or_fit_inner(&machine.name, Some(machine), workload,
+                              seed, fit)
+    }
+
+    fn get_or_fit_inner<F>(&self, machine: &str,
+                           topology: Option<&MachineTopology>,
+                           workload: &str, seed: u64, fit: F)
+        -> Result<Arc<BandwidthSignature>>
+    where
+        F: FnOnce() -> Result<BandwidthSignature>,
+    {
         let snap = self.snapshot();
         match self.get_at(&snap, machine, workload, seed) {
             Ok(sig) => return Ok(sig),
@@ -289,6 +340,9 @@ impl ModelRegistry {
         }
         store.insert(machine, workload, sig);
         store.set_seed(machine, seed);
+        if let Some(t) = topology {
+            store.set_topology(machine, t.clone());
+        }
         if let Some(path) = &self.store_path {
             store.save(path)?;
         }
@@ -439,6 +493,35 @@ mod tests {
         let reloaded = ModelRegistry::open(&path).unwrap();
         assert!(reloaded.get("m", "cg", 7).is_err());
         assert!(reloaded.get("m", "zz", 7).is_ok());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn get_or_fit_for_embeds_the_topology_and_serves_it_by_name() {
+        let dir = std::env::temp_dir().join("numabw-registry-topology");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("topo-reg.json");
+        std::fs::remove_file(&path).ok();
+        let quad = MachineTopology::synthetic_quad();
+        {
+            let reg = ModelRegistry::open(&path).unwrap();
+            assert!(reg.topology_of(&quad.name).is_none());
+            reg.get_or_fit_for(&quad, "cg", 7, || Ok(sig(0.25))).unwrap();
+            assert_eq!(*reg.topology_of(&quad.name).unwrap(), quad);
+        }
+        // A fresh open (another host, in spirit) resolves the machine
+        // from the store alone.
+        {
+            let reg = ModelRegistry::open(&path).unwrap();
+            assert_eq!(*reg.topology_of(&quad.name).unwrap(), quad);
+            let before = std::fs::read(&path).unwrap();
+            // Snapshot hit: served without rewriting the store.
+            reg.get_or_fit_for(&quad, "cg", 7, || {
+                panic!("must serve from the store")
+            })
+            .unwrap();
+            assert_eq!(before, std::fs::read(&path).unwrap());
+        }
         std::fs::remove_file(&path).ok();
     }
 

@@ -554,7 +554,8 @@ mod tests {
         // All threads on socket 0 reading bank 1 through a 7.04 GB/s link.
         let p = ThreadPlacement::new(vec![8, 0]);
         let r = s.run(&w, &p);
-        let qpi = MachineTopology::xeon_e5_2630_v3().qpi_read_bw;
+        // Read data flows from bank 1 to socket 0: the (1, 0) read link.
+        let qpi = MachineTopology::xeon_e5_2630_v3().link_read_cap(1, 0);
         assert!((r.achieved_bw - qpi).abs() < 0.01 * GB,
                 "{} vs {}", r.achieved_bw / GB, qpi / GB);
         assert!(r.satisfaction() < 0.2);
@@ -566,7 +567,9 @@ mod tests {
         let w = streaming(Mixture::pure_static(1), 0.0, 10.0 * GB);
         let p = ThreadPlacement::new(vec![8, 0]);
         let r = s.run(&w, &p);
-        let qpi_w = MachineTopology::xeon_e5_2630_v3().qpi_write_bw;
+        // Write data flows from socket 0 to bank 1: the (0, 1) write link.
+        let qpi_w =
+            MachineTopology::xeon_e5_2630_v3().link_write_cap(0, 1);
         assert!((r.achieved_bw - qpi_w).abs() < 0.01 * GB);
         let c = &r.run.counters;
         assert_eq!(c.channel_total(Channel::Read), 0.0);

@@ -26,7 +26,7 @@ pub fn avg_latency_ns(machine: &MachineTopology, socket: usize,
     debug_assert_eq!(bank_split.len(), machine.sockets);
     let wsum: f64 = bank_split.iter().sum();
     if wsum <= 0.0 {
-        return machine.local_latency_ns;
+        return machine.latency_ns(socket, socket);
     }
     bank_split
         .iter()
@@ -42,7 +42,7 @@ pub fn thread_demand(machine: &MachineTopology, socket: usize,
                      latency_sensitivity: f64) -> f64 {
     let lat = avg_latency_ns(machine, socket, bank_split);
     let scale = (1.0 - latency_sensitivity)
-        + latency_sensitivity * machine.local_latency_ns / lat;
+        + latency_sensitivity * machine.latency_ns(socket, socket) / lat;
     peak_bw * scale
 }
 
@@ -100,5 +100,30 @@ mod tests {
     #[test]
     fn empty_split_defaults_to_local() {
         assert_eq!(avg_latency_ns(&m(), 0, &[0.0, 0.0]), 90.0);
+    }
+
+    #[test]
+    fn asymmetric_matrix_drives_per_socket_latency() {
+        // A latency matrix no local/remote scalar pair can express: each
+        // socket has its own local latency and sees different remote
+        // costs depending on direction.
+        let mut m = MachineTopology::uniform("asym2", 2, 8, 44e9, 30e9,
+                                             7e9, 6.9e9, 90.0, 200.0,
+                                             5.5e9, 0.0);
+        m.latency_matrix_ns = vec![90.0, 200.0, 140.0, 95.0];
+        m.validate().unwrap();
+        assert_eq!(avg_latency_ns(&m, 1, &[0.0, 1.0]), 95.0);
+        assert_eq!(avg_latency_ns(&m, 1, &[1.0, 0.0]), 140.0);
+        assert_eq!(avg_latency_ns(&m, 1, &[0.0, 0.0]), 95.0);
+        // Demand scales against the *thread's own* local latency, so a
+        // socket-1 chase at home runs at full peak...
+        assert_eq!(thread_demand(&m, 1, &[0.0, 1.0], 1e9, 1.0), 1e9);
+        // ...and its remote slowdown uses the 140 ns it actually sees —
+        // different from socket 0's mirrored placement (90/200).
+        let s1_remote = thread_demand(&m, 1, &[1.0, 0.0], 1e9, 1.0);
+        let s0_remote = thread_demand(&m, 0, &[0.0, 1.0], 1e9, 1.0);
+        assert!((s1_remote - 1e9 * 95.0 / 140.0).abs() < 1e-3);
+        assert!((s0_remote - 1e9 * 90.0 / 200.0).abs() < 1e-3);
+        assert!(s1_remote > s0_remote);
     }
 }

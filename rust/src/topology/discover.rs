@@ -1,0 +1,476 @@
+//! Topology discovery from Linux sysfs.
+//!
+//! Builds a [`MachineTopology`] from the standard NUMA sysfs layout under
+//! a root directory (normally `/sys`, mockable for tests and CI):
+//!
+//! * `devices/system/node/node<N>/distance` — the ACPI SLIT row for node
+//!   N (whitespace-separated integers, local distance on the diagonal);
+//! * `devices/system/node/node<N>/cpulist` — the node's CPUs as ranges
+//!   (`0-7,16-23`); nodes with no CPUs (memory-only / CXL expanders) are
+//!   excluded from the model, with the distance matrix subset to the
+//!   remaining nodes;
+//! * `devices/system/node/node<N>/meminfo` — `MemTotal` per node
+//!   (recorded as inert `attrs.node_mem_mb` metadata when present);
+//! * `devices/system/cpu/cpu0/cache/index*/size` and
+//!   `node<N>/hugepages/hugepages-<K>kB/` — cache hierarchy and page
+//!   sizes, recorded as inert metadata when present.
+//!
+//! sysfs carries no bandwidth or latency numbers, so those are **seeded**
+//! from the distance matrix and the caller-overridable
+//! [`DiscoverOptions`] scales: latency grows with distance
+//! (`lat[i][j] = local_latency * d[i][j] / d[i][i]`) and link capacity
+//! shrinks with it (`link[i][j] = local_bw * d[i][i] / d[i][j]`).  The
+//! defaults are deliberately round numbers whose products with common
+//! SLIT distances (10, 12, 21) stay exact integers, so discovered
+//! topology files are byte-stable across hosts and toolchains.  For a
+//! calibrated model, fit the discovered topology against real counter
+//! runs (`numabw fit --machine @discovered.json`).
+
+use std::path::{Path, PathBuf};
+
+use crate::topology::{MachineTopology, TopologyAttrs, GB};
+
+/// Caller-overridable scales for the bandwidth/latency fields sysfs does
+/// not report.  Defaults (42 GB/s read, 33.6 GB/s write, 90 ns, 6 GB/s
+/// core peak) are Haswell-class and chosen so distance-ratio seeding with
+/// SLIT values 10/12/21 lands on exact integers.
+#[derive(Clone, Debug)]
+pub struct DiscoverOptions {
+    /// Topology name; default `sysfs-<S>s<C>c`.
+    pub name: Option<String>,
+    /// Local memory-channel read capacity per socket (bytes/s).
+    pub local_read_bw: f64,
+    /// Local memory-channel write capacity per socket (bytes/s).
+    pub local_write_bw: f64,
+    /// Local load-to-use latency (ns).
+    pub local_latency_ns: f64,
+    /// Per-core peak demand (bytes/s).
+    pub core_peak_bw: f64,
+    /// Price metadata (USD); unknown by default.
+    pub price_usd: f64,
+}
+
+impl Default for DiscoverOptions {
+    fn default() -> Self {
+        DiscoverOptions {
+            name: None,
+            local_read_bw: 42.0 * GB,
+            local_write_bw: 33.6 * GB,
+            local_latency_ns: 90.0,
+            core_peak_bw: 6.0 * GB,
+            price_usd: 0.0,
+        }
+    }
+}
+
+fn read_trim(path: &Path) -> Result<String, String> {
+    std::fs::read_to_string(path)
+        .map(|s| s.trim().to_string())
+        .map_err(|e| format!("sysfs discover: {}: {e}", path.display()))
+}
+
+/// Number of CPUs in a sysfs `cpulist` string (`0-7,16-23`); an empty
+/// list (memory-only node) is 0.
+fn cpulist_count(list: &str) -> Result<usize, String> {
+    let list = list.trim();
+    if list.is_empty() {
+        return Ok(0);
+    }
+    let mut count = 0usize;
+    for tok in list.split(',') {
+        let tok = tok.trim();
+        let bad = || format!("sysfs discover: bad cpulist token {tok:?}");
+        match tok.split_once('-') {
+            Some((lo, hi)) => {
+                let lo: usize = lo.trim().parse().map_err(|_| bad())?;
+                let hi: usize = hi.trim().parse().map_err(|_| bad())?;
+                if hi < lo {
+                    return Err(bad());
+                }
+                count += hi - lo + 1;
+            }
+            None => {
+                let _: usize = tok.parse().map_err(|_| bad())?;
+                count += 1;
+            }
+        }
+    }
+    Ok(count)
+}
+
+/// `MemTotal` in MB from a node `meminfo` ("Node 0 MemTotal: ... kB").
+fn meminfo_mb(text: &str) -> Option<u64> {
+    for line in text.lines() {
+        if let Some(rest) = line.split("MemTotal:").nth(1) {
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim()
+                .parse().ok()?;
+            return Some(kb / 1024);
+        }
+    }
+    None
+}
+
+/// Cache size in KB from a sysfs `size` string ("32K", "25344K", "30M").
+fn cache_size_kb(text: &str) -> Option<u64> {
+    let t = text.trim();
+    if let Some(v) = t.strip_suffix('K') {
+        v.parse().ok()
+    } else if let Some(v) = t.strip_suffix('M') {
+        v.parse::<u64>().ok().map(|m| m * 1024)
+    } else if let Some(v) = t.strip_suffix('G') {
+        v.parse::<u64>().ok().map(|g| g * 1024 * 1024)
+    } else {
+        None
+    }
+}
+
+struct RawNode {
+    id: usize,
+    dir: PathBuf,
+    cpus: usize,
+    distance: Vec<u32>,
+    mem_mb: Option<u64>,
+}
+
+/// Cache hierarchy of cpu0 (innermost first), empty if the cache
+/// directory is absent (containers often hide it).
+fn cache_hierarchy_kb(root: &Path) -> Vec<u64> {
+    let cache_dir = root.join("devices/system/cpu/cpu0/cache");
+    let mut levels: Vec<(usize, u64)> = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(&cache_dir) {
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if let Some(n) = name.strip_prefix("index") {
+                if let Ok(idx) = n.parse::<usize>() {
+                    if let Ok(sz) = read_trim(&entry.path().join("size")) {
+                        if let Some(kb) = cache_size_kb(&sz) {
+                            levels.push((idx, kb));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    levels.sort();
+    levels.into_iter().map(|(_, kb)| kb).collect()
+}
+
+/// Page sizes in KB: the 4 KB base page plus any hugepage pools the node
+/// advertises.
+fn page_sizes_kb(node_dir: &Path) -> Vec<u64> {
+    let mut sizes = vec![4u64];
+    if let Ok(entries) = std::fs::read_dir(node_dir.join("hugepages")) {
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if let Some(kb) = name.strip_prefix("hugepages-")
+                .and_then(|n| n.strip_suffix("kB"))
+                .and_then(|n| n.parse::<u64>().ok())
+            {
+                sizes.push(kb);
+            }
+        }
+    }
+    sizes.sort_unstable();
+    sizes.dedup();
+    sizes
+}
+
+/// Discover a topology from the sysfs tree rooted at `root` (normally
+/// `/sys`; any directory with the same layout works, which is how tests
+/// and CI exercise this without real hardware).
+pub fn discover_from(root: &Path, opts: &DiscoverOptions)
+    -> Result<MachineTopology, String>
+{
+    let node_root = root.join("devices/system/node");
+    let entries = std::fs::read_dir(&node_root).map_err(|e| {
+        format!("sysfs discover: {}: {e}", node_root.display())
+    })?;
+    let mut nodes: Vec<RawNode> = Vec::new();
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let id = match name.strip_prefix("node")
+            .and_then(|n| n.parse::<usize>().ok())
+        {
+            Some(id) => id,
+            None => continue,
+        };
+        let dir = entry.path();
+        let distance = read_trim(&dir.join("distance"))?
+            .split_whitespace()
+            .map(|t| t.parse::<u32>().map_err(|_| {
+                format!("sysfs discover: {}: bad distance entry {t:?}",
+                        dir.join("distance").display())
+            }))
+            .collect::<Result<Vec<u32>, String>>()?;
+        let cpus = cpulist_count(&read_trim(&dir.join("cpulist"))?)?;
+        let mem_mb = std::fs::read_to_string(dir.join("meminfo")).ok()
+            .and_then(|t| meminfo_mb(&t));
+        nodes.push(RawNode { id, dir, cpus, distance, mem_mb });
+    }
+    if nodes.is_empty() {
+        return Err(format!(
+            "sysfs discover: no node* directories under {}",
+            node_root.display()
+        ));
+    }
+    nodes.sort_by_key(|n| n.id);
+    let total = nodes.len();
+    for n in &nodes {
+        if n.distance.len() != total {
+            return Err(format!(
+                "sysfs discover: node{} distance row has {} entries for \
+                 {total} nodes", n.id, n.distance.len()
+            ));
+        }
+    }
+
+    // Model only nodes with CPUs; memory-only nodes (CXL expanders,
+    // ballooned VMs) have no cores to place threads on.
+    let kept: Vec<usize> = (0..total).filter(|&i| nodes[i].cpus > 0)
+        .collect();
+    if kept.len() < 2 {
+        return Err(format!(
+            "sysfs discover: found {} NUMA node(s) with CPUs under {} — \
+             need >= 2 to model an interconnect (single-node boxes have \
+             nothing to place)", kept.len(), node_root.display()
+        ));
+    }
+    let s = kept.len();
+    let cores_per_socket =
+        kept.iter().map(|&i| nodes[i].cpus).min().unwrap();
+
+    // Subset the distance matrix to the kept nodes and sanity-check the
+    // SLIT conventions before seeding anything from the ratios.
+    let mut distance = Vec::with_capacity(s * s);
+    for &i in &kept {
+        for &j in &kept {
+            distance.push(nodes[i].distance[nodes[j].id]);
+        }
+    }
+    for (row, &i) in kept.iter().enumerate() {
+        let d_local = distance[row * s + row];
+        if d_local == 0 {
+            return Err(format!(
+                "sysfs discover: node{} reports local distance 0 — \
+                 cannot seed bandwidth from distance ratios", nodes[i].id
+            ));
+        }
+        for (col, &j) in kept.iter().enumerate() {
+            if distance[row * s + col] < d_local {
+                return Err(format!(
+                    "sysfs discover: node{} -> node{} distance {} is \
+                     below the local distance {d_local} — malformed SLIT",
+                    nodes[i].id, nodes[j].id, distance[row * s + col]
+                ));
+            }
+        }
+    }
+
+    // Seed latency and per-link bandwidth from the distance ratios
+    // (multiply before dividing so common SLIT ratios stay exact).
+    let mut latency = Vec::with_capacity(s * s);
+    let mut link_read = Vec::with_capacity(s * (s - 1));
+    let mut link_write = Vec::with_capacity(s * (s - 1));
+    for row in 0..s {
+        let d_local = distance[row * s + row] as f64;
+        for col in 0..s {
+            let d = distance[row * s + col] as f64;
+            latency.push(opts.local_latency_ns * d / d_local);
+            if col != row {
+                link_read.push(opts.local_read_bw * d_local / d);
+                link_write.push(opts.local_write_bw * d_local / d);
+            }
+        }
+    }
+
+    let node_mem_mb: Vec<u64> = {
+        let mems: Vec<Option<u64>> =
+            kept.iter().map(|&i| nodes[i].mem_mb).collect();
+        if mems.iter().all(Option::is_some) {
+            mems.into_iter().flatten().collect()
+        } else {
+            Vec::new()
+        }
+    };
+    let attrs = TopologyAttrs {
+        node_mem_mb,
+        cache_kb: cache_hierarchy_kb(root),
+        page_kb: page_sizes_kb(&nodes[kept[0]].dir),
+    };
+
+    let name = opts.name.clone()
+        .unwrap_or_else(|| format!("sysfs-{s}s{cores_per_socket}c"));
+    let t = MachineTopology {
+        name,
+        sockets: s,
+        cores_per_socket,
+        chan_read_bw: vec![opts.local_read_bw; s],
+        chan_write_bw: vec![opts.local_write_bw; s],
+        link_read_bw: link_read,
+        link_write_bw: link_write,
+        node_distance: distance,
+        latency_matrix_ns: latency,
+        core_peak_bw: opts.core_peak_bw,
+        price_usd: opts.price_usd,
+        attrs,
+    };
+    t.validate()?;
+    Ok(t)
+}
+
+/// Discover the host's topology from the real `/sys`.
+pub fn discover(opts: &DiscoverOptions) -> Result<MachineTopology, String> {
+    discover_from(Path::new("/sys"), opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+
+    /// Build a throwaway sysfs-shaped tree; removed on drop.
+    struct MockSysfs {
+        root: PathBuf,
+    }
+
+    impl MockSysfs {
+        fn new(tag: &str) -> MockSysfs {
+            let root = std::env::temp_dir().join(format!(
+                "numabw_discover_{}_{tag}", std::process::id()
+            ));
+            let _ = fs::remove_dir_all(&root);
+            fs::create_dir_all(root.join("devices/system/node")).unwrap();
+            MockSysfs { root }
+        }
+
+        fn node(&self, id: usize, distance: &str, cpulist: &str,
+                meminfo: Option<&str>) {
+            let dir = self.root
+                .join(format!("devices/system/node/node{id}"));
+            fs::create_dir_all(&dir).unwrap();
+            fs::write(dir.join("distance"), format!("{distance}\n"))
+                .unwrap();
+            fs::write(dir.join("cpulist"), format!("{cpulist}\n"))
+                .unwrap();
+            if let Some(m) = meminfo {
+                fs::write(dir.join("meminfo"), format!("{m}\n")).unwrap();
+            }
+        }
+    }
+
+    impl Drop for MockSysfs {
+        fn drop(&mut self) {
+            let _ = fs::remove_dir_all(&self.root);
+        }
+    }
+
+    #[test]
+    fn parses_cpulists() {
+        assert_eq!(cpulist_count("0-7,16-23").unwrap(), 16);
+        assert_eq!(cpulist_count("0").unwrap(), 1);
+        assert_eq!(cpulist_count("").unwrap(), 0);
+        assert_eq!(cpulist_count("3,5,9-10").unwrap(), 4);
+        assert!(cpulist_count("7-3").is_err());
+        assert!(cpulist_count("x").is_err());
+    }
+
+    #[test]
+    fn parses_meminfo_and_cache_sizes() {
+        assert_eq!(
+            meminfo_mb("Node 0 MemTotal:       33554432 kB\nNode 0 \
+                        MemFree: 1 kB"),
+            Some(32768)
+        );
+        assert_eq!(cache_size_kb("32K"), Some(32));
+        assert_eq!(cache_size_kb("30M"), Some(30720));
+        assert_eq!(cache_size_kb("x"), None);
+    }
+
+    #[test]
+    fn two_node_tree_discovers_with_distance_seeding() {
+        let mock = MockSysfs::new("two_node");
+        mock.node(0, "10 21", "0-7",
+                  Some("Node 0 MemTotal: 16777216 kB"));
+        mock.node(1, "21 10", "8-15",
+                  Some("Node 1 MemTotal: 16777216 kB"));
+        let t = discover_from(&mock.root,
+                              &DiscoverOptions::default()).unwrap();
+        assert_eq!(t.name, "sysfs-2s8c");
+        assert_eq!(t.sockets, 2);
+        assert_eq!(t.cores_per_socket, 8);
+        assert_eq!(t.latency_ns(0, 0), 90.0);
+        assert_eq!(t.latency_ns(0, 1), 90.0 * 21.0 / 10.0);
+        assert_eq!(t.link_read_cap(0, 1), 42.0 * GB * 10.0 / 21.0);
+        assert_eq!(t.chan_read_cap(1), 42.0 * GB);
+        assert_eq!(t.attrs.node_mem_mb, vec![16384, 16384]);
+        assert_eq!(t.attrs.page_kb, vec![4]); // no hugepage dirs
+        assert!(t.attrs.cache_kb.is_empty()); // no cpu0 cache dir
+    }
+
+    #[test]
+    fn memory_only_nodes_are_excluded_and_matrix_subset() {
+        let mock = MockSysfs::new("cxl");
+        // node1 is a memory-only expander; the kept matrix must subset
+        // both its row and its column.
+        mock.node(0, "10 17 21", "0-7", None);
+        mock.node(1, "17 10 28", "", None);
+        mock.node(2, "21 28 10", "8-15", None);
+        let t = discover_from(&mock.root,
+                              &DiscoverOptions::default()).unwrap();
+        assert_eq!(t.sockets, 2);
+        assert_eq!(t.distance(0, 1), 21);
+        assert_eq!(t.distance(1, 0), 21);
+        assert!(t.attrs.node_mem_mb.is_empty()); // not all nodes report
+    }
+
+    #[test]
+    fn single_cpu_node_is_an_error() {
+        let mock = MockSysfs::new("single");
+        mock.node(0, "10", "0-7", None);
+        let err = discover_from(&mock.root, &DiscoverOptions::default())
+            .unwrap_err();
+        assert!(err.contains("1 NUMA node(s) with CPUs"), "{err}");
+    }
+
+    #[test]
+    fn malformed_slit_is_an_error() {
+        let mock = MockSysfs::new("badslit");
+        mock.node(0, "10 8", "0-7", None);
+        mock.node(1, "8 10", "8-15", None);
+        let err = discover_from(&mock.root, &DiscoverOptions::default())
+            .unwrap_err();
+        assert!(err.contains("below the local distance"), "{err}");
+
+        let mock = MockSysfs::new("shortrow");
+        mock.node(0, "10", "0-7", None);
+        mock.node(1, "21 10", "8-15", None);
+        let err = discover_from(&mock.root, &DiscoverOptions::default())
+            .unwrap_err();
+        assert!(err.contains("distance row has 1 entries"), "{err}");
+    }
+
+    #[test]
+    fn discovered_topology_roundtrips_through_the_file_format() {
+        let mock = MockSysfs::new("roundtrip");
+        mock.node(0, "10 12 21 21", "0-7", None);
+        mock.node(1, "12 10 21 21", "8-15", None);
+        mock.node(2, "21 21 10 12", "16-23", None);
+        mock.node(3, "21 21 12 10", "24-31", None);
+        let t = discover_from(&mock.root,
+                              &DiscoverOptions::default()).unwrap();
+        assert_eq!(t.sockets, 4);
+        // Paired sockets (sub-NUMA-cluster shape): near links are wider
+        // than far links — asymmetry the uniform model cannot express.
+        assert!(t.link_read_cap(0, 1) > t.link_read_cap(0, 2));
+        assert_eq!(t.link_read_cap(0, 1), 35.0 * GB);
+        assert_eq!(t.link_read_cap(0, 2), 20.0 * GB);
+        let text = crate::topology::file::to_json(&t).encode();
+        let back = crate::topology::file::from_json(
+            &crate::util::json::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(crate::topology::file::to_json(&back).encode(), text);
+    }
+}

@@ -1,0 +1,431 @@
+//! Versioned on-disk topology file format.
+//!
+//! A topology file is one JSON object (conventionally one line, as written
+//! by [`save`] and `numabw discover --out`):
+//!
+//! ```json
+//! {"attrs":{"cache_kb":[32,32,1024],"node_mem_mb":[32768,32768],
+//!           "page_kb":[4,2048]},
+//!  "chan_read_bw":[44000000000,44000000000],
+//!  "chan_write_bw":[30000000000,30000000000],
+//!  "core_peak_bw":5500000000,"cores_per_socket":8,
+//!  "distance":[[10,21],[21,10]],
+//!  "format":"numabw-topology",
+//!  "latency_ns":[[90,200],[200,90]],
+//!  "link_read_bw":[[0,7040000000],[7040000000,0]],
+//!  "link_write_bw":[[0,6900000000],[6900000000,0]],
+//!  "name":"my-box","price_usd":667,"sockets":2,"version":1}
+//! ```
+//!
+//! Matrices (`distance`, `latency_ns`, and both link capacities) are S×S
+//! nested arrays for hand-editability; link diagonals must be exactly `0`
+//! (a socket has no link to itself) and are dropped when decoding into the
+//! dense per-directed-link vectors.  Keys encode in sorted order
+//! (`util::json` objects are BTreeMap-backed), so encode→decode→encode is
+//! byte-identical — stores embedding a topology stay byte-deterministic.
+//!
+//! Decoding is strict, in the spirit of the wire-protocol integer fixes:
+//! counted fields (`sockets`, `cores_per_socket`, `version`, distance
+//! entries) reject fractional and negative values outright, matrix shape
+//! errors name the offending row, and every successfully parsed topology
+//! still has to pass [`MachineTopology::validate`].
+
+use std::path::Path;
+
+use crate::topology::MachineTopology;
+use crate::topology::TopologyAttrs;
+use crate::util::json::Json;
+
+/// Format marker stored in every topology file.
+pub const FORMAT: &str = "numabw-topology";
+
+/// Current file-format version (bump on incompatible schema changes).
+pub const VERSION: u64 = 1;
+
+fn matrix_json(s: usize, at: impl Fn(usize, usize) -> Json) -> Json {
+    Json::Arr((0..s).map(|i| {
+        Json::Arr((0..s).map(|j| at(i, j)).collect())
+    }).collect())
+}
+
+/// Encode a topology as the versioned file JSON.
+pub fn to_json(t: &MachineTopology) -> Json {
+    let s = t.sockets;
+    let mut j = Json::obj();
+    j.set("format", Json::Str(FORMAT.to_string()));
+    j.set("version", Json::from_u64(VERSION));
+    j.set("name", Json::Str(t.name.clone()));
+    j.set("sockets", Json::from_u64(s as u64));
+    j.set("cores_per_socket", Json::from_u64(t.cores_per_socket as u64));
+    j.set("chan_read_bw", Json::from_f64_slice(&t.chan_read_bw));
+    j.set("chan_write_bw", Json::from_f64_slice(&t.chan_write_bw));
+    j.set("link_read_bw", matrix_json(s, |i, k| {
+        Json::Num(if i == k { 0.0 } else { t.link_read_cap(i, k) })
+    }));
+    j.set("link_write_bw", matrix_json(s, |i, k| {
+        Json::Num(if i == k { 0.0 } else { t.link_write_cap(i, k) })
+    }));
+    j.set("distance", matrix_json(s, |i, k| {
+        Json::from_u64(t.node_distance[i * s + k] as u64)
+    }));
+    j.set("latency_ns", matrix_json(s, |i, k| {
+        Json::Num(t.latency_matrix_ns[i * s + k])
+    }));
+    j.set("core_peak_bw", Json::Num(t.core_peak_bw));
+    j.set("price_usd", Json::Num(t.price_usd));
+    if !t.attrs.is_empty() {
+        let mut a = Json::obj();
+        if !t.attrs.node_mem_mb.is_empty() {
+            a.set("node_mem_mb", Json::Arr(
+                t.attrs.node_mem_mb.iter().map(|&v| Json::from_u64(v))
+                    .collect()));
+        }
+        if !t.attrs.cache_kb.is_empty() {
+            a.set("cache_kb", Json::Arr(
+                t.attrs.cache_kb.iter().map(|&v| Json::from_u64(v))
+                    .collect()));
+        }
+        if !t.attrs.page_kb.is_empty() {
+            a.set("page_kb", Json::Arr(
+                t.attrs.page_kb.iter().map(|&v| Json::from_u64(v))
+                    .collect()));
+        }
+        j.set("attrs", a);
+    }
+    j
+}
+
+fn req<'a>(j: &'a Json, key: &str) -> Result<&'a Json, String> {
+    j.get(key)
+        .ok_or_else(|| format!("topology file: missing field {key:?}"))
+}
+
+/// Counted field: reject fractional and negative values outright (the
+/// PR 2 / PR 4 wire-fix idiom) rather than truncating.
+fn req_u64(j: &Json, key: &str) -> Result<u64, String> {
+    req(j, key)?.as_u64().ok_or_else(|| {
+        format!("topology file: field {key:?} must hold a non-negative \
+                 integer")
+    })
+}
+
+fn req_str<'a>(j: &'a Json, key: &str) -> Result<&'a str, String> {
+    req(j, key)?.as_str().ok_or_else(|| {
+        format!("topology file: field {key:?} must be a string")
+    })
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64, String> {
+    req(j, key)?.as_f64().ok_or_else(|| {
+        format!("topology file: field {key:?} must be a number")
+    })
+}
+
+fn req_f64_vec(j: &Json, key: &str, want: usize) -> Result<Vec<f64>, String> {
+    let v = req(j, key)?.as_f64_vec().ok_or_else(|| {
+        format!("topology file: field {key:?} must be an array of numbers")
+    })?;
+    if v.len() != want {
+        return Err(format!(
+            "topology file: field {key:?} must have one entry per socket \
+             (expected {want}, got {})", v.len()
+        ));
+    }
+    Ok(v)
+}
+
+/// S×S nested matrix of numbers, row-major flattening.
+fn req_matrix(j: &Json, key: &str, s: usize) -> Result<Vec<f64>, String> {
+    let rows = req(j, key)?.as_arr().ok_or_else(|| {
+        format!("topology file: field {key:?} must be a {s}x{s} matrix")
+    })?;
+    if rows.len() != s {
+        return Err(format!(
+            "topology file: field {key:?} must be a {s}x{s} matrix \
+             (got {} rows)", rows.len()
+        ));
+    }
+    let mut flat = Vec::with_capacity(s * s);
+    for (i, row) in rows.iter().enumerate() {
+        let vals = row.as_f64_vec().ok_or_else(|| {
+            format!("topology file: {key}[{i}] must be an array of numbers")
+        })?;
+        if vals.len() != s {
+            return Err(format!(
+                "topology file: field {key:?} must be a {s}x{s} matrix \
+                 (row {i} has {} entries)", vals.len()
+            ));
+        }
+        flat.extend(vals);
+    }
+    Ok(flat)
+}
+
+/// Dense per-directed-link vector from an S×S matrix whose diagonal must
+/// be exactly zero.
+fn links_from_matrix(key: &str, s: usize, flat: &[f64])
+    -> Result<Vec<f64>, String>
+{
+    let mut links = Vec::with_capacity(s * (s - 1));
+    for i in 0..s {
+        for k in 0..s {
+            let v = flat[i * s + k];
+            if i == k {
+                if v != 0.0 {
+                    return Err(format!(
+                        "topology file: {key}[{i}][{i}] must be 0 — a \
+                         socket has no link to itself (got {v})"
+                    ));
+                }
+            } else {
+                links.push(v);
+            }
+        }
+    }
+    Ok(links)
+}
+
+fn opt_u64_vec(j: &Json, key: &str) -> Result<Vec<u64>, String> {
+    match j.get(key) {
+        None => Ok(Vec::new()),
+        Some(arr) => {
+            let items = arr.as_arr().ok_or_else(|| {
+                format!("topology file: attrs.{key} must be an array")
+            })?;
+            items.iter().map(|v| v.as_u64().ok_or_else(|| {
+                format!("topology file: attrs.{key} entries must be \
+                         non-negative integers")
+            })).collect()
+        }
+    }
+}
+
+/// Decode (and validate) a topology from its file JSON.
+pub fn from_json(j: &Json) -> Result<MachineTopology, String> {
+    match j.get("format").and_then(Json::as_str) {
+        Some(f) if f == FORMAT => {}
+        _ => {
+            return Err(format!(
+                "topology file: missing or wrong \"format\" marker \
+                 (expected {FORMAT:?})"
+            ));
+        }
+    }
+    let version = req_u64(j, "version")?;
+    if version != VERSION {
+        return Err(format!(
+            "topology file: unsupported version {version} (this build \
+             reads version {VERSION})"
+        ));
+    }
+    let name = req_str(j, "name")?.to_string();
+    let sockets = req_u64(j, "sockets")? as usize;
+    let cores_per_socket = req_u64(j, "cores_per_socket")? as usize;
+    if sockets < 2 {
+        return Err(format!(
+            "topology {name:?}: need >= 2 sockets (got {sockets}; a \
+             single-socket box has no interconnect to model)"
+        ));
+    }
+    let s = sockets;
+    let chan_read_bw = req_f64_vec(j, "chan_read_bw", s)?;
+    let chan_write_bw = req_f64_vec(j, "chan_write_bw", s)?;
+    let link_read_bw =
+        links_from_matrix("link_read_bw", s,
+                          &req_matrix(j, "link_read_bw", s)?)?;
+    let link_write_bw =
+        links_from_matrix("link_write_bw", s,
+                          &req_matrix(j, "link_write_bw", s)?)?;
+    let distance_f = req_matrix(j, "distance", s)?;
+    let mut node_distance = Vec::with_capacity(s * s);
+    for (i, d) in distance_f.iter().enumerate() {
+        if d.fract() != 0.0 || *d < 0.0 || *d > u32::MAX as f64 {
+            return Err(format!(
+                "topology file: distance[{}][{}] must be a non-negative \
+                 integer (got {d})", i / s, i % s
+            ));
+        }
+        node_distance.push(*d as u32);
+    }
+    let latency_matrix_ns = req_matrix(j, "latency_ns", s)?;
+    let core_peak_bw = req_f64(j, "core_peak_bw")?;
+    let price_usd = req_f64(j, "price_usd")?;
+    let attrs = match j.get("attrs") {
+        None => TopologyAttrs::default(),
+        Some(a) => TopologyAttrs {
+            node_mem_mb: opt_u64_vec(a, "node_mem_mb")?,
+            cache_kb: opt_u64_vec(a, "cache_kb")?,
+            page_kb: opt_u64_vec(a, "page_kb")?,
+        },
+    };
+    let t = MachineTopology {
+        name,
+        sockets,
+        cores_per_socket,
+        chan_read_bw,
+        chan_write_bw,
+        link_read_bw,
+        link_write_bw,
+        node_distance,
+        latency_matrix_ns,
+        core_peak_bw,
+        price_usd,
+        attrs,
+    };
+    t.validate()?;
+    Ok(t)
+}
+
+/// Write a topology file: the sorted-key JSON encoding plus a trailing
+/// newline (byte-deterministic — what the CI golden diff pins).
+pub fn save(t: &MachineTopology, path: &Path) -> Result<(), String> {
+    let text = to_json(t).encode() + "\n";
+    std::fs::write(path, text)
+        .map_err(|e| format!("topology file {}: {e}", path.display()))
+}
+
+/// Load and validate a topology file.
+pub fn load(path: &Path) -> Result<MachineTopology, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("topology file {}: {e}", path.display()))?;
+    let j = Json::parse(&text)
+        .map_err(|e| format!("topology file {}: {e}", path.display()))?;
+    from_json(&j).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Resolve a `--machine` / wire `machine` spec: `@path.json` loads a
+/// topology file, anything else must be a preset name.  The error for an
+/// unknown name lists every accepted spelling (the satellite bugfix for
+/// the old bare `unknown machine` message).
+pub fn resolve_machine(spec: &str) -> Result<MachineTopology, String> {
+    if let Some(path) = spec.strip_prefix('@') {
+        if path.is_empty() {
+            return Err("machine spec \"@\" is missing a file path \
+                        (expected @topology.json)".to_string());
+        }
+        return load(Path::new(path));
+    }
+    MachineTopology::by_name(spec)
+        .ok_or_else(|| unknown_machine_error(spec))
+}
+
+/// Typed unknown-machine error listing the presets and the `@file.json`
+/// form.  Shared by the CLI flag parser and the wire-protocol `machine`
+/// field.
+pub fn unknown_machine_error(spec: &str) -> String {
+    let presets = MachineTopology::preset_names()
+        .iter()
+        .map(|(short, long)| format!("{short} ({long})"))
+        .collect::<Vec<_>>()
+        .join(", ");
+    format!(
+        "unknown machine {spec:?}: available presets are {presets}; a \
+         topology file can be used as @<file.json> (`numabw discover` \
+         writes one)"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_encode_is_byte_identical() {
+        for m in MachineTopology::builtin_machines() {
+            let first = to_json(&m).encode();
+            let back = from_json(&Json::parse(&first).unwrap()).unwrap();
+            assert_eq!(back, m);
+            assert_eq!(to_json(&back).encode(), first, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn attrs_roundtrip_and_omission() {
+        let mut m = MachineTopology::xeon_e5_2630_v3();
+        assert!(!to_json(&m).encode().contains("attrs"));
+        m.attrs.node_mem_mb = vec![32768, 32768];
+        m.attrs.cache_kb = vec![32, 32, 1024, 25344];
+        m.attrs.page_kb = vec![4, 2048];
+        let j = to_json(&m);
+        let back = from_json(&j).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(to_json(&back).encode(), j.encode());
+    }
+
+    #[test]
+    fn rejects_unknown_version() {
+        let mut j = to_json(&MachineTopology::xeon_e5_2630_v3());
+        j.set("version", Json::Num(2.0));
+        let err = from_json(&j).unwrap_err();
+        assert!(err.contains("unsupported version 2"), "{err}");
+        j.set("version", Json::Num(1.5));
+        let err = from_json(&j).unwrap_err();
+        assert!(err.contains("non-negative integer"), "{err}");
+    }
+
+    #[test]
+    fn rejects_missing_format_marker() {
+        let j = Json::parse(r#"{"version":1}"#).unwrap();
+        let err = from_json(&j).unwrap_err();
+        assert!(err.contains("format"), "{err}");
+    }
+
+    #[test]
+    fn rejects_fractional_and_negative_counts() {
+        let mut j = to_json(&MachineTopology::xeon_e5_2630_v3());
+        j.set("sockets", Json::Num(2.5));
+        let err = from_json(&j).unwrap_err();
+        assert!(err.contains("\"sockets\"") && err.contains("integer"),
+                "{err}");
+        let mut j = to_json(&MachineTopology::xeon_e5_2630_v3());
+        j.set("cores_per_socket", Json::Num(-8.0));
+        assert!(from_json(&j).unwrap_err().contains("integer"));
+    }
+
+    #[test]
+    fn rejects_wrong_matrix_shape() {
+        let mut j = to_json(&MachineTopology::xeon_e5_2630_v3());
+        j.set("latency_ns",
+              Json::parse("[[90,200],[200,90],[1,2]]").unwrap());
+        let err = from_json(&j).unwrap_err();
+        assert!(err.contains("2x2") && err.contains("3 rows"), "{err}");
+        let mut j = to_json(&MachineTopology::xeon_e5_2630_v3());
+        j.set("distance", Json::parse("[[10,21],[21]]").unwrap());
+        let err = from_json(&j).unwrap_err();
+        assert!(err.contains("row 1 has 1 entries"), "{err}");
+    }
+
+    #[test]
+    fn rejects_nonzero_link_diagonal_and_fractional_distance() {
+        let mut j = to_json(&MachineTopology::xeon_e5_2630_v3());
+        j.set("link_read_bw",
+              Json::parse("[[1,7e9],[7e9,0]]").unwrap());
+        let err = from_json(&j).unwrap_err();
+        assert!(err.contains("link_read_bw[0][0]"), "{err}");
+        let mut j = to_json(&MachineTopology::xeon_e5_2630_v3());
+        j.set("distance", Json::parse("[[10,21.5],[21,10]]").unwrap());
+        let err = from_json(&j).unwrap_err();
+        assert!(err.contains("distance[0][1]"), "{err}");
+    }
+
+    #[test]
+    fn rejects_negative_capacity_via_validate() {
+        let mut j = to_json(&MachineTopology::xeon_e5_2630_v3());
+        j.set("chan_read_bw", Json::parse("[-1,44e9]").unwrap());
+        let err = from_json(&j).unwrap_err();
+        assert!(err.contains("chan_read_bw") && err.contains("positive"),
+                "{err}");
+    }
+
+    #[test]
+    fn resolve_machine_handles_presets_and_unknown_names() {
+        let m = resolve_machine("xeon8").unwrap();
+        assert_eq!(m, MachineTopology::xeon_e5_2630_v3());
+        let err = resolve_machine("epyc").unwrap_err();
+        assert!(err.contains("unknown machine \"epyc\""), "{err}");
+        assert!(err.contains("xeon8") && err.contains("xeon18")
+                && err.contains("quad4"), "{err}");
+        assert!(err.contains("@<file.json>"), "{err}");
+        assert!(resolve_machine("@").unwrap_err().contains("file path"));
+    }
+}

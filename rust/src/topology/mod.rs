@@ -1,20 +1,53 @@
 //! Machine topology: the NUMA hardware description the simulator executes
-//! on and the model predicts for (paper §2, Figs 2–3).
+//! on and the model predicts for (paper §2, Figs 2–3) — **as data, not
+//! code**.
 //!
 //! A machine has `sockets` sockets, each with `cores_per_socket` cores and
 //! a directly-attached memory bank reached over a memory channel; sockets
-//! are joined by a point-to-point interconnect (QPI on the paper's Xeons).
-//! Capacities are expressed in bytes/second; latencies in nanoseconds.
+//! are joined by point-to-point interconnect links (QPI on the paper's
+//! Xeons).  Capacities are expressed in bytes/second; latencies in
+//! nanoseconds.  Every hardware parameter is **per resource**:
+//!
+//! * `chan_read_bw` / `chan_write_bw` — one channel capacity per socket;
+//! * `link_read_bw` / `link_write_bw` — one capacity per *directed*
+//!   interconnect link (dense over ordered socket pairs, see
+//!   [`MachineTopology::link_offset`]);
+//! * `node_distance` — the S×S ACPI-SLIT-style node-distance matrix
+//!   (sysfs `node*/distance`; the diagonal is the local distance,
+//!   canonically 10);
+//! * `latency_matrix_ns` — the S×S load-to-use latency matrix that
+//!   [`MachineTopology::latency_ns`] reads.  Discovery seeds it from
+//!   distance ratios; presets pin the paper's measured local/remote pair.
+//!
+//! This makes asymmetric machines — sub-NUMA clusters, heterogeneous
+//! links, distance matrices no local/remote scalar pair can express —
+//! first-class: every engine consumes [`MachineTopology::capacities`] and
+//! the latency matrix, so asymmetry flows through fit, advice, and serving
+//! with no engine changes.  The three presets are built through
+//! [`MachineTopology::uniform`] and produce bit-identical capacity vectors
+//! to the pre-refactor scalar model.
+//!
+//! Topologies serialize to a versioned JSON file format ([`file`]) and can
+//! be discovered from a live Linux box's sysfs ([`discover`], `numabw
+//! discover`).  `--machine` flags and wire-protocol `machine` fields
+//! accept `@path.json` alongside preset names.
 //!
 //! Read and write interconnect capacities are modeled as separate
 //! resources because the paper's Fig 2 measures them separately and finds
 //! very different ratios (8-core: remote read 0.16× local vs remote write
 //! 0.23×; 18-core: 0.59× vs 0.83×).
 
+pub mod discover;
+pub mod file;
+
 use crate::util::json::Json;
 
 /// Gigabyte per second in bytes/second.
 pub const GB: f64 = 1e9;
+
+/// The canonical ACPI SLIT local node distance (what Linux reports on the
+/// diagonal of `/sys/devices/system/node/node*/distance`).
+pub const LOCAL_DISTANCE: u32 = 10;
 
 /// Resource footprint of performance-query flow `(src, dst, rw)` on an
 /// S-socket machine (flow order `(src*S + dst)*2 + rw`, the S-socket
@@ -49,31 +82,63 @@ pub fn flow_resources(sockets: usize, src: usize, dst: usize,
     (chan, link)
 }
 
-/// Description of one NUMA machine.
+/// Inert descriptive attributes riding along on a topology: recorded by
+/// discovery, persisted in topology files, never consumed by the model.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct TopologyAttrs {
+    /// Per-socket memory size in MB (empty = unknown).
+    pub node_mem_mb: Vec<u64>,
+    /// Cache hierarchy sizes in KB, innermost level first (empty =
+    /// unknown).
+    pub cache_kb: Vec<u64>,
+    /// Supported page sizes in KB (empty = unknown).
+    pub page_kb: Vec<u64>,
+}
+
+impl TopologyAttrs {
+    pub fn is_empty(&self) -> bool {
+        self.node_mem_mb.is_empty()
+            && self.cache_kb.is_empty()
+            && self.page_kb.is_empty()
+    }
+}
+
+/// Description of one NUMA machine, with per-socket and per-directed-link
+/// hardware parameters.  Uniform machines (every socket and link alike)
+/// come from [`MachineTopology::uniform`]; asymmetric ones from topology
+/// files ([`file`]) or sysfs discovery ([`discover`]).
 #[derive(Clone, Debug, PartialEq)]
 pub struct MachineTopology {
     pub name: String,
     pub sockets: usize,
     pub cores_per_socket: usize,
-    /// Local memory-channel read capacity per socket (bytes/s).
-    pub local_read_bw: f64,
-    /// Local memory-channel write capacity per socket (bytes/s).
-    pub local_write_bw: f64,
+    /// Local memory-channel read capacity per socket (bytes/s, len S).
+    pub chan_read_bw: Vec<f64>,
+    /// Local memory-channel write capacity per socket (bytes/s, len S).
+    pub chan_write_bw: Vec<f64>,
     /// Interconnect read capacity per directed link (bytes/s): the rate at
-    /// which read *data* can cross from one socket's bank to another's CPU.
-    pub qpi_read_bw: f64,
-    /// Interconnect write capacity per directed link (bytes/s).
-    pub qpi_write_bw: f64,
-    /// Load-to-use latency of the local bank (ns).
-    pub local_latency_ns: f64,
-    /// Load-to-use latency of a remote bank (ns).
-    pub remote_latency_ns: f64,
+    /// which read *data* can cross from one socket's bank to another's
+    /// CPU.  Dense over ordered pairs `(src, dst), src != dst`, row-major
+    /// (len `S*(S-1)`, indexed by [`MachineTopology::link_offset`]).
+    pub link_read_bw: Vec<f64>,
+    /// Interconnect write capacity per directed link (bytes/s, same
+    /// order).
+    pub link_write_bw: Vec<f64>,
+    /// S×S node-distance matrix, row-major (sysfs / ACPI SLIT convention:
+    /// the diagonal is the local distance, canonically
+    /// [`LOCAL_DISTANCE`]).
+    pub node_distance: Vec<u32>,
+    /// S×S load-to-use latency matrix (ns), row-major: entry
+    /// `src*S + dst` is what a thread on `src` sees against bank `dst`.
+    pub latency_matrix_ns: Vec<f64>,
     /// Peak memory demand a single core can generate against an idle local
     /// bank (bytes/s) — the CPU-side issue limit that makes the 18-core
     /// machine "CPU-bound and forgiving" in Fig 1.
     pub core_peak_bw: f64,
     /// Suggested retail price per CPU, USD (the paper's cost argument).
     pub price_usd: f64,
+    /// Inert metadata (cache hierarchy, page sizes, per-node memory).
+    pub attrs: TopologyAttrs,
 }
 
 impl MachineTopology {
@@ -91,20 +156,32 @@ impl MachineTopology {
     /// Resource index of socket `s`'s channel. Layout (matching the Python
     /// model for S=2): `[read_chan..., write_chan..., qpi_r links...,
     /// qpi_w links...]` with links ordered by `(src, dst), src != dst`,
-    /// row-major.
+    /// row-major.  Out-of-range socket indices are a hard error in every
+    /// build profile (not just debug) — a silently-wrong resource index
+    /// would corrupt the contention solve.
     pub fn read_chan(&self, s: usize) -> usize {
-        debug_assert!(s < self.sockets);
+        assert!(s < self.sockets,
+                "socket index {s} out of range on {}-socket machine {:?}",
+                self.sockets, self.name);
         s
     }
 
     pub fn write_chan(&self, s: usize) -> usize {
-        debug_assert!(s < self.sockets);
+        assert!(s < self.sockets,
+                "socket index {s} out of range on {}-socket machine {:?}",
+                self.sockets, self.name);
         self.sockets + s
     }
 
-    fn link_offset(&self, src: usize, dst: usize) -> usize {
-        debug_assert!(src != dst);
-        // Dense index over ordered pairs (src, dst), src != dst.
+    /// Dense index of directed link `(src, dst)` over ordered pairs,
+    /// `src != dst`, row-major — the order `link_read_bw` /
+    /// `link_write_bw` are stored in.
+    pub fn link_offset(&self, src: usize, dst: usize) -> usize {
+        assert!(src != dst,
+                "link ({src}, {dst}): a socket has no link to itself");
+        assert!(src < self.sockets && dst < self.sockets,
+                "link ({src}, {dst}) out of range on {}-socket machine {:?}",
+                self.sockets, self.name);
         src * (self.sockets - 1) + if dst > src { dst - 1 } else { dst }
     }
 
@@ -119,22 +196,100 @@ impl MachineTopology {
     }
 
     /// Capacity vector over all resources (order per the index functions).
+    /// The single source of truth every engine consumes — per-socket and
+    /// per-link asymmetry flows through fit/advise/serve via this vector.
     pub fn capacities(&self) -> Vec<f64> {
-        let s = self.sockets;
         let mut caps = Vec::with_capacity(self.n_resources());
-        caps.extend(std::iter::repeat(self.local_read_bw).take(s));
-        caps.extend(std::iter::repeat(self.local_write_bw).take(s));
-        caps.extend(std::iter::repeat(self.qpi_read_bw).take(s * (s - 1)));
-        caps.extend(std::iter::repeat(self.qpi_write_bw).take(s * (s - 1)));
+        caps.extend_from_slice(&self.chan_read_bw);
+        caps.extend_from_slice(&self.chan_write_bw);
+        caps.extend_from_slice(&self.link_read_bw);
+        caps.extend_from_slice(&self.link_write_bw);
         caps
     }
 
-    /// Latency seen by a thread on `src` accessing bank `dst`.
+    /// Latency seen by a thread on `src` accessing bank `dst` (the S×S
+    /// latency matrix, driven by the node-distance matrix for discovered
+    /// topologies).
     pub fn latency_ns(&self, src: usize, dst: usize) -> f64 {
-        if src == dst {
-            self.local_latency_ns
-        } else {
-            self.remote_latency_ns
+        assert!(src < self.sockets && dst < self.sockets,
+                "latency ({src}, {dst}) out of range on {}-socket machine \
+                 {:?}", self.sockets, self.name);
+        self.latency_matrix_ns[src * self.sockets + dst]
+    }
+
+    /// Best-case local latency (ns): the smallest diagonal entry of the
+    /// latency matrix.  The issue-rate model's reference scale — on a
+    /// uniform machine this is *the* local latency.
+    pub fn local_latency_ns(&self) -> f64 {
+        (0..self.sockets)
+            .map(|s| self.latency_matrix_ns[s * self.sockets + s])
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Node distance between `src` and `dst` (SLIT convention).
+    pub fn distance(&self, src: usize, dst: usize) -> u32 {
+        assert!(src < self.sockets && dst < self.sockets,
+                "distance ({src}, {dst}) out of range on {}-socket machine \
+                 {:?}", self.sockets, self.name);
+        self.node_distance[src * self.sockets + dst]
+    }
+
+    /// Local read-channel capacity of socket `s` (bytes/s).
+    pub fn chan_read_cap(&self, s: usize) -> f64 {
+        self.chan_read_bw[self.read_chan(s)]
+    }
+
+    /// Local write-channel capacity of socket `s` (bytes/s).
+    pub fn chan_write_cap(&self, s: usize) -> f64 {
+        let i = self.read_chan(s); // bounds check; write vec is socket-indexed
+        self.chan_write_bw[i]
+    }
+
+    /// Read capacity of directed interconnect link `(src, dst)` (bytes/s).
+    pub fn link_read_cap(&self, src: usize, dst: usize) -> f64 {
+        self.link_read_bw[self.link_offset(src, dst)]
+    }
+
+    /// Write capacity of directed interconnect link `(src, dst)`
+    /// (bytes/s).
+    pub fn link_write_cap(&self, src: usize, dst: usize) -> f64 {
+        self.link_write_bw[self.link_offset(src, dst)]
+    }
+
+    /// Uniform convenience constructor: every socket gets the same channel
+    /// capacities, every directed link the same interconnect capacities,
+    /// the latency matrix is local on the diagonal and remote off it, and
+    /// the distance matrix is the canonical two-level SLIT (10 local, 21
+    /// remote) — exactly the pre-refactor scalar model, so presets built
+    /// through here keep bit-identical [`MachineTopology::capacities`]
+    /// vectors.
+    #[allow(clippy::too_many_arguments)]
+    pub fn uniform(name: &str, sockets: usize, cores_per_socket: usize,
+                   local_read_bw: f64, local_write_bw: f64,
+                   qpi_read_bw: f64, qpi_write_bw: f64,
+                   local_latency_ns: f64, remote_latency_ns: f64,
+                   core_peak_bw: f64, price_usd: f64) -> MachineTopology {
+        let s = sockets;
+        let links = s * (s.saturating_sub(1));
+        let mut latency = vec![remote_latency_ns; s * s];
+        let mut distance = vec![2 * LOCAL_DISTANCE + 1; s * s];
+        for i in 0..s {
+            latency[i * s + i] = local_latency_ns;
+            distance[i * s + i] = LOCAL_DISTANCE;
+        }
+        MachineTopology {
+            name: name.to_string(),
+            sockets,
+            cores_per_socket,
+            chan_read_bw: vec![local_read_bw; s],
+            chan_write_bw: vec![local_write_bw; s],
+            link_read_bw: vec![qpi_read_bw; links],
+            link_write_bw: vec![qpi_write_bw; links],
+            node_distance: distance,
+            latency_matrix_ns: latency,
+            core_peak_bw,
+            price_usd,
+            attrs: TopologyAttrs::default(),
         }
     }
 
@@ -146,21 +301,11 @@ impl MachineTopology {
     pub fn xeon_e5_2630_v3() -> MachineTopology {
         let local_read = 44.0 * GB;
         let local_write = 30.0 * GB;
-        MachineTopology {
-            name: "xeon-e5-2630v3-8c".to_string(),
-            sockets: 2,
-            cores_per_socket: 8,
-            local_read_bw: local_read,
-            local_write_bw: local_write,
-            qpi_read_bw: 0.16 * local_read,
-            qpi_write_bw: 0.23 * local_write,
-            local_latency_ns: 90.0,
-            remote_latency_ns: 200.0,
-            // 8 fast cores nearly saturate the local channel: the machine
-            // is bandwidth-bound, hence placement-sensitive (Fig 1).
-            core_peak_bw: 5.5 * GB,
-            price_usd: 667.0,
-        }
+        // 8 fast cores nearly saturate the local channel: the machine is
+        // bandwidth-bound, hence placement-sensitive (Fig 1).
+        Self::uniform("xeon-e5-2630v3-8c", 2, 8, local_read, local_write,
+                      0.16 * local_read, 0.23 * local_write, 90.0, 200.0,
+                      5.5 * GB, 667.0)
     }
 
     /// Dual-socket Xeon E5-2699 v3 (18 cores/socket, 2.3 GHz Haswell).
@@ -169,21 +314,11 @@ impl MachineTopology {
     pub fn xeon_e5_2699_v3() -> MachineTopology {
         let local_read = 50.0 * GB;
         let local_write = 34.0 * GB;
-        MachineTopology {
-            name: "xeon-e5-2699v3-18c".to_string(),
-            sockets: 2,
-            cores_per_socket: 18,
-            local_read_bw: local_read,
-            local_write_bw: local_write,
-            qpi_read_bw: 0.59 * local_read,
-            qpi_write_bw: 0.83 * local_write,
-            local_latency_ns: 95.0,
-            remote_latency_ns: 160.0,
-            // Streaming issue limit per core; what makes this machine
-            // forgiving (Fig 1) is its wide QPI, not a core bottleneck.
-            core_peak_bw: 10.0 * GB,
-            price_usd: 4115.0,
-        }
+        // Streaming issue limit per core; what makes this machine
+        // forgiving (Fig 1) is its wide QPI, not a core bottleneck.
+        Self::uniform("xeon-e5-2699v3-18c", 2, 18, local_read, local_write,
+                      0.59 * local_read, 0.83 * local_write, 95.0, 160.0,
+                      10.0 * GB, 4115.0)
     }
 
     /// Synthetic quad-socket machine (no hardware counterpart in the
@@ -196,19 +331,9 @@ impl MachineTopology {
     pub fn synthetic_quad() -> MachineTopology {
         let local_read = 46.0 * GB;
         let local_write = 32.0 * GB;
-        MachineTopology {
-            name: "synth-quad-4s".to_string(),
-            sockets: 4,
-            cores_per_socket: 8,
-            local_read_bw: local_read,
-            local_write_bw: local_write,
-            qpi_read_bw: 0.40 * local_read,
-            qpi_write_bw: 0.55 * local_write,
-            local_latency_ns: 95.0,
-            remote_latency_ns: 180.0,
-            core_peak_bw: 6.0 * GB,
-            price_usd: 2500.0,
-        }
+        Self::uniform("synth-quad-4s", 4, 8, local_read, local_write,
+                      0.40 * local_read, 0.55 * local_write, 95.0, 180.0,
+                      6.0 * GB, 2500.0)
     }
 
     /// Both paper machines, in presentation order.
@@ -224,6 +349,16 @@ impl MachineTopology {
         ms
     }
 
+    /// The preset names `by_name` accepts, short form first (rendered in
+    /// unknown-machine errors).
+    pub fn preset_names() -> &'static [(&'static str, &'static str)] {
+        &[
+            ("xeon8", "xeon-e5-2630v3-8c"),
+            ("xeon18", "xeon-e5-2699v3-18c"),
+            ("quad4", "synth-quad-4s"),
+        ]
+    }
+
     pub fn by_name(name: &str) -> Option<MachineTopology> {
         match name {
             "xeon8" | "xeon-e5-2630v3-8c" => Some(Self::xeon_e5_2630_v3()),
@@ -235,71 +370,112 @@ impl MachineTopology {
 
     // ---- (de)serialization -------------------------------------------------
 
+    /// The versioned topology-file JSON (see [`file`] for the format).
+    /// Also what [`crate::coordinator::SignatureStore`] embeds so fitted
+    /// stores are portable across hosts.
     pub fn to_json(&self) -> Json {
-        Json::from_pairs([
-            ("name", Json::Str(self.name.clone())),
-            ("sockets", Json::Num(self.sockets as f64)),
-            ("cores_per_socket", Json::Num(self.cores_per_socket as f64)),
-            ("local_read_bw", Json::Num(self.local_read_bw)),
-            ("local_write_bw", Json::Num(self.local_write_bw)),
-            ("qpi_read_bw", Json::Num(self.qpi_read_bw)),
-            ("qpi_write_bw", Json::Num(self.qpi_write_bw)),
-            ("local_latency_ns", Json::Num(self.local_latency_ns)),
-            ("remote_latency_ns", Json::Num(self.remote_latency_ns)),
-            ("core_peak_bw", Json::Num(self.core_peak_bw)),
-            ("price_usd", Json::Num(self.price_usd)),
-        ])
+        file::to_json(self)
     }
 
+    /// Parse (and [`MachineTopology::validate`]) the topology-file JSON.
     pub fn from_json(j: &Json) -> Result<MachineTopology, String> {
-        let f = |k: &str| -> Result<f64, String> {
-            j.get(k)
-                .and_then(Json::as_f64)
-                .ok_or_else(|| format!("topology: missing numeric field {k}"))
-        };
-        let t = MachineTopology {
-            name: j
-                .get("name")
-                .and_then(Json::as_str)
-                .ok_or("topology: missing name")?
-                .to_string(),
-            sockets: f("sockets")? as usize,
-            cores_per_socket: f("cores_per_socket")? as usize,
-            local_read_bw: f("local_read_bw")?,
-            local_write_bw: f("local_write_bw")?,
-            qpi_read_bw: f("qpi_read_bw")?,
-            qpi_write_bw: f("qpi_write_bw")?,
-            local_latency_ns: f("local_latency_ns")?,
-            remote_latency_ns: f("remote_latency_ns")?,
-            core_peak_bw: f("core_peak_bw")?,
-            price_usd: f("price_usd")?,
-        };
-        t.validate()?;
-        Ok(t)
+        file::from_json(j)
     }
 
+    /// Semantic validation: shape of every per-resource vector and matrix,
+    /// positivity of capacities and latencies, and the SLIT diagonal
+    /// conventions.  Every boundary that accepts a non-preset topology
+    /// (file load, sysfs discovery, the advisor) routes through here, so a
+    /// hand-built topology with out-of-range shapes is a typed error — not
+    /// release-mode silent nonsense from the index arithmetic.
     pub fn validate(&self) -> Result<(), String> {
-        if self.sockets < 2 {
-            return Err("topology: need >= 2 sockets".into());
+        let s = self.sockets;
+        let name = &self.name;
+        if s < 2 {
+            return Err(format!(
+                "topology {name:?}: need >= 2 sockets (got {s}; a \
+                 single-socket box has no interconnect to model)"
+            ));
         }
         if self.cores_per_socket == 0 {
-            return Err("topology: need >= 1 core per socket".into());
+            return Err(format!(
+                "topology {name:?}: need >= 1 core per socket"
+            ));
         }
-        for (k, v) in [
-            ("local_read_bw", self.local_read_bw),
-            ("local_write_bw", self.local_write_bw),
-            ("qpi_read_bw", self.qpi_read_bw),
-            ("qpi_write_bw", self.qpi_write_bw),
-            ("local_latency_ns", self.local_latency_ns),
-            ("remote_latency_ns", self.remote_latency_ns),
-            ("core_peak_bw", self.core_peak_bw),
+        let links = s * (s - 1);
+        for (k, have, want) in [
+            ("chan_read_bw", self.chan_read_bw.len(), s),
+            ("chan_write_bw", self.chan_write_bw.len(), s),
+            ("link_read_bw", self.link_read_bw.len(), links),
+            ("link_write_bw", self.link_write_bw.len(), links),
+            ("node_distance", self.node_distance.len(), s * s),
+            ("latency_ns", self.latency_matrix_ns.len(), s * s),
         ] {
-            if !(v.is_finite() && v > 0.0) {
-                return Err(format!("topology: {k} must be positive"));
+            if have != want {
+                return Err(format!(
+                    "topology {name:?}: {k} must have {want} entries for \
+                     {s} sockets (got {have})"
+                ));
             }
         }
-        if self.remote_latency_ns < self.local_latency_ns {
-            return Err("topology: remote latency below local".into());
+        for (k, vs) in [
+            ("chan_read_bw", &self.chan_read_bw),
+            ("chan_write_bw", &self.chan_write_bw),
+            ("link_read_bw", &self.link_read_bw),
+            ("link_write_bw", &self.link_write_bw),
+            ("latency_ns", &self.latency_matrix_ns),
+        ] {
+            if let Some(v) = vs.iter().find(|v| !(v.is_finite() && **v > 0.0))
+            {
+                return Err(format!(
+                    "topology {name:?}: {k} entries must be positive \
+                     (got {v})"
+                ));
+            }
+        }
+        if !(self.core_peak_bw.is_finite() && self.core_peak_bw > 0.0) {
+            return Err(format!(
+                "topology {name:?}: core_peak_bw must be positive"
+            ));
+        }
+        if !(self.price_usd.is_finite() && self.price_usd >= 0.0) {
+            return Err(format!(
+                "topology {name:?}: price_usd must be non-negative"
+            ));
+        }
+        for i in 0..s {
+            let d_local = self.node_distance[i * s + i];
+            if d_local == 0 {
+                return Err(format!(
+                    "topology {name:?}: node_distance diagonal entry \
+                     [{i}][{i}] must be positive (SLIT local distance)"
+                ));
+            }
+            let lat_local = self.latency_matrix_ns[i * s + i];
+            for j in 0..s {
+                if self.node_distance[i * s + j] < d_local {
+                    return Err(format!(
+                        "topology {name:?}: node_distance[{i}][{j}] is \
+                         below the local distance [{i}][{i}] — the \
+                         diagonal must be each row's minimum"
+                    ));
+                }
+                if self.latency_matrix_ns[i * s + j] < lat_local {
+                    return Err(format!(
+                        "topology {name:?}: latency_ns[{i}][{j}] is below \
+                         the local latency [{i}][{i}] — remote access \
+                         cannot be faster than local"
+                    ));
+                }
+            }
+        }
+        for (k, vs) in [("node_mem_mb", &self.attrs.node_mem_mb)] {
+            if !vs.is_empty() && vs.len() != s {
+                return Err(format!(
+                    "topology {name:?}: attrs.{k} must have one entry per \
+                     socket (expected {s}, got {})", vs.len()
+                ));
+            }
         }
         Ok(())
     }
@@ -328,13 +504,46 @@ mod tests {
     #[test]
     fn paper_fig2_ratios() {
         let m8 = MachineTopology::xeon_e5_2630_v3();
-        assert!((m8.qpi_read_bw / m8.local_read_bw - 0.16).abs() < 1e-9);
-        assert!((m8.qpi_write_bw / m8.local_write_bw - 0.23).abs() < 1e-9);
+        assert!((m8.link_read_cap(0, 1) / m8.chan_read_cap(0) - 0.16).abs()
+                < 1e-9);
+        assert!((m8.link_write_cap(0, 1) / m8.chan_write_cap(0) - 0.23)
+                .abs() < 1e-9);
         let m18 = MachineTopology::xeon_e5_2699_v3();
-        assert!((m18.qpi_read_bw / m18.local_read_bw - 0.59).abs() < 1e-9);
-        assert!((m18.qpi_write_bw / m18.local_write_bw - 0.83).abs() < 1e-9);
+        assert!((m18.link_read_cap(0, 1) / m18.chan_read_cap(0) - 0.59)
+                .abs() < 1e-9);
+        assert!((m18.link_write_cap(0, 1) / m18.chan_write_cap(0) - 0.83)
+                .abs() < 1e-9);
         // The 18-core machine is the expensive one.
         assert!(m18.price_usd > m8.price_usd * 5.0);
+    }
+
+    #[test]
+    fn preset_capacities_are_bit_identical_to_the_scalar_model() {
+        // Pre-refactor oracle: the uniform scalar model repeated each
+        // scalar once per resource.  The per-resource refactor must keep
+        // every preset's capacity vector bit-for-bit.
+        let cases: [(&str, f64, f64, f64, f64); 3] = [
+            ("xeon8", 44.0 * GB, 30.0 * GB,
+             0.16 * (44.0 * GB), 0.23 * (30.0 * GB)),
+            ("xeon18", 50.0 * GB, 34.0 * GB,
+             0.59 * (50.0 * GB), 0.83 * (34.0 * GB)),
+            ("quad4", 46.0 * GB, 32.0 * GB,
+             0.40 * (46.0 * GB), 0.55 * (32.0 * GB)),
+        ];
+        for (name, lr, lw, qr, qw) in cases {
+            let m = MachineTopology::by_name(name).unwrap();
+            let s = m.sockets;
+            let mut want = Vec::new();
+            want.extend(std::iter::repeat(lr).take(s));
+            want.extend(std::iter::repeat(lw).take(s));
+            want.extend(std::iter::repeat(qr).take(s * (s - 1)));
+            want.extend(std::iter::repeat(qw).take(s * (s - 1)));
+            let got = m.capacities();
+            assert_eq!(got.len(), want.len(), "{name}");
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g.to_bits(), w.to_bits(), "{name} resource {i}");
+            }
+        }
     }
 
     #[test]
@@ -357,16 +566,18 @@ mod tests {
         let m = MachineTopology::xeon_e5_2630_v3();
         let caps = m.capacities();
         assert_eq!(caps.len(), 8);
-        assert_eq!(caps[m.read_chan(0)], m.local_read_bw);
-        assert_eq!(caps[m.write_chan(1)], m.local_write_bw);
-        assert_eq!(caps[m.qpi_read_link(1, 0)], m.qpi_read_bw);
-        assert_eq!(caps[m.qpi_write_link(0, 1)], m.qpi_write_bw);
+        assert_eq!(caps[m.read_chan(0)], m.chan_read_cap(0));
+        assert_eq!(caps[m.write_chan(1)], m.chan_write_cap(1));
+        assert_eq!(caps[m.qpi_read_link(1, 0)], m.link_read_cap(1, 0));
+        assert_eq!(caps[m.qpi_write_link(0, 1)], m.link_write_cap(0, 1));
     }
 
     #[test]
     fn four_socket_layout_is_dense_and_disjoint() {
-        let mut m = MachineTopology::xeon_e5_2699_v3();
-        m.sockets = 4;
+        let m = MachineTopology::uniform("dense4", 4, 8, 44.0 * GB,
+                                         30.0 * GB, 7.0 * GB, 6.9 * GB,
+                                         90.0, 200.0, 5.5 * GB, 0.0);
+        m.validate().unwrap();
         assert_eq!(m.n_resources(), 2 * 4 + 2 * 12);
         let mut seen = std::collections::BTreeSet::new();
         for s in 0..4 {
@@ -408,5 +619,56 @@ mod tests {
         let m = MachineTopology::xeon_e5_2630_v3();
         assert_eq!(m.latency_ns(0, 0), 90.0);
         assert_eq!(m.latency_ns(0, 1), 200.0);
+        assert_eq!(m.local_latency_ns(), 90.0);
+        assert_eq!(m.distance(0, 0), LOCAL_DISTANCE);
+        assert!(m.distance(0, 1) > LOCAL_DISTANCE);
+    }
+
+    #[test]
+    fn asymmetric_latency_matrix_is_expressible() {
+        // A matrix no local/remote scalar pair can express: each socket
+        // sees different remote latencies, and the matrix need not be
+        // symmetric across the diagonal.
+        let mut m = MachineTopology::uniform("asym2", 2, 8, 44.0 * GB,
+                                             30.0 * GB, 7.0 * GB, 6.9 * GB,
+                                             90.0, 200.0, 5.5 * GB, 0.0);
+        m.latency_matrix_ns = vec![90.0, 200.0, 140.0, 95.0];
+        m.validate().unwrap();
+        assert_eq!(m.latency_ns(0, 1), 200.0);
+        assert_eq!(m.latency_ns(1, 0), 140.0);
+        assert_eq!(m.local_latency_ns(), 90.0);
+    }
+
+    #[test]
+    fn validate_catches_shape_and_diagonal_errors() {
+        // Hand-built nonsense (sockets resized, vectors not): a validated
+        // error naming the offending field, not silent index arithmetic.
+        let mut m = MachineTopology::xeon_e5_2630_v3();
+        m.sockets = 4;
+        let err = m.validate().unwrap_err();
+        assert!(err.contains("chan_read_bw"), "{err}");
+
+        let mut m = MachineTopology::xeon_e5_2630_v3();
+        m.link_read_bw[1] = -1.0;
+        assert!(m.validate().unwrap_err().contains("link_read_bw"));
+
+        let mut m = MachineTopology::xeon_e5_2630_v3();
+        m.node_distance[1] = 3; // below the local distance 10
+        assert!(m.validate().unwrap_err().contains("node_distance"));
+
+        let mut m = MachineTopology::xeon_e5_2630_v3();
+        m.latency_matrix_ns[1] = 10.0; // remote faster than local
+        assert!(m.validate().unwrap_err().contains("latency_ns"));
+
+        let mut m = MachineTopology::xeon_e5_2630_v3();
+        m.attrs.node_mem_mb = vec![1024]; // one entry, two sockets
+        assert!(m.validate().unwrap_err().contains("node_mem_mb"));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_socket_index_panics_in_release_too() {
+        let m = MachineTopology::xeon_e5_2630_v3();
+        m.read_chan(2);
     }
 }

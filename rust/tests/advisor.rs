@@ -284,8 +284,8 @@ fn two_socket_oracle(machine: &MachineTopology, workload: &WorkloadSpec,
             }
         }
         let scale = (1.0 - workload.latency_sensitivity)
-            + workload.latency_sensitivity * machine.local_latency_ns
-                / lat.max(machine.local_latency_ns);
+            + workload.latency_sensitivity * machine.local_latency_ns()
+                / lat.max(machine.local_latency_ns());
         let per_thread = peak * scale;
         let demand_pt = [
             per_thread * workload.read_fraction,

@@ -1,0 +1,342 @@
+//! Integration tests for the first-class machine model:
+//!
+//! * topology files round-trip byte-identically and `@file.json` machine
+//!   specs resolve to their in-code preset twins;
+//! * malformed files are rejected at load with precise, path-prefixed
+//!   messages (the same strictness the wire boundary applies);
+//! * `numabw discover` on the checked-in mock sysfs tree reproduces the
+//!   golden topology file byte for byte (the same pair CI diffs through
+//!   the release binary);
+//! * per-link asymmetry genuinely changes predictions (mirror symmetry
+//!   breaks exactly where the hardware does, and nowhere else);
+//! * an asymmetric topology loaded from a file fits and advises through
+//!   every engine, and the serve daemon resolves `machine` specs from
+//!   files and from topologies embedded in its model store.
+
+use std::path::{Path, PathBuf};
+
+use numabw::coordinator::{PerfQuery, PredictionService};
+use numabw::prelude::*;
+use numabw::server::{serve_lines, ServeOptions};
+use numabw::topology::{discover, file};
+use numabw::util::json::Json;
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "numabw-topology-{tag}-{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn toks(s: &str) -> Vec<String> {
+    s.split_whitespace().map(str::to_string).collect()
+}
+
+#[test]
+fn topology_files_round_trip_byte_identically() {
+    let dir = scratch("roundtrip");
+    for m in MachineTopology::builtin_machines() {
+        let path = dir.join(format!("{}.json", m.name));
+        file::save(&m, &path).unwrap();
+        let loaded = file::load(&path).unwrap();
+        assert_eq!(loaded, m, "{} must round-trip exactly", m.name);
+        // Re-encoding the loaded topology reproduces the file bytes:
+        // decode -> encode is the identity on this format.
+        let bytes = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(format!("{}\n", loaded.to_json().encode()), bytes);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn at_file_machine_specs_resolve_to_their_in_code_twins() {
+    let dir = scratch("resolve");
+    for &(spec, full) in MachineTopology::preset_names() {
+        let m = MachineTopology::by_name(spec).unwrap();
+        assert_eq!(m.name, full);
+        let path = dir.join(format!("{spec}.json"));
+        file::save(&m, &path).unwrap();
+        let via_file =
+            file::resolve_machine(&format!("@{}", path.display()))
+                .unwrap();
+        assert_eq!(via_file, m, "@{spec}.json must equal preset {spec}");
+        // Same capacities bit for bit: engines see no difference between
+        // the preset and its file twin.
+        for (a, b) in via_file.capacities().iter().zip(m.capacities()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn malformed_topology_files_are_rejected_with_precise_messages() {
+    let dir = scratch("malformed");
+    let base = MachineTopology::xeon_e5_2630_v3().to_json();
+    let check = |tag: &str, j: &Json, needle: &str| {
+        let path = dir.join(format!("{tag}.json"));
+        std::fs::write(&path, j.encode()).unwrap();
+        let err = file::load(&path).unwrap_err();
+        assert!(err.contains(needle),
+                "{tag}: missing {needle:?} in: {err}");
+        assert!(err.contains(&path.display().to_string()),
+                "{tag}: error must name the file: {err}");
+    };
+    let mut j = base.clone();
+    j.set("format", Json::Str("nope".into()));
+    check("format", &j, "\"format\" marker");
+    let mut j = base.clone();
+    j.set("version", Json::Num(99.0));
+    check("version", &j, "unsupported version 99");
+    let mut j = base.clone();
+    j.set("sockets", Json::Num(2.5));
+    check("fractional-sockets", &j, "must hold a non-negative integer");
+    let mut j = base.clone();
+    j.set("chan_read_bw", Json::from_f64_slice(&[44e9]));
+    check("short-channel-vector", &j, "one entry per socket");
+    let mut j = base.clone();
+    j.set(
+        "distance",
+        Json::Arr(vec![
+            Json::Arr(vec![Json::Num(10.0), Json::Num(21.5)]),
+            Json::Arr(vec![Json::Num(21.0), Json::Num(10.0)]),
+        ]),
+    );
+    check("fractional-distance", &j, "non-negative integer");
+    let mut j = base.clone();
+    j.set(
+        "latency_ns",
+        Json::Arr(vec![Json::Arr(vec![
+            Json::Num(90.0),
+            Json::Num(200.0),
+        ])]),
+    );
+    check("ragged-latency", &j, "2x2 matrix");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn discover_on_the_checked_in_mock_tree_reproduces_the_golden_file() {
+    // Same fixture CI runs through the release binary:
+    //   numabw discover --sysfs ci/mock_sysfs --out t.json
+    //   diff t.json ci/mock_topology.golden.json
+    let repo = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let t = discover::discover_from(
+        &repo.join("ci/mock_sysfs"),
+        &discover::DiscoverOptions::default(),
+    )
+    .unwrap();
+    let golden_path = repo.join("ci/mock_topology.golden.json");
+    let golden = std::fs::read_to_string(&golden_path).unwrap();
+    assert_eq!(format!("{}\n", t.to_json().encode()), golden);
+    // The golden file itself loads as a valid, addressable machine with
+    // the sub-NUMA shape the mock tree describes (distance 10/12/21).
+    let loaded = file::load(&golden_path).unwrap();
+    assert_eq!(loaded, t);
+    assert_eq!(loaded.sockets, 4);
+    assert_eq!(loaded.cores_per_socket, 8);
+    assert_eq!(loaded.link_read_cap(0, 1), 35.0 * GB); // distance 12
+    assert_eq!(loaded.link_read_cap(0, 2), 20.0 * GB); // distance 21
+    assert_eq!(loaded.latency_ns(0, 0), 90.0);
+    assert_eq!(loaded.latency_ns(0, 2), 189.0);
+    assert_eq!(loaded.attrs.node_mem_mb, vec![32768; 4]);
+    assert_eq!(loaded.attrs.page_kb, vec![4, 2048, 1048576]);
+}
+
+fn total(xs: &[f64]) -> f64 {
+    xs.iter().sum()
+}
+
+#[test]
+fn throttling_one_directed_link_breaks_exactly_that_mirror_symmetry() {
+    // Two mirrored remote-heavy queries: threads on socket 1 pulling from
+    // bank 0 (link 0->1), and threads on socket 0 pulling from bank 1
+    // (link 1->0).
+    let q = |machine: &MachineTopology, threads: Vec<usize>, bank| {
+        PerfQuery {
+            sig: ChannelSignature::new(0.8, 0.0, 0.1, bank),
+            threads,
+            demand_pt: [2.0 * GB, 1.0 * GB],
+            caps: machine.capacities(),
+        }
+    };
+    let svc = PredictionService::reference();
+    let uniform = MachineTopology::xeon_e5_2630_v3();
+    let sym = svc
+        .predict_performance(&[
+            q(&uniform, vec![0, 8], 0),
+            q(&uniform, vec![8, 0], 1),
+        ])
+        .unwrap();
+    assert_eq!(
+        total(&sym[0]).to_bits(),
+        total(&sym[1]).to_bits(),
+        "a uniform machine serves mirrored placements identically"
+    );
+    // Quarter the 0->1 read link only.  The placement crossing it slows
+    // down; its mirror (riding the untouched 1->0 link) does not.
+    let mut skew = uniform.clone();
+    skew.name = "xeon8-skewed-link".into();
+    let fwd = skew.link_offset(0, 1);
+    skew.link_read_bw[fwd] /= 4.0;
+    skew.validate().unwrap();
+    let asym = svc
+        .predict_performance(&[
+            q(&skew, vec![0, 8], 0),
+            q(&skew, vec![8, 0], 1),
+        ])
+        .unwrap();
+    assert!(
+        total(&asym[0]) < total(&sym[0]),
+        "throttled link must cost bandwidth: {} vs {}",
+        total(&asym[0]),
+        total(&sym[0])
+    );
+    let drift =
+        (total(&asym[1]) - total(&sym[1])).abs() / total(&sym[1]);
+    assert!(
+        drift < 1e-9,
+        "the untouched direction must be unaffected (drift {drift})"
+    );
+}
+
+/// An asymmetric two-socket machine: an asymmetric SLIT (10/21 vs 31/10),
+/// the latency matrix following it, and direction-dependent link
+/// capacities.  Derived from the xeon8 preset so everything else matches
+/// a known-good machine.
+fn asymmetric_pair() -> MachineTopology {
+    let mut m = MachineTopology::xeon_e5_2630_v3();
+    m.name = "asym-pair".into();
+    m.node_distance = vec![10, 21, 31, 10];
+    m.latency_matrix_ns = vec![90.0, 189.0, 279.0, 90.0];
+    let fwd = m.link_offset(0, 1);
+    let back = m.link_offset(1, 0);
+    m.link_read_bw[fwd] = 5.0 * GB;
+    m.link_read_bw[back] = 8.0 * GB;
+    m.link_write_bw[fwd] = 4.0 * GB;
+    m.link_write_bw[back] = 6.5 * GB;
+    m.validate().unwrap();
+    m
+}
+
+#[test]
+fn asymmetric_topology_file_fits_and_advises_on_every_engine() {
+    let dir = scratch("engines");
+    let path = dir.join("asym-pair.json");
+    file::save(&asymmetric_pair(), &path).unwrap();
+    let spec = format!("@{}", path.display());
+    for engine in ["reference", "native", "hlo"] {
+        numabw::cli::main_with(toks(&format!(
+            "fit --workload cg --machine {spec} --engine {engine}"
+        )))
+        .unwrap_or_else(|e| panic!("fit on {engine}: {e:#}"));
+        numabw::cli::main_with(toks(&format!(
+            "advise --workload cg --machine {spec} --threads 8 --top 3 \
+             --engine {engine}"
+        )))
+        .unwrap_or_else(|e| panic!("advise on {engine}: {e:#}"));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// An asymmetric four-socket machine: sub-NUMA pairs (0,1) / (2,3) with
+/// fat intra-pair links, thin cross-pair links, and a faster memory
+/// system on the second pair.
+fn asymmetric_quad() -> MachineTopology {
+    let mut m = MachineTopology::synthetic_quad();
+    m.name = "asym-quad".into();
+    for src in 0..4 {
+        for dst in 0..4 {
+            let d = if src == dst {
+                10
+            } else if src / 2 == dst / 2 {
+                12
+            } else {
+                21
+            };
+            m.node_distance[src * 4 + dst] = d;
+            m.latency_matrix_ns[src * 4 + dst] = 95.0 * d as f64 / 10.0;
+            if src != dst {
+                let scale = if src / 2 == dst / 2 { 1.0 } else { 0.5 };
+                let i = m.link_offset(src, dst);
+                m.link_read_bw[i] = 18.4 * GB * scale;
+                m.link_write_bw[i] = 17.6 * GB * scale;
+            }
+        }
+    }
+    m.chan_read_bw[2] = 52.0 * GB;
+    m.chan_read_bw[3] = 52.0 * GB;
+    m.chan_write_bw[2] = 36.0 * GB;
+    m.chan_write_bw[3] = 36.0 * GB;
+    m.validate().unwrap();
+    m
+}
+
+#[test]
+fn serve_resolves_file_and_store_machines_and_rejects_unknown_names() {
+    let dir = scratch("serve");
+    let topo_path = dir.join("asym-quad.json");
+    file::save(&asymmetric_quad(), &topo_path).unwrap();
+    let store_path = dir.join("store.json");
+    // Fit the custom machine into a store through the CLI; the store now
+    // embeds the topology under its machine name.
+    numabw::cli::main_with(toks(&format!(
+        "fit --workload cg --machine @{} --save {}",
+        topo_path.display(),
+        store_path.display()
+    )))
+    .unwrap();
+    let store_bytes = std::fs::read_to_string(&store_path).unwrap();
+    assert!(store_bytes.contains("\"topology\""), "{store_bytes}");
+    assert!(store_bytes.contains("\"asym-quad\""), "{store_bytes}");
+    // One transcript, three resolutions: by @file, by the store-embedded
+    // name, and an unknown name — the daemon answers all three in order.
+    let transcript = format!(
+        "{{\"id\":1,\"op\":\"advise\",\"machine\":\"@{}\",\
+         \"workload\":\"cg\",\"threads\":8,\"top\":2}}\n\
+         {{\"id\":2,\"op\":\"advise\",\"machine\":\"asym-quad\",\
+         \"workload\":\"cg\",\"threads\":8,\"top\":2}}\n\
+         {{\"id\":3,\"op\":\"advise\",\"machine\":\"epyc\",\
+         \"workload\":\"cg\",\"top\":2}}\n",
+        topo_path.display()
+    );
+    let mut out = Vec::new();
+    serve_lines(
+        PredictionService::reference(),
+        ServeOptions {
+            store: Some(store_path.clone()),
+            ..ServeOptions::default()
+        },
+        transcript.as_bytes(),
+        &mut out,
+    )
+    .unwrap();
+    let out = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = out.lines().collect();
+    assert_eq!(lines.len(), 3, "{out}");
+    let by_file = Json::parse(lines[0]).unwrap();
+    assert_eq!(by_file.get("ok").and_then(Json::as_bool), Some(true),
+               "{out}");
+    assert_eq!(
+        by_file.get("result").unwrap().get("machine").unwrap().as_str(),
+        Some("asym-quad")
+    );
+    let by_name = Json::parse(lines[1]).unwrap();
+    assert_eq!(by_name.get("ok").and_then(Json::as_bool), Some(true),
+               "{out}");
+    // Same machine, same store, same seed: identical advice either way.
+    assert_eq!(
+        lines[0].replace("\"id\":1", ""),
+        lines[1].replace("\"id\":2", ""),
+        "file and store-name resolution must serve the same machine"
+    );
+    let unknown = Json::parse(lines[2]).unwrap();
+    assert_eq!(unknown.get("ok").and_then(Json::as_bool), Some(false));
+    let err = unknown.get("error").unwrap().as_str().unwrap();
+    assert!(err.contains("unknown machine \"epyc\""), "{err}");
+    assert!(err.contains("xeon8") && err.contains("@<file.json>"),
+            "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
